@@ -1,0 +1,159 @@
+//! End-to-end validation driver: the full microbiome-study pipeline.
+//!
+//! This is the workload the paper's users run, at laptop scale, exercising
+//! every layer of the system on real (synthetic-but-structured) data:
+//!
+//!   1. generate an EMP-shaped dataset: random phylogeny (512 taxa) +
+//!      presence table for 192 samples across 4 environments;
+//!   2. compute the Unweighted UniFrac distance matrix (the paper's input
+//!      metric), multi-threaded stripe kernel;
+//!   3. run PERMANOVA three ways — native CPU kernels, the AOT-compiled
+//!      XLA stack (if artifacts are present), and the MI300A model — and
+//!      check they agree;
+//!   4. run a negative control (shuffled labels);
+//!   5. report everything (this output is recorded in EXPERIMENTS.md §E2E).
+//!
+//! Run: `cargo run --release --example microbiome_study`
+
+use std::time::Instant;
+
+use permanova_apu::config::{Backend, DataSource, RunConfig};
+use permanova_apu::coordinator::{run_on_backend, RunReport};
+use permanova_apu::permanova::{Grouping, SwAlgorithm};
+use permanova_apu::report::Table;
+use permanova_apu::rng::{shuffle, Xoshiro256pp};
+use permanova_apu::unifrac::{generate, unweighted_unifrac, SynthParams};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let t_start = Instant::now();
+    println!("== microbiome_study: UniFrac -> PERMANOVA end-to-end ==\n");
+
+    // 1. Synthetic EMP-shaped community.
+    let params = SynthParams {
+        n_taxa: 512,
+        n_samples: 192,
+        n_envs: 4,
+        p_in: 0.65,
+        p_out: 0.06,
+        pool_frac: 0.3,
+        seed: 20240710,
+    };
+    let t0 = Instant::now();
+    let ds = generate(&params)?;
+    println!(
+        "dataset: {} taxa x {} samples, {} environments, tree {} nodes ({:.2}s)",
+        params.n_taxa,
+        params.n_samples,
+        params.n_envs,
+        ds.tree.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // 2. Unweighted UniFrac.
+    let t0 = Instant::now();
+    let mat = unweighted_unifrac(&ds.tree, &ds.table, 0)?;
+    mat.validate(1e-5)?;
+    println!(
+        "unifrac: {}x{} matrix in {:.2}s (validated: symmetric, zero-diag)",
+        mat.n(),
+        mat.n(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // 3. PERMANOVA across backends.
+    let n_perms = 999;
+    let base = RunConfig {
+        data: DataSource::Synthetic { n_dims: mat.n(), n_groups: ds.grouping.k() }, // unused by run_on_backend
+        n_perms,
+        seed: 77,
+        algo: SwAlgorithm::Tiled { tile: 512 },
+        threads: 0,
+        ..Default::default()
+    };
+
+    let mut rows: Vec<(String, RunReport)> = Vec::new();
+    let native = run_on_backend(&base, &mat, &ds.grouping)?;
+    rows.push(("native".into(), native.clone()));
+
+    let artifacts = permanova_apu::runtime::artifacts_dir_for_tests();
+    if artifacts.join("manifest.json").exists() {
+        let cfg = RunConfig {
+            backend: Backend::Xla,
+            artifacts_dir: artifacts.display().to_string(),
+            xla_kernel: "matmul".into(),
+            ..base.clone()
+        };
+        let xla = run_on_backend(&cfg, &mat, &ds.grouping)?;
+        rows.push(("xla (matmul kernel)".into(), xla));
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` to include the XLA backend)");
+    }
+
+    let sim_cfg = RunConfig { backend: Backend::Simulated, ..base.clone() };
+    let sim = run_on_backend(&sim_cfg, &mat, &ds.grouping)?;
+    rows.push(("simulated MI300A CPU".into(), sim));
+
+    let mut table = Table::new(&["backend", "pseudo-F", "p-value", "wall s", "modelled s"]);
+    for (name, r) in &rows {
+        let modelled: f64 = r.per_device.iter().map(|d| d.simulated_secs).sum();
+        table.row(&[
+            name.clone(),
+            format!("{:.5}", r.f_obs),
+            format!("{:.5}", r.p_value),
+            format!("{:.3}", r.elapsed_secs),
+            if modelled > 0.0 { format!("{modelled:.3}") } else { "-".into() },
+        ]);
+    }
+    println!("\n{}", table.render());
+
+    // Backends must agree.
+    let f0 = rows[0].1.f_obs;
+    for (name, r) in &rows[1..] {
+        let rel = (r.f_obs - f0).abs() / f0.abs().max(1e-12);
+        assert!(rel < 1e-3, "{name} disagrees with native: {} vs {f0}", r.f_obs);
+        assert_eq!(r.p_value, rows[0].1.p_value, "{name} p-value mismatch");
+    }
+
+    // 4. Negative control: environment labels shuffled.
+    let mut labels = ds.grouping.labels().to_vec();
+    let mut rng = Xoshiro256pp::new(999);
+    shuffle(&mut rng, &mut labels);
+    let null_grouping = Grouping::new(labels)?;
+    let null = run_on_backend(&base, &mat, &null_grouping)?;
+
+    println!("environment effect : F = {:.4}, p = {:.4}  (expect significant)", f0, rows[0].1.p_value);
+    println!("shuffled control   : F = {:.4}, p = {:.4}  (expect null)", null.f_obs, null.p_value);
+
+    assert!(rows[0].1.p_value <= 0.01, "environment effect must be significant");
+    assert!(null.p_value > 0.05, "shuffled control must be null");
+
+    // 5. The companion workflow: ANOSIM corroborates, PERMDISP checks that
+    // the effect is location, not just unequal spread, and pairwise tests
+    // say *which* environments differ.
+    let an = permanova_apu::permanova::anosim(&mat, &ds.grouping, 499, 7)?;
+    let pd = permanova_apu::permanova::permdisp(&mat, &ds.grouping, 499, 7)?;
+    let pw = permanova_apu::permanova::pairwise_permanova(
+        &mat,
+        &ds.grouping,
+        199,
+        &permanova_apu::permanova::PermanovaOpts::default(),
+    )?;
+    println!("\ncompanion tests:");
+    println!("  ANOSIM   : R = {:.4}, p = {:.4}", an.r_obs, an.p_value);
+    println!(
+        "  PERMDISP : F = {:.4}, p = {:.4} (dispersions {:?})",
+        pd.f_obs,
+        pd.p_value,
+        pd.group_dispersions.iter().map(|d| (d * 1e3).round() / 1e3).collect::<Vec<_>>()
+    );
+    let sig_pairs = pw.entries.iter().filter(|e| e.p_adjusted <= 0.05).count();
+    println!(
+        "  pairwise : {}/{} environment pairs significant (Bonferroni)",
+        sig_pairs, pw.n_comparisons
+    );
+    assert!(an.p_value <= 0.01, "ANOSIM must corroborate");
+    assert!(sig_pairs >= 4, "most environment pairs must separate");
+
+    println!("\nend-to-end OK in {:.2}s", t_start.elapsed().as_secs_f64());
+    Ok(())
+}

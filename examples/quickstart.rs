@@ -1,0 +1,45 @@
+//! Quickstart: PERMANOVA in five lines.
+//!
+//! Generates a synthetic distance matrix with planted group structure, runs
+//! the permutation test with the paper's tiled kernel, and prints the
+//! statistic — the minimal "does this library do its job" demo.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::permanova::{permanova, Grouping, PermanovaOpts, SwAlgorithm};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 120 objects in 3 groups; within-group distances ~0.3, across ~1.0.
+    let n = 120;
+    let k = 3;
+    let mat = DistanceMatrix::planted_blocks(n, k, 0.3, 1.0, 42);
+    let grouping = Grouping::new((0..n).map(|i| (i % k) as u32).collect())?;
+
+    // 999 label permutations on all cores, Algorithm 2 (cache-tiled).
+    let opts = PermanovaOpts {
+        algo: SwAlgorithm::Tiled { tile: 512 },
+        threads: 0,
+        seed: 2024,
+        keep_f_perms: false,
+    };
+    let res = permanova(&mat, &grouping, 999, &opts)?;
+
+    println!("PERMANOVA: n={} k={} permutations={}", res.n, res.k, res.n_perms);
+    println!("  pseudo-F = {:.4}", res.f_obs);
+    println!("  p-value  = {:.4}", res.p_value);
+    println!("  kernel   = {}  threads = {}  wall = {:.3}s", res.algo, res.threads, res.elapsed_secs);
+
+    // And the null case: shuffle the labels -> no effect detected.
+    let mut labels: Vec<u32> = grouping.labels().to_vec();
+    let mut rng = permanova_apu::rng::Xoshiro256pp::new(7);
+    permanova_apu::rng::shuffle(&mut rng, &mut labels);
+    let null_grouping = Grouping::new(labels)?;
+    let null = permanova(&mat, &null_grouping, 999, &opts)?;
+    println!("shuffled labels: pseudo-F = {:.4}, p-value = {:.4}", null.f_obs, null.p_value);
+
+    assert!(res.p_value < 0.01, "planted structure must be significant");
+    assert!(null.p_value > 0.05, "shuffled labels must not be");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Appendix A2 reproduction: STREAM on the host + simulated MI300A.
+//!
+//! Prints (a) a real STREAM run on this machine — the number that
+//! calibrates the simulator's "what can these cores actually pull from
+//! memory" axis — and (b) the simulated MI300A CPU/GPU tables side by side
+//! with the paper's printed values.
+//!
+//! Run: `cargo run --release --example stream_bench`
+
+use permanova_apu::report::Table;
+use permanova_apu::simulator::{paper_a2_reference, simulate_stream, Mi300a, StreamDevice};
+use permanova_apu::stream::run_stream;
+
+fn main() {
+    // ---- host ----
+    let len = 40_000_000; // ~0.9 GiB across 3 arrays: big enough to defeat L3
+    let r = run_stream(len, 5, 0);
+    println!(
+        "== host STREAM: {} doubles/array, {} threads, best of {} ==",
+        r.array_len,
+        r.threads,
+        r.reps - 1
+    );
+    println!("{}", r.format_table());
+    println!(
+        "{}  (max rel err {:.2e})\n",
+        if r.validated { "Solution Validates" } else { "VALIDATION FAILED" },
+        r.max_rel_err
+    );
+
+    // ---- simulated MI300A, vs the paper's printed numbers ----
+    let m = Mi300a::default();
+    for (dev, title) in [
+        (StreamDevice::Cpu, "MI300A CPU cores (48 SMT threads, one APU)"),
+        (StreamDevice::Gpu, "MI300A GPU cores (OpenMP offload, HSA_XNACK=1)"),
+    ] {
+        println!("== simulated {title} ==");
+        let sim = simulate_stream(&m, dev, 1_000_000_000);
+        let mut t = Table::new(&["Function", "model MB/s", "paper MB/s", "delta"]);
+        for (res, (_, paper)) in sim.iter().zip(paper_a2_reference(dev)) {
+            t.row(&[
+                format!("{}:", res.kernel.name()),
+                format!("{:.1}", res.best_rate_mbs),
+                format!("{paper:.1}"),
+                format!("{:+.2}%", (res.best_rate_mbs / paper - 1.0) * 100.0),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+
+    let cpu = simulate_stream(&m, StreamDevice::Cpu, 1 << 20);
+    let gpu = simulate_stream(&m, StreamDevice::Gpu, 1 << 20);
+    println!(
+        "GPU/CPU Triad ratio on the SAME HBM stack: {:.1}x  (the paper's headline asymmetry)",
+        gpu[3].best_rate_mbs / cpu[3].best_rate_mbs
+    );
+    println!(
+        "fraction of 5.3 TB/s peak: CPU {:.1}%, GPU {:.1}%",
+        100.0 * m.bw_fraction_cpu(),
+        100.0 * m.bw_fraction_gpu()
+    );
+}

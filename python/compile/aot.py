@@ -1,0 +1,148 @@
+"""AOT lowering: JAX/Pallas PERMANOVA batch -> HLO text artifacts for Rust.
+
+The interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (`make artifacts`).  Emits, into --out:
+
+    <kernel>_n<n>_b<b>_k<k>.hlo.txt   one per configuration below
+    manifest.json                      machine-readable index for rust/runtime
+
+Python never runs on the request path; after this script the Rust binary is
+self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import make_permanova_fn
+from compile.kernels import ref
+
+# (kernel, n_dims, batch, n_groups) — the shape grid the Rust runtime can
+# request.  Sizes are chosen so interpret-mode Pallas HLO executes quickly on
+# the CPU PJRT client while still exercising multi-tile grids.
+CONFIGS = [
+    ("bruteforce", 64, 16, 4),
+    ("bruteforce", 256, 32, 8),
+    ("bruteforce", 512, 64, 8),
+    ("tiled", 64, 16, 4),
+    ("tiled", 256, 32, 8),
+    ("tiled", 512, 64, 8),
+    ("matmul", 64, 16, 4),
+    ("matmul", 256, 32, 8),
+    ("matmul", 512, 64, 8),
+    ("ref", 64, 16, 4),
+    ("ref", 256, 32, 8),
+]
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(kernel: str, n: int, b: int, k: int):
+    fn = make_permanova_fn(kernel, k)
+    mat_s = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    grp_s = jax.ShapeDtypeStruct((b, n), jnp.int32)
+    igs_s = jax.ShapeDtypeStruct((k,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(fn).lower(mat_s, grp_s, igs_s, scalar, scalar)
+
+
+def self_check(kernel: str, n: int, b: int, k: int) -> float:
+    """Execute the jitted fn and compare s_W to the oracle; returns max |err|."""
+    fn = make_permanova_fn(kernel, k)
+    mat = jnp.asarray(ref.make_distance_matrix(n, seed=7))
+    grp = jnp.asarray(ref.make_groupings(n, k, b, seed=7))
+    igs = jnp.asarray(ref.inv_group_sizes_of(np.asarray(grp[0]), k))
+    _, s_w = jax.jit(fn)(mat, grp, igs, jnp.float32(n), jnp.float32(k))
+    want = ref.sw_ref(mat, grp, igs)
+    return float(jnp.max(jnp.abs(s_w - want)))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--check", action="store_true",
+                    help="also execute each config and verify against the oracle")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated kernel names to restrict to")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    entries = []
+    for kernel, n, b, k in CONFIGS:
+        if only and kernel not in only:
+            continue
+        name = f"{kernel}_n{n}_b{b}_k{k}"
+        path = os.path.join(args.out, name + ".hlo.txt")
+        lowered = lower_config(kernel, n, b, k)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": os.path.basename(path),
+            "kernel": kernel,
+            "n_dims": n,
+            "batch": b,
+            "n_groups": k,
+            "inputs": [
+                {"name": "mat", "shape": [n, n], "dtype": "f32"},
+                {"name": "groupings", "shape": [b, n], "dtype": "i32"},
+                {"name": "inv_group_sizes", "shape": [k], "dtype": "f32"},
+                {"name": "n_eff", "shape": [], "dtype": "f32"},
+                {"name": "k_eff", "shape": [], "dtype": "f32"},
+            ],
+            # return_tuple=True => a 2-tuple (f_stats, s_w), each (b,) f32
+            "outputs": [
+                {"name": "f_stats", "shape": [b], "dtype": "f32"},
+                {"name": "s_w", "shape": [b], "dtype": "f32"},
+            ],
+        }
+        if args.check:
+            err = self_check(kernel, n, b, k)
+            entry["self_check_max_abs_err"] = err
+            status = f"err={err:.3e}"
+            if err > 5e-3:
+                print(f"FAIL {name}: {status}", file=sys.stderr)
+                return 1
+        else:
+            status = "ok"
+        entries.append(entry)
+        print(f"wrote {path} ({len(text)} chars) {status}")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "interchange": "hlo-text",
+        "artifacts": entries,
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} artifacts)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,26 @@
+"""L1 Pallas kernels for the PERMANOVA pseudo-F partial statistic.
+
+Three device-shaped variants of the same statistic (see DESIGN.md
+§Hardware-Adaptation), plus the pure-jnp oracle:
+
+  * ``bruteforce`` — Algorithm 3 analog (stream everything, mask the branch)
+  * ``tiled``      — Algorithm 2 analog (BlockSpec HBM<->VMEM schedule)
+  * ``matmul``     — TPU-native one-hot MXU reformulation (our extension)
+
+``KERNELS`` maps the names used by aot.py / the Rust manifest to callables
+with the uniform signature ``f(mat, groupings, inv_group_sizes) -> (B,)``.
+"""
+
+from compile.kernels.sw_bruteforce import sw_bruteforce
+from compile.kernels.sw_matmul import sw_matmul
+from compile.kernels.sw_tiled import sw_tiled
+from compile.kernels import ref
+
+KERNELS = {
+    "bruteforce": sw_bruteforce,
+    "tiled": sw_tiled,
+    "matmul": sw_matmul,
+    "ref": ref.sw_ref,
+}
+
+__all__ = ["KERNELS", "sw_bruteforce", "sw_tiled", "sw_matmul", "ref"]

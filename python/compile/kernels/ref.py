@@ -1,0 +1,122 @@
+"""Pure-jnp correctness oracle for the PERMANOVA pseudo-F partial statistic.
+
+This module is the numerical ground truth every Pallas kernel (and, via the
+AOT artifacts, the Rust runtime) is validated against.  It implements the
+statistic exactly as the paper's Algorithm 1 defines it:
+
+    s_W = sum_{i < j, grouping[i] == grouping[j]}
+              mat[i, j]^2 * inv_group_sizes[grouping[i]]
+
+computed independently for every permutation (row of ``groupings``).
+
+Everything here is straight ``jnp`` — no Pallas, no custom calls — so it runs
+on any backend and is trivially differentiable/inspectable.  It is O(B * n^2)
+memory, which is fine at test scale and intentionally *not* optimized: being
+obviously correct is its one job.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def upper_tri_mask(n: int) -> jnp.ndarray:
+    """Boolean (n, n) mask of the strict upper triangle (col > row).
+
+    The distance matrix is symmetric with a zero diagonal, so PERMANOVA only
+    ever sums over i < j — the paper's loops start at ``col = row + 1``.
+    """
+    rows = jnp.arange(n)[:, None]
+    cols = jnp.arange(n)[None, :]
+    return cols > rows
+
+
+def sw_ref(
+    mat: jnp.ndarray,
+    groupings: jnp.ndarray,
+    inv_group_sizes: jnp.ndarray,
+) -> jnp.ndarray:
+    """Oracle pseudo-F partial statistic s_W for a batch of permutations.
+
+    Args:
+      mat: (n, n) float32 symmetric distance matrix, zero diagonal.
+      groupings: (B, n) int32 group index per object, one row per permutation.
+      inv_group_sizes: (k,) float32, 1 / |group|.
+
+    Returns:
+      (B,) float32 s_W per permutation.
+    """
+    n = mat.shape[0]
+    sq = mat * mat                                            # (n, n)
+    same = groupings[:, :, None] == groupings[:, None, :]     # (B, n, n)
+    tri = upper_tri_mask(n)[None, :, :]                       # (1, n, n)
+    w = inv_group_sizes[groupings]                            # (B, n) row weight
+    contrib = jnp.where(same & tri, sq[None, :, :], 0.0) * w[:, :, None]
+    return jnp.sum(contrib, axis=(1, 2))
+
+
+def st_ref(mat: jnp.ndarray) -> jnp.ndarray:
+    """Total sum of squares s_T = sum_{i<j} d_ij^2 / n (scalar)."""
+    n = mat.shape[0]
+    sq = mat * mat
+    return jnp.sum(jnp.where(upper_tri_mask(n), sq, 0.0)) / n
+
+
+def fstat_ref(
+    mat: jnp.ndarray,
+    groupings: jnp.ndarray,
+    inv_group_sizes: jnp.ndarray,
+    n_groups: int,
+) -> jnp.ndarray:
+    """Oracle pseudo-F statistic per permutation (skbio semantics).
+
+    F = (s_A / (k - 1)) / (s_W / (n - k)),   s_A = s_T - s_W
+    """
+    n = mat.shape[0]
+    s_w = sw_ref(mat, groupings, inv_group_sizes)
+    s_t = st_ref(mat)
+    s_a = s_t - s_w
+    return (s_a / (n_groups - 1)) / (s_w / (n - n_groups))
+
+
+# ---------------------------------------------------------------------------
+# Test-data helpers (numpy, seeded) — shared by pytest and aot self-checks.
+# ---------------------------------------------------------------------------
+
+def make_distance_matrix(n: int, seed: int = 0) -> np.ndarray:
+    """Random symmetric float32 distance matrix with zero diagonal.
+
+    Entries are Euclidean distances between random points so the matrix is a
+    genuine metric (useful for UniFrac-shaped sanity checks), scaled to O(1).
+    """
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, 8)).astype(np.float64)
+    d = np.sqrt(((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1))
+    d /= max(d.max(), 1e-9)
+    np.fill_diagonal(d, 0.0)
+    return d.astype(np.float32)
+
+
+def make_groupings(n: int, k: int, batch: int, seed: int = 0) -> np.ndarray:
+    """(batch, n) int32 groupings: row 0 is a balanced labelling, the rest are
+    random permutations of it — exactly how PERMANOVA's permutation test
+    shuffles labels."""
+    rng = np.random.default_rng(seed)
+    base = (np.arange(n) % k).astype(np.int32)
+    rows = [base]
+    for _ in range(batch - 1):
+        rows.append(rng.permutation(base))
+    return np.stack(rows).astype(np.int32)
+
+
+def inv_group_sizes_of(grouping: np.ndarray, k: int) -> np.ndarray:
+    """(k,) float32 inverse group sizes for one labelling.
+
+    Group sizes are permutation-invariant (a permutation only reassigns which
+    objects carry each label), so one vector serves the whole batch.
+    """
+    counts = np.bincount(grouping.astype(np.int64), minlength=k).astype(np.float64)
+    if (counts == 0).any():
+        raise ValueError(f"empty group in labelling (k={k}, counts={counts})")
+    return (1.0 / counts).astype(np.float32)

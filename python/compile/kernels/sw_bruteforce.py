@@ -1,0 +1,79 @@
+"""Pallas kernel: brute-force s_W — the TPU analog of the paper's Algorithm 3.
+
+The paper's GPU port keeps the algorithm brute force and wins by letting the
+massively parallel device stream the whole distance matrix per permutation
+(`#pragma omp target teams distribute` over permutations, `parallel for
+collapse(2) reduction(+:s_W)` within one).  The TPU mapping:
+
+  * one grid program per permutation (the `teams distribute` axis);
+  * the branch `grouping[col] == group_idx` becomes a vectorized mask on the
+    VPU — the same predication the GPU compiler applies;
+  * the whole (n, n) tile lives in VMEM for the test shapes we AOT; for
+    production shapes the tiled/matmul variants express the HBM<->VMEM
+    schedule explicitly (see sw_tiled.py / sw_matmul.py).
+
+VMEM footprint (per program): n*n*4 B for the matrix block + 2*n*4 B for the
+grouping row and weights.  At n = 1024 that is 4 MiB — comfortably inside a
+TPU core's ~16 MiB VMEM; beyond n ≈ 1800 the tiled variant must be used.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust runtime
+(xla crate, xla_extension 0.5.1) compiles and runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(mat_ref, grp_ref, igs_ref, out_ref):
+    """One permutation: masked sum of squares over the strict upper triangle."""
+    m = mat_ref[...]                      # (n, n) f32
+    g = grp_ref[...]                      # (1, n) i32
+    igs = igs_ref[...]                    # (1, k) f32
+    n = m.shape[0]
+
+    rows_g = g[0, :, None]                # (n, 1) group of the row object
+    cols_g = g[0, None, :]                # (1, n) group of the col object
+    same = rows_g == cols_g               # (n, n) the Alg.1 branch, as a mask
+
+    row_ix = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    col_ix = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    tri = col_ix > row_ix                 # col = row+1 .. n-1
+
+    w = igs[0, g[0, :]][:, None]          # (n, 1) inv_group_sizes[grouping[row]]
+    contrib = jnp.where(same & tri, m * m, 0.0) * w
+    out_ref[0] = jnp.sum(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sw_bruteforce(mat, groupings, inv_group_sizes):
+    """Batch s_W via the brute-force Pallas kernel.
+
+    Args:
+      mat: (n, n) f32 symmetric distance matrix, zero diagonal.
+      groupings: (B, n) i32.
+      inv_group_sizes: (k,) f32.
+
+    Returns:
+      (B,) f32.
+    """
+    b, n = groupings.shape
+    k = inv_group_sizes.shape[0]
+    igs2 = inv_group_sizes.reshape(1, k)
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda p: (0, 0)),   # matrix reused every program
+            pl.BlockSpec((1, n), lambda p: (p, 0)),   # this permutation's labels
+            pl.BlockSpec((1, k), lambda p: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda p: (p,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(mat, groupings, igs2)

@@ -1,0 +1,106 @@
+"""Pallas kernel: tiled s_W — the TPU analog of the paper's Algorithm 2.
+
+Algorithm 2 hand-tiles the (row, col) loops so the ``grouping`` array is
+accessed in cache-resident blocks and hoists ``inv_group_sizes`` out of the
+inner loop.  On a TPU the same schedule is expressed *declaratively*: the
+BlockSpec grid (perm, row-tile, col-tile) is the HBM<->VMEM double-buffering
+plan; each program owns a (T, T) matrix tile in VMEM plus the two length-T
+grouping slices, and accumulates into the per-permutation output across grid
+steps (the revisiting-output-block accumulation idiom).
+
+The paper's CPU-side discovery — reuse the ``inv_group_sizes[group_idx]``
+access in the innermost loop — appears here as the per-row weight vector
+``w`` computed once per tile-row and broadcast.
+
+VMEM per program: T*T*4 + 2*T*4 bytes — 64 KiB for T = 128, so double/triple
+buffering fits trivially and tile size can instead be chosen for grid
+efficiency.  Unlike Algorithm 2 on the CPU (which skips sub-diagonal tiles),
+the grid here is rectangular and sub-diagonal tiles are masked out; a
+triangular grid would halve the programs but break the static BlockSpec —
+DESIGN.md §Hardware-Adaptation discusses the trade.
+
+Requires n % tile == 0 — the public wrapper pads (mat rows/cols with zeros,
+groupings with label 0: padded distances are zero so matching labels
+contribute nothing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(mat_ref, grp_row_ref, grp_col_ref, igs_ref, out_ref, *, tile: int):
+    """One (perm, row-tile, col-tile) program: masked partial sum."""
+    ti = pl.program_id(1)                 # row-tile index
+    tj = pl.program_id(2)                 # col-tile index
+
+    m = mat_ref[...]                      # (T, T)
+    g_row = grp_row_ref[...]              # (1, T) labels of this tile's rows
+    g_col = grp_col_ref[...]              # (1, T) labels of this tile's cols
+    igs = igs_ref[...]                    # (1, k)
+
+    same = g_row[0, :, None] == g_col[0, None, :]          # (T, T)
+
+    # Global indices for the strict-upper-triangle mask (Alg.2's
+    # min_col = max(tcol, row+1) edge handling, done as a mask).
+    row_ix = ti * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 0)
+    col_ix = tj * tile + jax.lax.broadcasted_iota(jnp.int32, (tile, tile), 1)
+    tri = col_ix > row_ix
+
+    w = igs[0, g_row[0, :]][:, None]                        # (T, 1), hoisted
+    partial = jnp.sum(jnp.where(same & tri, m * m, 0.0) * w)
+
+    # Accumulate across the (ti, tj) sub-grid into this permutation's slot.
+    @pl.when((ti == 0) & (tj == 0))
+    def _init():
+        out_ref[0] = 0.0
+
+    out_ref[0] += partial
+
+
+def _pad_to_multiple(mat, groupings, tile):
+    n = mat.shape[0]
+    pad = (-n) % tile
+    if pad == 0:
+        return mat, groupings, n
+    mat_p = jnp.pad(mat, ((0, pad), (0, pad)))
+    grp_p = jnp.pad(groupings, ((0, 0), (0, pad)))  # label 0; d == 0 there
+    return mat_p, grp_p, n + pad
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def sw_tiled(mat, groupings, inv_group_sizes, *, tile: int = 128):
+    """Batch s_W via the tiled Pallas kernel (Algorithm 2 analog).
+
+    Args:
+      mat: (n, n) f32 symmetric distance matrix, zero diagonal.
+      groupings: (B, n) i32.
+      inv_group_sizes: (k,) f32.
+      tile: static tile edge (the paper's TILE constant).
+
+    Returns:
+      (B,) f32.
+    """
+    b = groupings.shape[0]
+    mat_p, grp_p, n_p = _pad_to_multiple(mat, groupings, tile)
+    nt = n_p // tile
+    k = inv_group_sizes.shape[0]
+    igs2 = inv_group_sizes.reshape(1, k)
+    kern = functools.partial(_kernel, tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=(b, nt, nt),
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda p, i, j: (i, j)),
+            pl.BlockSpec((1, tile), lambda p, i, j: (p, i)),  # row labels
+            pl.BlockSpec((1, tile), lambda p, i, j: (p, j)),  # col labels
+            pl.BlockSpec((1, k), lambda p, i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda p, i, j: (p,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(mat_p, grp_p, grp_p, igs2)

@@ -1,0 +1,86 @@
+"""L2: the PERMANOVA compute graph in JAX, calling the L1 Pallas kernels.
+
+The paper scopes itself to the hot loop (`permanova_f_stat_sW`) and notes the
+surrounding steps "add minimal overhead".  We implement the *whole* statistic
+here anyway — s_T, s_A, pseudo-F per permutation — so the artifact the Rust
+coordinator executes is the complete per-batch computation and the p-value
+aggregation on the Rust side is a trivial fold.
+
+One lowered artifact = one (kernel variant, n, batch, k) configuration:
+
+    inputs : mat (n, n) f32, groupings (B, n) i32, inv_group_sizes (k,) f32,
+             n_eff () f32, k_eff () f32
+    outputs: (f_stats (B,) f32, s_w (B,) f32)
+
+The kernel choice and the one-hot width k are static (baked at AOT time);
+the *effective* problem size n_eff and group count k_eff are runtime
+scalars, so one artifact serves any padded problem with n <= n_dims and
+k <= n_groups: padding rows carry zero distances and label 0, contributing
+exactly 0 to s_W, while s_T's normalization and the F statistic's degrees
+of freedom use the true values.
+
+This module is build-time only; it is never imported on the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import KERNELS
+from compile.kernels.ref import st_ref
+
+
+def fstat_from_sw(s_w, s_t, n_eff, k_eff) -> jnp.ndarray:
+    """Pseudo-F from the partial statistic: F = (s_A/(k-1)) / (s_W/(n-k)).
+
+    ``n_eff`` / ``k_eff`` may be python ints or traced f32 scalars.
+    """
+    s_a = s_t - s_w
+    return (s_a / (k_eff - 1)) / (s_w / (n_eff - k_eff))
+
+
+def make_permanova_fn(kernel: str, n_groups: int) -> Callable:
+    """Build the batch PERMANOVA function for one kernel variant.
+
+    Returns ``fn(mat, groupings, inv_group_sizes, n_eff, k_eff) ->
+    (f_stats, s_w)`` — the function aot.py lowers and the Rust runtime
+    executes per batch.  ``n_groups`` is the static one-hot width; ``k_eff``
+    the (possibly smaller) true group count.
+    """
+    if kernel not in KERNELS:
+        raise KeyError(f"unknown kernel {kernel!r}; have {sorted(KERNELS)}")
+    sw_fn = KERNELS[kernel]
+
+    def permanova_batch(mat, groupings, inv_group_sizes, n_eff, k_eff):
+        n_pad = mat.shape[0]
+        s_w = sw_fn(mat, groupings, inv_group_sizes)
+        # s_T normalized by the *true* n: padded entries are zero, so the
+        # raw sum is unaffected; only the divisor matters.
+        s_t = st_ref(mat) * (jnp.float32(n_pad) / n_eff)
+        f = fstat_from_sw(s_w, s_t, n_eff, k_eff)
+        return (f, s_w)
+
+    return permanova_batch
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "n_groups"))
+def permanova_fstats(mat, groupings, inv_group_sizes, *, kernel: str, n_groups: int):
+    """JIT entry point used by the python tests: un-padded problems, so
+    n_eff/k_eff come straight from the shapes."""
+    n = mat.shape[0]
+    return make_permanova_fn(kernel, n_groups)(
+        mat, groupings, inv_group_sizes, jnp.float32(n), jnp.float32(n_groups)
+    )
+
+
+def pvalue(f_obs: float, f_perms: jnp.ndarray) -> jnp.ndarray:
+    """Permutation p-value, skbio semantics: (1 + #{F_perm >= F_obs}) / (1 + P).
+
+    Provided for the python tests; the Rust coordinator owns this fold in
+    production (it aggregates across batches).
+    """
+    return (1.0 + jnp.sum(f_perms >= f_obs)) / (1.0 + f_perms.shape[0])

@@ -1,0 +1,64 @@
+"""AOT path tests: lowering to HLO text and the manifest contract.
+
+These guard the Rust interchange: the text must parse-ready HLO (ENTRY
+present, tuple root), and the manifest must describe exactly what the Rust
+runtime will feed/expect.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("kernel", ["bruteforce", "tiled", "matmul", "ref"])
+def test_lowering_produces_hlo_text(kernel):
+    lowered = aot.lower_config(kernel, 16, 2, 2)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # return_tuple=True: root must be a 2-tuple of f32[2] (f_stats, s_w)
+    assert "(f32[2]" in text.replace(" ", "")
+
+
+@pytest.mark.parametrize("kernel,n,b,k", [("bruteforce", 24, 3, 3),
+                                          ("tiled", 24, 3, 3),
+                                          ("matmul", 24, 3, 3)])
+def test_self_check_small(kernel, n, b, k):
+    err = aot.self_check(kernel, n, b, k)
+    assert err < 5e-4, err
+
+
+def test_main_writes_manifest(tmp_path):
+    rc = _run_main(["--out", str(tmp_path), "--only", "matmul"])
+    assert rc == 0
+    mpath = tmp_path / "manifest.json"
+    assert mpath.exists()
+    manifest = json.loads(mpath.read_text())
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    assert manifest["interchange"] == "hlo-text"
+    arts = manifest["artifacts"]
+    assert all(a["kernel"] == "matmul" for a in arts)
+    for a in arts:
+        f = tmp_path / a["file"]
+        assert f.exists() and f.stat().st_size > 0
+        assert a["inputs"][0]["shape"] == [a["n_dims"], a["n_dims"]]
+        assert a["inputs"][1]["shape"] == [a["batch"], a["n_dims"]]
+        assert a["outputs"][0]["shape"] == [a["batch"]]
+
+
+def _run_main(argv):
+    import sys
+    old = sys.argv
+    sys.argv = ["aot.py"] + argv
+    try:
+        return aot.main()
+    finally:
+        sys.argv = old
+
+
+def test_unknown_kernel_rejected():
+    with pytest.raises(KeyError):
+        aot.lower_config("bogus", 8, 1, 2)

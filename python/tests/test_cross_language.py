@@ -1,0 +1,58 @@
+"""Cross-language golden values: the same pinned cases the Rust suite
+asserts (rust/src/permanova/kernels.rs, stats.rs), so a drift on either
+side of the AOT bridge fails loudly in both test suites.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import KERNELS
+from compile.kernels import ref
+from compile.model import fstat_from_sw
+
+
+def test_pinned_sw_case():
+    """Identical to kernels.rs::hand_computed_value_all_algorithms:
+    groups {0,1},{2,3}; d(0,1)=1, d(2,3)=2, cross=9 -> s_W = 2.5."""
+    mat = np.zeros((4, 4), np.float32)
+    mat[0, 1] = mat[1, 0] = 1.0
+    mat[2, 3] = mat[3, 2] = 2.0
+    for i in (0, 1):
+        for j in (2, 3):
+            mat[i, j] = mat[j, i] = 9.0
+    grp = np.array([[0, 0, 1, 1]], np.int32)
+    igs = np.array([0.5, 0.5], np.float32)
+    for name, kern in KERNELS.items():
+        got = np.asarray(kern(jnp.asarray(mat), jnp.asarray(grp), jnp.asarray(igs)))
+        np.testing.assert_allclose(got, [2.5], rtol=1e-6, err_msg=name)
+
+
+def test_pinned_st_case():
+    """Identical to stats.rs::st_hand_computed: s_T = (1+4+4)/3 = 3."""
+    mat = np.zeros((3, 3), np.float32)
+    mat[0, 1] = mat[1, 0] = 1.0
+    mat[0, 2] = mat[2, 0] = 2.0
+    mat[1, 2] = mat[2, 1] = 2.0
+    st = float(ref.st_ref(jnp.asarray(mat)))
+    assert abs(st - 3.0) < 1e-6
+
+
+def test_pinned_fstat_case():
+    """Identical to stats.rs::fstat_identity: F(s_w=4, s_t=10, n=10, k=3)
+    = (6/2)/(4/7) = 5.25."""
+    f = float(fstat_from_sw(jnp.float32(4.0), jnp.float32(10.0), 10.0, 3.0))
+    assert abs(f - 5.25) < 1e-5
+
+
+def test_seeded_generators_stable():
+    """The numpy test-data generators are seed-stable across sessions —
+    the AOT self-check and the pytest suite rely on it."""
+    m1 = ref.make_distance_matrix(16, seed=7)
+    m2 = ref.make_distance_matrix(16, seed=7)
+    np.testing.assert_array_equal(m1, m2)
+    g1 = ref.make_groupings(16, 4, 3, seed=7)
+    g2 = ref.make_groupings(16, 4, 3, seed=7)
+    np.testing.assert_array_equal(g1, g2)
+    assert not np.array_equal(
+        ref.make_distance_matrix(16, seed=8), m1
+    ), "different seeds differ"

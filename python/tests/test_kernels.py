@@ -1,0 +1,121 @@
+"""Kernel vs oracle: the core correctness signal for the L1 layer.
+
+Every Pallas variant must agree with the pure-jnp oracle on the same inputs,
+across shapes that exercise single-tile, multi-tile, and padded grids.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import KERNELS
+from compile.kernels import ref
+from compile.kernels.sw_tiled import sw_tiled
+
+KERNEL_NAMES = ["bruteforce", "tiled", "matmul"]
+SHAPES = [
+    (16, 3, 4),    # tiny, unbalanced-ish groups
+    (64, 4, 8),    # one tile
+    (96, 5, 8),    # non-power-of-two n (tiled path pads 96 -> 128)
+    (128, 8, 16),  # multi-tile, wider batch
+]
+
+
+def _case(n, k, b, seed=0):
+    mat = jnp.asarray(ref.make_distance_matrix(n, seed=seed))
+    grp = jnp.asarray(ref.make_groupings(n, k, b, seed=seed))
+    igs = jnp.asarray(ref.inv_group_sizes_of(np.asarray(grp[0]), k))
+    return mat, grp, igs
+
+
+@pytest.mark.parametrize("kernel", KERNEL_NAMES)
+@pytest.mark.parametrize("n,k,b", SHAPES)
+def test_kernel_matches_oracle(kernel, n, k, b):
+    mat, grp, igs = _case(n, k, b, seed=n + k + b)
+    got = KERNELS[kernel](mat, grp, igs)
+    want = ref.sw_ref(mat, grp, igs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [16, 32, 64, 128])
+def test_tiled_is_tile_size_invariant(tile):
+    """Algorithm 2's TILE is a schedule knob, never a semantics knob."""
+    mat, grp, igs = _case(96, 6, 8, seed=tile)
+    got = sw_tiled(mat, grp, igs, tile=tile)
+    want = ref.sw_ref(mat, grp, igs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kernel", KERNEL_NAMES)
+def test_kernel_zero_matrix(kernel):
+    """All-zero distances => s_W == 0 exactly, any grouping."""
+    n, k, b = 32, 4, 8
+    _, grp, igs = _case(n, k, b)
+    got = KERNELS[kernel](jnp.zeros((n, n), jnp.float32), grp, igs)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(b, np.float32))
+
+
+@pytest.mark.parametrize("kernel", KERNEL_NAMES)
+def test_kernel_single_group_recovers_full_sum(kernel):
+    """k_eff=1 (all objects one group): s_W = sum_{i<j} d^2 / n.
+
+    inv_group_sizes is padded to length 2 because a one-hot width of 1 is a
+    degenerate shape some paths reject; label 1 is simply never used.
+    """
+    n, b = 48, 4
+    mat = jnp.asarray(ref.make_distance_matrix(n, seed=3))
+    grp = jnp.zeros((b, n), jnp.int32)
+    igs = jnp.asarray(np.array([1.0 / n, 1.0], np.float32))
+    got = KERNELS[kernel](mat, grp, igs)
+    sq = np.asarray(mat, np.float64) ** 2
+    want = np.triu(sq, 1).sum() / n
+    np.testing.assert_allclose(np.asarray(got), np.full(b, want), rtol=2e-5)
+
+
+@pytest.mark.parametrize("kernel", KERNEL_NAMES)
+def test_kernel_batch_rows_independent(kernel):
+    """Each permutation's s_W depends only on its own row of groupings."""
+    mat, grp, igs = _case(64, 4, 6, seed=11)
+    full = np.asarray(KERNELS[kernel](mat, grp, igs))
+    for i in [0, 3, 5]:
+        solo = np.asarray(KERNELS[kernel](mat, grp[i:i + 1], igs))
+        np.testing.assert_allclose(solo[0], full[i], rtol=1e-6)
+
+
+def test_oracle_hand_computed():
+    """Pin the oracle itself to a by-hand value.
+
+    n=4, groups {0,1} = {0,1},{2,3}; d(0,1)=1, d(2,3)=2, cross distances 9.
+    s_W = 1^2 * (1/2) + 2^2 * (1/2) = 2.5
+    """
+    mat = np.zeros((4, 4), np.float32)
+    mat[0, 1] = mat[1, 0] = 1.0
+    mat[2, 3] = mat[3, 2] = 2.0
+    for i in (0, 1):
+        for j in (2, 3):
+            mat[i, j] = mat[j, i] = 9.0
+    grp = np.array([[0, 0, 1, 1]], np.int32)
+    igs = np.array([0.5, 0.5], np.float32)
+    got = ref.sw_ref(jnp.asarray(mat), jnp.asarray(grp), jnp.asarray(igs))
+    np.testing.assert_allclose(np.asarray(got), [2.5], rtol=1e-6)
+
+
+def test_matmul_requires_symmetry_documented():
+    """The matmul variant sums ordered pairs and halves: on an asymmetric
+    matrix it averages d_ij and d_ji — it must NOT be silently equal to the
+    upper-triangle oracle there.  This pins the documented contract."""
+    n, k, b = 16, 2, 1
+    rng = np.random.default_rng(5)
+    asym = rng.random((n, n)).astype(np.float32)
+    np.fill_diagonal(asym, 0.0)
+    grp = jnp.asarray((np.arange(n) % k).astype(np.int32)[None, :])
+    igs = jnp.asarray(np.full(k, 1.0 / (n // k), np.float32))
+    got = np.asarray(KERNELS["matmul"](jnp.asarray(asym), grp, igs))[0]
+    upper = np.asarray(ref.sw_ref(jnp.asarray(asym), grp, igs))[0]
+    sym_equiv = np.asarray(
+        ref.sw_ref(jnp.asarray(np.sqrt((asym**2 + asym.T**2) / 2)), grp, igs)
+    )[0]
+    assert abs(got - sym_equiv) < 1e-4 * max(1.0, abs(sym_equiv))
+    assert abs(got - upper) > 1e-3  # genuinely different on asymmetric input

@@ -1,0 +1,103 @@
+"""Hypothesis sweeps: kernel shapes/dtypes/values vs the oracle.
+
+These complement the fixed-shape tests with randomized structure: arbitrary
+(n, k, batch) inside the envelope, arbitrary distance scales, degenerate
+groupings, adversarial tile sizes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import KERNELS
+from compile.kernels import ref
+from compile.kernels.sw_tiled import sw_tiled
+
+# Interpret-mode Pallas is slow; keep shapes modest but varied.
+dims = st.integers(min_value=6, max_value=48)
+groups = st.integers(min_value=2, max_value=5)
+batches = st.integers(min_value=1, max_value=6)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+scales = st.floats(min_value=1e-3, max_value=1e3, allow_nan=False)
+
+
+def _case(n, k, b, seed, scale=1.0):
+    k = min(k, n // 2)  # every group needs >= 1 member; keep n-k > 0
+    mat = ref.make_distance_matrix(n, seed=seed) * np.float32(scale)
+    grp = ref.make_groupings(n, k, b, seed=seed)
+    igs = ref.inv_group_sizes_of(grp[0], k)
+    return jnp.asarray(mat), jnp.asarray(grp), jnp.asarray(igs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=dims, k=groups, b=batches, seed=seeds)
+def test_bruteforce_matches_oracle(n, k, b, seed):
+    mat, grp, igs = _case(n, k, b, seed)
+    got = KERNELS["bruteforce"](mat, grp, igs)
+    want = ref.sw_ref(mat, grp, igs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=dims, k=groups, b=batches, seed=seeds,
+       tile=st.sampled_from([4, 8, 16, 32]))
+def test_tiled_matches_oracle_any_tile(n, k, b, seed, tile):
+    """Padding path: n is rarely a multiple of tile here."""
+    mat, grp, igs = _case(n, k, b, seed)
+    got = sw_tiled(mat, grp, igs, tile=tile)
+    want = ref.sw_ref(mat, grp, igs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=dims, k=groups, b=batches, seed=seeds)
+def test_matmul_matches_oracle(n, k, b, seed):
+    mat, grp, igs = _case(n, k, b, seed)
+    got = KERNELS["matmul"](mat, grp, igs)
+    want = ref.sw_ref(mat, grp, igs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=dims, k=groups, seed=seeds, scale=scales)
+def test_scale_equivariance(n, k, seed, scale):
+    """s_W(c * D) == c^2 * s_W(D): squared distances scale quadratically."""
+    mat, grp, igs = _case(n, k, 2, seed)
+    base = np.asarray(ref.sw_ref(mat, grp, igs), np.float64)
+    scaled = np.asarray(ref.sw_ref(mat * np.float32(scale), grp, igs), np.float64)
+    np.testing.assert_allclose(scaled, base * scale * scale, rtol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=dims, k=groups, seed=seeds)
+def test_label_relabelling_invariance(n, k, seed):
+    """Renaming group labels (a bijection on {0..k-1}) leaves s_W unchanged
+    when inv_group_sizes is permuted consistently."""
+    mat, grp, igs = _case(n, k, 1, seed)
+    k_eff = int(np.asarray(igs).shape[0])
+    perm = np.random.default_rng(seed).permutation(k_eff)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(k_eff)
+    grp2 = jnp.asarray(perm[np.asarray(grp)])          # relabel
+    igs2 = jnp.asarray(np.asarray(igs)[inv[perm][perm]])  # identity on sizes
+    igs2 = jnp.asarray(np.asarray(igs)[np.argsort(perm)][perm])  # keep simple
+    # Directly: new label perm[g] has the size of old label g.
+    igs_re = np.empty(k_eff, np.float32)
+    igs_re[perm] = np.asarray(igs)
+    got = np.asarray(ref.sw_ref(mat, grp2, jnp.asarray(igs_re)))
+    want = np.asarray(ref.sw_ref(mat, grp, igs))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=8, max_value=32), seed=seeds)
+def test_sw_bounded_by_st_times_n(n, seed):
+    """0 <= s_W and s_W <= n * s_T (since each pair weight <= 1)."""
+    mat, grp, igs = _case(n, 3, 4, seed)
+    s_w = np.asarray(ref.sw_ref(mat, grp, igs))
+    s_t = float(ref.st_ref(mat))
+    assert (s_w >= 0).all()
+    assert (s_w <= n * s_t + 1e-4).all()

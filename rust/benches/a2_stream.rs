@@ -1,0 +1,58 @@
+//! BENCH A2 — the paper's Appendix A2: STREAM memory bandwidth.
+//!
+//! Host-measured STREAM (Copy/Scale/Add/Triad), then the simulated MI300A
+//! CPU and GPU tables side-by-side with the paper's printed values.
+//!
+//! Run: `cargo bench --bench a2_stream`
+
+use permanova_apu::report::Table;
+use permanova_apu::simulator::{paper_a2_reference, simulate_stream, Mi300a, StreamDevice};
+use permanova_apu::stream::run_stream;
+
+fn main() {
+    println!("================================================================");
+    println!("A2.host  STREAM on this machine");
+    println!("================================================================\n");
+    let r = run_stream(30_000_000, 6, 0);
+    println!(
+        "array = {} doubles x3 ({} MiB total), {} threads, best of {}",
+        r.array_len,
+        r.array_len * 8 * 3 >> 20,
+        r.threads,
+        r.reps - 1
+    );
+    println!("{}", r.format_table());
+    println!(
+        "{} (max rel err {:.2e})\n",
+        if r.validated { "Solution Validates" } else { "VALIDATION FAILED" },
+        r.max_rel_err
+    );
+
+    println!("================================================================");
+    println!("A2.sim  simulated MI300A vs the paper's printed values");
+    println!("================================================================\n");
+    let m = Mi300a::default();
+    for (dev, title) in [
+        (StreamDevice::Cpu, "CPU cores, 48 threads (stream.large.exe)"),
+        (StreamDevice::Gpu, "GPU cores (stream.amd_apu.exe, HSA_XNACK=1)"),
+    ] {
+        println!("-- {title} --");
+        let sim = simulate_stream(&m, dev, 1_000_000_000);
+        let mut t = Table::new(&["Function", "model MB/s", "paper MB/s", "delta"]);
+        for (res, (_, paper)) in sim.iter().zip(paper_a2_reference(dev)) {
+            t.row(&[
+                format!("{}:", res.kernel.name()),
+                format!("{:.1}", res.best_rate_mbs),
+                format!("{paper:.1}"),
+                format!("{:+.2}%", (res.best_rate_mbs / paper - 1.0) * 100.0),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    let cpu = simulate_stream(&m, StreamDevice::Cpu, 1 << 20);
+    let gpu = simulate_stream(&m, StreamDevice::Gpu, 1 << 20);
+    println!(
+        "headline asymmetry: GPU/CPU Triad = {:.1}x on identical HBM (paper: ~15x)",
+        gpu[3].best_rate_mbs / cpu[3].best_rate_mbs
+    );
+}

@@ -1,0 +1,63 @@
+//! BENCH ABL-SCALE — the paper's workload envelope.
+//!
+//! §2: "a typical PERMANOVA invocation uses a distance matrix between 1k²
+//! and 100k² elements, and computes the pseudo-F partial statistic on
+//! between 1k and 1M permutations."  This bench measures host throughput
+//! across matrix sizes (elements/s must stay ~flat once out of cache) and
+//! sweeps the model across the paper's full envelope.
+//!
+//! Run: `cargo bench --bench ablation_scaling`
+
+use permanova_apu::bench::Bencher;
+use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::permanova::{sw_permutations, Grouping, SwAlgorithm};
+use permanova_apu::report::Table;
+use permanova_apu::simulator::{predict, DeviceConfig, Mi300a, Workload};
+
+fn main() {
+    println!("host: matrix-size scaling of Algorithm 2 (tiled, all threads)\n");
+    let mut b = Bencher { warmup: 1, min_reps: 3, max_reps: 5, ..Default::default() };
+    let mut t = Table::new(&["n", "perms", "median s", "Melem/s"]);
+    for n in [256usize, 512, 1024, 2048] {
+        // Keep total work ~constant so every row runs in similar time.
+        let perms = (2048 * 2048 / (n * n) * 8).clamp(2, 512);
+        let mat = DistanceMatrix::random_euclidean(n, 8, 1);
+        let grouping = Grouping::balanced(n, 8).unwrap();
+        let m = b.run(&format!("n{n}"), || {
+            sw_permutations(&mat, &grouping, 3, perms, SwAlgorithm::Tiled { tile: 512 }, 0)
+        });
+        let elems = (n * (n - 1) / 2) as f64 * perms as f64;
+        t.row(&[
+            n.to_string(),
+            perms.to_string(),
+            format!("{:.4}", m.median),
+            format!("{:.1}", elems / m.median / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("model: MI300A predictions across the paper's envelope");
+    println!("(rows: matrix edge; cols: permutations; cells: GPU-brute s / CPU-tiled-SMT s)\n");
+    let machine = Mi300a::default();
+    let ns = [1_000usize, 5_000, 25_145, 100_000];
+    let ps = [1_000usize, 3_999, 100_000, 1_000_000];
+    let mut mt = Table::new(&["n \\ perms", "1k", "3999", "100k", "1M"]);
+    for n in ns {
+        let mut row = vec![n.to_string()];
+        for p in ps {
+            let w = Workload { n_dims: n, n_perms: p, n_groups: 8 };
+            let gpu = predict(&machine, &w, SwAlgorithm::Brute, DeviceConfig::Gpu);
+            let cpu = predict(
+                &machine,
+                &w,
+                SwAlgorithm::Tiled { tile: 512 },
+                DeviceConfig::Cpu { smt: true },
+            );
+            row.push(format!("{:.0}/{:.0}", gpu.seconds, cpu.seconds));
+        }
+        mt.row(&row);
+    }
+    println!("{}", mt.render());
+    println!("(the GPU advantage holds across the whole envelope; at n=100k, 1M perms the");
+    println!(" run is ~days on CPU vs ~hours on GPU — the paper's motivation for offload)");
+}

@@ -1,0 +1,82 @@
+//! BENCH ABL-SMT — "the significant benefit of SMT was a pleasant
+//! surprise" (paper §1/§3).
+//!
+//! Host: thread-count sweep for brute vs tiled (on a multi-core host the
+//! 2x-threads point is the SMT analog; on this container it degenerates
+//! gracefully and says so).  Model: the SMT on/off delta for every
+//! algorithm class at paper scale, with the bound explaining *why* SMT
+//! helps (stall-bound loops) or doesn't (throughput-bound flat kernel).
+//!
+//! Run: `cargo bench --bench ablation_smt`
+
+use permanova_apu::bench::Bencher;
+use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::permanova::{sw_permutations, Grouping, SwAlgorithm};
+use permanova_apu::report::Table;
+use permanova_apu::simulator::{predict, DeviceConfig, Mi300a, Workload};
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let n = 1536;
+    let perms = 16;
+    println!("host: thread sweep, n={n}, perms={perms}, {cores} hw threads available\n");
+
+    let mat = DistanceMatrix::random_euclidean(n, 16, 3);
+    let grouping = Grouping::balanced(n, 8).unwrap();
+    let mut b = Bencher { warmup: 1, min_reps: 3, max_reps: 5, ..Default::default() };
+
+    let mut threads_list: Vec<usize> = vec![1];
+    let mut th = 2;
+    while th <= 2 * cores {
+        threads_list.push(th);
+        th *= 2;
+    }
+
+    let mut t = Table::new(&["threads", "brute s", "tiled s", "brute speedup", "tiled speedup"]);
+    let mut base: Option<(f64, f64)> = None;
+    for &threads in &threads_list {
+        let mb = b.run(&format!("brute t{threads}"), || {
+            sw_permutations(&mat, &grouping, 3, perms, SwAlgorithm::Brute, threads)
+        });
+        let mt = b.run(&format!("tiled t{threads}"), || {
+            sw_permutations(&mat, &grouping, 3, perms, SwAlgorithm::Tiled { tile: 512 }, threads)
+        });
+        let (b0, t0) = *base.get_or_insert((mb.median, mt.median));
+        t.row(&[
+            threads.to_string(),
+            format!("{:.4}", mb.median),
+            format!("{:.4}", mt.median),
+            format!("{:.2}x", b0 / mb.median),
+            format!("{:.2}x", t0 / mt.median),
+        ]);
+    }
+    println!("{}", t.render());
+    if cores == 1 {
+        println!("(single-core container: oversubscription shows no gain, as expected;");
+        println!(" the SMT effect is carried by the model below)\n");
+    }
+
+    println!("model: MI300A SMT on/off at paper scale (25145^2, 3999 perms)\n");
+    let machine = Mi300a::default();
+    let w = Workload::paper();
+    let mut mt = Table::new(&["algorithm", "no SMT s", "SMT s", "SMT gain", "bound (SMT)"]);
+    for (name, algo) in [
+        ("brute", SwAlgorithm::Brute),
+        ("tiled512", SwAlgorithm::Tiled { tile: 512 }),
+        ("flat/SIMD", SwAlgorithm::Flat),
+    ] {
+        let off = predict(&machine, &w, algo, DeviceConfig::Cpu { smt: false });
+        let on = predict(&machine, &w, algo, DeviceConfig::Cpu { smt: true });
+        mt.row(&[
+            name.to_string(),
+            format!("{:.2}", off.seconds),
+            format!("{:.2}", on.seconds),
+            format!("{:.2}x", off.seconds / on.seconds),
+            format!("{:?}", on.bound),
+        ]);
+    }
+    println!("{}", mt.render());
+    println!("(SMT pays most for the stall-bound brute loop; the memory-bound tiled kernel");
+    println!(" still gains because SMT raises achievable bandwidth 150 -> 209 GB/s — the");
+    println!(" paper's 'pleasant surprise' has two separate mechanisms)");
+}

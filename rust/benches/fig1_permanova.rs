@@ -1,0 +1,92 @@
+//! BENCH FIG1 — the paper's Figure 1: PERMANOVA execution time by
+//! algorithm and resource.
+//!
+//! Part A: the calibrated MI300A model at the paper's exact workload
+//! (25145², 3999 perms) — the six bars of Figure 1.
+//! Part B: the same algorithm axis *measured* on this host at reduced
+//! scale, confirming the CPU-side orderings on real silicon.
+//!
+//! Run: `cargo bench --bench fig1_permanova`
+
+use permanova_apu::bench::Bencher;
+use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::permanova::{sw_permutations, Grouping, SwAlgorithm};
+use permanova_apu::report::Table;
+use permanova_apu::simulator::{fig1_rows, render_fig1, Mi300a, Workload};
+
+fn main() {
+    println!("================================================================");
+    println!("FIG1.A  simulated MI300A, paper workload (25145^2, 3999 perms)");
+    println!("================================================================\n");
+    let rows = fig1_rows(&Mi300a::default(), &Workload::paper());
+    println!("{}", render_fig1(&rows));
+
+    let mut t = Table::new(&["configuration", "seconds", "bound", "achieved GB/s"]);
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.2}", r.seconds),
+            format!("{:?}", r.bound),
+            format!("{:.0}", r.prediction.achieved_bw_gbs),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("================================================================");
+    println!("FIG1.B  host-measured, reduced scale (CPU-side orderings)");
+    println!("================================================================\n");
+    // The tiling win needs the paper's regime: the grouping row (4n bytes)
+    // must exceed L1d.  n = 16384 -> 64 KiB per row, comfortably past it.
+    let n = 16384;
+    let k = 8;
+    let perms = 4;
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let half = (cores / 2).max(1);
+    println!("n={n}, perms={perms}, host threads: {half} (noSMT analog) / {cores} (SMT analog)\n");
+
+    // Timing only depends on the access pattern, not values: a zero matrix
+    // keeps setup fast at this n (the numerics benches cover correctness).
+    let mat = DistanceMatrix::zeros(n);
+    let grouping = Grouping::balanced(n, k).unwrap();
+    let mut b = Bencher { warmup: 1, min_reps: 3, max_reps: 6, ..Default::default() };
+
+    let configs: Vec<(&str, SwAlgorithm, usize)> = vec![
+        ("CPU brute force (no SMT)", SwAlgorithm::Brute, half),
+        ("CPU brute force (SMT)", SwAlgorithm::Brute, cores),
+        ("CPU tiled (no SMT)", SwAlgorithm::Tiled { tile: 512 }, half),
+        ("CPU tiled (SMT)", SwAlgorithm::Tiled { tile: 512 }, cores),
+        ("CPU flat/SIMD (SMT)", SwAlgorithm::Flat, cores),
+    ];
+    let mut out = Table::new(&["configuration", "median s", "best s", "perms/s"]);
+    let mut medians = Vec::new();
+    for (label, algo, threads) in configs {
+        let m = b.run(label, || sw_permutations(&mat, &grouping, 3, perms, algo, threads));
+        out.row(&[
+            label.to_string(),
+            format!("{:.4}", m.median),
+            format!("{:.4}", m.best),
+            format!("{:.1}", perms as f64 / m.median),
+        ]);
+        medians.push((label, m.median));
+    }
+    println!("{}", out.render());
+
+    let get = |l: &str| medians.iter().find(|(n, _)| *n == l).unwrap().1;
+    println!("paper-claim checks (host):");
+    println!(
+        "  tiled beats brute (no SMT): {}",
+        get("CPU tiled (no SMT)") < get("CPU brute force (no SMT)")
+    );
+    println!(
+        "  tiled beats brute (SMT):    {}",
+        get("CPU tiled (SMT)") < get("CPU brute force (SMT)")
+    );
+    if cores > 1 {
+        println!(
+            "  SMT helps brute:            {}",
+            get("CPU brute force (SMT)") < get("CPU brute force (no SMT)")
+        );
+    } else {
+        println!("  SMT helps brute:            (skipped: single-core host)");
+    }
+}

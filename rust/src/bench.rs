@@ -1,0 +1,228 @@
+//! Micro-benchmark harness: warmup, adaptive iteration, robust statistics.
+//!
+//! The offline crate set has no criterion — and a benchmarking paper
+//! deserves a first-class harness anyway.  The design follows STREAM's
+//! methodology (the paper's own appendix): fixed warmup, best-and-median of
+//! N timed repetitions, and robust spread (median absolute deviation) so a
+//! noisy-neighbour run doesn't poison a comparison.
+//!
+//! ```no_run
+//! use permanova_apu::bench::Bencher;
+//! let mut b = Bencher::default();
+//! let m = b.run("sum", || (0..1_000_000u64).sum::<u64>());
+//! println!("{}", m.format_row());
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    /// Warmup repetitions (not timed).
+    pub warmup: usize,
+    /// Minimum timed repetitions.
+    pub min_reps: usize,
+    /// Maximum timed repetitions.
+    pub max_reps: usize,
+    /// Time budget per benchmark; reps stop early once exceeded (but never
+    /// before `min_reps`).
+    pub max_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 2,
+            min_reps: 5,
+            max_reps: 50,
+            max_time: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for heavyweight end-to-end benches.
+    pub fn heavy() -> Self {
+        Bencher { warmup: 1, min_reps: 3, max_reps: 10, max_time: Duration::from_secs(30) }
+    }
+
+    /// Time `f` under this configuration.  The closure's return value is
+    /// passed through `std::hint::black_box` so the computation cannot be
+    /// optimized away.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.min_reps);
+        let started = Instant::now();
+        while times.len() < self.max_reps {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+            if times.len() >= self.min_reps && started.elapsed() > self.max_time {
+                break;
+            }
+        }
+        Measurement::from_times(name, times)
+    }
+}
+
+/// Robust statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Individual repetition times, seconds, in run order.
+    pub times: Vec<f64>,
+    pub best: f64,
+    pub median: f64,
+    pub mean: f64,
+    /// Median absolute deviation (scaled by 1.4826 ≈ σ for normal data).
+    pub mad: f64,
+    pub worst: f64,
+}
+
+impl Measurement {
+    /// Compute stats from raw times.
+    pub fn from_times(name: &str, times: Vec<f64>) -> Measurement {
+        assert!(!times.is_empty(), "no timings for {name}");
+        let mut sorted = times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let best = sorted[0];
+        let worst = *sorted.last().unwrap();
+        let median = percentile_sorted(&sorted, 50.0);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = 1.4826 * percentile_sorted(&devs, 50.0);
+        Measurement { name: name.to_string(), times, best, median, mean, mad, worst }
+    }
+
+    /// Bandwidth implied by moving `bytes` in the *best* time (STREAM's
+    /// convention), in GB/s (10^9).
+    pub fn best_rate_gbs(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.best / 1e9
+    }
+
+    /// Throughput at the median time, items per second.
+    pub fn median_throughput(&self, items: usize) -> f64 {
+        items as f64 / self.median
+    }
+
+    /// One formatted report row.
+    pub fn format_row(&self) -> String {
+        format!(
+            "{:<36} best {:>10} median {:>10} ±{:>9} (n={})",
+            self.name,
+            format_secs(self.best),
+            format_secs(self.median),
+            format_secs(self.mad),
+            self.times.len()
+        )
+    }
+}
+
+/// Percentile (0–100) of an ascending-sorted slice, linear interpolation.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Human-readable seconds (ns/µs/ms/s autoscale).
+pub fn format_secs(t: f64) -> String {
+    if t < 1e-6 {
+        format!("{:.1}ns", t * 1e9)
+    } else if t < 1e-3 {
+        format!("{:.2}µs", t * 1e6)
+    } else if t < 1.0 {
+        format!("{:.2}ms", t * 1e3)
+    } else {
+        format!("{:.3}s", t)
+    }
+}
+
+/// Speedup of `b` relative to `a` (how many times faster is b), by medians.
+pub fn speedup(a: &Measurement, b: &Measurement) -> f64 {
+    a.median / b.median
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_vector() {
+        let m = Measurement::from_times("x", vec![3.0, 1.0, 2.0, 4.0, 100.0]);
+        assert_eq!(m.best, 1.0);
+        assert_eq!(m.worst, 100.0);
+        assert_eq!(m.median, 3.0);
+        assert!((m.mean - 22.0).abs() < 1e-12);
+        // MAD robust to the outlier: devs {2,1,0,1,97} → median 1 → 1.4826
+        assert!((m.mad - 1.4826).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 4.0);
+        assert!((percentile_sorted(&v, 50.0) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&[7.0], 50.0), 7.0);
+    }
+
+    #[test]
+    fn run_executes_and_counts() {
+        let mut calls = 0usize;
+        let mut b = Bencher { warmup: 1, min_reps: 3, max_reps: 3, max_time: Duration::from_secs(5) };
+        let m = b.run("count", || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 4); // 1 warmup + 3 timed
+        assert_eq!(m.times.len(), 3);
+        assert!(m.best > 0.0);
+        assert!(m.best <= m.median && m.median <= m.worst);
+    }
+
+    #[test]
+    fn max_time_stops_early() {
+        let mut b = Bencher {
+            warmup: 0,
+            min_reps: 2,
+            max_reps: 1000,
+            max_time: Duration::from_millis(50),
+        };
+        let m = b.run("sleepy", || std::thread::sleep(Duration::from_millis(20)));
+        assert!(m.times.len() < 1000, "stopped early: {}", m.times.len());
+        assert!(m.times.len() >= 2);
+    }
+
+    #[test]
+    fn rates_and_formatting() {
+        let m = Measurement::from_times("bw", vec![0.5]);
+        assert!((m.best_rate_gbs(1_000_000_000) - 2.0).abs() < 1e-9);
+        assert!((m.median_throughput(100) - 200.0).abs() < 1e-9);
+        assert!(format_secs(2.5e-9).ends_with("ns"));
+        assert!(format_secs(2.5e-6).ends_with("µs"));
+        assert!(format_secs(2.5e-3).ends_with("ms"));
+        assert!(format_secs(2.5).ends_with('s'));
+        assert!(m.format_row().contains("bw"));
+    }
+
+    #[test]
+    fn speedup_direction() {
+        let slow = Measurement::from_times("slow", vec![2.0]);
+        let fast = Measurement::from_times("fast", vec![0.5]);
+        assert!((speedup(&slow, &fast) - 4.0).abs() < 1e-12);
+    }
+}

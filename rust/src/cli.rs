@@ -1,0 +1,628 @@
+//! Command-line interface: flag parsing and subcommand implementations.
+//!
+//! Hand-rolled (the offline crate set has no clap): `<command> [--flag
+//! value]...` with every command returning its report as a `String` so the
+//! whole surface is unit-testable without capturing stdout.
+//!
+//! Commands:
+//!   run              PERMANOVA on synthetic/file data (native/xla/simulated)
+//!   pipeline         E2E: synthetic community -> UniFrac -> PERMANOVA
+//!   fig1             regenerate the paper's Figure 1 (simulated MI300A)
+//!   stream           STREAM bandwidth: measured host + simulated MI300A (A2)
+//!   simulate         performance-model predictions / node topology (A1)
+//!   artifacts-check  verify + smoke-run the AOT artifacts
+//!   version          print version
+
+use std::collections::BTreeMap;
+
+use crate::config::{Backend, DataSource, RunConfig, TomlDoc};
+use crate::coordinator::{run_config, RunReport};
+use crate::error::{Error, Result};
+use crate::permanova::SwAlgorithm;
+use crate::report::{bar_chart, Table};
+use crate::simulator::{
+    fig1_rows, paper_a2_reference, render_fig1, simulate_stream, Mi300a, NodeTopology,
+    StreamDevice, Workload,
+};
+use crate::stream::run_stream;
+
+/// Parsed command line: subcommand + `--key value` flags (bare `--key`
+/// becomes `"true"`).
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut it = raw.iter().peekable();
+        let command = it
+            .next()
+            .cloned()
+            .ok_or_else(|| Error::Config("no command (try `help`)".into()))?;
+        if command.starts_with("--") && command != "--help" {
+            return Err(Error::Config(format!(
+                "expected a command before flags, got {command:?}"
+            )));
+        }
+        let mut flags = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("expected --flag, got {tok:?}")))?;
+            if key.is_empty() {
+                return Err(Error::Config("empty flag name".into()));
+            }
+            let value = match it.peek() {
+                Some(next) if !next.starts_with("--") => it.next().unwrap().clone(),
+                _ => "true".to_string(),
+            };
+            flags.insert(key.to_string(), value);
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn str_flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
+    pub fn u64_flag(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Config(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Whether a flag was given at all.
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// Top-level dispatch; returns the text to print.
+pub fn dispatch(args: &Args) -> Result<String> {
+    match args.command.as_str() {
+        "run" => cmd_run(args),
+        "pipeline" => cmd_pipeline(args),
+        "fig1" => cmd_fig1(args),
+        "stream" => cmd_stream(args),
+        "simulate" => cmd_simulate(args),
+        "artifacts-check" => cmd_artifacts_check(args),
+        "version" => Ok(format!("permanova-apu {}", crate::VERSION)),
+        "help" | "--help" | "-h" => Ok(usage()),
+        other => Err(Error::Config(format!("unknown command {other:?} (try `help`)"))),
+    }
+}
+
+/// Usage text.
+pub fn usage() -> String {
+    let mut s = String::from("permanova-apu — PERMANOVA on APU-class hardware\n\nCommands:\n");
+    for (cmd, desc) in [
+        ("run", "PERMANOVA: --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend native|xla|simulated --threads T --seed S --pairwise --json out.json --config file.toml | --pdm file --labels file"),
+        ("pipeline", "end-to-end: community -> UniFrac -> PERMANOVA: --taxa --samples --groups --n-perms --metric unweighted|weighted --anosim"),
+        ("fig1", "regenerate Figure 1: --n-dims --n-perms (defaults: the paper's 25145/3999)"),
+        ("stream", "STREAM bandwidth: --len --reps --threads; --simulate for the MI300A A2 tables"),
+        ("simulate", "model predictions: --n-dims --n-perms; --topology for the Appendix A1 node"),
+        ("artifacts-check", "verify AOT artifacts: --dir artifacts"),
+        ("version", "print version"),
+    ] {
+        s.push_str(&format!("  {cmd:<16} {desc}\n"));
+    }
+    s
+}
+
+fn config_from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = args.str_flag("config") {
+        RunConfig::from_toml(&TomlDoc::load(path)?)?
+    } else {
+        RunConfig::default()
+    };
+    if let (Some(pdm), Some(labels)) = (args.str_flag("pdm"), args.str_flag("labels")) {
+        cfg.data = DataSource::Pdm { path: pdm.to_string(), labels_path: labels.to_string() };
+    } else if args.has_flag("n-dims") || args.has_flag("n-groups") {
+        let (dn, dk) = match cfg.data {
+            DataSource::Synthetic { n_dims, n_groups } => (n_dims, n_groups),
+            _ => (256, 8),
+        };
+        cfg.data = DataSource::Synthetic {
+            n_dims: args.usize_flag("n-dims", dn)?,
+            n_groups: args.usize_flag("n-groups", dk)?,
+        };
+    }
+    cfg.n_perms = args.usize_flag("n-perms", cfg.n_perms)?;
+    cfg.seed = args.u64_flag("seed", cfg.seed)?;
+    cfg.threads = args.usize_flag("threads", cfg.threads)?;
+    if let Some(a) = args.str_flag("algo") {
+        cfg.algo = SwAlgorithm::parse(a)
+            .ok_or_else(|| Error::Config(format!("unknown --algo {a:?}")))?;
+    }
+    if let Some(b) = args.str_flag("backend") {
+        cfg.backend =
+            Backend::parse(b).ok_or_else(|| Error::Config(format!("unknown --backend {b:?}")))?;
+    }
+    if let Some(d) = args.str_flag("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(k) = args.str_flag("xla-kernel") {
+        cfg.xla_kernel = k.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn format_report(cfg: &RunConfig, r: &RunReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "PERMANOVA  n={} k={} perms={} backend={} algo={}\n",
+        r.n,
+        r.k,
+        r.n_perms,
+        cfg.backend.name(),
+        cfg.algo.name()
+    ));
+    out.push_str(&format!(
+        "  pseudo-F = {:.6}\n  p-value  = {:.6}\n  s_T      = {:.6}\n  wall     = {:.3}s\n",
+        r.f_obs, r.p_value, r.s_t, r.elapsed_secs
+    ));
+    let mut t = Table::new(&["device", "batches", "perms", "busy s", "modelled s"]);
+    for d in &r.per_device {
+        t.row(&[
+            d.device.clone(),
+            d.batches.to_string(),
+            d.perms.to_string(),
+            format!("{:.3}", d.busy_secs),
+            if d.simulated_secs > 0.0 {
+                format!("{:.3}", d.simulated_secs)
+            } else {
+                "-".to_string()
+            },
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+fn cmd_run(args: &Args) -> Result<String> {
+    let cfg = config_from_args(args)?;
+    let r = run_config(&cfg)?;
+    let mut out = format_report(&cfg, &r);
+
+    // Post-hoc all-pairs tests (Bonferroni-adjusted).
+    if args.bool_flag("pairwise") {
+        use crate::coordinator::load_data;
+        use crate::permanova::{pairwise_permanova, PermanovaOpts};
+        let (mat, grouping) = load_data(&cfg)?;
+        let pw = pairwise_permanova(
+            &mat,
+            &grouping,
+            cfg.n_perms,
+            &PermanovaOpts { algo: cfg.algo, threads: cfg.threads, seed: cfg.seed, keep_f_perms: false },
+        )?;
+        let mut t = Table::new(&["pair", "n", "pseudo-F", "p", "p (Bonferroni)"]);
+        for e in &pw.entries {
+            t.row(&[
+                format!("{} vs {}", e.group_a, e.group_b),
+                e.n.to_string(),
+                format!("{:.4}", e.f_obs),
+                format!("{:.4}", e.p_value),
+                format!("{:.4}", e.p_adjusted),
+            ]);
+        }
+        out.push_str(&format!("\npairwise ({} comparisons):\n{}", pw.n_comparisons, t.render()));
+    }
+
+    // Companion tests (the full skbio-style workflow).
+    if args.bool_flag("anosim") || args.bool_flag("permdisp") {
+        use crate::coordinator::load_data;
+        let (mat, grouping) = load_data(&cfg)?;
+        if args.bool_flag("anosim") {
+            let a = crate::permanova::anosim(&mat, &grouping, cfg.n_perms, cfg.seed)?;
+            out.push_str(&format!("ANOSIM:   R = {:.4}, p = {:.4}\n", a.r_obs, a.p_value));
+        }
+        if args.bool_flag("permdisp") {
+            let d = crate::permanova::permdisp(&mat, &grouping, cfg.n_perms, cfg.seed)?;
+            out.push_str(&format!(
+                "PERMDISP: F = {:.4}, p = {:.4} (dispersions: {})\n",
+                d.f_obs,
+                d.p_value,
+                d.group_dispersions
+                    .iter()
+                    .map(|x| format!("{x:.3}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
+    }
+
+    // Machine-readable export.
+    if let Some(path) = args.str_flag("json") {
+        let doc = report_json(&cfg, &r);
+        std::fs::write(path, doc.to_string_pretty())
+            .map_err(|e| Error::io(path, e))?;
+        out.push_str(&format!("wrote {path}\n"));
+    }
+    Ok(out)
+}
+
+/// Machine-readable run report (consumed by scripts / CI trend tracking).
+fn report_json(cfg: &RunConfig, r: &RunReport) -> crate::jsonio::Json {
+    use crate::jsonio::Json;
+    Json::obj(vec![
+        ("version", Json::str(crate::VERSION)),
+        ("backend", Json::str(cfg.backend.name())),
+        ("algo", Json::str(cfg.algo.name())),
+        ("n", Json::num(r.n as f64)),
+        ("k", Json::num(r.k as f64)),
+        ("n_perms", Json::num(r.n_perms as f64)),
+        ("f_obs", Json::num(r.f_obs)),
+        ("p_value", Json::num(r.p_value)),
+        ("s_t", Json::num(r.s_t)),
+        ("elapsed_secs", Json::num(r.elapsed_secs)),
+        (
+            "devices",
+            Json::Arr(
+                r.per_device
+                    .iter()
+                    .map(|d| {
+                        Json::obj(vec![
+                            ("device", Json::str(d.device.clone())),
+                            ("batches", Json::num(d.batches as f64)),
+                            ("perms", Json::num(d.perms as f64)),
+                            ("busy_secs", Json::num(d.busy_secs)),
+                            ("simulated_secs", Json::num(d.simulated_secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn cmd_pipeline(args: &Args) -> Result<String> {
+    use crate::coordinator::run_on_backend;
+    use crate::unifrac::{generate, unweighted_unifrac, weighted_unifrac, SynthParams};
+
+    let mut cfg = config_from_args(args)?;
+    let n_taxa = args.usize_flag("taxa", 256)?;
+    let n_samples = args.usize_flag("samples", 64)?;
+    let n_groups = args.usize_flag("groups", 4)?;
+    cfg.data = DataSource::SyntheticUnifrac { n_taxa, n_samples, n_groups };
+    cfg.validate()?;
+
+    let metric = args.str_flag("metric").unwrap_or("unweighted");
+    let ds = generate(&SynthParams {
+        n_taxa,
+        n_samples,
+        n_envs: n_groups,
+        seed: cfg.seed ^ 0xDA7A,
+        ..Default::default()
+    })?;
+    let mat = match metric {
+        "unweighted" => unweighted_unifrac(&ds.tree, &ds.table, cfg.threads)?,
+        "weighted" => weighted_unifrac(&ds.tree, &ds.table, cfg.threads)?,
+        other => return Err(Error::Config(format!("unknown --metric {other:?}"))),
+    };
+    let r = run_on_backend(&cfg, &mat, &ds.grouping)?;
+
+    let mut out = format!("UniFrac ({metric}) -> PERMANOVA pipeline\n");
+    out.push_str(&format_report(&cfg, &r));
+    if args.bool_flag("anosim") {
+        let a = crate::permanova::anosim(&mat, &ds.grouping, cfg.n_perms, cfg.seed)?;
+        out.push_str(&format!(
+            "ANOSIM: R = {:.4}, p = {:.4} (cross-check statistic)\n",
+            a.r_obs, a.p_value
+        ));
+    }
+    out.push_str(&format!(
+        "verdict: group effect is {} at alpha=0.05\n",
+        if r.p_value <= 0.05 { "SIGNIFICANT" } else { "not significant" }
+    ));
+    Ok(out)
+}
+
+fn cmd_fig1(args: &Args) -> Result<String> {
+    let w = Workload {
+        n_dims: args.usize_flag("n-dims", 25145)?,
+        n_perms: args.usize_flag("n-perms", 3999)?,
+        n_groups: args.usize_flag("n-groups", 8)?,
+    };
+    let rows = fig1_rows(&Mi300a::default(), &w);
+    Ok(render_fig1(&rows))
+}
+
+fn cmd_stream(args: &Args) -> Result<String> {
+    if args.bool_flag("simulate") {
+        let m = Mi300a::default();
+        let len = args.usize_flag("len", 1_000_000_000)?;
+        let mut out = String::new();
+        for (dev, title) in [
+            (StreamDevice::Cpu, "CPU cores (stream.large.exe, 48 threads)"),
+            (StreamDevice::Gpu, "GPU cores (stream.amd_apu.exe, HSA_XNACK=1)"),
+        ] {
+            out.push_str(&format!("== simulated MI300A {title} ==\n"));
+            let mut t = Table::new(&["Function", "Best Rate MB/s", "paper MB/s", "delta"]);
+            let sim = simulate_stream(&m, dev, len);
+            for (res, (_, paper)) in sim.iter().zip(paper_a2_reference(dev)) {
+                t.row(&[
+                    format!("{}:", res.kernel.name()),
+                    format!("{:.1}", res.best_rate_mbs),
+                    format!("{paper:.1}"),
+                    format!("{:+.1}%", (res.best_rate_mbs / paper - 1.0) * 100.0),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        Ok(out)
+    } else {
+        let len = args.usize_flag("len", 20_000_000)?;
+        let reps = args.usize_flag("reps", 10)?.max(2);
+        let threads = args.usize_flag("threads", 0)?;
+        let r = run_stream(len, reps, threads);
+        let mut out = format!(
+            "STREAM (host): array {} doubles, {} reps, {} threads\n",
+            r.array_len, r.reps, r.threads
+        );
+        out.push_str(&r.format_table());
+        out.push_str(if r.validated { "Solution Validates\n" } else { "VALIDATION FAILED\n" });
+        Ok(out)
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<String> {
+    if args.bool_flag("topology") {
+        return Ok(NodeTopology::cosmos_node().render());
+    }
+    let w = Workload {
+        n_dims: args.usize_flag("n-dims", 25145)?,
+        n_perms: args.usize_flag("n-perms", 3999)?,
+        n_groups: args.usize_flag("n-groups", 8)?,
+    };
+    let rows = fig1_rows(&Mi300a::default(), &w);
+    let mut t = Table::new(&["configuration", "seconds", "bound", "HBM traffic", "achieved GB/s"]);
+    for r in &rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.2}", r.seconds),
+            format!("{:?}", r.bound),
+            crate::report::format_bytes(r.prediction.hbm_bytes),
+            format!("{:.0}", r.prediction.achieved_bw_gbs),
+        ]);
+    }
+    let items: Vec<(String, f64)> = rows.iter().map(|r| (r.label.clone(), r.seconds)).collect();
+    Ok(format!(
+        "{}\n{}",
+        t.render(),
+        bar_chart("predicted execution time (s, lower is better)", &items, "s", 48)
+    ))
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<String> {
+    use crate::runtime::XlaRuntime;
+    let dir = args.str_flag("dir").unwrap_or(crate::DEFAULT_ARTIFACTS_DIR);
+    let rt = XlaRuntime::new(dir)?;
+    rt.manifest().verify_files()?;
+    let mut out = format!(
+        "artifacts ok: {} modules on {}\n",
+        rt.manifest().artifacts().len(),
+        rt.platform()
+    );
+    // Smoke-run the smallest artifact of each kernel.
+    let kernels: std::collections::BTreeSet<String> =
+        rt.manifest().artifacts().iter().map(|a| a.kernel.clone()).collect();
+    for kernel in kernels {
+        let metas = rt.manifest().by_kernel(&kernel);
+        let meta = metas.iter().min_by_key(|a| a.n_dims).unwrap();
+        let n = meta.n_dims;
+        let mat = crate::dmat::DistanceMatrix::random_euclidean(n, 4, 7);
+        let grouping = crate::permanova::Grouping::balanced(n, meta.n_groups)?;
+        let sess = rt.session(&kernel, mat.data(), n, &grouping)?;
+        let plan = crate::rng::PermutationPlan::new(grouping.labels().to_vec(), 3, 2);
+        let rows = plan.batch(0, 2);
+        let res = sess.run_batch(&rows, 2)?;
+        let want = crate::permanova::sw_brute_f64(
+            mat.data(),
+            n,
+            plan.base(),
+            grouping.inv_sizes(),
+        );
+        let got = res.s_w[0] as f64;
+        let ok = (got - want).abs() / want.max(1e-9) < 1e-3;
+        out.push_str(&format!(
+            "  {kernel:<12} {} n={n} b={} ... {}\n",
+            meta.name,
+            meta.batch,
+            if ok { "numerics OK" } else { "NUMERICS MISMATCH" }
+        ));
+        if !ok {
+            return Err(Error::Artifact(format!("{kernel}: s_w {got} vs native {want}")));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parse_command_and_flags() {
+        let a = args(&["run", "--n-dims", "64", "--backend", "native", "--verbose"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.usize_flag("n-dims", 0).unwrap(), 64);
+        assert_eq!(a.str_flag("backend"), Some("native"));
+        assert!(a.bool_flag("verbose"));
+        assert!(!a.bool_flag("quiet"));
+        assert_eq!(a.usize_flag("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Args::parse(&[]).is_err());
+        assert!(Args::parse(&["--flag-first".to_string()]).is_err());
+        let a = args(&["run", "--n-dims", "notanumber"]);
+        assert!(a.usize_flag("n-dims", 0).is_err());
+    }
+
+    #[test]
+    fn version_and_help() {
+        assert!(dispatch(&args(&["version"])).unwrap().contains(crate::VERSION));
+        let help = dispatch(&args(&["help"])).unwrap();
+        for cmd in ["run", "fig1", "stream", "simulate", "artifacts-check"] {
+            assert!(help.contains(cmd));
+        }
+        assert!(dispatch(&args(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn run_native_small() {
+        let out = dispatch(&args(&[
+            "run", "--n-dims", "32", "--n-groups", "4", "--n-perms", "29", "--algo", "flat",
+            "--threads", "2",
+        ]))
+        .unwrap();
+        assert!(out.contains("pseudo-F"));
+        assert!(out.contains("p-value"));
+        assert!(out.contains("native-cpu/flat"));
+    }
+
+    #[test]
+    fn run_rejects_bad_flags() {
+        assert!(dispatch(&args(&["run", "--algo", "quantum"])).is_err());
+        assert!(dispatch(&args(&["run", "--backend", "cuda"])).is_err());
+        assert!(dispatch(&args(&["run", "--n-perms", "0"])).is_err());
+    }
+
+    #[test]
+    fn fig1_small_workload() {
+        let out = dispatch(&args(&["fig1", "--n-dims", "2048", "--n-perms", "100"])).unwrap();
+        assert!(out.contains("GPU brute force"));
+        assert!(out.contains("x faster"));
+    }
+
+    #[test]
+    fn stream_simulated_matches_paper_labels() {
+        let out = dispatch(&args(&["stream", "--simulate"])).unwrap();
+        assert!(out.contains("Triad:"));
+        assert!(out.contains("paper MB/s"));
+        assert!(out.contains("stream.amd_apu.exe"));
+    }
+
+    #[test]
+    fn stream_host_tiny() {
+        let out = dispatch(&args(&[
+            "stream", "--len", "100000", "--reps", "2", "--threads", "2",
+        ]))
+        .unwrap();
+        assert!(out.contains("Solution Validates"), "{out}");
+    }
+
+    #[test]
+    fn simulate_topology_and_predictions() {
+        let topo = dispatch(&args(&["simulate", "--topology"])).unwrap();
+        assert!(topo.contains("MI300A"));
+        let pred = dispatch(&args(&["simulate", "--n-dims", "4096", "--n-perms", "500"])).unwrap();
+        assert!(pred.contains("configuration"));
+        assert!(pred.contains("Memory") || pred.contains("Compute"));
+    }
+
+    #[test]
+    fn pipeline_small() {
+        let out = dispatch(&args(&[
+            "pipeline", "--taxa", "64", "--samples", "20", "--groups", "2", "--n-perms", "39",
+        ]))
+        .unwrap();
+        assert!(out.contains("UniFrac (unweighted) -> PERMANOVA"));
+        assert!(out.contains("verdict"));
+    }
+
+    #[test]
+    fn pipeline_weighted_with_anosim() {
+        let out = dispatch(&args(&[
+            "pipeline", "--taxa", "64", "--samples", "20", "--groups", "2", "--n-perms", "39",
+            "--metric", "weighted", "--anosim",
+        ]))
+        .unwrap();
+        assert!(out.contains("UniFrac (weighted) -> PERMANOVA"));
+        assert!(out.contains("ANOSIM: R ="));
+        assert!(dispatch(&args(&["pipeline", "--metric", "cosine"])).is_err());
+    }
+
+    #[test]
+    fn artifacts_check_if_present() {
+        let dir = crate::runtime::artifacts_dir_for_tests();
+        if dir.join("manifest.json").exists() {
+            let out = dispatch(&args(&[
+                "artifacts-check",
+                "--dir",
+                dir.to_str().unwrap(),
+            ]))
+            .unwrap();
+            assert!(out.contains("numerics OK"), "{out}");
+        }
+    }
+
+    #[test]
+    fn run_companion_tests() {
+        let out = dispatch(&args(&[
+            "run", "--n-dims", "24", "--n-groups", "2", "--n-perms", "19", "--anosim",
+            "--permdisp",
+        ]))
+        .unwrap();
+        assert!(out.contains("ANOSIM:   R ="));
+        assert!(out.contains("PERMDISP: F ="));
+    }
+
+    #[test]
+    fn run_pairwise_and_json() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jpath = dir.join("report.json");
+        let out = dispatch(&args(&[
+            "run", "--n-dims", "30", "--n-groups", "3", "--n-perms", "19", "--pairwise",
+            "--json", jpath.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(out.contains("pairwise (3 comparisons)"));
+        assert!(out.contains("0 vs 1"));
+        let doc = crate::jsonio::Json::parse(&std::fs::read_to_string(&jpath).unwrap()).unwrap();
+        assert_eq!(doc.req_usize("n_perms").unwrap(), 19);
+        assert!(doc.get("f_obs").unwrap().as_f64().is_some());
+        assert_eq!(doc.req_arr("devices").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn config_file_applies() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.toml");
+        std::fs::write(
+            &p,
+            "[run]\nn_perms = 19\nalgo = \"brute\"\n[data]\nsource = \"synthetic\"\nn_dims = 24\nn_groups = 3\n",
+        )
+        .unwrap();
+        let out = dispatch(&args(&["run", "--config", p.to_str().unwrap()])).unwrap();
+        assert!(out.contains("perms=19"));
+        assert!(out.contains("algo=brute"));
+    }
+}

@@ -1,0 +1,458 @@
+//! Run configuration: a TOML-subset parser and the typed run config.
+//!
+//! The offline crate set has no serde/toml, so we parse the subset real
+//! configs use: `[section]` headers, `key = value` with string / integer /
+//! float / boolean / flat-array values, `#` comments.  The typed layer
+//! ([`RunConfig`]) provides defaults and validation; the CLI applies
+//! overrides on top.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::permanova::SwAlgorithm;
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `(section, key) -> value`; top-level keys use the
+/// empty section name.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("line {}", ln + 1);
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::parse("toml", ctx(), "unterminated section header"))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(Error::parse("toml", ctx(), "empty section name"));
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| Error::parse("toml", ctx(), "expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(Error::parse("toml", ctx(), "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|m| Error::parse("toml", ctx(), m))?;
+            doc.entries.insert((section.clone(), key.to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<TomlDoc> {
+        let p = path.as_ref();
+        let text =
+            std::fs::read_to_string(p).map_err(|e| Error::io(p.display().to_string(), e))?;
+        Self::parse(&text)
+    }
+
+    /// Look up a value.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// Typed getters with defaults.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(TomlValue::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(TomlValue::as_int).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(TomlValue::as_float).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> std::result::Result<TomlValue, String> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = t.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if t == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if t == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("unrecognized value {t:?}"))
+}
+
+/// Split a flat array body on commas (no nested arrays in our subset, but
+/// strings may contain commas).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Where the distance matrix comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSource {
+    /// Synthetic Euclidean matrix of the given size.
+    Synthetic { n_dims: usize, n_groups: usize },
+    /// UniFrac over a generated community (the E2E pipeline).
+    SyntheticUnifrac { n_taxa: usize, n_samples: usize, n_groups: usize },
+    /// Binary `.pdm` file (labels via `labels_path` TSV, one label/line).
+    Pdm { path: String, labels_path: String },
+    /// scikit-bio-style TSV.
+    Tsv { path: String, labels_path: String },
+}
+
+/// Which execution backend computes s_W.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Native Rust kernels (this host).
+    Native,
+    /// AOT-compiled XLA artifacts via PJRT.
+    Xla,
+    /// MI300A performance model (no computation, predicted time).
+    Simulated,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "native" => Some(Backend::Native),
+            "xla" => Some(Backend::Xla),
+            "simulated" => Some(Backend::Simulated),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Xla => "xla",
+            Backend::Simulated => "simulated",
+        }
+    }
+}
+
+/// Fully-resolved run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub data: DataSource,
+    pub n_perms: usize,
+    pub seed: u64,
+    pub algo: SwAlgorithm,
+    pub threads: usize,
+    pub backend: Backend,
+    pub artifacts_dir: String,
+    /// XLA kernel variant to prefer (bruteforce | tiled | matmul | ref).
+    pub xla_kernel: String,
+    /// Simulated-backend SMT toggle.
+    pub smt: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            data: DataSource::Synthetic { n_dims: 256, n_groups: 8 },
+            n_perms: 999,
+            seed: 0x5EED_CAFE,
+            algo: SwAlgorithm::Tiled { tile: crate::permanova::DEFAULT_TILE },
+            threads: 0,
+            backend: Backend::Native,
+            artifacts_dir: crate::DEFAULT_ARTIFACTS_DIR.to_string(),
+            xla_kernel: "matmul".to_string(),
+            smt: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed TOML document (missing keys get defaults).
+    pub fn from_toml(doc: &TomlDoc) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let source = doc.str_or("data", "source", "synthetic");
+        let data = match source.as_str() {
+            "synthetic" => DataSource::Synthetic {
+                n_dims: doc.int_or("data", "n_dims", 256) as usize,
+                n_groups: doc.int_or("data", "n_groups", 8) as usize,
+            },
+            "unifrac" => DataSource::SyntheticUnifrac {
+                n_taxa: doc.int_or("data", "n_taxa", 256) as usize,
+                n_samples: doc.int_or("data", "n_samples", 64) as usize,
+                n_groups: doc.int_or("data", "n_groups", 4) as usize,
+            },
+            "pdm" => DataSource::Pdm {
+                path: doc.str_or("data", "path", ""),
+                labels_path: doc.str_or("data", "labels", ""),
+            },
+            "tsv" => DataSource::Tsv {
+                path: doc.str_or("data", "path", ""),
+                labels_path: doc.str_or("data", "labels", ""),
+            },
+            other => {
+                return Err(Error::Config(format!("unknown data.source {other:?}")))
+            }
+        };
+        let algo_s = doc.str_or("run", "algo", &d.algo.name());
+        let algo = SwAlgorithm::parse(&algo_s)
+            .ok_or_else(|| Error::Config(format!("unknown run.algo {algo_s:?}")))?;
+        let backend_s = doc.str_or("run", "backend", d.backend.name());
+        let backend = Backend::parse(&backend_s)
+            .ok_or_else(|| Error::Config(format!("unknown run.backend {backend_s:?}")))?;
+        let cfg = RunConfig {
+            data,
+            n_perms: doc.int_or("run", "n_perms", d.n_perms as i64) as usize,
+            seed: doc.int_or("run", "seed", d.seed as i64) as u64,
+            algo,
+            threads: doc.int_or("run", "threads", 0) as usize,
+            backend,
+            artifacts_dir: doc.str_or("xla", "artifacts_dir", &d.artifacts_dir),
+            xla_kernel: doc.str_or("xla", "kernel", &d.xla_kernel),
+            smt: doc.bool_or("simulate", "smt", true),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_perms == 0 {
+            return Err(Error::Config("n_perms must be >= 1".into()));
+        }
+        match &self.data {
+            DataSource::Synthetic { n_dims, n_groups } => {
+                if *n_groups < 2 || n_dims <= n_groups {
+                    return Err(Error::Config(format!(
+                        "need 2 <= n_groups < n_dims (got k={n_groups}, n={n_dims})"
+                    )));
+                }
+            }
+            DataSource::SyntheticUnifrac { n_samples, n_groups, .. } => {
+                if *n_groups < 2 || n_samples <= n_groups {
+                    return Err(Error::Config("need 2 <= n_groups < n_samples".into()));
+                }
+            }
+            DataSource::Pdm { path, labels_path } | DataSource::Tsv { path, labels_path } => {
+                if path.is_empty() || labels_path.is_empty() {
+                    return Err(Error::Config("file sources need data.path and data.labels".into()));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_document() {
+        let doc = TomlDoc::parse(
+            r#"
+            # top comment
+            title = "example"   # trailing comment
+            [run]
+            n_perms = 3999
+            seed = 42
+            algo = "tiled512"
+            smt = true
+            ratio = 0.5
+            tags = ["a", "b,c", 3]
+            [data]
+            source = "synthetic"
+            n_dims = 25145
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "title", ""), "example");
+        assert_eq!(doc.int_or("run", "n_perms", 0), 3999);
+        assert!(doc.bool_or("run", "smt", false));
+        assert_eq!(doc.float_or("run", "ratio", 0.0), 0.5);
+        let arr = doc.get("run", "tags").unwrap();
+        match arr {
+            TomlValue::Array(items) => {
+                assert_eq!(items[1], TomlValue::Str("b,c".into()));
+                assert_eq!(items[2], TomlValue::Int(3));
+            }
+            _ => panic!("not an array"),
+        }
+        assert_eq!(doc.int_or("data", "n_dims", 0), 25145);
+    }
+
+    #[test]
+    fn parse_errors_carry_line() {
+        for (bad, frag) in [
+            ("[unterminated", "line 1"),
+            ("keyonly", "line 1"),
+            ("x = ", "line 1"),
+            ("a = \"open", "line 1"),
+            ("[]", "line 1"),
+        ] {
+            let e = TomlDoc::parse(bad).unwrap_err().to_string();
+            assert!(e.contains(frag), "{bad:?} -> {e}");
+        }
+    }
+
+    #[test]
+    fn run_config_from_toml_and_defaults() {
+        let doc = TomlDoc::parse(
+            r#"
+            [run]
+            n_perms = 199
+            algo = "brute"
+            backend = "native"
+            [data]
+            source = "unifrac"
+            n_taxa = 128
+            n_samples = 32
+            n_groups = 4
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.n_perms, 199);
+        assert_eq!(cfg.algo, SwAlgorithm::Brute);
+        assert_eq!(
+            cfg.data,
+            DataSource::SyntheticUnifrac { n_taxa: 128, n_samples: 32, n_groups: 4 }
+        );
+        // Defaults fill the rest.
+        assert_eq!(cfg.backend, Backend::Native);
+        assert_eq!(cfg.artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn run_config_rejects_bad_values() {
+        for bad in [
+            "[run]\nalgo = \"nope\"",
+            "[run]\nbackend = \"cuda\"",
+            "[data]\nsource = \"hdf5\"",
+            "[run]\nn_perms = 0",
+            "[data]\nsource = \"pdm\"",
+            "[data]\nsource = \"synthetic\"\nn_dims = 4\nn_groups = 8",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(RunConfig::from_toml(&doc).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn backend_roundtrip() {
+        for b in [Backend::Native, Backend::Xla, Backend::Simulated] {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("tpu"), None);
+    }
+
+    #[test]
+    fn default_config_validates() {
+        RunConfig::default().validate().unwrap();
+    }
+}

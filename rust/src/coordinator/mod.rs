@@ -1,0 +1,229 @@
+//! The L3 coordinator: devices, scheduling, and the config-driven entry.
+//!
+//! This is the "leader" of the three-layer stack: it owns data loading,
+//! the permutation plan, the device set, batch dispatch and aggregation.
+//! The CLI and examples drive everything through [`run_config`].
+
+mod device;
+mod scheduler;
+
+pub use device::{
+    BatchJob, BatchResult, Device, JobContext, NativeCpuDevice, SimulatedDevice, XlaDevice,
+};
+pub use scheduler::{run_coordinated, DeviceStats, RunReport};
+
+use crate::config::{Backend, DataSource, RunConfig};
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+use crate::permanova::Grouping;
+use crate::runtime::XlaRuntime;
+use crate::simulator::{DeviceConfig, Mi300a};
+use crate::unifrac::{generate, unweighted_unifrac, SynthParams};
+
+/// Materialize the distance matrix + grouping a config describes.
+pub fn load_data(cfg: &RunConfig) -> Result<(DistanceMatrix, Grouping)> {
+    match &cfg.data {
+        DataSource::Synthetic { n_dims, n_groups } => {
+            let mat = DistanceMatrix::random_euclidean(*n_dims, 16, cfg.seed ^ 0xDA7A);
+            let grouping = Grouping::balanced(*n_dims, *n_groups)?;
+            Ok((mat, grouping))
+        }
+        DataSource::SyntheticUnifrac { n_taxa, n_samples, n_groups } => {
+            let ds = generate(&SynthParams {
+                n_taxa: *n_taxa,
+                n_samples: *n_samples,
+                n_envs: *n_groups,
+                seed: cfg.seed ^ 0xDA7A,
+                ..Default::default()
+            })?;
+            let mat = unweighted_unifrac(&ds.tree, &ds.table, cfg.threads)?;
+            Ok((mat, ds.grouping))
+        }
+        DataSource::Pdm { path, labels_path } => {
+            let mat = DistanceMatrix::read_binary(path)?;
+            let grouping = read_labels(labels_path, mat.n())?;
+            Ok((mat, grouping))
+        }
+        DataSource::Tsv { path, labels_path } => {
+            let (mat, _ids) = DistanceMatrix::read_tsv(path)?;
+            let grouping = read_labels(labels_path, mat.n())?;
+            Ok((mat, grouping))
+        }
+    }
+}
+
+/// Read one label per line (category strings; mapped to dense groups).
+fn read_labels(path: &str, n: usize) -> Result<Grouping> {
+    let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+    let cats: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    if cats.len() != n {
+        return Err(Error::InvalidInput(format!(
+            "labels file {path:?} has {} entries, matrix has {n}",
+            cats.len()
+        )));
+    }
+    let (grouping, _map) = Grouping::from_categories(&cats)?;
+    Ok(grouping)
+}
+
+/// Run PERMANOVA as the config describes, building the device set from the
+/// backend selection.
+pub fn run_config(cfg: &RunConfig) -> Result<RunReport> {
+    cfg.validate()?;
+    let (mat, grouping) = load_data(cfg)?;
+    mat.validate(1e-4)?;
+    run_on_backend(cfg, &mat, &grouping)
+}
+
+/// Run on pre-loaded data (examples and tests reuse this).
+pub fn run_on_backend(
+    cfg: &RunConfig,
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+) -> Result<RunReport> {
+    match cfg.backend {
+        Backend::Native => {
+            let dev = NativeCpuDevice::new(cfg.algo, cfg.threads);
+            run_coordinated(mat, grouping, cfg.n_perms, cfg.seed, vec![Box::new(dev)], vec![])
+        }
+        Backend::Simulated => {
+            let dev = SimulatedDevice::new(
+                Mi300a::default(),
+                cfg.algo,
+                DeviceConfig::Cpu { smt: cfg.smt },
+            );
+            run_coordinated(mat, grouping, cfg.n_perms, cfg.seed, vec![Box::new(dev)], vec![])
+        }
+        Backend::Xla => {
+            let rt = XlaRuntime::new(&cfg.artifacts_dir)?;
+            let session = rt.session(&cfg.xla_kernel, mat.data(), mat.n(), grouping)?;
+            let dev = XlaDevice::new(session);
+            let local: Vec<Box<dyn Device + '_>> = vec![Box::new(dev)];
+            run_coordinated(mat, grouping, cfg.n_perms, cfg.seed, vec![], local)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permanova::SwAlgorithm;
+
+    #[test]
+    fn run_config_native_synthetic() {
+        let cfg = RunConfig {
+            data: DataSource::Synthetic { n_dims: 48, n_groups: 4 },
+            n_perms: 99,
+            algo: SwAlgorithm::Flat,
+            threads: 2,
+            ..Default::default()
+        };
+        let r = run_config(&cfg).unwrap();
+        assert_eq!(r.n_perms, 99);
+        assert_eq!(r.n, 48);
+        assert_eq!(r.k, 4);
+        assert!(r.p_value > 0.0 && r.p_value <= 1.0);
+    }
+
+    #[test]
+    fn run_config_unifrac_pipeline() {
+        let cfg = RunConfig {
+            data: DataSource::SyntheticUnifrac { n_taxa: 64, n_samples: 24, n_groups: 3 },
+            n_perms: 49,
+            ..Default::default()
+        };
+        let r = run_config(&cfg).unwrap();
+        assert_eq!(r.n, 24);
+        // Planted environment structure must be detected as significant.
+        assert!(r.p_value <= 0.05, "p = {}", r.p_value);
+    }
+
+    #[test]
+    fn simulated_backend_reports_model_time() {
+        let cfg = RunConfig {
+            data: DataSource::Synthetic { n_dims: 32, n_groups: 4 },
+            n_perms: 30,
+            backend: Backend::Simulated,
+            ..Default::default()
+        };
+        let r = run_config(&cfg).unwrap();
+        let sim: f64 = r.per_device.iter().map(|d| d.simulated_secs).sum();
+        assert!(sim > 0.0, "simulated time must be reported");
+    }
+
+    #[test]
+    fn native_and_simulated_agree_on_statistics() {
+        let base = RunConfig {
+            data: DataSource::Synthetic { n_dims: 40, n_groups: 4 },
+            n_perms: 60,
+            ..Default::default()
+        };
+        let nat = run_config(&base).unwrap();
+        let sim = run_config(&RunConfig { backend: Backend::Simulated, ..base.clone() }).unwrap();
+        assert!((nat.f_obs - sim.f_obs).abs() / nat.f_obs.abs().max(1e-12) < 1e-4);
+        assert_eq!(nat.p_value, sim.p_value);
+    }
+
+    #[test]
+    fn file_source_roundtrip() {
+        let dir = std::env::temp_dir().join("permanova_apu_coord_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mpath = dir.join("m.pdm");
+        let lpath = dir.join("labels.txt");
+        let mat = DistanceMatrix::random_euclidean(20, 4, 9);
+        mat.write_binary(&mpath).unwrap();
+        let labels: Vec<String> = (0..20).map(|i| format!("env{}", i % 2)).collect();
+        std::fs::write(&lpath, labels.join("\n")).unwrap();
+
+        let cfg = RunConfig {
+            data: DataSource::Pdm {
+                path: mpath.display().to_string(),
+                labels_path: lpath.display().to_string(),
+            },
+            n_perms: 19,
+            ..Default::default()
+        };
+        let r = run_config(&cfg).unwrap();
+        assert_eq!(r.n, 20);
+        assert_eq!(r.k, 2);
+    }
+
+    #[test]
+    fn label_count_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("permanova_apu_coord_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mpath = dir.join("m2.pdm");
+        let lpath = dir.join("labels2.txt");
+        DistanceMatrix::random_euclidean(10, 4, 1).write_binary(&mpath).unwrap();
+        std::fs::write(&lpath, "a\nb\n").unwrap();
+        let cfg = RunConfig {
+            data: DataSource::Pdm {
+                path: mpath.display().to_string(),
+                labels_path: lpath.display().to_string(),
+            },
+            ..Default::default()
+        };
+        assert!(run_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn xla_backend_end_to_end_if_artifacts_present() {
+        let dir = crate::runtime::artifacts_dir_for_tests();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping xla coordinator test: no artifacts");
+            return;
+        }
+        let base = RunConfig {
+            data: DataSource::Synthetic { n_dims: 64, n_groups: 4 },
+            n_perms: 40,
+            artifacts_dir: dir.display().to_string(),
+            xla_kernel: "matmul".to_string(),
+            ..Default::default()
+        };
+        let xla = run_config(&RunConfig { backend: Backend::Xla, ..base.clone() }).unwrap();
+        let nat = run_config(&base).unwrap();
+        assert!((xla.f_obs - nat.f_obs).abs() / nat.f_obs.abs().max(1e-12) < 1e-3);
+        assert_eq!(xla.p_value, nat.p_value);
+        assert!(xla.per_device[0].device.starts_with("xla/"));
+    }
+}

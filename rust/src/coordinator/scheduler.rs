@@ -1,0 +1,301 @@
+//! The permutation-batch scheduler: split, dispatch, aggregate.
+//!
+//! PERMANOVA's permutation axis is embarrassingly parallel, but devices are
+//! heterogeneous (a native thread-pool, a single-threaded PJRT session, a
+//! simulator) and batch-granular.  The scheduler:
+//!
+//! 1. slices `[0, n_perms+1)` into jobs sized to each device's preferred
+//!    batch (work-stealing from a shared cursor — fast devices take more);
+//! 2. runs every `Send` device on its own scope thread; non-`Send` devices
+//!    (XLA sessions) run on the submitting thread, pulling from the same
+//!    cursor — one code path, no special-casing in the aggregation;
+//! 3. aggregates per-batch F statistics into the permutation distribution,
+//!    the p-value, and per-device utilization stats.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::device::{BatchJob, BatchResult, Device, JobContext};
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+use crate::permanova::{pvalue, st_of, Grouping};
+use crate::rng::PermutationPlan;
+
+/// Per-device utilization after a run.
+#[derive(Clone, Debug)]
+pub struct DeviceStats {
+    pub device: String,
+    pub batches: usize,
+    pub perms: usize,
+    pub busy_secs: f64,
+    /// Sum of modelled MI300A seconds (simulated devices only).
+    pub simulated_secs: f64,
+}
+
+/// Aggregated output of a coordinated run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub f_obs: f64,
+    pub p_value: f64,
+    pub n_perms: usize,
+    pub n: usize,
+    pub k: usize,
+    pub s_t: f64,
+    pub elapsed_secs: f64,
+    pub per_device: Vec<DeviceStats>,
+    /// The permuted F distribution (observed excluded), in plan order.
+    pub f_perms: Vec<f64>,
+}
+
+/// Run `n_perms` permutations (plus the observed labelling at index 0)
+/// across a heterogeneous device set.
+///
+/// `send_devices` run concurrently on their own threads; `local_devices`
+/// (e.g. XLA sessions, which are not `Send`) run on this thread.  At least
+/// one device is required overall.
+pub fn run_coordinated(
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    n_perms: usize,
+    seed: u64,
+    send_devices: Vec<Box<dyn Device + Send>>,
+    local_devices: Vec<Box<dyn Device + '_>>,
+) -> Result<RunReport> {
+    if grouping.n() != mat.n() {
+        return Err(Error::InvalidInput(format!(
+            "grouping n = {} vs matrix n = {}",
+            grouping.n(),
+            mat.n()
+        )));
+    }
+    if n_perms == 0 {
+        return Err(Error::InvalidInput("n_perms must be >= 1".into()));
+    }
+    if send_devices.is_empty() && local_devices.is_empty() {
+        return Err(Error::Coordinator("no devices".into()));
+    }
+
+    let total = n_perms + 1; // index 0 = observed labelling
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), seed, total);
+    let s_t = st_of(mat);
+    let ctx = JobContext { mat, grouping, plan: &plan, s_t };
+
+    let cursor = AtomicUsize::new(0);
+    let results: Mutex<Vec<BatchResult>> = Mutex::new(Vec::new());
+    let failure: Mutex<Option<Error>> = Mutex::new(None);
+    let t0 = Instant::now();
+
+    // One pull-execute loop shared by every device.
+    let drive = |dev: &mut (dyn Device + '_)| {
+        let cap = dev.batch_capacity().max(1);
+        loop {
+            if failure.lock().unwrap().is_some() {
+                return; // fail fast: another device already errored
+            }
+            let start = cursor.fetch_add(cap, Ordering::Relaxed);
+            if start >= total {
+                return;
+            }
+            let rows = cap.min(total - start);
+            match dev.run(&ctx, BatchJob { start, rows }) {
+                Ok(r) => results.lock().unwrap().push(r),
+                Err(e) => {
+                    *failure.lock().unwrap() = Some(e);
+                    return;
+                }
+            }
+        }
+    };
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for mut dev in send_devices {
+            handles.push(s.spawn({
+                let drive = &drive;
+                move || drive(dev.as_mut())
+            }));
+        }
+        // Non-Send devices execute here, stealing from the same cursor.
+        for mut dev in local_devices {
+            drive(dev.as_mut());
+        }
+        for h in handles {
+            h.join().map_err(|_| Error::Coordinator("worker panicked".into()))?;
+        }
+        Ok::<(), Error>(())
+    })?;
+
+    if let Some(e) = failure.into_inner().unwrap() {
+        return Err(e);
+    }
+
+    // Aggregate: order by plan index, splice per-batch F values.
+    let mut batches = results.into_inner().unwrap();
+    batches.sort_by_key(|b| b.start);
+    let mut f_all = vec![f64::NAN; total];
+    let mut stats: std::collections::BTreeMap<String, DeviceStats> = Default::default();
+    for b in &batches {
+        f_all[b.start..b.start + b.f_stats.len()].copy_from_slice(&b.f_stats);
+        let e = stats.entry(b.device.clone()).or_insert_with(|| DeviceStats {
+            device: b.device.clone(),
+            batches: 0,
+            perms: 0,
+            busy_secs: 0.0,
+            simulated_secs: 0.0,
+        });
+        e.batches += 1;
+        e.perms += b.f_stats.len();
+        e.busy_secs += b.elapsed;
+        e.simulated_secs += b.simulated_secs.unwrap_or(0.0);
+    }
+    if f_all.iter().any(|f| f.is_nan()) {
+        return Err(Error::Coordinator("coverage hole: some permutations never ran".into()));
+    }
+
+    let f_obs = f_all[0];
+    let f_perms = f_all[1..].to_vec();
+    Ok(RunReport {
+        f_obs,
+        p_value: pvalue(f_obs, &f_perms),
+        n_perms,
+        n: mat.n(),
+        k: grouping.k(),
+        s_t,
+        elapsed_secs: t0.elapsed().as_secs_f64(),
+        per_device: stats.into_values().collect(),
+        f_perms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::device::NativeCpuDevice;
+    use crate::permanova::{permanova, PermanovaOpts, SwAlgorithm};
+
+    fn fixture(n: usize, k: usize) -> (DistanceMatrix, Grouping) {
+        (DistanceMatrix::random_euclidean(n, 6, 8), Grouping::balanced(n, k).unwrap())
+    }
+
+    fn native(algo: SwAlgorithm, batch: usize) -> Box<dyn Device + Send> {
+        let mut d = NativeCpuDevice::new(algo, 1);
+        d.batch = batch;
+        Box::new(d)
+    }
+
+    #[test]
+    fn single_device_matches_direct_permanova() {
+        let (mat, grouping) = fixture(40, 4);
+        let report = run_coordinated(&mat, &grouping, 99, 77, vec![native(SwAlgorithm::Brute, 16)], vec![])
+            .unwrap();
+        let direct = permanova(
+            &mat,
+            &grouping,
+            99,
+            &PermanovaOpts {
+                algo: SwAlgorithm::Brute,
+                seed: 77,
+                threads: 1,
+                keep_f_perms: true,
+            },
+        )
+        .unwrap();
+        assert!((report.f_obs - direct.f_obs).abs() < 1e-9);
+        assert_eq!(report.p_value, direct.p_value);
+        assert_eq!(report.f_perms.len(), 99);
+        for (a, b) in report.f_perms.iter().zip(direct.f_perms.as_ref().unwrap()) {
+            assert!((a - b).abs() < 1e-9, "same plan => identical distribution");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_devices_cover_all_perms() {
+        let (mat, grouping) = fixture(36, 3);
+        let devices: Vec<Box<dyn Device + Send>> = vec![
+            native(SwAlgorithm::Brute, 7),
+            native(SwAlgorithm::Flat, 13),
+            native(SwAlgorithm::Tiled { tile: 16 }, 5),
+        ];
+        let report = run_coordinated(&mat, &grouping, 200, 3, devices, vec![]).unwrap();
+        assert_eq!(report.f_perms.len(), 200);
+        // Work-stealing guarantees complete disjoint coverage, not that
+        // every device wins jobs (a fast device may drain the queue first).
+        let total_perms: usize = report.per_device.iter().map(|d| d.perms).sum();
+        assert_eq!(total_perms, 201);
+        assert!(!report.per_device.is_empty());
+        for d in &report.per_device {
+            assert!(d.busy_secs >= 0.0);
+            assert!(d.batches > 0);
+        }
+    }
+
+    #[test]
+    fn scheduling_is_result_deterministic() {
+        // Different device mixes, same seed: identical statistics.
+        let (mat, grouping) = fixture(32, 4);
+        let r1 = run_coordinated(&mat, &grouping, 120, 5, vec![native(SwAlgorithm::Brute, 11)], vec![])
+            .unwrap();
+        let r2 = run_coordinated(
+            &mat,
+            &grouping,
+            120,
+            5,
+            vec![native(SwAlgorithm::Flat, 17), native(SwAlgorithm::Brute, 23)],
+            vec![],
+        )
+        .unwrap();
+        // Different kernels order f32 reductions differently; statistics
+        // must agree to float tolerance and the p-value exactly.
+        assert!((r1.f_obs - r2.f_obs).abs() / r1.f_obs.abs().max(1e-12) < 1e-4);
+        assert_eq!(r1.p_value, r2.p_value);
+    }
+
+    #[test]
+    fn local_device_participates() {
+        // A non-Send-boxed device on the caller thread.
+        let (mat, grouping) = fixture(24, 2);
+        let mut d = NativeCpuDevice::new(SwAlgorithm::Brute, 1);
+        d.batch = 9;
+        let local: Vec<Box<dyn Device + '_>> = vec![Box::new(d)];
+        let report = run_coordinated(&mat, &grouping, 50, 1, vec![], local).unwrap();
+        assert_eq!(report.f_perms.len(), 50);
+    }
+
+    #[test]
+    fn rejects_empty_and_mismatched() {
+        let (mat, grouping) = fixture(24, 2);
+        assert!(run_coordinated(&mat, &grouping, 10, 1, vec![], vec![]).is_err());
+        assert!(
+            run_coordinated(&mat, &grouping, 0, 1, vec![native(SwAlgorithm::Brute, 8)], vec![])
+                .is_err()
+        );
+        let g_bad = Grouping::balanced(30, 2).unwrap();
+        assert!(
+            run_coordinated(&mat, &g_bad, 10, 1, vec![native(SwAlgorithm::Brute, 8)], vec![])
+                .is_err()
+        );
+    }
+
+    /// Failure injection: a device that errors must fail the run, fast.
+    struct FailingDevice;
+    impl Device for FailingDevice {
+        fn name(&self) -> String {
+            "failing".into()
+        }
+        fn batch_capacity(&self) -> usize {
+            8
+        }
+        fn run(&mut self, _: &JobContext<'_>, _: BatchJob) -> Result<BatchResult> {
+            Err(Error::Coordinator("injected".into()))
+        }
+    }
+
+    #[test]
+    fn device_failure_propagates() {
+        let (mat, grouping) = fixture(24, 2);
+        let devices: Vec<Box<dyn Device + Send>> = vec![Box::new(FailingDevice)];
+        let e = run_coordinated(&mat, &grouping, 30, 1, devices, vec![]).unwrap_err();
+        assert!(e.to_string().contains("injected"));
+    }
+}

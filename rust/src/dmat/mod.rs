@@ -1,0 +1,519 @@
+//! Distance matrices: storage, validation, generation, IO.
+//!
+//! The paper's workload is a 25145² float32 UniFrac distance matrix.  This
+//! module owns the square row-major representation every kernel consumes,
+//! plus:
+//!
+//! * validation of the PERMANOVA input contract (square, symmetric, zero
+//!   diagonal, non-negative, finite);
+//! * conversion to/from *condensed* form (the upper-triangle vector scipy
+//!   and scikit-bio use on the wire);
+//! * a compact binary format (`.pdm`) and a TSV reader/writer for interop;
+//! * synthetic generators used by tests, examples and benches;
+//! * Principal Coordinates Analysis ([`pcoa`]) — the embedding step the
+//!   PERMANOVA workflow pairs with its distance matrices.
+
+pub mod pcoa;
+
+pub use pcoa::{jacobi_eigh, pcoa, Pcoa};
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::rng::Xoshiro256pp;
+
+/// Magic bytes of the binary distance-matrix format.
+pub const PDM_MAGIC: &[u8; 4] = b"PDM1";
+
+/// A square, row-major `f32` distance matrix.
+///
+/// Invariants (enforced by [`DistanceMatrix::validate`], relied on by the
+/// kernels): `data.len() == n*n`, symmetric, zero diagonal, entries finite
+/// and non-negative.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistanceMatrix {
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl DistanceMatrix {
+    /// An all-zero n×n matrix (valid: the trivial pseudo-metric).
+    pub fn zeros(n: usize) -> Self {
+        DistanceMatrix { n, data: vec![0.0; n * n] }
+    }
+
+    /// Wrap a row-major buffer; checks only the length (call
+    /// [`validate`](Self::validate) for the full contract).
+    pub fn from_vec(n: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != n * n {
+            return Err(Error::InvalidInput(format!(
+                "distance matrix buffer has {} entries, want {}x{}={}",
+                data.len(),
+                n,
+                n,
+                n * n
+            )));
+        }
+        Ok(DistanceMatrix { n, data })
+    }
+
+    /// Build from a condensed upper-triangle vector (scipy `pdist` layout:
+    /// d(0,1), d(0,2), ..., d(0,n-1), d(1,2), ...), mirroring into both
+    /// triangles.
+    pub fn from_condensed(n: usize, condensed: &[f32]) -> Result<Self> {
+        let want = n * (n - 1) / 2;
+        if condensed.len() != want {
+            return Err(Error::InvalidInput(format!(
+                "condensed vector has {} entries, want n(n-1)/2 = {want} for n = {n}",
+                condensed.len()
+            )));
+        }
+        let mut m = Self::zeros(n);
+        let mut idx = 0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let d = condensed[idx];
+                idx += 1;
+                m.data[i * n + j] = d;
+                m.data[j * n + i] = d;
+            }
+        }
+        Ok(m)
+    }
+
+    /// The condensed upper-triangle vector (allocates `n(n-1)/2`).
+    pub fn to_condensed(&self) -> Vec<f32> {
+        let n = self.n;
+        let mut out = Vec::with_capacity(n * (n - 1) / 2);
+        for i in 0..n {
+            out.extend_from_slice(&self.data[i * n + i + 1..(i + 1) * n]);
+        }
+        out
+    }
+
+    /// Number of objects (matrix edge).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Row-major backing slice (length n²).
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable row-major backing slice (length n²).  Callers are trusted to
+    /// preserve the symmetry/zero-diagonal contract (or to call
+    /// [`validate`](Self::validate) / [`symmetrize`](Self::symmetrize)
+    /// afterwards).
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Entry (i, j).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.n + j]
+    }
+
+    /// Set entry (i, j) AND its mirror (j, i).
+    pub fn set_sym(&mut self, i: usize, j: usize, d: f32) {
+        self.data[i * self.n + j] = d;
+        self.data[j * self.n + i] = d;
+    }
+
+    /// Enforce the PERMANOVA input contract.
+    ///
+    /// `tol` is the absolute symmetry/diagonal tolerance (float32 UniFrac
+    /// pipelines commonly carry ~1e-6 asymmetry from reduction order).
+    pub fn validate(&self, tol: f32) -> Result<()> {
+        let n = self.n;
+        if n < 3 {
+            return Err(Error::InvalidInput(format!(
+                "need at least 3 objects for PERMANOVA, got {n}"
+            )));
+        }
+        for i in 0..n {
+            let dii = self.get(i, i);
+            if dii.abs() > tol {
+                return Err(Error::InvalidInput(format!(
+                    "diagonal entry ({i},{i}) = {dii}, want 0"
+                )));
+            }
+            for j in (i + 1)..n {
+                let a = self.get(i, j);
+                let b = self.get(j, i);
+                if !a.is_finite() || !b.is_finite() {
+                    return Err(Error::InvalidInput(format!(
+                        "non-finite distance at ({i},{j})"
+                    )));
+                }
+                if a < 0.0 || b < 0.0 {
+                    return Err(Error::InvalidInput(format!(
+                        "negative distance at ({i},{j}): {a}"
+                    )));
+                }
+                if (a - b).abs() > tol {
+                    return Err(Error::InvalidInput(format!(
+                        "asymmetry at ({i},{j}): {a} vs {b} (tol {tol})"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Exactly symmetrize (average the two triangles) and zero the diagonal.
+    pub fn symmetrize(&mut self) {
+        let n = self.n;
+        for i in 0..n {
+            self.data[i * n + i] = 0.0;
+            for j in (i + 1)..n {
+                let avg = 0.5 * (self.data[i * n + j] + self.data[j * n + i]);
+                self.data[i * n + j] = avg;
+                self.data[j * n + i] = avg;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Generators
+    // ------------------------------------------------------------------
+
+    /// Euclidean distances between `n` random points in `dim` dimensions —
+    /// a genuine metric, scaled so the max distance is ~1.
+    pub fn random_euclidean(n: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let pts: Vec<f32> = (0..n * dim)
+            .map(|_| {
+                // Box-Muller-free approximate normal: sum of 4 uniforms.
+                let s: f32 = (0..4).map(|_| rng.next_f32()).sum::<f32>() - 2.0;
+                s
+            })
+            .collect();
+        let mut m = Self::zeros(n);
+        let mut maxd = 0.0f32;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let mut acc = 0.0f32;
+                for d in 0..dim {
+                    let diff = pts[i * dim + d] - pts[j * dim + d];
+                    acc += diff * diff;
+                }
+                let dist = acc.sqrt();
+                maxd = maxd.max(dist);
+                m.set_sym(i, j, dist);
+            }
+        }
+        if maxd > 0.0 {
+            for v in m.data.iter_mut() {
+                *v /= maxd;
+            }
+        }
+        m
+    }
+
+    /// A matrix with planted group structure: distances ~`within` inside
+    /// each of `k` equal blocks, ~`between` across blocks (plus jitter).
+    /// Used to test that PERMANOVA detects real effects.
+    pub fn planted_blocks(n: usize, k: usize, within: f32, between: f32, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let same = (i % k) == (j % k);
+                let base = if same { within } else { between };
+                let jitter = 0.05 * base * (rng.next_f32() - 0.5);
+                m.set_sym(i, j, (base + jitter).max(0.0));
+            }
+        }
+        m
+    }
+
+    // ------------------------------------------------------------------
+    // IO
+    // ------------------------------------------------------------------
+
+    /// Write the compact binary format: `PDM1 | n: u64 LE | n*n f32 LE`.
+    pub fn write_binary(&self, path: impl AsRef<Path>) -> Result<()> {
+        let p = path.as_ref();
+        let f = std::fs::File::create(p).map_err(|e| Error::io(p.display().to_string(), e))?;
+        let mut w = BufWriter::new(f);
+        let mut run = || -> std::io::Result<()> {
+            w.write_all(PDM_MAGIC)?;
+            w.write_all(&(self.n as u64).to_le_bytes())?;
+            for &v in &self.data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+            w.flush()
+        };
+        run().map_err(|e| Error::io(p.display().to_string(), e))
+    }
+
+    /// Read the binary format written by [`write_binary`](Self::write_binary).
+    pub fn read_binary(path: impl AsRef<Path>) -> Result<Self> {
+        let p = path.as_ref();
+        let f = std::fs::File::open(p).map_err(|e| Error::io(p.display().to_string(), e))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)
+            .map_err(|e| Error::io(p.display().to_string(), e))?;
+        if &magic != PDM_MAGIC {
+            return Err(Error::parse("pdm", p.display().to_string(), "bad magic"));
+        }
+        let mut nb = [0u8; 8];
+        r.read_exact(&mut nb)
+            .map_err(|e| Error::io(p.display().to_string(), e))?;
+        let n = u64::from_le_bytes(nb) as usize;
+        if n == 0 || n > 1 << 20 {
+            return Err(Error::parse("pdm", p.display().to_string(), format!("implausible n = {n}")));
+        }
+        let mut bytes = vec![0u8; n * n * 4];
+        r.read_exact(&mut bytes)
+            .map_err(|e| Error::io(p.display().to_string(), e))?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Self::from_vec(n, data)
+    }
+
+    /// Write a scikit-bio-style TSV: header row of ids, then `id\td...`.
+    pub fn write_tsv(&self, path: impl AsRef<Path>, ids: Option<&[String]>) -> Result<()> {
+        let p = path.as_ref();
+        let f = std::fs::File::create(p).map_err(|e| Error::io(p.display().to_string(), e))?;
+        let mut w = BufWriter::new(f);
+        let own_ids: Vec<String>;
+        let ids = match ids {
+            Some(ids) => ids,
+            None => {
+                own_ids = (0..self.n).map(|i| format!("s{i}")).collect();
+                &own_ids
+            }
+        };
+        let mut run = || -> std::io::Result<()> {
+            for id in ids {
+                write!(w, "\t{id}")?;
+            }
+            writeln!(w)?;
+            for i in 0..self.n {
+                write!(w, "{}", ids[i])?;
+                for j in 0..self.n {
+                    write!(w, "\t{}", self.get(i, j))?;
+                }
+                writeln!(w)?;
+            }
+            w.flush()
+        };
+        run().map_err(|e| Error::io(p.display().to_string(), e))
+    }
+
+    /// Read the TSV format written by [`write_tsv`](Self::write_tsv);
+    /// returns the matrix and the sample ids.
+    pub fn read_tsv(path: impl AsRef<Path>) -> Result<(Self, Vec<String>)> {
+        let p = path.as_ref();
+        let f = std::fs::File::open(p).map_err(|e| Error::io(p.display().to_string(), e))?;
+        let mut lines = BufReader::new(f).lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| Error::parse("dmat-tsv", p.display().to_string(), "empty file"))?
+            .map_err(|e| Error::io(p.display().to_string(), e))?;
+        let ids: Vec<String> = header
+            .split('\t')
+            .skip(1)
+            .map(|s| s.to_string())
+            .collect();
+        let n = ids.len();
+        if n == 0 {
+            return Err(Error::parse("dmat-tsv", p.display().to_string(), "no ids in header"));
+        }
+        let mut m = Self::zeros(n);
+        for (i, line) in lines.enumerate() {
+            let line = line.map_err(|e| Error::io(p.display().to_string(), e))?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            if i >= n {
+                return Err(Error::parse("dmat-tsv", p.display().to_string(), "too many rows"));
+            }
+            let mut fields = line.split('\t');
+            let rid = fields.next().unwrap_or("");
+            if rid != ids[i] {
+                return Err(Error::parse(
+                    "dmat-tsv",
+                    format!("{} row {i}", p.display()),
+                    format!("row id {rid:?} != header id {:?}", ids[i]),
+                ));
+            }
+            for (j, tok) in fields.enumerate() {
+                if j >= n {
+                    return Err(Error::parse(
+                        "dmat-tsv",
+                        format!("{} row {i}", p.display()),
+                        "too many columns",
+                    ));
+                }
+                let v: f32 = tok.trim().parse().map_err(|e| {
+                    Error::parse(
+                        "dmat-tsv",
+                        format!("{} row {i} col {j}", p.display()),
+                        format!("{e}"),
+                    )
+                })?;
+                m.data[i * n + j] = v;
+            }
+        }
+        Ok((m, ids))
+    }
+
+    /// Bytes of the dense representation (the traffic unit the simulator
+    /// reasons about).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DistanceMatrix {
+        let mut m = DistanceMatrix::zeros(4);
+        m.set_sym(0, 1, 1.0);
+        m.set_sym(0, 2, 2.0);
+        m.set_sym(0, 3, 3.0);
+        m.set_sym(1, 2, 1.5);
+        m.set_sym(1, 3, 2.5);
+        m.set_sym(2, 3, 0.5);
+        m
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(DistanceMatrix::from_vec(3, vec![0.0; 9]).is_ok());
+        assert!(DistanceMatrix::from_vec(3, vec![0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn condensed_roundtrip() {
+        let m = small();
+        let c = m.to_condensed();
+        assert_eq!(c.len(), 6);
+        assert_eq!(c, vec![1.0, 2.0, 3.0, 1.5, 2.5, 0.5]);
+        let m2 = DistanceMatrix::from_condensed(4, &c).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn condensed_wrong_len_rejected() {
+        assert!(DistanceMatrix::from_condensed(4, &[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn validate_accepts_good_matrix() {
+        small().validate(1e-6).unwrap();
+        DistanceMatrix::random_euclidean(20, 4, 1).validate(1e-5).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_asymmetry_diag_negative_nan() {
+        let mut m = small();
+        m.data[1] = 9.0; // (0,1) != (1,0)
+        assert!(m.validate(1e-6).is_err());
+
+        let mut m = small();
+        m.data[0] = 0.5; // diagonal
+        assert!(m.validate(1e-6).is_err());
+
+        let mut m = small();
+        m.set_sym(0, 1, -1.0);
+        assert!(m.validate(1e-6).is_err());
+
+        let mut m = small();
+        m.set_sym(0, 1, f32::NAN);
+        assert!(m.validate(1e-6).is_err());
+
+        assert!(DistanceMatrix::zeros(2).validate(1e-6).is_err(), "n < 3");
+    }
+
+    #[test]
+    fn symmetrize_fixes_matrix() {
+        let mut m = small();
+        m.data[1] = 2.0; // (0,1) = 2, (1,0) = 1
+        m.data[0] = 7.0; // diag
+        m.symmetrize();
+        m.validate(1e-6).unwrap();
+        assert_eq!(m.get(0, 1), 1.5);
+    }
+
+    #[test]
+    fn euclidean_is_metric_scaled() {
+        let m = DistanceMatrix::random_euclidean(30, 8, 9);
+        m.validate(1e-5).unwrap();
+        let mx = m.data().iter().cloned().fold(0.0f32, f32::max);
+        assert!((mx - 1.0).abs() < 1e-5);
+        // Triangle inequality spot-check.
+        for (i, j, k) in [(0, 1, 2), (3, 7, 11), (5, 20, 29)] {
+            assert!(m.get(i, j) <= m.get(i, k) + m.get(k, j) + 1e-5);
+        }
+    }
+
+    #[test]
+    fn planted_blocks_have_structure() {
+        let m = DistanceMatrix::planted_blocks(24, 3, 0.2, 1.0, 4);
+        m.validate(1e-6).unwrap();
+        assert!(m.get(0, 3) < 0.5, "same block (0,3 both ≡ 0 mod 3)");
+        assert!(m.get(0, 1) > 0.5, "cross block");
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let dir = std::env::temp_dir().join("permanova_apu_test_dmat");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.pdm");
+        let m = DistanceMatrix::random_euclidean(17, 5, 3);
+        m.write_binary(&p).unwrap();
+        let m2 = DistanceMatrix::read_binary(&p).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn binary_bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("permanova_apu_test_dmat");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.pdm");
+        std::fs::write(&p, b"NOPE\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(DistanceMatrix::read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn tsv_roundtrip_with_ids() {
+        let dir = std::env::temp_dir().join("permanova_apu_test_dmat");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.tsv");
+        let m = small();
+        let ids: Vec<String> = ["a", "b", "c", "d"].iter().map(|s| s.to_string()).collect();
+        m.write_tsv(&p, Some(&ids)).unwrap();
+        let (m2, ids2) = DistanceMatrix::read_tsv(&p).unwrap();
+        assert_eq!(ids2, ids);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((m.get(i, j) - m2.get(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn nbytes_matches() {
+        assert_eq!(small().nbytes(), 4 * 4 * 4);
+    }
+}

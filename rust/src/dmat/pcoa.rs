@@ -1,0 +1,260 @@
+//! Principal Coordinates Analysis (PCoA / classical MDS).
+//!
+//! The visualization step every PERMANOVA study pairs with its distance
+//! matrix (skbio: `pcoa`), and the embedding PERMDISP needs: eigendecompose
+//! the Gower-centered matrix
+//!
+//! ```text
+//! B = -1/2 · J D² J,   J = I - 11ᵀ/n
+//! ```
+//!
+//! and scale eigenvectors by √λ.  The eigensolver is a from-scratch cyclic
+//! Jacobi rotation (the matrix is symmetric; n here is sample count, ≤ a
+//! few thousand, where Jacobi's O(n³) with tiny constants is fine and its
+//! unconditional numerical robustness beats a hand-rolled QR).
+
+use super::DistanceMatrix;
+use crate::error::{Error, Result};
+
+/// A PCoA embedding.
+#[derive(Clone, Debug)]
+pub struct Pcoa {
+    /// Number of objects.
+    pub n: usize,
+    /// Retained axes (columns), row-major `n x n_axes`.
+    pub coords: Vec<f64>,
+    pub n_axes: usize,
+    /// Eigenvalues of the retained axes (descending, positive).
+    pub eigenvalues: Vec<f64>,
+    /// Fraction of total positive inertia explained per axis.
+    pub proportion_explained: Vec<f64>,
+}
+
+impl Pcoa {
+    /// Coordinate of object `i` on `axis`.
+    #[inline]
+    pub fn coord(&self, i: usize, axis: usize) -> f64 {
+        self.coords[i * self.n_axes + axis]
+    }
+
+    /// Euclidean distance between objects in the embedding.
+    pub fn embedded_distance(&self, i: usize, j: usize) -> f64 {
+        (0..self.n_axes)
+            .map(|a| {
+                let d = self.coord(i, a) - self.coord(j, a);
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix (row-major n×n).
+/// Returns (eigenvalues, eigenvectors as columns of a row-major n×n).
+pub fn jacobi_eigh(a: &[f64], n: usize, max_sweeps: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm — convergence test.
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m[p * n + q] * m[p * n + q];
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let eig: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    (eig, v)
+}
+
+/// Run PCoA, retaining at most `max_axes` positive-eigenvalue axes
+/// (0 = all positive axes).
+pub fn pcoa(mat: &DistanceMatrix, max_axes: usize) -> Result<Pcoa> {
+    let n = mat.n();
+    if n < 3 {
+        return Err(Error::InvalidInput("PCoA needs at least 3 objects".into()));
+    }
+    // Gower-centered B = -0.5 * J D^2 J.
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let d = mat.get(i, j) as f64;
+            d2[i * n + j] = d * d;
+        }
+    }
+    let row_means: Vec<f64> = (0..n)
+        .map(|i| d2[i * n..(i + 1) * n].iter().sum::<f64>() / n as f64)
+        .collect();
+    let grand = row_means.iter().sum::<f64>() / n as f64;
+    let mut b = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            b[i * n + j] = -0.5 * (d2[i * n + j] - row_means[i] - row_means[j] + grand);
+        }
+    }
+
+    let (eig, vecs) = jacobi_eigh(&b, n, 60);
+    // Sort axes by descending eigenvalue.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| eig[y].partial_cmp(&eig[x]).unwrap());
+
+    let pos_total: f64 = eig.iter().filter(|&&e| e > 0.0).sum();
+    let tol = 1e-9 * pos_total.max(1e-30);
+    let mut axes: Vec<usize> = order.into_iter().filter(|&i| eig[i] > tol).collect();
+    if max_axes > 0 {
+        axes.truncate(max_axes);
+    }
+    if axes.is_empty() {
+        return Err(Error::InvalidInput("no positive eigenvalues (degenerate matrix)".into()));
+    }
+
+    let n_axes = axes.len();
+    let mut coords = vec![0.0f64; n * n_axes];
+    let mut eigenvalues = Vec::with_capacity(n_axes);
+    let mut proportion = Vec::with_capacity(n_axes);
+    for (a, &col) in axes.iter().enumerate() {
+        let lambda = eig[col];
+        eigenvalues.push(lambda);
+        proportion.push(lambda / pos_total);
+        let scale = lambda.sqrt();
+        for i in 0..n {
+            coords[i * n_axes + a] = vecs[i * n + col] * scale;
+        }
+    }
+    Ok(Pcoa { n, coords, n_axes, eigenvalues, proportion_explained: proportion })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jacobi_known_eigensystem() {
+        // [[2,1],[1,2]] -> eigenvalues {1, 3}.
+        let (eig, vecs) = jacobi_eigh(&[2.0, 1.0, 1.0, 2.0], 2, 50);
+        let mut e = eig.clone();
+        e.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((e[0] - 1.0).abs() < 1e-10);
+        assert!((e[1] - 3.0).abs() < 1e-10);
+        // Eigenvector orthonormality.
+        let dot = vecs[0] * vecs[1] + vecs[2] * vecs[3];
+        assert!(dot.abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_reconstructs_matrix() {
+        // A = V diag(e) V^T for a random symmetric 6x6.
+        let n = 6;
+        let mut rng = crate::rng::Xoshiro256pp::new(3);
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.next_f64() - 0.5;
+                a[i * n + j] = x;
+                a[j * n + i] = x;
+            }
+        }
+        let (eig, v) = jacobi_eigh(&a, n, 60);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += v[i * n + k] * eig[k] * v[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn pcoa_recovers_euclidean_configuration() {
+        // Distances from a genuine Euclidean configuration are exactly
+        // embeddable: embedded distances == input distances.
+        let mat = DistanceMatrix::random_euclidean(20, 3, 5);
+        let p = pcoa(&mat, 0).unwrap();
+        for i in 0..20 {
+            for j in (i + 1)..20 {
+                let d_in = mat.get(i, j) as f64;
+                let d_emb = p.embedded_distance(i, j);
+                assert!(
+                    (d_in - d_emb).abs() < 1e-5,
+                    "({i},{j}): {d_in} vs {d_emb}"
+                );
+            }
+        }
+        // 3-D points -> ~3 meaningful axes carry ~all inertia.
+        let top3: f64 = p.proportion_explained.iter().take(3).sum();
+        assert!(top3 > 0.999, "{:?}", p.proportion_explained);
+    }
+
+    #[test]
+    fn pcoa_axes_ordered_and_normalized() {
+        let mat = DistanceMatrix::random_euclidean(15, 6, 9);
+        let p = pcoa(&mat, 4).unwrap();
+        assert_eq!(p.n_axes, 4);
+        for w in p.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1], "descending eigenvalues");
+        }
+        assert!(p.proportion_explained.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        // Axis coordinates are centered.
+        for a in 0..p.n_axes {
+            let mean: f64 = (0..p.n).map(|i| p.coord(i, a)).sum::<f64>() / p.n as f64;
+            assert!(mean.abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn pcoa_separates_planted_blocks() {
+        let mat = DistanceMatrix::planted_blocks(24, 2, 0.1, 1.0, 3);
+        let p = pcoa(&mat, 2).unwrap();
+        // Axis 0 should separate the two groups almost perfectly.
+        let mean0: f64 = (0..24).filter(|i| i % 2 == 0).map(|i| p.coord(i, 0)).sum::<f64>() / 12.0;
+        let mean1: f64 = (0..24).filter(|i| i % 2 == 1).map(|i| p.coord(i, 0)).sum::<f64>() / 12.0;
+        assert!((mean0 - mean1).abs() > 0.5, "axis 0 group means: {mean0} vs {mean1}");
+    }
+
+    #[test]
+    fn rejects_tiny() {
+        assert!(pcoa(&DistanceMatrix::zeros(3), 0).is_err(), "all-zero: no positive eigs");
+    }
+}

@@ -1,0 +1,93 @@
+//! Crate-wide error type.
+//!
+//! One `thiserror` enum covering every layer: data validation, IO, parsing
+//! (JSON/TOML/Newick), the XLA runtime, and coordinator scheduling.  Library
+//! code returns [`Result`]; only `main` formats for humans.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All failure modes of the library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Input data failed validation (asymmetric matrix, empty group, ...).
+    #[error("invalid input: {0}")]
+    InvalidInput(String),
+
+    /// A configuration file or CLI flag is malformed.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Underlying IO failure, annotated with the path involved.
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// A structured text format failed to parse (JSON, TOML subset, Newick,
+    /// distance-matrix TSV...).  `what` names the format.
+    #[error("{what} parse error at {context}: {message}")]
+    Parse {
+        what: &'static str,
+        context: String,
+        message: String,
+    },
+
+    /// artifacts/manifest.json doesn't describe what the runtime needs.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// The XLA/PJRT layer failed (compile, transfer, execute).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Coordinator-level failure (a worker died, a channel closed early...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+}
+
+impl Error {
+    /// Convenience for IO errors carrying their path.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+
+    /// Convenience for parse errors.
+    pub fn parse(
+        what: &'static str,
+        context: impl Into<String>,
+        message: impl Into<String>,
+    ) -> Self {
+        Error::Parse { what, context: context.into(), message: message.into() }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::parse("json", "line 3", "unexpected token");
+        let s = e.to_string();
+        assert!(s.contains("json"));
+        assert!(s.contains("line 3"));
+        assert!(s.contains("unexpected token"));
+    }
+
+    #[test]
+    fn io_error_carries_path() {
+        let e = Error::io("/nope/file", std::io::Error::from(std::io::ErrorKind::NotFound));
+        assert!(e.to_string().contains("/nope/file"));
+    }
+}

@@ -1,0 +1,59 @@
+//! # permanova-apu
+//!
+//! A production-shaped reproduction of *"Comparing CPU and GPU compute of
+//! PERMANOVA on MI300A"* (Igor Sfiligoi, PEARC'25): PERMANOVA — the
+//! permutation test microbiome studies run over distance matrices — with
+//! the paper's three kernel formulations (brute force, cache-tiled,
+//! device-reshaped), a device coordinator that schedules permutation batches
+//! across native CPU kernels, AOT-compiled XLA kernels (PJRT), and a
+//! calibrated MI300A CPU/GPU performance model that regenerates the paper's
+//! Figure 1 and Appendix A2 without the hardware.
+//!
+//! ## Layering (see DESIGN.md)
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`), AOT-lowered to HLO
+//!   text at build time.
+//! * **L2** — the JAX PERMANOVA batch graph (`python/compile/model.py`).
+//! * **L3** — this crate: substrates ([`rng`], [`dmat`], [`unifrac`],
+//!   [`stream`], [`simulator`], [`bench`]), the PERMANOVA core
+//!   ([`permanova`]), the XLA runtime ([`runtime`]) and the scheduling
+//!   [`coordinator`], plus reporting and the CLI.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the JAX
+//! graph once, and the binary only loads `artifacts/*.hlo.txt`.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use permanova_apu::dmat::DistanceMatrix;
+//! use permanova_apu::permanova::{permanova, Grouping, PermanovaOpts};
+//!
+//! let mat = DistanceMatrix::random_euclidean(64, 8, 42);
+//! let grouping = Grouping::balanced(64, 4).unwrap();
+//! let res = permanova(&mat, &grouping, 999, &PermanovaOpts::default()).unwrap();
+//! println!("F = {:.4}, p = {:.4}", res.f_obs, res.p_value);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dmat;
+pub mod error;
+pub mod jsonio;
+pub mod permanova;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod simulator;
+pub mod stream;
+pub mod unifrac;
+
+pub use error::{Error, Result};
+
+/// Crate version, surfaced by the CLI and embedded in run reports.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default location of the AOT artifacts directory, relative to the repo
+/// root (overridable everywhere via `--artifacts` / config).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,29 @@
+//! permanova-apu: the L3 leader binary.
+//!
+//! Thin shell around [`permanova_apu::cli`]: parse, dispatch, print.
+//! All functionality lives in the library so it is testable and reusable
+//! from the examples and benches.
+
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match permanova_apu::cli::Args::parse(&raw) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprint!("{}", permanova_apu::cli::usage());
+            return ExitCode::from(2);
+        }
+    };
+    match permanova_apu::cli::dispatch(&args) {
+        Ok(out) => {
+            print!("{out}");
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! ANOSIM — Analysis of Similarities (Clarke 1993).
+//!
+//! The rank-based companion test scikit-bio ships next to PERMANOVA, and a
+//! natural consistency check for it: the same permutation machinery over a
+//! different statistic.
+//!
+//! ```text
+//! R = (r̄_between − r̄_within) / (M / 2),   M = n(n−1)/2
+//! ```
+//!
+//! where `r̄` are mean ranks of the corresponding distances (mid-ranks on
+//! ties).  R ∈ [−1, 1]; R ≫ 0 means within-group distances are
+//! systematically smaller.  Significance by label permutation, identical
+//! plan machinery as PERMANOVA — ranks are computed **once** (they depend
+//! only on the distances), so each permutation costs O(M) like the paper's
+//! s_W kernels.
+
+use super::grouping::Grouping;
+use super::stats::pvalue;
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+use crate::rng::PermutationPlan;
+
+/// Result of an ANOSIM run.
+#[derive(Clone, Debug)]
+pub struct AnosimResult {
+    /// Observed R statistic.
+    pub r_obs: f64,
+    pub p_value: f64,
+    pub n_perms: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// Mid-ranks of the condensed distance vector (1-based, ties averaged).
+fn rank_condensed(condensed: &[f32]) -> Vec<f64> {
+    let m = condensed.len();
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| condensed[a].partial_cmp(&condensed[b]).unwrap());
+    let mut ranks = vec![0.0f64; m];
+    let mut i = 0;
+    while i < m {
+        let mut j = i;
+        while j + 1 < m && condensed[order[j + 1]] == condensed[order[i]] {
+            j += 1;
+        }
+        // mid-rank for the tie run [i, j]
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for &o in &order[i..=j] {
+            ranks[o] = mid;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// R statistic for one labelling over precomputed condensed ranks.
+fn r_statistic(ranks: &[f64], n: usize, labels: &[u32]) -> f64 {
+    let mut sum_within = 0.0f64;
+    let mut cnt_within = 0usize;
+    let mut sum_between = 0.0f64;
+    let mut idx = 0usize;
+    for i in 0..n {
+        let gi = labels[i];
+        for j in (i + 1)..n {
+            let r = ranks[idx];
+            idx += 1;
+            if labels[j] == gi {
+                sum_within += r;
+                cnt_within += 1;
+            } else {
+                sum_between += r;
+            }
+        }
+    }
+    let m = ranks.len();
+    let cnt_between = m - cnt_within;
+    if cnt_within == 0 || cnt_between == 0 {
+        return 0.0; // degenerate labelling (can't happen through Grouping)
+    }
+    let mean_w = sum_within / cnt_within as f64;
+    let mean_b = sum_between / cnt_between as f64;
+    (mean_b - mean_w) / (m as f64 / 2.0)
+}
+
+/// Run ANOSIM with `n_perms` label permutations.
+pub fn anosim(
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    n_perms: usize,
+    seed: u64,
+) -> Result<AnosimResult> {
+    if grouping.n() != mat.n() {
+        return Err(Error::InvalidInput(format!(
+            "grouping n = {} vs matrix n = {}",
+            grouping.n(),
+            mat.n()
+        )));
+    }
+    if n_perms == 0 {
+        return Err(Error::InvalidInput("n_perms must be >= 1".into()));
+    }
+    let n = mat.n();
+    let condensed = mat.to_condensed();
+    let ranks = rank_condensed(&condensed);
+
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), seed, n_perms + 1);
+    let mut row = vec![0u32; n];
+    let mut r_all = Vec::with_capacity(n_perms + 1);
+    for i in 0..n_perms + 1 {
+        plan.fill(i, &mut row);
+        r_all.push(r_statistic(&ranks, n, &row));
+    }
+    let r_obs = r_all[0];
+    Ok(AnosimResult {
+        r_obs,
+        p_value: pvalue(r_obs, &r_all[1..]),
+        n_perms,
+        n,
+        k: grouping.k(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_with_ties() {
+        let r = rank_condensed(&[0.5, 0.1, 0.5, 0.9]);
+        // sorted: 0.1(rank 1), 0.5, 0.5 (mid 2.5), 0.9 (rank 4)
+        assert_eq!(r, vec![2.5, 1.0, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn perfectly_separated_r_is_one() {
+        // All within distances < all between distances -> R = 1.
+        let n = 12;
+        let mut mat = DistanceMatrix::zeros(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let same = (i % 2) == (j % 2);
+                mat.set_sym(i, j, if same { 0.1 + 0.001 * (i + j) as f32 } else { 5.0 + 0.001 * (i * j) as f32 });
+            }
+        }
+        let grouping = Grouping::new((0..n).map(|i| (i % 2) as u32).collect()).unwrap();
+        let res = anosim(&mat, &grouping, 199, 3).unwrap();
+        assert!((res.r_obs - 1.0).abs() < 1e-9, "R = {}", res.r_obs);
+        assert!((res.p_value - 1.0 / 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn null_data_r_near_zero() {
+        let mat = DistanceMatrix::random_euclidean(40, 8, 7);
+        let grouping = Grouping::balanced(40, 4).unwrap();
+        let res = anosim(&mat, &grouping, 199, 5).unwrap();
+        assert!(res.r_obs.abs() < 0.25, "R = {}", res.r_obs);
+        assert!(res.p_value > 0.05, "p = {}", res.p_value);
+    }
+
+    #[test]
+    fn agrees_with_permanova_verdict() {
+        // Strong structure: both tests fire; exchangeable data: neither.
+        let strong = DistanceMatrix::planted_blocks(36, 3, 0.1, 1.0, 2);
+        let grouping = Grouping::balanced(36, 3).unwrap();
+        let a = anosim(&strong, &grouping, 99, 1).unwrap();
+        let p = super::super::stats::permanova(
+            &strong,
+            &grouping,
+            99,
+            &super::super::stats::PermanovaOpts::default(),
+        )
+        .unwrap();
+        assert!(a.p_value <= 0.05 && p.p_value <= 0.05);
+        assert!(a.r_obs > 0.5);
+    }
+
+    #[test]
+    fn r_bounded() {
+        for seed in 0..6u64 {
+            let mat = DistanceMatrix::random_euclidean(20, 4, seed);
+            let grouping = Grouping::balanced(20, 2 + (seed as usize % 3)).unwrap();
+            let res = anosim(&mat, &grouping, 49, seed).unwrap();
+            assert!((-1.0..=1.0).contains(&res.r_obs), "R = {}", res.r_obs);
+            assert!(res.p_value > 0.0 && res.p_value <= 1.0);
+        }
+    }
+
+    #[test]
+    fn input_validation() {
+        let mat = DistanceMatrix::random_euclidean(10, 4, 1);
+        let g12 = Grouping::balanced(12, 3).unwrap();
+        assert!(anosim(&mat, &g12, 9, 1).is_err());
+        let g10 = Grouping::balanced(10, 2).unwrap();
+        assert!(anosim(&mat, &g10, 0, 1).is_err());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mat = DistanceMatrix::random_euclidean(24, 6, 3);
+        let grouping = Grouping::balanced(24, 3).unwrap();
+        let a = anosim(&mat, &grouping, 99, 11).unwrap();
+        let b = anosim(&mat, &grouping, 99, 11).unwrap();
+        assert_eq!(a.p_value, b.p_value);
+        assert_eq!(a.r_obs, b.r_obs);
+        let c = anosim(&mat, &grouping, 99, 12).unwrap();
+        assert_eq!(a.r_obs, c.r_obs, "observed statistic is seed-free");
+    }
+}

@@ -1,0 +1,237 @@
+//! Batched, multi-threaded s_W / F-stat computation over permutations.
+//!
+//! This is the Rust analog of the paper's `permanova_f_stat_sW_T`:
+//! `#pragma omp parallel for` over permutations, each thread running the
+//! single-permutation kernel.  The permutation axis is embarrassingly
+//! parallel and the matrix is shared read-only — exactly the regime the
+//! paper measures.
+//!
+//! Thread count is explicit (the SMT study of Figure 1 is "same cores, 1 vs
+//! 2 threads per core"), defaulting to available parallelism.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::grouping::Grouping;
+use super::kernels::{sw_one, SwAlgorithm};
+use crate::dmat::DistanceMatrix;
+use crate::rng::PermutationPlan;
+
+/// Resolve a thread-count request (0 = all available).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Compute s_W for `rows` pre-materialized label rows (row-major
+/// `rows * n`), using `threads` OS threads.
+///
+/// Rows are claimed via an atomic cursor in small chunks — the same dynamic
+/// schedule OpenMP would use — so stragglers (NUMA, SMT siblings) don't gate
+/// the batch.
+pub fn sw_batch(
+    mat: &DistanceMatrix,
+    groupings: &[u32],
+    rows: usize,
+    inv_group_sizes: &[f32],
+    algo: SwAlgorithm,
+    threads: usize,
+) -> Vec<f32> {
+    let n = mat.n();
+    assert_eq!(groupings.len(), rows * n, "groupings buffer shape");
+    let threads = resolve_threads(threads).min(rows.max(1));
+    let mut out = vec![0.0f32; rows];
+
+    if threads <= 1 || rows <= 1 {
+        for r in 0..rows {
+            out[r] = sw_one(algo, mat.data(), n, &groupings[r * n..(r + 1) * n], inv_group_sizes);
+        }
+        return out;
+    }
+
+    // Chunked dynamic scheduling: big enough to amortize the atomic, small
+    // enough to balance (paper workloads have thousands of permutations).
+    let chunk = (rows / (threads * 8)).max(1);
+    let cursor = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let out_ptr = &out_ptr;
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= rows {
+                        break;
+                    }
+                    let end = (start + chunk).min(rows);
+                    for r in start..end {
+                        let sw = sw_one(
+                            algo,
+                            mat.data(),
+                            n,
+                            &groupings[r * n..(r + 1) * n],
+                            inv_group_sizes,
+                        );
+                        // SAFETY: each r is claimed by exactly one thread
+                        // (fetch_add hands out disjoint ranges), and `out`
+                        // outlives the scope.
+                        unsafe { *out_ptr.0.add(r) = sw };
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Compute s_W for a permutation-plan range without materializing all label
+/// rows up front: each thread owns a scratch row and streams through its
+/// chunk.  This is the memory-lean path the coordinator uses for large
+/// permutation counts.
+pub fn sw_plan_range(
+    mat: &DistanceMatrix,
+    plan: &PermutationPlan,
+    start: usize,
+    count: usize,
+    inv_group_sizes: &[f32],
+    algo: SwAlgorithm,
+    threads: usize,
+) -> Vec<f32> {
+    let n = mat.n();
+    assert_eq!(plan.n(), n, "plan/matrix size mismatch");
+    let threads = resolve_threads(threads).min(count.max(1));
+    let mut out = vec![0.0f32; count];
+
+    if threads <= 1 {
+        let mut row = vec![0u32; n];
+        for i in 0..count {
+            plan.fill(start + i, &mut row);
+            out[i] = sw_one(algo, mat.data(), n, &row, inv_group_sizes);
+        }
+        return out;
+    }
+
+    let chunk = (count / (threads * 8)).max(1);
+    let cursor = AtomicUsize::new(0);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let out_ptr = &out_ptr;
+                let mut row = vec![0u32; n];
+                loop {
+                    let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if lo >= count {
+                        break;
+                    }
+                    let hi = (lo + chunk).min(count);
+                    for i in lo..hi {
+                        plan.fill(start + i, &mut row);
+                        let sw = sw_one(algo, mat.data(), n, &row, inv_group_sizes);
+                        // SAFETY: disjoint indices per thread, out outlives scope.
+                        unsafe { *out_ptr.0.add(i) = sw };
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Convenience: batch s_W for a grouping's permutation plan `[0, count)`.
+pub fn sw_permutations(
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    seed: u64,
+    count: usize,
+    algo: SwAlgorithm,
+    threads: usize,
+) -> Vec<f32> {
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), seed, count);
+    sw_plan_range(mat, &plan, 0, count, grouping.inv_sizes(), algo, threads)
+}
+
+/// Raw pointer wrapper so scoped threads can write disjoint output slots.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permanova::kernels::sw_brute_f64;
+
+    fn setup(n: usize, k: usize) -> (DistanceMatrix, Grouping) {
+        let mat = DistanceMatrix::random_euclidean(n, 8, 11);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        (mat, grouping)
+    }
+
+    #[test]
+    fn batch_matches_single_threaded_oracle() {
+        let (mat, grouping) = setup(48, 4);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 5, 33);
+        let rows = plan.batch(0, 33);
+        let got = sw_batch(&mat, &rows, 33, grouping.inv_sizes(), SwAlgorithm::Flat, 4);
+        for r in 0..33 {
+            let want = sw_brute_f64(
+                mat.data(),
+                48,
+                &rows[r * 48..(r + 1) * 48],
+                grouping.inv_sizes(),
+            );
+            assert!(
+                ((got[r] as f64) - want).abs() / want.max(1e-12) < 5e-5,
+                "row {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_range_equals_materialized_batch() {
+        let (mat, grouping) = setup(32, 3);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 77, 64);
+        let rows = plan.batch(10, 20);
+        let a = sw_batch(&mat, &rows, 20, grouping.inv_sizes(), SwAlgorithm::Brute, 3);
+        let b = sw_plan_range(&mat, &plan, 10, 20, grouping.inv_sizes(), SwAlgorithm::Brute, 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let (mat, grouping) = setup(40, 5);
+        let base = sw_permutations(&mat, &grouping, 3, 41, SwAlgorithm::Tiled { tile: 16 }, 1);
+        for threads in [2, 3, 8] {
+            let got = sw_permutations(&mat, &grouping, 3, 41, SwAlgorithm::Tiled { tile: 16 }, threads);
+            assert_eq!(base, got, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn index_zero_is_observed_statistic() {
+        let (mat, grouping) = setup(36, 4);
+        let got = sw_permutations(&mat, &grouping, 9, 8, SwAlgorithm::Flat, 2);
+        let direct = super::super::kernels::sw_of(SwAlgorithm::Flat, &mat, &grouping);
+        assert!((got[0] - direct).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_and_single_row_edges() {
+        let (mat, grouping) = setup(16, 2);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
+        assert!(sw_plan_range(&mat, &plan, 0, 0, grouping.inv_sizes(), SwAlgorithm::Flat, 4)
+            .is_empty());
+        let one = sw_plan_range(&mat, &plan, 2, 1, grouping.inv_sizes(), SwAlgorithm::Flat, 4);
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    fn resolve_threads_semantics() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(7), 7);
+    }
+}

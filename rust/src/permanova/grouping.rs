@@ -1,0 +1,158 @@
+//! Group labellings: the categorical factor PERMANOVA tests.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A validated assignment of `n` objects to `k` groups.
+///
+/// Carries the derived quantities every kernel needs: per-group counts and
+/// `inv_group_sizes` (the `1/|group|` weights of the paper's inner loop).
+/// Group sizes are invariant under label permutation, so one `Grouping`
+/// serves an entire permutation test.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Grouping {
+    labels: Vec<u32>,
+    counts: Vec<u32>,
+    inv_sizes: Vec<f32>,
+}
+
+impl Grouping {
+    /// Validate and wrap a label vector.  Labels must be `0..k` dense (every
+    /// group non-empty), with `k >= 2` and `n > k` (the F statistic needs
+    /// both degrees of freedom positive).
+    pub fn new(labels: Vec<u32>) -> Result<Self> {
+        let n = labels.len();
+        let k = match labels.iter().max() {
+            Some(&m) => m as usize + 1,
+            None => return Err(Error::InvalidInput("empty grouping".into())),
+        };
+        if k < 2 {
+            return Err(Error::InvalidInput(
+                "PERMANOVA needs at least 2 groups".into(),
+            ));
+        }
+        if n <= k {
+            return Err(Error::InvalidInput(format!(
+                "need n > k for the F statistic (n = {n}, k = {k})"
+            )));
+        }
+        let mut counts = vec![0u32; k];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        if let Some(g) = counts.iter().position(|&c| c == 0) {
+            return Err(Error::InvalidInput(format!(
+                "group {g} is empty (labels must be dense 0..k)"
+            )));
+        }
+        let inv_sizes = counts.iter().map(|&c| 1.0 / c as f32).collect();
+        Ok(Grouping { labels, counts, inv_sizes })
+    }
+
+    /// Balanced assignment: object `i` gets label `i % k`.
+    pub fn balanced(n: usize, k: usize) -> Result<Self> {
+        Self::new((0..n).map(|i| (i % k) as u32).collect())
+    }
+
+    /// Build from arbitrary category values (e.g. metadata strings),
+    /// mapping them to dense labels in first-seen-sorted order.  Returns the
+    /// grouping and the category -> label mapping.
+    pub fn from_categories<S: AsRef<str>>(cats: &[S]) -> Result<(Self, BTreeMap<String, u32>)> {
+        let mut map = BTreeMap::new();
+        for c in cats {
+            let next = map.len() as u32;
+            map.entry(c.as_ref().to_string()).or_insert(next);
+        }
+        // BTreeMap iteration is sorted by category; reassign dense ids in
+        // sorted order so the mapping is stable regardless of input order.
+        let mut sorted: Vec<(&String, &mut u32)> = Vec::new();
+        let mut m2 = map.clone();
+        for (i, (_, v)) in m2.iter_mut().enumerate() {
+            *v = i as u32;
+        }
+        drop(sorted.drain(..));
+        let labels = cats
+            .iter()
+            .map(|c| *m2.get(c.as_ref()).expect("just inserted"))
+            .collect();
+        Ok((Self::new(labels)?, m2))
+    }
+
+    /// Number of objects.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Number of groups.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// The dense label vector.
+    #[inline]
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    /// Objects per group.
+    #[inline]
+    pub fn counts(&self) -> &[u32] {
+        &self.counts
+    }
+
+    /// `1 / |group|` weights (the paper's `inv_group_sizes`).
+    #[inline]
+    pub fn inv_sizes(&self) -> &[f32] {
+        &self.inv_sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_counts() {
+        let g = Grouping::balanced(10, 3).unwrap();
+        assert_eq!(g.n(), 10);
+        assert_eq!(g.k(), 3);
+        assert_eq!(g.counts(), &[4, 3, 3]);
+        assert!((g.inv_sizes()[0] - 0.25).abs() < 1e-7);
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(Grouping::new(vec![]).is_err());
+        assert!(Grouping::new(vec![0, 0, 0, 0]).is_err(), "k = 1");
+        assert!(Grouping::new(vec![0, 1]).is_err(), "n <= k");
+        assert!(Grouping::new(vec![0, 2, 2, 0]).is_err(), "group 1 empty");
+    }
+
+    #[test]
+    fn from_categories_stable_sorted_mapping() {
+        let cats = ["gut", "soil", "gut", "ocean", "soil", "gut"];
+        let (g, map) = Grouping::from_categories(&cats).unwrap();
+        // Sorted order: gut=0, ocean=1, soil=2
+        assert_eq!(map["gut"], 0);
+        assert_eq!(map["ocean"], 1);
+        assert_eq!(map["soil"], 2);
+        assert_eq!(g.labels(), &[0, 2, 0, 1, 2, 0]);
+        assert_eq!(g.counts(), &[3, 1, 2]);
+    }
+
+    #[test]
+    fn from_categories_order_independent() {
+        let (a, _) = Grouping::from_categories(&["x", "y", "x", "z"]).unwrap();
+        let (b, _) = Grouping::from_categories(&["z", "y", "x", "x"]).unwrap();
+        // Same category multiset, different order: same k and count multiset.
+        assert_eq!(a.k(), b.k());
+        let mut ca = a.counts().to_vec();
+        let mut cb = b.counts().to_vec();
+        ca.sort_unstable();
+        cb.sort_unstable();
+        assert_eq!(ca, cb);
+    }
+}

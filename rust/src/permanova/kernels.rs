@@ -1,0 +1,350 @@
+//! The paper's three `permanova_f_stat_sW` kernel formulations, in Rust.
+//!
+//! These are line-for-line ports of the paper's Algorithms 1–3 (modulo Rust
+//! idiom), kept deliberately close to the C++ so the measured CPU-side
+//! comparisons mean what the paper's did:
+//!
+//! * [`sw_brute_one`] — Algorithm 1, the original brute force: row-major
+//!   scan of the strict upper triangle with the `grouping[col] == group_idx`
+//!   branch in the inner loop.
+//! * [`sw_tiled_one`] — Algorithm 2, the CPU cache-tiled variant with the
+//!   hand-split `TILE` loops and the hoisted `inv_group_sizes` access
+//!   (multiply once per row-stripe, not once per element).
+//! * [`sw_flat_one`] — Algorithm 3's *formulation* (branch → predicated
+//!   multiply, the shape GPU and SIMD compilers want), which is what the
+//!   OpenMP target region compiles down to on the GPU.  On the CPU this is
+//!   the autovectorizable variant.
+//!
+//! All variants return identical values up to f32 reduction order; the
+//! brute kernel is also provided with an f64 accumulator ([`sw_brute_f64`])
+//! as the in-crate oracle.
+
+use super::grouping::Grouping;
+use crate::dmat::DistanceMatrix;
+
+/// Which s_W kernel to run — the paper's algorithm axis of Figure 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwAlgorithm {
+    /// Algorithm 1: original brute force (branchy inner loop).
+    Brute,
+    /// Algorithm 2: CPU cache-tiled, with the paper's TILE constant.
+    Tiled { tile: usize },
+    /// Algorithm 3's formulation: predicated/branchless (GPU/SIMD shape).
+    Flat,
+}
+
+impl SwAlgorithm {
+    /// Stable identifier used in configs, manifests and reports.
+    pub fn name(&self) -> String {
+        match self {
+            SwAlgorithm::Brute => "brute".to_string(),
+            SwAlgorithm::Tiled { tile } => format!("tiled{tile}"),
+            SwAlgorithm::Flat => "flat".to_string(),
+        }
+    }
+
+    /// Parse the identifier format produced by [`name`](Self::name); bare
+    /// `"tiled"` uses the paper-informed default tile.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "brute" => Some(SwAlgorithm::Brute),
+            "flat" => Some(SwAlgorithm::Flat),
+            "tiled" => Some(SwAlgorithm::Tiled { tile: DEFAULT_TILE }),
+            _ => s
+                .strip_prefix("tiled")
+                .and_then(|t| t.parse().ok())
+                .filter(|&t| t > 0)
+                .map(|tile| SwAlgorithm::Tiled { tile }),
+        }
+    }
+}
+
+/// Default TILE: 512 columns × 4 B ≈ 2 KiB of `grouping` per stripe plus a
+/// 512-wide row segment of the matrix — comfortably L1-resident, matching
+/// the regime the paper tuned for on Zen 4.
+pub const DEFAULT_TILE: usize = 512;
+
+/// Algorithm 1 — original brute force, f32 accumulation (paper-faithful).
+///
+/// `mat` is the row-major n×n matrix, `grouping` one label row,
+/// `inv_group_sizes` the 1/|group| weights.
+pub fn sw_brute_one(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[f32]) -> f32 {
+    debug_assert_eq!(mat.len(), n * n);
+    debug_assert_eq!(grouping.len(), n);
+    let mut s_w = 0.0f32;
+    for row in 0..n.saturating_sub(1) {
+        // no columns in last row
+        let group_idx = grouping[row];
+        let w = inv_group_sizes[group_idx as usize];
+        let mat_row = &mat[row * n..(row + 1) * n];
+        for col in (row + 1)..n {
+            // diagonal is always zero
+            if grouping[col] == group_idx {
+                let val = mat_row[col];
+                s_w += val * val * w;
+            }
+        }
+    }
+    s_w
+}
+
+/// Algorithm 1 with an f64 accumulator — the in-crate numerical oracle.
+pub fn sw_brute_f64(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[f32]) -> f64 {
+    let mut s_w = 0.0f64;
+    for row in 0..n.saturating_sub(1) {
+        let group_idx = grouping[row];
+        let w = inv_group_sizes[group_idx as usize] as f64;
+        let mat_row = &mat[row * n..(row + 1) * n];
+        let mut local = 0.0f64;
+        for col in (row + 1)..n {
+            if grouping[col] == group_idx {
+                let val = mat_row[col] as f64;
+                local += val * val;
+            }
+        }
+        s_w += local * w;
+    }
+    s_w
+}
+
+/// Algorithm 2 — the paper's hand-tiled CPU variant.
+///
+/// Faithfully reproduces the published loop structure: `TILE`-stepped
+/// `trow`/`tcol` outer loops (note `tcol` starts at `trow + 1`, so column
+/// tiles are *unaligned* — exactly as published), per-row `local_s_W`
+/// accumulation, and the `inv_group_sizes` multiply hoisted to once per
+/// (row, tile) — the access-reuse discovery the paper describes.
+pub fn sw_tiled_one(
+    mat: &[f32],
+    n: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+    tile: usize,
+) -> f32 {
+    debug_assert!(tile > 0);
+    let mut s_w = 0.0f32;
+    let mut trow = 0usize;
+    while trow + 1 < n {
+        // no columns in last row
+        let mut tcol = trow + 1;
+        while tcol < n {
+            // diagonal is always zero
+            let row_end = (trow + tile).min(n - 1);
+            for row in trow..row_end {
+                let min_col = tcol.max(row + 1);
+                let max_col = (tcol + tile).min(n);
+                if min_col >= max_col {
+                    continue;
+                }
+                let mat_row = &mat[row * n..(row + 1) * n];
+                let group_idx = grouping[row];
+                // The paper's inner loop, with the branch if-converted and
+                // eight-lane re-associated so it runs as SIMD FMAs (same
+                // optimization the paper's compilers apply at -O3).
+                let local_s_w =
+                    masked_sum_sq(&mat_row[min_col..max_col], &grouping[min_col..max_col], group_idx);
+                s_w += local_s_w * inv_group_sizes[group_idx as usize];
+            }
+            tcol += tile;
+        }
+        trow += tile;
+    }
+    s_w
+}
+
+/// Algorithm 3's formulation — branch replaced by a predicated multiply.
+///
+/// This is the shape the GPU compiler gives the paper's `collapse(2)
+/// reduction` region.  On the CPU, rustc cannot vectorize a strict-order
+/// f32 reduction, so the row sum is split into eight explicit accumulator
+/// lanes (`masked_sum_sq`) — semantically a fixed re-association, which
+/// LLVM then turns into masked SIMD FMAs.  (Perf pass: 0.59 -> ~2.6
+/// Gelem/s on the dev host; see EXPERIMENTS.md §Perf.)
+pub fn sw_flat_one(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[f32]) -> f32 {
+    let mut s_w = 0.0f32;
+    for row in 0..n.saturating_sub(1) {
+        let group_idx = grouping[row];
+        let w = inv_group_sizes[group_idx as usize];
+        let mat_row = &mat[row * n..(row + 1) * n];
+        let gs = &grouping[(row + 1)..n];
+        let vs = &mat_row[(row + 1)..n];
+        s_w += masked_sum_sq(vs, gs, group_idx) * w;
+    }
+    s_w
+}
+
+/// Eight-lane masked sum of squares: `Σ (g == group) · v²` with a fixed
+/// lane re-association that unlocks SIMD.  Shared by the flat and tiled
+/// kernels' inner loops.
+#[inline]
+fn masked_sum_sq(vs: &[f32], gs: &[u32], group_idx: u32) -> f32 {
+    debug_assert_eq!(vs.len(), gs.len());
+    const LANES: usize = 8;
+    let mut acc = [0.0f32; LANES];
+    let chunks = vs.len() / LANES;
+    for c in 0..chunks {
+        let v = &vs[c * LANES..(c + 1) * LANES];
+        let g = &gs[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            let m = (g[l] == group_idx) as u32 as f32;
+            acc[l] += m * v[l] * v[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * LANES..vs.len() {
+        let m = (gs[i] == group_idx) as u32 as f32;
+        tail += m * vs[i] * vs[i];
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Dispatch one permutation through the chosen algorithm.
+#[inline]
+pub fn sw_one(
+    algo: SwAlgorithm,
+    mat: &[f32],
+    n: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+) -> f32 {
+    match algo {
+        SwAlgorithm::Brute => sw_brute_one(mat, n, grouping, inv_group_sizes),
+        SwAlgorithm::Tiled { tile } => sw_tiled_one(mat, n, grouping, inv_group_sizes, tile),
+        SwAlgorithm::Flat => sw_flat_one(mat, n, grouping, inv_group_sizes),
+    }
+}
+
+/// Convenience wrapper for matrix + grouping types.
+pub fn sw_of(algo: SwAlgorithm, mat: &DistanceMatrix, grouping: &Grouping) -> f32 {
+    sw_one(algo, mat.data(), mat.n(), grouping.labels(), grouping.inv_sizes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmat::DistanceMatrix;
+    use crate::rng::Xoshiro256pp;
+
+    fn hand_case() -> (DistanceMatrix, Vec<u32>, Vec<f32>) {
+        // Same pinned case as the python oracle test:
+        // groups {0,1},{2,3}; d(0,1)=1, d(2,3)=2, cross=9 → s_W = 2.5
+        let mut m = DistanceMatrix::zeros(4);
+        m.set_sym(0, 1, 1.0);
+        m.set_sym(2, 3, 2.0);
+        for i in 0..2 {
+            for j in 2..4 {
+                m.set_sym(i, j, 9.0);
+            }
+        }
+        (m, vec![0, 0, 1, 1], vec![0.5, 0.5])
+    }
+
+    #[test]
+    fn hand_computed_value_all_algorithms() {
+        let (m, g, inv) = hand_case();
+        for algo in [
+            SwAlgorithm::Brute,
+            SwAlgorithm::Flat,
+            SwAlgorithm::Tiled { tile: 1 },
+            SwAlgorithm::Tiled { tile: 2 },
+            SwAlgorithm::Tiled { tile: 3 },
+            SwAlgorithm::Tiled { tile: 64 },
+        ] {
+            let got = sw_one(algo, m.data(), 4, &g, &inv);
+            assert!((got - 2.5).abs() < 1e-6, "{algo:?} -> {got}");
+        }
+        assert!((sw_brute_f64(m.data(), 4, &g, &inv) - 2.5).abs() < 1e-12);
+    }
+
+    fn random_case(n: usize, k: usize, seed: u64) -> (DistanceMatrix, Vec<u32>, Vec<f32>) {
+        let m = DistanceMatrix::random_euclidean(n, 6, seed);
+        let mut rng = Xoshiro256pp::new(seed ^ 0xABCD);
+        let mut labels: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+        crate::rng::shuffle(&mut rng, &mut labels);
+        let mut counts = vec![0u32; k];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        let inv = counts.iter().map(|&c| 1.0 / c as f32).collect();
+        (m, labels, inv)
+    }
+
+    #[test]
+    fn algorithms_agree_on_random_inputs() {
+        for (n, k, seed) in [(7usize, 2usize, 1u64), (32, 4, 2), (65, 3, 3), (128, 8, 4), (200, 5, 5)] {
+            let (m, g, inv) = random_case(n, k, seed);
+            let oracle = sw_brute_f64(m.data(), n, &g, &inv);
+            for algo in [
+                SwAlgorithm::Brute,
+                SwAlgorithm::Flat,
+                SwAlgorithm::Tiled { tile: 16 },
+                SwAlgorithm::Tiled { tile: 37 }, // deliberately awkward tile
+                SwAlgorithm::Tiled { tile: 512 },
+            ] {
+                let got = sw_one(algo, m.data(), n, &g, &inv) as f64;
+                let rel = (got - oracle).abs() / oracle.max(1e-12);
+                assert!(rel < 5e-5, "{algo:?} n={n}: got {got}, oracle {oracle}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_size_is_semantics_invariant() {
+        let (m, g, inv) = random_case(97, 4, 9);
+        let want = sw_tiled_one(m.data(), 97, &g, &inv, 512);
+        for tile in [1, 2, 3, 5, 8, 13, 31, 96, 97, 100, 4096] {
+            let got = sw_tiled_one(m.data(), 97, &g, &inv, tile);
+            assert!(
+                (got - want).abs() / want.max(1e-9) < 5e-5,
+                "tile {tile}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_matrix_gives_zero() {
+        let n = 24;
+        let g: Vec<u32> = (0..n as u32).map(|i| i % 3).collect();
+        let inv = vec![1.0 / 8.0; 3];
+        let m = DistanceMatrix::zeros(n);
+        for algo in [SwAlgorithm::Brute, SwAlgorithm::Flat, SwAlgorithm::Tiled { tile: 8 }] {
+            assert_eq!(sw_one(algo, m.data(), n, &g, &inv), 0.0);
+        }
+    }
+
+    #[test]
+    fn tiny_inputs_dont_panic() {
+        // n = 1 has no pairs at all; n = 2 has exactly one.
+        let g1 = vec![0u32];
+        let inv = vec![1.0f32, 1.0];
+        assert_eq!(sw_brute_one(&[0.0], 1, &g1, &inv), 0.0);
+        assert_eq!(sw_flat_one(&[0.0], 1, &g1, &inv), 0.0);
+        assert_eq!(sw_tiled_one(&[0.0], 1, &g1, &inv, 4), 0.0);
+
+        let m = [0.0f32, 3.0, 3.0, 0.0];
+        let g2 = vec![0u32, 0];
+        let inv2 = vec![0.5f32];
+        for algo in [SwAlgorithm::Brute, SwAlgorithm::Flat, SwAlgorithm::Tiled { tile: 4 }] {
+            let got = sw_one(algo, &m, 2, &g2, &inv2);
+            assert!((got - 4.5).abs() < 1e-6); // 3^2 * 0.5
+        }
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for algo in [
+            SwAlgorithm::Brute,
+            SwAlgorithm::Flat,
+            SwAlgorithm::Tiled { tile: 128 },
+            SwAlgorithm::Tiled { tile: 512 },
+        ] {
+            assert_eq!(SwAlgorithm::parse(&algo.name()), Some(algo));
+        }
+        assert_eq!(
+            SwAlgorithm::parse("tiled"),
+            Some(SwAlgorithm::Tiled { tile: DEFAULT_TILE })
+        );
+        assert_eq!(SwAlgorithm::parse("tiled0"), None);
+        assert_eq!(SwAlgorithm::parse("bogus"), None);
+    }
+}

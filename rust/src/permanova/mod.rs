@@ -1,0 +1,36 @@
+//! PERMANOVA — Permutational Multivariate Analysis of Variance.
+//!
+//! The paper's subject system: a non-parametric test of whether groups of
+//! objects differ, driven by a distance matrix and assessed by permuting
+//! group labels (Anderson 2001).  This module owns:
+//!
+//! * [`Grouping`] — validated categorical factor with `inv_group_sizes`;
+//! * the three kernel formulations of the hot loop (paper Algorithms 1–3):
+//!   [`sw_brute_one`], [`sw_tiled_one`], [`sw_flat_one`], selected via
+//!   [`SwAlgorithm`];
+//! * batched multi-threaded execution ([`sw_batch`], [`sw_plan_range`]) —
+//!   the `permanova_f_stat_sW_T` analog;
+//! * the full statistic ([`permanova`], [`st_of`], [`fstat_from_sw`],
+//!   [`pvalue`]);
+//! * the surrounding workflow: post-hoc [`pairwise_permanova`]
+//!   (Bonferroni), rank-based [`anosim`] (Clarke 1993), and dispersion
+//!   homogeneity [`permdisp`] (Anderson 2006, via PCoA).
+
+mod anosim;
+mod batch;
+mod grouping;
+mod kernels;
+mod pairwise;
+mod permdisp;
+mod stats;
+
+pub use anosim::{anosim, AnosimResult};
+pub use permdisp::{permdisp, PermdispResult};
+pub use batch::{resolve_threads, sw_batch, sw_permutations, sw_plan_range};
+pub use grouping::Grouping;
+pub use kernels::{
+    sw_brute_f64, sw_brute_one, sw_flat_one, sw_of, sw_one, sw_tiled_one, SwAlgorithm,
+    DEFAULT_TILE,
+};
+pub use pairwise::{pairwise_permanova, PairwiseEntry, PairwiseResult};
+pub use stats::{fstat_from_sw, permanova, pvalue, st_of, PermanovaOpts, PermanovaResult};

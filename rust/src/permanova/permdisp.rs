@@ -1,0 +1,222 @@
+//! PERMDISP — homogeneity of multivariate dispersions (Anderson 2006).
+//!
+//! PERMANOVA's required companion check: a significant PERMANOVA can mean
+//! different *locations* or different *spreads*; PERMDISP isolates the
+//! spread.  Following vegan's `betadisper + permutest` (and skbio's
+//! `permdisp`): embed the distance matrix with PCoA, measure each object's
+//! Euclidean distance to its group centroid, then permutation-test the
+//! ANOVA F statistic over those distances.
+
+use super::grouping::Grouping;
+use super::stats::pvalue;
+use crate::dmat::{pcoa, DistanceMatrix};
+use crate::error::{Error, Result};
+use crate::rng::PermutationPlan;
+
+/// Result of a PERMDISP run.
+#[derive(Clone, Debug)]
+pub struct PermdispResult {
+    /// Observed ANOVA F over distances-to-centroid.
+    pub f_obs: f64,
+    pub p_value: f64,
+    pub n_perms: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Mean distance-to-centroid per group (the dispersions under test).
+    pub group_dispersions: Vec<f64>,
+}
+
+/// ANOVA F over `values` grouped by `labels` (k groups, all non-empty).
+fn anova_f(values: &[f64], labels: &[u32], k: usize) -> f64 {
+    let n = values.len();
+    let mut sums = vec![0.0f64; k];
+    let mut counts = vec![0usize; k];
+    for (&v, &g) in values.iter().zip(labels) {
+        sums[g as usize] += v;
+        counts[g as usize] += 1;
+    }
+    let grand = values.iter().sum::<f64>() / n as f64;
+    let mut ss_between = 0.0f64;
+    for g in 0..k {
+        let mean_g = sums[g] / counts[g] as f64;
+        ss_between += counts[g] as f64 * (mean_g - grand) * (mean_g - grand);
+    }
+    let mut ss_within = 0.0f64;
+    for (&v, &g) in values.iter().zip(labels) {
+        let mean_g = sums[g as usize] / counts[g as usize] as f64;
+        ss_within += (v - mean_g) * (v - mean_g);
+    }
+    if ss_within <= 0.0 {
+        return f64::INFINITY;
+    }
+    (ss_between / (k as f64 - 1.0)) / (ss_within / (n as f64 - k as f64))
+}
+
+/// Run PERMDISP with `n_perms` label permutations.
+pub fn permdisp(
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    n_perms: usize,
+    seed: u64,
+) -> Result<PermdispResult> {
+    if grouping.n() != mat.n() {
+        return Err(Error::InvalidInput(format!(
+            "grouping n = {} vs matrix n = {}",
+            grouping.n(),
+            mat.n()
+        )));
+    }
+    if n_perms == 0 {
+        return Err(Error::InvalidInput("n_perms must be >= 1".into()));
+    }
+    let n = mat.n();
+    let k = grouping.k();
+    let labels = grouping.labels();
+
+    // Embed and compute distance of every object to its group centroid.
+    let emb = pcoa(mat, 0)?;
+    let na = emb.n_axes;
+    let mut centroids = vec![0.0f64; k * na];
+    for (i, &g) in labels.iter().enumerate() {
+        for a in 0..na {
+            centroids[g as usize * na + a] += emb.coord(i, a);
+        }
+    }
+    for g in 0..k {
+        let c = grouping.counts()[g] as f64;
+        for a in 0..na {
+            centroids[g * na + a] /= c;
+        }
+    }
+    let dists: Vec<f64> = labels
+        .iter()
+        .enumerate()
+        .map(|(i, &g)| {
+            (0..na)
+                .map(|a| {
+                    let d = emb.coord(i, a) - centroids[g as usize * na + a];
+                    d * d
+                })
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+
+    let group_dispersions: Vec<f64> = (0..k)
+        .map(|g| {
+            let (s, c) = labels
+                .iter()
+                .zip(&dists)
+                .filter(|(&l, _)| l as usize == g)
+                .fold((0.0, 0usize), |(s, c), (_, &d)| (s + d, c + 1));
+            s / c as f64
+        })
+        .collect();
+
+    // Permutation test: shuffle which group each distance belongs to
+    // (vegan's permutest on the betadisper residuals).
+    let plan = PermutationPlan::new(labels.to_vec(), seed, n_perms + 1);
+    let mut row = vec![0u32; n];
+    let mut f_all = Vec::with_capacity(n_perms + 1);
+    for i in 0..n_perms + 1 {
+        plan.fill(i, &mut row);
+        f_all.push(anova_f(&dists, &row, k));
+    }
+    let f_obs = f_all[0];
+    Ok(PermdispResult {
+        f_obs,
+        p_value: pvalue(f_obs, &f_all[1..]),
+        n_perms,
+        n,
+        k,
+        group_dispersions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    /// Two groups with equal spread but different location.
+    fn location_only() -> (DistanceMatrix, Grouping) {
+        let n = 40;
+        let mut rng = Xoshiro256pp::new(8);
+        // Points on a line: group 0 near 0, group 1 near 10, same jitter.
+        let pts: Vec<f64> = (0..n)
+            .map(|i| if i % 2 == 0 { 0.0 } else { 10.0 } + rng.next_f64())
+            .collect();
+        let mut mat = DistanceMatrix::zeros(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                mat.set_sym(i, j, (pts[i] - pts[j]).abs() as f32);
+            }
+        }
+        (mat, Grouping::new((0..n).map(|i| (i % 2) as u32).collect()).unwrap())
+    }
+
+    /// Two groups, same center, very different spread.
+    fn dispersion_only() -> (DistanceMatrix, Grouping) {
+        let n = 40;
+        let mut rng = Xoshiro256pp::new(9);
+        let pts: Vec<f64> = (0..n)
+            .map(|i| {
+                let spread = if i % 2 == 0 { 0.1 } else { 5.0 };
+                (rng.next_f64() - 0.5) * 2.0 * spread
+            })
+            .collect();
+        let mut mat = DistanceMatrix::zeros(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                mat.set_sym(i, j, (pts[i] - pts[j]).abs() as f32);
+            }
+        }
+        (mat, Grouping::new((0..n).map(|i| (i % 2) as u32).collect()).unwrap())
+    }
+
+    #[test]
+    fn location_shift_is_not_dispersion() {
+        let (mat, grouping) = location_only();
+        let r = permdisp(&mat, &grouping, 199, 3).unwrap();
+        assert!(r.p_value > 0.05, "equal spreads must pass: p = {}", r.p_value);
+        // ... while PERMANOVA on the same data fires (it's a location test).
+        let p = super::super::stats::permanova(
+            &mat,
+            &grouping,
+            199,
+            &super::super::stats::PermanovaOpts::default(),
+        )
+        .unwrap();
+        assert!(p.p_value <= 0.01);
+    }
+
+    #[test]
+    fn dispersion_difference_detected() {
+        let (mat, grouping) = dispersion_only();
+        let r = permdisp(&mat, &grouping, 199, 4).unwrap();
+        assert!(r.p_value <= 0.01, "different spreads must fail: p = {}", r.p_value);
+        assert!(r.group_dispersions[1] > 5.0 * r.group_dispersions[0]);
+    }
+
+    #[test]
+    fn anova_f_hand_case() {
+        // groups: {1, 2} mean 1.5, {5, 6} mean 5.5; grand 3.5
+        // ss_between = 2*(2)^2 * 2 = 16; ss_within = 4*0.25 = 1
+        // F = (16/1)/(1/2) = 32
+        let f = anova_f(&[1.0, 2.0, 5.0, 6.0], &[0, 0, 1, 1], 2);
+        assert!((f - 32.0).abs() < 1e-10, "{f}");
+    }
+
+    #[test]
+    fn deterministic_and_validated() {
+        let (mat, grouping) = dispersion_only();
+        let a = permdisp(&mat, &grouping, 99, 7).unwrap();
+        let b = permdisp(&mat, &grouping, 99, 7).unwrap();
+        assert_eq!(a.p_value, b.p_value);
+        assert_eq!(a.group_dispersions, b.group_dispersions);
+
+        let g_bad = Grouping::balanced(99, 3).unwrap();
+        assert!(permdisp(&mat, &g_bad, 9, 1).is_err());
+        assert!(permdisp(&mat, &grouping, 0, 1).is_err());
+    }
+}

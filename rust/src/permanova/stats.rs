@@ -1,0 +1,250 @@
+//! The full PERMANOVA statistic: s_T, pseudo-F, permutation p-value.
+//!
+//! The paper benchmarks only the s_W hot loop ("the other steps add minimal
+//! overhead"); a production library still needs them, so here they are —
+//! skbio-compatible semantics throughout:
+//!
+//! * `s_T = Σ_{i<j} d²_ij / n`
+//! * `s_W = Σ_{i<j, same group} d²_ij / |group|`
+//! * `s_A = s_T − s_W`,  `F = (s_A/(k−1)) / (s_W/(n−k))`
+//! * `p = (1 + #{F_perm ≥ F_obs}) / (1 + P)`
+
+use std::time::Instant;
+
+use super::batch::{resolve_threads, sw_plan_range};
+use super::grouping::Grouping;
+use super::kernels::{SwAlgorithm, DEFAULT_TILE};
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+use crate::rng::PermutationPlan;
+
+/// Total sum of squares `s_T` (f64 accumulation; permutation-invariant).
+pub fn st_of(mat: &DistanceMatrix) -> f64 {
+    let n = mat.n();
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        let row = mat.row(i);
+        let mut local = 0.0f64;
+        for &v in &row[i + 1..] {
+            local += (v as f64) * (v as f64);
+        }
+        acc += local;
+    }
+    acc / n as f64
+}
+
+/// Pseudo-F from a partial statistic.
+#[inline]
+pub fn fstat_from_sw(s_w: f64, s_t: f64, n: usize, k: usize) -> f64 {
+    let s_a = s_t - s_w;
+    (s_a / (k as f64 - 1.0)) / (s_w / (n as f64 - k as f64))
+}
+
+/// Permutation p-value, skbio semantics (observed value participates).
+pub fn pvalue(f_obs: f64, f_perms: &[f64]) -> f64 {
+    let ge = f_perms.iter().filter(|&&f| f >= f_obs).count();
+    (1.0 + ge as f64) / (1.0 + f_perms.len() as f64)
+}
+
+/// Options for a PERMANOVA run.
+#[derive(Clone, Debug)]
+pub struct PermanovaOpts {
+    /// Which s_W kernel formulation to use.
+    pub algo: SwAlgorithm,
+    /// Worker threads (0 = all available).
+    pub threads: usize,
+    /// RNG seed for the permutation plan.
+    pub seed: u64,
+    /// Retain the permuted F distribution in the result.
+    pub keep_f_perms: bool,
+}
+
+impl Default for PermanovaOpts {
+    fn default() -> Self {
+        PermanovaOpts {
+            algo: SwAlgorithm::Tiled { tile: DEFAULT_TILE },
+            threads: 0,
+            seed: 0x5EED_CAFE,
+            keep_f_perms: false,
+        }
+    }
+}
+
+/// Result of a PERMANOVA run.
+#[derive(Clone, Debug)]
+pub struct PermanovaResult {
+    /// Observed pseudo-F.
+    pub f_obs: f64,
+    /// Permutation p-value.
+    pub p_value: f64,
+    /// Number of label permutations tested (excluding the observed).
+    pub n_perms: usize,
+    /// Objects / groups of the test.
+    pub n: usize,
+    pub k: usize,
+    /// Total sum of squares (diagnostic).
+    pub s_t: f64,
+    /// Observed partial statistic (diagnostic).
+    pub s_w_obs: f64,
+    /// Kernel used.
+    pub algo: String,
+    /// Threads used.
+    pub threads: usize,
+    /// Wall time of the permutation sweep.
+    pub elapsed_secs: f64,
+    /// The permuted F distribution, if requested.
+    pub f_perms: Option<Vec<f64>>,
+}
+
+/// Run the complete PERMANOVA test.
+///
+/// `n_perms` is the number of *random* permutations (999, 3999, ... by
+/// convention 10^x − 1 so that (1+P) is round); the observed labelling is
+/// index 0 of the plan and is not double-counted.
+pub fn permanova(
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    n_perms: usize,
+    opts: &PermanovaOpts,
+) -> Result<PermanovaResult> {
+    if grouping.n() != mat.n() {
+        return Err(Error::InvalidInput(format!(
+            "grouping has {} objects, matrix has {}",
+            grouping.n(),
+            mat.n()
+        )));
+    }
+    if n_perms == 0 {
+        return Err(Error::InvalidInput("n_perms must be >= 1".into()));
+    }
+    let n = mat.n();
+    let k = grouping.k();
+    let threads = resolve_threads(opts.threads);
+    let start = Instant::now();
+
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), opts.seed, n_perms + 1);
+    let s_w_all = sw_plan_range(mat, &plan, 0, n_perms + 1, grouping.inv_sizes(), opts.algo, threads);
+
+    let s_t = st_of(mat);
+    let f_all: Vec<f64> = s_w_all
+        .iter()
+        .map(|&sw| fstat_from_sw(sw as f64, s_t, n, k))
+        .collect();
+    let f_obs = f_all[0];
+    let f_perms = &f_all[1..];
+    let p_value = pvalue(f_obs, f_perms);
+
+    Ok(PermanovaResult {
+        f_obs,
+        p_value,
+        n_perms,
+        n,
+        k,
+        s_t,
+        s_w_obs: s_w_all[0] as f64,
+        algo: opts.algo.name(),
+        threads,
+        elapsed_secs: start.elapsed().as_secs_f64(),
+        f_perms: if opts.keep_f_perms { Some(f_perms.to_vec()) } else { None },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn st_hand_computed() {
+        // d(0,1)=1, d(0,2)=2, d(1,2)=2; n=3 → s_T = (1+4+4)/3 = 3
+        let mut m = DistanceMatrix::zeros(3);
+        m.set_sym(0, 1, 1.0);
+        m.set_sym(0, 2, 2.0);
+        m.set_sym(1, 2, 2.0);
+        assert!((st_of(&m) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fstat_identity() {
+        // s_t=10, s_w=4, n=10, k=3: F = (6/2)/(4/7) = 5.25
+        assert!((fstat_from_sw(4.0, 10.0, 10, 3) - 5.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pvalue_edges() {
+        let perms = vec![1.0, 2.0, 3.0, 4.0];
+        assert!((pvalue(5.0, &perms) - 0.2).abs() < 1e-12); // above all: 1/5
+        assert!((pvalue(0.0, &perms) - 1.0).abs() < 1e-12); // below all
+        assert!((pvalue(3.0, &perms) - 0.6).abs() < 1e-12); // ties count (>=)
+    }
+
+    #[test]
+    fn planted_structure_detected() {
+        let n = 60;
+        let k = 3;
+        let mat = DistanceMatrix::planted_blocks(n, k, 0.1, 1.0, 7);
+        let labels: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+        let grouping = Grouping::new(labels).unwrap();
+        let res = permanova(&mat, &grouping, 199, &PermanovaOpts::default()).unwrap();
+        assert!(res.f_obs > 10.0, "F = {}", res.f_obs);
+        assert!((res.p_value - 1.0 / 200.0).abs() < 1e-9, "p = {}", res.p_value);
+    }
+
+    #[test]
+    fn null_data_gives_large_p() {
+        let n = 50;
+        let mat = DistanceMatrix::random_euclidean(n, 8, 21);
+        let grouping = Grouping::balanced(n, 5).unwrap();
+        let res = permanova(&mat, &grouping, 499, &PermanovaOpts::default()).unwrap();
+        assert!(res.p_value > 0.01, "p = {}", res.p_value);
+    }
+
+    #[test]
+    fn result_is_seed_deterministic_and_algo_invariant() {
+        let mat = DistanceMatrix::random_euclidean(40, 6, 2);
+        let grouping = Grouping::balanced(40, 4).unwrap();
+        let mk = |algo, seed| {
+            permanova(
+                &mat,
+                &grouping,
+                99,
+                &PermanovaOpts { algo, seed, threads: 2, keep_f_perms: true },
+            )
+            .unwrap()
+        };
+        let a = mk(SwAlgorithm::Brute, 5);
+        let b = mk(SwAlgorithm::Brute, 5);
+        assert_eq!(a.p_value, b.p_value);
+        assert_eq!(a.f_perms, b.f_perms);
+        // Different algorithm, same seed: same permutations, near-same stats.
+        let c = mk(SwAlgorithm::Tiled { tile: 8 }, 5);
+        assert!((a.f_obs - c.f_obs).abs() / a.f_obs < 1e-4);
+        assert_eq!(a.p_value, c.p_value);
+        // Different seed: different permutation draw.
+        let d = mk(SwAlgorithm::Brute, 6);
+        assert_ne!(a.f_perms, d.f_perms);
+    }
+
+    #[test]
+    fn input_validation() {
+        let mat = DistanceMatrix::random_euclidean(10, 4, 1);
+        let g12 = Grouping::balanced(12, 3).unwrap();
+        assert!(permanova(&mat, &g12, 99, &PermanovaOpts::default()).is_err());
+        let g10 = Grouping::balanced(10, 2).unwrap();
+        assert!(permanova(&mat, &g10, 0, &PermanovaOpts::default()).is_err());
+    }
+
+    #[test]
+    fn keep_f_perms_length() {
+        let mat = DistanceMatrix::random_euclidean(16, 4, 3);
+        let grouping = Grouping::balanced(16, 2).unwrap();
+        let res = permanova(
+            &mat,
+            &grouping,
+            49,
+            &PermanovaOpts { keep_f_perms: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(res.f_perms.as_ref().unwrap().len(), 49);
+        assert_eq!(res.n_perms, 49);
+    }
+}

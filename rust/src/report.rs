@@ -1,0 +1,177 @@
+//! Report rendering: tables, horizontal bar charts, markdown fragments.
+//!
+//! Everything the CLI, examples and benches print goes through here so the
+//! output of `cargo bench` lines up with what EXPERIMENTS.md records.
+
+use std::fmt::Write as _;
+
+/// A simple aligned text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header count).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Convenience for &str cells.
+    pub fn row_str(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as aligned plain text (first column left, rest right).
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                if i == 0 {
+                    let _ = write!(out, "{:<width$}", c, width = w[i]);
+                } else {
+                    let _ = write!(out, "{:>width$}", c, width = w[i]);
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &mut out);
+        let total: usize = w.iter().sum::<usize>() + 2 * (w.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavoured markdown table (for EXPERIMENTS.md).
+    pub fn render_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+}
+
+/// Horizontal bar chart (the paper's Figure 1 format: label, value, bar;
+/// lower is better, bars scaled to the max).
+pub fn bar_chart(title: &str, items: &[(String, f64)], unit: &str, width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("{title}\n");
+    for (label, v) in items {
+        let bar = if max > 0.0 {
+            (((v / max) * width as f64).round() as usize).max(1)
+        } else {
+            1
+        };
+        let _ = writeln!(
+            out,
+            "{:<label_w$} {:>9.2}{} |{}",
+            label,
+            v,
+            unit,
+            "#".repeat(bar)
+        );
+    }
+    out
+}
+
+/// Format a byte count with binary units.
+pub fn format_bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row_str(&["alpha", "1"]).row_str(&["b", "22222"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[1].starts_with('-'));
+        // Right-aligned value column: both data lines same width.
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_wrong_arity() {
+        Table::new(&["a", "b"]).row_str(&["only one"]);
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["x", "y"]);
+        t.row_str(&["1", "2"]);
+        let md = t.render_markdown();
+        assert!(md.starts_with("| x | y |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn bar_chart_scaling() {
+        let items = vec![("slow".to_string(), 10.0), ("fast".to_string(), 2.5)];
+        let s = bar_chart("t", &items, "s", 40);
+        let slow_bar = s.lines().find(|l| l.starts_with("slow")).unwrap();
+        let fast_bar = s.lines().find(|l| l.starts_with("fast")).unwrap();
+        let count = |l: &str| l.chars().filter(|&c| c == '#').count();
+        assert_eq!(count(slow_bar), 40);
+        assert_eq!(count(fast_bar), 10);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(2048), "2.00 KiB");
+        assert_eq!(format_bytes(5_057_000_000_000), "4.60 TiB");
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: load AOT artifacts, keep buffers device-resident, execute.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT) following the
+//! reference wiring in /opt/xla-example: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
+//!
+//! Design notes:
+//! * HLO **text** interchange only — serialized jax>=0.5 protos carry
+//!   64-bit instruction ids this XLA rejects (manifest enforces it).
+//! * The distance matrix and `inv_group_sizes` are uploaded **once** per
+//!   [`KernelSession`] and stay device-resident; per-batch traffic is just
+//!   the `(batch, n)` grouping rows — the same "python never on the request
+//!   path, matrix never re-staged" discipline the L3 hot loop needs.
+//! * The PJRT wrappers are not `Send`; a session lives on one thread.  The
+//!   coordinator gives the XLA backend a dedicated worker.
+//! * Problems smaller than the lowered shape are padded (zero distances,
+//!   label 0): padding contributes exactly 0 to s_W, and the true
+//!   `n_eff` / `k_eff` are runtime scalar inputs to the artifact, so s_T's
+//!   normalization and the F statistic's degrees of freedom stay exact.
+
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::error::{Error, Result};
+use crate::permanova::Grouping;
+
+/// The runtime: one PJRT client + the artifact manifest.
+pub struct XlaRuntime {
+    client: PjRtClient,
+    manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(XlaRuntime { client, manifest })
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact (text -> proto -> executable).
+    pub fn compile(&self, meta: &ArtifactMeta) -> Result<PjRtLoadedExecutable> {
+        let path = self.manifest.path_of(meta);
+        let proto = HloModuleProto::from_text_file(&path)?;
+        let comp = XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Open an execution session: pick the best-fitting artifact for
+    /// `(kernel, n)`, compile it, and stage the matrix + weights on device.
+    ///
+    /// `mat` is the row-major n×n distance matrix; `grouping` supplies the
+    /// label universe (k) and `inv_group_sizes`.
+    pub fn session(
+        &self,
+        kernel: &str,
+        mat: &[f32],
+        n: usize,
+        grouping: &Grouping,
+    ) -> Result<KernelSession<'_>> {
+        if mat.len() != n * n {
+            return Err(Error::InvalidInput(format!(
+                "matrix buffer {} != {n}x{n}",
+                mat.len()
+            )));
+        }
+        let meta = self
+            .manifest
+            .best_fit(kernel, n)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no artifact for kernel {kernel:?} with n_dims >= {n}; run `make artifacts` \
+                     or add the shape to python/compile/aot.py CONFIGS"
+                ))
+            })?
+            .clone();
+        if grouping.k() > meta.n_groups {
+            return Err(Error::Artifact(format!(
+                "grouping has {} groups but artifact {} was lowered for {}",
+                grouping.k(),
+                meta.name,
+                meta.n_groups
+            )));
+        }
+        let exe = self.compile(&meta)?;
+
+        // Stage the (padded) matrix.
+        let np = meta.n_dims;
+        let mat_buf = if np == n {
+            self.client.buffer_from_host_buffer(mat, &[np, np], None)?
+        } else {
+            let mut padded = vec![0.0f32; np * np];
+            for r in 0..n {
+                padded[r * np..r * np + n].copy_from_slice(&mat[r * n..(r + 1) * n]);
+            }
+            self.client.buffer_from_host_buffer(&padded, &[np, np], None)?
+        };
+
+        // Stage inv_group_sizes, zero-padded to the artifact's k (empty
+        // groups have no members; weight 0 keeps the matmul kernel's
+        // 0 * w products finite).
+        let mut igs = vec![0.0f32; meta.n_groups];
+        igs[..grouping.k()].copy_from_slice(grouping.inv_sizes());
+        let igs_buf = self.client.buffer_from_host_buffer(&igs, &[meta.n_groups], None)?;
+
+        // The true problem size, as runtime scalars.
+        let n_eff_buf = self
+            .client
+            .buffer_from_host_buffer(&[n as f32], &[], None)?;
+        let k_eff_buf = self
+            .client
+            .buffer_from_host_buffer(&[grouping.k() as f32], &[], None)?;
+
+        Ok(KernelSession {
+            client: &self.client,
+            exe,
+            meta,
+            mat_buf,
+            igs_buf,
+            n_eff_buf,
+            k_eff_buf,
+            n_true: n,
+        })
+    }
+}
+
+/// One batch's outputs.
+#[derive(Clone, Debug)]
+pub struct BatchOut {
+    /// Pseudo-F per permutation row (computed in-graph with the true n, k).
+    pub f_stats: Vec<f64>,
+    /// Raw s_W per permutation row (exact — padding contributes zero).
+    pub s_w: Vec<f32>,
+}
+
+/// A compiled kernel with device-resident matrix and weights.
+pub struct KernelSession<'rt> {
+    client: &'rt PjRtClient,
+    exe: PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    mat_buf: PjRtBuffer,
+    igs_buf: PjRtBuffer,
+    n_eff_buf: PjRtBuffer,
+    k_eff_buf: PjRtBuffer,
+    n_true: usize,
+}
+
+impl<'rt> KernelSession<'rt> {
+    /// The artifact backing this session.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Max permutation rows per execution (the artifact's lowered batch).
+    pub fn batch_capacity(&self) -> usize {
+        self.meta.batch
+    }
+
+    /// Execute one batch of `rows` label rows (row-major `rows * n_true`).
+    ///
+    /// `rows` may be less than [`batch_capacity`](Self::batch_capacity);
+    /// the remainder is filled with copies of row 0 and dropped from the
+    /// output.
+    pub fn run_batch(&self, groupings: &[u32], rows: usize) -> Result<BatchOut> {
+        let n = self.n_true;
+        let np = self.meta.n_dims;
+        let b = self.meta.batch;
+        if rows == 0 || rows > b {
+            return Err(Error::InvalidInput(format!(
+                "rows = {rows} out of range 1..={b}"
+            )));
+        }
+        if groupings.len() != rows * n {
+            return Err(Error::InvalidInput(format!(
+                "groupings buffer {} != {rows}x{n}",
+                groupings.len()
+            )));
+        }
+
+        // Pack into the artifact's (b, np) i32 layout; pad columns with
+        // label 0 (zero-distance padding objects) and rows with row 0.
+        let mut grp = vec![0i32; b * np];
+        for r in 0..b {
+            let src_row = if r < rows { r } else { 0 };
+            let src = &groupings[src_row * n..(src_row + 1) * n];
+            let dst = &mut grp[r * np..r * np + n];
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = s as i32;
+            }
+        }
+        let grp_buf = self.client.buffer_from_host_buffer(&grp, &[b, np], None)?;
+
+        let outs = self.exe.execute_b(&[
+            &self.mat_buf,
+            &grp_buf,
+            &self.igs_buf,
+            &self.n_eff_buf,
+            &self.k_eff_buf,
+        ])?;
+        let tuple = outs[0][0].to_literal_sync()?;
+        let (f_lit, sw_lit) = tuple.to_tuple2()?;
+        let f_raw = f_lit.to_vec::<f32>()?;
+        let s_w_all = sw_lit.to_vec::<f32>()?;
+
+        Ok(BatchOut {
+            f_stats: f_raw[..rows].iter().map(|&f| f as f64).collect(),
+            s_w: s_w_all[..rows].to_vec(),
+        })
+    }
+}
+

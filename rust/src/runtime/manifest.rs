@@ -1,0 +1,200 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! lowered HLO module (kernel variant, shapes, dtypes, file).  The runtime
+//! reads it once; artifact lookup is by `(kernel, n_dims)` with the batch
+//! size coming along for the scheduler to honour.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::jsonio::Json;
+
+/// Manifest schema version this runtime understands.
+pub const SUPPORTED_VERSION: usize = 1;
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    /// Kernel variant: bruteforce | tiled | matmul | ref.
+    pub kernel: String,
+    /// Matrix edge the module was lowered for.
+    pub n_dims: usize,
+    /// Permutation rows per execution.
+    pub batch: usize,
+    /// Number of groups (one-hot width / F-statistic dof).
+    pub n_groups: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    dir: PathBuf,
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let doc = Json::parse(text)?;
+        let version = doc.req_usize("version")?;
+        if version != SUPPORTED_VERSION {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported (runtime supports {SUPPORTED_VERSION})"
+            )));
+        }
+        let interchange = doc.req_str("interchange")?;
+        if interchange != "hlo-text" {
+            return Err(Error::Artifact(format!(
+                "interchange {interchange:?} unsupported (xla_extension 0.5.1 requires hlo-text; \
+                 serialized protos with 64-bit ids are rejected)"
+            )));
+        }
+        let artifacts = doc
+            .req_arr("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    name: a.req_str("name")?.to_string(),
+                    file: a.req_str("file")?.to_string(),
+                    kernel: a.req_str("kernel")?.to_string(),
+                    n_dims: a.req_usize("n_dims")?,
+                    batch: a.req_usize("batch")?,
+                    n_groups: a.req_usize("n_groups")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("manifest lists no artifacts".into()));
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// All artifacts.
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    /// Artifacts of one kernel variant.
+    pub fn by_kernel(&self, kernel: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kernel == kernel).collect()
+    }
+
+    /// Exact lookup.
+    pub fn find(&self, kernel: &str, n_dims: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.kernel == kernel && a.n_dims == n_dims)
+    }
+
+    /// The artifact to use for a problem of size `n_dims`: exact match, or
+    /// the smallest lowered size that fits (inputs are padded up to it).
+    pub fn best_fit(&self, kernel: &str, n_dims: usize) -> Option<&ArtifactMeta> {
+        self.by_kernel(kernel)
+            .into_iter()
+            .filter(|a| a.n_dims >= n_dims)
+            .min_by_key(|a| a.n_dims)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// Verify every listed file exists and is non-empty.
+    pub fn verify_files(&self) -> Result<()> {
+        for a in &self.artifacts {
+            let p = self.path_of(a);
+            let md = std::fs::metadata(&p)
+                .map_err(|e| Error::io(p.display().to_string(), e))?;
+            if md.len() == 0 {
+                return Err(Error::Artifact(format!("{} is empty", p.display())));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "version": 1,
+          "interchange": "hlo-text",
+          "artifacts": [
+            {"name": "matmul_n64_b16_k4", "file": "matmul_n64_b16_k4.hlo.txt",
+             "kernel": "matmul", "n_dims": 64, "batch": 16, "n_groups": 4,
+             "inputs": [], "outputs": []},
+            {"name": "matmul_n256_b32_k8", "file": "matmul_n256_b32_k8.hlo.txt",
+             "kernel": "matmul", "n_dims": 256, "batch": 32, "n_groups": 8,
+             "inputs": [], "outputs": []},
+            {"name": "tiled_n256_b32_k8", "file": "tiled_n256_b32_k8.hlo.txt",
+             "kernel": "tiled", "n_dims": 256, "batch": 32, "n_groups": 8,
+             "inputs": [], "outputs": []}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_and_query() {
+        let m = Manifest::parse(&sample_json(), PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts().len(), 3);
+        assert_eq!(m.by_kernel("matmul").len(), 2);
+        let a = m.find("matmul", 64).unwrap();
+        assert_eq!(a.batch, 16);
+        assert!(m.find("matmul", 128).is_none());
+        assert_eq!(m.path_of(a), PathBuf::from("/tmp/a/matmul_n64_b16_k4.hlo.txt"));
+    }
+
+    #[test]
+    fn best_fit_rounds_up() {
+        let m = Manifest::parse(&sample_json(), PathBuf::from(".")).unwrap();
+        assert_eq!(m.best_fit("matmul", 64).unwrap().n_dims, 64);
+        assert_eq!(m.best_fit("matmul", 65).unwrap().n_dims, 256);
+        assert_eq!(m.best_fit("matmul", 100).unwrap().n_dims, 256);
+        assert!(m.best_fit("matmul", 1000).is_none());
+        assert!(m.best_fit("bogus", 64).is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version_or_interchange() {
+        let bad_v = sample_json().replace("\"version\": 1", "\"version\": 99");
+        assert!(Manifest::parse(&bad_v, PathBuf::from(".")).is_err());
+        let bad_i = sample_json().replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad_i, PathBuf::from(".")).is_err());
+        assert!(Manifest::parse(
+            r#"{"version":1,"interchange":"hlo-text","artifacts":[]}"#,
+            PathBuf::from(".")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn loads_real_generated_manifest_if_present() {
+        // When `make artifacts` has run, the real manifest must parse and
+        // its files must verify.  Skips silently in a clean checkout.
+        let dir = crate::runtime::artifacts_dir_for_tests();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts().is_empty());
+            m.verify_files().unwrap();
+            // The shapes aot.py promises.
+            assert!(m.find("matmul", 64).is_some());
+            assert!(m.find("bruteforce", 256).is_some());
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! XLA/PJRT runtime: the L3 side of the AOT bridge.
+//!
+//! `python/compile/aot.py` lowers the L2 PERMANOVA batch graph (with the L1
+//! Pallas kernels inlined) to HLO text once at build time; this module
+//! loads those artifacts, compiles them on the PJRT CPU client, and runs
+//! them with device-resident inputs.  Python is never on the request path.
+
+mod client;
+mod manifest;
+
+pub use client::{BatchOut, KernelSession, XlaRuntime};
+pub use manifest::{ArtifactMeta, Manifest, SUPPORTED_VERSION};
+
+/// Locate the artifacts directory for in-crate tests: honours
+/// `PERMANOVA_APU_ARTIFACTS`, falling back to `<repo>/artifacts` relative
+/// to the crate manifest.
+pub fn artifacts_dir_for_tests() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("PERMANOVA_APU_ARTIFACTS") {
+        return dir.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(crate::DEFAULT_ARTIFACTS_DIR)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmat::DistanceMatrix;
+    use crate::permanova::{
+        fstat_from_sw, st_of, sw_brute_f64, Grouping,
+    };
+    use crate::rng::PermutationPlan;
+
+    fn runtime() -> Option<XlaRuntime> {
+        let dir = artifacts_dir_for_tests();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping xla runtime test: no artifacts at {dir:?}");
+            return None;
+        }
+        Some(XlaRuntime::new(dir).expect("runtime"))
+    }
+
+    /// End-to-end parity: the XLA artifact must agree with the native Rust
+    /// oracle on identical inputs — the core cross-layer correctness test.
+    #[test]
+    fn xla_matches_native_exact_shape() {
+        let Some(rt) = runtime() else { return };
+        let n = 64;
+        let k = 4;
+        let mat = DistanceMatrix::random_euclidean(n, 8, 77);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 5, 16);
+        let rows = plan.batch(0, 16);
+
+        for kernel in ["bruteforce", "tiled", "matmul", "ref"] {
+            let sess = rt.session(kernel, mat.data(), n, &grouping).unwrap();
+            assert_eq!(sess.meta().n_dims, 64);
+            let out = sess.run_batch(&rows, 16).unwrap();
+            let s_t = st_of(&mat);
+            for r in 0..16 {
+                let want_sw =
+                    sw_brute_f64(mat.data(), n, &rows[r * n..(r + 1) * n], grouping.inv_sizes());
+                let got_sw = out.s_w[r] as f64;
+                assert!(
+                    (got_sw - want_sw).abs() / want_sw.max(1e-9) < 1e-4,
+                    "{kernel} row {r}: sw {got_sw} vs {want_sw}"
+                );
+                let want_f = fstat_from_sw(want_sw, s_t, n, k);
+                assert!(
+                    (out.f_stats[r] - want_f).abs() / want_f.abs().max(1e-9) < 1e-3,
+                    "{kernel} row {r}: f {} vs {want_f}",
+                    out.f_stats[r]
+                );
+            }
+        }
+    }
+
+    /// Padded path: a 50-object problem through the 64-lowered artifact.
+    #[test]
+    fn xla_padded_problem_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let n = 50;
+        let k = 3;
+        let mat = DistanceMatrix::random_euclidean(n, 6, 123);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 9, 8);
+        let rows = plan.batch(0, 8);
+
+        let sess = rt.session("matmul", mat.data(), n, &grouping).unwrap();
+        assert_eq!(sess.meta().n_dims, 64, "best-fit rounds up");
+        let out = sess.run_batch(&rows, 8).unwrap();
+        let s_t = st_of(&mat);
+        for r in 0..8 {
+            let want_sw =
+                sw_brute_f64(mat.data(), n, &rows[r * n..(r + 1) * n], grouping.inv_sizes());
+            assert!(
+                ((out.s_w[r] as f64) - want_sw).abs() / want_sw.max(1e-9) < 1e-4,
+                "row {r}"
+            );
+            let want_f = fstat_from_sw(want_sw, s_t, n, k);
+            assert!(
+                (out.f_stats[r] - want_f).abs() / want_f.abs().max(1e-9) < 1e-3,
+                "row {r}: f {} vs {want_f}",
+                out.f_stats[r]
+            );
+        }
+    }
+
+    #[test]
+    fn session_rejects_bad_shapes() {
+        let Some(rt) = runtime() else { return };
+        let n = 64;
+        let mat = DistanceMatrix::random_euclidean(n, 4, 1);
+        let grouping = Grouping::balanced(n, 4).unwrap();
+        // Wrong matrix buffer length.
+        assert!(rt.session("matmul", &mat.data()[..10], n, &grouping).is_err());
+        // Unknown kernel.
+        assert!(rt.session("bogus", mat.data(), n, &grouping).is_err());
+        // Too many groups for the artifact (k_art = 4 at n = 64).
+        let g9 = Grouping::balanced(n, 9).unwrap();
+        assert!(rt.session("matmul", mat.data(), n, &g9).is_err());
+        // Batch overrun / zero rows.
+        let sess = rt.session("matmul", mat.data(), n, &grouping).unwrap();
+        let cap = sess.batch_capacity();
+        let rows = vec![0u32; (cap + 1) * n];
+        assert!(sess.run_batch(&rows, cap + 1).is_err());
+        assert!(sess.run_batch(&[], 0).is_err());
+    }
+
+    /// Short batches (fewer rows than capacity) are padded internally and
+    /// trimmed in the output.
+    #[test]
+    fn short_batches_supported() {
+        let Some(rt) = runtime() else { return };
+        let n = 64;
+        let mat = DistanceMatrix::random_euclidean(n, 4, 5);
+        let grouping = Grouping::balanced(n, 4).unwrap();
+        let sess = rt.session("bruteforce", mat.data(), n, &grouping).unwrap();
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 2, 4);
+        let rows = plan.batch(0, 3);
+        let out = sess.run_batch(&rows, 3).unwrap();
+        assert_eq!(out.f_stats.len(), 3);
+        assert_eq!(out.s_w.len(), 3);
+    }
+}

@@ -1,0 +1,288 @@
+//! Trace-driven cache simulator: validates the locality claims behind the
+//! kernel-class parameters.
+//!
+//! The analytic model asserts, e.g., "the brute kernel's `grouping[col]`
+//! operand misses L1d once the row exceeds 32 KiB, while the tiled kernel's
+//! TILE-slice stays L1-resident".  Rather than take that on faith, this
+//! module replays the *actual* access streams of Algorithms 1 and 2 through
+//! a set-associative LRU hierarchy at small scale and measures the miss
+//! rates the parameters imply.  The tests at the bottom are the evidence.
+
+/// A set-associative, true-LRU, write-allocate cache level.
+#[derive(Clone, Debug)]
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    line_bytes: usize,
+    /// tags[set][way]; u64::MAX = invalid.  LRU order: index 0 = MRU.
+    tags: Vec<Vec<u64>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    /// Build a cache of `capacity_bytes` with `ways` associativity.
+    pub fn new(capacity_bytes: usize, ways: usize, line_bytes: usize) -> Self {
+        assert!(capacity_bytes % (ways * line_bytes) == 0, "capacity/geometry mismatch");
+        let sets = capacity_bytes / (ways * line_bytes);
+        assert!(sets.is_power_of_two(), "sets must be a power of two, got {sets}");
+        Cache {
+            sets,
+            ways,
+            line_bytes,
+            tags: vec![vec![u64::MAX; ways]; sets],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access one byte address; returns true on hit.  On miss the line is
+    /// filled (evicting LRU).
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr / self.line_bytes as u64;
+        let set = (line % self.sets as u64) as usize;
+        let ways = &mut self.tags[set];
+        if let Some(pos) = ways.iter().position(|&t| t == line) {
+            // Move to MRU.
+            let t = ways.remove(pos);
+            ways.insert(0, t);
+            self.hits += 1;
+            true
+        } else {
+            ways.pop();
+            ways.insert(0, line);
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Geometry accessors (sets × ways × line = capacity).
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        (self.sets, self.ways, self.line_bytes)
+    }
+
+    /// Hit rate over all accesses so far.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Reset counters (keep contents).
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// A two-level hierarchy (L1 backed by L2); misses in L1 access L2.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+}
+
+impl Hierarchy {
+    /// Zen 4-shaped small hierarchy (scaled geometries are fine for the
+    /// locality arguments; tests use exact core geometry).
+    pub fn zen4_core() -> Self {
+        Hierarchy {
+            l1: Cache::new(32 * 1024, 8, 64),
+            l2: Cache::new(1024 * 1024, 8, 64),
+        }
+    }
+
+    /// Access an address through the hierarchy.
+    pub fn access(&mut self, addr: u64) {
+        if !self.l1.access(addr) {
+            self.l2.access(addr);
+        }
+    }
+}
+
+/// Synthetic address spaces for the kernel traces (disjoint regions).
+const MAT_BASE: u64 = 0x1_0000_0000;
+const GRP_BASE: u64 = 0x2_0000_0000;
+const IGS_BASE: u64 = 0x3_0000_0000;
+
+/// Replay Algorithm 1's access stream for one permutation.
+///
+/// Per (row, col): grouping[row] (hoisted per row), grouping[col],
+/// mat[row*n+col] (when the branch is taken — taken with p=1/k, but the
+/// *load* of grouping[col] always happens), inv_group_sizes[g].
+pub fn trace_brute(h: &mut Hierarchy, n: usize, k: usize) {
+    for row in 0..n.saturating_sub(1) {
+        h.access(GRP_BASE + row as u64 * 4);
+        h.access(IGS_BASE + (row % k) as u64 * 4);
+        for col in (row + 1)..n {
+            h.access(GRP_BASE + col as u64 * 4);
+            // Model the taken branch deterministically at rate 1/k.
+            if (row + col) % k == 0 {
+                h.access(MAT_BASE + (row * n + col) as u64 * 4);
+            }
+        }
+    }
+}
+
+/// Replay Algorithm 2's access stream (tile-stepped, as published).
+pub fn trace_tiled(h: &mut Hierarchy, n: usize, k: usize, tile: usize) {
+    let mut trow = 0usize;
+    while trow + 1 < n {
+        let mut tcol = trow + 1;
+        while tcol < n {
+            let row_end = (trow + tile).min(n - 1);
+            for row in trow..row_end {
+                let min_col = tcol.max(row + 1);
+                let max_col = (tcol + tile).min(n);
+                h.access(GRP_BASE + row as u64 * 4);
+                for col in min_col..max_col {
+                    h.access(GRP_BASE + col as u64 * 4);
+                    if (row + col) % k == 0 {
+                        h.access(MAT_BASE + (row * n + col) as u64 * 4);
+                    }
+                }
+                h.access(IGS_BASE + (row % k) as u64 * 4);
+            }
+            tcol += tile;
+        }
+        trow += tile;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_basics() {
+        let mut c = Cache::new(1024, 2, 64); // 8 sets x 2 ways
+        assert!(!c.access(0)); // cold miss
+        assert!(c.access(0)); // hit
+        assert!(c.access(63)); // same line
+        assert!(!c.access(64)); // next line
+        assert_eq!(c.misses, 2);
+        assert_eq!(c.hits, 2);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = Cache::new(128, 2, 64); // 1 set, 2 ways
+        c.access(0); // A
+        c.access(64); // B
+        c.access(0); // A hit -> MRU
+        c.access(128); // C evicts B (LRU)
+        assert!(c.access(0), "A survives");
+        assert!(!c.access(64), "B was evicted");
+    }
+
+    #[test]
+    fn geometry_validation() {
+        // 48 KiB direct-mapped with 64 B lines -> 768 sets: not a power of 2.
+        let r = std::panic::catch_unwind(|| Cache::new(48 * 1024, 1, 64));
+        assert!(r.is_err());
+    }
+
+    /// The claim behind CPU_BRUTE vs CPU_TILED: at a row width where the
+    /// grouping array exceeds L1d (n*4 > 32 KiB), the brute scan misses L1
+    /// on grouping continuously, while the tiled scan's slice stays
+    /// resident.  n = 16384 -> grouping = 64 KiB = 2x L1d.
+    #[test]
+    fn tiled_grouping_locality_beats_brute() {
+        let n = 16 * 1024;
+        let k = 4;
+
+        let mut hb = Hierarchy::zen4_core();
+        // Only trace a prefix of rows (the pattern is stationary and the
+        // full triangle is slow in a unit test).
+        trace_brute_rows(&mut hb, n, k, 64);
+        let brute_l1 = hb.l1.hit_rate();
+
+        let mut ht = Hierarchy::zen4_core();
+        trace_tiled_rows(&mut ht, n, k, 512, 64);
+        let tiled_l1 = ht.l1.hit_rate();
+
+        assert!(
+            tiled_l1 > brute_l1 + 0.02,
+            "tiled L1 {tiled_l1:.4} must clearly beat brute L1 {brute_l1:.4}"
+        );
+        // And both served mostly on-chip overall (L2 catches grouping).
+        assert!(ht.l2.hit_rate() > 0.5 || ht.l2.misses < 100_000);
+    }
+
+    /// Matrix accesses are compulsory-miss streaming for BOTH algorithms —
+    /// tiling does not (and cannot) reduce matrix HBM traffic.  This
+    /// validates modelling the matrix as pure streaming in traffic.rs.
+    #[test]
+    fn matrix_misses_are_compulsory_for_both() {
+        let n = 2048; // matrix region far exceeds L1+L2
+        let k = 4;
+        let mut hb = Hierarchy::zen4_core();
+        trace_brute(&mut hb, n, k);
+        let brute_mat_misses = hb.l2.misses;
+
+        let mut ht = Hierarchy::zen4_core();
+        trace_tiled(&mut ht, n, k, 512);
+        let tiled_mat_misses = ht.l2.misses;
+
+        // Within 20% of each other: no magic traffic reduction from tiling.
+        let ratio = tiled_mat_misses as f64 / brute_mat_misses.max(1) as f64;
+        assert!((0.8..1.25).contains(&ratio), "L2-miss ratio {ratio}");
+    }
+
+    /// Small-n case: everything fits L1 -> both algorithms hit ~always
+    /// after warmup.  Guards the simulator against over-penalizing small
+    /// problems.
+    #[test]
+    fn small_problem_is_cache_resident() {
+        let n = 512; // grouping 2 KiB, matrix 1 MiB (L2-resident)
+        let mut h = Hierarchy::zen4_core();
+        trace_brute(&mut h, n, 4);
+        h.l1.reset_stats();
+        h.l2.reset_stats();
+        trace_brute(&mut h, n, 4); // second permutation, warm caches
+        assert!(h.l2.hit_rate() > 0.95 || h.l2.misses == 0);
+    }
+
+    // --- bounded-row trace helpers (keep unit tests fast) ---
+
+    fn trace_brute_rows(h: &mut Hierarchy, n: usize, k: usize, rows: usize) {
+        for row in 0..rows.min(n - 1) {
+            h.access(GRP_BASE + row as u64 * 4);
+            h.access(IGS_BASE + (row % k) as u64 * 4);
+            for col in (row + 1)..n {
+                h.access(GRP_BASE + col as u64 * 4);
+                if (row + col) % k == 0 {
+                    h.access(MAT_BASE + (row * n + col) as u64 * 4);
+                }
+            }
+        }
+    }
+
+    fn trace_tiled_rows(h: &mut Hierarchy, n: usize, k: usize, tile: usize, rows: usize) {
+        // Same bounded row range, but column-tiled like Algorithm 2.
+        let rows = rows.min(n - 1);
+        let mut tcol = 1;
+        while tcol < n {
+            for row in 0..rows {
+                let min_col = tcol.max(row + 1);
+                let max_col = (tcol + tile).min(n);
+                if min_col >= max_col {
+                    continue;
+                }
+                h.access(GRP_BASE + row as u64 * 4);
+                for col in min_col..max_col {
+                    h.access(GRP_BASE + col as u64 * 4);
+                    if (row + col) % k == 0 {
+                        h.access(MAT_BASE + (row * n + col) as u64 * 4);
+                    }
+                }
+                h.access(IGS_BASE + (row % k) as u64 * 4);
+            }
+            tcol += tile;
+        }
+    }
+}

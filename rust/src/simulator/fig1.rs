@@ -1,0 +1,145 @@
+//! Figure 1 regeneration: PERMANOVA execution time by algorithm × resource.
+//!
+//! The paper's single figure: horizontal bars of execution time (seconds,
+//! lower is better) for the brute-force and tiled algorithms on CPU
+//! (with/without SMT) and GPU, at the EMP workload (25145², 3999 perms).
+//! This module produces those rows from the simulator and formats them as
+//! the figure's data table plus an ASCII rendition.
+
+use super::exec::{predict, Bound, DeviceConfig, Prediction};
+use super::machine::Mi300a;
+use super::traffic::Workload;
+use crate::permanova::{SwAlgorithm, DEFAULT_TILE};
+
+/// One bar of Figure 1.
+#[derive(Clone, Debug)]
+pub struct Fig1Row {
+    pub label: String,
+    pub seconds: f64,
+    pub bound: Bound,
+    pub prediction: Prediction,
+}
+
+/// The figure's configuration axis, in presentation order (fastest last,
+/// like the paper's bar chart reads).
+pub fn fig1_configs() -> Vec<(SwAlgorithm, DeviceConfig, &'static str)> {
+    vec![
+        (SwAlgorithm::Brute, DeviceConfig::Cpu { smt: false }, "CPU brute force (no SMT)"),
+        (SwAlgorithm::Brute, DeviceConfig::Cpu { smt: true }, "CPU brute force (SMT)"),
+        (SwAlgorithm::Tiled { tile: DEFAULT_TILE }, DeviceConfig::Cpu { smt: false }, "CPU tiled (no SMT)"),
+        (SwAlgorithm::Tiled { tile: DEFAULT_TILE }, DeviceConfig::Cpu { smt: true }, "CPU tiled (SMT)"),
+        (SwAlgorithm::Tiled { tile: DEFAULT_TILE }, DeviceConfig::Gpu, "GPU tiled"),
+        (SwAlgorithm::Brute, DeviceConfig::Gpu, "GPU brute force"),
+    ]
+}
+
+/// Compute all Figure 1 rows for a workload (defaults to the paper's).
+pub fn fig1_rows(machine: &Mi300a, workload: &Workload) -> Vec<Fig1Row> {
+    fig1_configs()
+        .into_iter()
+        .map(|(algo, dev, label)| {
+            let p = predict(machine, workload, algo, dev);
+            Fig1Row { label: label.to_string(), seconds: p.seconds, bound: p.bound, prediction: p }
+        })
+        .collect()
+}
+
+/// Render the figure as an ASCII horizontal bar chart (the paper's format:
+/// seconds on the horizontal axis, lower is better).
+pub fn render_fig1(rows: &[Fig1Row]) -> String {
+    let max_s = rows.iter().map(|r| r.seconds).fold(0.0f64, f64::max);
+    let width = 52usize;
+    let mut out = String::new();
+    out.push_str("PERMANOVA execution time by algorithm and resource\n");
+    out.push_str("(simulated MI300A; horizontal axis seconds, lower is better)\n\n");
+    for r in rows {
+        let bar = ((r.seconds / max_s) * width as f64).round().max(1.0) as usize;
+        out.push_str(&format!(
+            "{:<26} {:>8.1}s |{}\n",
+            r.label,
+            r.seconds,
+            "#".repeat(bar)
+        ));
+    }
+    let gpu = rows.iter().find(|r| r.label == "GPU brute force").unwrap();
+    let cpu = rows.iter().find(|r| r.label == "CPU brute force (no SMT)").unwrap();
+    out.push_str(&format!(
+        "\nGPU brute vs CPU brute (no SMT): {:.1}x faster\n",
+        cpu.seconds / gpu.seconds
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows() -> Vec<Fig1Row> {
+        fig1_rows(&Mi300a::default(), &Workload::paper())
+    }
+
+    #[test]
+    fn six_rows_all_positive() {
+        let r = rows();
+        assert_eq!(r.len(), 6);
+        for row in &r {
+            assert!(row.seconds > 0.0, "{}", row.label);
+        }
+    }
+
+    #[test]
+    fn figure_ordering_matches_paper() {
+        let r = rows();
+        let by = |label: &str| r.iter().find(|x| x.label == label).unwrap().seconds;
+        let cpu_brute_nosmt = by("CPU brute force (no SMT)");
+        let cpu_brute_smt = by("CPU brute force (SMT)");
+        let cpu_tiled_nosmt = by("CPU tiled (no SMT)");
+        let cpu_tiled_smt = by("CPU tiled (SMT)");
+        let gpu_tiled = by("GPU tiled");
+        let gpu_brute = by("GPU brute force");
+
+        // GPU brute is the overall winner.
+        for other in [cpu_brute_nosmt, cpu_brute_smt, cpu_tiled_nosmt, cpu_tiled_smt, gpu_tiled] {
+            assert!(gpu_brute < other);
+        }
+        // CPU brute (no SMT) is the slowest CPU configuration.
+        assert!(cpu_brute_nosmt > cpu_brute_smt);
+        assert!(cpu_brute_nosmt > cpu_tiled_nosmt);
+        // Tiled beats brute on CPU in both SMT settings.
+        assert!(cpu_tiled_smt < cpu_brute_smt);
+        assert!(cpu_tiled_nosmt < cpu_brute_nosmt);
+        // Tiled+SMT is the best CPU configuration.
+        assert!(cpu_tiled_smt < cpu_tiled_nosmt && cpu_tiled_smt < cpu_brute_smt);
+        // GPU tiled is drastically slower than GPU brute (paper's negative
+        // result) — slower even than the best CPU config.
+        assert!(gpu_tiled > 3.0 * gpu_brute);
+        assert!(gpu_tiled > cpu_tiled_smt);
+    }
+
+    #[test]
+    fn render_contains_all_labels_and_ratio() {
+        let s = render_fig1(&rows());
+        for label in [
+            "CPU brute force (no SMT)",
+            "CPU brute force (SMT)",
+            "CPU tiled (no SMT)",
+            "CPU tiled (SMT)",
+            "GPU tiled",
+            "GPU brute force",
+        ] {
+            assert!(s.contains(label), "missing {label} in:\n{s}");
+        }
+        assert!(s.contains("x faster"));
+    }
+
+    #[test]
+    fn custom_workload_scales() {
+        let m = Mi300a::default();
+        let small = Workload { n_dims: 1000, n_perms: 100, n_groups: 4 };
+        let r = fig1_rows(&m, &small);
+        // Small workload: every bar far below the paper-scale ones.
+        for row in &r {
+            assert!(row.seconds < 5.0, "{}: {}", row.label, row.seconds);
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! MI300A machine model: the published numbers the simulator is built on.
+//!
+//! Every constant here traces to a public source — the paper's Appendix A1
+//! (lscpu / rocm-smi of an SDSC Cosmos node), Appendix A2 (STREAM and
+//! STREAM-OMPGPU measurements), or the AMD MI300A datasheet / CDNA3 white
+//! paper.  Nothing is fit to the paper's Figure 1; the figure must *emerge*
+//! from these inputs plus the kernel models in `params.rs`.
+
+/// CPU-side spec of one MI300A APU (Appendix A1: 24 Zen 4 cores, SMT 2).
+#[derive(Clone, Debug)]
+pub struct CpuSpec {
+    /// Physical cores per APU.
+    pub cores: usize,
+    /// Hardware threads per core (SMT).
+    pub smt: usize,
+    /// Max boost clock, GHz (lscpu: 3700 MHz).
+    pub freq_ghz: f64,
+    /// L1d per core, KiB (lscpu: 3 MiB / 96 instances).
+    pub l1d_kib: usize,
+    /// L2 per core, KiB (lscpu: 96 MiB / 96 instances).
+    pub l2_kib: usize,
+    /// L3 per APU, MiB (lscpu: 384 MiB / 12 instances = 32 MiB each,
+    /// 3 instances per APU).
+    pub l3_mib: usize,
+    /// Achievable CPU memory bandwidth with all SMT threads, GB/s
+    /// (Appendix A2 STREAM Triad, 48 threads: 209.1 GB/s).
+    pub stream_bw_smt_gbs: f64,
+    /// Achievable with one thread per core.  Not printed in the paper;
+    /// Zen 4 demand-BW scaling gives ~72% of the SMT figure — this is the
+    /// one interpolated constant, and it only shifts CPU bars that are
+    /// memory-bound.
+    pub stream_bw_nosmt_gbs: f64,
+}
+
+/// GPU-side spec of one MI300A APU (CDNA3 white paper; A2 STREAM-OMPGPU).
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    /// Compute units (MI300A: 228 CDNA3 CUs).
+    pub cus: usize,
+    /// SIMD lanes per CU doing f32 (4 SIMD16 units -> 64 lanes).
+    pub lanes_per_cu: usize,
+    /// Peak engine clock, GHz.
+    pub freq_ghz: f64,
+    /// Infinity Cache, MiB (shared last level in front of HBM).
+    pub infinity_cache_mib: usize,
+    /// Achievable GPU memory bandwidth, GB/s (A2 STREAM-OMPGPU Triad:
+    /// 3160.3 GB/s).
+    pub stream_bw_gbs: f64,
+}
+
+/// Shared HBM stack (AMD datasheet: 128 GB HBM3, 5.3 TB/s peak).
+#[derive(Clone, Debug)]
+pub struct HbmSpec {
+    pub capacity_gib: usize,
+    pub peak_gbs: f64,
+}
+
+/// One MI300A APU: both device types over the same memory.
+#[derive(Clone, Debug)]
+pub struct Mi300a {
+    pub cpu: CpuSpec,
+    pub gpu: GpuSpec,
+    pub hbm: HbmSpec,
+}
+
+impl Default for Mi300a {
+    fn default() -> Self {
+        Mi300a {
+            cpu: CpuSpec {
+                cores: 24,
+                smt: 2,
+                freq_ghz: 3.7,
+                l1d_kib: 32,
+                l2_kib: 1024,
+                l3_mib: 96,
+                stream_bw_smt_gbs: 209.1,
+                stream_bw_nosmt_gbs: 150.0,
+            },
+            gpu: GpuSpec {
+                cus: 228,
+                lanes_per_cu: 64,
+                freq_ghz: 2.1,
+                infinity_cache_mib: 256,
+                stream_bw_gbs: 3160.3,
+            },
+            hbm: HbmSpec { capacity_gib: 128, peak_gbs: 5300.0 },
+        }
+    }
+}
+
+impl Mi300a {
+    /// CPU bandwidth for a thread configuration.
+    pub fn cpu_bw_gbs(&self, smt_on: bool) -> f64 {
+        if smt_on {
+            self.cpu.stream_bw_smt_gbs
+        } else {
+            self.cpu.stream_bw_nosmt_gbs
+        }
+    }
+
+    /// CPU hardware threads for a configuration.
+    pub fn cpu_threads(&self, smt_on: bool) -> usize {
+        self.cpu.cores * if smt_on { self.cpu.smt } else { 1 }
+    }
+
+    /// Peak scalar-equivalent element rate of the GPU (elements/s touched
+    /// by all lanes at peak clock).
+    pub fn gpu_peak_elem_rate(&self) -> f64 {
+        (self.gpu.cus * self.gpu.lanes_per_cu) as f64 * self.gpu.freq_ghz * 1e9
+    }
+
+    /// Fraction of HBM peak each side achieves (the paper's headline
+    /// asymmetry: ~4% for CPU cores, ~60% for GPU CUs).
+    pub fn bw_fraction_cpu(&self) -> f64 {
+        self.cpu.stream_bw_smt_gbs / self.hbm.peak_gbs
+    }
+
+    pub fn bw_fraction_gpu(&self) -> f64 {
+        self.gpu.stream_bw_gbs / self.hbm.peak_gbs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_published_numbers() {
+        let m = Mi300a::default();
+        assert_eq!(m.cpu.cores, 24);
+        assert_eq!(m.cpu_threads(true), 48);
+        assert_eq!(m.cpu_threads(false), 24);
+        assert_eq!(m.gpu.cus, 228);
+        assert!((m.cpu.stream_bw_smt_gbs - 209.1).abs() < 1e-9);
+        assert!((m.gpu.stream_bw_gbs - 3160.3).abs() < 1e-9);
+        assert_eq!(m.hbm.peak_gbs, 5300.0);
+    }
+
+    #[test]
+    fn bandwidth_asymmetry_is_paper_scale() {
+        let m = Mi300a::default();
+        // GPU ~15x the CPU bandwidth on identical memory (A2's key point).
+        let ratio = m.gpu.stream_bw_gbs / m.cpu.stream_bw_smt_gbs;
+        assert!(ratio > 12.0 && ratio < 18.0, "ratio {ratio}");
+        // Neither side reaches peak.
+        assert!(m.bw_fraction_cpu() < 0.06);
+        assert!(m.bw_fraction_gpu() > 0.5 && m.bw_fraction_gpu() < 0.7);
+    }
+
+    #[test]
+    fn smt_bandwidth_ordering() {
+        let m = Mi300a::default();
+        assert!(m.cpu_bw_gbs(true) > m.cpu_bw_gbs(false));
+    }
+
+    #[test]
+    fn gpu_compute_dwarfs_cpu() {
+        let m = Mi300a::default();
+        let cpu_rate = m.cpu.cores as f64 * m.cpu.freq_ghz * 1e9; // 1 elem/cyc
+        assert!(m.gpu_peak_elem_rate() / cpu_rate > 100.0);
+    }
+}

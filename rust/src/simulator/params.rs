@@ -1,0 +1,125 @@
+//! Kernel-class performance parameters: the modelled cost of each
+//! (algorithm, device) pair.
+//!
+//! These constants encode *why* Figure 1 looks the way it does.  They are
+//! microarchitectural estimates, documented inline and validated two ways:
+//! the trace-driven cache simulator (`cachesim.rs`) confirms the locality
+//! claims behind the cycles-per-element numbers at small scale, and the
+//! host-measured benches (`benches/fig1_permanova.rs`) confirm the CPU-side
+//! *orderings* on real silicon.  None of them were fit to the paper's
+//! figure; the figure's shape must emerge.
+
+/// CPU kernel-class parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuKernelParams {
+    /// Issue-limited cycles per matrix element, one thread per core.
+    pub cycles_per_elem: f64,
+    /// Throughput multiplier from SMT (two hardware threads hiding each
+    /// other's stalls).  >1 helps latency/misprediction-bound loops; ~1 for
+    /// loops already at retire-width.
+    pub smt_speedup: f64,
+}
+
+/// Algorithm 1 on CPU — branchy scalar loop.
+///
+/// Per element: load `grouping[col]` (L2-resident at paper scale: the 98 KiB
+/// row exceeds 32 KiB L1d), compare, *unpredictable* branch (taken with
+/// p = 1/k for permuted labels), conditional load + FMA.  Zen 4 retires the
+/// straight-line work in ~1.3 cycles; the branch misprediction term adds
+/// ~2·p(1−p)·14 cycles ≈ 1.7 at k=4..8, L1-miss grouping adds ~1.0
+/// amortized.  Total ≈ 4.0.
+pub const CPU_BRUTE: CpuKernelParams = CpuKernelParams {
+    cycles_per_elem: 4.0,
+    // Misprediction + L2-latency stalls are exactly what SMT hides well;
+    // Zen 4 SPEC-int style gains on stall-heavy loops: ~1.4x.
+    smt_speedup: 1.40,
+};
+
+/// Algorithm 2 on CPU — tiled.
+///
+/// The TILE-wide grouping slice (2 KiB at TILE=512) stays L1d-resident
+/// across the tile's rows, and the hoisted `inv_group_sizes` multiply
+/// shrinks the loop body; with the branch still present but the operand in
+/// L1, the loop runs at ~1.3 cycles/element (misprediction partly
+/// overlapped with the now-short load latency).
+pub const CPU_TILED: CpuKernelParams = CpuKernelParams {
+    cycles_per_elem: 1.3,
+    smt_speedup: 1.35,
+};
+
+/// Algorithm 3's formulation on CPU — branchless/predicated (our extension;
+/// what `-O3` if-conversion produces from the flat loop).  Vectorizes to
+/// masked AVX FMAs: ~0.45 cycles/element, but now it is load-port and
+/// bandwidth bound, so SMT adds little.
+pub const CPU_FLAT: CpuKernelParams = CpuKernelParams {
+    cycles_per_elem: 0.45,
+    smt_speedup: 1.08,
+};
+
+/// GPU kernel-class parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuKernelParams {
+    /// Fraction of STREAM-measured GPU bandwidth this access pattern
+    /// sustains.
+    pub bw_efficiency: f64,
+    /// Fraction of peak lane throughput sustained (issue efficiency).
+    pub lane_efficiency: f64,
+    /// Fixed per-launch overhead, seconds (runtime + teams spin-up).
+    pub launch_overhead_s: f64,
+}
+
+/// Algorithm 3 on GPU — the paper's winner.
+///
+/// One team per permutation, `collapse(2)` over the upper triangle: long
+/// coalesced row segments, branch turned into predication by the compiler.
+/// Irregular (triangular) row lengths, the per-element `grouping` gather
+/// and the tree reduction keep it well under STREAM: ~25% of the
+/// STREAM-OMPGPU figure is typical for masked gather-reduce kernels on
+/// CDNA (cf. the author's UniFrac OpenACC history).
+pub const GPU_BRUTE: GpuKernelParams = GpuKernelParams {
+    bw_efficiency: 0.25,
+    lane_efficiency: 0.30,
+    launch_overhead_s: 0.15,
+};
+
+/// Algorithm 2 on GPU — the paper's negative result ("drastically slower").
+///
+/// Tiling serializes each team's sweep into TILE-bounded inner loops that
+/// are too short to fill the memory pipeline (few cachelines per burst,
+/// re-issued row segments), and the tile bookkeeping adds divergent scalar
+/// code.  Sustained bandwidth collapses to a few percent of STREAM.
+pub const GPU_TILED: GpuKernelParams = GpuKernelParams {
+    bw_efficiency: 0.045,
+    lane_efficiency: 0.05,
+    launch_overhead_s: 0.15,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_param_ordering() {
+        // Tiled must be architecturally cheaper per element than brute —
+        // that's the paper's CPU contribution.
+        assert!(CPU_TILED.cycles_per_elem < CPU_BRUTE.cycles_per_elem);
+        // Flat is the cheapest per element (vector FMAs).
+        assert!(CPU_FLAT.cycles_per_elem < CPU_TILED.cycles_per_elem);
+        // SMT helps stall-bound loops more than throughput-bound ones.
+        assert!(CPU_BRUTE.smt_speedup > CPU_FLAT.smt_speedup);
+        for p in [CPU_BRUTE, CPU_TILED, CPU_FLAT] {
+            assert!(p.smt_speedup >= 1.0, "SMT never hurts in the model");
+            assert!(p.cycles_per_elem > 0.0);
+        }
+    }
+
+    #[test]
+    fn gpu_param_ordering() {
+        // The paper's observation: tiling on GPU is drastically worse.
+        assert!(GPU_BRUTE.bw_efficiency > 3.0 * GPU_TILED.bw_efficiency);
+        for p in [GPU_BRUTE, GPU_TILED] {
+            assert!(p.bw_efficiency > 0.0 && p.bw_efficiency <= 1.0);
+            assert!(p.lane_efficiency > 0.0 && p.lane_efficiency <= 1.0);
+        }
+    }
+}

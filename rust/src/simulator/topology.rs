@@ -1,0 +1,163 @@
+//! Node topology: the paper's Appendix A1 environment, as data.
+//!
+//! A Cosmos node is 4 MI300A APUs in SPX mode: 192 logical CPUs across 4
+//! NUMA nodes, one logical GPU per NUMA node, caches as printed by lscpu.
+//! The paper pins to one APU (`ROCR_VISIBLE_DEVICES=0`,
+//! `taskset -c 0-23,96-119`); this module captures the topology and renders
+//! it, plus the pinning helper that reproduces the cpuset arithmetic.
+
+/// One NUMA domain = one APU in SPX mode.
+#[derive(Clone, Debug)]
+pub struct NumaNode {
+    pub id: usize,
+    /// Physical core ids (first SMT sibling).
+    pub cores: Vec<usize>,
+    /// Second SMT sibling ids.
+    pub smt_siblings: Vec<usize>,
+    /// The co-packaged GPU id visible to ROCm.
+    pub gpu: usize,
+}
+
+/// The Cosmos node from Appendix A1.
+#[derive(Clone, Debug)]
+pub struct NodeTopology {
+    pub sockets: usize,
+    pub cores_per_socket: usize,
+    pub threads_per_core: usize,
+    pub l1d_kib_per_core: usize,
+    pub l2_kib_per_core: usize,
+    pub l3_mib_instances: usize,
+    pub l3_instances: usize,
+    pub numa: Vec<NumaNode>,
+    pub cpu_max_mhz: f64,
+    pub model_name: &'static str,
+}
+
+impl NodeTopology {
+    /// Appendix A1: 4 sockets x 24 cores x 2 threads = 192 lcpus;
+    /// NUMA n: cores 24n..24n+23, siblings 96+24n..96+24n+23; GPU n.
+    pub fn cosmos_node() -> Self {
+        let numa = (0..4)
+            .map(|id| NumaNode {
+                id,
+                cores: (24 * id..24 * (id + 1)).collect(),
+                smt_siblings: (96 + 24 * id..96 + 24 * (id + 1)).collect(),
+                gpu: id,
+            })
+            .collect();
+        NodeTopology {
+            sockets: 4,
+            cores_per_socket: 24,
+            threads_per_core: 2,
+            l1d_kib_per_core: 32,
+            l2_kib_per_core: 1024,
+            l3_mib_instances: 32,
+            l3_instances: 12,
+            numa,
+            cpu_max_mhz: 3700.0,
+            model_name: "AMD Instinct MI300A Accelerator",
+        }
+    }
+
+    /// Total logical CPUs.
+    pub fn logical_cpus(&self) -> usize {
+        self.sockets * self.cores_per_socket * self.threads_per_core
+    }
+
+    /// The `taskset -c` list for one APU (paper: `0-23,96-119` for APU 0),
+    /// optionally including SMT siblings.
+    pub fn cpuset_for_apu(&self, apu: usize, smt: bool) -> String {
+        let node = &self.numa[apu];
+        let c0 = node.cores[0];
+        let c1 = *node.cores.last().unwrap();
+        if smt {
+            let s0 = node.smt_siblings[0];
+            let s1 = *node.smt_siblings.last().unwrap();
+            format!("{c0}-{c1},{s0}-{s1}")
+        } else {
+            format!("{c0}-{c1}")
+        }
+    }
+
+    /// lscpu/rocm-smi-style render (the A1 reproduction).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("Model name:           {}\n", self.model_name));
+        out.push_str(&format!("CPU(s):               {}\n", self.logical_cpus()));
+        out.push_str(&format!("Thread(s) per core:   {}\n", self.threads_per_core));
+        out.push_str(&format!("Core(s) per socket:   {}\n", self.cores_per_socket));
+        out.push_str(&format!("Socket(s):            {}\n", self.sockets));
+        out.push_str(&format!("CPU max MHz:          {:.3}\n", self.cpu_max_mhz));
+        let ncores = self.sockets * self.cores_per_socket;
+        out.push_str(&format!(
+            "L1d:                  {} MiB ({} instances)\n",
+            self.l1d_kib_per_core * ncores / 1024,
+            ncores
+        ));
+        out.push_str(&format!(
+            "L2:                   {} MiB ({} instances)\n",
+            self.l2_kib_per_core * ncores / 1024,
+            ncores
+        ));
+        out.push_str(&format!(
+            "L3:                   {} MiB ({} instances)\n",
+            self.l3_mib_instances * self.l3_instances,
+            self.l3_instances
+        ));
+        out.push_str(&format!("NUMA node(s):         {}\n", self.numa.len()));
+        for n in &self.numa {
+            out.push_str(&format!(
+                "NUMA node{} CPU(s):     {}\n",
+                n.id,
+                self.cpuset_for_apu(n.id, true)
+            ));
+        }
+        for n in &self.numa {
+            out.push_str(&format!(
+                "GPU[{}]: (Topology) Numa Node: {}   Numa Affinity: {}\n",
+                n.gpu, n.id, n.id
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosmos_matches_appendix_a1() {
+        let t = NodeTopology::cosmos_node();
+        assert_eq!(t.logical_cpus(), 192);
+        assert_eq!(t.numa.len(), 4);
+        // The paper's pinning line for APU 0.
+        assert_eq!(t.cpuset_for_apu(0, true), "0-23,96-119");
+        assert_eq!(t.cpuset_for_apu(0, false), "0-23");
+        assert_eq!(t.cpuset_for_apu(3, true), "72-95,168-191");
+        // Cache totals as lscpu prints them.
+        assert_eq!(t.l1d_kib_per_core * 96 / 1024, 3); // 3 MiB
+        assert_eq!(t.l2_kib_per_core * 96 / 1024, 96); // 96 MiB
+        assert_eq!(t.l3_mib_instances * t.l3_instances, 384); // 384 MiB
+    }
+
+    #[test]
+    fn render_contains_a1_lines() {
+        let s = NodeTopology::cosmos_node().render();
+        assert!(s.contains("AMD Instinct MI300A Accelerator"));
+        assert!(s.contains("CPU(s):               192"));
+        assert!(s.contains("NUMA node0 CPU(s):     0-23,96-119"));
+        assert!(s.contains("L3:                   384 MiB (12 instances)"));
+        assert!(s.contains("GPU[2]: (Topology) Numa Node: 2"));
+    }
+
+    #[test]
+    fn numa_gpu_affinity_is_identity() {
+        let t = NodeTopology::cosmos_node();
+        for n in &t.numa {
+            assert_eq!(n.gpu, n.id, "rocm-smi shows GPU n on NUMA n");
+            assert_eq!(n.cores.len(), 24);
+            assert_eq!(n.smt_siblings.len(), 24);
+        }
+    }
+}

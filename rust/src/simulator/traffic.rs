@@ -1,0 +1,175 @@
+//! Memory-traffic model for the PERMANOVA kernels.
+//!
+//! Converts a workload (n_dims, n_perms, algorithm, tile) into the bytes
+//! each memory level must supply.  The formulas are validated at small
+//! scale against the trace-driven cache simulator (`cachesim::tests`).
+
+use crate::permanova::SwAlgorithm;
+
+/// Cache line size used throughout (Zen 4 and CDNA3 both use 64 B lines at
+/// the core interface; HBM transactions are line-granular here).
+pub const LINE_BYTES: usize = 64;
+
+/// One PERMANOVA workload, as the paper parameterizes it.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    /// Distance-matrix edge (objects).
+    pub n_dims: usize,
+    /// Permutations (including or excluding the observed one — traffic is
+    /// linear in it either way).
+    pub n_perms: usize,
+    /// Number of groups (affects branch statistics, not traffic).
+    pub n_groups: usize,
+}
+
+impl Workload {
+    /// The paper's benchmark point: 25145² matrix, 3999 permutations.
+    pub fn paper() -> Self {
+        Workload { n_dims: 25145, n_perms: 3999, n_groups: 8 }
+    }
+
+    /// Strict-upper-triangle element count per permutation.
+    pub fn elems_per_perm(&self) -> u64 {
+        let n = self.n_dims as u64;
+        n * (n - 1) / 2
+    }
+
+    /// Total elements across all permutations.
+    pub fn total_elems(&self) -> u64 {
+        self.elems_per_perm() * self.n_perms as u64
+    }
+
+    /// Dense matrix footprint, bytes.
+    pub fn matrix_bytes(&self) -> u64 {
+        (self.n_dims as u64).pow(2) * 4
+    }
+
+    /// One permutation's grouping row, bytes (u32 labels).
+    pub fn grouping_bytes(&self) -> u64 {
+        self.n_dims as u64 * 4
+    }
+}
+
+/// Estimated traffic for one (workload, algorithm) pair.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficEstimate {
+    /// Bytes that must come from HBM.
+    pub hbm_bytes: u64,
+    /// Bytes served by on-chip caches (grouping re-reads etc.).
+    pub cache_bytes: u64,
+    /// FLOPs (2 per within-group element: multiply + add, plus the weight
+    /// multiply amortized per row).
+    pub flops: u64,
+}
+
+/// HBM + cache traffic for a CPU run of the given algorithm.
+///
+/// Model:
+/// * The matrix has zero reuse within a permutation and (at paper scale)
+///   does not fit any cache across permutations → every permutation
+///   re-streams the strict upper triangle from HBM.  Row-major scans of
+///   triangle rows waste part of the first line of each row: + n·(LINE/2)
+///   per permutation on average.
+/// * Tiled scans additionally split rows into `ceil(span/tile)` segments
+///   whose boundaries fall mid-line; each boundary wastes ~LINE/2 bytes.
+/// * The grouping row (4n bytes ≈ 98 KiB at paper scale) is L2-resident:
+///   one HBM fill per permutation, all re-reads served on-chip
+///   (`cache_bytes` counts them).
+pub fn cpu_traffic(w: &Workload, algo: SwAlgorithm) -> TrafficEstimate {
+    let per_perm_matrix = w.elems_per_perm() * 4 + (w.n_dims as u64 * LINE_BYTES as u64 / 2);
+    let tile_waste = match algo {
+        SwAlgorithm::Tiled { tile } => {
+            // Each row inside each tile-column stripe restarts mid-line.
+            let segments_per_row = (w.n_dims as u64).div_ceil(tile as u64);
+            w.n_dims as u64 * segments_per_row * (LINE_BYTES as u64 / 2)
+        }
+        _ => 0,
+    };
+    let hbm = (per_perm_matrix + tile_waste + w.grouping_bytes()) * w.n_perms as u64;
+    // Grouping is re-read once per element (the `grouping[col]` operand).
+    let cache = w.total_elems() * 4;
+    TrafficEstimate { hbm_bytes: hbm, cache_bytes: cache, flops: 2 * w.total_elems() }
+}
+
+/// HBM traffic for a GPU run.
+///
+/// Same compulsory matrix streaming; the grouping rows of all resident
+/// teams fit Infinity Cache, so their HBM component is one fill per
+/// permutation, like the CPU.  (Efficiency losses — short rows, gather,
+/// reduction — are modelled as a *bandwidth* derate in `params.rs`, not as
+/// extra bytes.)
+pub fn gpu_traffic(w: &Workload, _algo: SwAlgorithm) -> TrafficEstimate {
+    let per_perm = w.elems_per_perm() * 4
+        + (w.n_dims as u64 * LINE_BYTES as u64 / 2)
+        + w.grouping_bytes();
+    TrafficEstimate {
+        hbm_bytes: per_perm * w.n_perms as u64,
+        cache_bytes: w.total_elems() * 4,
+        flops: 2 * w.total_elems(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_workload_magnitudes() {
+        let w = Workload::paper();
+        assert_eq!(w.n_dims, 25145);
+        // ~316 M elements per permutation.
+        let e = w.elems_per_perm();
+        assert!(e > 316_000_000 && e < 317_000_000, "{e}");
+        // Dense matrix ~2.5 GB: doesn't fit the 256 MiB Infinity Cache.
+        assert!(w.matrix_bytes() > 2_500_000_000);
+        // Total streamed ~5 TB over the run.
+        let t = cpu_traffic(&w, crate::permanova::SwAlgorithm::Brute);
+        assert!(t.hbm_bytes > 5_000_000_000_000 && t.hbm_bytes < 5_300_000_000_000);
+    }
+
+    #[test]
+    fn traffic_linear_in_perms() {
+        let w1 = Workload { n_dims: 1000, n_perms: 100, n_groups: 4 };
+        let w2 = Workload { n_dims: 1000, n_perms: 200, n_groups: 4 };
+        let t1 = cpu_traffic(&w1, SwAlgorithm::Brute);
+        let t2 = cpu_traffic(&w2, SwAlgorithm::Brute);
+        assert_eq!(t2.hbm_bytes, 2 * t1.hbm_bytes);
+        assert_eq!(t2.flops, 2 * t1.flops);
+    }
+
+    #[test]
+    fn tiled_overfetch_small_but_positive() {
+        let w = Workload::paper();
+        let brute = cpu_traffic(&w, SwAlgorithm::Brute);
+        let tiled = cpu_traffic(&w, SwAlgorithm::Tiled { tile: 512 });
+        assert!(tiled.hbm_bytes > brute.hbm_bytes);
+        // At TILE=512 the waste is ~1.6% — tiling must not be modelled as
+        // expensive in *traffic*; its CPU win is in cycles, GPU loss in
+        // bandwidth efficiency.
+        let ratio = tiled.hbm_bytes as f64 / brute.hbm_bytes as f64;
+        assert!(ratio < 1.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn smaller_tile_more_overfetch() {
+        let w = Workload { n_dims: 4096, n_perms: 10, n_groups: 4 };
+        let t64 = cpu_traffic(&w, SwAlgorithm::Tiled { tile: 64 });
+        let t512 = cpu_traffic(&w, SwAlgorithm::Tiled { tile: 512 });
+        assert!(t64.hbm_bytes > t512.hbm_bytes);
+    }
+
+    #[test]
+    fn gpu_traffic_close_to_cpu_brute() {
+        let w = Workload::paper();
+        let c = cpu_traffic(&w, SwAlgorithm::Brute);
+        let g = gpu_traffic(&w, SwAlgorithm::Brute);
+        let ratio = g.hbm_bytes as f64 / c.hbm_bytes as f64;
+        assert!((ratio - 1.0).abs() < 0.01, "same compulsory traffic");
+    }
+
+    #[test]
+    fn flops_are_two_per_element() {
+        let w = Workload { n_dims: 100, n_perms: 3, n_groups: 2 };
+        assert_eq!(cpu_traffic(&w, SwAlgorithm::Flat).flops, 2 * 3 * (100 * 99 / 2));
+    }
+}

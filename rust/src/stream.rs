@@ -1,0 +1,273 @@
+//! STREAM: the memory-bandwidth benchmark from the paper's Appendix A2.
+//!
+//! The paper calibrates its CPU-vs-GPU comparison with STREAM (McCalpin) and
+//! a GPU-offload variant (STREAM-OMPGPU): ~0.2 TB/s from the 24 CPU cores
+//! vs ~3.0 TB/s from the GPU CUs of the *same* HBM stack.  This module
+//! reimplements the four kernels (Copy/Scale/Add/Triad) with the reference
+//! methodology — N repetitions, best-time rates, validation pass — both to
+//! measure the *host* we actually run on (calibrating the simulator's CPU
+//! side) and to regenerate the A2 tables.
+//!
+//! Multi-threaded with static partitioning, matching `omp parallel for
+//! schedule(static)` in the original.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+use std::time::Instant;
+
+use crate::permanova::resolve_threads;
+
+/// The four STREAM kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamKernel {
+    /// c = a
+    Copy,
+    /// b = s*c
+    Scale,
+    /// c = a + b
+    Add,
+    /// a = b + s*c
+    Triad,
+}
+
+impl StreamKernel {
+    /// All four, in STREAM's canonical order.
+    pub const ALL: [StreamKernel; 4] =
+        [StreamKernel::Copy, StreamKernel::Scale, StreamKernel::Add, StreamKernel::Triad];
+
+    /// Kernel name as STREAM prints it.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamKernel::Copy => "Copy",
+            StreamKernel::Scale => "Scale",
+            StreamKernel::Add => "Add",
+            StreamKernel::Triad => "Triad",
+        }
+    }
+
+    /// Bytes moved per element (STREAM counting: loads + stores of f64).
+    pub fn bytes_per_elem(&self) -> usize {
+        match self {
+            StreamKernel::Copy | StreamKernel::Scale => 16,
+            StreamKernel::Add | StreamKernel::Triad => 24,
+        }
+    }
+}
+
+/// Result of one kernel's timing sweep.
+#[derive(Clone, Debug)]
+pub struct StreamResult {
+    pub kernel: StreamKernel,
+    /// Best rate over the timed repetitions, MB/s (10^6, STREAM convention).
+    pub best_rate_mbs: f64,
+    pub avg_time: f64,
+    pub min_time: f64,
+    pub max_time: f64,
+}
+
+/// Full run output: the four kernels plus validation status.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub array_len: usize,
+    pub threads: usize,
+    pub reps: usize,
+    pub results: Vec<StreamResult>,
+    pub validated: bool,
+    /// Max relative validation error across the three arrays.
+    pub max_rel_err: f64,
+}
+
+impl StreamReport {
+    /// Rate for one kernel (panics if absent — it never is).
+    pub fn rate(&self, k: StreamKernel) -> f64 {
+        self.results.iter().find(|r| r.kernel == k).unwrap().best_rate_mbs
+    }
+
+    /// Render the classic STREAM table.
+    pub fn format_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str("Function    Best Rate MB/s  Avg time     Min time     Max time\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<12}{:>14.1}  {:>9.6}    {:>9.6}    {:>9.6}\n",
+                format!("{}:", r.kernel.name()),
+                r.best_rate_mbs,
+                r.avg_time,
+                r.min_time,
+                r.max_time
+            ));
+        }
+        out
+    }
+}
+
+/// Run STREAM: `len` f64 elements per array, `reps` timed repetitions
+/// (first excluded, as in the reference), `threads` workers (0 = all).
+pub fn run_stream(len: usize, reps: usize, threads: usize) -> StreamReport {
+    assert!(reps >= 2, "need >= 2 reps (first is discarded)");
+    let threads = resolve_threads(threads);
+    let scalar = 3.0f64;
+
+    let mut a = vec![1.0f64; len];
+    let mut b = vec![2.0f64; len];
+    let mut c = vec![0.0f64; len];
+
+    let mut times = vec![vec![0.0f64; reps]; 4];
+
+    // Persistent worker pool with a barrier per kernel invocation, so the
+    // timed region excludes thread spawn (as OpenMP's does).
+    let barrier = Barrier::new(threads + 1);
+    let work = AtomicUsize::new(usize::MAX); // kernel id or MAX = idle, MAX-1 = quit
+    let (pa, pb, pc) = (SendPtr(a.as_mut_ptr()), SendPtr(b.as_mut_ptr()), SendPtr(c.as_mut_ptr()));
+
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let work = &work;
+            let (pa, pb, pc) = (&pa, &pb, &pc);
+            // Static partition [lo, hi) for this worker.
+            let lo = len * t / threads;
+            let hi = len * (t + 1) / threads;
+            s.spawn(move || loop {
+                barrier.wait(); // wait for a job
+                let w = work.load(Ordering::Acquire);
+                if w == usize::MAX - 1 {
+                    break;
+                }
+                // SAFETY: disjoint [lo, hi) slices per worker; the main
+                // thread does not touch the arrays between barriers.
+                unsafe {
+                    let a = std::slice::from_raw_parts_mut(pa.0.add(lo), hi - lo);
+                    let b = std::slice::from_raw_parts_mut(pb.0.add(lo), hi - lo);
+                    let c = std::slice::from_raw_parts_mut(pc.0.add(lo), hi - lo);
+                    match w {
+                        0 => {
+                            for i in 0..a.len() {
+                                c[i] = a[i];
+                            }
+                        }
+                        1 => {
+                            for i in 0..a.len() {
+                                b[i] = scalar * c[i];
+                            }
+                        }
+                        2 => {
+                            for i in 0..a.len() {
+                                c[i] = a[i] + b[i];
+                            }
+                        }
+                        _ => {
+                            for i in 0..a.len() {
+                                a[i] = b[i] + scalar * c[i];
+                            }
+                        }
+                    }
+                }
+                barrier.wait(); // job done
+            });
+        }
+
+        for rep in 0..reps {
+            for (ki, _k) in StreamKernel::ALL.iter().enumerate() {
+                work.store(ki, Ordering::Release);
+                let t0 = Instant::now();
+                barrier.wait(); // release workers
+                barrier.wait(); // join workers
+                times[ki][rep] = t0.elapsed().as_secs_f64();
+            }
+        }
+        work.store(usize::MAX - 1, Ordering::Release);
+        barrier.wait();
+    });
+
+    // Validation, as in stream.c: replay the recurrence on scalars.
+    let (mut va, mut vb, mut vc) = (1.0f64, 2.0f64, 0.0f64);
+    for _ in 0..reps {
+        vc = va;
+        vb = scalar * vc;
+        vc = va + vb;
+        va = vb + scalar * vc;
+    }
+    let err = |got: &[f64], want: f64| -> f64 {
+        got.iter().map(|&x| ((x - want) / want).abs()).fold(0.0, f64::max)
+    };
+    let max_rel_err = err(&a, va).max(err(&b, vb)).max(err(&c, vc));
+    let validated = max_rel_err < 1e-13 * len as f64;
+
+    let results = StreamKernel::ALL
+        .iter()
+        .enumerate()
+        .map(|(ki, &kernel)| {
+            let timed = &times[ki][1..]; // first iteration excluded
+            let min_time = timed.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max_time = timed.iter().cloned().fold(0.0, f64::max);
+            let avg_time = timed.iter().sum::<f64>() / timed.len() as f64;
+            let bytes = kernel.bytes_per_elem() * len;
+            StreamResult {
+                kernel,
+                best_rate_mbs: bytes as f64 / min_time / 1e6,
+                avg_time,
+                min_time,
+                max_time,
+            }
+        })
+        .collect();
+
+    StreamReport { array_len: len, threads, reps, results, validated, max_rel_err }
+}
+
+struct SendPtr(*mut f64);
+unsafe impl Sync for SendPtr {}
+unsafe impl Send for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_metadata() {
+        assert_eq!(StreamKernel::Copy.bytes_per_elem(), 16);
+        assert_eq!(StreamKernel::Triad.bytes_per_elem(), 24);
+        assert_eq!(StreamKernel::ALL.len(), 4);
+        assert_eq!(StreamKernel::Add.name(), "Add");
+    }
+
+    #[test]
+    fn small_run_validates() {
+        let r = run_stream(100_000, 3, 2);
+        assert!(r.validated, "rel err {}", r.max_rel_err);
+        assert_eq!(r.results.len(), 4);
+        for res in &r.results {
+            assert!(res.best_rate_mbs > 0.0);
+            assert!(res.min_time <= res.avg_time && res.avg_time <= res.max_time + 1e-12);
+        }
+    }
+
+    #[test]
+    fn single_thread_validates() {
+        let r = run_stream(50_000, 2, 1);
+        assert!(r.validated);
+    }
+
+    #[test]
+    fn odd_len_and_threads() {
+        // len not divisible by threads exercises the partition edges.
+        let r = run_stream(100_001, 2, 3);
+        assert!(r.validated, "rel err {}", r.max_rel_err);
+    }
+
+    #[test]
+    fn table_formatting() {
+        let r = run_stream(10_000, 2, 1);
+        let t = r.format_table();
+        for name in ["Copy:", "Scale:", "Add:", "Triad:"] {
+            assert!(t.contains(name), "{t}");
+        }
+    }
+
+    #[test]
+    fn rate_lookup() {
+        let r = run_stream(10_000, 2, 1);
+        assert_eq!(r.rate(StreamKernel::Copy), r.results[0].best_rate_mbs);
+    }
+}

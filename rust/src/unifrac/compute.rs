@@ -1,0 +1,369 @@
+//! Unweighted UniFrac: the distance metric behind the paper's input matrix.
+//!
+//! The paper's 25145² matrix is Unweighted UniFrac of the Earth Microbiome
+//! Project, computed by the same author's unifrac-binaries.  UniFrac(i, j) =
+//! (branch length unique to i or j) / (branch length covered by i or j):
+//!
+//! ```text
+//! d(i,j) = Σ_b L_b·[p_bi ⊕ p_bj]  /  Σ_b L_b·[p_bi ∨ p_bj]
+//! ```
+//!
+//! where `p_bi` is "any leaf under branch b is present in sample i",
+//! computed by one postorder sweep (presence propagates leaf → root).
+//!
+//! The inner pairwise accumulation is *stripe-based*, as in the author's
+//! optimized implementations: samples are packed into 64-bit masks, branches
+//! are walked once per 64-sample stripe pair, and the XOR/OR popcount-style
+//! update is branch-free.  Multi-threaded over row stripes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::otu::OtuTable;
+use super::tree::{PhyloTree, NO_PARENT};
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+
+/// Per-branch presence masks for one 64-sample stripe.
+struct StripeMasks {
+    /// `masks[node]` bit `s` = presence of (stripe_base + s) under `node`.
+    masks: Vec<u64>,
+}
+
+/// Compute per-node presence masks for samples `[base, base+width)`.
+fn presence_masks(
+    tree: &PhyloTree,
+    table: &OtuTable,
+    leaf_of_feature: &[Option<usize>],
+    base: usize,
+    width: usize,
+) -> StripeMasks {
+    let mut masks = vec![0u64; tree.len()];
+    // Seed leaves from the table.
+    for (f, leaf) in leaf_of_feature.iter().enumerate() {
+        if let Some(leaf) = *leaf {
+            let mut m = 0u64;
+            for s in 0..width {
+                if table.present(f, base + s) {
+                    m |= 1 << s;
+                }
+            }
+            masks[leaf] |= m;
+        }
+    }
+    // Propagate up in postorder.
+    for &node in tree.postorder() {
+        let p = tree.parent(node);
+        if p != NO_PARENT {
+            let m = masks[node];
+            masks[p] |= m;
+        }
+    }
+    StripeMasks { masks }
+}
+
+/// Map table features to tree leaves by id; errors if any feature with
+/// observations has no matching leaf (silent drops hide real bugs).
+fn map_features(tree: &PhyloTree, table: &OtuTable) -> Result<Vec<Option<usize>>> {
+    let mut by_name = std::collections::HashMap::new();
+    for &l in &tree.leaves() {
+        by_name.insert(tree.name(l).to_string(), l);
+    }
+    let ns = table.n_samples();
+    table
+        .feature_ids()
+        .iter()
+        .enumerate()
+        .map(|(f, id)| match by_name.get(id) {
+            Some(&l) => Ok(Some(l)),
+            None => {
+                let observed = (0..ns).any(|s| table.present(f, s));
+                if observed {
+                    Err(Error::InvalidInput(format!(
+                        "feature {id:?} has observations but no leaf in the tree"
+                    )))
+                } else {
+                    Ok(None)
+                }
+            }
+        })
+        .collect()
+}
+
+/// Unweighted UniFrac distance matrix over the table's samples.
+///
+/// `threads` = 0 uses all available cores.
+///
+/// Uses the shared-length decomposition (perf pass — see EXPERIMENTS.md
+/// §Perf): with `A_i = Σ_b L_b·p_bi` (branch length covering sample i,
+/// one pass) and `C_ij = Σ_b L_b·p_bi·p_bj` (branch length covering both),
+///
+/// ```text
+/// unique(i,j) = A_i + A_j − 2·C_ij        (covered by exactly one)
+/// total(i,j)  = A_i + A_j −   C_ij        (covered by at least one)
+/// d(i,j)      = unique / total
+/// ```
+///
+/// so the per-branch stripe-pair update only touches the *set* bits of the
+/// two presence masks (`popcount(mi)·popcount(mj)` adds instead of a dense
+/// 64×64 double update) — ~6x faster on EMP-like (~30% presence) tables.
+pub fn unweighted_unifrac(
+    tree: &PhyloTree,
+    table: &OtuTable,
+    threads: usize,
+) -> Result<DistanceMatrix> {
+    let s = table.n_samples();
+    if s < 2 {
+        return Err(Error::InvalidInput("need at least 2 samples".into()));
+    }
+    let leaf_of_feature = map_features(tree, table)?;
+
+    // Per-stripe presence masks (stripe = 64 samples).
+    let n_stripes = s.div_ceil(64);
+    let stripes: Vec<StripeMasks> = (0..n_stripes)
+        .map(|si| {
+            let base = si * 64;
+            let width = (s - base).min(64);
+            presence_masks(tree, table, &leaf_of_feature, base, width)
+        })
+        .collect();
+
+    // Branches with nonzero length (root excluded).
+    let branches: Vec<(usize, f32)> = (0..tree.len())
+        .filter(|&i| tree.parent(i) != NO_PARENT && tree.length(i) != 0.0)
+        .map(|i| (i, tree.length(i)))
+        .collect();
+
+    // A_i: branch length covering each sample (one pass over branches).
+    let mut covered = vec![0.0f64; s];
+    for &(b, len) in &branches {
+        let len = len as f64;
+        for (si, stripe) in stripes.iter().enumerate() {
+            let mut m = stripe.masks[b];
+            while m != 0 {
+                let bit = m.trailing_zeros() as usize;
+                covered[si * 64 + bit] += len;
+                m &= m - 1;
+            }
+        }
+    }
+
+    let threads = crate::permanova::resolve_threads(threads).min(n_stripes.max(1));
+    let mut mat = DistanceMatrix::zeros(s);
+    let mat_ptr = MatPtr(mat.data_mut().as_mut_ptr());
+    let cursor = AtomicUsize::new(0);
+    let covered = &covered;
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mat_ptr = &mat_ptr;
+                // C_ij accumulator for one 64x64 stripe pair.
+                let mut shared = vec![0.0f64; 64 * 64];
+                loop {
+                    let si = cursor.fetch_add(1, Ordering::Relaxed);
+                    if si >= n_stripes {
+                        break;
+                    }
+                    let base_i = si * 64;
+                    let w_i = (s - base_i).min(64);
+                    for sj in si..n_stripes {
+                        let base_j = sj * 64;
+                        let w_j = (s - base_j).min(64);
+                        shared[..64 * 64].fill(0.0);
+                        // Branches covering every sample of both stripes
+                        // (root-adjacent: the dense worst case) shift C by
+                        // a constant — fold them into one scalar.
+                        let full_i = if w_i == 64 { u64::MAX } else { (1u64 << w_i) - 1 };
+                        let full_j = if w_j == 64 { u64::MAX } else { (1u64 << w_j) - 1 };
+                        let mut dense_all = 0.0f64;
+                        for &(b, len) in &branches {
+                            let mi = stripes[si].masks[b];
+                            let mj = stripes[sj].masks[b];
+                            if mi == 0 || mj == 0 {
+                                continue; // no pair covered by this branch
+                            }
+                            let len = len as f64;
+                            if mi == full_i && mj == full_j {
+                                dense_all += len;
+                                continue;
+                            }
+                            // Only set bits contribute to C.
+                            let mut ma = mi;
+                            while ma != 0 {
+                                let a = ma.trailing_zeros() as usize;
+                                ma &= ma - 1;
+                                let row = &mut shared[a * 64..a * 64 + 64];
+                                let mut mc = mj;
+                                while mc != 0 {
+                                    let c = mc.trailing_zeros() as usize;
+                                    mc &= mc - 1;
+                                    row[c] += len;
+                                }
+                            }
+                        }
+                        // d = (A_i + A_j - 2C) / (A_i + A_j - C); upper
+                        // triangle only, mirrored below.
+                        for a in 0..w_i {
+                            let gi = base_i + a;
+                            let ai = covered[gi];
+                            for c in 0..w_j {
+                                let gj = base_j + c;
+                                if gj <= gi {
+                                    continue;
+                                }
+                                let cij = shared[a * 64 + c] + dense_all;
+                                let tot = ai + covered[gj] - cij;
+                                let d = if tot > 0.0 {
+                                    ((tot - cij) / tot) as f32
+                                } else {
+                                    0.0
+                                };
+                                // SAFETY: (gi, gj) pairs are unique across
+                                // stripe-pair iterations; each thread owns
+                                // disjoint si rows.
+                                unsafe {
+                                    *mat_ptr.0.add(gi * s + gj) = d;
+                                    *mat_ptr.0.add(gj * s + gi) = d;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    Ok(mat)
+}
+
+struct MatPtr(*mut f32);
+unsafe impl Sync for MatPtr {}
+unsafe impl Send for MatPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::unifrac::newick;
+
+    /// Tree: ((A:1,B:1)I:1,(C:1,D:1)J:1)R;  (all unit branches)
+    fn fixture() -> (PhyloTree, OtuTable) {
+        let tree = newick::parse("((A:1,B:1)I:1,(C:1,D:1)J:1)R;").unwrap();
+        // samples: s0={A}, s1={B}, s2={A,B}, s3={C}, s4={A,B,C,D}
+        let features = vec!["A".to_string(), "B".into(), "C".into(), "D".into()];
+        let samples: Vec<String> = (0..5).map(|i| format!("s{i}")).collect();
+        #[rustfmt::skip]
+        let counts = vec![
+            // s0 s1 s2 s3 s4
+            1, 0, 1, 0, 1, // A
+            0, 1, 1, 0, 1, // B
+            0, 0, 0, 1, 1, // C
+            0, 0, 0, 0, 1, // D
+        ];
+        (tree, OtuTable::new(features, samples, counts).unwrap())
+    }
+
+    #[test]
+    fn hand_computed_distances() {
+        let (tree, table) = fixture();
+        let m = unweighted_unifrac(&tree, &table, 1).unwrap();
+        // s0={A}: covers A(1), I(1). s1={B}: covers B(1), I(1).
+        // unique = A+B = 2; total = A+B+I = 3 → 2/3
+        assert!((m.get(0, 1) - 2.0 / 3.0).abs() < 1e-6, "{}", m.get(0, 1));
+        // s0={A} vs s2={A,B}: unique = B(1); total = A+B+I = 3 → 1/3
+        assert!((m.get(0, 2) - 1.0 / 3.0).abs() < 1e-6);
+        // s0={A} vs s3={C}: unique = A+I+C+J = 4; total same = 4 → 1
+        assert!((m.get(0, 3) - 1.0).abs() < 1e-6);
+        // s2={A,B} vs s4=all: unique = C+D+J = 3; total = 6 → 1/2
+        assert!((m.get(2, 4) - 0.5).abs() < 1e-6);
+        m.validate(1e-6).unwrap();
+    }
+
+    #[test]
+    fn identical_samples_distance_zero() {
+        let tree = newick::parse("((A:1,B:1):0.5,C:2);").unwrap();
+        let features = vec!["A".to_string(), "B".into(), "C".into()];
+        let samples = vec!["x".to_string(), "y".into(), "z".into()];
+        let counts = vec![
+            3, 3, 0, // A in x,y
+            1, 1, 0, // B in x,y
+            0, 0, 2, // C in z
+        ];
+        let table = OtuTable::new(features, samples, counts).unwrap();
+        let m = unweighted_unifrac(&tree, &table, 1).unwrap();
+        assert_eq!(m.get(0, 1), 0.0, "identical presence -> 0");
+        assert!((m.get(0, 2) - 1.0).abs() < 1e-6, "disjoint clades -> 1");
+    }
+
+    #[test]
+    fn unifrac_is_presence_only() {
+        // Counts 1 vs 1000 must not change unweighted UniFrac.
+        let tree = newick::parse("((A:1,B:1):1,C:1);").unwrap();
+        let f = vec!["A".to_string(), "B".into(), "C".into()];
+        let s = vec!["u".to_string(), "v".into()];
+        let t1 = OtuTable::new(f.clone(), s.clone(), vec![1, 0, 1, 1, 0, 1]).unwrap();
+        let t2 = OtuTable::new(f, s, vec![900, 0, 7, 1000, 0, 3]).unwrap();
+        let m1 = unweighted_unifrac(&tree, &t1, 1).unwrap();
+        let m2 = unweighted_unifrac(&tree, &t2, 1).unwrap();
+        assert_eq!(m1.get(0, 1), m2.get(0, 1));
+    }
+
+    #[test]
+    fn threads_do_not_change_result() {
+        let (tree, table) = fixture();
+        let m1 = unweighted_unifrac(&tree, &table, 1).unwrap();
+        let m4 = unweighted_unifrac(&tree, &table, 4).unwrap();
+        assert_eq!(m1, m4);
+    }
+
+    #[test]
+    fn many_samples_cross_stripe() {
+        // >64 samples forces multi-stripe pairs; compare one value against
+        // the single-stripe hand formula by duplicating sample contents.
+        let tree = newick::parse("((A:1,B:1)I:1,(C:1,D:1)J:1)R;").unwrap();
+        let features = vec!["A".to_string(), "B".into(), "C".into(), "D".into()];
+        let ns = 70;
+        let samples: Vec<String> = (0..ns).map(|i| format!("s{i}")).collect();
+        let mut counts = vec![0u32; 4 * ns];
+        for s in 0..ns {
+            // Even samples = {A}; odd = {C}
+            if s % 2 == 0 {
+                counts[s] = 1; // A row
+            } else {
+                counts[2 * ns + s] = 1; // C row
+            }
+        }
+        let table = OtuTable::new(features, samples, counts).unwrap();
+        let m = unweighted_unifrac(&tree, &table, 2).unwrap();
+        // {A} vs {A} = 0; {A} vs {C} = 1 (disjoint clades incl. internals)
+        assert_eq!(m.get(0, 2), 0.0);
+        assert_eq!(m.get(0, 68), 0.0, "cross-stripe same content");
+        assert!((m.get(0, 1) - 1.0).abs() < 1e-6);
+        assert!((m.get(1, 69) - 0.0).abs() < 1e-6, "cross-stripe {{C}} vs {{C}}");
+        assert!((m.get(0, 69) - 1.0).abs() < 1e-6, "cross-stripe disjoint");
+        m.validate(1e-6).unwrap();
+    }
+
+    #[test]
+    fn observed_feature_missing_from_tree_errors() {
+        let tree = newick::parse("(A:1,B:1);").unwrap();
+        let table = OtuTable::new(
+            vec!["A".to_string(), "X".into()],
+            vec!["s0".to_string(), "s1".into()],
+            vec![1, 0, 0, 1],
+        )
+        .unwrap();
+        assert!(unweighted_unifrac(&tree, &table, 1).is_err());
+    }
+
+    #[test]
+    fn unobserved_missing_feature_tolerated() {
+        let tree = newick::parse("(A:1,B:1);").unwrap();
+        let table = OtuTable::new(
+            vec!["A".to_string(), "B".into(), "ghost".into()],
+            vec!["s0".to_string(), "s1".into()],
+            vec![1, 0, 0, 1, 0, 0],
+        )
+        .unwrap();
+        unweighted_unifrac(&tree, &table, 1).unwrap();
+    }
+}

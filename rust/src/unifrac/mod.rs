@@ -1,0 +1,22 @@
+//! UniFrac substrate: trees, OTU tables, the metric, synthetic data.
+//!
+//! The paper's input matrix is Unweighted UniFrac over the Earth Microbiome
+//! Project.  This module is the from-scratch substrate that produces
+//! equivalent inputs: a Newick parser ([`newick`]), phylogenetic trees
+//! ([`PhyloTree`]), feature tables ([`OtuTable`]), the stripe-based
+//! Unweighted UniFrac computation ([`unweighted_unifrac`]) and a seeded
+//! EMP-shaped synthetic community generator ([`synth`]).
+
+pub mod newick;
+mod otu;
+pub mod synth;
+mod tree;
+
+mod compute;
+mod weighted;
+
+pub use compute::unweighted_unifrac;
+pub use otu::OtuTable;
+pub use synth::{generate, random_tree, SynthDataset, SynthParams};
+pub use tree::{PhyloTree, NO_PARENT};
+pub use weighted::weighted_unifrac;

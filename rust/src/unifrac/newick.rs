@@ -1,0 +1,283 @@
+//! Newick format: parser and writer for phylogenetic trees.
+//!
+//! Supports the subset real microbiome pipelines emit: nested groups,
+//! node labels (quoted or bare), branch lengths (`:1.5e-3`), and the
+//! trailing semicolon.  Comments in square brackets are skipped.
+
+use super::tree::{PhyloTree, NO_PARENT};
+use crate::error::{Error, Result};
+
+/// Parse a Newick document into a [`PhyloTree`].
+pub fn parse(text: &str) -> Result<PhyloTree> {
+    let mut p = NewickParser { b: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let mut parent = Vec::new();
+    let mut length = Vec::new();
+    let mut name = Vec::new();
+    let root = p.node(&mut parent, &mut length, &mut name, NO_PARENT)?;
+    debug_assert_eq!(root + 1, parent.len());
+    p.skip_ws();
+    if p.peek() == Some(b';') {
+        p.pos += 1;
+    }
+    p.skip_ws();
+    if p.pos != p.b.len() {
+        return Err(p.err("trailing content after tree"));
+    }
+    PhyloTree::new(parent, length, name)
+}
+
+/// Serialize a tree to Newick (children in stored order, lengths always
+/// written, names written when non-empty).
+pub fn write(tree: &PhyloTree) -> String {
+    let mut out = String::new();
+    write_node(tree, tree.root(), &mut out);
+    out.push(';');
+    out
+}
+
+fn write_node(tree: &PhyloTree, node: usize, out: &mut String) {
+    let kids = tree.children(node);
+    if !kids.is_empty() {
+        out.push('(');
+        for (i, &c) in kids.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            write_node(tree, c, out);
+        }
+        out.push(')');
+    }
+    let nm = tree.name(node);
+    if !nm.is_empty() {
+        if nm.chars().any(|c| " (),:;'[]".contains(c)) {
+            out.push('\'');
+            out.push_str(&nm.replace('\'', "''"));
+            out.push('\'');
+        } else {
+            out.push_str(nm);
+        }
+    }
+    if tree.parent(node) != NO_PARENT {
+        out.push(':');
+        out.push_str(&format!("{}", tree.length(node)));
+    }
+}
+
+struct NewickParser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> NewickParser<'a> {
+    fn err(&self, msg: impl Into<String>) -> Error {
+        Error::parse("newick", format!("byte {}", self.pos), msg)
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        loop {
+            while self
+                .peek()
+                .map(|c| c.is_ascii_whitespace())
+                .unwrap_or(false)
+            {
+                self.pos += 1;
+            }
+            // Newick comments: [...] (non-nesting)
+            if self.peek() == Some(b'[') {
+                while let Some(c) = self.peek() {
+                    self.pos += 1;
+                    if c == b']' {
+                        break;
+                    }
+                }
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Parse one node (subtree); append to the arrays; return its index.
+    fn node(
+        &mut self,
+        parent: &mut Vec<usize>,
+        length: &mut Vec<f32>,
+        name: &mut Vec<String>,
+        _parent_hint: usize,
+    ) -> Result<usize> {
+        self.skip_ws();
+        let mut child_indices = Vec::new();
+        if self.peek() == Some(b'(') {
+            self.pos += 1;
+            loop {
+                let c = self.node(parent, length, name, NO_PARENT)?;
+                child_indices.push(c);
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => {
+                        self.pos += 1;
+                    }
+                    Some(b')') => {
+                        self.pos += 1;
+                        break;
+                    }
+                    _ => return Err(self.err("expected ',' or ')'")),
+                }
+            }
+        }
+        self.skip_ws();
+        let nm = self.label()?;
+        self.skip_ws();
+        let len = if self.peek() == Some(b':') {
+            self.pos += 1;
+            self.number()?
+        } else {
+            0.0
+        };
+        let idx = parent.len();
+        parent.push(NO_PARENT); // patched by caller if we're a child
+        length.push(len);
+        name.push(nm);
+        for c in child_indices {
+            parent[c] = idx;
+        }
+        Ok(idx)
+    }
+
+    fn label(&mut self) -> Result<String> {
+        self.skip_ws();
+        if self.peek() == Some(b'\'') {
+            // Quoted label; '' is an escaped quote.
+            self.pos += 1;
+            let mut s = String::new();
+            loop {
+                match self.peek() {
+                    None => return Err(self.err("unterminated quoted label")),
+                    Some(b'\'') => {
+                        self.pos += 1;
+                        if self.peek() == Some(b'\'') {
+                            s.push('\'');
+                            self.pos += 1;
+                        } else {
+                            return Ok(s);
+                        }
+                    }
+                    Some(c) => {
+                        s.push(c as char);
+                        self.pos += 1;
+                    }
+                }
+            }
+        }
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if b"(),:;[]".contains(&c) || c.is_ascii_whitespace() {
+                break;
+            }
+            self.pos += 1;
+        }
+        Ok(std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("invalid utf-8 in label"))?
+            .to_string())
+    }
+
+    fn number(&mut self) -> Result<f32> {
+        self.skip_ws();
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'-' | b'+' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        text.parse()
+            .map_err(|e| self.err(format!("bad branch length {text:?}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_simple() {
+        let t = parse("((A:1,B:2)I:0.5,C:3)R;").unwrap();
+        assert_eq!(t.len(), 5);
+        let a = t.leaf_by_name("A").unwrap();
+        assert_eq!(t.length(a), 1.0);
+        let i = t.parent(a);
+        assert_eq!(t.name(i), "I");
+        assert_eq!(t.length(i), 0.5);
+        assert_eq!(t.name(t.root()), "R");
+        assert_eq!(t.leaves().len(), 3);
+    }
+
+    #[test]
+    fn parse_unnamed_and_lengthless() {
+        let t = parse("((A,B),(C,D));").unwrap();
+        assert_eq!(t.leaves().len(), 4);
+        assert_eq!(t.total_length(), 0.0);
+    }
+
+    #[test]
+    fn parse_scientific_lengths_and_comments() {
+        let t = parse("[emp tree](A:1.5e-3,B:2E2)root:0;").unwrap();
+        let a = t.leaf_by_name("A").unwrap();
+        assert!((t.length(a) - 0.0015).abs() < 1e-9);
+        let b = t.leaf_by_name("B").unwrap();
+        assert_eq!(t.length(b), 200.0);
+    }
+
+    #[test]
+    fn parse_quoted_labels() {
+        let t = parse("('taxon one':1,'o''brien':2);").unwrap();
+        assert!(t.leaf_by_name("taxon one").is_some());
+        assert!(t.leaf_by_name("o'brien").is_some());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = "((A:1,B:2)I:0.5,(C:3,D:0.25)J:1.5)R;";
+        let t = parse(src).unwrap();
+        let out = write(&t);
+        let t2 = parse(&out).unwrap();
+        assert_eq!(t.len(), t2.len());
+        assert_eq!(t.leaves().len(), t2.leaves().len());
+        assert!((t.total_length() - t2.total_length()).abs() < 1e-9);
+        // Same leaf name set
+        let mut n1: Vec<&str> = t.leaves().iter().map(|&l| t.name(l)).collect();
+        let mut n2: Vec<&str> = t2.leaves().iter().map(|&l| t2.name(l)).collect();
+        n1.sort_unstable();
+        n2.sort_unstable();
+        assert_eq!(n1, n2);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let t = parse("('a b':1,c:2);").unwrap();
+        let t2 = parse(&write(&t)).unwrap();
+        assert!(t2.leaf_by_name("a b").is_some());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("((A,B;").is_err());
+        assert!(parse("(A:x);").is_err());
+        assert!(parse("(A,B)); extra").is_err());
+        assert!(parse("('unterminated);").is_err());
+    }
+
+    #[test]
+    fn single_leaf() {
+        let t = parse("A;").unwrap();
+        assert_eq!(t.len(), 1);
+        assert!(t.is_leaf(t.root()));
+        assert_eq!(t.name(t.root()), "A");
+    }
+}

@@ -1,0 +1,164 @@
+//! OTU (feature) tables: which taxa are present in which samples.
+//!
+//! The minimal BIOM-equivalent the UniFrac computation needs: a dense
+//! presence/absence matrix over (feature, sample), with ids on both axes.
+//! Counts are kept (u32) so weighted metrics can be added later; unweighted
+//! UniFrac only consumes presence.
+
+use crate::error::{Error, Result};
+
+/// A feature-by-sample count table.
+#[derive(Clone, Debug)]
+pub struct OtuTable {
+    feature_ids: Vec<String>,
+    sample_ids: Vec<String>,
+    /// Row-major `n_features x n_samples` counts.
+    counts: Vec<u32>,
+}
+
+impl OtuTable {
+    /// Build from parts; validates dimensions and id uniqueness.
+    pub fn new(
+        feature_ids: Vec<String>,
+        sample_ids: Vec<String>,
+        counts: Vec<u32>,
+    ) -> Result<Self> {
+        if counts.len() != feature_ids.len() * sample_ids.len() {
+            return Err(Error::InvalidInput(format!(
+                "counts has {} entries, want {} features x {} samples",
+                counts.len(),
+                feature_ids.len(),
+                sample_ids.len()
+            )));
+        }
+        for ids in [&feature_ids, &sample_ids] {
+            let mut seen = std::collections::HashSet::new();
+            for id in ids {
+                if !seen.insert(id) {
+                    return Err(Error::InvalidInput(format!("duplicate id {id:?}")));
+                }
+            }
+        }
+        Ok(OtuTable { feature_ids, sample_ids, counts })
+    }
+
+    /// All-zero table.
+    pub fn zeros(feature_ids: Vec<String>, sample_ids: Vec<String>) -> Result<Self> {
+        let len = feature_ids.len() * sample_ids.len();
+        Self::new(feature_ids, sample_ids, vec![0; len])
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.feature_ids.len()
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.sample_ids.len()
+    }
+
+    pub fn feature_ids(&self) -> &[String] {
+        &self.feature_ids
+    }
+
+    pub fn sample_ids(&self) -> &[String] {
+        &self.sample_ids
+    }
+
+    /// Count of feature `f` in sample `s`.
+    #[inline]
+    pub fn count(&self, f: usize, s: usize) -> u32 {
+        self.counts[f * self.sample_ids.len() + s]
+    }
+
+    /// Set count of feature `f` in sample `s`.
+    pub fn set_count(&mut self, f: usize, s: usize, c: u32) {
+        self.counts[f * self.sample_ids.len() + s] = c;
+    }
+
+    /// Presence of feature `f` in sample `s`.
+    #[inline]
+    pub fn present(&self, f: usize, s: usize) -> bool {
+        self.count(f, s) > 0
+    }
+
+    /// Number of features present in sample `s` (its richness).
+    pub fn sample_richness(&self, s: usize) -> usize {
+        (0..self.n_features()).filter(|&f| self.present(f, s)).count()
+    }
+
+    /// Total observations in the table.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|&c| c as u64).sum()
+    }
+
+    /// Drop features absent from every sample; returns how many were
+    /// removed.  (Real pipelines do this before UniFrac — empty features
+    /// carry no signal but cost tree traversal.)
+    pub fn drop_empty_features(&mut self) -> usize {
+        let ns = self.n_samples();
+        let keep: Vec<usize> = (0..self.n_features())
+            .filter(|&f| (0..ns).any(|s| self.present(f, s)))
+            .collect();
+        let dropped = self.n_features() - keep.len();
+        if dropped > 0 {
+            let mut new_counts = Vec::with_capacity(keep.len() * ns);
+            let mut new_ids = Vec::with_capacity(keep.len());
+            for &f in &keep {
+                new_counts.extend_from_slice(&self.counts[f * ns..(f + 1) * ns]);
+                new_ids.push(self.feature_ids[f].clone());
+            }
+            self.counts = new_counts;
+            self.feature_ids = new_ids;
+        }
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(prefix: &str, n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("{prefix}{i}")).collect()
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let mut t = OtuTable::zeros(ids("f", 3), ids("s", 2)).unwrap();
+        t.set_count(0, 0, 5);
+        t.set_count(2, 1, 1);
+        assert_eq!(t.count(0, 0), 5);
+        assert!(t.present(0, 0));
+        assert!(!t.present(0, 1));
+        assert_eq!(t.sample_richness(0), 1);
+        assert_eq!(t.sample_richness(1), 1);
+        assert_eq!(t.total(), 6);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_dup_ids() {
+        assert!(OtuTable::new(ids("f", 2), ids("s", 2), vec![0; 3]).is_err());
+        let mut dup = ids("f", 2);
+        dup[1] = "f0".into();
+        assert!(OtuTable::new(dup, ids("s", 1), vec![0; 2]).is_err());
+    }
+
+    #[test]
+    fn drop_empty_features() {
+        let mut t = OtuTable::new(
+            ids("f", 3),
+            ids("s", 2),
+            vec![
+                1, 0, // f0 present in s0
+                0, 0, // f1 empty
+                0, 2, // f2 present in s1
+            ],
+        )
+        .unwrap();
+        assert_eq!(t.drop_empty_features(), 1);
+        assert_eq!(t.n_features(), 2);
+        assert_eq!(t.feature_ids(), &["f0".to_string(), "f2".to_string()]);
+        assert!(t.present(1, 1));
+        assert_eq!(t.drop_empty_features(), 0, "idempotent");
+    }
+}

@@ -1,0 +1,214 @@
+//! Phylogenetic trees: the structure UniFrac integrates over.
+//!
+//! Flat arena representation (parent/children index vectors) with a cached
+//! postorder — the traversal order presence propagation needs.  Branch
+//! lengths live on the child end of each edge, Newick-style.
+
+use crate::error::{Error, Result};
+
+/// Sentinel parent index of the root.
+pub const NO_PARENT: usize = usize::MAX;
+
+/// A rooted phylogenetic tree with branch lengths.
+#[derive(Clone, Debug)]
+pub struct PhyloTree {
+    /// Parent index per node; `NO_PARENT` for the root.
+    parent: Vec<usize>,
+    /// Branch length from node to its parent (0.0 for the root).
+    length: Vec<f32>,
+    /// Node name; empty for unnamed internals.
+    name: Vec<String>,
+    /// Children indices per node.
+    children: Vec<Vec<usize>>,
+    root: usize,
+    /// Cached postorder (children before parents).
+    postorder: Vec<usize>,
+}
+
+impl PhyloTree {
+    /// Build from parallel arrays.  `parent[root] == NO_PARENT` for exactly
+    /// one node; children lists are derived; postorder is computed.
+    pub fn new(parent: Vec<usize>, length: Vec<f32>, name: Vec<String>) -> Result<Self> {
+        let n = parent.len();
+        if n == 0 {
+            return Err(Error::InvalidInput("empty tree".into()));
+        }
+        if length.len() != n || name.len() != n {
+            return Err(Error::InvalidInput("tree array length mismatch".into()));
+        }
+        let mut root = None;
+        let mut children = vec![Vec::new(); n];
+        for (i, &p) in parent.iter().enumerate() {
+            if p == NO_PARENT {
+                if root.replace(i).is_some() {
+                    return Err(Error::InvalidInput("multiple roots".into()));
+                }
+            } else {
+                if p >= n {
+                    return Err(Error::InvalidInput(format!("node {i}: parent {p} out of range")));
+                }
+                children[p].push(i);
+            }
+        }
+        let root = root.ok_or_else(|| Error::InvalidInput("no root".into()))?;
+
+        // Iterative postorder; also validates connectivity / acyclicity.
+        let mut postorder = Vec::with_capacity(n);
+        let mut stack = vec![(root, 0usize)];
+        let mut visited = vec![false; n];
+        while let Some((node, ci)) = stack.pop() {
+            if ci < children[node].len() {
+                stack.push((node, ci + 1));
+                let ch = children[node][ci];
+                if visited[ch] {
+                    return Err(Error::InvalidInput("cycle in tree".into()));
+                }
+                visited[ch] = true;
+                stack.push((ch, 0));
+            } else {
+                postorder.push(node);
+            }
+        }
+        if postorder.len() != n {
+            return Err(Error::InvalidInput(format!(
+                "tree is disconnected: reached {} of {n} nodes",
+                postorder.len()
+            )));
+        }
+        Ok(PhyloTree { parent, length, name, children, root, postorder })
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    /// True if the tree has no nodes (never constructible — kept for API
+    /// completeness).
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Root index.
+    pub fn root(&self) -> usize {
+        self.root
+    }
+
+    /// Parent index (NO_PARENT for root).
+    pub fn parent(&self, i: usize) -> usize {
+        self.parent[i]
+    }
+
+    /// Branch length above node `i`.
+    pub fn length(&self, i: usize) -> f32 {
+        self.length[i]
+    }
+
+    /// Node name ("" if unnamed).
+    pub fn name(&self, i: usize) -> &str {
+        &self.name[i]
+    }
+
+    /// Children of node `i`.
+    pub fn children(&self, i: usize) -> &[usize] {
+        &self.children[i]
+    }
+
+    /// Nodes in postorder (children before parents).
+    pub fn postorder(&self) -> &[usize] {
+        &self.postorder
+    }
+
+    /// True if `i` is a leaf.
+    pub fn is_leaf(&self, i: usize) -> bool {
+        self.children[i].is_empty()
+    }
+
+    /// Indices of all leaves, in postorder.
+    pub fn leaves(&self) -> Vec<usize> {
+        self.postorder.iter().copied().filter(|&i| self.is_leaf(i)).collect()
+    }
+
+    /// Total branch length (sum over non-root edges).
+    pub fn total_length(&self) -> f64 {
+        (0..self.len())
+            .filter(|&i| self.parent[i] != NO_PARENT)
+            .map(|i| self.length[i] as f64)
+            .sum()
+    }
+
+    /// Look up a leaf by name.
+    pub fn leaf_by_name(&self, name: &str) -> Option<usize> {
+        (0..self.len()).find(|&i| self.is_leaf(i) && self.name[i] == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ((A:1,B:2)I:0.5,C:3)R  — 5 nodes.
+    pub(crate) fn small_tree() -> PhyloTree {
+        //          R(4)
+        //        /      \
+        //      I(2):0.5  C(3):3
+        //     /   \
+        //  A(0):1  B(1):2
+        PhyloTree::new(
+            vec![2, 2, 4, 4, NO_PARENT],
+            vec![1.0, 2.0, 0.5, 3.0, 0.0],
+            vec!["A".into(), "B".into(), "I".into(), "C".into(), "R".into()],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn structure_queries() {
+        let t = small_tree();
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.root(), 4);
+        assert!(t.is_leaf(0));
+        assert!(!t.is_leaf(2));
+        assert_eq!(t.children(4), &[2, 3]);
+        assert_eq!(t.leaves(), vec![0, 1, 3]);
+        assert_eq!(t.leaf_by_name("B"), Some(1));
+        assert_eq!(t.leaf_by_name("I"), None, "internal nodes are not leaves");
+        assert!((t.total_length() - 6.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn postorder_children_first() {
+        let t = small_tree();
+        let pos: Vec<usize> = {
+            let mut pos = vec![0; t.len()];
+            for (ord, &n) in t.postorder().iter().enumerate() {
+                pos[n] = ord;
+            }
+            pos
+        };
+        for i in 0..t.len() {
+            if t.parent(i) != NO_PARENT {
+                assert!(pos[i] < pos[t.parent(i)], "child {i} after parent");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        // no root
+        assert!(PhyloTree::new(vec![1, 0], vec![0.0; 2], vec!["".into(); 2]).is_err());
+        // two roots
+        assert!(PhyloTree::new(
+            vec![NO_PARENT, NO_PARENT],
+            vec![0.0; 2],
+            vec!["".into(); 2]
+        )
+        .is_err());
+        // parent out of range
+        assert!(PhyloTree::new(vec![NO_PARENT, 9], vec![0.0; 2], vec!["".into(); 2]).is_err());
+        // length mismatch
+        assert!(PhyloTree::new(vec![NO_PARENT], vec![], vec!["".into()]).is_err());
+        // empty
+        assert!(PhyloTree::new(vec![], vec![], vec![]).is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! Weighted (normalized) UniFrac — the abundance-aware sibling metric.
+//!
+//! The paper's input is *Unweighted* UniFrac, but unifrac-binaries (the
+//! system the paper's kernel lives in) ships both, and downstream users
+//! expect both.  Normalized Weighted UniFrac (Lozupone 2007):
+//!
+//! ```text
+//! d(i,j) = Σ_b L_b · |u_bi − u_bj|  /  Σ_b L_b · (u_bi + u_bj)
+//! ```
+//!
+//! where `u_bi` is the fraction of sample i's total counts that sit under
+//! branch b (proportional abundances propagated leaf → root).  Unlike the
+//! presence masks of the unweighted metric, the propagated quantity is a
+//! dense f64 per (branch, sample), so the hot loop is a streaming
+//! |a−b| / (a+b) accumulation over branches — still embarrassingly
+//! parallel over sample pairs.
+
+use super::otu::OtuTable;
+use super::tree::{PhyloTree, NO_PARENT};
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+
+/// Weighted-normalized UniFrac distance matrix.
+///
+/// `threads` = 0 uses all available cores.  Errors on samples with zero
+/// total counts (their proportions are undefined) and on observed features
+/// missing from the tree.
+pub fn weighted_unifrac(
+    tree: &PhyloTree,
+    table: &OtuTable,
+    threads: usize,
+) -> Result<DistanceMatrix> {
+    let s = table.n_samples();
+    if s < 2 {
+        return Err(Error::InvalidInput("need at least 2 samples".into()));
+    }
+    // Feature -> leaf map (same contract as unweighted).
+    let mut by_name = std::collections::HashMap::new();
+    for &l in &tree.leaves() {
+        by_name.insert(tree.name(l).to_string(), l);
+    }
+    let mut leaf_of_feature = Vec::with_capacity(table.n_features());
+    for (f, id) in table.feature_ids().iter().enumerate() {
+        match by_name.get(id) {
+            Some(&l) => leaf_of_feature.push(Some(l)),
+            None => {
+                if (0..s).any(|x| table.present(f, x)) {
+                    return Err(Error::InvalidInput(format!(
+                        "feature {id:?} has observations but no leaf in the tree"
+                    )));
+                }
+                leaf_of_feature.push(None);
+            }
+        }
+    }
+
+    // Sample totals for normalization.
+    let mut totals = vec![0.0f64; s];
+    for f in 0..table.n_features() {
+        for (x, t) in totals.iter_mut().enumerate() {
+            *t += table.count(f, x) as f64;
+        }
+    }
+    if let Some(x) = totals.iter().position(|&t| t == 0.0) {
+        return Err(Error::InvalidInput(format!(
+            "sample {:?} has zero total count",
+            table.sample_ids()[x]
+        )));
+    }
+
+    // Propagate proportional abundance leaf -> root.
+    // abund[node * s + sample], f64 (node count can be ~2 * taxa).
+    let nn = tree.len();
+    let mut abund = vec![0.0f64; nn * s];
+    for (f, leaf) in leaf_of_feature.iter().enumerate() {
+        if let Some(leaf) = *leaf {
+            let row = &mut abund[leaf * s..(leaf + 1) * s];
+            for (x, r) in row.iter_mut().enumerate() {
+                let c = table.count(f, x);
+                if c > 0 {
+                    *r += c as f64 / totals[x];
+                }
+            }
+        }
+    }
+    for &node in tree.postorder() {
+        let p = tree.parent(node);
+        if p == NO_PARENT {
+            continue;
+        }
+        // Rows `node` and `p` are disjoint (a tree has no self-parents).
+        let base = abund.as_mut_ptr();
+        unsafe {
+            let src = std::slice::from_raw_parts(base.add(node * s), s);
+            let dst = std::slice::from_raw_parts_mut(base.add(p * s), s);
+            for (d, v) in dst.iter_mut().zip(src) {
+                *d += *v;
+            }
+        }
+    }
+
+    // Branch list with lengths.
+    let branches: Vec<(usize, f64)> = (0..nn)
+        .filter(|&i| tree.parent(i) != NO_PARENT && tree.length(i) != 0.0)
+        .map(|i| (i, tree.length(i) as f64))
+        .collect();
+
+    let threads = crate::permanova::resolve_threads(threads).min(s.max(1));
+    let mut mat = DistanceMatrix::zeros(s);
+    let mat_ptr = SendPtr(mat.data_mut().as_mut_ptr());
+    let cursor = std::sync::atomic::AtomicUsize::new(0);
+    let abund = &abund;
+    let branches = &branches;
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mat_ptr = &mat_ptr;
+                loop {
+                    let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= s {
+                        break;
+                    }
+                    for j in (i + 1)..s {
+                        let mut num = 0.0f64;
+                        let mut den = 0.0f64;
+                        for &(b, len) in branches {
+                            let ua = abund[b * s + i];
+                            let ub = abund[b * s + j];
+                            num += len * (ua - ub).abs();
+                            den += len * (ua + ub);
+                        }
+                        let d = if den > 0.0 { (num / den) as f32 } else { 0.0 };
+                        // SAFETY: row i is owned by exactly one thread.
+                        unsafe {
+                            *mat_ptr.0.add(i * s + j) = d;
+                            *mat_ptr.0.add(j * s + i) = d;
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    Ok(mat)
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Sync for SendPtr {}
+unsafe impl Send for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::unifrac::newick;
+
+    fn fixture() -> (PhyloTree, OtuTable) {
+        let tree = newick::parse("((A:1,B:1)I:1,(C:1,D:1)J:1)R;").unwrap();
+        let features = vec!["A".to_string(), "B".into(), "C".into(), "D".into()];
+        let samples: Vec<String> = (0..3).map(|i| format!("s{i}")).collect();
+        // s0 = {A: 4}, s1 = {B: 4}, s2 = {A: 2, B: 2}
+        #[rustfmt::skip]
+        let counts = vec![
+            4, 0, 2, // A
+            0, 4, 2, // B
+            0, 0, 0, // C
+            0, 0, 0, // D
+        ];
+        (tree, OtuTable::new(features, samples, counts).unwrap())
+    }
+
+    #[test]
+    fn hand_computed() {
+        let (tree, table) = fixture();
+        let m = weighted_unifrac(&tree, &table, 1).unwrap();
+        // s0 vs s1: u(A)=1 vs 0, u(B)=0 vs 1, u(I)=1 vs 1.
+        // num = 1·|1-0| + 1·|0-1| + 1·|1-1| = 2; den = 1+1+2 = 4 -> 0.5
+        assert!((m.get(0, 1) - 0.5).abs() < 1e-6, "{}", m.get(0, 1));
+        // s0 vs s2: A: |1-0.5|=0.5, B: |0-0.5|=0.5, I: |1-1|=0
+        // num = 1.0; den = 1.5 + 0.5 + 2 = 4 -> 0.25
+        assert!((m.get(0, 2) - 0.25).abs() < 1e-6, "{}", m.get(0, 2));
+        m.validate(1e-6).unwrap();
+    }
+
+    #[test]
+    fn identical_abundances_zero_distance() {
+        let (tree, table) = fixture();
+        let m = weighted_unifrac(&tree, &table, 1).unwrap();
+        assert_eq!(m.get(0, 0), 0.0);
+        // Scale invariance: proportions, not raw counts, matter.
+        let features = vec!["A".to_string(), "B".into(), "C".into(), "D".into()];
+        let samples = vec!["x".to_string(), "y".into()];
+        let t2 = OtuTable::new(features, samples, vec![1, 100, 1, 100, 0, 0, 0, 0]).unwrap();
+        let m2 = weighted_unifrac(&tree, &t2, 1).unwrap();
+        assert!(m2.get(0, 1) < 1e-9, "same proportions -> 0, got {}", m2.get(0, 1));
+    }
+
+    #[test]
+    fn disjoint_clades_distance_one() {
+        let tree = newick::parse("((A:1,B:1)I:1,(C:1,D:1)J:1)R;").unwrap();
+        let features = vec!["A".to_string(), "C".into()];
+        let samples = vec!["x".to_string(), "y".into()];
+        let table = OtuTable::new(features, samples, vec![3, 0, 0, 5]).unwrap();
+        let m = weighted_unifrac(&tree, &table, 1).unwrap();
+        assert!((m.get(0, 1) - 1.0).abs() < 1e-9, "{}", m.get(0, 1));
+    }
+
+    #[test]
+    fn weighted_differs_from_unweighted_on_abundance_shift() {
+        // Same presence everywhere, different abundances: unweighted says
+        // 0, weighted says > 0.
+        let tree = newick::parse("((A:1,B:1)I:1,C:2)R;").unwrap();
+        let features = vec!["A".to_string(), "B".into(), "C".into()];
+        let samples = vec!["x".to_string(), "y".into()];
+        let table = OtuTable::new(features, samples, vec![9, 1, 1, 1, 1, 9]).unwrap();
+        let uw = super::super::unweighted_unifrac(&tree, &table, 1).unwrap();
+        let w = weighted_unifrac(&tree, &table, 1).unwrap();
+        assert_eq!(uw.get(0, 1), 0.0, "same presence");
+        assert!(w.get(0, 1) > 0.2, "abundance shift: {}", w.get(0, 1));
+    }
+
+    #[test]
+    fn zero_count_sample_rejected() {
+        let tree = newick::parse("(A:1,B:1);").unwrap();
+        let table = OtuTable::new(
+            vec!["A".to_string(), "B".into()],
+            vec!["x".to_string(), "y".into()],
+            vec![1, 0, 1, 0],
+        )
+        .unwrap();
+        assert!(weighted_unifrac(&tree, &table, 1).is_err());
+    }
+
+    #[test]
+    fn threads_deterministic_and_metric() {
+        let ds = crate::unifrac::generate(&crate::unifrac::SynthParams {
+            n_taxa: 96,
+            n_samples: 40,
+            n_envs: 3,
+            seed: 9,
+            ..Default::default()
+        })
+        .unwrap();
+        let m1 = weighted_unifrac(&ds.tree, &ds.table, 1).unwrap();
+        let m4 = weighted_unifrac(&ds.tree, &ds.table, 4).unwrap();
+        assert_eq!(m1, m4);
+        m1.validate(1e-6).unwrap();
+        for v in m1.data() {
+            assert!((0.0..=1.0 + 1e-6).contains(v));
+        }
+    }
+}

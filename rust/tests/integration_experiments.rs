@@ -1,0 +1,122 @@
+//! Integration: the experiment surface (Figure 1, Appendix A1/A2) through
+//! the public API — the assertions EXPERIMENTS.md's claims rest on.
+
+use permanova_apu::cli::{dispatch, Args};
+use permanova_apu::simulator::{
+    fig1_rows, paper_a2_reference, simulate_stream, Mi300a, NodeTopology, StreamDevice, Workload,
+};
+
+fn cli(v: &[&str]) -> String {
+    dispatch(&Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()).unwrap()
+}
+
+/// FIG1: the complete claim set of the paper's one figure, via public API.
+#[test]
+fn fig1_claims() {
+    let rows = fig1_rows(&Mi300a::default(), &Workload::paper());
+    let by = |label: &str| rows.iter().find(|r| r.label == label).unwrap().seconds;
+
+    let cpu_brute = by("CPU brute force (no SMT)");
+    let cpu_brute_smt = by("CPU brute force (SMT)");
+    let cpu_tiled = by("CPU tiled (no SMT)");
+    let cpu_tiled_smt = by("CPU tiled (SMT)");
+    let gpu_brute = by("GPU brute force");
+    let gpu_tiled = by("GPU tiled");
+
+    // §3: "the GPU implementation is over 6x faster" (vs brute non-SMT CPU).
+    let headline = cpu_brute / gpu_brute;
+    assert!(headline > 6.0, "headline speedup {headline:.2}");
+
+    // §3: "the more flexible nature of the CPU [...] claw back some of that
+    // advantage [...] especially noticeable when paired with SMT".
+    assert!(cpu_tiled < cpu_brute);
+    assert!(cpu_tiled_smt < cpu_tiled);
+    assert!(cpu_brute_smt < cpu_brute);
+    let clawed = cpu_brute / cpu_tiled_smt;
+    assert!(clawed > 1.5, "tiled+SMT claws back {clawed:.2}x");
+    // ... but does not overturn the GPU win:
+    assert!(gpu_brute < cpu_tiled_smt);
+
+    // §2: "any attempt to tile the [GPU] algorithm resulted in drastically
+    // slower execution".
+    assert!(gpu_tiled / gpu_brute > 3.0);
+}
+
+/// A2: simulated STREAM matches every printed number within 2%.
+#[test]
+fn a2_claims() {
+    let m = Mi300a::default();
+    for dev in [StreamDevice::Cpu, StreamDevice::Gpu] {
+        let sim = simulate_stream(&m, dev, 1_000_000_000);
+        for (kernel, want) in paper_a2_reference(dev) {
+            let got = sim.iter().find(|r| r.kernel == kernel).unwrap().best_rate_mbs;
+            assert!(((got - want) / want).abs() < 0.02, "{dev:?} {kernel:?}");
+        }
+    }
+    // "GPU cores report approximately 3.0 TB/s, while the CPU cores report
+    // approximately 0.2 TB/s".
+    let cpu = simulate_stream(&m, StreamDevice::Cpu, 1 << 20)[3].best_rate_mbs;
+    let gpu = simulate_stream(&m, StreamDevice::Gpu, 1 << 20)[3].best_rate_mbs;
+    assert!((cpu / 1e6 - 0.2).abs() < 0.05, "CPU ~0.2 TB/s, got {cpu}");
+    assert!((gpu / 1e6 - 3.0).abs() < 0.3, "GPU ~3.0 TB/s, got {gpu}");
+}
+
+/// A1: the topology module reproduces the printed lscpu facts and the
+/// paper's exact pinning line.
+#[test]
+fn a1_claims() {
+    let t = NodeTopology::cosmos_node();
+    assert_eq!(t.logical_cpus(), 192);
+    assert_eq!(t.cpuset_for_apu(0, true), "0-23,96-119"); // the taskset line
+    let render = t.render();
+    for needle in [
+        "CPU(s):               192",
+        "Thread(s) per core:   2",
+        "Core(s) per socket:   24",
+        "Socket(s):            4",
+        "L3:                   384 MiB (12 instances)",
+        "NUMA node(s):         4",
+    ] {
+        assert!(render.contains(needle), "missing {needle:?}");
+    }
+}
+
+/// The experiment CLIs run end-to-end and carry their key numbers.
+#[test]
+fn experiment_clis() {
+    let fig1 = cli(&["fig1"]);
+    assert!(fig1.contains("GPU brute vs CPU brute (no SMT):"));
+
+    let sim = cli(&["simulate"]);
+    assert!(sim.contains("CPU tiled (SMT)"));
+    assert!(sim.contains("Memory"));
+
+    let topo = cli(&["simulate", "--topology"]);
+    assert!(topo.contains("0-23,96-119"));
+
+    let a2 = cli(&["stream", "--simulate"]);
+    assert!(a2.contains("Triad:"));
+    // Every simulated-vs-paper delta under 2%.
+    for line in a2.lines().filter(|l| l.contains('%')) {
+        let pct: f64 = line
+            .rsplit_once(|c| c == '+' || c == '-')
+            .and_then(|(_, p)| p.trim_end_matches('%').parse().ok())
+            .unwrap_or(0.0);
+        assert!(pct.abs() < 2.0, "delta too large: {line}");
+    }
+}
+
+/// Workload arithmetic: the paper's §2 envelope quantities.
+#[test]
+fn workload_envelope() {
+    // "a distance matrix between 1k^2 and 100k^2 elements, and [...]
+    // between 1k and 1M permutations"
+    let small = Workload { n_dims: 1_000, n_perms: 1_000, n_groups: 4 };
+    let large = Workload { n_dims: 100_000, n_perms: 1_000_000, n_groups: 4 };
+    assert_eq!(small.matrix_bytes(), 4_000_000);
+    assert_eq!(large.matrix_bytes(), 40_000_000_000);
+    // The paper's own point: ~2.5 GB matrix, ~5 TB of streaming at 3999 perms.
+    let paper = Workload::paper();
+    let gb = paper.matrix_bytes() as f64 / 1e9;
+    assert!((2.4..2.7).contains(&gb), "matrix {gb} GB");
+}

@@ -1,0 +1,223 @@
+//! Integration: PERMANOVA statistics across kernels, threads and scales.
+//!
+//! These are the cross-module invariants a downstream user relies on —
+//! property-test style (seeded sweeps; the offline crate set has no
+//! proptest, so cases are enumerated deterministically).
+
+use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::permanova::{
+    fstat_from_sw, permanova, st_of, sw_brute_f64, sw_of, sw_one, Grouping, PermanovaOpts,
+    SwAlgorithm,
+};
+use permanova_apu::rng::{shuffle, PermutationPlan, Xoshiro256pp};
+
+fn random_grouping(n: usize, k: usize, seed: u64) -> Grouping {
+    let mut labels: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+    let mut rng = Xoshiro256pp::new(seed);
+    shuffle(&mut rng, &mut labels);
+    Grouping::new(labels).unwrap()
+}
+
+/// Property: s_W + s_A == s_T for every algorithm, every labelling.
+#[test]
+fn decomposition_identity_sweep() {
+    for seed in 0..12u64 {
+        let n = 20 + (seed as usize * 13) % 90;
+        let k = 2 + (seed as usize) % 5;
+        let mat = DistanceMatrix::random_euclidean(n, 6, seed);
+        let grouping = random_grouping(n, k, seed ^ 0xF00);
+        let s_t = st_of(&mat);
+        for algo in [
+            SwAlgorithm::Brute,
+            SwAlgorithm::Flat,
+            SwAlgorithm::Tiled { tile: 7 },
+            SwAlgorithm::Tiled { tile: 64 },
+        ] {
+            let s_w = sw_of(algo, &mat, &grouping) as f64;
+            let f = fstat_from_sw(s_w, s_t, n, k);
+            // Reconstruct s_A from F and check the decomposition closes.
+            let s_a = f * (k as f64 - 1.0) * s_w / (n as f64 - k as f64);
+            assert!(
+                ((s_w + s_a) - s_t).abs() / s_t < 1e-4,
+                "seed {seed} algo {algo:?}: {s_w} + {s_a} != {s_t}"
+            );
+        }
+    }
+}
+
+/// Property: relabelling groups bijectively (and permuting inv_sizes to
+/// match) leaves s_W unchanged.
+#[test]
+fn label_bijection_invariance_sweep() {
+    for seed in 0..8u64 {
+        let n = 30 + (seed as usize * 7) % 40;
+        let k = 3 + (seed as usize) % 3;
+        let mat = DistanceMatrix::random_euclidean(n, 5, seed);
+        let grouping = random_grouping(n, k, seed);
+        let base = sw_brute_f64(mat.data(), n, grouping.labels(), grouping.inv_sizes());
+
+        // Build the relabelling perm: g -> (g + 1) % k.
+        let relabel: Vec<u32> = grouping.labels().iter().map(|&g| (g + 1) % k as u32).collect();
+        let mut inv_re = vec![0.0f32; k];
+        for g in 0..k {
+            inv_re[(g + 1) % k] = grouping.inv_sizes()[g];
+        }
+        let re = sw_brute_f64(mat.data(), n, &relabel, &inv_re);
+        assert!((base - re).abs() / base < 1e-10, "seed {seed}");
+    }
+}
+
+/// Property: consistently permuting objects (matrix rows+cols AND labels)
+/// leaves the statistic unchanged — PERMANOVA is object-order blind.
+#[test]
+fn object_permutation_invariance_sweep() {
+    for seed in 0..8u64 {
+        let n = 24 + (seed as usize * 5) % 30;
+        let k = 2 + (seed as usize) % 4;
+        let mat = DistanceMatrix::random_euclidean(n, 4, seed);
+        let grouping = random_grouping(n, k, seed);
+
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Xoshiro256pp::new(seed ^ 0xBEEF);
+        // Fisher-Yates over the order vector.
+        for i in (1..n).rev() {
+            let j = rng.gen_range((i + 1) as u32) as usize;
+            order.swap(i, j);
+        }
+        let mut pm = DistanceMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let d = mat.get(order[i], order[j]);
+                pm.data_mut()[i * n + j] = d;
+            }
+        }
+        let plabels: Vec<u32> = order.iter().map(|&o| grouping.labels()[o]).collect();
+
+        let a = sw_brute_f64(mat.data(), n, grouping.labels(), grouping.inv_sizes());
+        let b = sw_brute_f64(pm.data(), n, &plabels, grouping.inv_sizes());
+        assert!((a - b).abs() / a < 1e-10, "seed {seed}");
+    }
+}
+
+/// Property: all kernel formulations agree to f32 tolerance on odd shapes
+/// (primes, tile-straddling sizes) and extreme tiles.
+#[test]
+fn kernel_agreement_odd_shapes() {
+    for &n in &[5usize, 17, 63, 65, 127, 251] {
+        let k = 2 + n % 3;
+        let mat = DistanceMatrix::random_euclidean(n, 3, n as u64);
+        let grouping = random_grouping(n, k, n as u64);
+        let oracle = sw_brute_f64(mat.data(), n, grouping.labels(), grouping.inv_sizes());
+        for algo in [
+            SwAlgorithm::Brute,
+            SwAlgorithm::Flat,
+            SwAlgorithm::Tiled { tile: 1 },
+            SwAlgorithm::Tiled { tile: n },
+            SwAlgorithm::Tiled { tile: n + 1 },
+            SwAlgorithm::Tiled { tile: 1 << 20 },
+        ] {
+            let got = sw_one(algo, mat.data(), n, grouping.labels(), grouping.inv_sizes()) as f64;
+            assert!(
+                (got - oracle).abs() / oracle.max(1e-12) < 1e-4,
+                "n={n} {algo:?}: {got} vs {oracle}"
+            );
+        }
+    }
+}
+
+/// skbio-pinned case: perfectly separated two-group data must give the
+/// theoretical maximum significance p = 1/(P+1) and a huge F.
+#[test]
+fn separated_groups_extreme_statistics() {
+    let n = 30;
+    let mut mat = DistanceMatrix::zeros(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let same = (i < n / 2) == (j < n / 2);
+            mat.set_sym(i, j, if same { 0.01 } else { 1.0 });
+        }
+    }
+    let labels: Vec<u32> = (0..n).map(|i| (i >= n / 2) as u32).collect();
+    let grouping = Grouping::new(labels).unwrap();
+    let res = permanova(&mat, &grouping, 999, &PermanovaOpts::default()).unwrap();
+    assert!(res.f_obs > 1000.0, "F = {}", res.f_obs);
+    assert!((res.p_value - 0.001).abs() < 1e-9, "p = {}", res.p_value);
+}
+
+/// Under the null (no structure), the p-value must be approximately
+/// uniform: across many datasets its mean sits near 0.5.
+#[test]
+fn null_pvalues_roughly_uniform() {
+    let mut ps = Vec::new();
+    for seed in 0..20u64 {
+        let n = 30;
+        let mat = DistanceMatrix::random_euclidean(n, 10, seed * 31 + 5);
+        let grouping = random_grouping(n, 3, seed * 17 + 1);
+        let res = permanova(
+            &mat,
+            &grouping,
+            199,
+            &PermanovaOpts { seed: seed ^ 0xAB, ..Default::default() },
+        )
+        .unwrap();
+        ps.push(res.p_value);
+    }
+    let mean = ps.iter().sum::<f64>() / ps.len() as f64;
+    assert!(
+        (0.3..0.7).contains(&mean),
+        "null p-values not uniform-ish: mean {mean}, ps {ps:?}"
+    );
+    // And none of them can be "significant at 0.001" by luck with 199 perms.
+    assert!(ps.iter().all(|&p| p >= 0.005), "{ps:?}");
+}
+
+/// Thread count and batch decomposition never change results (bitwise for
+/// a fixed algorithm).
+#[test]
+fn threading_determinism_large() {
+    let n = 150;
+    let mat = DistanceMatrix::random_euclidean(n, 8, 2);
+    let grouping = random_grouping(n, 5, 9);
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), 33, 301);
+    let single = permanova_apu::permanova::sw_plan_range(
+        &mat,
+        &plan,
+        0,
+        301,
+        grouping.inv_sizes(),
+        SwAlgorithm::Tiled { tile: 32 },
+        1,
+    );
+    for threads in [2, 4, 7] {
+        let multi = permanova_apu::permanova::sw_plan_range(
+            &mat,
+            &plan,
+            0,
+            301,
+            grouping.inv_sizes(),
+            SwAlgorithm::Tiled { tile: 32 },
+            threads,
+        );
+        assert_eq!(single, multi, "threads {threads}");
+    }
+}
+
+/// Statistical power: planted effects of decreasing strength — stronger
+/// effects must never be less significant.
+#[test]
+fn monotone_effect_size() {
+    let n = 48;
+    let k = 2;
+    let mut last_f = f64::INFINITY;
+    for (i, within) in [0.2f32, 0.5, 0.8].iter().enumerate() {
+        let mat = DistanceMatrix::planted_blocks(n, k, *within, 1.0, 7 + i as u64);
+        let grouping = Grouping::new((0..n).map(|i| (i % k) as u32).collect()).unwrap();
+        let res = permanova(&mat, &grouping, 99, &PermanovaOpts::default()).unwrap();
+        assert!(
+            res.f_obs < last_f,
+            "weaker effect (within={within}) should not raise F: {} vs {last_f}",
+            res.f_obs
+        );
+        last_f = res.f_obs;
+    }
+}

@@ -1,0 +1,167 @@
+//! Integration: the full microbiome pipeline (tree -> table -> UniFrac ->
+//! PERMANOVA) and the UniFrac metric's mathematical properties at scale.
+
+use permanova_apu::config::{Backend, DataSource, RunConfig};
+use permanova_apu::coordinator::{load_data, run_config, run_on_backend};
+use permanova_apu::permanova::{Grouping, SwAlgorithm};
+use permanova_apu::rng::{shuffle, Xoshiro256pp};
+use permanova_apu::unifrac::{generate, newick, unweighted_unifrac, SynthParams};
+
+/// UniFrac over a generated community is a valid distance matrix and
+/// satisfies the triangle inequality (sampled).
+#[test]
+fn unifrac_metric_properties() {
+    let ds = generate(&SynthParams {
+        n_taxa: 200,
+        n_samples: 50,
+        n_envs: 4,
+        seed: 3,
+        ..Default::default()
+    })
+    .unwrap();
+    let m = unweighted_unifrac(&ds.tree, &ds.table, 0).unwrap();
+    m.validate(1e-6).unwrap();
+    let n = m.n();
+    // Range [0, 1].
+    for v in m.data() {
+        assert!((0.0..=1.0 + 1e-6).contains(v));
+    }
+    // Triangle inequality, sampled systematically.
+    let mut rng = Xoshiro256pp::new(1);
+    for _ in 0..2000 {
+        let i = rng.gen_range(n as u32) as usize;
+        let j = rng.gen_range(n as u32) as usize;
+        let l = rng.gen_range(n as u32) as usize;
+        assert!(
+            m.get(i, j) <= m.get(i, l) + m.get(l, j) + 1e-5,
+            "triangle violated at ({i},{j},{l})"
+        );
+    }
+}
+
+/// The pipeline detects planted environments and clears shuffled controls,
+/// deterministically by seed.
+#[test]
+fn pipeline_signal_and_null() {
+    let ds = generate(&SynthParams {
+        n_taxa: 256,
+        n_samples: 60,
+        n_envs: 3,
+        seed: 11,
+        ..Default::default()
+    })
+    .unwrap();
+    let mat = unweighted_unifrac(&ds.tree, &ds.table, 0).unwrap();
+
+    let cfg = RunConfig {
+        n_perms: 199,
+        algo: SwAlgorithm::Tiled { tile: 128 },
+        ..Default::default()
+    };
+    let signal = run_on_backend(&cfg, &mat, &ds.grouping).unwrap();
+    assert!(signal.p_value <= 0.01, "planted environments: p = {}", signal.p_value);
+
+    let mut labels = ds.grouping.labels().to_vec();
+    let mut rng = Xoshiro256pp::new(5);
+    shuffle(&mut rng, &mut labels);
+    let null_grouping = Grouping::new(labels).unwrap();
+    let null = run_on_backend(&cfg, &mat, &null_grouping).unwrap();
+    assert!(null.p_value > 0.05, "shuffled control: p = {}", null.p_value);
+}
+
+/// The config-driven path produces the identical report to the manual
+/// pipeline (load_data is deterministic in the seed).
+#[test]
+fn config_driven_pipeline_deterministic() {
+    let cfg = RunConfig {
+        data: DataSource::SyntheticUnifrac { n_taxa: 96, n_samples: 28, n_groups: 2 },
+        n_perms: 49,
+        seed: 77,
+        ..Default::default()
+    };
+    let a = run_config(&cfg).unwrap();
+    let b = run_config(&cfg).unwrap();
+    assert_eq!(a.f_obs, b.f_obs);
+    assert_eq!(a.p_value, b.p_value);
+
+    // load_data + run_on_backend == run_config.
+    let (mat, grouping) = load_data(&cfg).unwrap();
+    let c = run_on_backend(&cfg, &mat, &grouping).unwrap();
+    assert_eq!(a.f_obs, c.f_obs);
+}
+
+/// A real-world-shaped Newick file (quoted names, comments, scientific
+/// notation) flows through the whole pipeline.
+#[test]
+fn newick_to_permanova_roundtrip() {
+    // 8 leaves, two clades.
+    let nwk = "[16S placement] (('taxon A':0.12,'taxon B':0.08)cladeL:0.3,\
+               (tC:1.1e-1,(tD:0.05,tE:0.07):0.02)cladeR:0.25,(tF:0.2,(tG:0.3,tH:0.1):0.15):0.2);";
+    let tree = newick::parse(nwk).unwrap();
+    assert_eq!(tree.leaves().len(), 8);
+
+    // 12 samples: half live in cladeL+tC, half in cladeR's tail.
+    let features: Vec<String> = tree
+        .leaves()
+        .iter()
+        .map(|&l| tree.name(l).to_string())
+        .collect();
+    let samples: Vec<String> = (0..12).map(|i| format!("s{i}")).collect();
+    let mut counts = vec![0u32; features.len() * 12];
+    for s in 0..12 {
+        for (fi, fname) in features.iter().enumerate() {
+            let left_pool = fname.contains('A') || fname.contains('B') || fname == "tC";
+            let present = if s % 2 == 0 { left_pool } else { !left_pool };
+            if present {
+                counts[fi * 12 + s] = 1 + (s as u32 % 3);
+            }
+        }
+    }
+    let table = permanova_apu::unifrac::OtuTable::new(features, samples, counts).unwrap();
+    let mat = unweighted_unifrac(&tree, &table, 1).unwrap();
+    mat.validate(1e-6).unwrap();
+
+    let grouping = Grouping::new((0..12).map(|i| (i % 2) as u32).collect()).unwrap();
+    let cfg = RunConfig { n_perms: 99, ..Default::default() };
+    let r = run_on_backend(&cfg, &mat, &grouping).unwrap();
+    assert!(r.p_value <= 0.05, "clade-split communities must separate: p = {}", r.p_value);
+}
+
+/// Backends agree end-to-end on UniFrac input (native vs simulated; XLA
+/// covered in integration_xla).
+#[test]
+fn backends_agree_on_pipeline_data() {
+    let cfg = RunConfig {
+        data: DataSource::SyntheticUnifrac { n_taxa: 80, n_samples: 24, n_groups: 2 },
+        n_perms: 59,
+        seed: 13,
+        ..Default::default()
+    };
+    let (mat, grouping) = load_data(&cfg).unwrap();
+    let nat = run_on_backend(&cfg, &mat, &grouping).unwrap();
+    let sim = run_on_backend(
+        &RunConfig { backend: Backend::Simulated, ..cfg.clone() },
+        &mat,
+        &grouping,
+    )
+    .unwrap();
+    assert!((nat.f_obs - sim.f_obs).abs() / nat.f_obs.abs().max(1e-12) < 1e-4);
+    assert_eq!(nat.p_value, sim.p_value);
+}
+
+/// Bigger-than-one-stripe sample counts (>64) run threaded and stay valid.
+#[test]
+fn unifrac_multithreaded_multistripe() {
+    let ds = generate(&SynthParams {
+        n_taxa: 128,
+        n_samples: 130, // 3 stripes
+        n_envs: 2,
+        seed: 21,
+        ..Default::default()
+    })
+    .unwrap();
+    let m1 = unweighted_unifrac(&ds.tree, &ds.table, 1).unwrap();
+    let m4 = unweighted_unifrac(&ds.tree, &ds.table, 4).unwrap();
+    assert_eq!(m1, m4, "thread count must not change UniFrac");
+    m1.validate(1e-6).unwrap();
+}

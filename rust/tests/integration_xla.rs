@@ -1,0 +1,163 @@
+//! Integration: the three-layer AOT stack (Pallas -> HLO -> PJRT) against
+//! the native oracle, across every artifact the manifest ships.
+//!
+//! All tests skip silently when `make artifacts` hasn't run (clean
+//! checkout); CI runs them after the artifacts step.
+
+use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::permanova::{fstat_from_sw, st_of, sw_brute_f64, Grouping};
+use permanova_apu::rng::PermutationPlan;
+use permanova_apu::runtime::{artifacts_dir_for_tests, XlaRuntime};
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = artifacts_dir_for_tests();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skip: no artifacts at {dir:?}");
+        return None;
+    }
+    Some(XlaRuntime::new(dir).expect("runtime"))
+}
+
+/// Every artifact in the manifest compiles and matches the native oracle
+/// at its exact lowered shape.
+#[test]
+fn every_artifact_parity() {
+    let Some(rt) = runtime() else { return };
+    let metas: Vec<_> = rt.manifest().artifacts().to_vec();
+    for meta in metas {
+        let n = meta.n_dims;
+        let k = meta.n_groups;
+        let b = meta.batch.min(8); // keep runtime modest
+        let mat = DistanceMatrix::random_euclidean(n, 8, meta.n_dims as u64);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 3, b);
+        let rows = plan.batch(0, b);
+
+        let sess = rt
+            .session(&meta.kernel, mat.data(), n, &grouping)
+            .unwrap_or_else(|e| panic!("{}: {e}", meta.name));
+        let out = sess.run_batch(&rows, b).unwrap_or_else(|e| panic!("{}: {e}", meta.name));
+
+        let s_t = st_of(&mat);
+        for r in 0..b {
+            let want =
+                sw_brute_f64(mat.data(), n, &rows[r * n..(r + 1) * n], grouping.inv_sizes());
+            let got = out.s_w[r] as f64;
+            let rel = (got - want).abs() / want.max(1e-9);
+            assert!(rel < 2e-4, "{} row {r}: sw rel err {rel}", meta.name);
+            let want_f = fstat_from_sw(want, s_t, n, k);
+            let rel_f = (out.f_stats[r] - want_f).abs() / want_f.abs().max(1e-9);
+            assert!(rel_f < 2e-3, "{} row {r}: f rel err {rel_f}", meta.name);
+        }
+    }
+}
+
+/// Sessions are reusable across many batches with consistent results
+/// (device-resident matrix is not corrupted by subsequent uploads).
+#[test]
+fn session_reuse_many_batches() {
+    let Some(rt) = runtime() else { return };
+    let n = 64;
+    let mat = DistanceMatrix::random_euclidean(n, 4, 5);
+    let grouping = Grouping::balanced(n, 4).unwrap();
+    let sess = rt.session("matmul", mat.data(), n, &grouping).unwrap();
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), 9, 64);
+
+    let mut first_batch_f = None;
+    for round in 0..4 {
+        let rows = plan.batch(0, 16);
+        let out = sess.run_batch(&rows, 16).unwrap();
+        match &first_batch_f {
+            None => first_batch_f = Some(out.f_stats.clone()),
+            Some(want) => {
+                assert_eq!(&out.f_stats, want, "round {round}: drift across re-execution")
+            }
+        }
+    }
+}
+
+/// Mixed-size serving: one runtime, several problems, interleaved — the
+/// executable cache and padding must not cross-contaminate.
+#[test]
+fn interleaved_sessions_different_problems() {
+    let Some(rt) = runtime() else { return };
+    let mk = |n: usize, k: usize, seed: u64| {
+        let mat = DistanceMatrix::random_euclidean(n, 6, seed);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        (mat, grouping)
+    };
+    let (mat_a, grp_a) = mk(64, 4, 1);
+    let (mat_b, grp_b) = mk(200, 8, 2); // pads into the 256 artifact
+    let sess_a = rt.session("bruteforce", mat_a.data(), 64, &grp_a).unwrap();
+    let sess_b = rt.session("bruteforce", mat_b.data(), 200, &grp_b).unwrap();
+    assert_eq!(sess_b.meta().n_dims, 256);
+
+    let plan_a = PermutationPlan::new(grp_a.labels().to_vec(), 4, 8);
+    let plan_b = PermutationPlan::new(grp_b.labels().to_vec(), 4, 8);
+    for _ in 0..3 {
+        let ra = sess_a.run_batch(&plan_a.batch(0, 4), 4).unwrap();
+        let rb = sess_b.run_batch(&plan_b.batch(0, 4), 4).unwrap();
+        let wa = sw_brute_f64(mat_a.data(), 64, plan_a.base(), grp_a.inv_sizes());
+        let wb = sw_brute_f64(mat_b.data(), 200, plan_b.base(), grp_b.inv_sizes());
+        assert!(((ra.s_w[0] as f64) - wa).abs() / wa < 1e-4);
+        assert!(((rb.s_w[0] as f64) - wb).abs() / wb < 1e-4);
+    }
+}
+
+/// The kernels must agree with EACH OTHER through the XLA path (not just
+/// with the oracle): same inputs, same outputs across variants.
+#[test]
+fn xla_kernel_cross_agreement() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let mat = DistanceMatrix::random_euclidean(n, 12, 31);
+    let grouping = Grouping::balanced(n, 8).unwrap();
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), 8, 8);
+    let rows = plan.batch(0, 8);
+
+    let mut outputs = Vec::new();
+    for kernel in ["bruteforce", "tiled", "matmul", "ref"] {
+        if rt.manifest().best_fit(kernel, n).is_none() {
+            continue;
+        }
+        let sess = rt.session(kernel, mat.data(), n, &grouping).unwrap();
+        outputs.push((kernel, sess.run_batch(&rows, 8).unwrap()));
+    }
+    assert!(outputs.len() >= 3);
+    let (k0, base) = &outputs[0];
+    for (k, out) in &outputs[1..] {
+        for r in 0..8 {
+            let rel = ((out.s_w[r] - base.s_w[r]) / base.s_w[r].max(1e-9)).abs();
+            assert!(rel < 2e-4, "{k} vs {k0} row {r}: rel {rel}");
+        }
+    }
+}
+
+/// Concurrent native devices + a local XLA device through the coordinator:
+/// the heterogeneous path end-to-end.
+#[test]
+fn coordinator_heterogeneous_with_xla() {
+    let Some(rt) = runtime() else { return };
+    use permanova_apu::coordinator::{run_coordinated, Device, NativeCpuDevice, XlaDevice};
+    use permanova_apu::permanova::SwAlgorithm;
+
+    let n = 64;
+    let mat = DistanceMatrix::random_euclidean(n, 8, 17);
+    let grouping = Grouping::balanced(n, 4).unwrap();
+
+    let session = rt.session("matmul", mat.data(), n, &grouping).unwrap();
+    let local: Vec<Box<dyn Device + '_>> = vec![Box::new(XlaDevice::new(session))];
+    let send: Vec<Box<dyn Device + Send>> =
+        vec![Box::new(NativeCpuDevice::new(SwAlgorithm::Flat, 1))];
+
+    let hetero = run_coordinated(&mat, &grouping, 150, 5, send, local).unwrap();
+
+    let native_only: Vec<Box<dyn Device + Send>> =
+        vec![Box::new(NativeCpuDevice::new(SwAlgorithm::Brute, 1))];
+    let pure = run_coordinated(&mat, &grouping, 150, 5, native_only, vec![]).unwrap();
+
+    assert!((hetero.f_obs - pure.f_obs).abs() / pure.f_obs.abs().max(1e-12) < 1e-3);
+    assert_eq!(hetero.p_value, pure.p_value);
+    let covered: usize = hetero.per_device.iter().map(|d| d.perms).sum();
+    assert_eq!(covered, 151);
+}
