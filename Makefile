@@ -1,0 +1,47 @@
+# permanova-apu — build/test/bench driver.
+#
+# `make artifacts` is the L1/L2 -> L3 bridge the crate docs describe: it
+# lowers the JAX PERMANOVA batch graph (with the Pallas kernels inlined) to
+# HLO text once, after which the Rust binary is self-contained.  It skips
+# gracefully when the Python deps are missing.
+
+CARGO ?= cargo
+PYTHON ?= python3
+ARTIFACTS_DIR ?= artifacts
+
+.PHONY: all build test bench lint fmt clippy artifacts pytest clean
+
+all: build
+
+build:
+	$(CARGO) build --release --workspace
+
+test:
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench
+
+lint: fmt clippy
+
+fmt:
+	$(CARGO) fmt --all --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# AOT-lower the JAX graph to HLO text artifacts + manifest.json.
+artifacts:
+	@if $(PYTHON) -c "import jax" 2>/dev/null; then \
+		cd python && PYTHONPATH=. $(PYTHON) compile/aot.py --out $(abspath $(ARTIFACTS_DIR)); \
+	else \
+		echo "skipping artifacts: JAX not importable ($(PYTHON))"; \
+		echo "install jax and re-run 'make artifacts' to enable the xla backend"; \
+	fi
+
+pytest:
+	cd python && $(PYTHON) -m pytest tests -q
+
+clean:
+	$(CARGO) clean
+	rm -rf $(ARTIFACTS_DIR)

@@ -1,0 +1,19 @@
+"""Collection guard: keep `pytest --collect-only` green without JAX.
+
+Most of the suite imports jax at module top; on environments without it
+(CI's soft-fail lane) those modules would error during *collection*.
+Ignore them up front so collection always succeeds and the remaining
+environment-independent tests still run.
+"""
+
+import importlib.util
+
+collect_ignore = []
+if importlib.util.find_spec("jax") is None:
+    collect_ignore = [
+        "test_aot.py",
+        "test_cross_language.py",
+        "test_kernels.py",
+        "test_model.py",
+        "test_properties.py",
+    ]

@@ -7,7 +7,10 @@ groupings, adversarial tile sizes.
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels import KERNELS
 from compile.kernels import ref

@@ -24,7 +24,13 @@ fn main() {
         println!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
         return;
     }
-    let rt = XlaRuntime::new(&dir).expect("runtime");
+    let rt = match XlaRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP: {e}");
+            return;
+        }
+    };
     println!("platform: {}, artifacts: {}\n", rt.platform(), rt.manifest().artifacts().len());
 
     let n = 256;

@@ -28,7 +28,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("PERMANOVA: n={} k={} permutations={}", res.n, res.k, res.n_perms);
     println!("  pseudo-F = {:.4}", res.f_obs);
     println!("  p-value  = {:.4}", res.p_value);
-    println!("  kernel   = {}  threads = {}  wall = {:.3}s", res.algo, res.threads, res.elapsed_secs);
+    let (algo, threads) = (&res.algo, res.threads);
+    println!("  kernel   = {algo}  threads = {threads}  wall = {:.3}s", res.elapsed_secs);
 
     // And the null case: shuffle the labels -> no effect detected.
     let mut labels: Vec<u32> = grouping.labels().to_vec();

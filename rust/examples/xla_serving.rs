@@ -25,7 +25,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         return Ok(());
     }
 
-    let rt = XlaRuntime::new(&dir)?;
+    let rt = match XlaRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return Ok(());
+        }
+    };
     println!(
         "runtime: platform={}, {} artifacts",
         rt.platform(),

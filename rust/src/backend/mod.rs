@@ -1,0 +1,338 @@
+//! The unified execution engine: one `Backend` trait for every way this
+//! crate can compute a PERMANOVA permutation batch.
+//!
+//! The paper's comparison only means something if the three kernel
+//! formulations (and the three compute substrates — native CPU, XLA/PJRT,
+//! simulated MI300A) run through **one** schedulable path with the data
+//! path held fixed.  That seam is this module:
+//!
+//! * [`Backend`] — `run_batch(&BatchPlan) -> BatchResult` plus
+//!   [`capabilities`](Backend::capabilities);
+//! * [`BatchPlan`] / [`BatchResult`] — the shared job and output shapes
+//!   (seekable permutation plan in, pseudo-F per permutation out);
+//! * [`Registry`] — name-keyed factories (`--backend native-tiled`,
+//!   `--backend simulator`, ...), the hook future backends plug into;
+//! * [`execute`] — the config-driven entry: build the plan, create the
+//!   backend, run it, aggregate a [`RunReport`](crate::report::RunReport).
+//!
+//! Scheduling (shard size, worker count, SMT oversubscription) is owned by
+//! [`shard`] and threaded through every backend via [`BatchPlan::shard`].
+
+pub mod shard;
+
+mod native;
+mod sim;
+mod xla;
+
+pub use native::NativeBackend;
+pub use shard::{ShardCursor, ShardSpec};
+pub use sim::SimulatorBackend;
+pub use xla::XlaBackend;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::config::RunConfig;
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+use crate::permanova::{pvalue, st_of, Grouping};
+use crate::report::{DeviceStats, RunReport};
+use crate::rng::PermutationPlan;
+
+/// One batch of permutation work, shared read-only with the backend.
+///
+/// Indices `[start, start + rows)` of `perms` are to be evaluated;
+/// index 0 of the plan is always the observed labelling.
+pub struct BatchPlan<'a> {
+    pub mat: &'a DistanceMatrix,
+    pub grouping: &'a Grouping,
+    pub perms: &'a PermutationPlan,
+    /// First plan index of this batch.
+    pub start: usize,
+    /// Number of permutations to evaluate.
+    pub rows: usize,
+    /// Precomputed total sum of squares (permutation-invariant).
+    pub s_t: f64,
+    /// Scheduling knobs for whatever internal parallelism the backend has.
+    pub shard: ShardSpec,
+}
+
+impl<'a> BatchPlan<'a> {
+    /// Full-run plan over every index of `perms`.
+    pub fn full(
+        mat: &'a DistanceMatrix,
+        grouping: &'a Grouping,
+        perms: &'a PermutationPlan,
+        s_t: f64,
+        shard: ShardSpec,
+    ) -> Self {
+        BatchPlan { mat, grouping, perms, start: 0, rows: perms.count, s_t, shard }
+    }
+}
+
+/// One batch of output.
+#[derive(Clone, Debug)]
+pub struct BatchResult {
+    /// First plan index the batch covered.
+    pub start: usize,
+    /// Pseudo-F per permutation, in plan order.
+    pub f_stats: Vec<f64>,
+    /// Wall-clock the backend spent.
+    pub elapsed_secs: f64,
+    /// Modelled MI300A seconds (simulator backends only).
+    pub modelled_secs: Option<f64>,
+    /// Display name of the producing backend.
+    pub backend: String,
+}
+
+/// Static description of what a backend can do.
+#[derive(Clone, Debug)]
+pub struct Caps {
+    /// Registry name (what `--backend` selects and run reports record).
+    pub name: String,
+    /// Kernel formulation it evaluates (an [`SwAlgorithm`] name, or an XLA
+    /// kernel variant).
+    pub kernel: String,
+    /// Preferred rows per internal sub-batch (None = unlimited).
+    pub max_batch: Option<usize>,
+    /// Whether the backend parallelizes internally via the shard scheduler.
+    pub threaded: bool,
+    /// Whether [`BatchResult::modelled_secs`] is populated.
+    pub modelled_time: bool,
+}
+
+/// A compute substrate that can evaluate permutation batches.
+pub trait Backend {
+    /// Evaluate one batch.  Implementations must honour the plan's shard
+    /// spec for internal parallelism and return exactly `plan.rows`
+    /// F statistics in plan order.
+    fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult>;
+
+    /// Static capabilities (also the source of the report's backend name).
+    fn capabilities(&self) -> Caps;
+}
+
+/// Factory signature: build a backend from a run configuration.
+pub type BackendFactory = fn(&RunConfig) -> Result<Box<dyn Backend>>;
+
+/// Name-keyed backend registry.
+pub struct Registry {
+    factories: BTreeMap<&'static str, BackendFactory>,
+}
+
+impl Registry {
+    /// Registry with every built-in backend:
+    ///
+    /// | name            | substrate                                     |
+    /// |-----------------|-----------------------------------------------|
+    /// | `native`        | native CPU kernels, algorithm from the config |
+    /// | `native-brute`  | native CPU, Algorithm 1 (brute force)         |
+    /// | `native-tiled`  | native CPU, Algorithm 2 (cache-tiled)         |
+    /// | `native-flat`   | native CPU, Algorithm 3 shape (SIMD/flat)     |
+    /// | `simulator`     | exact numerics + modelled MI300A CPU time     |
+    /// | `simulator-gpu` | exact numerics + modelled MI300A GPU time     |
+    /// | `simulated`     | alias of `simulator` (legacy config name)     |
+    /// | `xla`           | AOT artifacts via the PJRT runtime            |
+    pub fn with_defaults() -> Registry {
+        let mut factories: BTreeMap<&'static str, BackendFactory> = BTreeMap::new();
+        factories.insert("native", native::factory_from_config);
+        factories.insert("native-brute", native::factory_brute);
+        factories.insert("native-tiled", native::factory_tiled);
+        factories.insert("native-flat", native::factory_flat);
+        factories.insert("simulator", sim::factory_cpu);
+        factories.insert("simulated", sim::factory_cpu);
+        factories.insert("simulator-gpu", sim::factory_gpu);
+        factories.insert("xla", xla::factory);
+        Registry { factories }
+    }
+
+    /// All registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.factories.keys().map(|k| k.to_string()).collect()
+    }
+
+    /// Whether `name` is registered.
+    pub fn contains(&self, name: &str) -> bool {
+        self.factories.contains_key(name)
+    }
+
+    /// Instantiate backend `name` for a configuration.
+    pub fn create(&self, name: &str, cfg: &RunConfig) -> Result<Box<dyn Backend>> {
+        match self.factories.get(name) {
+            Some(f) => f(cfg),
+            None => Err(Error::UnknownBackend { name: name.to_string(), known: self.names() }),
+        }
+    }
+}
+
+/// The names the default registry knows (for usage/help text).
+pub fn known_backends() -> Vec<String> {
+    Registry::with_defaults().names()
+}
+
+/// Instantiate the backend a config selects.
+pub fn create_backend(cfg: &RunConfig) -> Result<Box<dyn Backend>> {
+    Registry::with_defaults().create(&cfg.backend, cfg)
+}
+
+/// Config-driven PERMANOVA run through the `Backend` trait: plan the
+/// permutations, run the whole batch on the selected backend, aggregate.
+pub fn execute(cfg: &RunConfig, mat: &DistanceMatrix, grouping: &Grouping) -> Result<RunReport> {
+    if grouping.n() != mat.n() {
+        return Err(Error::InvalidInput(format!(
+            "grouping n = {} vs matrix n = {}",
+            grouping.n(),
+            mat.n()
+        )));
+    }
+    if cfg.n_perms == 0 {
+        return Err(Error::InvalidInput("n_perms must be >= 1".into()));
+    }
+    let backend = create_backend(cfg)?;
+    let caps = backend.capabilities();
+
+    let total = cfg.n_perms + 1; // index 0 = observed labelling
+    let perms = PermutationPlan::new(grouping.labels().to_vec(), cfg.seed, total);
+    let s_t = st_of(mat);
+    let shard = cfg.shard_spec();
+    let t0 = Instant::now();
+
+    let plan = BatchPlan::full(mat, grouping, &perms, s_t, shard);
+    let batch = backend.run_batch(&plan)?;
+    if batch.f_stats.len() != total {
+        return Err(Error::Coordinator(format!(
+            "backend {} returned {} statistics for {total} permutations",
+            caps.name,
+            batch.f_stats.len()
+        )));
+    }
+
+    let f_obs = batch.f_stats[0];
+    let f_perms = batch.f_stats[1..].to_vec();
+    Ok(RunReport {
+        f_obs,
+        p_value: pvalue(f_obs, &f_perms),
+        n_perms: cfg.n_perms,
+        n: mat.n(),
+        k: grouping.k(),
+        s_t,
+        elapsed_secs: t0.elapsed().as_secs_f64(),
+        backend: caps.name,
+        per_device: vec![DeviceStats {
+            device: batch.backend,
+            batches: 1,
+            perms: total,
+            busy_secs: batch.elapsed_secs,
+            simulated_secs: batch.modelled_secs.unwrap_or(0.0),
+        }],
+        f_perms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataSource;
+    use crate::permanova::SwAlgorithm;
+
+    fn fixture(n: usize, k: usize) -> (DistanceMatrix, Grouping) {
+        (DistanceMatrix::random_euclidean(n, 6, 4), Grouping::balanced(n, k).unwrap())
+    }
+
+    fn cfg(backend: &str) -> RunConfig {
+        RunConfig {
+            data: DataSource::Synthetic { n_dims: 40, n_groups: 4 },
+            backend: backend.to_string(),
+            n_perms: 60,
+            seed: 9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn registry_knows_the_builtins() {
+        let r = Registry::with_defaults();
+        for name in ["native", "native-brute", "native-tiled", "native-flat", "simulator", "xla"] {
+            assert!(r.contains(name), "missing {name}");
+        }
+        assert!(!r.contains("cuda"));
+        let e = match r.create("cuda", &cfg("cuda")) {
+            Err(e) => e,
+            Ok(_) => panic!("created an unknown backend"),
+        };
+        assert!(e.to_string().contains("cuda"));
+        assert!(e.to_string().contains("native-tiled"), "error lists known names: {e}");
+    }
+
+    #[test]
+    fn execute_records_backend_name() {
+        let (mat, grouping) = fixture(40, 4);
+        for name in ["native-tiled", "native-brute", "simulator"] {
+            let r = execute(&cfg(name), &mat, &grouping).unwrap();
+            assert_eq!(r.backend, name);
+            assert_eq!(r.f_perms.len(), 60);
+            assert!(r.p_value > 0.0 && r.p_value <= 1.0);
+        }
+    }
+
+    #[test]
+    fn execute_matches_direct_permanova() {
+        use crate::permanova::{permanova, PermanovaOpts};
+        let (mat, grouping) = fixture(40, 4);
+        let c = cfg("native-brute");
+        let r = execute(&c, &mat, &grouping).unwrap();
+        let direct = permanova(
+            &mat,
+            &grouping,
+            60,
+            &PermanovaOpts {
+                algo: SwAlgorithm::Brute,
+                seed: 9,
+                threads: 1,
+                keep_f_perms: true,
+            },
+        )
+        .unwrap();
+        assert!((r.f_obs - direct.f_obs).abs() < 1e-9);
+        assert_eq!(r.p_value, direct.p_value);
+        for (a, b) in r.f_perms.iter().zip(direct.f_perms.as_ref().unwrap()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn execute_rejects_mismatch_and_zero_perms() {
+        let (mat, _) = fixture(40, 4);
+        let g_bad = Grouping::balanced(30, 3).unwrap();
+        assert!(execute(&cfg("native"), &mat, &g_bad).is_err());
+        let (mat, grouping) = fixture(24, 2);
+        let mut c = cfg("native");
+        c.n_perms = 0;
+        assert!(execute(&c, &mat, &grouping).is_err());
+    }
+
+    #[test]
+    fn shard_spec_does_not_change_results() {
+        let (mat, grouping) = fixture(36, 3);
+        let base = execute(&cfg("native-flat"), &mat, &grouping).unwrap();
+        for (shard_size, threads, smt) in [(1usize, 1usize, false), (7, 3, true), (500, 2, false)]
+        {
+            let mut c = cfg("native-flat");
+            c.shard_size = shard_size;
+            c.threads = threads;
+            c.smt_oversubscribe = smt;
+            let r = execute(&c, &mat, &grouping).unwrap();
+            assert_eq!(base.f_obs, r.f_obs);
+            assert_eq!(base.p_value, r.p_value);
+            assert_eq!(base.f_perms, r.f_perms);
+        }
+    }
+
+    #[test]
+    fn xla_backend_errors_cleanly_without_artifacts() {
+        let (mat, grouping) = fixture(24, 2);
+        let mut c = cfg("xla");
+        c.artifacts_dir = "/nonexistent/artifacts".into();
+        assert!(execute(&c, &mat, &grouping).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Native CPU backend: the paper's kernel formulations on this host's
+//! cores, scheduled by the shared shard scheduler.
+
+use std::time::Instant;
+
+use super::shard::run_sharded_with;
+use super::{Backend, BatchPlan, BatchResult, Caps};
+use crate::config::RunConfig;
+use crate::error::Result;
+use crate::permanova::{fstat_from_sw, sw_one, SwAlgorithm, DEFAULT_TILE};
+
+/// Native Rust kernels (brute / tiled / flat) on host threads.
+pub struct NativeBackend {
+    algo: SwAlgorithm,
+    /// Registry name this instance was created under.
+    name: String,
+}
+
+impl NativeBackend {
+    /// Backend for a fixed kernel formulation.
+    pub fn new(algo: SwAlgorithm) -> Self {
+        NativeBackend { name: format!("native-{}", algo.name()), algo }
+    }
+
+    /// The kernel formulation this backend evaluates.
+    pub fn algo(&self) -> SwAlgorithm {
+        self.algo
+    }
+
+    fn named(algo: SwAlgorithm, name: &str) -> Self {
+        NativeBackend { algo, name: name.to_string() }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult> {
+        let t0 = Instant::now();
+        let n = plan.mat.n();
+        let k = plan.grouping.k();
+        let algo = self.algo;
+        let mut s_w = vec![0.0f32; plan.rows];
+        run_sharded_with(
+            &plan.shard,
+            &mut s_w,
+            || vec![0u32; n], // per-worker scratch label row
+            |row, start, slice| {
+                for (i, out) in slice.iter_mut().enumerate() {
+                    plan.perms.fill(plan.start + start + i, row);
+                    *out = sw_one(algo, plan.mat.data(), n, row, plan.grouping.inv_sizes());
+                }
+            },
+        );
+        let f_stats = s_w
+            .iter()
+            .map(|&sw| fstat_from_sw(sw as f64, plan.s_t, n, k))
+            .collect();
+        Ok(BatchResult {
+            start: plan.start,
+            f_stats,
+            elapsed_secs: t0.elapsed().as_secs_f64(),
+            modelled_secs: None,
+            backend: self.name.clone(),
+        })
+    }
+
+    fn capabilities(&self) -> Caps {
+        Caps {
+            name: self.name.clone(),
+            kernel: self.algo.name(),
+            max_batch: None,
+            threaded: true,
+            modelled_time: false,
+        }
+    }
+}
+
+/// `native`: kernel taken from the run configuration.
+pub fn factory_from_config(cfg: &RunConfig) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend::named(cfg.algo, "native")))
+}
+
+/// `native-brute`: Algorithm 1.
+pub fn factory_brute(_cfg: &RunConfig) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend::named(SwAlgorithm::Brute, "native-brute")))
+}
+
+/// `native-tiled`: Algorithm 2 with the paper-informed default tile.
+pub fn factory_tiled(cfg: &RunConfig) -> Result<Box<dyn Backend>> {
+    let tile = match cfg.algo {
+        SwAlgorithm::Tiled { tile } => tile,
+        _ => DEFAULT_TILE,
+    };
+    Ok(Box::new(NativeBackend::named(SwAlgorithm::Tiled { tile }, "native-tiled")))
+}
+
+/// `native-flat`: Algorithm 3's branchless/SIMD shape.
+pub fn factory_flat(_cfg: &RunConfig) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend::named(SwAlgorithm::Flat, "native-flat")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ShardSpec;
+    use crate::dmat::DistanceMatrix;
+    use crate::permanova::{st_of, sw_brute_f64, Grouping};
+    use crate::rng::PermutationPlan;
+
+    fn plan_fixture(
+        n: usize,
+        k: usize,
+        count: usize,
+    ) -> (DistanceMatrix, Grouping, PermutationPlan) {
+        let mat = DistanceMatrix::random_euclidean(n, 6, 3);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        let perms = PermutationPlan::new(grouping.labels().to_vec(), 11, count);
+        (mat, grouping, perms)
+    }
+
+    #[test]
+    fn batch_matches_f64_oracle() {
+        let (mat, grouping, perms) = plan_fixture(48, 4, 20);
+        let s_t = st_of(&mat);
+        let plan = BatchPlan {
+            mat: &mat,
+            grouping: &grouping,
+            perms: &perms,
+            start: 0,
+            rows: 20,
+            s_t,
+            shard: ShardSpec::with_workers(3),
+        };
+        let b = NativeBackend::new(SwAlgorithm::Flat);
+        let r = b.run_batch(&plan).unwrap();
+        assert_eq!(r.f_stats.len(), 20);
+        let mut row = vec![0u32; 48];
+        for i in 0..20 {
+            perms.fill(i, &mut row);
+            let sw = sw_brute_f64(mat.data(), 48, &row, grouping.inv_sizes());
+            let want = fstat_from_sw(sw, s_t, 48, 4);
+            let rel = (r.f_stats[i] - want).abs() / want.abs().max(1e-12);
+            assert!(rel < 5e-4, "row {i}: {} vs {want}", r.f_stats[i]);
+        }
+    }
+
+    #[test]
+    fn sub_range_batches_line_up() {
+        let (mat, grouping, perms) = plan_fixture(32, 4, 30);
+        let s_t = st_of(&mat);
+        let b = NativeBackend::new(SwAlgorithm::Brute);
+        let mk = |start: usize, rows: usize| BatchPlan {
+            mat: &mat,
+            grouping: &grouping,
+            perms: &perms,
+            start,
+            rows,
+            s_t,
+            shard: ShardSpec::with_workers(2),
+        };
+        let full = b.run_batch(&mk(0, 30)).unwrap();
+        let head = b.run_batch(&mk(0, 11)).unwrap();
+        let tail = b.run_batch(&mk(11, 19)).unwrap();
+        assert_eq!(&full.f_stats[..11], &head.f_stats[..]);
+        assert_eq!(&full.f_stats[11..], &tail.f_stats[..]);
+    }
+
+    #[test]
+    fn capabilities_name_tracks_registry_entry() {
+        let cfg = RunConfig::default();
+        let caps = factory_tiled(&cfg).unwrap().capabilities();
+        assert_eq!(caps.name, "native-tiled");
+        assert_eq!(caps.kernel, "tiled512");
+        assert!(caps.threaded);
+        assert!(!caps.modelled_time);
+    }
+}

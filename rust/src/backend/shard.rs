@@ -1,0 +1,382 @@
+//! The sharded permutation scheduler: one thread-pool implementation for
+//! every execution path in the crate.
+//!
+//! Before this module existed, `permanova/batch.rs`, the coordinator's
+//! scheduler and the STREAM benchmark each hand-rolled their own
+//! `std::thread::scope` pool (atomic cursor + raw output pointers,
+//! duplicated three times).  All of that now lives here:
+//!
+//! * [`ShardSpec`] — the scheduling knobs: shard size, worker count, and the
+//!   paper's SMT-style 2-threads-per-worker oversubscription toggle (the
+//!   Figure 1 ablation is "same cores, 1 vs 2 threads per core");
+//! * [`ShardCursor`] — the work-stealing claim primitive (disjoint
+//!   `[start, end)` ranges from a shared atomic cursor);
+//! * [`run_sharded`] / [`run_sharded_with`] — fill a disjoint output slice
+//!   per shard, with optional per-worker scratch state (the only `unsafe`
+//!   in the permutation hot path lives in this function);
+//! * [`with_static_pool`] — the persistent, barrier-synchronized,
+//!   statically-partitioned pool STREAM needs (timed regions must exclude
+//!   thread spawn, as OpenMP's do).
+//!
+//! Determinism contract: results never depend on the shard size, worker
+//! count or SMT setting — every output index is computed independently.
+//! The tests at the bottom pin that contract.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+/// Scheduling knobs for one sharded run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Permutations per shard; 0 picks a size that gives each thread ~8
+    /// claims (big enough to amortize the atomic, small enough to balance).
+    pub shard_size: usize,
+    /// Worker slots; 0 = all available hardware threads.
+    pub workers: usize,
+    /// SMT-style oversubscription: spawn 2 threads per worker slot.  This
+    /// mirrors the paper's SMT ablation ("same cores, 1 vs 2 threads per
+    /// core") when `workers` is pinned to a physical-core count.
+    pub smt: bool,
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec { shard_size: 0, workers: 0, smt: false }
+    }
+}
+
+impl ShardSpec {
+    /// Spec with an explicit worker count (0 = all available), no
+    /// oversubscription, automatic shard size.
+    pub fn with_workers(workers: usize) -> Self {
+        ShardSpec { workers, ..Default::default() }
+    }
+
+    /// Number of OS threads this spec resolves to.
+    pub fn threads(&self) -> usize {
+        let slots = if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        if self.smt {
+            slots * 2
+        } else {
+            slots
+        }
+    }
+
+    /// Shard size for `total` items on `threads` threads.
+    pub fn shard_for(&self, total: usize, threads: usize) -> usize {
+        if self.shard_size > 0 {
+            self.shard_size
+        } else {
+            (total / (threads.max(1) * 8)).max(1)
+        }
+    }
+}
+
+/// One claimed range of work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Shard {
+    /// Items in the shard.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// Work-stealing cursor over `[0, total)`: every [`claim`](Self::claim)
+/// returns a disjoint range (or `None` when the work is exhausted), so fast
+/// workers naturally take more shards.
+#[derive(Debug)]
+pub struct ShardCursor {
+    next: AtomicUsize,
+    total: usize,
+}
+
+impl ShardCursor {
+    /// Cursor over `[0, total)`.
+    pub fn new(total: usize) -> Self {
+        ShardCursor { next: AtomicUsize::new(0), total }
+    }
+
+    /// Claim the next shard of at most `size` items.
+    pub fn claim(&self, size: usize) -> Option<Shard> {
+        let size = size.max(1);
+        let start = self.next.fetch_add(size, Ordering::Relaxed);
+        if start >= self.total {
+            return None;
+        }
+        Some(Shard { start, end: (start + size).min(self.total) })
+    }
+
+    /// Total items the cursor covers.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}
+
+/// Raw pointer wrapper so scoped workers can write disjoint output ranges.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Sync for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Fill `out` (length `total`) by sharding `[0, total)` across the spec's
+/// threads.  `fill(state, start, slice)` writes the results for plan
+/// indices `[start, start + slice.len())` into `slice`; `init` builds one
+/// scratch state per worker (e.g. a label-row buffer), so the hot loop
+/// allocates nothing.
+///
+/// Single-threaded specs (or trivially small runs) execute inline with no
+/// thread spawn at all.
+pub fn run_sharded_with<T, S, G, F>(spec: &ShardSpec, out: &mut [T], init: G, fill: F)
+where
+    T: Send,
+    G: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &mut [T]) + Sync,
+{
+    let total = out.len();
+    if total == 0 {
+        return;
+    }
+    let threads = spec.threads().min(total).max(1);
+    if threads <= 1 {
+        let mut state = init();
+        fill(&mut state, 0, out);
+        return;
+    }
+    let shard = spec.shard_for(total, threads);
+    let cursor = ShardCursor::new(total);
+    let base = SendPtr(out.as_mut_ptr());
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let base = &base;
+                let mut state = init();
+                while let Some(sh) = cursor.claim(shard) {
+                    // SAFETY: `claim` hands out disjoint [start, end)
+                    // ranges within `out`, which outlives the scope; no
+                    // other code touches `out` while the scope runs.
+                    let slice = unsafe {
+                        std::slice::from_raw_parts_mut(base.0.add(sh.start), sh.len())
+                    };
+                    fill(&mut state, sh.start, slice);
+                }
+            });
+        }
+    });
+}
+
+/// Stateless convenience over [`run_sharded_with`].
+pub fn run_sharded<T, F>(spec: &ShardSpec, out: &mut [T], fill: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    run_sharded_with(spec, out, || (), |_, start, slice| fill(start, slice));
+}
+
+/// Job id meaning "shut down" inside [`with_static_pool`].
+const POOL_QUIT: usize = usize::MAX;
+
+/// Handle for dispatching jobs into a running static pool.
+pub struct StaticPool<'a> {
+    barrier: &'a Barrier,
+    job: &'a AtomicUsize,
+}
+
+impl StaticPool<'_> {
+    /// Run job `id` on every worker (each covers its static partition) and
+    /// wait for all of them to finish.  The two barrier crossings bracket
+    /// exactly the workers' compute, so a caller can time around this call
+    /// without including thread spawn.
+    pub fn run(&self, id: usize) {
+        assert!(id != POOL_QUIT, "job id reserved for shutdown");
+        self.job.store(id, Ordering::Release);
+        self.barrier.wait(); // release workers
+        self.barrier.wait(); // join workers
+    }
+}
+
+/// Persistent, statically-partitioned worker pool (the STREAM shape).
+///
+/// Spawns `threads` workers, each owning the static range
+/// `[total*t/threads, total*(t+1)/threads)`; `kernel(job, lo, hi)` runs one
+/// job on one partition.  `driver` receives a [`StaticPool`] handle to
+/// dispatch jobs; when it returns, the pool shuts down and its value is
+/// passed through.
+pub fn with_static_pool<F, D, R>(threads: usize, total: usize, kernel: &F, driver: D) -> R
+where
+    F: Fn(usize, usize, usize) + Sync,
+    D: FnOnce(&StaticPool<'_>) -> R,
+{
+    let threads = threads.max(1);
+    let barrier = Barrier::new(threads + 1);
+    let job = AtomicUsize::new(POOL_QUIT - 1); // arbitrary non-quit idle value
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let job = &job;
+            let lo = total * t / threads;
+            let hi = total * (t + 1) / threads;
+            s.spawn(move || loop {
+                barrier.wait(); // wait for a job
+                let id = job.load(Ordering::Acquire);
+                if id == POOL_QUIT {
+                    break;
+                }
+                kernel(id, lo, hi);
+                barrier.wait(); // job done
+            });
+        }
+        let pool = StaticPool { barrier: &barrier, job: &job };
+        let out = driver(&pool);
+        job.store(POOL_QUIT, Ordering::Release);
+        barrier.wait();
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_thread_resolution() {
+        assert_eq!(ShardSpec::with_workers(3).threads(), 3);
+        assert_eq!(ShardSpec { workers: 3, smt: true, shard_size: 0 }.threads(), 6);
+        assert!(ShardSpec::default().threads() >= 1);
+    }
+
+    #[test]
+    fn spec_shard_sizing() {
+        let auto = ShardSpec::default();
+        assert_eq!(auto.shard_for(1000, 4), 31); // 1000 / 32
+        assert_eq!(auto.shard_for(3, 8), 1); // floor at 1
+        let fixed = ShardSpec { shard_size: 17, ..Default::default() };
+        assert_eq!(fixed.shard_for(1000, 4), 17);
+    }
+
+    #[test]
+    fn cursor_covers_exactly_once() {
+        let c = ShardCursor::new(103);
+        let mut seen = vec![false; 103];
+        while let Some(sh) = c.claim(7) {
+            for i in sh.start..sh.end {
+                assert!(!seen[i], "index {i} claimed twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "coverage hole");
+        assert!(c.claim(7).is_none(), "exhausted cursor stays exhausted");
+    }
+
+    #[test]
+    fn cursor_zero_size_claims_one() {
+        let c = ShardCursor::new(2);
+        assert_eq!(c.claim(0), Some(Shard { start: 0, end: 1 }));
+    }
+
+    #[test]
+    fn run_sharded_fills_every_slot() {
+        for workers in [1usize, 2, 3, 8] {
+            let spec = ShardSpec { shard_size: 5, workers, smt: false };
+            let mut out = vec![0usize; 237];
+            run_sharded(&spec, &mut out, |start, slice| {
+                for (i, v) in slice.iter_mut().enumerate() {
+                    *v = (start + i) * 3;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i * 3, "workers={workers} slot {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_sharded_with_per_worker_state() {
+        let spec = ShardSpec { shard_size: 4, workers: 4, smt: true };
+        let mut out = vec![0u64; 100];
+        run_sharded_with(
+            &spec,
+            &mut out,
+            || vec![0u8; 16], // scratch: exists per worker, never shared
+            |scratch, start, slice| {
+                scratch[0] = scratch[0].wrapping_add(1);
+                for (i, v) in slice.iter_mut().enumerate() {
+                    *v = (start + i) as u64 + 1;
+                }
+            },
+        );
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 + 1));
+    }
+
+    #[test]
+    fn run_sharded_empty_and_tiny() {
+        let mut empty: Vec<u32> = Vec::new();
+        run_sharded(&ShardSpec::default(), &mut empty, |_, _| panic!("no work"));
+        let mut one = vec![0u32; 1];
+        run_sharded(&ShardSpec::with_workers(8), &mut one, |start, s| {
+            assert_eq!(start, 0);
+            s[0] = 9;
+        });
+        assert_eq!(one, vec![9]);
+    }
+
+    #[test]
+    fn sharding_is_deterministic_across_specs() {
+        let compute = |spec: &ShardSpec| {
+            let mut out = vec![0.0f32; 333];
+            run_sharded(spec, &mut out, |start, slice| {
+                for (i, v) in slice.iter_mut().enumerate() {
+                    let x = (start + i) as f32;
+                    *v = x.sqrt() * 1.5;
+                }
+            });
+            out
+        };
+        let base = compute(&ShardSpec::with_workers(1));
+        for spec in [
+            ShardSpec::with_workers(2),
+            ShardSpec { shard_size: 1, workers: 7, smt: false },
+            ShardSpec { shard_size: 100, workers: 3, smt: true },
+            ShardSpec::default(),
+        ] {
+            assert_eq!(base, compute(&spec), "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn static_pool_runs_jobs_on_partitions() {
+        let n = 97;
+        let mut data = vec![0u32; n];
+        let ptr = SendPtr(data.as_mut_ptr());
+        let kernel = |job: usize, lo: usize, hi: usize| {
+            // SAFETY: each worker owns a disjoint [lo, hi) partition.
+            let slice = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo) };
+            for v in slice.iter_mut() {
+                *v += 1 + job as u32;
+            }
+        };
+        with_static_pool(3, n, &kernel, |pool| {
+            pool.run(0); // +1 everywhere
+            pool.run(4); // +5 everywhere
+        });
+        assert!(data.iter().all(|&v| v == 6), "{data:?}");
+    }
+
+    #[test]
+    fn static_pool_returns_driver_value() {
+        let out = with_static_pool(2, 10, &|_, _, _| {}, |pool| {
+            pool.run(1);
+            42usize
+        });
+        assert_eq!(out, 42);
+    }
+}

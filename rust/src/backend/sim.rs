@@ -1,0 +1,151 @@
+//! Simulator backend: exact numerics natively, modelled MI300A wall-clock
+//! alongside — the hardware-substitution substrate as a [`Backend`].
+
+use std::time::Instant;
+
+use super::shard::run_sharded_with;
+use super::{Backend, BatchPlan, BatchResult, Caps};
+use crate::config::RunConfig;
+use crate::error::Result;
+use crate::permanova::{fstat_from_sw, sw_one, SwAlgorithm};
+use crate::simulator::{predict, DeviceConfig, Mi300a, Workload};
+
+/// The calibrated MI300A model as an execution backend.
+///
+/// Numerics are always computed exactly (with the fast flat kernel, like
+/// the coordinator's `SimulatedDevice` did); the *modelled* time is the
+/// prediction for running the configured algorithm on the configured
+/// MI300A device, reported via [`BatchResult::modelled_secs`].
+pub struct SimulatorBackend {
+    machine: Mi300a,
+    /// Algorithm the *model* prices (numerics always use the flat kernel).
+    algo: SwAlgorithm,
+    device: DeviceConfig,
+    name: String,
+}
+
+impl SimulatorBackend {
+    pub fn new(machine: Mi300a, algo: SwAlgorithm, device: DeviceConfig, name: &str) -> Self {
+        SimulatorBackend { machine, algo, device, name: name.to_string() }
+    }
+}
+
+impl Backend for SimulatorBackend {
+    fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult> {
+        let t0 = Instant::now();
+        let n = plan.mat.n();
+        let k = plan.grouping.k();
+        let mut s_w = vec![0.0f32; plan.rows];
+        run_sharded_with(
+            &plan.shard,
+            &mut s_w,
+            || vec![0u32; n],
+            |row, start, slice| {
+                let inv = plan.grouping.inv_sizes();
+                for (i, out) in slice.iter_mut().enumerate() {
+                    plan.perms.fill(plan.start + start + i, row);
+                    *out = sw_one(SwAlgorithm::Flat, plan.mat.data(), n, row, inv);
+                }
+            },
+        );
+        let f_stats = s_w
+            .iter()
+            .map(|&sw| fstat_from_sw(sw as f64, plan.s_t, n, k))
+            .collect();
+        let w = Workload { n_dims: n, n_perms: plan.rows, n_groups: k };
+        let pred = predict(&self.machine, &w, self.algo, self.device);
+        Ok(BatchResult {
+            start: plan.start,
+            f_stats,
+            elapsed_secs: t0.elapsed().as_secs_f64(),
+            modelled_secs: Some(pred.seconds),
+            backend: format!("sim-mi300a/{}/{}", self.device.name(), self.algo.name()),
+        })
+    }
+
+    fn capabilities(&self) -> Caps {
+        Caps {
+            name: self.name.clone(),
+            kernel: self.algo.name(),
+            max_batch: None,
+            threaded: true,
+            modelled_time: true,
+        }
+    }
+}
+
+/// `simulator` (and legacy `simulated`): MI300A CPU cores, SMT per config.
+pub fn factory_cpu(cfg: &RunConfig) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(SimulatorBackend::new(
+        Mi300a::default(),
+        cfg.algo,
+        DeviceConfig::Cpu { smt: cfg.smt },
+        "simulator",
+    )))
+}
+
+/// `simulator-gpu`: MI300A GPU compute units.
+pub fn factory_gpu(cfg: &RunConfig) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(SimulatorBackend::new(
+        Mi300a::default(),
+        cfg.algo,
+        DeviceConfig::Gpu,
+        "simulator-gpu",
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BatchPlan, NativeBackend, ShardSpec};
+    use crate::dmat::DistanceMatrix;
+    use crate::permanova::{st_of, Grouping};
+    use crate::rng::PermutationPlan;
+
+    #[test]
+    fn exact_numerics_modelled_time() {
+        let mat = DistanceMatrix::random_euclidean(32, 4, 7);
+        let grouping = Grouping::balanced(32, 4).unwrap();
+        let perms = PermutationPlan::new(grouping.labels().to_vec(), 5, 12);
+        let s_t = st_of(&mat);
+        let plan = BatchPlan {
+            mat: &mat,
+            grouping: &grouping,
+            perms: &perms,
+            start: 0,
+            rows: 12,
+            s_t,
+            shard: ShardSpec::with_workers(2),
+        };
+        let sim = SimulatorBackend::new(
+            Mi300a::default(),
+            SwAlgorithm::Brute,
+            DeviceConfig::Gpu,
+            "simulator-gpu",
+        );
+        let native = NativeBackend::new(SwAlgorithm::Flat);
+        let rs = sim.run_batch(&plan).unwrap();
+        let rn = native.run_batch(&plan).unwrap();
+        // Identical kernel + identical plan => bitwise-identical statistics.
+        assert_eq!(rs.f_stats, rn.f_stats);
+        assert!(rs.modelled_secs.unwrap() > 0.0);
+        assert!(rn.modelled_secs.is_none());
+        assert!(sim.capabilities().modelled_time);
+    }
+
+    #[test]
+    fn gpu_model_prices_brute_below_tiled() {
+        // The paper's negative result must survive the backend port.
+        let cfg = RunConfig::default();
+        let mk = |algo| {
+            SimulatorBackend::new(Mi300a::default(), algo, DeviceConfig::Gpu, "simulator-gpu")
+        };
+        let mat = DistanceMatrix::random_euclidean(24, 2, 1);
+        let grouping = Grouping::balanced(24, 2).unwrap();
+        let perms = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
+        let plan = BatchPlan::full(&mat, &grouping, &perms, st_of(&mat), cfg.shard_spec());
+        let brute = mk(SwAlgorithm::Brute).run_batch(&plan).unwrap();
+        let tiled = mk(SwAlgorithm::Tiled { tile: 512 }).run_batch(&plan).unwrap();
+        assert!(tiled.modelled_secs.unwrap() > brute.modelled_secs.unwrap());
+    }
+}

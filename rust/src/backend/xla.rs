@@ -1,0 +1,134 @@
+//! XLA backend: the AOT/PJRT runtime behind the unified [`Backend`] trait.
+//!
+//! Wraps [`XlaRuntime`]: one compiled session per `run_batch` call (the
+//! matrix is staged device-resident once per call, then permutation-row
+//! sub-batches stream through at the artifact's lowered batch size).
+//! Construction fails cleanly when the artifacts are missing or the crate
+//! was built without the `pjrt` feature — callers see one typed error, not
+//! a panic.
+
+use std::time::Instant;
+
+use super::{Backend, BatchPlan, BatchResult, Caps};
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+use crate::runtime::XlaRuntime;
+
+/// AOT-compiled XLA kernels via PJRT.
+pub struct XlaBackend {
+    runtime: XlaRuntime,
+    kernel: String,
+}
+
+impl XlaBackend {
+    /// Open the runtime at `artifacts_dir`, preferring `kernel`
+    /// (bruteforce | tiled | matmul | ref).
+    pub fn new(artifacts_dir: &str, kernel: &str) -> Result<Self> {
+        let runtime = XlaRuntime::new(artifacts_dir)?;
+        Ok(XlaBackend { runtime, kernel: kernel.to_string() })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult> {
+        let t0 = Instant::now();
+        let n = plan.mat.n();
+        let session = self.runtime.session(&self.kernel, plan.mat.data(), n, plan.grouping)?;
+        let cap = session.batch_capacity().max(1);
+
+        let mut f_stats = Vec::with_capacity(plan.rows);
+        let mut start = plan.start;
+        let end = plan.start + plan.rows;
+        while start < end {
+            let rows = cap.min(end - start);
+            let labels = plan.perms.batch(start, rows);
+            let out = session.run_batch(&labels, rows)?;
+            if out.f_stats.len() != rows {
+                return Err(Error::Xla(format!(
+                    "session returned {} stats for {rows} rows",
+                    out.f_stats.len()
+                )));
+            }
+            f_stats.extend(out.f_stats);
+            start += rows;
+        }
+        Ok(BatchResult {
+            start: plan.start,
+            f_stats,
+            elapsed_secs: t0.elapsed().as_secs_f64(),
+            modelled_secs: None,
+            backend: format!("xla/{}", self.kernel),
+        })
+    }
+
+    fn capabilities(&self) -> Caps {
+        Caps {
+            name: "xla".to_string(),
+            kernel: self.kernel.clone(),
+            max_batch: self
+                .runtime
+                .manifest()
+                .by_kernel(&self.kernel)
+                .iter()
+                .map(|a| a.batch)
+                .max(),
+            threaded: false,
+            modelled_time: false,
+        }
+    }
+}
+
+/// `xla`: artifacts directory and kernel variant from the config.
+pub fn factory(cfg: &RunConfig) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(XlaBackend::new(&cfg.artifacts_dir, &cfg.xla_kernel)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ShardSpec;
+    use crate::dmat::DistanceMatrix;
+    use crate::permanova::{fstat_from_sw, st_of, sw_brute_f64, Grouping};
+    use crate::rng::PermutationPlan;
+
+    #[test]
+    fn missing_artifacts_is_a_clean_error() {
+        let e = match XlaBackend::new("/definitely/not/a/dir", "matmul") {
+            Err(e) => e,
+            Ok(_) => panic!("runtime without artifacts must not open"),
+        };
+        let s = e.to_string();
+        assert!(s.contains("manifest.json") || s.contains("xla"), "{s}");
+    }
+
+    /// Full parity run, only when `make artifacts` has produced artifacts
+    /// AND the crate was built with a working PJRT client.
+    #[test]
+    fn xla_backend_matches_oracle_if_available() {
+        let dir = crate::runtime::artifacts_dir_for_tests();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skip: no artifacts at {dir:?}");
+            return;
+        }
+        let Ok(backend) = XlaBackend::new(dir.to_str().unwrap(), "matmul") else {
+            eprintln!("skip: PJRT runtime unavailable in this build");
+            return;
+        };
+        let n = 64;
+        let mat = DistanceMatrix::random_euclidean(n, 8, 2);
+        let grouping = Grouping::balanced(n, 4).unwrap();
+        let perms = PermutationPlan::new(grouping.labels().to_vec(), 3, 40);
+        let s_t = st_of(&mat);
+        let plan = BatchPlan::full(&mat, &grouping, &perms, s_t, ShardSpec::default());
+        let r = backend.run_batch(&plan).unwrap();
+        assert_eq!(r.f_stats.len(), 40);
+        let mut row = vec![0u32; n];
+        for i in 0..40 {
+            perms.fill(i, &mut row);
+            let sw = sw_brute_f64(mat.data(), n, &row, grouping.inv_sizes());
+            let want = fstat_from_sw(sw, s_t, n, 4);
+            let rel = (r.f_stats[i] - want).abs() / want.abs().max(1e-9);
+            assert!(rel < 2e-3, "row {i}: {} vs {want}", r.f_stats[i]);
+        }
+    }
+}

@@ -183,7 +183,8 @@ mod tests {
     #[test]
     fn run_executes_and_counts() {
         let mut calls = 0usize;
-        let mut b = Bencher { warmup: 1, min_reps: 3, max_reps: 3, max_time: Duration::from_secs(5) };
+        let mut b =
+            Bencher { warmup: 1, min_reps: 3, max_reps: 3, max_time: Duration::from_secs(5) };
         let m = b.run("count", || {
             calls += 1;
             calls

@@ -210,50 +210,33 @@ pub enum DataSource {
     Tsv { path: String, labels_path: String },
 }
 
-/// Which execution backend computes s_W.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Backend {
-    /// Native Rust kernels (this host).
-    Native,
-    /// AOT-compiled XLA artifacts via PJRT.
-    Xla,
-    /// MI300A performance model (no computation, predicted time).
-    Simulated,
-}
-
-impl Backend {
-    pub fn parse(s: &str) -> Option<Backend> {
-        match s {
-            "native" => Some(Backend::Native),
-            "xla" => Some(Backend::Xla),
-            "simulated" => Some(Backend::Simulated),
-            _ => None,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Backend::Native => "native",
-            Backend::Xla => "xla",
-            Backend::Simulated => "simulated",
-        }
-    }
-}
-
 /// Fully-resolved run configuration.
+///
+/// `backend` is a **name**, resolved against the name-keyed registry in
+/// [`crate::backend`] (`native`, `native-brute`, `native-tiled`,
+/// `native-flat`, `simulator`, `simulator-gpu`, `xla`, ...) — an open set,
+/// so new backends plug in without touching the config layer.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub data: DataSource,
     pub n_perms: usize,
     pub seed: u64,
     pub algo: SwAlgorithm,
+    /// Worker threads / slots for the shard scheduler (0 = all available).
     pub threads: usize,
-    pub backend: Backend,
+    /// Registry name of the execution backend.
+    pub backend: String,
     pub artifacts_dir: String,
     /// XLA kernel variant to prefer (bruteforce | tiled | matmul | ref).
     pub xla_kernel: String,
-    /// Simulated-backend SMT toggle.
+    /// Simulated-backend SMT toggle (the Figure 1 CPU ablation axis).
     pub smt: bool,
+    /// Permutations per scheduler shard (0 = automatic).
+    pub shard_size: usize,
+    /// Shard-scheduler SMT-style oversubscription: 2 OS threads per worker
+    /// slot.  Mirrors the paper's "same cores, 1 vs 2 threads per core"
+    /// ablation when `threads` is pinned to a physical-core count.
+    pub smt_oversubscribe: bool,
 }
 
 impl Default for RunConfig {
@@ -264,10 +247,12 @@ impl Default for RunConfig {
             seed: 0x5EED_CAFE,
             algo: SwAlgorithm::Tiled { tile: crate::permanova::DEFAULT_TILE },
             threads: 0,
-            backend: Backend::Native,
+            backend: "native".to_string(),
             artifacts_dir: crate::DEFAULT_ARTIFACTS_DIR.to_string(),
             xla_kernel: "matmul".to_string(),
             smt: true,
+            shard_size: 0,
+            smt_oversubscribe: false,
         }
     }
 }
@@ -302,28 +287,43 @@ impl RunConfig {
         let algo_s = doc.str_or("run", "algo", &d.algo.name());
         let algo = SwAlgorithm::parse(&algo_s)
             .ok_or_else(|| Error::Config(format!("unknown run.algo {algo_s:?}")))?;
-        let backend_s = doc.str_or("run", "backend", d.backend.name());
-        let backend = Backend::parse(&backend_s)
-            .ok_or_else(|| Error::Config(format!("unknown run.backend {backend_s:?}")))?;
         let cfg = RunConfig {
             data,
             n_perms: doc.int_or("run", "n_perms", d.n_perms as i64) as usize,
             seed: doc.int_or("run", "seed", d.seed as i64) as u64,
             algo,
             threads: doc.int_or("run", "threads", 0) as usize,
-            backend,
+            backend: doc.str_or("run", "backend", &d.backend),
             artifacts_dir: doc.str_or("xla", "artifacts_dir", &d.artifacts_dir),
             xla_kernel: doc.str_or("xla", "kernel", &d.xla_kernel),
             smt: doc.bool_or("simulate", "smt", true),
+            shard_size: doc.int_or("run", "shard_size", 0) as usize,
+            smt_oversubscribe: doc.bool_or("run", "smt_oversubscribe", false),
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// The shard-scheduler spec this config resolves to.
+    pub fn shard_spec(&self) -> crate::backend::ShardSpec {
+        crate::backend::ShardSpec {
+            shard_size: self.shard_size,
+            workers: self.threads,
+            smt: self.smt_oversubscribe,
+        }
     }
 
     /// Sanity-check cross-field constraints.
     pub fn validate(&self) -> Result<()> {
         if self.n_perms == 0 {
             return Err(Error::Config("n_perms must be >= 1".into()));
+        }
+        let registry = crate::backend::Registry::with_defaults();
+        if !registry.contains(&self.backend) {
+            return Err(Error::UnknownBackend {
+                name: self.backend.clone(),
+                known: registry.names(),
+            });
         }
         match &self.data {
             DataSource::Synthetic { n_dims, n_groups } => {
@@ -424,8 +424,10 @@ mod tests {
             DataSource::SyntheticUnifrac { n_taxa: 128, n_samples: 32, n_groups: 4 }
         );
         // Defaults fill the rest.
-        assert_eq!(cfg.backend, Backend::Native);
+        assert_eq!(cfg.backend, "native");
         assert_eq!(cfg.artifacts_dir, "artifacts");
+        assert_eq!(cfg.shard_size, 0);
+        assert!(!cfg.smt_oversubscribe);
     }
 
     #[test]
@@ -444,11 +446,28 @@ mod tests {
     }
 
     #[test]
-    fn backend_roundtrip() {
-        for b in [Backend::Native, Backend::Xla, Backend::Simulated] {
-            assert_eq!(Backend::parse(b.name()), Some(b));
+    fn backend_names_resolve_through_registry() {
+        for name in ["native", "native-tiled", "simulator", "simulated", "xla"] {
+            let cfg = RunConfig { backend: name.to_string(), ..Default::default() };
+            cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
         }
-        assert_eq!(Backend::parse("tpu"), None);
+        let bad = RunConfig { backend: "tpu".to_string(), ..Default::default() };
+        let e = bad.validate().unwrap_err().to_string();
+        assert!(e.contains("tpu") && e.contains("native-tiled"), "{e}");
+    }
+
+    #[test]
+    fn shard_knobs_flow_into_spec() {
+        let doc = TomlDoc::parse(
+            "[run]\nthreads = 6\nshard_size = 128\nsmt_oversubscribe = true\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        let spec = cfg.shard_spec();
+        assert_eq!(spec.workers, 6);
+        assert_eq!(spec.shard_size, 128);
+        assert!(spec.smt);
+        assert_eq!(spec.threads(), 12, "SMT oversubscription doubles the slots");
     }
 
     #[test]

@@ -208,7 +208,11 @@ mod tests {
     use super::*;
     use crate::permanova::st_of;
 
-    fn ctx_fixture(n: usize, k: usize, count: usize) -> (DistanceMatrix, Grouping, PermutationPlan) {
+    fn ctx_fixture(
+        n: usize,
+        k: usize,
+        count: usize,
+    ) -> (DistanceMatrix, Grouping, PermutationPlan) {
         let mat = DistanceMatrix::random_euclidean(n, 6, 3);
         let grouping = Grouping::balanced(n, k).unwrap();
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 11, count);

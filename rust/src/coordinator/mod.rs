@@ -1,8 +1,11 @@
-//! The L3 coordinator: devices, scheduling, and the config-driven entry.
+//! The L3 coordinator: devices, heterogeneous scheduling, and the
+//! config-driven entry.
 //!
-//! This is the "leader" of the three-layer stack: it owns data loading,
-//! the permutation plan, the device set, batch dispatch and aggregation.
-//! The CLI and examples drive everything through [`run_config`].
+//! Single-substrate runs flow through the unified backend engine
+//! ([`crate::backend::execute`]); this module keeps the heterogeneous path
+//! (mixing native threads, XLA sessions and simulated devices inside one
+//! run via [`run_coordinated`]) plus data loading.  The CLI and examples
+//! drive everything through [`run_config`].
 
 mod device;
 mod scheduler;
@@ -10,14 +13,14 @@ mod scheduler;
 pub use device::{
     BatchJob, BatchResult, Device, JobContext, NativeCpuDevice, SimulatedDevice, XlaDevice,
 };
-pub use scheduler::{run_coordinated, DeviceStats, RunReport};
+pub use scheduler::run_coordinated;
+// Re-exported for compatibility; the structs live in `crate::report`.
+pub use crate::report::{DeviceStats, RunReport};
 
-use crate::config::{Backend, DataSource, RunConfig};
+use crate::config::{DataSource, RunConfig};
 use crate::dmat::DistanceMatrix;
 use crate::error::{Error, Result};
 use crate::permanova::Grouping;
-use crate::runtime::XlaRuntime;
-use crate::simulator::{DeviceConfig, Mi300a};
 use crate::unifrac::{generate, unweighted_unifrac, SynthParams};
 
 /// Materialize the distance matrix + grouping a config describes.
@@ -66,8 +69,8 @@ fn read_labels(path: &str, n: usize) -> Result<Grouping> {
     Ok(grouping)
 }
 
-/// Run PERMANOVA as the config describes, building the device set from the
-/// backend selection.
+/// Run PERMANOVA as the config describes, resolving the backend through
+/// the name-keyed registry.
 pub fn run_config(cfg: &RunConfig) -> Result<RunReport> {
     cfg.validate()?;
     let (mat, grouping) = load_data(cfg)?;
@@ -75,33 +78,15 @@ pub fn run_config(cfg: &RunConfig) -> Result<RunReport> {
     run_on_backend(cfg, &mat, &grouping)
 }
 
-/// Run on pre-loaded data (examples and tests reuse this).
+/// Run on pre-loaded data (examples and tests reuse this).  This is a thin
+/// alias of [`crate::backend::execute`] — every configured run goes
+/// through the unified `Backend` trait.
 pub fn run_on_backend(
     cfg: &RunConfig,
     mat: &DistanceMatrix,
     grouping: &Grouping,
 ) -> Result<RunReport> {
-    match cfg.backend {
-        Backend::Native => {
-            let dev = NativeCpuDevice::new(cfg.algo, cfg.threads);
-            run_coordinated(mat, grouping, cfg.n_perms, cfg.seed, vec![Box::new(dev)], vec![])
-        }
-        Backend::Simulated => {
-            let dev = SimulatedDevice::new(
-                Mi300a::default(),
-                cfg.algo,
-                DeviceConfig::Cpu { smt: cfg.smt },
-            );
-            run_coordinated(mat, grouping, cfg.n_perms, cfg.seed, vec![Box::new(dev)], vec![])
-        }
-        Backend::Xla => {
-            let rt = XlaRuntime::new(&cfg.artifacts_dir)?;
-            let session = rt.session(&cfg.xla_kernel, mat.data(), mat.n(), grouping)?;
-            let dev = XlaDevice::new(session);
-            let local: Vec<Box<dyn Device + '_>> = vec![Box::new(dev)];
-            run_coordinated(mat, grouping, cfg.n_perms, cfg.seed, vec![], local)
-        }
-    }
+    crate::backend::execute(cfg, mat, grouping)
 }
 
 #[cfg(test)]
@@ -122,6 +107,7 @@ mod tests {
         assert_eq!(r.n_perms, 99);
         assert_eq!(r.n, 48);
         assert_eq!(r.k, 4);
+        assert_eq!(r.backend, "native");
         assert!(r.p_value > 0.0 && r.p_value <= 1.0);
     }
 
@@ -143,10 +129,11 @@ mod tests {
         let cfg = RunConfig {
             data: DataSource::Synthetic { n_dims: 32, n_groups: 4 },
             n_perms: 30,
-            backend: Backend::Simulated,
+            backend: "simulator".to_string(),
             ..Default::default()
         };
         let r = run_config(&cfg).unwrap();
+        assert_eq!(r.backend, "simulator");
         let sim: f64 = r.per_device.iter().map(|d| d.simulated_secs).sum();
         assert!(sim > 0.0, "simulated time must be reported");
     }
@@ -159,9 +146,23 @@ mod tests {
             ..Default::default()
         };
         let nat = run_config(&base).unwrap();
-        let sim = run_config(&RunConfig { backend: Backend::Simulated, ..base.clone() }).unwrap();
+        let sim =
+            run_config(&RunConfig { backend: "simulator".to_string(), ..base.clone() }).unwrap();
         assert!((nat.f_obs - sim.f_obs).abs() / nat.f_obs.abs().max(1e-12) < 1e-4);
         assert_eq!(nat.p_value, sim.p_value);
+    }
+
+    #[test]
+    fn legacy_backend_name_still_accepted() {
+        let cfg = RunConfig {
+            data: DataSource::Synthetic { n_dims: 24, n_groups: 2 },
+            n_perms: 19,
+            backend: "simulated".to_string(),
+            ..Default::default()
+        };
+        let r = run_config(&cfg).unwrap();
+        // Legacy name is accepted and canonicalized by the registry.
+        assert_eq!(r.backend, "simulator");
     }
 
     #[test]
@@ -220,10 +221,18 @@ mod tests {
             xla_kernel: "matmul".to_string(),
             ..Default::default()
         };
-        let xla = run_config(&RunConfig { backend: Backend::Xla, ..base.clone() }).unwrap();
+        let xla = match run_config(&RunConfig { backend: "xla".to_string(), ..base.clone() }) {
+            Ok(r) => r,
+            Err(crate::error::Error::Xla(m)) => {
+                eprintln!("skipping xla coordinator test: {m}");
+                return;
+            }
+            Err(e) => panic!("{e}"),
+        };
         let nat = run_config(&base).unwrap();
         assert!((xla.f_obs - nat.f_obs).abs() / nat.f_obs.abs().max(1e-12) < 1e-3);
         assert_eq!(xla.p_value, nat.p_value);
+        assert_eq!(xla.backend, "xla");
         assert!(xla.per_device[0].device.starts_with("xla/"));
     }
 }

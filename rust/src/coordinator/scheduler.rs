@@ -1,52 +1,32 @@
-//! The permutation-batch scheduler: split, dispatch, aggregate.
+//! The heterogeneous permutation-batch scheduler: split, dispatch,
+//! aggregate.
 //!
 //! PERMANOVA's permutation axis is embarrassingly parallel, but devices are
 //! heterogeneous (a native thread-pool, a single-threaded PJRT session, a
 //! simulator) and batch-granular.  The scheduler:
 //!
 //! 1. slices `[0, n_perms+1)` into jobs sized to each device's preferred
-//!    batch (work-stealing from a shared cursor — fast devices take more);
+//!    batch via the shared [`ShardCursor`] (work-stealing — fast devices
+//!    take more);
 //! 2. runs every `Send` device on its own scope thread; non-`Send` devices
 //!    (XLA sessions) run on the submitting thread, pulling from the same
 //!    cursor — one code path, no special-casing in the aggregation;
 //! 3. aggregates per-batch F statistics into the permutation distribution,
 //!    the p-value, and per-device utilization stats.
+//!
+//! For single-substrate runs prefer the unified engine
+//! ([`crate::backend::execute`]); this path exists for mixing devices.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use super::device::{BatchJob, BatchResult, Device, JobContext};
+use crate::backend::ShardCursor;
 use crate::dmat::DistanceMatrix;
 use crate::error::{Error, Result};
 use crate::permanova::{pvalue, st_of, Grouping};
+use crate::report::{DeviceStats, RunReport};
 use crate::rng::PermutationPlan;
-
-/// Per-device utilization after a run.
-#[derive(Clone, Debug)]
-pub struct DeviceStats {
-    pub device: String,
-    pub batches: usize,
-    pub perms: usize,
-    pub busy_secs: f64,
-    /// Sum of modelled MI300A seconds (simulated devices only).
-    pub simulated_secs: f64,
-}
-
-/// Aggregated output of a coordinated run.
-#[derive(Clone, Debug)]
-pub struct RunReport {
-    pub f_obs: f64,
-    pub p_value: f64,
-    pub n_perms: usize,
-    pub n: usize,
-    pub k: usize,
-    pub s_t: f64,
-    pub elapsed_secs: f64,
-    pub per_device: Vec<DeviceStats>,
-    /// The permuted F distribution (observed excluded), in plan order.
-    pub f_perms: Vec<f64>,
-}
 
 /// Run `n_perms` permutations (plus the observed labelling at index 0)
 /// across a heterogeneous device set.
@@ -81,7 +61,7 @@ pub fn run_coordinated(
     let s_t = st_of(mat);
     let ctx = JobContext { mat, grouping, plan: &plan, s_t };
 
-    let cursor = AtomicUsize::new(0);
+    let cursor = ShardCursor::new(total);
     let results: Mutex<Vec<BatchResult>> = Mutex::new(Vec::new());
     let failure: Mutex<Option<Error>> = Mutex::new(None);
     let t0 = Instant::now();
@@ -93,12 +73,10 @@ pub fn run_coordinated(
             if failure.lock().unwrap().is_some() {
                 return; // fail fast: another device already errored
             }
-            let start = cursor.fetch_add(cap, Ordering::Relaxed);
-            if start >= total {
+            let Some(shard) = cursor.claim(cap) else {
                 return;
-            }
-            let rows = cap.min(total - start);
-            match dev.run(&ctx, BatchJob { start, rows }) {
+            };
+            match dev.run(&ctx, BatchJob { start: shard.start, rows: shard.len() }) {
                 Ok(r) => results.lock().unwrap().push(r),
                 Err(e) => {
                     *failure.lock().unwrap() = Some(e);
@@ -163,6 +141,7 @@ pub fn run_coordinated(
         k: grouping.k(),
         s_t,
         elapsed_secs: t0.elapsed().as_secs_f64(),
+        backend: "coordinated".to_string(),
         per_device: stats.into_values().collect(),
         f_perms,
     })
@@ -187,8 +166,9 @@ mod tests {
     #[test]
     fn single_device_matches_direct_permanova() {
         let (mat, grouping) = fixture(40, 4);
-        let report = run_coordinated(&mat, &grouping, 99, 77, vec![native(SwAlgorithm::Brute, 16)], vec![])
-            .unwrap();
+        let report =
+            run_coordinated(&mat, &grouping, 99, 77, vec![native(SwAlgorithm::Brute, 16)], vec![])
+                .unwrap();
         let direct = permanova(
             &mat,
             &grouping,
@@ -204,6 +184,7 @@ mod tests {
         assert!((report.f_obs - direct.f_obs).abs() < 1e-9);
         assert_eq!(report.p_value, direct.p_value);
         assert_eq!(report.f_perms.len(), 99);
+        assert_eq!(report.backend, "coordinated");
         for (a, b) in report.f_perms.iter().zip(direct.f_perms.as_ref().unwrap()) {
             assert!((a - b).abs() < 1e-9, "same plan => identical distribution");
         }
@@ -234,8 +215,9 @@ mod tests {
     fn scheduling_is_result_deterministic() {
         // Different device mixes, same seed: identical statistics.
         let (mat, grouping) = fixture(32, 4);
-        let r1 = run_coordinated(&mat, &grouping, 120, 5, vec![native(SwAlgorithm::Brute, 11)], vec![])
-            .unwrap();
+        let r1 =
+            run_coordinated(&mat, &grouping, 120, 5, vec![native(SwAlgorithm::Brute, 11)], vec![])
+                .unwrap();
         let r2 = run_coordinated(
             &mat,
             &grouping,

@@ -275,7 +275,8 @@ impl DistanceMatrix {
             .map_err(|e| Error::io(p.display().to_string(), e))?;
         let n = u64::from_le_bytes(nb) as usize;
         if n == 0 || n > 1 << 20 {
-            return Err(Error::parse("pdm", p.display().to_string(), format!("implausible n = {n}")));
+            let msg = format!("implausible n = {n}");
+            return Err(Error::parse("pdm", p.display().to_string(), msg));
         }
         let mut bytes = vec![0u8; n * n * 4];
         r.read_exact(&mut bytes)

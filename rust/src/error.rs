@@ -1,53 +1,73 @@
 //! Crate-wide error type.
 //!
-//! One `thiserror` enum covering every layer: data validation, IO, parsing
-//! (JSON/TOML/Newick), the XLA runtime, and coordinator scheduling.  Library
-//! code returns [`Result`]; only `main` formats for humans.
+//! One hand-rolled enum covering every layer: data validation, IO, parsing
+//! (JSON/TOML/Newick), the XLA runtime, backend selection and coordinator
+//! scheduling.  The `Display`/`Error` impls are written out by hand (no
+//! `thiserror`) so the crate builds with zero dependencies in hermetic
+//! environments.  Library code returns [`Result`]; only `main` formats for
+//! humans.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All failure modes of the library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Input data failed validation (asymmetric matrix, empty group, ...).
-    #[error("invalid input: {0}")]
     InvalidInput(String),
 
     /// A configuration file or CLI flag is malformed.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Underlying IO failure, annotated with the path involved.
-    #[error("io error on {path}: {source}")]
-    Io {
-        path: String,
-        #[source]
-        source: std::io::Error,
-    },
+    Io { path: String, source: std::io::Error },
 
     /// A structured text format failed to parse (JSON, TOML subset, Newick,
     /// distance-matrix TSV...).  `what` names the format.
-    #[error("{what} parse error at {context}: {message}")]
-    Parse {
-        what: &'static str,
-        context: String,
-        message: String,
-    },
+    Parse { what: &'static str, context: String, message: String },
 
     /// artifacts/manifest.json doesn't describe what the runtime needs.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// The XLA/PJRT layer failed (compile, transfer, execute).
-    #[error("xla runtime error: {0}")]
+    /// The XLA/PJRT layer failed (compile, transfer, execute, or the
+    /// runtime was compiled out entirely).
     Xla(String),
 
+    /// No backend with the requested name is registered.
+    UnknownBackend { name: String, known: Vec<String> },
+
     /// Coordinator-level failure (a worker died, a channel closed early...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidInput(m) => write!(f, "invalid input: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
+            Error::Parse { what, context, message } => {
+                write!(f, "{what} parse error at {context}: {message}")
+            }
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Error::UnknownBackend { name, known } => {
+                write!(f, "unknown backend {name:?} (known: {})", known.join(", "))
+            }
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl Error {
@@ -63,12 +83,6 @@ impl Error {
         message: impl Into<String>,
     ) -> Self {
         Error::Parse { what, context: context.into(), message: message.into() }
-    }
-}
-
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
     }
 }
 
@@ -89,5 +103,25 @@ mod tests {
     fn io_error_carries_path() {
         let e = Error::io("/nope/file", std::io::Error::from(std::io::ErrorKind::NotFound));
         assert!(e.to_string().contains("/nope/file"));
+    }
+
+    #[test]
+    fn unknown_backend_lists_known() {
+        let e = Error::UnknownBackend {
+            name: "cuda".into(),
+            known: vec!["native".into(), "simulator".into()],
+        };
+        let s = e.to_string();
+        assert!(s.contains("cuda"));
+        assert!(s.contains("native"));
+        assert!(s.contains("simulator"));
+    }
+
+    #[test]
+    fn source_chain() {
+        use std::error::Error as _;
+        let e = Error::io("/x", std::io::Error::from(std::io::ErrorKind::NotFound));
+        assert!(e.source().is_some());
+        assert!(Error::Config("x".into()).source().is_none());
     }
 }

@@ -151,7 +151,9 @@ impl Json {
     pub fn req_usize(&self, key: &str) -> Result<usize> {
         self.get(key)
             .and_then(Json::as_usize)
-            .ok_or_else(|| Error::parse("json", key.to_string(), "missing/not a non-negative integer"))
+            .ok_or_else(|| {
+                Error::parse("json", key.to_string(), "missing/not a non-negative integer")
+            })
     }
 
     pub fn req_arr(&self, key: &str) -> Result<&[Json]> {

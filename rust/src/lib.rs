@@ -16,7 +16,9 @@
 //! * **L2** — the JAX PERMANOVA batch graph (`python/compile/model.py`).
 //! * **L3** — this crate: substrates ([`rng`], [`dmat`], [`unifrac`],
 //!   [`stream`], [`simulator`], [`bench`]), the PERMANOVA core
-//!   ([`permanova`]), the XLA runtime ([`runtime`]) and the scheduling
+//!   ([`permanova`]), the XLA runtime ([`runtime`]), the unified
+//!   [`backend`] execution engine (the `Backend` trait, its name-keyed
+//!   registry and the sharded permutation scheduler) and the heterogeneous
 //!   [`coordinator`], plus reporting and the CLI.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
@@ -34,6 +36,7 @@
 //! println!("F = {:.4}, p = {:.4}", res.f_obs, res.p_value);
 //! ```
 
+pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod config;

@@ -140,7 +140,12 @@ mod tests {
         for i in 0..n {
             for j in (i + 1)..n {
                 let same = (i % 2) == (j % 2);
-                mat.set_sym(i, j, if same { 0.1 + 0.001 * (i + j) as f32 } else { 5.0 + 0.001 * (i * j) as f32 });
+                let d = if same {
+                    0.1 + 0.001 * (i + j) as f32
+                } else {
+                    5.0 + 0.001 * (i * j) as f32
+                };
+                mat.set_sym(i, j, d);
             }
         }
         let grouping = Grouping::new((0..n).map(|i| (i % 2) as u32).collect()).unwrap();

@@ -6,13 +6,14 @@
 //! parallel and the matrix is shared read-only — exactly the regime the
 //! paper measures.
 //!
-//! Thread count is explicit (the SMT study of Figure 1 is "same cores, 1 vs
-//! 2 threads per core"), defaulting to available parallelism.
-
-use std::sync::atomic::{AtomicUsize, Ordering};
+//! Threading is delegated to the crate-wide sharded scheduler
+//! ([`crate::backend::shard`]); thread count is explicit (the SMT study of
+//! Figure 1 is "same cores, 1 vs 2 threads per core"), defaulting to
+//! available parallelism.
 
 use super::grouping::Grouping;
 use super::kernels::{sw_one, SwAlgorithm};
+use crate::backend::shard::{run_sharded, run_sharded_with, ShardSpec};
 use crate::dmat::DistanceMatrix;
 use crate::rng::PermutationPlan;
 
@@ -26,11 +27,7 @@ pub fn resolve_threads(requested: usize) -> usize {
 }
 
 /// Compute s_W for `rows` pre-materialized label rows (row-major
-/// `rows * n`), using `threads` OS threads.
-///
-/// Rows are claimed via an atomic cursor in small chunks — the same dynamic
-/// schedule OpenMP would use — so stragglers (NUMA, SMT siblings) don't gate
-/// the batch.
+/// `rows * n`), using `threads` OS threads via the shard scheduler.
 pub fn sw_batch(
     mat: &DistanceMatrix,
     groupings: &[u32],
@@ -41,55 +38,20 @@ pub fn sw_batch(
 ) -> Vec<f32> {
     let n = mat.n();
     assert_eq!(groupings.len(), rows * n, "groupings buffer shape");
-    let threads = resolve_threads(threads).min(rows.max(1));
     let mut out = vec![0.0f32; rows];
-
-    if threads <= 1 || rows <= 1 {
-        for r in 0..rows {
-            out[r] = sw_one(algo, mat.data(), n, &groupings[r * n..(r + 1) * n], inv_group_sizes);
-        }
-        return out;
-    }
-
-    // Chunked dynamic scheduling: big enough to amortize the atomic, small
-    // enough to balance (paper workloads have thousands of permutations).
-    let chunk = (rows / (threads * 8)).max(1);
-    let cursor = AtomicUsize::new(0);
-    let out_ptr = SendPtr(out.as_mut_ptr());
-
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                let out_ptr = &out_ptr;
-                loop {
-                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= rows {
-                        break;
-                    }
-                    let end = (start + chunk).min(rows);
-                    for r in start..end {
-                        let sw = sw_one(
-                            algo,
-                            mat.data(),
-                            n,
-                            &groupings[r * n..(r + 1) * n],
-                            inv_group_sizes,
-                        );
-                        // SAFETY: each r is claimed by exactly one thread
-                        // (fetch_add hands out disjoint ranges), and `out`
-                        // outlives the scope.
-                        unsafe { *out_ptr.0.add(r) = sw };
-                    }
-                }
-            });
+    let spec = ShardSpec::with_workers(resolve_threads(threads));
+    run_sharded(&spec, &mut out, |start, slice| {
+        for (i, o) in slice.iter_mut().enumerate() {
+            let r = start + i;
+            *o = sw_one(algo, mat.data(), n, &groupings[r * n..(r + 1) * n], inv_group_sizes);
         }
     });
     out
 }
 
 /// Compute s_W for a permutation-plan range without materializing all label
-/// rows up front: each thread owns a scratch row and streams through its
-/// chunk.  This is the memory-lean path the coordinator uses for large
+/// rows up front: each worker owns a scratch row and streams through its
+/// shards.  This is the memory-lean path the coordinator uses for large
 /// permutation counts.
 pub fn sw_plan_range(
     mat: &DistanceMatrix,
@@ -102,43 +64,19 @@ pub fn sw_plan_range(
 ) -> Vec<f32> {
     let n = mat.n();
     assert_eq!(plan.n(), n, "plan/matrix size mismatch");
-    let threads = resolve_threads(threads).min(count.max(1));
     let mut out = vec![0.0f32; count];
-
-    if threads <= 1 {
-        let mut row = vec![0u32; n];
-        for i in 0..count {
-            plan.fill(start + i, &mut row);
-            out[i] = sw_one(algo, mat.data(), n, &row, inv_group_sizes);
-        }
-        return out;
-    }
-
-    let chunk = (count / (threads * 8)).max(1);
-    let cursor = AtomicUsize::new(0);
-    let out_ptr = SendPtr(out.as_mut_ptr());
-
-    std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                let out_ptr = &out_ptr;
-                let mut row = vec![0u32; n];
-                loop {
-                    let lo = cursor.fetch_add(chunk, Ordering::Relaxed);
-                    if lo >= count {
-                        break;
-                    }
-                    let hi = (lo + chunk).min(count);
-                    for i in lo..hi {
-                        plan.fill(start + i, &mut row);
-                        let sw = sw_one(algo, mat.data(), n, &row, inv_group_sizes);
-                        // SAFETY: disjoint indices per thread, out outlives scope.
-                        unsafe { *out_ptr.0.add(i) = sw };
-                    }
-                }
-            });
-        }
-    });
+    let spec = ShardSpec::with_workers(resolve_threads(threads));
+    run_sharded_with(
+        &spec,
+        &mut out,
+        || vec![0u32; n],
+        |row, lo, slice| {
+            for (i, o) in slice.iter_mut().enumerate() {
+                plan.fill(start + lo + i, row);
+                *o = sw_one(algo, mat.data(), n, row, inv_group_sizes);
+            }
+        },
+    );
     out
 }
 
@@ -154,11 +92,6 @@ pub fn sw_permutations(
     let plan = PermutationPlan::new(grouping.labels().to_vec(), seed, count);
     sw_plan_range(mat, &plan, 0, count, grouping.inv_sizes(), algo, threads)
 }
-
-/// Raw pointer wrapper so scoped threads can write disjoint output slots.
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Sync for SendPtr<T> {}
-unsafe impl<T> Send for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -206,7 +139,8 @@ mod tests {
         let (mat, grouping) = setup(40, 5);
         let base = sw_permutations(&mat, &grouping, 3, 41, SwAlgorithm::Tiled { tile: 16 }, 1);
         for threads in [2, 3, 8] {
-            let got = sw_permutations(&mat, &grouping, 3, 41, SwAlgorithm::Tiled { tile: 16 }, threads);
+            let got =
+                sw_permutations(&mat, &grouping, 3, 41, SwAlgorithm::Tiled { tile: 16 }, threads);
             assert_eq!(base, got, "threads = {threads}");
         }
     }

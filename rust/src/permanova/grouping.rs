@@ -59,19 +59,16 @@ impl Grouping {
     /// mapping them to dense labels in first-seen-sorted order.  Returns the
     /// grouping and the category -> label mapping.
     pub fn from_categories<S: AsRef<str>>(cats: &[S]) -> Result<(Self, BTreeMap<String, u32>)> {
-        let mut map = BTreeMap::new();
+        let mut m2 = BTreeMap::new();
         for c in cats {
-            let next = map.len() as u32;
-            map.entry(c.as_ref().to_string()).or_insert(next);
+            let next = m2.len() as u32;
+            m2.entry(c.as_ref().to_string()).or_insert(next);
         }
         // BTreeMap iteration is sorted by category; reassign dense ids in
         // sorted order so the mapping is stable regardless of input order.
-        let mut sorted: Vec<(&String, &mut u32)> = Vec::new();
-        let mut m2 = map.clone();
         for (i, (_, v)) in m2.iter_mut().enumerate() {
             *v = i as u32;
         }
-        drop(sorted.drain(..));
         let labels = cats
             .iter()
             .map(|c| *m2.get(c.as_ref()).expect("just inserted"))

@@ -141,8 +141,8 @@ pub fn sw_tiled_one(
                 // The paper's inner loop, with the branch if-converted and
                 // eight-lane re-associated so it runs as SIMD FMAs (same
                 // optimization the paper's compilers apply at -O3).
-                let local_s_w =
-                    masked_sum_sq(&mat_row[min_col..max_col], &grouping[min_col..max_col], group_idx);
+                let cols = &grouping[min_col..max_col];
+                let local_s_w = masked_sum_sq(&mat_row[min_col..max_col], cols, group_idx);
                 s_w += local_s_w * inv_group_sizes[group_idx as usize];
             }
             tcol += tile;
@@ -271,7 +271,8 @@ mod tests {
 
     #[test]
     fn algorithms_agree_on_random_inputs() {
-        for (n, k, seed) in [(7usize, 2usize, 1u64), (32, 4, 2), (65, 3, 3), (128, 8, 4), (200, 5, 5)] {
+        let cases = [(7usize, 2usize, 1u64), (32, 4, 2), (65, 3, 3), (128, 8, 4), (200, 5, 5)];
+        for (n, k, seed) in cases {
             let (m, g, inv) = random_case(n, k, seed);
             let oracle = sw_brute_f64(m.data(), n, &g, &inv);
             for algo in [

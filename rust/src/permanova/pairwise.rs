@@ -130,7 +130,8 @@ mod tests {
         for e in &r.entries {
             let involves_2 = e.group_a == 2 || e.group_b == 2;
             if involves_2 {
-                assert!(e.p_adjusted <= 0.05, "pair ({}, {}): p_adj {}", e.group_a, e.group_b, e.p_adjusted);
+                let (a, b) = (e.group_a, e.group_b);
+                assert!(e.p_adjusted <= 0.05, "pair ({a}, {b}): p_adj {}", e.p_adjusted);
             } else {
                 // Null pair: must not survive the Bonferroni-corrected
                 // threshold (a fixed dataset can land anywhere in the

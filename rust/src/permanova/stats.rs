@@ -123,7 +123,8 @@ pub fn permanova(
     let start = Instant::now();
 
     let plan = PermutationPlan::new(grouping.labels().to_vec(), opts.seed, n_perms + 1);
-    let s_w_all = sw_plan_range(mat, &plan, 0, n_perms + 1, grouping.inv_sizes(), opts.algo, threads);
+    let s_w_all =
+        sw_plan_range(mat, &plan, 0, n_perms + 1, grouping.inv_sizes(), opts.algo, threads);
 
     let s_t = st_of(mat);
     let f_all: Vec<f64> = s_w_all

@@ -1,9 +1,107 @@
-//! Report rendering: tables, horizontal bar charts, markdown fragments.
+//! Run reports and rendering: the structured result of a PERMANOVA run,
+//! plus tables, horizontal bar charts and markdown fragments.
 //!
 //! Everything the CLI, examples and benches print goes through here so the
 //! output of `cargo bench` lines up with what EXPERIMENTS.md records.
+//! [`RunReport`] always records **which backend** produced it — the
+//! provenance every cross-substrate comparison in this repo leans on.
 
 use std::fmt::Write as _;
+
+use crate::jsonio::Json;
+
+/// Per-device (or per-backend) utilization after a run.
+#[derive(Clone, Debug)]
+pub struct DeviceStats {
+    pub device: String,
+    pub batches: usize,
+    pub perms: usize,
+    pub busy_secs: f64,
+    /// Sum of modelled MI300A seconds (simulated devices only).
+    pub simulated_secs: f64,
+}
+
+/// Aggregated output of a PERMANOVA run (backend engine or coordinator).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub f_obs: f64,
+    pub p_value: f64,
+    pub n_perms: usize,
+    pub n: usize,
+    pub k: usize,
+    pub s_t: f64,
+    pub elapsed_secs: f64,
+    /// Registry name of the backend that produced this report
+    /// (`"coordinated"` for heterogeneous multi-device runs).
+    pub backend: String,
+    pub per_device: Vec<DeviceStats>,
+    /// The permuted F distribution (observed excluded), in plan order.
+    pub f_perms: Vec<f64>,
+}
+
+impl RunReport {
+    /// Human-readable report block (the CLI's `run` output).
+    pub fn render(&self, algo: &str) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "PERMANOVA  n={} k={} perms={} backend={} algo={}\n",
+            self.n, self.k, self.n_perms, self.backend, algo
+        ));
+        out.push_str(&format!(
+            "  pseudo-F = {:.6}\n  p-value  = {:.6}\n  s_T      = {:.6}\n  wall     = {:.3}s\n",
+            self.f_obs, self.p_value, self.s_t, self.elapsed_secs
+        ));
+        let mut t = Table::new(&["device", "batches", "perms", "busy s", "modelled s"]);
+        for d in &self.per_device {
+            t.row(&[
+                d.device.clone(),
+                d.batches.to_string(),
+                d.perms.to_string(),
+                format!("{:.3}", d.busy_secs),
+                if d.simulated_secs > 0.0 {
+                    format!("{:.3}", d.simulated_secs)
+                } else {
+                    "-".to_string()
+                },
+            ]);
+        }
+        out.push_str(&t.render());
+        out
+    }
+
+    /// Machine-readable report (consumed by scripts / CI trend tracking).
+    pub fn to_json(&self, algo: &str) -> Json {
+        Json::obj(vec![
+            ("version", Json::str(crate::VERSION)),
+            ("backend", Json::str(self.backend.clone())),
+            ("algo", Json::str(algo)),
+            ("n", Json::num(self.n as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("n_perms", Json::num(self.n_perms as f64)),
+            ("f_obs", Json::num(self.f_obs)),
+            ("p_value", Json::num(self.p_value)),
+            ("s_t", Json::num(self.s_t)),
+            ("elapsed_secs", Json::num(self.elapsed_secs)),
+            (
+                "devices",
+                Json::Arr(
+                    self.per_device
+                        .iter()
+                        .map(|d| {
+                            Json::obj(vec![
+                                ("device", Json::str(d.device.clone())),
+                                ("batches", Json::num(d.batches as f64)),
+                                ("perms", Json::num(d.perms as f64)),
+                                ("busy_secs", Json::num(d.busy_secs)),
+                                ("simulated_secs", Json::num(d.simulated_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
 
 /// A simple aligned text table.
 #[derive(Clone, Debug, Default)]
@@ -173,5 +271,43 @@ mod tests {
         assert_eq!(format_bytes(512), "512 B");
         assert_eq!(format_bytes(2048), "2.00 KiB");
         assert_eq!(format_bytes(5_057_000_000_000), "4.60 TiB");
+    }
+
+    fn sample_report() -> RunReport {
+        RunReport {
+            f_obs: 2.5,
+            p_value: 0.01,
+            n_perms: 99,
+            n: 40,
+            k: 4,
+            s_t: 10.0,
+            elapsed_secs: 0.5,
+            backend: "native-tiled".into(),
+            per_device: vec![DeviceStats {
+                device: "native-tiled".into(),
+                batches: 1,
+                perms: 100,
+                busy_secs: 0.4,
+                simulated_secs: 0.0,
+            }],
+            f_perms: vec![1.0; 99],
+        }
+    }
+
+    #[test]
+    fn run_report_render_records_backend() {
+        let s = sample_report().render("tiled512");
+        assert!(s.contains("backend=native-tiled"));
+        assert!(s.contains("algo=tiled512"));
+        assert!(s.contains("pseudo-F"));
+    }
+
+    #[test]
+    fn run_report_json_roundtrips() {
+        let doc = sample_report().to_json("tiled512");
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.req_str("backend").unwrap(), "native-tiled");
+        assert_eq!(parsed.req_usize("n_perms").unwrap(), 99);
+        assert_eq!(parsed.req_arr("devices").unwrap().len(), 1);
     }
 }

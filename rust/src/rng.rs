@@ -190,7 +190,8 @@ impl PermutationPlan {
         }
         // Derive an independent generator per index; SplitMix64 of
         // (seed ^ mixed index) gives uncorrelated xoshiro seeds.
-        let mut sm = SplitMix64::new(self.seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mixed = (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut sm = SplitMix64::new(self.seed ^ mixed);
         let mut rng = Xoshiro256pp::new(sm.next_u64());
         shuffle(&mut rng, out);
     }

@@ -24,6 +24,12 @@ use super::manifest::{ArtifactMeta, Manifest};
 use crate::error::{Error, Result};
 use crate::permanova::Grouping;
 
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
 /// The runtime: one PJRT client + the artifact manifest.
 pub struct XlaRuntime {
     client: PjRtClient,

@@ -88,8 +88,9 @@ pub fn predict(machine: &Mi300a, w: &Workload, algo: SwAlgorithm, dev: DeviceCon
             let t_mem = t.hbm_bytes as f64 / bw;
             // Issue rate: cores * freq / cycles-per-elem, scaled by SMT.
             let smt_gain = if smt { p.smt_speedup } else { 1.0 };
-            let rate =
-                machine.cpu.cores as f64 * machine.cpu.freq_ghz * 1e9 / p.cycles_per_elem * smt_gain;
+            let rate = machine.cpu.cores as f64 * machine.cpu.freq_ghz * 1e9
+                / p.cycles_per_elem
+                * smt_gain;
             let t_cpu = w.total_elems() as f64 / rate;
             (t_mem, t_cpu, t.hbm_bytes, 0.0)
         }
@@ -176,7 +177,8 @@ mod tests {
     fn paper_shape_tiled_claws_back_on_cpu() {
         let (m, w) = paper();
         let brute = predict(&m, &w, SwAlgorithm::Brute, DeviceConfig::Cpu { smt: true });
-        let tiled = predict(&m, &w, SwAlgorithm::Tiled { tile: 512 }, DeviceConfig::Cpu { smt: true });
+        let tiled =
+            predict(&m, &w, SwAlgorithm::Tiled { tile: 512 }, DeviceConfig::Cpu { smt: true });
         let gpu = predict(&m, &w, SwAlgorithm::Brute, DeviceConfig::Gpu);
         assert!(tiled.seconds < brute.seconds, "tiled must beat brute on CPU");
         // "claw back some of that advantage": best CPU config closes the
@@ -201,9 +203,11 @@ mod tests {
     #[test]
     fn more_bandwidth_never_slower() {
         let (mut m, w) = paper();
-        let base = predict(&m, &w, SwAlgorithm::Tiled { tile: 512 }, DeviceConfig::Cpu { smt: true });
+        let base =
+            predict(&m, &w, SwAlgorithm::Tiled { tile: 512 }, DeviceConfig::Cpu { smt: true });
         m.cpu.stream_bw_smt_gbs *= 2.0;
-        let fast = predict(&m, &w, SwAlgorithm::Tiled { tile: 512 }, DeviceConfig::Cpu { smt: true });
+        let fast =
+            predict(&m, &w, SwAlgorithm::Tiled { tile: 512 }, DeviceConfig::Cpu { smt: true });
         assert!(fast.seconds <= base.seconds);
     }
 

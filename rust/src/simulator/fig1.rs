@@ -23,12 +23,13 @@ pub struct Fig1Row {
 /// The figure's configuration axis, in presentation order (fastest last,
 /// like the paper's bar chart reads).
 pub fn fig1_configs() -> Vec<(SwAlgorithm, DeviceConfig, &'static str)> {
+    let tiled = SwAlgorithm::Tiled { tile: DEFAULT_TILE };
     vec![
         (SwAlgorithm::Brute, DeviceConfig::Cpu { smt: false }, "CPU brute force (no SMT)"),
         (SwAlgorithm::Brute, DeviceConfig::Cpu { smt: true }, "CPU brute force (SMT)"),
-        (SwAlgorithm::Tiled { tile: DEFAULT_TILE }, DeviceConfig::Cpu { smt: false }, "CPU tiled (no SMT)"),
-        (SwAlgorithm::Tiled { tile: DEFAULT_TILE }, DeviceConfig::Cpu { smt: true }, "CPU tiled (SMT)"),
-        (SwAlgorithm::Tiled { tile: DEFAULT_TILE }, DeviceConfig::Gpu, "GPU tiled"),
+        (tiled, DeviceConfig::Cpu { smt: false }, "CPU tiled (no SMT)"),
+        (tiled, DeviceConfig::Cpu { smt: true }, "CPU tiled (SMT)"),
+        (tiled, DeviceConfig::Gpu, "GPU tiled"),
         (SwAlgorithm::Brute, DeviceConfig::Gpu, "GPU brute force"),
     ]
 }

@@ -9,12 +9,13 @@
 //! side) and to regenerate the A2 tables.
 //!
 //! Multi-threaded with static partitioning, matching `omp parallel for
-//! schedule(static)` in the original.
+//! schedule(static)` in the original.  The worker pool is the crate-wide
+//! [`with_static_pool`] (persistent workers + barrier sync, so the timed
+//! region excludes thread spawn — as OpenMP's does).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Barrier;
 use std::time::Instant;
 
+use crate::backend::shard::with_static_pool;
 use crate::permanova::resolve_threads;
 
 /// The four STREAM kernels.
@@ -114,70 +115,48 @@ pub fn run_stream(len: usize, reps: usize, threads: usize) -> StreamReport {
 
     let mut times = vec![vec![0.0f64; reps]; 4];
 
-    // Persistent worker pool with a barrier per kernel invocation, so the
-    // timed region excludes thread spawn (as OpenMP's does).
-    let barrier = Barrier::new(threads + 1);
-    let work = AtomicUsize::new(usize::MAX); // kernel id or MAX = idle, MAX-1 = quit
     let (pa, pb, pc) = (SendPtr(a.as_mut_ptr()), SendPtr(b.as_mut_ptr()), SendPtr(c.as_mut_ptr()));
-
-    std::thread::scope(|s| {
-        for t in 0..threads {
-            let barrier = &barrier;
-            let work = &work;
-            let (pa, pb, pc) = (&pa, &pb, &pc);
-            // Static partition [lo, hi) for this worker.
-            let lo = len * t / threads;
-            let hi = len * (t + 1) / threads;
-            s.spawn(move || loop {
-                barrier.wait(); // wait for a job
-                let w = work.load(Ordering::Acquire);
-                if w == usize::MAX - 1 {
-                    break;
-                }
-                // SAFETY: disjoint [lo, hi) slices per worker; the main
-                // thread does not touch the arrays between barriers.
-                unsafe {
-                    let a = std::slice::from_raw_parts_mut(pa.0.add(lo), hi - lo);
-                    let b = std::slice::from_raw_parts_mut(pb.0.add(lo), hi - lo);
-                    let c = std::slice::from_raw_parts_mut(pc.0.add(lo), hi - lo);
-                    match w {
-                        0 => {
-                            for i in 0..a.len() {
-                                c[i] = a[i];
-                            }
-                        }
-                        1 => {
-                            for i in 0..a.len() {
-                                b[i] = scalar * c[i];
-                            }
-                        }
-                        2 => {
-                            for i in 0..a.len() {
-                                c[i] = a[i] + b[i];
-                            }
-                        }
-                        _ => {
-                            for i in 0..a.len() {
-                                a[i] = b[i] + scalar * c[i];
-                            }
-                        }
+    // One STREAM kernel sweep over a worker's static partition [lo, hi).
+    let kernel = |w: usize, lo: usize, hi: usize| {
+        // SAFETY: disjoint [lo, hi) slices per worker; the main thread does
+        // not touch the arrays while a job is in flight.
+        unsafe {
+            let a = std::slice::from_raw_parts_mut(pa.0.add(lo), hi - lo);
+            let b = std::slice::from_raw_parts_mut(pb.0.add(lo), hi - lo);
+            let c = std::slice::from_raw_parts_mut(pc.0.add(lo), hi - lo);
+            match w {
+                0 => {
+                    for i in 0..a.len() {
+                        c[i] = a[i];
                     }
                 }
-                barrier.wait(); // job done
-            });
+                1 => {
+                    for i in 0..a.len() {
+                        b[i] = scalar * c[i];
+                    }
+                }
+                2 => {
+                    for i in 0..a.len() {
+                        c[i] = a[i] + b[i];
+                    }
+                }
+                _ => {
+                    for i in 0..a.len() {
+                        a[i] = b[i] + scalar * c[i];
+                    }
+                }
+            }
         }
+    };
 
+    with_static_pool(threads, len, &kernel, |pool| {
         for rep in 0..reps {
             for (ki, _k) in StreamKernel::ALL.iter().enumerate() {
-                work.store(ki, Ordering::Release);
                 let t0 = Instant::now();
-                barrier.wait(); // release workers
-                barrier.wait(); // join workers
+                pool.run(ki);
                 times[ki][rep] = t0.elapsed().as_secs_f64();
             }
         }
-        work.store(usize::MAX - 1, Ordering::Release);
-        barrier.wait();
     });
 
     // Validation, as in stream.c: replay the recurrence on scalars.

@@ -1,0 +1,162 @@
+//! Integration: the unified `Backend` execution engine.
+//!
+//! The repo's core claim — brute, tiled and flat are *formulations of the
+//! same statistic* — is only testable if all of them run through one
+//! schedulable path.  These tests drive the name-keyed registry end-to-end
+//! and pin the cross-backend equivalence against the f64 oracle.
+
+use permanova_apu::backend::{execute, known_backends, Registry};
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::permanova::{
+    fstat_from_sw, st_of, sw_brute_f64, Grouping, SwAlgorithm, DEFAULT_TILE,
+};
+use permanova_apu::rng::PermutationPlan;
+
+fn cfg(backend: &str, n: usize, k: usize, n_perms: usize) -> RunConfig {
+    RunConfig {
+        data: DataSource::Synthetic { n_dims: n, n_groups: k },
+        backend: backend.to_string(),
+        n_perms,
+        seed: 2024,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+/// `SwAlgorithm::parse` / `name` round-trip, including the tiled family
+/// and the rejection cases the config layer depends on.
+#[test]
+fn algorithm_name_parse_roundtrips() {
+    for algo in [
+        SwAlgorithm::Brute,
+        SwAlgorithm::Flat,
+        SwAlgorithm::Tiled { tile: 1 },
+        SwAlgorithm::Tiled { tile: 37 },
+        SwAlgorithm::Tiled { tile: 128 },
+        SwAlgorithm::Tiled { tile: 512 },
+        SwAlgorithm::Tiled { tile: 4096 },
+    ] {
+        assert_eq!(SwAlgorithm::parse(&algo.name()), Some(algo), "{algo:?}");
+    }
+    // The canonical spellings.
+    assert_eq!(SwAlgorithm::parse("tiled512"), Some(SwAlgorithm::Tiled { tile: 512 }));
+    assert_eq!(SwAlgorithm::Tiled { tile: 512 }.name(), "tiled512");
+    // Bare "tiled" uses the paper-informed default.
+    assert_eq!(SwAlgorithm::parse("tiled"), Some(SwAlgorithm::Tiled { tile: DEFAULT_TILE }));
+    // Rejections: zero tile, garbage suffixes, unknown names.
+    assert_eq!(SwAlgorithm::parse("tiled0"), None);
+    assert_eq!(SwAlgorithm::parse("tiled-8"), None);
+    assert_eq!(SwAlgorithm::parse("tiledx"), None);
+    assert_eq!(SwAlgorithm::parse("TILED"), None);
+    assert_eq!(SwAlgorithm::parse(""), None);
+    assert_eq!(SwAlgorithm::parse("bogus"), None);
+}
+
+/// Every native formulation plus the simulator, through the same `Backend`
+/// trait, must produce identical F statistics (f64 oracle tolerance) and
+/// the identical p-value on the same plan.
+#[test]
+fn cross_backend_equivalence_against_f64_oracle() {
+    let n = 60;
+    let k = 4;
+    let n_perms = 99;
+    let c = cfg("native-brute", n, k, n_perms);
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+
+    // The f64 oracle distribution, straight from the permutation plan.
+    let s_t = st_of(&mat);
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), c.seed, n_perms + 1);
+    let mut row = vec![0u32; n];
+    let oracle: Vec<f64> = (0..n_perms + 1)
+        .map(|i| {
+            plan.fill(i, &mut row);
+            let sw = sw_brute_f64(mat.data(), n, &row, grouping.inv_sizes());
+            fstat_from_sw(sw, s_t, n, k)
+        })
+        .collect();
+
+    let mut reports = Vec::new();
+    for name in ["native-brute", "native-tiled", "native-flat", "simulator"] {
+        let r = execute(&cfg(name, n, k, n_perms), &mat, &grouping).unwrap();
+        assert_eq!(r.backend, name, "report must record the producing backend");
+        assert_eq!(r.f_perms.len(), n_perms);
+
+        // Observed statistic and full distribution vs the oracle.
+        let rel = (r.f_obs - oracle[0]).abs() / oracle[0].abs().max(1e-12);
+        assert!(rel < 5e-4, "{name}: f_obs {} vs oracle {}", r.f_obs, oracle[0]);
+        for (i, (got, want)) in r.f_perms.iter().zip(&oracle[1..]).enumerate() {
+            let rel = (got - want).abs() / want.abs().max(1e-12);
+            assert!(rel < 5e-4, "{name} perm {i}: {got} vs {want}");
+        }
+        reports.push((name, r));
+    }
+
+    // All backends agree with each other on the p-value exactly, and on F
+    // to f32-reduction tolerance.
+    let (name0, r0) = &reports[0];
+    for (name, r) in &reports[1..] {
+        assert_eq!(r.p_value, r0.p_value, "{name} vs {name0}");
+        let rel = (r.f_obs - r0.f_obs).abs() / r0.f_obs.abs().max(1e-12);
+        assert!(rel < 1e-4, "{name} vs {name0}: {} vs {}", r.f_obs, r0.f_obs);
+    }
+
+    // The simulator computes with the flat kernel: bitwise-identical to
+    // the native-flat backend, plus a modelled-time annotation.
+    let flat = &reports.iter().find(|(n, _)| *n == "native-flat").unwrap().1;
+    let sim = &reports.iter().find(|(n, _)| *n == "simulator").unwrap().1;
+    assert_eq!(flat.f_obs, sim.f_obs);
+    assert_eq!(flat.f_perms, sim.f_perms);
+    assert!(sim.per_device.iter().map(|d| d.simulated_secs).sum::<f64>() > 0.0);
+}
+
+/// The registry is the single source of backend names: configs validate
+/// against it and unknown names fail with the known set in the message.
+#[test]
+fn registry_governs_config_validation() {
+    let names = known_backends();
+    for required in ["native", "native-brute", "native-tiled", "native-flat", "simulator", "xla"] {
+        assert!(names.iter().any(|n| n == required), "registry missing {required}");
+    }
+    assert!(cfg("native-tiled", 24, 2, 9).validate().is_ok());
+    let err = cfg("warp-drive", 24, 2, 9).validate().unwrap_err().to_string();
+    assert!(err.contains("warp-drive") && err.contains("simulator"), "{err}");
+
+    let registry = Registry::with_defaults();
+    assert!(registry.create("warp-drive", &cfg("native", 24, 2, 9)).is_err());
+}
+
+/// Scheduling knobs (threads, shard size, SMT oversubscription) never
+/// change statistics — the determinism contract of the shard scheduler,
+/// observed through the public engine.
+#[test]
+fn scheduling_is_statistically_invisible() {
+    let base_cfg = cfg("native-tiled", 48, 3, 49);
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
+    let base = execute(&base_cfg, &mat, &grouping).unwrap();
+    for (threads, shard, smt) in [(1usize, 1usize, false), (4, 7, false), (3, 1000, true)] {
+        let mut c = base_cfg.clone();
+        c.threads = threads;
+        c.shard_size = shard;
+        c.smt_oversubscribe = smt;
+        let r = execute(&c, &mat, &grouping).unwrap();
+        assert_eq!(base.f_obs, r.f_obs);
+        assert_eq!(base.f_perms, r.f_perms);
+        assert_eq!(base.p_value, r.p_value);
+    }
+}
+
+/// Planted structure must be significant through every native backend —
+/// an end-to-end sanity check that the engine feeds real data through.
+#[test]
+fn planted_structure_detected_by_all_backends() {
+    let n = 45;
+    let k = 3;
+    let mat = DistanceMatrix::planted_blocks(n, k, 0.2, 1.0, 11);
+    let grouping = Grouping::balanced(n, k).unwrap();
+    for name in ["native-brute", "native-tiled", "native-flat", "simulator"] {
+        let r = execute(&cfg(name, n, k, 199), &mat, &grouping).unwrap();
+        assert!(r.p_value <= 0.01, "{name}: p = {}", r.p_value);
+        assert!(r.f_obs > 10.0, "{name}: F = {}", r.f_obs);
+    }
+}

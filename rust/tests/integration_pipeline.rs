@@ -1,7 +1,7 @@
 //! Integration: the full microbiome pipeline (tree -> table -> UniFrac ->
 //! PERMANOVA) and the UniFrac metric's mathematical properties at scale.
 
-use permanova_apu::config::{Backend, DataSource, RunConfig};
+use permanova_apu::config::{DataSource, RunConfig};
 use permanova_apu::coordinator::{load_data, run_config, run_on_backend};
 use permanova_apu::permanova::{Grouping, SwAlgorithm};
 use permanova_apu::rng::{shuffle, Xoshiro256pp};
@@ -140,7 +140,7 @@ fn backends_agree_on_pipeline_data() {
     let (mat, grouping) = load_data(&cfg).unwrap();
     let nat = run_on_backend(&cfg, &mat, &grouping).unwrap();
     let sim = run_on_backend(
-        &RunConfig { backend: Backend::Simulated, ..cfg.clone() },
+        &RunConfig { backend: "simulator".to_string(), ..cfg.clone() },
         &mat,
         &grouping,
     )
