@@ -9,7 +9,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: all build test bench lint fmt clippy artifacts pytest clean
+.PHONY: all build test bench bench-quick lint fmt clippy artifacts pytest clean
 
 all: build
 
@@ -21,6 +21,11 @@ test:
 
 bench:
 	$(CARGO) bench
+
+# The CI smoke sweep: emit + schema-validate the repo's benchmark record.
+bench-quick:
+	$(CARGO) run --release -- bench --quick --out BENCH_PERMANOVA.json
+	$(CARGO) run --release -- bench --check BENCH_PERMANOVA.json
 
 lint: fmt clippy
 

@@ -12,10 +12,12 @@
 //!
 //! Run: `cargo run --release --example apu_comparison`
 
+use permanova_apu::backend::ShardSpec;
 use permanova_apu::bench::Bencher;
 use permanova_apu::dmat::DistanceMatrix;
-use permanova_apu::permanova::{sw_permutations, Grouping, SwAlgorithm};
+use permanova_apu::permanova::{sw_permutations, sw_plan_range_blocked, Grouping, SwAlgorithm};
 use permanova_apu::report::{bar_chart, Table};
+use permanova_apu::rng::PermutationPlan;
 use permanova_apu::simulator::{fig1_rows, render_fig1, Mi300a, Workload};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -70,6 +72,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         println!("{}", m.format_row());
         measured.push((label.clone(), m.median));
     }
+
+    // The batched brute engine: the GPU-winning one-sweep-many-permutations
+    // access pattern, on the same host threads.  All `perms` lanes go into
+    // one block, so a single sweep over the matrix evaluates every
+    // permutation (block-aligned sharding makes that one worker's shard).
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), 3, perms);
+    let spec = ShardSpec::with_workers(full);
+    let batched_label = format!("CPU batched brute ({perms} lanes/sweep)");
+    let m = bench.run(&batched_label, || {
+        sw_plan_range_blocked(&mat, &plan, 0, perms, grouping.inv_sizes(), perms, &spec)
+    });
+    println!("{}", m.format_row());
+    measured.push((batched_label, m.median));
 
     println!(
         "\n{}",

@@ -20,10 +20,12 @@
 
 pub mod shard;
 
+mod batch;
 mod native;
 mod sim;
 mod xla;
 
+pub use batch::BatchedBruteBackend;
 pub use native::NativeBackend;
 pub use shard::{ShardCursor, ShardSpec};
 pub use sim::SimulatorBackend;
@@ -99,6 +101,10 @@ pub struct Caps {
     pub threaded: bool,
     /// Whether [`BatchResult::modelled_secs`] is populated.
     pub modelled_time: bool,
+    /// Permutations evaluated per matrix sweep, for block-batched engines
+    /// (None for one-permutation-per-sweep backends).  Recorded in the run
+    /// report's `perm_block` field.
+    pub perm_block: Option<usize>,
 }
 
 /// A compute substrate that can evaluate permutation batches.
@@ -129,6 +135,9 @@ impl Registry {
     /// | `native-brute`  | native CPU, Algorithm 1 (brute force)         |
     /// | `native-tiled`  | native CPU, Algorithm 2 (cache-tiled)         |
     /// | `native-flat`   | native CPU, Algorithm 3 shape (SIMD/flat)     |
+    /// | `native-batch`  | native CPU, Algorithm 1 batched: one matrix   |
+    /// |                 | sweep per `perm_block` permutations (the      |
+    /// |                 | paper's GPU-winning access pattern)           |
     /// | `simulator`     | exact numerics + modelled MI300A CPU time     |
     /// | `simulator-gpu` | exact numerics + modelled MI300A GPU time     |
     /// | `simulated`     | alias of `simulator` (legacy config name)     |
@@ -139,6 +148,7 @@ impl Registry {
         factories.insert("native-brute", native::factory_brute);
         factories.insert("native-tiled", native::factory_tiled);
         factories.insert("native-flat", native::factory_flat);
+        factories.insert("native-batch", batch::factory);
         factories.insert("simulator", sim::factory_cpu);
         factories.insert("simulated", sim::factory_cpu);
         factories.insert("simulator-gpu", sim::factory_gpu);
@@ -218,6 +228,10 @@ pub fn execute(cfg: &RunConfig, mat: &DistanceMatrix, grouping: &Grouping) -> Re
         s_t,
         elapsed_secs: t0.elapsed().as_secs_f64(),
         backend: caps.name,
+        kernel: caps.kernel,
+        // Record the width actually used: the engine clamps the block to
+        // the permutation count (see sw_plan_range_blocked).
+        perm_block: caps.perm_block.map(|b| b.min(total)).unwrap_or(0),
         per_device: vec![DeviceStats {
             device: batch.backend,
             batches: 1,
@@ -252,7 +266,15 @@ mod tests {
     #[test]
     fn registry_knows_the_builtins() {
         let r = Registry::with_defaults();
-        for name in ["native", "native-brute", "native-tiled", "native-flat", "simulator", "xla"] {
+        for name in [
+            "native",
+            "native-brute",
+            "native-tiled",
+            "native-flat",
+            "native-batch",
+            "simulator",
+            "xla",
+        ] {
             assert!(r.contains(name), "missing {name}");
         }
         assert!(!r.contains("cuda"));
@@ -272,7 +294,28 @@ mod tests {
             assert_eq!(r.backend, name);
             assert_eq!(r.f_perms.len(), 60);
             assert!(r.p_value > 0.0 && r.p_value <= 1.0);
+            assert_eq!(r.perm_block, 0, "{name} is not block-batched");
         }
+    }
+
+    #[test]
+    fn execute_records_effective_perm_block() {
+        let (mat, grouping) = fixture(40, 4);
+        let mut c = cfg("native-batch");
+        c.n_perms = 199; // total 200 > any tested block width
+        c.perm_block = 8;
+        let r = execute(&c, &mat, &grouping).unwrap();
+        assert_eq!(r.backend, "native-batch");
+        assert_eq!(r.kernel, "brute-block");
+        assert_eq!(r.perm_block, 8);
+        c.perm_block = 0; // auto: the paper-informed default
+        let r = execute(&c, &mat, &grouping).unwrap();
+        assert_eq!(r.perm_block, crate::permanova::DEFAULT_PERM_BLOCK);
+        // Wider than the work: the report records the clamped width.
+        c.n_perms = 9;
+        c.perm_block = 64;
+        let r = execute(&c, &mat, &grouping).unwrap();
+        assert_eq!(r.perm_block, 10, "64 lanes requested, only 10 permutations exist");
     }
 
     #[test]

@@ -70,6 +70,7 @@ impl Backend for NativeBackend {
             max_batch: None,
             threaded: true,
             modelled_time: false,
+            perm_block: None,
         }
     }
 }

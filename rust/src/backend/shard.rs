@@ -74,6 +74,21 @@ impl ShardSpec {
             (total / (threads.max(1) * 8)).max(1)
         }
     }
+
+    /// Spec whose resolved shard size is rounded **up** to a whole multiple
+    /// of `block`.  Block-granular engines form their blocks inside shards,
+    /// so without this the auto shard size (`total / (threads · 8)`) would
+    /// silently clip every block below the requested width — e.g. 100
+    /// permutations on 4 threads auto-shards at 3, degenerating a 64-lane
+    /// block to 3 lanes.  Rounding up guarantees every non-tail block is
+    /// full-width while keeping work-stealing granularity as close to the
+    /// spec's intent as possible.
+    pub fn aligned_to_block(&self, total: usize, block: usize) -> ShardSpec {
+        let block = block.max(1);
+        let threads = self.threads().min(total.max(1)).max(1);
+        let shard = self.shard_for(total, threads).div_ceil(block) * block;
+        ShardSpec { shard_size: shard, ..*self }
+    }
 }
 
 /// One claimed range of work.
@@ -171,6 +186,23 @@ where
             });
         }
     });
+}
+
+/// Iterate `[start, start + len)` in consecutive blocks of at most `block`
+/// items, calling `f(block_start, block_len)` for each.  This is how
+/// block-granular backends (e.g. the batched brute engine's permutation
+/// blocks) subdivide a scheduler shard: the cursor hands out shards, each
+/// worker walks its shard block-by-block, and because every output index is
+/// still computed independently the shard × block × SMT composition keeps
+/// the scheduler's determinism contract.
+pub fn for_each_block(start: usize, len: usize, block: usize, mut f: impl FnMut(usize, usize)) {
+    let block = block.max(1);
+    let mut off = 0;
+    while off < len {
+        let b = block.min(len - off);
+        f(start + off, b);
+        off += b;
+    }
 }
 
 /// Stateless convenience over [`run_sharded_with`].
@@ -281,6 +313,53 @@ mod tests {
     fn cursor_zero_size_claims_one() {
         let c = ShardCursor::new(2);
         assert_eq!(c.claim(0), Some(Shard { start: 0, end: 1 }));
+    }
+
+    #[test]
+    fn aligned_shard_size_is_a_block_multiple() {
+        // Auto sizing for 100 items on 4 workers picks 3-item shards, which
+        // would clip a 64-lane block; alignment floors it at one full block.
+        assert_eq!(ShardSpec::with_workers(4).aligned_to_block(100, 64).shard_size, 64);
+        // Whatever the host's auto sizing, the result is a block multiple.
+        let a = ShardSpec::default().aligned_to_block(1000, 64);
+        assert!(a.shard_size >= 64 && a.shard_size % 64 == 0, "{}", a.shard_size);
+        // Explicit shard sizes are rounded up, never down.
+        let exp = ShardSpec { shard_size: 100, workers: 2, smt: false }.aligned_to_block(1000, 8);
+        assert_eq!(exp.shard_size, 104);
+        // Block 1 (or 0) keeps the spec's own sizing.
+        let keep = ShardSpec { shard_size: 7, workers: 2, smt: false }.aligned_to_block(100, 1);
+        assert_eq!(keep.shard_size, 7);
+        // Worker/SMT knobs pass through untouched.
+        let s = ShardSpec { shard_size: 0, workers: 3, smt: true }.aligned_to_block(64, 16);
+        assert_eq!((s.workers, s.smt), (3, true));
+    }
+
+    #[test]
+    fn blocks_tile_a_range_exactly() {
+        for (start, len, block) in [(0, 10, 3), (7, 23, 8), (5, 4, 100), (0, 0, 4)] {
+            let mut covered = Vec::new();
+            let mut calls = 0usize;
+            for_each_block(start, len, block, |lo, b| {
+                assert!((1..=block).contains(&b), "block len {b}");
+                for i in lo..lo + b {
+                    covered.push(i);
+                }
+                calls += 1;
+            });
+            let want: Vec<usize> = (start..start + len).collect();
+            assert_eq!(covered, want, "start={start} len={len} block={block}");
+            assert_eq!(calls, len.div_ceil(block), "full blocks plus one remainder");
+        }
+    }
+
+    #[test]
+    fn zero_block_size_claims_one_at_a_time() {
+        let mut calls = 0;
+        for_each_block(0, 3, 0, |_, b| {
+            assert_eq!(b, 1);
+            calls += 1;
+        });
+        assert_eq!(calls, 3);
     }
 
     #[test]

@@ -70,6 +70,7 @@ impl Backend for SimulatorBackend {
             max_batch: None,
             threaded: true,
             modelled_time: true,
+            perm_block: None,
         }
     }
 }

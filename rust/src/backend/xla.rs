@@ -74,6 +74,7 @@ impl Backend for XlaBackend {
                 .max(),
             threaded: false,
             modelled_time: false,
+            perm_block: None,
         }
     }
 }

@@ -1,4 +1,5 @@
-//! Micro-benchmark harness: warmup, adaptive iteration, robust statistics.
+//! Micro-benchmark harness: warmup, adaptive iteration, robust statistics —
+//! plus the PERMANOVA backend sweep behind the `bench` CLI subcommand.
 //!
 //! The offline crate set has no criterion — and a benchmarking paper
 //! deserves a first-class harness anyway.  The design follows STREAM's
@@ -12,8 +13,19 @@
 //! let m = b.run("sum", || (0..1_000_000u64).sum::<u64>());
 //! println!("{}", m.format_row());
 //! ```
+//!
+//! The sweep half ([`SweepGrid`], [`run_sweep`], [`validate_bench_json`])
+//! drives every registered backend over an n × permutations grid through
+//! the unified engine and emits the repo's performance record,
+//! `BENCH_PERMANOVA.json` (schema [`BENCH_SCHEMA`]) — the baseline every
+//! later kernel/backend PR is measured against.
 
 use std::time::{Duration, Instant};
+
+use crate::config::{DataSource, RunConfig};
+use crate::error::{Error, Result};
+use crate::jsonio::Json;
+use crate::report::Table;
 
 /// Benchmark configuration.
 #[derive(Clone, Debug)]
@@ -156,6 +168,297 @@ pub fn speedup(a: &Measurement, b: &Measurement) -> f64 {
     a.median / b.median
 }
 
+// ---------------------------------------------------------------------------
+// The PERMANOVA backend sweep (the `bench` CLI subcommand's engine).
+// ---------------------------------------------------------------------------
+
+/// Schema identifier stamped into (and required from) `BENCH_PERMANOVA.json`.
+pub const BENCH_SCHEMA: &str = "bench-permanova/v1";
+
+/// The grid a benchmark sweep covers: backends × n × permutation counts,
+/// plus the scheduling knobs shared by every cell.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    /// Registry names to benchmark (validated against the registry).
+    pub backends: Vec<String>,
+    /// Matrix sizes (synthetic Euclidean data, one dataset per n).
+    pub n_grid: Vec<usize>,
+    /// Permutation counts.
+    pub perm_grid: Vec<usize>,
+    /// Groups in the synthetic grouping.
+    pub n_groups: usize,
+    /// Seed / threads / shard size / SMT / perm_block for every cell
+    /// (data source, backend and n_perms are overwritten per cell).
+    pub base: RunConfig,
+    /// Timing policy for each cell.
+    pub bencher: Bencher,
+    /// Whether this was the CI smoke grid (recorded in the JSON).
+    pub quick: bool,
+}
+
+impl Default for SweepGrid {
+    /// The standing grid: every native formulation plus the modelled GPU,
+    /// at sizes where the access-pattern differences are visible but a
+    /// full sweep still finishes in minutes.
+    fn default() -> Self {
+        SweepGrid {
+            backends: default_bench_backends(),
+            n_grid: vec![128, 256],
+            perm_grid: vec![499],
+            n_groups: 8,
+            base: RunConfig::default(),
+            // warmup 0: the sweep's pre-flight run doubles as the warmup.
+            bencher: Bencher {
+                warmup: 0,
+                min_reps: 3,
+                max_reps: 10,
+                max_time: Duration::from_secs(5),
+            },
+            quick: false,
+        }
+    }
+}
+
+impl SweepGrid {
+    /// The CI smoke grid: same backend axis, toy sizes, minimal reps —
+    /// fast enough to gate every push while still exercising the full
+    /// sweep → JSON → validate pipeline.
+    pub fn quick() -> Self {
+        SweepGrid {
+            n_grid: vec![48],
+            perm_grid: vec![99],
+            n_groups: 4,
+            bencher: Bencher {
+                warmup: 0,
+                min_reps: 2,
+                max_reps: 3,
+                max_time: Duration::from_secs(1),
+            },
+            quick: true,
+            ..Default::default()
+        }
+    }
+}
+
+/// The backend axis a default sweep covers (every distinct formulation the
+/// paper compares: the three CPU kernels, the batched brute engine, the
+/// modelled MI300A GPU).  `native` is omitted because it resolves to the
+/// same tiled512 kernel as `native-tiled` — it would time an identical
+/// cell twice; select it explicitly via `--backends` if wanted.
+pub fn default_bench_backends() -> Vec<String> {
+    ["native-brute", "native-tiled", "native-flat", "native-batch", "simulator-gpu"]
+        .into_iter()
+        .map(String::from)
+        .collect()
+}
+
+/// One completed sweep: the machine-readable document, the rendered table,
+/// and the cell count.
+pub struct SweepOutput {
+    pub json: Json,
+    pub table: String,
+    pub entries: usize,
+}
+
+/// Run the sweep: every cell goes through [`crate::backend::execute`] (the
+/// same path the CLI's `run` takes), pre-flighted once for errors, then
+/// timed under the grid's [`Bencher`].
+pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
+    let registry = crate::backend::Registry::with_defaults();
+    if grid.backends.is_empty() {
+        return Err(Error::Config("bench: empty backend list".into()));
+    }
+    for b in &grid.backends {
+        if !registry.contains(b) {
+            return Err(Error::UnknownBackend { name: b.clone(), known: registry.names() });
+        }
+    }
+    if grid.n_grid.is_empty() || grid.perm_grid.is_empty() {
+        return Err(Error::Config("bench: empty n / n_perms grid".into()));
+    }
+
+    let mut entries = Vec::new();
+    let cols =
+        ["backend", "kernel", "n", "perms", "block", "median", "best", "perms/s", "modelled"];
+    let mut table = Table::new(&cols);
+    for &n in &grid.n_grid {
+        let mut cell = grid.base.clone();
+        cell.data = DataSource::Synthetic { n_dims: n, n_groups: grid.n_groups };
+        let (mat, grouping) = crate::coordinator::load_data(&cell)?;
+        for &n_perms in &grid.perm_grid {
+            for backend in &grid.backends {
+                let mut cfg = cell.clone();
+                cfg.backend = backend.clone();
+                cfg.n_perms = n_perms;
+                cfg.validate()?;
+                // Pre-flight once so a misconfigured cell fails with a
+                // typed error instead of a panic inside the timing loop;
+                // this run is also the cell's warmup (grid warmup is 0)
+                // and the source of kernel/block/statistics provenance.
+                let report = crate::backend::execute(&cfg, &mat, &grouping)?;
+                let mut bencher = grid.bencher.clone();
+                let m = bencher.run(&format!("{backend}/n{n}/p{n_perms}"), || {
+                    crate::backend::execute(&cfg, &mat, &grouping)
+                        .expect("pre-flighted bench cell failed")
+                });
+                let total_perms = (n_perms + 1) as f64; // index 0 = observed
+                let perms_per_sec = total_perms / m.median;
+                // Simulated backends model MI300A wall-clock alongside the
+                // exact numerics; 0.0 for real substrates.
+                let modelled_secs: f64 =
+                    report.per_device.iter().map(|d| d.simulated_secs).sum();
+                table.row(&[
+                    backend.clone(),
+                    report.kernel.clone(),
+                    n.to_string(),
+                    n_perms.to_string(),
+                    if report.perm_block > 0 {
+                        report.perm_block.to_string()
+                    } else {
+                        "-".to_string()
+                    },
+                    format_secs(m.median),
+                    format_secs(m.best),
+                    format!("{perms_per_sec:.0}"),
+                    if modelled_secs > 0.0 {
+                        format_secs(modelled_secs)
+                    } else {
+                        "-".to_string()
+                    },
+                ]);
+                entries.push(Json::obj(vec![
+                    ("backend", Json::str(backend.clone())),
+                    ("kernel", Json::str(report.kernel.clone())),
+                    ("n", Json::num(n as f64)),
+                    ("k", Json::num(grid.n_groups as f64)),
+                    ("n_perms", Json::num(n_perms as f64)),
+                    ("perm_block", Json::num(report.perm_block as f64)),
+                    ("threads", Json::num(cfg.threads as f64)),
+                    ("shard_size", Json::num(cfg.shard_size as f64)),
+                    ("smt_oversubscribe", Json::Bool(cfg.smt_oversubscribe)),
+                    // String, not number: JSON numbers are f64 here and
+                    // would silently round seeds above 2^53.
+                    ("seed", Json::str(cfg.seed.to_string())),
+                    ("reps", Json::num(m.times.len() as f64)),
+                    ("best_secs", Json::num(m.best)),
+                    ("median_secs", Json::num(m.median)),
+                    ("mad_secs", Json::num(m.mad)),
+                    ("perms_per_sec", Json::num(perms_per_sec)),
+                    ("modelled_secs", Json::num(modelled_secs)),
+                    ("f_obs", Json::num(report.f_obs)),
+                    ("p_value", Json::num(report.p_value)),
+                ]));
+            }
+        }
+    }
+    let entry_count = entries.len();
+    let host_threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let json = Json::obj(vec![
+        ("schema", Json::str(BENCH_SCHEMA)),
+        ("version", Json::str(crate::VERSION)),
+        ("quick", Json::Bool(grid.quick)),
+        ("host_threads", Json::num(host_threads as f64)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    Ok(SweepOutput { json, table: table.render(), entries: entry_count })
+}
+
+fn bench_field_err(ctx: &str, msg: impl Into<String>) -> Error {
+    Error::Config(format!("bench json {ctx}: {}", msg.into()))
+}
+
+/// Validate a `BENCH_PERMANOVA.json` document against [`BENCH_SCHEMA`]:
+/// required fields, known backend names, finite/positive timings, p-values
+/// in `(0, 1]`.  Returns the entry count.  This is what CI's bench smoke
+/// job runs (`bench --check`), so a malformed artifact fails the build.
+pub fn validate_bench_json(doc: &Json) -> Result<usize> {
+    let schema = doc.req_str("schema")?;
+    if schema != BENCH_SCHEMA {
+        return Err(bench_field_err(
+            "schema",
+            format!("got {schema:?}, expected {BENCH_SCHEMA:?}"),
+        ));
+    }
+    doc.req_str("version")?;
+    if doc.req_usize("host_threads")? == 0 {
+        return Err(bench_field_err("host_threads", "must be >= 1"));
+    }
+    if !matches!(doc.get("quick"), Some(Json::Bool(_))) {
+        return Err(bench_field_err("quick", "missing/not a boolean"));
+    }
+    let entries = doc.req_arr("entries")?;
+    if entries.is_empty() {
+        return Err(bench_field_err("entries", "must be non-empty"));
+    }
+    let registry = crate::backend::Registry::with_defaults();
+    for (i, e) in entries.iter().enumerate() {
+        let ctx = format!("entry {i}");
+        let backend = e.req_str("backend")?;
+        if !registry.contains(backend) {
+            return Err(bench_field_err(&ctx, format!("unknown backend {backend:?}")));
+        }
+        e.req_str("kernel")?;
+        if e.req_usize("n")? == 0 || e.req_usize("n_perms")? == 0 {
+            return Err(bench_field_err(&ctx, "n and n_perms must be >= 1"));
+        }
+        for key in ["k", "perm_block", "threads", "shard_size"] {
+            e.req_usize(key)
+                .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        }
+        let seed = e
+            .req_str("seed")
+            .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if seed.parse::<u64>().is_err() {
+            return Err(bench_field_err(&ctx, format!("seed {seed:?} is not a u64")));
+        }
+        let reps = e
+            .req_usize("reps")
+            .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if reps == 0 {
+            return Err(bench_field_err(&ctx, "reps must be >= 1"));
+        }
+        if !matches!(e.get("smt_oversubscribe"), Some(Json::Bool(_))) {
+            return Err(bench_field_err(&ctx, "smt_oversubscribe missing/not a boolean"));
+        }
+        let num = |key: &str| -> Result<f64> {
+            let v = e
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bench_field_err(&ctx, format!("{key} missing/not a number")))?;
+            if !v.is_finite() {
+                return Err(bench_field_err(&ctx, format!("{key} must be finite, got {v}")));
+            }
+            Ok(v)
+        };
+        let best = num("best_secs")?;
+        let median = num("median_secs")?;
+        num("mad_secs")?;
+        let pps = num("perms_per_sec")?;
+        num("f_obs")?;
+        let p = num("p_value")?;
+        let modelled = num("modelled_secs")?;
+        if modelled < 0.0 {
+            return Err(bench_field_err(
+                &ctx,
+                format!("modelled_secs must be >= 0, got {modelled}"),
+            ));
+        }
+        if best <= 0.0 || median < best {
+            return Err(bench_field_err(
+                &ctx,
+                format!("timings must satisfy 0 < best <= median (best {best}, median {median})"),
+            ));
+        }
+        if pps <= 0.0 {
+            return Err(bench_field_err(&ctx, format!("perms_per_sec must be > 0, got {pps}")));
+        }
+        if !(p > 0.0 && p <= 1.0) {
+            return Err(bench_field_err(&ctx, format!("p_value must be in (0, 1], got {p}")));
+        }
+    }
+    Ok(entries.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,5 +528,96 @@ mod tests {
         let slow = Measurement::from_times("slow", vec![2.0]);
         let fast = Measurement::from_times("fast", vec![0.5]);
         assert!((speedup(&slow, &fast) - 4.0).abs() < 1e-12);
+    }
+
+    /// A minimal, fast grid for sweep tests: two backends, one tiny cell
+    /// each, a single timed repetition.
+    fn tiny_grid() -> SweepGrid {
+        SweepGrid {
+            backends: vec!["native-brute".into(), "native-batch".into()],
+            n_grid: vec![24],
+            perm_grid: vec![9],
+            n_groups: 2,
+            bencher: Bencher {
+                warmup: 0,
+                min_reps: 1,
+                max_reps: 1,
+                max_time: Duration::from_secs(1),
+            },
+            quick: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_emits_schema_valid_json() {
+        let out = run_sweep(&tiny_grid()).unwrap();
+        assert_eq!(out.entries, 2);
+        assert!(out.table.contains("native-batch"));
+        assert_eq!(validate_bench_json(&out.json).unwrap(), 2);
+        // Round-trips through the serializer.
+        let parsed = Json::parse(&out.json.to_string_pretty()).unwrap();
+        assert_eq!(validate_bench_json(&parsed).unwrap(), 2);
+        // The batch entry records the block width actually used: the
+        // default 64 clamped to this grid's 10 permutations.
+        let entries = parsed.req_arr("entries").unwrap();
+        let batch = entries
+            .iter()
+            .find(|e| e.req_str("backend").unwrap() == "native-batch")
+            .unwrap();
+        assert_eq!(batch.req_usize("perm_block").unwrap(), 10);
+        assert_eq!(batch.req_str("kernel").unwrap(), "brute-block");
+    }
+
+    #[test]
+    fn sweep_rejects_bad_grids() {
+        let mut g = tiny_grid();
+        g.backends = vec!["warp-drive".into()];
+        assert!(run_sweep(&g).is_err());
+        let mut g = tiny_grid();
+        g.backends.clear();
+        assert!(run_sweep(&g).is_err());
+        let mut g = tiny_grid();
+        g.n_grid.clear();
+        assert!(run_sweep(&g).is_err());
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        let good = run_sweep(&tiny_grid()).unwrap().json;
+        // Wrong schema tag.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("schema".into(), Json::str("bench-permanova/v999"));
+        }
+        assert!(validate_bench_json(&bad).is_err());
+        // Empty entries.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("entries".into(), Json::Arr(vec![]));
+        }
+        assert!(validate_bench_json(&bad).is_err());
+        // Entry with an out-of-range p-value.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut entries = m.get("entries").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(e) = &mut entries[0] {
+                e.insert("p_value".into(), Json::num(1.5));
+            }
+            m.insert("entries".into(), Json::Arr(entries));
+        }
+        assert!(validate_bench_json(&bad).is_err());
+        // Entry with an unknown backend.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut entries = m.get("entries").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(e) = &mut entries[0] {
+                e.insert("backend".into(), Json::str("warp-drive"));
+            }
+            m.insert("entries".into(), Json::Arr(entries));
+        }
+        assert!(validate_bench_json(&bad).is_err());
+        // Not an object at all.
+        assert!(validate_bench_json(&Json::Arr(vec![])).is_err());
     }
 }

@@ -6,6 +6,7 @@
 //!
 //! Commands:
 //!   run              PERMANOVA on synthetic/file data (native/xla/simulated)
+//!   bench            sweep backends over n/perm grids -> BENCH_PERMANOVA.json
 //!   pipeline         E2E: synthetic community -> UniFrac -> PERMANOVA
 //!   fig1             regenerate the paper's Figure 1 (simulated MI300A)
 //!   stream           STREAM bandwidth: measured host + simulated MI300A (A2)
@@ -19,7 +20,7 @@ use crate::config::{DataSource, RunConfig, TomlDoc};
 use crate::coordinator::run_config;
 use crate::error::{Error, Result};
 use crate::permanova::SwAlgorithm;
-use crate::report::{bar_chart, RunReport, Table};
+use crate::report::{bar_chart, Table};
 use crate::simulator::{
     fig1_rows, paper_a2_reference, render_fig1, simulate_stream, Mi300a, NodeTopology,
     StreamDevice, Workload,
@@ -100,6 +101,7 @@ impl Args {
 pub fn dispatch(args: &Args) -> Result<String> {
     match args.command.as_str() {
         "run" => cmd_run(args),
+        "bench" => cmd_bench(args),
         "pipeline" => cmd_pipeline(args),
         "fig1" => cmd_fig1(args),
         "stream" => cmd_stream(args),
@@ -115,7 +117,8 @@ pub fn dispatch(args: &Args) -> Result<String> {
 pub fn usage() -> String {
     let mut s = String::from("permanova-apu — PERMANOVA on APU-class hardware\n\nCommands:\n");
     for (cmd, desc) in [
-        ("run", "PERMANOVA: --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --threads T --shard-size S --smt-oversubscribe --seed S --pairwise --json out.json --config file.toml | --pdm file --labels file"),
+        ("run", "PERMANOVA: --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --pairwise --json out.json --config file.toml | --pdm file --labels file"),
+        ("bench", "backend sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --out FILE; --check FILE validates an existing document"),
         ("pipeline", "end-to-end: community -> UniFrac -> PERMANOVA: --taxa --samples --groups --n-perms --metric unweighted|weighted --anosim"),
         ("fig1", "regenerate Figure 1: --n-dims --n-perms (defaults: the paper's 25145/3999)"),
         ("stream", "STREAM bandwidth: --len --reps --threads; --simulate for the MI300A A2 tables"),
@@ -151,6 +154,7 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     cfg.seed = args.u64_flag("seed", cfg.seed)?;
     cfg.threads = args.usize_flag("threads", cfg.threads)?;
     cfg.shard_size = args.usize_flag("shard-size", cfg.shard_size)?;
+    cfg.perm_block = args.usize_flag("perm-block", cfg.perm_block)?;
     if args.has_flag("smt-oversubscribe") {
         cfg.smt_oversubscribe = args.bool_flag("smt-oversubscribe");
     }
@@ -171,14 +175,12 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
-fn format_report(cfg: &RunConfig, r: &RunReport) -> String {
-    r.render(&cfg.algo.name())
-}
-
 fn cmd_run(args: &Args) -> Result<String> {
     let cfg = config_from_args(args)?;
     let r = run_config(&cfg)?;
-    let mut out = format_report(&cfg, &r);
+    // The report carries the kernel the backend actually evaluated
+    // (`Caps::kernel`), so rendering needs no config-side label.
+    let mut out = r.render();
 
     // Post-hoc all-pairs tests (Bonferroni-adjusted).
     if args.bool_flag("pairwise") {
@@ -234,12 +236,78 @@ fn cmd_run(args: &Args) -> Result<String> {
 
     // Machine-readable export (the backend name rides along in the JSON).
     if let Some(path) = args.str_flag("json") {
-        let doc = r.to_json(&cfg.algo.name());
+        let doc = r.to_json();
         std::fs::write(path, doc.to_string_pretty())
             .map_err(|e| Error::io(path, e))?;
         out.push_str(&format!("wrote {path}\n"));
     }
     Ok(out)
+}
+
+/// Parse a `--flag a,b,c` comma-separated usize list.
+fn parse_usize_csv(flag: &str, v: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in v.split(',') {
+        let t = part.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(
+            t.parse()
+                .map_err(|e| Error::Config(format!("--{flag} {t:?}: {e}")))?,
+        );
+    }
+    if out.is_empty() {
+        return Err(Error::Config(format!("--{flag}: empty list")));
+    }
+    Ok(out)
+}
+
+/// `bench`: sweep backends over n/permutation grids and write the repo's
+/// performance record, or (`--check`) validate an existing one.
+fn cmd_bench(args: &Args) -> Result<String> {
+    use crate::bench::{run_sweep, validate_bench_json, SweepGrid};
+
+    // Validation mode: parse + schema-check an existing document.
+    if let Some(path) = args.str_flag("check") {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        let doc = crate::jsonio::Json::parse(&text)?;
+        let n = validate_bench_json(&doc)?;
+        return Ok(format!("bench json ok: {path} ({n} entries)\n"));
+    }
+
+    let mut grid = if args.bool_flag("quick") {
+        SweepGrid::quick()
+    } else {
+        SweepGrid::default()
+    };
+    if let Some(b) = args.str_flag("backends") {
+        grid.backends = b
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    if let Some(v) = args.str_flag("n-dims") {
+        grid.n_grid = parse_usize_csv("n-dims", v)?;
+    }
+    if let Some(v) = args.str_flag("n-perms") {
+        grid.perm_grid = parse_usize_csv("n-perms", v)?;
+    }
+    grid.n_groups = args.usize_flag("n-groups", grid.n_groups)?;
+    grid.base.seed = args.u64_flag("seed", grid.base.seed)?;
+    grid.base.threads = args.usize_flag("threads", grid.base.threads)?;
+    grid.base.shard_size = args.usize_flag("shard-size", grid.base.shard_size)?;
+    grid.base.perm_block = args.usize_flag("perm-block", grid.base.perm_block)?;
+    if args.has_flag("smt-oversubscribe") {
+        grid.base.smt_oversubscribe = args.bool_flag("smt-oversubscribe");
+    }
+
+    let sweep = run_sweep(&grid)?;
+    let out_path = args.str_flag("out").unwrap_or("BENCH_PERMANOVA.json");
+    std::fs::write(out_path, sweep.json.to_string_pretty())
+        .map_err(|e| Error::io(out_path, e))?;
+    Ok(format!("{}wrote {out_path} ({} entries)\n", sweep.table, sweep.entries))
 }
 
 fn cmd_pipeline(args: &Args) -> Result<String> {
@@ -269,7 +337,7 @@ fn cmd_pipeline(args: &Args) -> Result<String> {
     let r = run_on_backend(&cfg, &mat, &ds.grouping)?;
 
     let mut out = format!("UniFrac ({metric}) -> PERMANOVA pipeline\n");
-    out.push_str(&format_report(&cfg, &r));
+    out.push_str(&r.render());
     if args.bool_flag("anosim") {
         let a = crate::permanova::anosim(&mat, &ds.grouping, cfg.n_perms, cfg.seed)?;
         out.push_str(&format!(
@@ -435,9 +503,10 @@ mod tests {
     fn version_and_help() {
         assert!(dispatch(&args(&["version"])).unwrap().contains(crate::VERSION));
         let help = dispatch(&args(&["help"])).unwrap();
-        for cmd in ["run", "fig1", "stream", "simulate", "artifacts-check"] {
+        for cmd in ["run", "bench", "fig1", "stream", "simulate", "artifacts-check"] {
             assert!(help.contains(cmd));
         }
+        assert!(help.contains("native-batch"), "registry names surface in help: {help}");
         assert!(dispatch(&args(&["frobnicate"])).is_err());
     }
 
@@ -479,6 +548,58 @@ mod tests {
         assert!(dispatch(&args(&["run", "--algo", "quantum"])).is_err());
         assert!(dispatch(&args(&["run", "--backend", "cuda"])).is_err());
         assert!(dispatch(&args(&["run", "--n-perms", "0"])).is_err());
+    }
+
+    #[test]
+    fn run_native_batch_with_block() {
+        let out = dispatch(&args(&[
+            "run", "--n-dims", "30", "--n-groups", "3", "--n-perms", "19", "--backend",
+            "native-batch", "--perm-block", "8",
+        ]))
+        .unwrap();
+        assert!(out.contains("backend=native-batch"), "{out}");
+        assert!(out.contains("block=8"), "{out}");
+    }
+
+    #[test]
+    fn bench_quick_writes_and_validates() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out_path = dir.join("BENCH_PERMANOVA.json");
+        let out = dispatch(&args(&[
+            "bench",
+            "--quick",
+            "--backends",
+            "native-brute,native-batch",
+            "--n-dims",
+            "24",
+            "--n-perms",
+            "9",
+            "--n-groups",
+            "2",
+            "--out",
+            out_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(out.contains("wrote"), "{out}");
+        assert!(out.contains("native-batch"), "{out}");
+
+        let check = dispatch(&args(&["bench", "--check", out_path.to_str().unwrap()])).unwrap();
+        assert!(check.contains("bench json ok"), "{check}");
+        assert!(check.contains("2 entries"), "{check}");
+    }
+
+    #[test]
+    fn bench_rejects_bad_input() {
+        assert!(dispatch(&args(&["bench", "--backends", "warp-drive"])).is_err());
+        assert!(dispatch(&args(&["bench", "--n-dims", "not-a-number"])).is_err());
+
+        let dir = std::env::temp_dir().join("permanova_apu_cli_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{\"schema\": \"wrong\"}").unwrap();
+        assert!(dispatch(&args(&["bench", "--check", bad.to_str().unwrap()])).is_err());
+        assert!(dispatch(&args(&["bench", "--check", "/definitely/missing.json"])).is_err());
     }
 
     #[test]

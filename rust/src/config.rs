@@ -214,8 +214,9 @@ pub enum DataSource {
 ///
 /// `backend` is a **name**, resolved against the name-keyed registry in
 /// [`crate::backend`] (`native`, `native-brute`, `native-tiled`,
-/// `native-flat`, `simulator`, `simulator-gpu`, `xla`, ...) — an open set,
-/// so new backends plug in without touching the config layer.
+/// `native-flat`, `native-batch`, `simulator`, `simulator-gpu`, `xla`,
+/// ...) — an open set, so new backends plug in without touching the
+/// config layer.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub data: DataSource,
@@ -237,6 +238,9 @@ pub struct RunConfig {
     /// slot.  Mirrors the paper's "same cores, 1 vs 2 threads per core"
     /// ablation when `threads` is pinned to a physical-core count.
     pub smt_oversubscribe: bool,
+    /// Permutations per matrix sweep for the batched brute engine
+    /// (`native-batch`); 0 = the paper-informed default block width.
+    pub perm_block: usize,
 }
 
 impl Default for RunConfig {
@@ -253,6 +257,7 @@ impl Default for RunConfig {
             smt: true,
             shard_size: 0,
             smt_oversubscribe: false,
+            perm_block: 0,
         }
     }
 }
@@ -299,6 +304,7 @@ impl RunConfig {
             smt: doc.bool_or("simulate", "smt", true),
             shard_size: doc.int_or("run", "shard_size", 0) as usize,
             smt_oversubscribe: doc.bool_or("run", "smt_oversubscribe", false),
+            perm_block: doc.int_or("run", "perm_block", 0) as usize,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -428,6 +434,18 @@ mod tests {
         assert_eq!(cfg.artifacts_dir, "artifacts");
         assert_eq!(cfg.shard_size, 0);
         assert!(!cfg.smt_oversubscribe);
+        assert_eq!(cfg.perm_block, 0);
+    }
+
+    #[test]
+    fn perm_block_parses_and_selects_batch_backend() {
+        let doc = TomlDoc::parse(
+            "[run]\nbackend = \"native-batch\"\nperm_block = 16\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.backend, "native-batch");
+        assert_eq!(cfg.perm_block, 16);
     }
 
     #[test]
@@ -447,7 +465,7 @@ mod tests {
 
     #[test]
     fn backend_names_resolve_through_registry() {
-        for name in ["native", "native-tiled", "simulator", "simulated", "xla"] {
+        for name in ["native", "native-tiled", "native-batch", "simulator", "simulated", "xla"] {
             let cfg = RunConfig { backend: name.to_string(), ..Default::default() };
             cfg.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
         }

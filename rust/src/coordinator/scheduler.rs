@@ -142,6 +142,8 @@ pub fn run_coordinated(
         s_t,
         elapsed_secs: t0.elapsed().as_secs_f64(),
         backend: "coordinated".to_string(),
+        kernel: "mixed".to_string(),
+        perm_block: 0,
         per_device: stats.into_values().collect(),
         f_perms,
     })

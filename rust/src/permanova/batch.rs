@@ -12,8 +12,8 @@
 //! available parallelism.
 
 use super::grouping::Grouping;
-use super::kernels::{sw_one, SwAlgorithm};
-use crate::backend::shard::{run_sharded, run_sharded_with, ShardSpec};
+use super::kernels::{sw_brute_block, sw_one, SwAlgorithm, DEFAULT_PERM_BLOCK};
+use crate::backend::shard::{for_each_block, run_sharded, run_sharded_with, ShardSpec};
 use crate::dmat::DistanceMatrix;
 use crate::rng::PermutationPlan;
 
@@ -23,6 +23,15 @@ pub fn resolve_threads(requested: usize) -> usize {
         requested
     } else {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Resolve a permutation-block request (0 = the paper-informed default).
+pub fn resolve_perm_block(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        DEFAULT_PERM_BLOCK
     }
 }
 
@@ -75,6 +84,61 @@ pub fn sw_plan_range(
                 plan.fill(start + lo + i, row);
                 *o = sw_one(algo, mat.data(), n, row, inv_group_sizes);
             }
+        },
+    );
+    out
+}
+
+/// Compute s_W for a permutation-plan range with the **batched brute
+/// engine**: each worker walks its shards in blocks of `perm_block`
+/// permutations, materializes the block's labels in the position-major SoA
+/// layout, and makes ONE sweep over the distance matrix per block
+/// ([`sw_brute_block`]) — the paper's GPU-winning one-sweep-many-
+/// permutations access pattern.
+///
+/// Scheduling composes fully: `spec` carries shard size / worker count /
+/// SMT oversubscription, and none of them (nor `perm_block`) changes any
+/// output bit — each lane runs the brute kernel's exact f32 op sequence.
+pub fn sw_plan_range_blocked(
+    mat: &DistanceMatrix,
+    plan: &PermutationPlan,
+    start: usize,
+    count: usize,
+    inv_group_sizes: &[f32],
+    perm_block: usize,
+    spec: &ShardSpec,
+) -> Vec<f32> {
+    let n = mat.n();
+    assert_eq!(plan.n(), n, "plan/matrix size mismatch");
+    // Clamp to the range size: a block wider than the work would only
+    // inflate the per-worker SoA scratch (n · block labels) and collapse
+    // the range into one shard.
+    let block = resolve_perm_block(perm_block).min(count.max(1));
+    // Blocks form inside shards, so align the shard size to the block
+    // width — otherwise the auto shard size would clip every block.
+    let spec = spec.aligned_to_block(count, block);
+    let mut out = vec![0.0f32; count];
+    run_sharded_with(
+        &spec,
+        &mut out,
+        // Per-worker scratch: one label row + one SoA block buffer.
+        || (vec![0u32; n], vec![0u32; n * block]),
+        |scratch, lo, slice| {
+            let (row, soa) = scratch;
+            for_each_block(0, slice.len(), block, |off, b| {
+                // SoA stride is the *actual* lane count b (tail blocks of a
+                // shard may be narrower than `block`).
+                let soa = &mut soa[..n * b];
+                for j in 0..b {
+                    plan.fill(start + lo + off + j, row);
+                    for i in 0..n {
+                        soa[i * b + j] = row[i];
+                    }
+                }
+                let dst = &mut slice[off..off + b];
+                dst.fill(0.0);
+                sw_brute_block(mat.data(), n, soa, b, inv_group_sizes, dst);
+            });
         },
     );
     out
@@ -167,5 +231,78 @@ mod tests {
     fn resolve_threads_semantics() {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(7), 7);
+    }
+
+    #[test]
+    fn resolve_perm_block_semantics() {
+        assert_eq!(resolve_perm_block(0), DEFAULT_PERM_BLOCK);
+        assert_eq!(resolve_perm_block(8), 8);
+    }
+
+    #[test]
+    fn blocked_range_is_bitwise_identical_to_scalar_brute() {
+        let (mat, grouping) = setup(40, 4);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 13, 77);
+        let want = sw_plan_range(&mat, &plan, 0, 77, grouping.inv_sizes(), SwAlgorithm::Brute, 1);
+        for block in [1usize, 3, 8, 64, 1000] {
+            for spec in [
+                ShardSpec::with_workers(1),
+                ShardSpec { shard_size: 5, workers: 3, smt: false },
+                ShardSpec { shard_size: 19, workers: 2, smt: true },
+                ShardSpec::default(),
+            ] {
+                let got = sw_plan_range_blocked(
+                    &mat,
+                    &plan,
+                    0,
+                    77,
+                    grouping.inv_sizes(),
+                    block,
+                    &spec,
+                );
+                assert_eq!(want, got, "block={block} spec={spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_sub_ranges_line_up() {
+        let (mat, grouping) = setup(32, 3);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 21, 60);
+        let spec = ShardSpec::with_workers(2);
+        let full = sw_plan_range_blocked(&mat, &plan, 0, 60, grouping.inv_sizes(), 8, &spec);
+        let head = sw_plan_range_blocked(&mat, &plan, 0, 23, grouping.inv_sizes(), 8, &spec);
+        let tail = sw_plan_range_blocked(&mat, &plan, 23, 37, grouping.inv_sizes(), 8, &spec);
+        assert_eq!(&full[..23], &head[..]);
+        assert_eq!(&full[23..], &tail[..]);
+    }
+
+    #[test]
+    fn oversized_block_is_clamped_to_the_range() {
+        // A block far wider than the permutation count must not blow up the
+        // per-worker scratch allocation — and still matches brute bitwise.
+        let (mat, grouping) = setup(20, 2);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 9, 11);
+        let want = sw_plan_range(&mat, &plan, 0, 11, grouping.inv_sizes(), SwAlgorithm::Brute, 1);
+        let got = sw_plan_range_blocked(
+            &mat,
+            &plan,
+            0,
+            11,
+            grouping.inv_sizes(),
+            usize::MAX / (2 * 20), // would be a ~2^58-lane scratch unclamped
+            &ShardSpec::with_workers(2),
+        );
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn blocked_empty_range_is_empty() {
+        let (mat, grouping) = setup(16, 2);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
+        let spec = ShardSpec::default();
+        assert!(
+            sw_plan_range_blocked(&mat, &plan, 0, 0, grouping.inv_sizes(), 4, &spec).is_empty()
+        );
     }
 }

@@ -64,6 +64,13 @@ impl SwAlgorithm {
 /// the regime the paper tuned for on Zen 4.
 pub const DEFAULT_TILE: usize = 512;
 
+/// Default permutation-block width for the batched brute engine: 64 lanes
+/// × 4 B = 256 B of labels per matrix element touched — a full GPU
+/// wavefront's worth of work per d² read, and on the CPU enough lanes to
+/// push the kernel from matrix-bandwidth-bound to compute-bound, which is
+/// the regime where the paper's MI300A GPU measurement lives.
+pub const DEFAULT_PERM_BLOCK: usize = 64;
+
 /// Algorithm 1 — original brute force, f32 accumulation (paper-faithful).
 ///
 /// `mat` is the row-major n×n matrix, `grouping` one label row,
@@ -86,6 +93,54 @@ pub fn sw_brute_one(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[
         }
     }
     s_w
+}
+
+/// Algorithm 1, batched: one sweep over the distance matrix evaluates a
+/// structure-of-arrays *block* of `block` permutations at once.
+///
+/// This is the access pattern that wins on the paper's MI300A GPU cores:
+/// instead of re-streaming the n² matrix once per permutation (the CPU
+/// formulations above), each `d[i][j]` is read and squared **once** and the
+/// cost is amortized across all `block` label assignments — the label
+/// blocks are the streamed operand, and they are tiny.
+///
+/// `labels` is position-major SoA: `labels[i * block + j]` is the label of
+/// object `i` under block lane `j`.  `out` (length `block`) accumulates
+/// each lane's s_W and must be zeroed by the caller.
+///
+/// **Bitwise contract:** per lane, the (row, col) visit order and the f32
+/// operation sequence (`(d·d)·w`, then add) are exactly [`sw_brute_one`]'s,
+/// so every lane is bitwise identical to running the single-permutation
+/// brute kernel on that labelling — at *any* block width.  The conformance
+/// tests pin this.
+pub fn sw_brute_block(
+    mat: &[f32],
+    n: usize,
+    labels: &[u32],
+    block: usize,
+    inv_group_sizes: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(mat.len(), n * n);
+    debug_assert_eq!(labels.len(), n * block);
+    debug_assert_eq!(out.len(), block);
+    for row in 0..n.saturating_sub(1) {
+        // no columns in last row
+        let row_groups = &labels[row * block..(row + 1) * block];
+        let mat_row = &mat[row * n..(row + 1) * n];
+        for col in (row + 1)..n {
+            // diagonal is always zero
+            let val = mat_row[col];
+            let v2 = val * val;
+            let col_groups = &labels[col * block..(col + 1) * block];
+            for j in 0..block {
+                let g = row_groups[j];
+                if col_groups[j] == g {
+                    out[j] += v2 * inv_group_sizes[g as usize];
+                }
+            }
+        }
+    }
 }
 
 /// Algorithm 1 with an f64 accumulator — the in-crate numerical oracle.
@@ -329,6 +384,64 @@ mod tests {
             let got = sw_one(algo, &m, 2, &g2, &inv2);
             assert!((got - 4.5).abs() < 1e-6); // 3^2 * 0.5
         }
+    }
+
+    /// Pack `rows` label rows (row-major, as `PermutationPlan::batch`
+    /// emits) into the position-major SoA layout `sw_brute_block` takes.
+    fn to_soa(rows_aos: &[u32], rows: usize, n: usize) -> Vec<u32> {
+        let mut soa = vec![0u32; rows * n];
+        for r in 0..rows {
+            for i in 0..n {
+                soa[i * rows + r] = rows_aos[r * n + i];
+            }
+        }
+        soa
+    }
+
+    #[test]
+    fn block_kernel_is_bitwise_identical_to_brute_per_lane() {
+        for (n, k, seed) in [(7usize, 2usize, 1u64), (32, 4, 2), (65, 3, 3), (96, 5, 4)] {
+            let (m, g, inv) = random_case(n, k, seed);
+            // Lanes: the observed labelling plus rotations of it.
+            for block in [1usize, 2, 5, 8, 64] {
+                let mut aos = Vec::with_capacity(block * n);
+                for r in 0..block {
+                    for i in 0..n {
+                        aos.push(g[(i + r) % n]);
+                    }
+                }
+                let soa = to_soa(&aos, block, n);
+                let mut out = vec![0.0f32; block];
+                sw_brute_block(m.data(), n, &soa, block, &inv, &mut out);
+                for r in 0..block {
+                    let want = sw_brute_one(m.data(), n, &aos[r * n..(r + 1) * n], &inv);
+                    assert_eq!(
+                        out[r].to_bits(),
+                        want.to_bits(),
+                        "n={n} block={block} lane {r}: {} vs {want}",
+                        out[r]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_kernel_tiny_inputs_dont_panic() {
+        // n = 1: no pairs; n = 2: one pair per lane.
+        let inv = vec![1.0f32, 1.0];
+        let mut out = vec![0.0f32; 3];
+        sw_brute_block(&[0.0], 1, &[0, 0, 0], 3, &inv, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 0.0]);
+
+        let m = [0.0f32, 3.0, 3.0, 0.0];
+        // Two lanes: same group (pair counts) vs different groups (no pair).
+        let soa = [0u32, 0, 0, 1]; // labels[i*2 + j]: obj0 = {0,0}, obj1 = {0,1}
+        let inv2 = vec![0.5f32, 1.0];
+        let mut out2 = vec![0.0f32; 2];
+        sw_brute_block(&m, 2, &soa, 2, &inv2, &mut out2);
+        assert!((out2[0] - 4.5).abs() < 1e-6); // 3² · 0.5
+        assert_eq!(out2[1], 0.0);
     }
 
     #[test]

@@ -10,6 +10,9 @@
 //!   [`SwAlgorithm`];
 //! * batched multi-threaded execution ([`sw_batch`], [`sw_plan_range`]) —
 //!   the `permanova_f_stat_sW_T` analog;
+//! * the batched brute engine ([`sw_brute_block`],
+//!   [`sw_plan_range_blocked`]) — one matrix sweep amortized over a SoA
+//!   block of permutations, the paper's GPU-winning access pattern;
 //! * the full statistic ([`permanova`], [`st_of`], [`fstat_from_sw`],
 //!   [`pvalue`]);
 //! * the surrounding workflow: post-hoc [`pairwise_permanova`]
@@ -26,11 +29,14 @@ mod stats;
 
 pub use anosim::{anosim, AnosimResult};
 pub use permdisp::{permdisp, PermdispResult};
-pub use batch::{resolve_threads, sw_batch, sw_permutations, sw_plan_range};
+pub use batch::{
+    resolve_perm_block, resolve_threads, sw_batch, sw_permutations, sw_plan_range,
+    sw_plan_range_blocked,
+};
 pub use grouping::Grouping;
 pub use kernels::{
-    sw_brute_f64, sw_brute_one, sw_flat_one, sw_of, sw_one, sw_tiled_one, SwAlgorithm,
-    DEFAULT_TILE,
+    sw_brute_block, sw_brute_f64, sw_brute_one, sw_flat_one, sw_of, sw_one, sw_tiled_one,
+    SwAlgorithm, DEFAULT_PERM_BLOCK, DEFAULT_TILE,
 };
 pub use pairwise::{pairwise_permanova, PairwiseEntry, PairwiseResult};
 pub use stats::{fstat_from_sw, permanova, pvalue, st_of, PermanovaOpts, PermanovaResult};

@@ -34,6 +34,15 @@ pub struct RunReport {
     /// Registry name of the backend that produced this report
     /// (`"coordinated"` for heterogeneous multi-device runs).
     pub backend: String,
+    /// Kernel formulation the backend actually evaluated
+    /// ([`Caps::kernel`](crate::backend::Caps) — `"mixed"` for
+    /// heterogeneous runs), rendered and serialized as `algo`.
+    pub kernel: String,
+    /// Permutations per matrix sweep **actually used** (the configured
+    /// width clamped to the permutation count), when the producing backend
+    /// is block-batched (`native-batch`); 0 for one-permutation-per-sweep
+    /// backends.
+    pub perm_block: usize,
     pub per_device: Vec<DeviceStats>,
     /// The permuted F distribution (observed excluded), in plan order.
     pub f_perms: Vec<f64>,
@@ -41,11 +50,20 @@ pub struct RunReport {
 
 impl RunReport {
     /// Human-readable report block (the CLI's `run` output).
-    pub fn render(&self, algo: &str) -> String {
+    pub fn render(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "PERMANOVA  n={} k={} perms={} backend={} algo={}\n",
-            self.n, self.k, self.n_perms, self.backend, algo
+            "PERMANOVA  n={} k={} perms={} backend={} algo={}{}\n",
+            self.n,
+            self.k,
+            self.n_perms,
+            self.backend,
+            self.kernel,
+            if self.perm_block > 0 {
+                format!(" block={}", self.perm_block)
+            } else {
+                String::new()
+            }
         ));
         out.push_str(&format!(
             "  pseudo-F = {:.6}\n  p-value  = {:.6}\n  s_T      = {:.6}\n  wall     = {:.3}s\n",
@@ -70,14 +88,15 @@ impl RunReport {
     }
 
     /// Machine-readable report (consumed by scripts / CI trend tracking).
-    pub fn to_json(&self, algo: &str) -> Json {
+    pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("version", Json::str(crate::VERSION)),
             ("backend", Json::str(self.backend.clone())),
-            ("algo", Json::str(algo)),
+            ("algo", Json::str(self.kernel.clone())),
             ("n", Json::num(self.n as f64)),
             ("k", Json::num(self.k as f64)),
             ("n_perms", Json::num(self.n_perms as f64)),
+            ("perm_block", Json::num(self.perm_block as f64)),
             ("f_obs", Json::num(self.f_obs)),
             ("p_value", Json::num(self.p_value)),
             ("s_t", Json::num(self.s_t)),
@@ -283,6 +302,8 @@ mod tests {
             s_t: 10.0,
             elapsed_secs: 0.5,
             backend: "native-tiled".into(),
+            kernel: "tiled512".into(),
+            perm_block: 0,
             per_device: vec![DeviceStats {
                 device: "native-tiled".into(),
                 batches: 1,
@@ -296,18 +317,33 @@ mod tests {
 
     #[test]
     fn run_report_render_records_backend() {
-        let s = sample_report().render("tiled512");
+        let s = sample_report().render();
         assert!(s.contains("backend=native-tiled"));
         assert!(s.contains("algo=tiled512"));
         assert!(s.contains("pseudo-F"));
+        // perm_block = 0: no block annotation for non-batched backends.
+        assert!(!s.contains("block="));
+    }
+
+    #[test]
+    fn run_report_render_shows_perm_block_when_batched() {
+        let mut r = sample_report();
+        r.backend = "native-batch".into();
+        r.kernel = "brute-block".into();
+        r.perm_block = 64;
+        let s = r.render();
+        assert!(s.contains("backend=native-batch"));
+        assert!(s.contains("algo=brute-block"), "{s}");
+        assert!(s.contains("block=64"), "{s}");
     }
 
     #[test]
     fn run_report_json_roundtrips() {
-        let doc = sample_report().to_json("tiled512");
+        let doc = sample_report().to_json();
         let parsed = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(parsed.req_str("backend").unwrap(), "native-tiled");
         assert_eq!(parsed.req_usize("n_perms").unwrap(), 99);
+        assert_eq!(parsed.req_usize("perm_block").unwrap(), 0);
         assert_eq!(parsed.req_arr("devices").unwrap().len(), 1);
     }
 }

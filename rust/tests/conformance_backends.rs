@@ -1,0 +1,132 @@
+//! Cross-backend conformance: for one fixed seed, every backend draws the
+//! *same* permutation stream and must reproduce the same statistics.
+//!
+//! Two tiers of agreement, matching what the arithmetic can actually
+//! guarantee:
+//!
+//! * **Oracle tier** — every backend's full F-distribution matches the f64
+//!   brute-force oracle to f32-reduction tolerance, and all backends agree
+//!   on the p-value exactly.
+//! * **Bitwise tier** — backends that execute the same f32 operation
+//!   sequence are bitwise identical: `native-batch` ≡ `native-brute` at
+//!   every tested block size (the batched engine's defining contract), and
+//!   `simulator` ≡ `native-flat` (both run the flat kernel).
+
+use permanova_apu::backend::execute;
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::permanova::{fstat_from_sw, st_of, sw_brute_f64};
+use permanova_apu::report::RunReport;
+use permanova_apu::rng::PermutationPlan;
+
+const N: usize = 56;
+const K: usize = 4;
+const N_PERMS: usize = 149;
+const SEED: u64 = 0xC0FFEE;
+
+fn cfg(backend: &str, perm_block: usize) -> RunConfig {
+    RunConfig {
+        data: DataSource::Synthetic { n_dims: N, n_groups: K },
+        backend: backend.to_string(),
+        n_perms: N_PERMS,
+        seed: SEED,
+        threads: 2,
+        perm_block,
+        ..Default::default()
+    }
+}
+
+fn run(backend: &str, perm_block: usize) -> RunReport {
+    let c = cfg(backend, perm_block);
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    execute(&c, &mat, &grouping).unwrap()
+}
+
+/// The f64 oracle F-distribution for the fixture, straight from the plan.
+fn oracle() -> Vec<f64> {
+    let c = cfg("native-brute", 0);
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let s_t = st_of(&mat);
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), SEED, N_PERMS + 1);
+    let mut row = vec![0u32; N];
+    (0..N_PERMS + 1)
+        .map(|i| {
+            plan.fill(i, &mut row);
+            let sw = sw_brute_f64(mat.data(), N, &row, grouping.inv_sizes());
+            fstat_from_sw(sw, s_t, N, K)
+        })
+        .collect()
+}
+
+#[test]
+fn every_backend_matches_the_f64_oracle() {
+    let want = oracle();
+    let runs: Vec<(String, RunReport)> = [
+        ("native".to_string(), 0usize),
+        ("native-brute".to_string(), 0),
+        ("native-tiled".to_string(), 0),
+        ("native-flat".to_string(), 0),
+        ("native-batch".to_string(), 1),
+        ("native-batch".to_string(), 8),
+        ("native-batch".to_string(), 64),
+        ("simulator".to_string(), 0),
+        ("simulator-gpu".to_string(), 0),
+    ]
+    .into_iter()
+    .map(|(name, block)| {
+        let label = if block > 0 { format!("{name}/b{block}") } else { name.clone() };
+        (label, run(&name, block))
+    })
+    .collect();
+
+    for (label, r) in &runs {
+        assert_eq!(r.f_perms.len(), N_PERMS, "{label}");
+        let rel = (r.f_obs - want[0]).abs() / want[0].abs().max(1e-12);
+        assert!(rel < 5e-4, "{label}: f_obs {} vs oracle {}", r.f_obs, want[0]);
+        for (i, (got, oracle_f)) in r.f_perms.iter().zip(&want[1..]).enumerate() {
+            let rel = (got - oracle_f).abs() / oracle_f.abs().max(1e-12);
+            assert!(rel < 5e-4, "{label} perm {i}: {got} vs {oracle_f}");
+        }
+    }
+
+    // Identical permutation stream + well-separated statistics => every
+    // backend lands on the identical p-value.
+    let (label0, r0) = &runs[0];
+    for (label, r) in &runs[1..] {
+        assert_eq!(r.p_value, r0.p_value, "{label} vs {label0}");
+    }
+}
+
+#[test]
+fn native_batch_is_bitwise_identical_to_brute_at_all_block_sizes() {
+    let brute = run("native-brute", 0);
+    assert_eq!(brute.perm_block, 0);
+    for block in [1usize, 8, 64] {
+        let batch = run("native-batch", block);
+        assert_eq!(batch.backend, "native-batch");
+        assert_eq!(batch.perm_block, block, "report records the resolved block");
+        assert_eq!(
+            batch.f_obs.to_bits(),
+            brute.f_obs.to_bits(),
+            "block={block}: f_obs {} vs {}",
+            batch.f_obs,
+            brute.f_obs
+        );
+        assert_eq!(batch.f_perms.len(), brute.f_perms.len());
+        for (i, (b, s)) in batch.f_perms.iter().zip(&brute.f_perms).enumerate() {
+            assert_eq!(b.to_bits(), s.to_bits(), "block={block} perm {i}: {b} vs {s}");
+        }
+        assert_eq!(batch.p_value, brute.p_value);
+    }
+}
+
+#[test]
+fn simulator_is_bitwise_identical_to_native_flat() {
+    let flat = run("native-flat", 0);
+    let sim = run("simulator", 0);
+    assert_eq!(flat.f_obs.to_bits(), sim.f_obs.to_bits());
+    for (a, b) in flat.f_perms.iter().zip(&sim.f_perms) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // The simulator additionally reports modelled MI300A time.
+    assert!(sim.per_device.iter().map(|d| d.simulated_secs).sum::<f64>() > 0.0);
+}

@@ -1,0 +1,164 @@
+//! Determinism and report-serialization contracts.
+//!
+//! * For a fixed seed, results are identical across shard sizes, worker
+//!   counts and SMT oversubscription — for the batched engine the block
+//!   width is a fourth axis that must also be invisible.
+//! * The extended `RunReport` JSON (including the new `perm_block` field)
+//!   round-trips against a golden file, so the machine-readable schema
+//!   downstream tooling consumes cannot drift silently.
+
+use permanova_apu::backend::execute;
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::jsonio::Json;
+use permanova_apu::report::{DeviceStats, RunReport};
+
+fn cfg(backend: &str) -> RunConfig {
+    RunConfig {
+        data: DataSource::Synthetic { n_dims: 36, n_groups: 3 },
+        backend: backend.to_string(),
+        n_perms: 59,
+        seed: 0xD15C,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn identical_results_across_scheduling_configs() {
+    for backend in ["native-batch", "native-flat", "native-brute"] {
+        let base_cfg = cfg(backend);
+        let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
+        let mut base = base_cfg.clone();
+        base.threads = 1;
+        base.shard_size = 1;
+        let want = execute(&base, &mat, &grouping).unwrap();
+        // shard size × worker count × SMT oversubscription all vary; none
+        // may change a single output bit.
+        for (shard_size, threads, smt) in [
+            (1usize, 2usize, false),
+            (5, 3, false),
+            (64, 2, true),
+            (7, 4, true),
+            (0, 0, false), // fully automatic
+            (0, 0, true),
+        ] {
+            let mut c = base_cfg.clone();
+            c.shard_size = shard_size;
+            c.threads = threads;
+            c.smt_oversubscribe = smt;
+            let r = execute(&c, &mat, &grouping).unwrap();
+            assert_eq!(
+                want.f_obs.to_bits(),
+                r.f_obs.to_bits(),
+                "{backend} shard={shard_size} threads={threads} smt={smt}"
+            );
+            assert_eq!(want.f_perms, r.f_perms, "{backend} shard={shard_size}");
+            assert_eq!(want.p_value, r.p_value);
+        }
+    }
+}
+
+#[test]
+fn block_width_is_invisible_alongside_scheduling() {
+    // perm_block composes with the scheduler axes: sweep all of them
+    // together for the batched engine.
+    let base_cfg = cfg("native-batch");
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
+    let want = execute(&base_cfg, &mat, &grouping).unwrap();
+    for block in [1usize, 3, 8, 64] {
+        for (shard_size, threads, smt) in [(1usize, 1usize, false), (7, 3, true), (0, 2, false)] {
+            let mut c = base_cfg.clone();
+            c.perm_block = block;
+            c.shard_size = shard_size;
+            c.threads = threads;
+            c.smt_oversubscribe = smt;
+            let r = execute(&c, &mat, &grouping).unwrap();
+            assert_eq!(want.f_perms, r.f_perms, "block={block} shard={shard_size} smt={smt}");
+            assert_eq!(want.f_obs.to_bits(), r.f_obs.to_bits());
+            // The report records the width actually used (clamped to the
+            // 60 permutations of this fixture).
+            assert_eq!(r.perm_block, block.min(60), "effective block width");
+        }
+    }
+}
+
+#[test]
+fn same_seed_same_results_different_seed_different_draw() {
+    let base_cfg = cfg("native-batch");
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
+    let a = execute(&base_cfg, &mat, &grouping).unwrap();
+    let b = execute(&base_cfg, &mat, &grouping).unwrap();
+    assert_eq!(a.f_perms, b.f_perms, "repeat runs are bitwise reproducible");
+    let mut other = base_cfg.clone();
+    other.seed ^= 1;
+    let c = execute(&other, &mat, &grouping).unwrap();
+    assert_ne!(a.f_perms, c.f_perms, "a different seed draws different permutations");
+}
+
+/// Fixed report whose every numeric field is exactly representable, so the
+/// golden comparison is deterministic.
+fn sample_report() -> RunReport {
+    RunReport {
+        f_obs: 2.5,
+        p_value: 0.25,
+        n_perms: 99,
+        n: 40,
+        k: 4,
+        s_t: 10.0,
+        elapsed_secs: 0.5,
+        backend: "native-batch".into(),
+        kernel: "brute-block".into(),
+        perm_block: 64,
+        per_device: vec![DeviceStats {
+            device: "native-batch/b64".into(),
+            batches: 2,
+            perms: 100,
+            busy_secs: 0.125,
+            simulated_secs: 0.0,
+        }],
+        f_perms: vec![1.0; 99],
+    }
+}
+
+#[test]
+fn run_report_json_matches_the_golden_file() {
+    let doc = sample_report().to_json();
+    let golden_text = include_str!("golden/run_report.json");
+    let mut golden = Json::parse(golden_text).unwrap();
+    // The crate version is stamped into every report; pin the golden to
+    // whatever this build reports so version bumps don't rot the fixture.
+    if let Json::Obj(m) = &mut golden {
+        m.insert("version".into(), Json::str(permanova_apu::VERSION));
+    }
+    assert_eq!(
+        golden, doc,
+        "RunReport JSON schema drifted — update rust/tests/golden/run_report.json deliberately"
+    );
+}
+
+#[test]
+fn run_report_json_roundtrips_through_both_serializers() {
+    let doc = sample_report().to_json();
+    for text in [doc.to_string(), doc.to_string_pretty()] {
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed, doc);
+        assert_eq!(parsed.req_usize("perm_block").unwrap(), 64);
+        assert_eq!(parsed.req_str("backend").unwrap(), "native-batch");
+        assert_eq!(parsed.req_arr("devices").unwrap().len(), 1);
+    }
+}
+
+#[test]
+fn live_report_json_carries_perm_block_and_kernel() {
+    let mut c = cfg("native-batch");
+    c.n_perms = 99; // total 100 > the default block, so no clamping
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let r = execute(&c, &mat, &grouping).unwrap();
+    let doc = r.to_json();
+    let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+    assert_eq!(
+        parsed.req_usize("perm_block").unwrap(),
+        permanova_apu::permanova::DEFAULT_PERM_BLOCK
+    );
+    assert_eq!(parsed.req_str("backend").unwrap(), "native-batch");
+    assert_eq!(parsed.req_str("algo").unwrap(), "brute-block");
+}

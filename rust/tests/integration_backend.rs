@@ -77,7 +77,7 @@ fn cross_backend_equivalence_against_f64_oracle() {
         .collect();
 
     let mut reports = Vec::new();
-    for name in ["native-brute", "native-tiled", "native-flat", "simulator"] {
+    for name in ["native-brute", "native-tiled", "native-flat", "native-batch", "simulator"] {
         let r = execute(&cfg(name, n, k, n_perms), &mat, &grouping).unwrap();
         assert_eq!(r.backend, name, "report must record the producing backend");
         assert_eq!(r.f_perms.len(), n_perms);
@@ -108,6 +108,15 @@ fn cross_backend_equivalence_against_f64_oracle() {
     assert_eq!(flat.f_obs, sim.f_obs);
     assert_eq!(flat.f_perms, sim.f_perms);
     assert!(sim.per_device.iter().map(|d| d.simulated_secs).sum::<f64>() > 0.0);
+
+    // The batched engine executes the brute kernel's exact f32 op sequence:
+    // bitwise-identical to native-brute, and the report records its block.
+    let brute = &reports.iter().find(|(n, _)| *n == "native-brute").unwrap().1;
+    let batch = &reports.iter().find(|(n, _)| *n == "native-batch").unwrap().1;
+    assert_eq!(brute.f_obs, batch.f_obs);
+    assert_eq!(brute.f_perms, batch.f_perms);
+    assert_eq!(batch.perm_block, permanova_apu::permanova::DEFAULT_PERM_BLOCK);
+    assert_eq!(brute.perm_block, 0);
 }
 
 /// The registry is the single source of backend names: configs validate
@@ -115,7 +124,15 @@ fn cross_backend_equivalence_against_f64_oracle() {
 #[test]
 fn registry_governs_config_validation() {
     let names = known_backends();
-    for required in ["native", "native-brute", "native-tiled", "native-flat", "simulator", "xla"] {
+    for required in [
+        "native",
+        "native-brute",
+        "native-tiled",
+        "native-flat",
+        "native-batch",
+        "simulator",
+        "xla",
+    ] {
         assert!(names.iter().any(|n| n == required), "registry missing {required}");
     }
     assert!(cfg("native-tiled", 24, 2, 9).validate().is_ok());
@@ -154,7 +171,7 @@ fn planted_structure_detected_by_all_backends() {
     let k = 3;
     let mat = DistanceMatrix::planted_blocks(n, k, 0.2, 1.0, 11);
     let grouping = Grouping::balanced(n, k).unwrap();
-    for name in ["native-brute", "native-tiled", "native-flat", "simulator"] {
+    for name in ["native-brute", "native-tiled", "native-flat", "native-batch", "simulator"] {
         let r = execute(&cfg(name, n, k, 199), &mat, &grouping).unwrap();
         assert!(r.p_value <= 0.01, "{name}: p = {}", r.p_value);
         assert!(r.f_obs > 10.0, "{name}: F = {}", r.f_obs);

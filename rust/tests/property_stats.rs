@@ -1,0 +1,170 @@
+//! Property tests for the statistics core.
+//!
+//! The offline crate set has no proptest/quickcheck, so properties are
+//! checked over seeded random case families generated with the crate's own
+//! RNG — deterministic, but broad enough to catch structural mistakes:
+//!
+//! * pseudo-F is invariant under a whole-matrix row/column permutation
+//!   applied together with the matching label permutation;
+//! * permutation p-values always lie in `(0, 1]`;
+//! * degenerate groupings are rejected, and the near-degenerate
+//!   perfectly-separated case yields exactly the F the f64 oracle predicts.
+
+use permanova_apu::backend::execute;
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::permanova::{
+    fstat_from_sw, permanova, pvalue, st_of, sw_brute_f64, Grouping, PermanovaOpts, SwAlgorithm,
+};
+use permanova_apu::rng::{shuffle, Xoshiro256pp};
+
+/// Apply object permutation `sigma` to matrix and labels together:
+/// object `i` of the permuted problem is object `sigma[i]` of the original.
+fn permuted(mat: &DistanceMatrix, labels: &[u32], sigma: &[usize]) -> (DistanceMatrix, Vec<u32>) {
+    let n = mat.n();
+    let mut out = DistanceMatrix::zeros(n);
+    for i in 0..n {
+        for j in 0..n {
+            let v = mat.get(sigma[i], sigma[j]);
+            out.data_mut()[i * n + j] = v;
+        }
+    }
+    let l = sigma.iter().map(|&s| labels[s]).collect();
+    (out, l)
+}
+
+fn oracle_f(mat: &DistanceMatrix, labels: &[u32], inv: &[f32], k: usize) -> f64 {
+    let n = mat.n();
+    let sw = sw_brute_f64(mat.data(), n, labels, inv);
+    fstat_from_sw(sw, st_of(mat), n, k)
+}
+
+#[test]
+fn pseudo_f_is_invariant_under_joint_relabelling() {
+    for (n, k, seed) in [(20usize, 2usize, 1u64), (33, 3, 2), (48, 4, 3), (61, 5, 4)] {
+        let mat = DistanceMatrix::random_euclidean(n, 6, seed);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        let f_base = oracle_f(&mat, grouping.labels(), grouping.inv_sizes(), k);
+
+        let mut rng = Xoshiro256pp::new(seed ^ 0xFACE);
+        for round in 0..5 {
+            let mut sigma: Vec<usize> = (0..n).collect();
+            shuffle(&mut rng, &mut sigma);
+            let (pm, pl) = permuted(&mat, grouping.labels(), &sigma);
+            let f_perm = oracle_f(&pm, &pl, grouping.inv_sizes(), k);
+            // The sums are re-associated under the permutation, so the f64
+            // values match to accumulation tolerance, not bitwise.
+            let rel = (f_perm - f_base).abs() / f_base.abs().max(1e-12);
+            assert!(
+                rel < 1e-9,
+                "n={n} k={k} round={round}: F {f_perm} vs {f_base} (rel {rel})"
+            );
+        }
+    }
+}
+
+#[test]
+fn p_values_always_lie_in_unit_interval() {
+    // Through the low-level API, across kernels and data shapes...
+    for (n, k, seed) in [(16usize, 2usize, 7u64), (30, 3, 8), (45, 5, 9)] {
+        let mat = DistanceMatrix::random_euclidean(n, 5, seed);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        for algo in [SwAlgorithm::Brute, SwAlgorithm::Flat, SwAlgorithm::Tiled { tile: 16 }] {
+            let res = permanova(
+                &mat,
+                &grouping,
+                39,
+                &PermanovaOpts { algo, seed, threads: 2, keep_f_perms: false },
+            )
+            .unwrap();
+            assert!(
+                res.p_value > 0.0 && res.p_value <= 1.0,
+                "{algo:?} n={n}: p = {}",
+                res.p_value
+            );
+        }
+    }
+    // ...through every registered native/simulator backend...
+    for backend in
+        ["native", "native-brute", "native-tiled", "native-flat", "native-batch", "simulator"]
+    {
+        let cfg = RunConfig {
+            data: DataSource::Synthetic { n_dims: 28, n_groups: 4 },
+            backend: backend.to_string(),
+            n_perms: 29,
+            seed: 5,
+            threads: 2,
+            ..Default::default()
+        };
+        let mat = DistanceMatrix::random_euclidean(28, 5, 11);
+        let grouping = Grouping::balanced(28, 4).unwrap();
+        let r = execute(&cfg, &mat, &grouping).unwrap();
+        assert!(r.p_value > 0.0 && r.p_value <= 1.0, "{backend}: p = {}", r.p_value);
+    }
+    // ...and at the pvalue() edges themselves.
+    assert_eq!(pvalue(f64::INFINITY, &[1.0, 2.0, 3.0]), 0.25); // above all: 1/(1+3)
+    assert_eq!(pvalue(f64::NEG_INFINITY, &[1.0, 2.0, 3.0]), 1.0); // below all
+    assert_eq!(pvalue(0.0, &[]), 1.0); // no permutations: p = 1
+}
+
+#[test]
+fn degenerate_groupings_are_rejected() {
+    // All objects in one group: k = 1, no between-group variance to test.
+    assert!(Grouping::new(vec![0; 10]).is_err());
+    // Every object its own group: n = k, no within-group degrees of freedom.
+    assert!(Grouping::new((0..8).collect()).is_err());
+    // Empty labelling.
+    assert!(Grouping::new(vec![]).is_err());
+    // Non-dense labels (group 1 empty).
+    assert!(Grouping::new(vec![0, 0, 2, 2, 2]).is_err());
+}
+
+#[test]
+fn perfect_separation_yields_the_oracle_degenerate_f() {
+    // Within-group distances all zero, cross-group all one: s_W = 0, so the
+    // F statistic degenerates to +inf — and the f64 oracle must agree.
+    let n = 12;
+    let k = 3;
+    let grouping = Grouping::balanced(n, k).unwrap();
+    let mut mat = DistanceMatrix::zeros(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if grouping.labels()[i] != grouping.labels()[j] {
+                mat.set_sym(i, j, 1.0);
+            }
+        }
+    }
+    let sw_oracle = sw_brute_f64(mat.data(), n, grouping.labels(), grouping.inv_sizes());
+    assert_eq!(sw_oracle, 0.0, "perfect separation has zero within-group sum");
+    let f_oracle = fstat_from_sw(sw_oracle, st_of(&mat), n, k);
+    assert!(f_oracle.is_infinite() && f_oracle > 0.0, "oracle F = {f_oracle}");
+
+    let res = permanova(
+        &mat,
+        &grouping,
+        49,
+        &PermanovaOpts { algo: SwAlgorithm::Brute, seed: 3, threads: 1, keep_f_perms: true },
+    )
+    .unwrap();
+    assert!(
+        res.f_obs.is_infinite() && res.f_obs > 0.0,
+        "observed F must match the oracle's degenerate value, got {}",
+        res.f_obs
+    );
+    // A shuffled labelling reproduces s_W = 0 only if it preserves the
+    // exact partition, so nearly all permuted F values are finite and the
+    // p-value is (1 + #partition-preserving draws) / (P + 1).
+    let ties = res
+        .f_perms
+        .as_ref()
+        .unwrap()
+        .iter()
+        .filter(|f| f.is_infinite())
+        .count();
+    assert!(ties < 5, "implausibly many partition-preserving shuffles: {ties}");
+    assert!(
+        (res.p_value - (1.0 + ties as f64) / 50.0).abs() < 1e-12,
+        "p = {} with {ties} ties",
+        res.p_value
+    );
+}
