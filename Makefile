@@ -9,7 +9,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: all build test bench bench-quick lint fmt clippy artifacts pytest clean
+.PHONY: all build test bench bench-quick lint fmt clippy doc artifacts pytest clean
 
 all: build
 
@@ -22,10 +22,13 @@ test:
 bench:
 	$(CARGO) bench
 
-# The CI smoke sweep: emit + schema-validate the repo's benchmark record.
+# The CI smoke sweep: emit + schema-validate the repo's benchmark record
+# (one cell family per method the engine routes).
 bench-quick:
 	$(CARGO) run --release -- bench --quick --out BENCH_PERMANOVA.json
 	$(CARGO) run --release -- bench --check BENCH_PERMANOVA.json
+	$(CARGO) run --release -- bench --quick --method anosim --out BENCH_ANOSIM.json
+	$(CARGO) run --release -- bench --check BENCH_ANOSIM.json
 
 lint: fmt clippy
 
@@ -34,6 +37,10 @@ fmt:
 
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
+
+# API docs; -D warnings also denies broken intra-doc links (CI `docs` job).
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --workspace
 
 # AOT-lower the JAX graph to HLO text artifacts + manifest.json.
 artifacts:

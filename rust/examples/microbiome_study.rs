@@ -18,7 +18,7 @@
 use std::time::Instant;
 
 use permanova_apu::config::{DataSource, RunConfig};
-use permanova_apu::coordinator::{run_on_backend, RunReport};
+use permanova_apu::coordinator::{run_on_backend, AnalysisReport};
 use permanova_apu::permanova::{Grouping, SwAlgorithm};
 use permanova_apu::report::Table;
 use permanova_apu::rng::{shuffle, Xoshiro256pp};
@@ -72,7 +72,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         ..Default::default()
     };
 
-    let mut rows: Vec<(String, RunReport)> = Vec::new();
+    let mut rows: Vec<(String, AnalysisReport)> = Vec::new();
     let native = run_on_backend(&base, &mat, &ds.grouping)?;
     rows.push(("native".into(), native.clone()));
 

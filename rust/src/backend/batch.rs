@@ -16,13 +16,21 @@
 //! f32 operation sequence, so `native-batch` is **bitwise identical** to
 //! `native-brute` at every block size, shard size, worker count and SMT
 //! setting — the cross-backend conformance tests pin this.
+//!
+//! The contract extends per method: ANOSIM batches run the SoA rank-sweep
+//! block kernel and PERMDISP batches the per-lane scalar statistic (via
+//! [`eval_plan_range_blocked`]), both of which execute the scalar f64
+//! operation sequence per lane — so `native-batch` stays bit-identical to
+//! `native-brute` for *every* method at every block width.
 
 use std::time::Instant;
 
 use super::{Backend, BatchPlan, BatchResult, Caps};
 use crate::config::RunConfig;
 use crate::error::Result;
-use crate::permanova::{fstat_from_sw, resolve_perm_block, sw_plan_range_blocked};
+use crate::permanova::{
+    eval_plan_range_blocked, fstat_from_sw, resolve_perm_block, sw_plan_range_blocked, StatKernel,
+};
 
 /// Algorithm 1 evaluated `perm_block` permutations per matrix sweep.
 pub struct BatchedBruteBackend {
@@ -46,22 +54,36 @@ impl Backend for BatchedBruteBackend {
         let t0 = Instant::now();
         let n = plan.mat.n();
         let k = plan.grouping.k();
-        let s_w = sw_plan_range_blocked(
-            plan.mat,
-            plan.perms,
-            plan.start,
-            plan.rows,
-            plan.grouping.inv_sizes(),
-            self.perm_block,
-            &plan.shard,
-        );
-        let f_stats = s_w
+        let stats = match plan.stat {
+            // PERMANOVA: the f32 SoA brute-block engine.
+            StatKernel::Permanova(pk) => sw_plan_range_blocked(
+                plan.mat,
+                plan.perms,
+                plan.start,
+                plan.rows,
+                plan.grouping.inv_sizes(),
+                self.perm_block,
+                &plan.shard,
+            )
             .iter()
-            .map(|&sw| fstat_from_sw(sw as f64, plan.s_t, n, k))
-            .collect();
+            .map(|&sw| fstat_from_sw(sw as f64, pk.s_t, n, k))
+            .collect(),
+            // ANOSIM / PERMDISP: the generic blocked walk (SoA rank sweep
+            // for ANOSIM, per-lane scalar for PERMDISP).
+            stat => eval_plan_range_blocked(
+                stat,
+                plan.mat,
+                plan.grouping,
+                plan.perms,
+                plan.start,
+                plan.rows,
+                self.perm_block,
+                &plan.shard,
+            ),
+        };
         Ok(BatchResult {
             start: plan.start,
-            f_stats,
+            stats,
             elapsed_secs: t0.elapsed().as_secs_f64(),
             modelled_secs: None,
             // Device tag carries the width actually used for this batch.
@@ -91,7 +113,7 @@ mod tests {
     use super::*;
     use crate::backend::{NativeBackend, ShardSpec};
     use crate::dmat::DistanceMatrix;
-    use crate::permanova::{st_of, Grouping, SwAlgorithm, DEFAULT_PERM_BLOCK};
+    use crate::permanova::{Grouping, Method, SwAlgorithm, DEFAULT_PERM_BLOCK};
     use crate::rng::PermutationPlan;
 
     fn plan_fixture(
@@ -108,34 +130,37 @@ mod tests {
     #[test]
     fn bitwise_identical_to_native_brute_across_blocks_and_shards() {
         let (mat, grouping, perms) = plan_fixture(44, 4, 50);
-        let s_t = st_of(&mat);
-        let mk = |shard: ShardSpec| BatchPlan {
-            mat: &mat,
-            grouping: &grouping,
-            perms: &perms,
-            start: 0,
-            rows: 50,
-            s_t,
-            shard,
-        };
-        let brute = NativeBackend::new(SwAlgorithm::Brute)
-            .run_batch(&mk(ShardSpec::with_workers(1)))
-            .unwrap();
-        for block in [1usize, 8, 64] {
-            for shard in [
-                ShardSpec::with_workers(1),
-                ShardSpec { shard_size: 7, workers: 3, smt: false },
-                ShardSpec { shard_size: 16, workers: 2, smt: true },
-            ] {
-                let b = BatchedBruteBackend::new(block);
-                let r = b.run_batch(&mk(shard)).unwrap();
-                assert_eq!(r.f_stats.len(), 50);
-                for (i, (got, want)) in r.f_stats.iter().zip(&brute.f_stats).enumerate() {
-                    assert_eq!(
-                        got.to_bits(),
-                        want.to_bits(),
-                        "block={block} shard={shard:?} perm {i}: {got} vs {want}"
-                    );
+        // The contract holds per method, not just for pseudo-F.
+        for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+            let stat = StatKernel::prepare(method, &mat, &grouping).unwrap();
+            let mk = |shard: ShardSpec| BatchPlan {
+                mat: &mat,
+                grouping: &grouping,
+                perms: &perms,
+                start: 0,
+                rows: 50,
+                stat: &stat,
+                shard,
+            };
+            let brute = NativeBackend::new(SwAlgorithm::Brute)
+                .run_batch(&mk(ShardSpec::with_workers(1)))
+                .unwrap();
+            for block in [1usize, 8, 64] {
+                for shard in [
+                    ShardSpec::with_workers(1),
+                    ShardSpec { shard_size: 7, workers: 3, smt: false },
+                    ShardSpec { shard_size: 16, workers: 2, smt: true },
+                ] {
+                    let b = BatchedBruteBackend::new(block);
+                    let r = b.run_batch(&mk(shard)).unwrap();
+                    assert_eq!(r.stats.len(), 50);
+                    for (i, (got, want)) in r.stats.iter().zip(&brute.stats).enumerate() {
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "{method:?} block={block} shard={shard:?} perm {i}: {got} vs {want}"
+                        );
+                    }
                 }
             }
         }
@@ -144,7 +169,7 @@ mod tests {
     #[test]
     fn sub_range_batches_line_up() {
         let (mat, grouping, perms) = plan_fixture(30, 3, 40);
-        let s_t = st_of(&mat);
+        let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
         let b = BatchedBruteBackend::new(8);
         let mk = |start: usize, rows: usize| BatchPlan {
             mat: &mat,
@@ -152,14 +177,14 @@ mod tests {
             perms: &perms,
             start,
             rows,
-            s_t,
+            stat: &stat,
             shard: ShardSpec::with_workers(2),
         };
         let full = b.run_batch(&mk(0, 40)).unwrap();
         let head = b.run_batch(&mk(0, 13)).unwrap();
         let tail = b.run_batch(&mk(13, 27)).unwrap();
-        assert_eq!(&full.f_stats[..13], &head.f_stats[..]);
-        assert_eq!(&full.f_stats[13..], &tail.f_stats[..]);
+        assert_eq!(&full.stats[..13], &head.stats[..]);
+        assert_eq!(&full.stats[13..], &tail.stats[..]);
     }
 
     #[test]

@@ -1,19 +1,25 @@
 //! The unified execution engine: one `Backend` trait for every way this
-//! crate can compute a PERMANOVA permutation batch.
+//! crate can compute a permutation-test batch.
 //!
-//! The paper's comparison only means something if the three kernel
-//! formulations (and the three compute substrates — native CPU, XLA/PJRT,
-//! simulated MI300A) run through **one** schedulable path with the data
-//! path held fixed.  That seam is this module:
+//! The paper's comparison only means something if the kernel formulations
+//! (and the three compute substrates — native CPU, XLA/PJRT, simulated
+//! MI300A) run through **one** schedulable path with the data path held
+//! fixed.  That seam is this module — and since the permute-relabel-reduce
+//! loop is the same for ANOSIM and PERMDISP, the engine is generic over
+//! the *statistic* ([`Method`] / [`StatKernel`]), not hardwired to
+//! PERMANOVA's pseudo-F:
 //!
 //! * [`Backend`] — `run_batch(&BatchPlan) -> BatchResult` plus
 //!   [`capabilities`](Backend::capabilities);
 //! * [`BatchPlan`] / [`BatchResult`] — the shared job and output shapes
-//!   (seekable permutation plan in, pseudo-F per permutation out);
+//!   (seekable permutation plan + prepared [`StatKernel`] in, one
+//!   statistic per permutation out);
 //! * [`Registry`] — name-keyed factories (`--backend native-tiled`,
 //!   `--backend simulator`, ...), the hook future backends plug into;
-//! * [`execute`] — the config-driven entry: build the plan, create the
-//!   backend, run it, aggregate a [`RunReport`](crate::report::RunReport).
+//! * [`execute`] — the config-driven entry: prepare the method's kernel,
+//!   create the backend, run it, aggregate a method-tagged
+//!   [`AnalysisReport`].  [`Method::PairwisePermanova`] fans out as one
+//!   scheduled job per group pair.
 //!
 //! Scheduling (shard size, worker count, SMT oversubscription) is owned by
 //! [`shard`] and threaded through every backend via [`BatchPlan::shard`].
@@ -37,8 +43,10 @@ use std::time::Instant;
 use crate::config::RunConfig;
 use crate::dmat::DistanceMatrix;
 use crate::error::{Error, Result};
-use crate::permanova::{pvalue, st_of, Grouping};
-use crate::report::{DeviceStats, RunReport};
+use crate::permanova::{
+    pairwise_seed, pairwise_subproblem, pvalue, Grouping, Method, StatKernel,
+};
+use crate::report::{AnalysisReport, DeviceStats, PairSummary, RunReport};
 use crate::rng::PermutationPlan;
 
 /// One batch of permutation work, shared read-only with the backend.
@@ -53,8 +61,10 @@ pub struct BatchPlan<'a> {
     pub start: usize,
     /// Number of permutations to evaluate.
     pub rows: usize,
-    /// Precomputed total sum of squares (permutation-invariant).
-    pub s_t: f64,
+    /// The prepared statistic: which method to evaluate plus its
+    /// permutation-invariant prelude (PERMANOVA's `s_T`, ANOSIM's
+    /// condensed ranks, PERMDISP's distances-to-centroid).
+    pub stat: &'a StatKernel,
     /// Scheduling knobs for whatever internal parallelism the backend has.
     pub shard: ShardSpec,
 }
@@ -65,10 +75,10 @@ impl<'a> BatchPlan<'a> {
         mat: &'a DistanceMatrix,
         grouping: &'a Grouping,
         perms: &'a PermutationPlan,
-        s_t: f64,
+        stat: &'a StatKernel,
         shard: ShardSpec,
     ) -> Self {
-        BatchPlan { mat, grouping, perms, start: 0, rows: perms.count, s_t, shard }
+        BatchPlan { mat, grouping, perms, start: 0, rows: perms.count, stat, shard }
     }
 }
 
@@ -77,8 +87,9 @@ impl<'a> BatchPlan<'a> {
 pub struct BatchResult {
     /// First plan index the batch covered.
     pub start: usize,
-    /// Pseudo-F per permutation, in plan order.
-    pub f_stats: Vec<f64>,
+    /// The method statistic per permutation, in plan order (pseudo-F for
+    /// PERMANOVA, R for ANOSIM, ANOVA F for PERMDISP).
+    pub stats: Vec<f64>,
     /// Wall-clock the backend spent.
     pub elapsed_secs: f64,
     /// Modelled MI300A seconds (simulator backends only).
@@ -108,10 +119,18 @@ pub struct Caps {
 }
 
 /// A compute substrate that can evaluate permutation batches.
+///
+/// Implementations must handle **every** [`StatKernel`] variant: they keep
+/// formulation-specific fast paths for `StatKernel::Permanova` (the
+/// paper's f32 kernels, the SoA block engine, the XLA artifacts) and
+/// delegate the other methods to the generic
+/// [`eval_plan_range`](crate::permanova::eval_plan_range) /
+/// [`eval_plan_range_blocked`](crate::permanova::eval_plan_range_blocked)
+/// loops, which run through the same shard scheduler.
 pub trait Backend {
     /// Evaluate one batch.  Implementations must honour the plan's shard
     /// spec for internal parallelism and return exactly `plan.rows`
-    /// F statistics in plan order.
+    /// statistics in plan order.
     fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult>;
 
     /// Static capabilities (also the source of the report's backend name).
@@ -185,9 +204,19 @@ pub fn create_backend(cfg: &RunConfig) -> Result<Box<dyn Backend>> {
     Registry::with_defaults().create(&cfg.backend, cfg)
 }
 
-/// Config-driven PERMANOVA run through the `Backend` trait: plan the
-/// permutations, run the whole batch on the selected backend, aggregate.
-pub fn execute(cfg: &RunConfig, mat: &DistanceMatrix, grouping: &Grouping) -> Result<RunReport> {
+/// Config-driven permutation test through the `Backend` trait: prepare
+/// the method's [`StatKernel`], run the whole batch on the selected
+/// backend, aggregate a method-tagged [`AnalysisReport`].
+///
+/// [`Method::PairwisePermanova`] fans out as one scheduled PERMANOVA job
+/// per group pair (independent per-pair seeds via
+/// [`pairwise_seed`](crate::permanova::pairwise_seed), Bonferroni-adjusted
+/// p-values), every pair going through the same backend and scheduler.
+pub fn execute(
+    cfg: &RunConfig,
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+) -> Result<AnalysisReport> {
     if grouping.n() != mat.n() {
         return Err(Error::InvalidInput(format!(
             "grouping n = {} vs matrix n = {}",
@@ -198,37 +227,110 @@ pub fn execute(cfg: &RunConfig, mat: &DistanceMatrix, grouping: &Grouping) -> Re
     if cfg.n_perms == 0 {
         return Err(Error::InvalidInput("n_perms must be >= 1".into()));
     }
+    // One backend instance serves every scheduled job of this call — for
+    // pairwise that is k(k−1)/2 jobs, and re-opening e.g. the XLA runtime
+    // per pair would re-read the artifacts each time.
     let backend = create_backend(cfg)?;
+    match cfg.method {
+        Method::PairwisePermanova => {
+            let k = grouping.k() as u32;
+            let n_comparisons = (k as usize) * (k as usize - 1) / 2;
+            let mut runs = Vec::with_capacity(n_comparisons);
+            let mut pairs = Vec::with_capacity(n_comparisons);
+            for a in 0..k {
+                for b in (a + 1)..k {
+                    let (sub, sub_grouping) = pairwise_subproblem(mat, grouping, a, b)?;
+                    let (run, _) = run_single(
+                        cfg,
+                        backend.as_ref(),
+                        &sub,
+                        &sub_grouping,
+                        Method::Permanova,
+                        pairwise_seed(cfg.seed, a, b),
+                    )?;
+                    pairs.push(PairSummary {
+                        group_a: a,
+                        group_b: b,
+                        n: sub.n(),
+                        p_adjusted: (run.p_value * n_comparisons as f64).min(1.0),
+                    });
+                    runs.push(run);
+                }
+            }
+            Ok(AnalysisReport {
+                method: Method::PairwisePermanova,
+                n: mat.n(),
+                k: grouping.k(),
+                runs,
+                pairs,
+                group_dispersions: vec![],
+            })
+        }
+        method => {
+            let (run, group_dispersions) =
+                run_single(cfg, backend.as_ref(), mat, grouping, method, cfg.seed)?;
+            Ok(AnalysisReport {
+                method,
+                n: mat.n(),
+                k: grouping.k(),
+                runs: vec![run],
+                pairs: vec![],
+                group_dispersions,
+            })
+        }
+    }
+}
+
+/// One scheduled engine job: prepare the kernel, run the full plan on the
+/// given backend, aggregate one [`RunReport`].  Returns the PERMDISP
+/// group dispersions alongside (empty for the other methods).
+fn run_single(
+    cfg: &RunConfig,
+    backend: &dyn Backend,
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    method: Method,
+    seed: u64,
+) -> Result<(RunReport, Vec<f64>)> {
     let caps = backend.capabilities();
 
+    let stat = StatKernel::prepare(method, mat, grouping)?;
+    let group_dispersions = stat.group_dispersions().to_vec();
     let total = cfg.n_perms + 1; // index 0 = observed labelling
-    let perms = PermutationPlan::new(grouping.labels().to_vec(), cfg.seed, total);
-    let s_t = st_of(mat);
+    let perms = PermutationPlan::new(grouping.labels().to_vec(), seed, total);
     let shard = cfg.shard_spec();
     let t0 = Instant::now();
 
-    let plan = BatchPlan::full(mat, grouping, &perms, s_t, shard);
+    let plan = BatchPlan::full(mat, grouping, &perms, &stat, shard);
     let batch = backend.run_batch(&plan)?;
-    if batch.f_stats.len() != total {
+    if batch.stats.len() != total {
         return Err(Error::Coordinator(format!(
             "backend {} returned {} statistics for {total} permutations",
             caps.name,
-            batch.f_stats.len()
+            batch.stats.len()
         )));
     }
 
-    let f_obs = batch.f_stats[0];
-    let f_perms = batch.f_stats[1..].to_vec();
-    Ok(RunReport {
+    let f_obs = batch.stats[0];
+    let f_perms = batch.stats[1..].to_vec();
+    let report = RunReport {
         f_obs,
         p_value: pvalue(f_obs, &f_perms),
         n_perms: cfg.n_perms,
         n: mat.n(),
         k: grouping.k(),
-        s_t,
+        s_t: stat.s_t(),
         elapsed_secs: t0.elapsed().as_secs_f64(),
+        method: method.name().to_string(),
         backend: caps.name,
-        kernel: caps.kernel,
+        // PERMANOVA jobs record the backend's f32 formulation (pairwise
+        // reaches here as per-pair Permanova jobs); the generic methods
+        // record their statistic kernel, which is the same on every
+        // backend (and bit-identical — the conformance contract).
+        kernel: match method {
+            Method::Permanova => caps.kernel,
+            _ => stat.kernel_label().to_string(),
+        },
         // Record the width actually used: the engine clamps the block to
         // the permutation count (see sw_plan_range_blocked).
         perm_block: caps.perm_block.map(|b| b.min(total)).unwrap_or(0),
@@ -240,7 +342,8 @@ pub fn execute(cfg: &RunConfig, mat: &DistanceMatrix, grouping: &Grouping) -> Re
             simulated_secs: batch.modelled_secs.unwrap_or(0.0),
         }],
         f_perms,
-    })
+    };
+    Ok((report, group_dispersions))
 }
 
 #[cfg(test)]
@@ -340,6 +443,61 @@ mod tests {
         assert_eq!(r.p_value, direct.p_value);
         for (a, b) in r.f_perms.iter().zip(direct.f_perms.as_ref().unwrap()) {
             assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn execute_routes_every_method() {
+        let (mat, grouping) = fixture(36, 3);
+        let mut c = cfg("native-flat");
+        c.n_perms = 49;
+        for method in Method::ALL {
+            c.method = method;
+            let r = execute(&c, &mat, &grouping).unwrap();
+            assert_eq!(r.method, method, "report is method-tagged");
+            assert_eq!((r.n, r.k), (36, 3));
+            assert!(r.p_value > 0.0 && r.p_value <= 1.0, "{method:?}: p = {}", r.p_value);
+            match method {
+                Method::Permanova => {
+                    assert_eq!(r.runs.len(), 1);
+                    assert_eq!(r.primary().method, "permanova");
+                }
+                Method::Anosim => {
+                    assert!((-1.0..=1.0).contains(&r.f_obs), "R = {}", r.f_obs);
+                    assert_eq!(r.primary().kernel, "rank-r");
+                    assert_eq!(r.s_t, 0.0, "rank statistic has no s_T");
+                }
+                Method::Permdisp => {
+                    assert_eq!(r.group_dispersions.len(), 3);
+                    assert_eq!(r.primary().kernel, "centroid-anova");
+                }
+                Method::PairwisePermanova => {
+                    assert_eq!(r.runs.len(), 3, "3 groups -> 3 pairs");
+                    assert_eq!(r.pairs.len(), 3);
+                    for (pair, run) in r.pairs.iter().zip(&r.runs) {
+                        assert_eq!(run.method, "permanova", "per-pair jobs are PERMANOVA");
+                        assert!(pair.p_adjusted >= run.p_value);
+                        assert!(pair.p_adjusted <= 1.0);
+                        assert_eq!(pair.n, 24, "two balanced groups of 12");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_jobs_draw_independent_seed_streams() {
+        let (mat, grouping) = fixture(36, 3);
+        let mut c = cfg("native-brute");
+        c.method = Method::PairwisePermanova;
+        let r = execute(&c, &mat, &grouping).unwrap();
+        // Distinct pairs must not share a permutation stream.
+        assert_ne!(r.runs[0].f_perms, r.runs[1].f_perms);
+        // ... and the whole fan-out is seed-reproducible.
+        let again = execute(&c, &mat, &grouping).unwrap();
+        for (x, y) in r.runs.iter().zip(&again.runs) {
+            assert_eq!(x.f_perms, y.f_perms);
+            assert_eq!(x.p_value, y.p_value);
         }
     }
 

@@ -1,5 +1,10 @@
 //! Native CPU backend: the paper's kernel formulations on this host's
 //! cores, scheduled by the shared shard scheduler.
+//!
+//! PERMANOVA batches run the backend's f32 formulation (`sw_one` with this
+//! instance's [`SwAlgorithm`]); every other method delegates to the
+//! generic f64 [`eval_plan_range`] loop through the same scheduler, so
+//! shard / worker / SMT knobs behave identically across methods.
 
 use std::time::Instant;
 
@@ -7,7 +12,9 @@ use super::shard::run_sharded_with;
 use super::{Backend, BatchPlan, BatchResult, Caps};
 use crate::config::RunConfig;
 use crate::error::Result;
-use crate::permanova::{fstat_from_sw, sw_one, SwAlgorithm, DEFAULT_TILE};
+use crate::permanova::{
+    eval_plan_range, fstat_from_sw, sw_one, StatKernel, SwAlgorithm, DEFAULT_TILE,
+};
 
 /// Native Rust kernels (brute / tiled / flat) on host threads.
 pub struct NativeBackend {
@@ -37,26 +44,39 @@ impl Backend for NativeBackend {
         let t0 = Instant::now();
         let n = plan.mat.n();
         let k = plan.grouping.k();
-        let algo = self.algo;
-        let mut s_w = vec![0.0f32; plan.rows];
-        run_sharded_with(
-            &plan.shard,
-            &mut s_w,
-            || vec![0u32; n], // per-worker scratch label row
-            |row, start, slice| {
-                for (i, out) in slice.iter_mut().enumerate() {
-                    plan.perms.fill(plan.start + start + i, row);
-                    *out = sw_one(algo, plan.mat.data(), n, row, plan.grouping.inv_sizes());
-                }
-            },
-        );
-        let f_stats = s_w
-            .iter()
-            .map(|&sw| fstat_from_sw(sw as f64, plan.s_t, n, k))
-            .collect();
+        let stats = match plan.stat {
+            // PERMANOVA: this backend's f32 kernel formulation.
+            StatKernel::Permanova(pk) => {
+                let algo = self.algo;
+                let mut s_w = vec![0.0f32; plan.rows];
+                run_sharded_with(
+                    &plan.shard,
+                    &mut s_w,
+                    || vec![0u32; n], // per-worker scratch label row
+                    |row, start, slice| {
+                        for (i, out) in slice.iter_mut().enumerate() {
+                            plan.perms.fill(plan.start + start + i, row);
+                            *out =
+                                sw_one(algo, plan.mat.data(), n, row, plan.grouping.inv_sizes());
+                        }
+                    },
+                );
+                s_w.iter().map(|&sw| fstat_from_sw(sw as f64, pk.s_t, n, k)).collect()
+            }
+            // ANOSIM / PERMDISP: the generic f64 loop, same scheduler.
+            stat => eval_plan_range(
+                stat,
+                plan.mat,
+                plan.grouping,
+                plan.perms,
+                plan.start,
+                plan.rows,
+                &plan.shard,
+            ),
+        };
         Ok(BatchResult {
             start: plan.start,
-            f_stats,
+            stats,
             elapsed_secs: t0.elapsed().as_secs_f64(),
             modelled_secs: None,
             backend: self.name.clone(),
@@ -104,7 +124,7 @@ mod tests {
     use super::*;
     use crate::backend::ShardSpec;
     use crate::dmat::DistanceMatrix;
-    use crate::permanova::{st_of, sw_brute_f64, Grouping};
+    use crate::permanova::{anosim, st_of, sw_brute_f64, Grouping, Method};
     use crate::rng::PermutationPlan;
 
     fn plan_fixture(
@@ -122,32 +142,57 @@ mod tests {
     fn batch_matches_f64_oracle() {
         let (mat, grouping, perms) = plan_fixture(48, 4, 20);
         let s_t = st_of(&mat);
+        let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
         let plan = BatchPlan {
             mat: &mat,
             grouping: &grouping,
             perms: &perms,
             start: 0,
             rows: 20,
-            s_t,
+            stat: &stat,
             shard: ShardSpec::with_workers(3),
         };
         let b = NativeBackend::new(SwAlgorithm::Flat);
         let r = b.run_batch(&plan).unwrap();
-        assert_eq!(r.f_stats.len(), 20);
+        assert_eq!(r.stats.len(), 20);
         let mut row = vec![0u32; 48];
         for i in 0..20 {
             perms.fill(i, &mut row);
             let sw = sw_brute_f64(mat.data(), 48, &row, grouping.inv_sizes());
             let want = fstat_from_sw(sw, s_t, 48, 4);
-            let rel = (r.f_stats[i] - want).abs() / want.abs().max(1e-12);
-            assert!(rel < 5e-4, "row {i}: {} vs {want}", r.f_stats[i]);
+            let rel = (r.stats[i] - want).abs() / want.abs().max(1e-12);
+            assert!(rel < 5e-4, "row {i}: {} vs {want}", r.stats[i]);
+        }
+    }
+
+    #[test]
+    fn anosim_batch_matches_the_oracle_wrapper() {
+        // The generic method path: run_batch with an ANOSIM kernel must
+        // reproduce the legacy wrapper's statistics exactly (same f64 ops).
+        let (mat, grouping, perms) = plan_fixture(30, 3, 20);
+        let stat = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
+        let plan = BatchPlan {
+            mat: &mat,
+            grouping: &grouping,
+            perms: &perms,
+            start: 0,
+            rows: 20,
+            stat: &stat,
+            shard: ShardSpec::with_workers(3),
+        };
+        let r = NativeBackend::new(SwAlgorithm::Tiled { tile: 64 }).run_batch(&plan).unwrap();
+        assert_eq!(r.stats.len(), 20);
+        let legacy = anosim(&mat, &grouping, 19, 11).unwrap();
+        assert_eq!(r.stats[0], legacy.r_obs, "index 0 is the observed labelling");
+        for (i, s) in r.stats.iter().enumerate() {
+            assert!((-1.0..=1.0).contains(s), "perm {i}: R = {s}");
         }
     }
 
     #[test]
     fn sub_range_batches_line_up() {
         let (mat, grouping, perms) = plan_fixture(32, 4, 30);
-        let s_t = st_of(&mat);
+        let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
         let b = NativeBackend::new(SwAlgorithm::Brute);
         let mk = |start: usize, rows: usize| BatchPlan {
             mat: &mat,
@@ -155,14 +200,14 @@ mod tests {
             perms: &perms,
             start,
             rows,
-            s_t,
+            stat: &stat,
             shard: ShardSpec::with_workers(2),
         };
         let full = b.run_batch(&mk(0, 30)).unwrap();
         let head = b.run_batch(&mk(0, 11)).unwrap();
         let tail = b.run_batch(&mk(11, 19)).unwrap();
-        assert_eq!(&full.f_stats[..11], &head.f_stats[..]);
-        assert_eq!(&full.f_stats[11..], &tail.f_stats[..]);
+        assert_eq!(&full.stats[..11], &head.stats[..]);
+        assert_eq!(&full.stats[11..], &tail.stats[..]);
     }
 
     #[test]

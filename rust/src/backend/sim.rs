@@ -1,5 +1,14 @@
 //! Simulator backend: exact numerics natively, modelled MI300A wall-clock
 //! alongside — the hardware-substitution substrate as a [`Backend`].
+//!
+//! Method routing: PERMANOVA numerics use the fast flat kernel (bitwise
+//! identical to `native-flat`); ANOSIM and PERMDISP use the generic f64
+//! loop (bitwise identical to every other backend's generic path).  The
+//! MI300A time model is calibrated for the paper's f32 d² stream, so only
+//! PERMANOVA batches report modelled time — ANOSIM streams f64 ranks
+//! (double the bytes per element) and PERMDISP's per-permutation loop is
+//! O(n); pricing either with the f32-kernel model would be fiction, so
+//! their batches report none.
 
 use std::time::Instant;
 
@@ -7,7 +16,7 @@ use super::shard::run_sharded_with;
 use super::{Backend, BatchPlan, BatchResult, Caps};
 use crate::config::RunConfig;
 use crate::error::Result;
-use crate::permanova::{fstat_from_sw, sw_one, SwAlgorithm};
+use crate::permanova::{eval_plan_range, fstat_from_sw, sw_one, StatKernel, SwAlgorithm};
 use crate::simulator::{predict, DeviceConfig, Mi300a, Workload};
 
 /// The calibrated MI300A model as an execution backend.
@@ -35,31 +44,54 @@ impl Backend for SimulatorBackend {
         let t0 = Instant::now();
         let n = plan.mat.n();
         let k = plan.grouping.k();
-        let mut s_w = vec![0.0f32; plan.rows];
-        run_sharded_with(
-            &plan.shard,
-            &mut s_w,
-            || vec![0u32; n],
-            |row, start, slice| {
-                let inv = plan.grouping.inv_sizes();
-                for (i, out) in slice.iter_mut().enumerate() {
-                    plan.perms.fill(plan.start + start + i, row);
-                    *out = sw_one(SwAlgorithm::Flat, plan.mat.data(), n, row, inv);
-                }
-            },
-        );
-        let f_stats = s_w
-            .iter()
-            .map(|&sw| fstat_from_sw(sw as f64, plan.s_t, n, k))
-            .collect();
-        let w = Workload { n_dims: n, n_perms: plan.rows, n_groups: k };
-        let pred = predict(&self.machine, &w, self.algo, self.device);
+        let stats: Vec<f64> = match plan.stat {
+            StatKernel::Permanova(pk) => {
+                let mut s_w = vec![0.0f32; plan.rows];
+                run_sharded_with(
+                    &plan.shard,
+                    &mut s_w,
+                    || vec![0u32; n],
+                    |row, start, slice| {
+                        let inv = plan.grouping.inv_sizes();
+                        for (i, out) in slice.iter_mut().enumerate() {
+                            plan.perms.fill(plan.start + start + i, row);
+                            *out = sw_one(SwAlgorithm::Flat, plan.mat.data(), n, row, inv);
+                        }
+                    },
+                );
+                s_w.iter().map(|&sw| fstat_from_sw(sw as f64, pk.s_t, n, k)).collect()
+            }
+            stat => eval_plan_range(
+                stat,
+                plan.mat,
+                plan.grouping,
+                plan.perms,
+                plan.start,
+                plan.rows,
+                &plan.shard,
+            ),
+        };
+        // Only PERMANOVA is inside the calibrated model's regime (the f32
+        // d² stream the paper measured); see the module docs.
+        let modelled_secs = match plan.stat {
+            StatKernel::Permanova(_) => {
+                let w = Workload { n_dims: n, n_perms: plan.rows, n_groups: k };
+                Some(predict(&self.machine, &w, self.algo, self.device).seconds)
+            }
+            _ => None,
+        };
+        // The device tag names what actually ran: the priced algorithm for
+        // PERMANOVA, the generic statistic kernel otherwise.
+        let evaluated = match plan.stat {
+            StatKernel::Permanova(_) => self.algo.name(),
+            stat => stat.kernel_label().to_string(),
+        };
         Ok(BatchResult {
             start: plan.start,
-            f_stats,
+            stats,
             elapsed_secs: t0.elapsed().as_secs_f64(),
-            modelled_secs: Some(pred.seconds),
-            backend: format!("sim-mi300a/{}/{}", self.device.name(), self.algo.name()),
+            modelled_secs,
+            backend: format!("sim-mi300a/{}/{evaluated}", self.device.name()),
         })
     }
 
@@ -100,7 +132,7 @@ mod tests {
     use super::*;
     use crate::backend::{BatchPlan, NativeBackend, ShardSpec};
     use crate::dmat::DistanceMatrix;
-    use crate::permanova::{st_of, Grouping};
+    use crate::permanova::{Grouping, Method};
     use crate::rng::PermutationPlan;
 
     #[test]
@@ -108,14 +140,14 @@ mod tests {
         let mat = DistanceMatrix::random_euclidean(32, 4, 7);
         let grouping = Grouping::balanced(32, 4).unwrap();
         let perms = PermutationPlan::new(grouping.labels().to_vec(), 5, 12);
-        let s_t = st_of(&mat);
+        let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
         let plan = BatchPlan {
             mat: &mat,
             grouping: &grouping,
             perms: &perms,
             start: 0,
             rows: 12,
-            s_t,
+            stat: &stat,
             shard: ShardSpec::with_workers(2),
         };
         let sim = SimulatorBackend::new(
@@ -128,10 +160,43 @@ mod tests {
         let rs = sim.run_batch(&plan).unwrap();
         let rn = native.run_batch(&plan).unwrap();
         // Identical kernel + identical plan => bitwise-identical statistics.
-        assert_eq!(rs.f_stats, rn.f_stats);
+        assert_eq!(rs.stats, rn.stats);
         assert!(rs.modelled_secs.unwrap() > 0.0);
         assert!(rn.modelled_secs.is_none());
         assert!(sim.capabilities().modelled_time);
+    }
+
+    #[test]
+    fn method_routing_models_only_the_calibrated_regime() {
+        let mat = DistanceMatrix::random_euclidean(30, 4, 9);
+        let grouping = Grouping::balanced(30, 3).unwrap();
+        let perms = PermutationPlan::new(grouping.labels().to_vec(), 5, 10);
+        let sim = SimulatorBackend::new(
+            Mi300a::default(),
+            SwAlgorithm::Brute,
+            DeviceConfig::Cpu { smt: true },
+            "simulator",
+        );
+        let native = NativeBackend::new(SwAlgorithm::Flat);
+        for (method, modelled) in
+            [(Method::Anosim, false), (Method::Permdisp, false), (Method::Permanova, true)]
+        {
+            let stat = StatKernel::prepare(method, &mat, &grouping).unwrap();
+            let plan =
+                BatchPlan::full(&mat, &grouping, &perms, &stat, ShardSpec::with_workers(2));
+            let rs = sim.run_batch(&plan).unwrap();
+            let rn = native.run_batch(&plan).unwrap();
+            assert_eq!(rs.stats, rn.stats, "{method:?}: simulator numerics are exact");
+            assert_eq!(
+                rs.modelled_secs.is_some(),
+                modelled,
+                "{method:?}: modelled time only inside the f32-calibrated regime"
+            );
+            // Provenance names the statistic actually evaluated.
+            if method == Method::Anosim {
+                assert!(rs.backend.ends_with("/rank-r"), "{}", rs.backend);
+            }
+        }
     }
 
     #[test]
@@ -144,7 +209,8 @@ mod tests {
         let mat = DistanceMatrix::random_euclidean(24, 2, 1);
         let grouping = Grouping::balanced(24, 2).unwrap();
         let perms = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
-        let plan = BatchPlan::full(&mat, &grouping, &perms, st_of(&mat), cfg.shard_spec());
+        let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
+        let plan = BatchPlan::full(&mat, &grouping, &perms, &stat, cfg.shard_spec());
         let brute = mk(SwAlgorithm::Brute).run_batch(&plan).unwrap();
         let tiled = mk(SwAlgorithm::Tiled { tile: 512 }).run_batch(&plan).unwrap();
         assert!(tiled.modelled_secs.unwrap() > brute.modelled_secs.unwrap());

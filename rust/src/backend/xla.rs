@@ -6,12 +6,19 @@
 //! Construction fails cleanly when the artifacts are missing or the crate
 //! was built without the `pjrt` feature — callers see one typed error, not
 //! a panic.
+//!
+//! Method routing: the AOT artifacts lower only the PERMANOVA s_W graph,
+//! so PERMANOVA batches run on the device while ANOSIM / PERMDISP batches
+//! evaluate host-side through the generic [`eval_plan_range`] loop (same
+//! shard scheduler, same bit-exact statistics as every other backend's
+//! generic path) — one backend name, every method served.
 
 use std::time::Instant;
 
 use super::{Backend, BatchPlan, BatchResult, Caps};
 use crate::config::RunConfig;
 use crate::error::{Error, Result};
+use crate::permanova::{eval_plan_range, StatKernel};
 use crate::runtime::XlaRuntime;
 
 /// AOT-compiled XLA kernels via PJRT.
@@ -33,10 +40,32 @@ impl Backend for XlaBackend {
     fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult> {
         let t0 = Instant::now();
         let n = plan.mat.n();
+
+        // Only the PERMANOVA s_W graph is lowered to artifacts; the other
+        // methods evaluate host-side through the generic scheduler loop.
+        if !matches!(plan.stat, StatKernel::Permanova(_)) {
+            let stats = eval_plan_range(
+                plan.stat,
+                plan.mat,
+                plan.grouping,
+                plan.perms,
+                plan.start,
+                plan.rows,
+                &plan.shard,
+            );
+            return Ok(BatchResult {
+                start: plan.start,
+                stats,
+                elapsed_secs: t0.elapsed().as_secs_f64(),
+                modelled_secs: None,
+                backend: format!("xla/{}+host", plan.stat.kernel_label()),
+            });
+        }
+
         let session = self.runtime.session(&self.kernel, plan.mat.data(), n, plan.grouping)?;
         let cap = session.batch_capacity().max(1);
 
-        let mut f_stats = Vec::with_capacity(plan.rows);
+        let mut stats = Vec::with_capacity(plan.rows);
         let mut start = plan.start;
         let end = plan.start + plan.rows;
         while start < end {
@@ -49,12 +78,12 @@ impl Backend for XlaBackend {
                     out.f_stats.len()
                 )));
             }
-            f_stats.extend(out.f_stats);
+            stats.extend(out.f_stats);
             start += rows;
         }
         Ok(BatchResult {
             start: plan.start,
-            f_stats,
+            stats,
             elapsed_secs: t0.elapsed().as_secs_f64(),
             modelled_secs: None,
             backend: format!("xla/{}", self.kernel),
@@ -89,7 +118,7 @@ mod tests {
     use super::*;
     use crate::backend::ShardSpec;
     use crate::dmat::DistanceMatrix;
-    use crate::permanova::{fstat_from_sw, st_of, sw_brute_f64, Grouping};
+    use crate::permanova::{fstat_from_sw, st_of, sw_brute_f64, Grouping, Method};
     use crate::rng::PermutationPlan;
 
     #[test]
@@ -120,16 +149,45 @@ mod tests {
         let grouping = Grouping::balanced(n, 4).unwrap();
         let perms = PermutationPlan::new(grouping.labels().to_vec(), 3, 40);
         let s_t = st_of(&mat);
-        let plan = BatchPlan::full(&mat, &grouping, &perms, s_t, ShardSpec::default());
+        let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
+        let plan = BatchPlan::full(&mat, &grouping, &perms, &stat, ShardSpec::default());
         let r = backend.run_batch(&plan).unwrap();
-        assert_eq!(r.f_stats.len(), 40);
+        assert_eq!(r.stats.len(), 40);
         let mut row = vec![0u32; n];
         for i in 0..40 {
             perms.fill(i, &mut row);
             let sw = sw_brute_f64(mat.data(), n, &row, grouping.inv_sizes());
             let want = fstat_from_sw(sw, s_t, n, 4);
-            let rel = (r.f_stats[i] - want).abs() / want.abs().max(1e-9);
-            assert!(rel < 2e-3, "row {i}: {} vs {want}", r.f_stats[i]);
+            let rel = (r.stats[i] - want).abs() / want.abs().max(1e-9);
+            assert!(rel < 2e-3, "row {i}: {} vs {want}", r.stats[i]);
         }
+    }
+
+    /// The host-fallback methods need no artifacts to *evaluate*, but the
+    /// backend still refuses to open without them — one construction
+    /// contract for every method.  With artifacts present, ANOSIM batches
+    /// must match the generic path bit-for-bit.
+    #[test]
+    fn xla_backend_serves_anosim_host_side_if_available() {
+        let dir = crate::runtime::artifacts_dir_for_tests();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skip: no artifacts at {dir:?}");
+            return;
+        }
+        let Ok(backend) = XlaBackend::new(dir.to_str().unwrap(), "matmul") else {
+            eprintln!("skip: PJRT runtime unavailable in this build");
+            return;
+        };
+        let n = 64;
+        let mat = DistanceMatrix::random_euclidean(n, 8, 2);
+        let grouping = Grouping::balanced(n, 4).unwrap();
+        let perms = PermutationPlan::new(grouping.labels().to_vec(), 3, 20);
+        let stat = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
+        let plan = BatchPlan::full(&mat, &grouping, &perms, &stat, ShardSpec::default());
+        let r = backend.run_batch(&plan).unwrap();
+        let want =
+            eval_plan_range(&stat, &mat, &grouping, &perms, 0, 20, &ShardSpec::default());
+        assert_eq!(r.stats, want);
+        assert!(r.backend.contains("+host"), "{}", r.backend);
     }
 }

@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 use crate::config::{DataSource, RunConfig};
 use crate::error::{Error, Result};
 use crate::jsonio::Json;
+use crate::permanova::Method;
 use crate::report::Table;
 
 /// Benchmark configuration.
@@ -173,14 +174,19 @@ pub fn speedup(a: &Measurement, b: &Measurement) -> f64 {
 // ---------------------------------------------------------------------------
 
 /// Schema identifier stamped into (and required from) `BENCH_PERMANOVA.json`.
-pub const BENCH_SCHEMA: &str = "bench-permanova/v1";
+/// v2 added the per-cell `method` field (the statistic axis of the sweep).
+pub const BENCH_SCHEMA: &str = "bench-permanova/v2";
 
-/// The grid a benchmark sweep covers: backends × n × permutation counts,
-/// plus the scheduling knobs shared by every cell.
+/// The grid a benchmark sweep covers: backends × methods × n ×
+/// permutation counts, plus the scheduling knobs shared by every cell.
 #[derive(Clone, Debug)]
 pub struct SweepGrid {
     /// Registry names to benchmark (validated against the registry).
     pub backends: Vec<String>,
+    /// Methods to benchmark (`--methods permanova,anosim`); the default
+    /// sweep pins PERMANOVA so the standing performance record keeps one
+    /// statistic per cell family.
+    pub methods: Vec<Method>,
     /// Matrix sizes (synthetic Euclidean data, one dataset per n).
     pub n_grid: Vec<usize>,
     /// Permutation counts.
@@ -203,6 +209,7 @@ impl Default for SweepGrid {
     fn default() -> Self {
         SweepGrid {
             backends: default_bench_backends(),
+            methods: vec![Method::Permanova],
             n_grid: vec![128, 256],
             perm_grid: vec![499],
             n_groups: 8,
@@ -273,13 +280,18 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
             return Err(Error::UnknownBackend { name: b.clone(), known: registry.names() });
         }
     }
+    if grid.methods.is_empty() {
+        return Err(Error::Config("bench: empty method list".into()));
+    }
     if grid.n_grid.is_empty() || grid.perm_grid.is_empty() {
         return Err(Error::Config("bench: empty n / n_perms grid".into()));
     }
 
     let mut entries = Vec::new();
-    let cols =
-        ["backend", "kernel", "n", "perms", "block", "median", "best", "perms/s", "modelled"];
+    let cols = [
+        "backend", "method", "kernel", "n", "perms", "block", "median", "best", "perms/s",
+        "modelled",
+    ];
     let mut table = Table::new(&cols);
     for &n in &grid.n_grid {
         let mut cell = grid.base.clone();
@@ -287,67 +299,86 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
         let (mat, grouping) = crate::coordinator::load_data(&cell)?;
         for &n_perms in &grid.perm_grid {
             for backend in &grid.backends {
-                let mut cfg = cell.clone();
-                cfg.backend = backend.clone();
-                cfg.n_perms = n_perms;
-                cfg.validate()?;
-                // Pre-flight once so a misconfigured cell fails with a
-                // typed error instead of a panic inside the timing loop;
-                // this run is also the cell's warmup (grid warmup is 0)
-                // and the source of kernel/block/statistics provenance.
-                let report = crate::backend::execute(&cfg, &mat, &grouping)?;
-                let mut bencher = grid.bencher.clone();
-                let m = bencher.run(&format!("{backend}/n{n}/p{n_perms}"), || {
-                    crate::backend::execute(&cfg, &mat, &grouping)
-                        .expect("pre-flighted bench cell failed")
-                });
-                let total_perms = (n_perms + 1) as f64; // index 0 = observed
-                let perms_per_sec = total_perms / m.median;
-                // Simulated backends model MI300A wall-clock alongside the
-                // exact numerics; 0.0 for real substrates.
-                let modelled_secs: f64 =
-                    report.per_device.iter().map(|d| d.simulated_secs).sum();
-                table.row(&[
-                    backend.clone(),
-                    report.kernel.clone(),
-                    n.to_string(),
-                    n_perms.to_string(),
-                    if report.perm_block > 0 {
-                        report.perm_block.to_string()
-                    } else {
-                        "-".to_string()
-                    },
-                    format_secs(m.median),
-                    format_secs(m.best),
-                    format!("{perms_per_sec:.0}"),
-                    if modelled_secs > 0.0 {
-                        format_secs(modelled_secs)
-                    } else {
-                        "-".to_string()
-                    },
-                ]);
-                entries.push(Json::obj(vec![
-                    ("backend", Json::str(backend.clone())),
-                    ("kernel", Json::str(report.kernel.clone())),
-                    ("n", Json::num(n as f64)),
-                    ("k", Json::num(grid.n_groups as f64)),
-                    ("n_perms", Json::num(n_perms as f64)),
-                    ("perm_block", Json::num(report.perm_block as f64)),
-                    ("threads", Json::num(cfg.threads as f64)),
-                    ("shard_size", Json::num(cfg.shard_size as f64)),
-                    ("smt_oversubscribe", Json::Bool(cfg.smt_oversubscribe)),
-                    // String, not number: JSON numbers are f64 here and
-                    // would silently round seeds above 2^53.
-                    ("seed", Json::str(cfg.seed.to_string())),
-                    ("reps", Json::num(m.times.len() as f64)),
-                    ("best_secs", Json::num(m.best)),
-                    ("median_secs", Json::num(m.median)),
-                    ("mad_secs", Json::num(m.mad)),
-                    ("perms_per_sec", Json::num(perms_per_sec)),
-                    ("modelled_secs", Json::num(modelled_secs)),
-                    ("f_obs", Json::num(report.f_obs)),
-                    ("p_value", Json::num(report.p_value)),
-                ]));
+                for &method in &grid.methods {
+                    let mut cfg = cell.clone();
+                    cfg.backend = backend.clone();
+                    cfg.n_perms = n_perms;
+                    cfg.method = method;
+                    cfg.validate()?;
+                    // Pre-flight once so a misconfigured cell fails with a
+                    // typed error instead of a panic inside the timing
+                    // loop; this run is also the cell's warmup (grid
+                    // warmup is 0) and the source of method/kernel/block
+                    // provenance.
+                    let report = crate::backend::execute(&cfg, &mat, &grouping)?;
+                    let mut bencher = grid.bencher.clone();
+                    let m = bencher
+                        .run(&format!("{backend}/{}/n{n}/p{n_perms}", method.name()), || {
+                            crate::backend::execute(&cfg, &mat, &grouping)
+                                .expect("pre-flighted bench cell failed")
+                        });
+                    // Pairwise fans out one job per group pair; count the
+                    // permutations actually evaluated, not the knob.
+                    let total_perms = report.total_perms() as f64;
+                    let perms_per_sec = total_perms / m.median;
+                    // Simulated backends model MI300A wall-clock alongside
+                    // the exact numerics; 0.0 for real substrates.
+                    let modelled_secs: f64 = report
+                        .runs
+                        .iter()
+                        .flat_map(|r| r.per_device.iter())
+                        .map(|d| d.simulated_secs)
+                        .sum();
+                    table.row(&[
+                        backend.clone(),
+                        method.name().to_string(),
+                        report.kernel.clone(),
+                        n.to_string(),
+                        n_perms.to_string(),
+                        if report.perm_block > 0 {
+                            report.perm_block.to_string()
+                        } else {
+                            "-".to_string()
+                        },
+                        format_secs(m.median),
+                        format_secs(m.best),
+                        format!("{perms_per_sec:.0}"),
+                        if modelled_secs > 0.0 {
+                            format_secs(modelled_secs)
+                        } else {
+                            "-".to_string()
+                        },
+                    ]);
+                    entries.push(Json::obj(vec![
+                        ("backend", Json::str(backend.clone())),
+                        // The effective method axis of the cell (v2 field).
+                        ("method", Json::str(method.name())),
+                        ("kernel", Json::str(report.kernel.clone())),
+                        ("n", Json::num(n as f64)),
+                        ("k", Json::num(grid.n_groups as f64)),
+                        ("n_perms", Json::num(n_perms as f64)),
+                        ("perm_block", Json::num(report.perm_block as f64)),
+                        ("threads", Json::num(cfg.threads as f64)),
+                        ("shard_size", Json::num(cfg.shard_size as f64)),
+                        ("smt_oversubscribe", Json::Bool(cfg.smt_oversubscribe)),
+                        // String, not number: JSON numbers are f64 here and
+                        // would silently round seeds above 2^53.
+                        ("seed", Json::str(cfg.seed.to_string())),
+                        ("reps", Json::num(m.times.len() as f64)),
+                        ("best_secs", Json::num(m.best)),
+                        ("median_secs", Json::num(m.median)),
+                        ("mad_secs", Json::num(m.mad)),
+                        ("perms_per_sec", Json::num(perms_per_sec)),
+                        ("modelled_secs", Json::num(modelled_secs)),
+                        // Scheduled jobs in the cell (1, except pairwise =
+                        // one per group pair).  f_obs/p_value below are the
+                        // *primary* job's statistics — for pairwise that is
+                        // the (0, 1) pair, and timings cover all jobs.
+                        ("jobs", Json::num(report.runs.len() as f64)),
+                        ("f_obs", Json::num(report.f_obs)),
+                        ("p_value", Json::num(report.p_value)),
+                    ]));
+                }
             }
         }
     }
@@ -368,9 +399,10 @@ fn bench_field_err(ctx: &str, msg: impl Into<String>) -> Error {
 }
 
 /// Validate a `BENCH_PERMANOVA.json` document against [`BENCH_SCHEMA`]:
-/// required fields, known backend names, finite/positive timings, p-values
-/// in `(0, 1]`.  Returns the entry count.  This is what CI's bench smoke
-/// job runs (`bench --check`), so a malformed artifact fails the build.
+/// required fields, known backend and method names, finite/positive
+/// timings, p-values in `(0, 1]`.  Returns the entry count.  This is what
+/// CI's bench smoke job runs (`bench --check`), so a malformed artifact
+/// fails the build.
 pub fn validate_bench_json(doc: &Json) -> Result<usize> {
     let schema = doc.req_str("schema")?;
     if schema != BENCH_SCHEMA {
@@ -397,6 +429,12 @@ pub fn validate_bench_json(doc: &Json) -> Result<usize> {
         if !registry.contains(backend) {
             return Err(bench_field_err(&ctx, format!("unknown backend {backend:?}")));
         }
+        let method = e
+            .req_str("method")
+            .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if Method::parse(method).is_none() {
+            return Err(bench_field_err(&ctx, format!("unknown method {method:?}")));
+        }
         e.req_str("kernel")?;
         if e.req_usize("n")? == 0 || e.req_usize("n_perms")? == 0 {
             return Err(bench_field_err(&ctx, "n and n_perms must be >= 1"));
@@ -416,6 +454,12 @@ pub fn validate_bench_json(doc: &Json) -> Result<usize> {
             .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
         if reps == 0 {
             return Err(bench_field_err(&ctx, "reps must be >= 1"));
+        }
+        let jobs = e
+            .req_usize("jobs")
+            .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if jobs == 0 {
+            return Err(bench_field_err(&ctx, "jobs must be >= 1"));
         }
         if !matches!(e.get("smt_oversubscribe"), Some(Json::Bool(_))) {
             return Err(bench_field_err(&ctx, "smt_oversubscribe missing/not a boolean"));
@@ -570,6 +614,49 @@ mod tests {
     }
 
     #[test]
+    fn sweep_covers_the_method_axis() {
+        let mut g = tiny_grid();
+        g.methods = vec![Method::Permanova, Method::Anosim, Method::Permdisp];
+        let out = run_sweep(&g).unwrap();
+        assert_eq!(out.entries, 6, "2 backends x 3 methods");
+        assert_eq!(validate_bench_json(&out.json).unwrap(), 6);
+        for e in out.json.req_arr("entries").unwrap() {
+            assert_eq!(e.req_usize("jobs").unwrap(), 1, "single-job methods");
+        }
+        let entries = out.json.req_arr("entries").unwrap();
+        let kernel_of = |method: &str, backend: &str| {
+            entries
+                .iter()
+                .find(|e| {
+                    e.req_str("method").unwrap() == method
+                        && e.req_str("backend").unwrap() == backend
+                })
+                .unwrap()
+                .req_str("kernel")
+                .unwrap()
+                .to_string()
+        };
+        // The method axis is recorded with the kernel actually evaluated.
+        assert_eq!(kernel_of("permanova", "native-brute"), "brute");
+        assert_eq!(kernel_of("permanova", "native-batch"), "brute-block");
+        assert_eq!(kernel_of("anosim", "native-batch"), "rank-r");
+        assert_eq!(kernel_of("permdisp", "native-brute"), "centroid-anova");
+    }
+
+    #[test]
+    fn pairwise_cells_record_their_job_fanout() {
+        let mut g = tiny_grid();
+        g.backends = vec!["native-brute".into()];
+        g.methods = vec![Method::PairwisePermanova];
+        g.n_groups = 3;
+        let out = run_sweep(&g).unwrap();
+        assert_eq!(validate_bench_json(&out.json).unwrap(), 1);
+        let e = &out.json.req_arr("entries").unwrap()[0];
+        assert_eq!(e.req_str("method").unwrap(), "pairwise");
+        assert_eq!(e.req_usize("jobs").unwrap(), 3, "3 groups -> 3 pair jobs");
+    }
+
+    #[test]
     fn sweep_rejects_bad_grids() {
         let mut g = tiny_grid();
         g.backends = vec!["warp-drive".into()];
@@ -579,6 +666,9 @@ mod tests {
         assert!(run_sweep(&g).is_err());
         let mut g = tiny_grid();
         g.n_grid.clear();
+        assert!(run_sweep(&g).is_err());
+        let mut g = tiny_grid();
+        g.methods.clear();
         assert!(run_sweep(&g).is_err());
     }
 
@@ -617,6 +707,25 @@ mod tests {
             m.insert("entries".into(), Json::Arr(entries));
         }
         assert!(validate_bench_json(&bad).is_err());
+        // Entry with an unknown (or missing) method: v2 requires it.
+        for method in [Some("kruskal"), None] {
+            let mut bad = good.clone();
+            if let Json::Obj(m) = &mut bad {
+                let mut entries = m.get("entries").unwrap().as_arr().unwrap().to_vec();
+                if let Json::Obj(e) = &mut entries[0] {
+                    match method {
+                        Some(v) => {
+                            e.insert("method".into(), Json::str(v));
+                        }
+                        None => {
+                            e.remove("method");
+                        }
+                    }
+                }
+                m.insert("entries".into(), Json::Arr(entries));
+            }
+            assert!(validate_bench_json(&bad).is_err(), "{method:?}");
+        }
         // Not an object at all.
         assert!(validate_bench_json(&Json::Arr(vec![])).is_err());
     }

@@ -5,8 +5,12 @@
 //! whole surface is unit-testable without capturing stdout.
 //!
 //! Commands:
-//!   run              PERMANOVA on synthetic/file data (native/xla/simulated)
-//!   bench            sweep backends over n/perm grids -> BENCH_PERMANOVA.json
+//!   run              permutation test on synthetic/file data; --method
+//!                    selects permanova|anosim|permdisp|pairwise
+//!   bench            sweep backends × methods over n/perm grids ->
+//!                    BENCH_PERMANOVA.json
+//!   backends         list registered backends + capabilities
+//!                    (also reachable as `--list-backends`)
 //!   pipeline         E2E: synthetic community -> UniFrac -> PERMANOVA
 //!   fig1             regenerate the paper's Figure 1 (simulated MI300A)
 //!   stream           STREAM bandwidth: measured host + simulated MI300A (A2)
@@ -19,7 +23,7 @@ use std::collections::BTreeMap;
 use crate::config::{DataSource, RunConfig, TomlDoc};
 use crate::coordinator::run_config;
 use crate::error::{Error, Result};
-use crate::permanova::SwAlgorithm;
+use crate::permanova::{Method, SwAlgorithm};
 use crate::report::{bar_chart, Table};
 use crate::simulator::{
     fig1_rows, paper_a2_reference, render_fig1, simulate_stream, Mi300a, NodeTopology,
@@ -43,7 +47,7 @@ impl Args {
             .next()
             .cloned()
             .ok_or_else(|| Error::Config("no command (try `help`)".into()))?;
-        if command.starts_with("--") && command != "--help" {
+        if command.starts_with("--") && command != "--help" && command != "--list-backends" {
             return Err(Error::Config(format!(
                 "expected a command before flags, got {command:?}"
             )));
@@ -102,6 +106,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
     match args.command.as_str() {
         "run" => cmd_run(args),
         "bench" => cmd_bench(args),
+        "backends" | "--list-backends" => cmd_backends(args),
         "pipeline" => cmd_pipeline(args),
         "fig1" => cmd_fig1(args),
         "stream" => cmd_stream(args),
@@ -117,8 +122,9 @@ pub fn dispatch(args: &Args) -> Result<String> {
 pub fn usage() -> String {
     let mut s = String::from("permanova-apu — PERMANOVA on APU-class hardware\n\nCommands:\n");
     for (cmd, desc) in [
-        ("run", "PERMANOVA: --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --pairwise --json out.json --config file.toml | --pdm file --labels file"),
-        ("bench", "backend sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --out FILE; --check FILE validates an existing document"),
+        ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --json out.json --config file.toml | --pdm file --labels file; legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
+        ("bench", "backend x method sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --methods permanova,anosim --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --out FILE; --check FILE validates an existing document"),
+        ("backends", "list registered backends with their capabilities (alias: --list-backends)"),
         ("pipeline", "end-to-end: community -> UniFrac -> PERMANOVA: --taxa --samples --groups --n-perms --metric unweighted|weighted --anosim"),
         ("fig1", "regenerate Figure 1: --n-dims --n-perms (defaults: the paper's 25145/3999)"),
         ("stream", "STREAM bandwidth: --len --reps --threads; --simulate for the MI300A A2 tables"),
@@ -129,7 +135,61 @@ pub fn usage() -> String {
         s.push_str(&format!("  {cmd:<16} {desc}\n"));
     }
     s.push_str(&format!("\nBackends: {}\n", crate::backend::known_backends().join(", ")));
+    s.push_str(&format!(
+        "Methods:  {} (any method on any backend)\n",
+        Method::ALL.map(|m| m.name()).join(", ")
+    ));
     s
+}
+
+/// `backends` / `--list-backends`: one row per registry entry with its
+/// static capabilities, so users can discover valid `--backend` /
+/// `--method` combinations without reading the source.
+fn cmd_backends(args: &Args) -> Result<String> {
+    let registry = crate::backend::Registry::with_defaults();
+    let mut cfg = RunConfig::default();
+    if let Some(d) = args.str_flag("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    let mut t = Table::new(&["backend", "kernel", "block", "threaded", "modelled time", "status"]);
+    let mut notes = Vec::new();
+    for name in registry.names() {
+        match registry.create(&name, &cfg) {
+            Ok(b) => {
+                let caps = b.capabilities();
+                t.row(&[
+                    name.clone(),
+                    caps.kernel,
+                    caps.perm_block.map_or("-".to_string(), |b| b.to_string()),
+                    if caps.threaded { "yes" } else { "no" }.to_string(),
+                    if caps.modelled_time { "yes" } else { "no" }.to_string(),
+                    "ok".to_string(),
+                ]);
+            }
+            Err(e) => {
+                // Typically `xla` without artifacts/PJRT: list it anyway so
+                // the name stays discoverable, and say why it won't open.
+                t.row(&[
+                    name.clone(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "unavailable".to_string(),
+                ]);
+                notes.push(format!("  {name}: {e}"));
+            }
+        }
+    }
+    let mut out = t.render();
+    if !notes.is_empty() {
+        out.push_str(&format!("unavailable backends:\n{}\n", notes.join("\n")));
+    }
+    out.push_str(&format!(
+        "methods: {} — every method runs on every backend (--method NAME)\n",
+        Method::ALL.map(|m| m.name()).join(", ")
+    ));
+    Ok(out)
 }
 
 fn config_from_args(args: &Args) -> Result<RunConfig> {
@@ -162,6 +222,10 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
         cfg.algo = SwAlgorithm::parse(a)
             .ok_or_else(|| Error::Config(format!("unknown --algo {a:?}")))?;
     }
+    if let Some(m) = args.str_flag("method") {
+        cfg.method = Method::parse(m)
+            .ok_or_else(|| Error::Config(format!("unknown --method {m:?}")))?;
+    }
     if let Some(b) = args.str_flag("backend") {
         cfg.backend = b.to_string();
     }
@@ -182,7 +246,11 @@ fn cmd_run(args: &Args) -> Result<String> {
     // (`Caps::kernel`), so rendering needs no config-side label.
     let mut out = r.render();
 
-    // Post-hoc all-pairs tests (Bonferroni-adjusted).
+    // Legacy companion flags: append the *oracle-path* results (the
+    // standalone free functions, single-threaded, engine bypassed).  The
+    // engine-scheduled spelling of the same tests is `--method
+    // anosim|permdisp|pairwise`; the conformance suite pins that the two
+    // paths agree exactly, which is why both stay.
     if args.bool_flag("pairwise") {
         use crate::coordinator::load_data;
         use crate::permanova::{pairwise_permanova, PermanovaOpts};
@@ -287,6 +355,18 @@ fn cmd_bench(args: &Args) -> Result<String> {
             .map(|s| s.trim().to_string())
             .filter(|s| !s.is_empty())
             .collect();
+    }
+    // `--methods a,b` adds the method axis; `--method a` is the
+    // single-method convenience spelling.
+    if let Some(m) = args.str_flag("methods").or_else(|| args.str_flag("method")) {
+        grid.methods = m
+            .split(',')
+            .map(|s| s.trim())
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                Method::parse(s).ok_or_else(|| Error::Config(format!("unknown method {s:?}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
     }
     if let Some(v) = args.str_flag("n-dims") {
         grid.n_grid = parse_usize_csv("n-dims", v)?;
@@ -503,10 +583,12 @@ mod tests {
     fn version_and_help() {
         assert!(dispatch(&args(&["version"])).unwrap().contains(crate::VERSION));
         let help = dispatch(&args(&["help"])).unwrap();
-        for cmd in ["run", "bench", "fig1", "stream", "simulate", "artifacts-check"] {
+        for cmd in ["run", "bench", "backends", "fig1", "stream", "simulate", "artifacts-check"]
+        {
             assert!(help.contains(cmd));
         }
         assert!(help.contains("native-batch"), "registry names surface in help: {help}");
+        assert!(help.contains("permdisp"), "method names surface in help: {help}");
         assert!(dispatch(&args(&["frobnicate"])).is_err());
     }
 
@@ -548,6 +630,68 @@ mod tests {
         assert!(dispatch(&args(&["run", "--algo", "quantum"])).is_err());
         assert!(dispatch(&args(&["run", "--backend", "cuda"])).is_err());
         assert!(dispatch(&args(&["run", "--n-perms", "0"])).is_err());
+        assert!(dispatch(&args(&["run", "--method", "kruskal"])).is_err());
+    }
+
+    #[test]
+    fn run_selects_methods() {
+        let base = ["run", "--n-dims", "30", "--n-groups", "3", "--n-perms", "19"];
+        let with = |m: &str| {
+            let mut v: Vec<&str> = base.to_vec();
+            v.extend(["--method", m]);
+            dispatch(&args(&v)).unwrap()
+        };
+        let anosim = with("anosim");
+        assert!(anosim.starts_with("ANOSIM"), "{anosim}");
+        assert!(anosim.contains("R        ="), "{anosim}");
+        let permdisp = with("permdisp");
+        assert!(permdisp.starts_with("PERMDISP"), "{permdisp}");
+        assert!(permdisp.contains("dispersions:"), "{permdisp}");
+        let pairwise = with("pairwise");
+        assert!(pairwise.starts_with("PAIRWISE-PERMANOVA"), "{pairwise}");
+        assert!(pairwise.contains("0 vs 1"), "{pairwise}");
+        assert!(pairwise.contains("p (Bonferroni)"), "{pairwise}");
+    }
+
+    #[test]
+    fn run_method_json_is_method_tagged() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_method_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jpath = dir.join("anosim.json");
+        dispatch(&args(&[
+            "run", "--n-dims", "24", "--n-groups", "2", "--n-perms", "19", "--method",
+            "anosim", "--backend", "native-batch", "--json", jpath.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let doc = crate::jsonio::Json::parse(&std::fs::read_to_string(&jpath).unwrap()).unwrap();
+        assert_eq!(doc.req_str("method").unwrap(), "anosim");
+        assert_eq!(doc.req_str("algo").unwrap(), "rank-r");
+        assert_eq!(doc.req_str("backend").unwrap(), "native-batch");
+
+        let ppath = dir.join("pairwise.json");
+        dispatch(&args(&[
+            "run", "--n-dims", "30", "--n-groups", "3", "--n-perms", "19", "--method",
+            "pairwise", "--json", ppath.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let doc = crate::jsonio::Json::parse(&std::fs::read_to_string(&ppath).unwrap()).unwrap();
+        assert_eq!(doc.req_str("method").unwrap(), "pairwise");
+        assert_eq!(doc.req_arr("pairs").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn backends_listing_shows_caps() {
+        for cmd in ["backends", "--list-backends"] {
+            let out = dispatch(&args(&[cmd])).unwrap();
+            for name in ["native-brute", "native-tiled", "native-batch", "simulator", "xla"] {
+                assert!(out.contains(name), "{cmd}: missing {name} in {out}");
+            }
+            assert!(out.contains("kernel"), "{out}");
+            assert!(out.contains("threaded"), "{out}");
+            assert!(out.contains("modelled time"), "{out}");
+            assert!(out.contains("brute-block"), "native-batch kernel listed: {out}");
+            assert!(out.contains("methods: permanova, anosim, permdisp, pairwise"), "{out}");
+        }
     }
 
     #[test]
@@ -590,9 +734,45 @@ mod tests {
     }
 
     #[test]
+    fn bench_sweeps_the_method_axis() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_bench_method_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out_path = dir.join("BENCH_METHODS.json");
+        let out = dispatch(&args(&[
+            "bench",
+            "--quick",
+            "--backends",
+            "native-brute,native-batch",
+            "--methods",
+            "permanova,anosim",
+            "--n-dims",
+            "24",
+            "--n-perms",
+            "9",
+            "--n-groups",
+            "2",
+            "--out",
+            out_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(out.contains("wrote"), "{out}");
+        assert!(out.contains("anosim"), "method column in the table: {out}");
+        let check = dispatch(&args(&["bench", "--check", out_path.to_str().unwrap()])).unwrap();
+        assert!(check.contains("4 entries"), "2 backends x 2 methods: {check}");
+        // `--method` (singular) is accepted as the single-method spelling.
+        assert!(dispatch(&args(&[
+            "bench", "--quick", "--backends", "native-brute", "--method", "anosim", "--n-dims",
+            "24", "--n-perms", "9", "--n-groups", "2", "--out",
+            dir.join("one.json").to_str().unwrap(),
+        ]))
+        .is_ok());
+    }
+
+    #[test]
     fn bench_rejects_bad_input() {
         assert!(dispatch(&args(&["bench", "--backends", "warp-drive"])).is_err());
         assert!(dispatch(&args(&["bench", "--n-dims", "not-a-number"])).is_err());
+        assert!(dispatch(&args(&["bench", "--methods", "kruskal"])).is_err());
 
         let dir = std::env::temp_dir().join("permanova_apu_cli_bench_test");
         std::fs::create_dir_all(&dir).unwrap();

@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::error::{Error, Result};
-use crate::permanova::SwAlgorithm;
+use crate::permanova::{Method, SwAlgorithm};
 
 /// A parsed TOML-subset value.
 #[derive(Clone, Debug, PartialEq)]
@@ -222,6 +222,10 @@ pub struct RunConfig {
     pub data: DataSource,
     pub n_perms: usize,
     pub seed: u64,
+    /// Which permutation test to run (`[run] method` / `--method`):
+    /// `permanova` (default), `anosim`, `permdisp`, `pairwise`.  Every
+    /// method routes through the same backend engine.
+    pub method: Method,
     pub algo: SwAlgorithm,
     /// Worker threads / slots for the shard scheduler (0 = all available).
     pub threads: usize,
@@ -249,6 +253,7 @@ impl Default for RunConfig {
             data: DataSource::Synthetic { n_dims: 256, n_groups: 8 },
             n_perms: 999,
             seed: 0x5EED_CAFE,
+            method: Method::Permanova,
             algo: SwAlgorithm::Tiled { tile: crate::permanova::DEFAULT_TILE },
             threads: 0,
             backend: "native".to_string(),
@@ -292,10 +297,14 @@ impl RunConfig {
         let algo_s = doc.str_or("run", "algo", &d.algo.name());
         let algo = SwAlgorithm::parse(&algo_s)
             .ok_or_else(|| Error::Config(format!("unknown run.algo {algo_s:?}")))?;
+        let method_s = doc.str_or("run", "method", d.method.name());
+        let method = Method::parse(&method_s)
+            .ok_or_else(|| Error::Config(format!("unknown run.method {method_s:?}")))?;
         let cfg = RunConfig {
             data,
             n_perms: doc.int_or("run", "n_perms", d.n_perms as i64) as usize,
             seed: doc.int_or("run", "seed", d.seed as i64) as u64,
+            method,
             algo,
             threads: doc.int_or("run", "threads", 0) as usize,
             backend: doc.str_or("run", "backend", &d.backend),
@@ -435,6 +444,24 @@ mod tests {
         assert_eq!(cfg.shard_size, 0);
         assert!(!cfg.smt_oversubscribe);
         assert_eq!(cfg.perm_block, 0);
+    }
+
+    #[test]
+    fn method_parses_and_defaults_to_permanova() {
+        let cfg = RunConfig::from_toml(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.method, Method::Permanova);
+        for (text, want) in [
+            ("[run]\nmethod = \"anosim\"\n", Method::Anosim),
+            ("[run]\nmethod = \"permdisp\"\n", Method::Permdisp),
+            ("[run]\nmethod = \"pairwise\"\n", Method::PairwisePermanova),
+            ("[run]\nmethod = \"pairwise-permanova\"\n", Method::PairwisePermanova),
+        ] {
+            let cfg = RunConfig::from_toml(&TomlDoc::parse(text).unwrap()).unwrap();
+            assert_eq!(cfg.method, want, "{text}");
+        }
+        let bad = TomlDoc::parse("[run]\nmethod = \"kruskal\"\n").unwrap();
+        let e = RunConfig::from_toml(&bad).unwrap_err().to_string();
+        assert!(e.contains("kruskal"), "{e}");
     }
 
     #[test]

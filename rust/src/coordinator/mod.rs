@@ -15,7 +15,7 @@ pub use device::{
 };
 pub use scheduler::run_coordinated;
 // Re-exported for compatibility; the structs live in `crate::report`.
-pub use crate::report::{DeviceStats, RunReport};
+pub use crate::report::{AnalysisReport, DeviceStats, RunReport};
 
 use crate::config::{DataSource, RunConfig};
 use crate::dmat::DistanceMatrix;
@@ -69,9 +69,9 @@ fn read_labels(path: &str, n: usize) -> Result<Grouping> {
     Ok(grouping)
 }
 
-/// Run PERMANOVA as the config describes, resolving the backend through
-/// the name-keyed registry.
-pub fn run_config(cfg: &RunConfig) -> Result<RunReport> {
+/// Run the configured permutation test (`cfg.method`), resolving the
+/// backend through the name-keyed registry.
+pub fn run_config(cfg: &RunConfig) -> Result<AnalysisReport> {
     cfg.validate()?;
     let (mat, grouping) = load_data(cfg)?;
     mat.validate(1e-4)?;
@@ -85,7 +85,7 @@ pub fn run_on_backend(
     cfg: &RunConfig,
     mat: &DistanceMatrix,
     grouping: &Grouping,
-) -> Result<RunReport> {
+) -> Result<AnalysisReport> {
     crate::backend::execute(cfg, mat, grouping)
 }
 
@@ -109,6 +109,23 @@ mod tests {
         assert_eq!(r.k, 4);
         assert_eq!(r.backend, "native");
         assert!(r.p_value > 0.0 && r.p_value <= 1.0);
+    }
+
+    #[test]
+    fn run_config_routes_methods() {
+        use crate::permanova::Method;
+        let base = RunConfig {
+            data: DataSource::Synthetic { n_dims: 30, n_groups: 3 },
+            n_perms: 19,
+            ..Default::default()
+        };
+        for method in Method::ALL {
+            let r = run_config(&RunConfig { method, ..base.clone() }).unwrap();
+            assert_eq!(r.method, method);
+            assert!(r.p_value > 0.0 && r.p_value <= 1.0, "{method:?}");
+        }
+        let pw = run_config(&RunConfig { method: Method::PairwisePermanova, ..base }).unwrap();
+        assert_eq!(pw.runs.len(), 3);
     }
 
     #[test]

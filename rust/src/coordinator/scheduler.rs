@@ -141,6 +141,9 @@ pub fn run_coordinated(
         k: grouping.k(),
         s_t,
         elapsed_secs: t0.elapsed().as_secs_f64(),
+        // The heterogeneous path remains PERMANOVA-only: it predates the
+        // statistic-generic engine and mixes devices, not methods.
+        method: "permanova".to_string(),
         backend: "coordinated".to_string(),
         kernel: "mixed".to_string(),
         perm_block: 0,

@@ -54,11 +54,47 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Xla(m) => write!(f, "xla runtime error: {m}"),
             Error::UnknownBackend { name, known } => {
-                write!(f, "unknown backend {name:?} (known: {})", known.join(", "))
+                if let Some(s) = nearest_name(name, known) {
+                    write!(
+                        f,
+                        "unknown backend {name:?} (did you mean {s:?}? known: {})",
+                        known.join(", ")
+                    )
+                } else {
+                    write!(f, "unknown backend {name:?} (known: {})", known.join(", "))
+                }
             }
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
         }
     }
+}
+
+/// Levenshtein edit distance (small inputs only: backend names).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest known name to a typo, if it is plausibly a typo at all:
+/// within 3 edits and less than half the input's length.  `native-batched`
+/// suggests `native-batch`; an unrelated name like `cuda` suggests nothing.
+fn nearest_name<'a>(name: &str, known: &'a [String]) -> Option<&'a str> {
+    let (best, dist) = known
+        .iter()
+        .map(|k| (k.as_str(), levenshtein(name, k)))
+        .min_by_key(|&(_, d)| d)?;
+    (dist <= 3 && 2 * dist < name.chars().count()).then_some(best)
 }
 
 impl std::error::Error for Error {
@@ -115,6 +151,31 @@ mod tests {
         assert!(s.contains("cuda"));
         assert!(s.contains("native"));
         assert!(s.contains("simulator"));
+        // Nothing resembles "cuda": no speculative suggestion.
+        assert!(!s.contains("did you mean"), "{s}");
+    }
+
+    #[test]
+    fn unknown_backend_suggests_the_nearest_name() {
+        let known: Vec<String> =
+            ["native", "native-batch", "native-brute", "simulator", "xla"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let e = Error::UnknownBackend { name: "native-batched".into(), known: known.clone() };
+        let s = e.to_string();
+        assert!(s.contains("did you mean \"native-batch\"?"), "{s}");
+        let e = Error::UnknownBackend { name: "simulater".into(), known };
+        assert!(e.to_string().contains("did you mean \"simulator\"?"), "{}", e);
+    }
+
+    #[test]
+    fn levenshtein_reference_values() {
+        assert_eq!(levenshtein("", ""), 0);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("abc", ""), 3);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+        assert_eq!(levenshtein("native-batched", "native-batch"), 2);
     }
 
     #[test]

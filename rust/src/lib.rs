@@ -15,11 +15,13 @@
 //!   text at build time.
 //! * **L2** — the JAX PERMANOVA batch graph (`python/compile/model.py`).
 //! * **L3** — this crate: substrates ([`rng`], [`dmat`], [`unifrac`],
-//!   [`stream`], [`simulator`], [`bench`]), the PERMANOVA core
-//!   ([`permanova`]), the XLA runtime ([`runtime`]), the unified
-//!   [`backend`] execution engine (the `Backend` trait, its name-keyed
-//!   registry and the sharded permutation scheduler) and the heterogeneous
-//!   [`coordinator`], plus reporting and the CLI.
+//!   [`stream`], [`simulator`], [`bench`]), the statistics core
+//!   ([`permanova`]: the PERMANOVA kernels plus the statistic-generic
+//!   `Method`/`StatKernel` seam covering ANOSIM, PERMDISP and pairwise
+//!   PERMANOVA), the XLA runtime ([`runtime`]), the unified [`backend`]
+//!   execution engine (the `Backend` trait, its name-keyed registry and
+//!   the sharded permutation scheduler — generic over the statistic) and
+//!   the heterogeneous [`coordinator`], plus reporting and the CLI.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! graph once, and the binary only loads `artifacts/*.hlo.txt`.

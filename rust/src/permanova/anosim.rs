@@ -14,8 +14,15 @@
 //! plan machinery as PERMANOVA — ranks are computed **once** (they depend
 //! only on the distances), so each permutation costs O(M) like the paper's
 //! s_W kernels.
+//!
+//! The statistic itself lives in [`r_statistic`] (scalar) and
+//! [`r_statistic_block`] (the SoA block variant the batched backend uses);
+//! the engine reaches both through `StatKernel::Anosim`, and the
+//! [`anosim`] free function below is the thin single-threaded wrapper that
+//! doubles as the conformance suite's f64 oracle.
 
 use super::grouping::Grouping;
+use super::method::{Method, StatKernel};
 use super::stats::pvalue;
 use crate::dmat::DistanceMatrix;
 use crate::error::{Error, Result};
@@ -33,7 +40,7 @@ pub struct AnosimResult {
 }
 
 /// Mid-ranks of the condensed distance vector (1-based, ties averaged).
-fn rank_condensed(condensed: &[f32]) -> Vec<f64> {
+pub(crate) fn rank_condensed(condensed: &[f32]) -> Vec<f64> {
     let m = condensed.len();
     let mut order: Vec<usize> = (0..m).collect();
     order.sort_by(|&a, &b| condensed[a].partial_cmp(&condensed[b]).unwrap());
@@ -55,7 +62,7 @@ fn rank_condensed(condensed: &[f32]) -> Vec<f64> {
 }
 
 /// R statistic for one labelling over precomputed condensed ranks.
-fn r_statistic(ranks: &[f64], n: usize, labels: &[u32]) -> f64 {
+pub(crate) fn r_statistic(ranks: &[f64], n: usize, labels: &[u32]) -> f64 {
     let mut sum_within = 0.0f64;
     let mut cnt_within = 0usize;
     let mut sum_between = 0.0f64;
@@ -83,33 +90,83 @@ fn r_statistic(ranks: &[f64], n: usize, labels: &[u32]) -> f64 {
     (mean_b - mean_w) / (m as f64 / 2.0)
 }
 
+/// R statistics for a structure-of-arrays *block* of labellings: one sweep
+/// over the condensed ranks evaluates all `block` lanes — the batched
+/// engine's one-sweep-many-permutations access pattern applied to ANOSIM's
+/// hot loop (ranks are the streamed n²/2 operand here, exactly as d² is
+/// for PERMANOVA).
+///
+/// `labels` is position-major SoA: `labels[i * block + j]` is the label of
+/// object `i` under lane `j`; `out` (length `block`) receives each lane's R.
+///
+/// **Bitwise contract:** per lane, the (i, j) visit order and the f64
+/// operation sequence are exactly [`r_statistic`]'s, so every lane is
+/// bit-identical to the scalar statistic at any block width.
+pub(crate) fn r_statistic_block(
+    ranks: &[f64],
+    n: usize,
+    labels: &[u32],
+    block: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(labels.len(), n * block);
+    debug_assert_eq!(out.len(), block);
+    let mut sum_within = vec![0.0f64; block];
+    let mut cnt_within = vec![0usize; block];
+    let mut sum_between = vec![0.0f64; block];
+    let mut idx = 0usize;
+    for i in 0..n {
+        let row_groups = &labels[i * block..(i + 1) * block];
+        for j in (i + 1)..n {
+            let r = ranks[idx];
+            idx += 1;
+            let col_groups = &labels[j * block..(j + 1) * block];
+            for lane in 0..block {
+                if col_groups[lane] == row_groups[lane] {
+                    sum_within[lane] += r;
+                    cnt_within[lane] += 1;
+                } else {
+                    sum_between[lane] += r;
+                }
+            }
+        }
+    }
+    let m = ranks.len();
+    for lane in 0..block {
+        let cnt_between = m - cnt_within[lane];
+        out[lane] = if cnt_within[lane] == 0 || cnt_between == 0 {
+            0.0 // degenerate labelling (can't happen through Grouping)
+        } else {
+            let mean_w = sum_within[lane] / cnt_within[lane] as f64;
+            let mean_b = sum_between[lane] / cnt_between as f64;
+            (mean_b - mean_w) / (m as f64 / 2.0)
+        };
+    }
+}
+
 /// Run ANOSIM with `n_perms` label permutations.
+///
+/// Thin wrapper over the `StatKernel::Anosim` seam (single-threaded, one
+/// permutation per step): the engine's backends evaluate the *same* f64
+/// statistic, which is what makes this function the conformance suite's
+/// oracle — engine runs must match it exactly.
 pub fn anosim(
     mat: &DistanceMatrix,
     grouping: &Grouping,
     n_perms: usize,
     seed: u64,
 ) -> Result<AnosimResult> {
-    if grouping.n() != mat.n() {
-        return Err(Error::InvalidInput(format!(
-            "grouping n = {} vs matrix n = {}",
-            grouping.n(),
-            mat.n()
-        )));
-    }
     if n_perms == 0 {
         return Err(Error::InvalidInput("n_perms must be >= 1".into()));
     }
+    let kernel = StatKernel::prepare(Method::Anosim, mat, grouping)?;
     let n = mat.n();
-    let condensed = mat.to_condensed();
-    let ranks = rank_condensed(&condensed);
-
     let plan = PermutationPlan::new(grouping.labels().to_vec(), seed, n_perms + 1);
     let mut row = vec![0u32; n];
     let mut r_all = Vec::with_capacity(n_perms + 1);
     for i in 0..n_perms + 1 {
         plan.fill(i, &mut row);
-        r_all.push(r_statistic(&ranks, n, &row));
+        r_all.push(kernel.eval_labels(mat, grouping, &row));
     }
     let r_obs = r_all[0];
     Ok(AnosimResult {
@@ -130,6 +187,41 @@ mod tests {
         let r = rank_condensed(&[0.5, 0.1, 0.5, 0.9]);
         // sorted: 0.1(rank 1), 0.5, 0.5 (mid 2.5), 0.9 (rank 4)
         assert_eq!(r, vec![2.5, 1.0, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn block_statistic_is_bitwise_identical_to_scalar_per_lane() {
+        let n = 18;
+        let mat = DistanceMatrix::random_euclidean(n, 5, 21);
+        let ranks = rank_condensed(&mat.to_condensed());
+        let grouping = Grouping::balanced(n, 3).unwrap();
+        let base = grouping.labels();
+        for block in [1usize, 2, 5, 8] {
+            // Lanes: rotations of the observed labelling.
+            let mut aos = Vec::with_capacity(block * n);
+            for r in 0..block {
+                for i in 0..n {
+                    aos.push(base[(i + r) % n]);
+                }
+            }
+            let mut soa = vec![0u32; block * n];
+            for r in 0..block {
+                for i in 0..n {
+                    soa[i * block + r] = aos[r * n + i];
+                }
+            }
+            let mut out = vec![0.0f64; block];
+            r_statistic_block(&ranks, n, &soa, block, &mut out);
+            for r in 0..block {
+                let want = r_statistic(&ranks, n, &aos[r * n..(r + 1) * n]);
+                assert_eq!(
+                    out[r].to_bits(),
+                    want.to_bits(),
+                    "block={block} lane {r}: {} vs {want}",
+                    out[r]
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,492 @@
+//! The statistic-generic seam of the execution engine: [`Method`] names
+//! *which* permutation test a run performs, [`StatKernel`] owns that
+//! method's precomputation (its *prelude*) and per-permutation statistic.
+//!
+//! The paper's CPU-vs-GPU result is an access-pattern result about the
+//! permute-relabel-reduce loop, not about PERMANOVA's pseudo-F
+//! specifically — ANOSIM and PERMDISP run the *same* loop over the same
+//! distance matrix with a different reduction.  This module is the seam
+//! that lets the `Backend` engine evaluate any of them through the same
+//! shard × block × SMT scheduler:
+//!
+//! * [`Method`] — the method axis (`--method permanova|anosim|permdisp|
+//!   pairwise`), threaded through `RunConfig`, the bench sweep and every
+//!   report;
+//! * [`StatKernel`] — one prepared instance per run.  The variant carries
+//!   the method's prelude (PERMANOVA: `s_T`; ANOSIM: the condensed
+//!   mid-ranks; PERMDISP: the PCoA distance-to-centroid vector), replacing
+//!   the permanova-specific `s_t` that `BatchPlan` used to hard-wire;
+//! * [`eval_plan_range`] / [`eval_plan_range_blocked`] — the generic
+//!   scalar and block-batched evaluation loops backends delegate to for
+//!   every method that has no specialized fast path.
+//!
+//! PERMANOVA keeps its f32 kernel formulations (the paper's algorithms):
+//! backends match on [`StatKernel::Permanova`] and run their existing
+//! `sw_*` machinery; the generic `eval_labels` for that variant is the f64
+//! brute-force oracle, used by tests and wrappers only.
+//!
+//! **Bitwise contract:** for a given method, every generic evaluation path
+//! executes the identical f64 operation sequence per permutation, so all
+//! backends (and all shard / worker / SMT / block settings) produce
+//! bit-identical statistics — the conformance suite pins each method
+//! against its legacy standalone oracle function.
+
+use super::anosim::{r_statistic, r_statistic_block, rank_condensed};
+use super::grouping::Grouping;
+use super::kernels::sw_brute_f64;
+use super::permdisp::{anova_f, dispersion_prelude};
+use super::stats::{fstat_from_sw, st_of};
+use crate::backend::shard::{for_each_block, ShardSpec};
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+use crate::rng::PermutationPlan;
+
+/// Which permutation test a run performs — the method axis of the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// PERMANOVA (Anderson 2001): pseudo-F over the distance matrix.
+    Permanova,
+    /// ANOSIM (Clarke 1993): rank-based R over the same matrix.
+    Anosim,
+    /// PERMDISP (Anderson 2006): ANOVA F over PCoA distances-to-centroid.
+    Permdisp,
+    /// Post-hoc all-pairs PERMANOVA, one scheduled job per group pair
+    /// (Bonferroni-adjusted).
+    PairwisePermanova,
+}
+
+impl Method {
+    /// Every method, in CLI/report order.
+    pub const ALL: [Method; 4] =
+        [Method::Permanova, Method::Anosim, Method::Permdisp, Method::PairwisePermanova];
+
+    /// Stable identifier used in configs, flags, bench cells and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Permanova => "permanova",
+            Method::Anosim => "anosim",
+            Method::Permdisp => "permdisp",
+            Method::PairwisePermanova => "pairwise",
+        }
+    }
+
+    /// Parse the identifier format produced by [`name`](Self::name)
+    /// (plus the long spelling `pairwise-permanova`).
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "permanova" => Some(Method::Permanova),
+            "anosim" => Some(Method::Anosim),
+            "permdisp" => Some(Method::Permdisp),
+            "pairwise" | "pairwise-permanova" => Some(Method::PairwisePermanova),
+            _ => None,
+        }
+    }
+
+    /// Display label of the method's test statistic.
+    pub fn statistic_label(&self) -> &'static str {
+        match self {
+            Method::Permanova | Method::PairwisePermanova => "pseudo-F",
+            Method::Anosim => "R",
+            Method::Permdisp => "F",
+        }
+    }
+
+    /// Report/render title (`PERMANOVA`, `ANOSIM`, ...).
+    pub fn title(&self) -> &'static str {
+        match self {
+            Method::Permanova => "PERMANOVA",
+            Method::Anosim => "ANOSIM",
+            Method::Permdisp => "PERMDISP",
+            Method::PairwisePermanova => "PAIRWISE-PERMANOVA",
+        }
+    }
+}
+
+/// PERMANOVA prelude: the permutation-invariant total sum of squares.
+#[derive(Clone, Debug)]
+pub struct PermanovaStat {
+    /// `s_T = Σ_{i<j} d²_ij / n`.
+    pub s_t: f64,
+}
+
+/// ANOSIM prelude: condensed mid-ranks of the distances (computed once —
+/// they depend only on the matrix, never on the labelling).
+#[derive(Clone, Debug)]
+pub struct AnosimStat {
+    /// Mid-ranks of the condensed upper triangle, in (i, j) row-major order.
+    pub ranks: Vec<f64>,
+}
+
+/// PERMDISP prelude: each object's PCoA distance to its group centroid.
+#[derive(Clone, Debug)]
+pub struct PermdispStat {
+    /// Distance-to-centroid per object (the values the ANOVA F permutes over).
+    pub dists: Vec<f64>,
+    /// Group count of the observed labelling.
+    pub k: usize,
+    /// Mean distance-to-centroid per group (the dispersions under test).
+    pub group_dispersions: Vec<f64>,
+}
+
+/// A prepared per-run statistic: the method's prelude plus its
+/// per-permutation evaluation.  Built once by [`prepare`](Self::prepare)
+/// and shared read-only with the backend via `BatchPlan::stat`.
+#[derive(Clone, Debug)]
+pub enum StatKernel {
+    Permanova(PermanovaStat),
+    Anosim(AnosimStat),
+    Permdisp(PermdispStat),
+}
+
+impl StatKernel {
+    /// Run the method's precomputation for one (matrix, grouping) problem.
+    ///
+    /// [`Method::PairwisePermanova`] has no single kernel — the engine fans
+    /// it out into one PERMANOVA job per group pair *above* this seam — so
+    /// requesting it here is an input error.
+    pub fn prepare(
+        method: Method,
+        mat: &DistanceMatrix,
+        grouping: &Grouping,
+    ) -> Result<StatKernel> {
+        if grouping.n() != mat.n() {
+            return Err(Error::InvalidInput(format!(
+                "grouping n = {} vs matrix n = {}",
+                grouping.n(),
+                mat.n()
+            )));
+        }
+        match method {
+            Method::Permanova => Ok(StatKernel::Permanova(PermanovaStat { s_t: st_of(mat) })),
+            Method::Anosim => Ok(StatKernel::Anosim(AnosimStat {
+                ranks: rank_condensed(&mat.to_condensed()),
+            })),
+            Method::Permdisp => {
+                let (dists, group_dispersions) = dispersion_prelude(mat, grouping)?;
+                Ok(StatKernel::Permdisp(PermdispStat {
+                    dists,
+                    k: grouping.k(),
+                    group_dispersions,
+                }))
+            }
+            Method::PairwisePermanova => Err(Error::InvalidInput(
+                "pairwise PERMANOVA is a fan-out of per-pair PERMANOVA jobs; \
+                 prepare a Permanova kernel per pair instead"
+                    .into(),
+            )),
+        }
+    }
+
+    /// The method this kernel evaluates.
+    pub fn method(&self) -> Method {
+        match self {
+            StatKernel::Permanova(_) => Method::Permanova,
+            StatKernel::Anosim(_) => Method::Anosim,
+            StatKernel::Permdisp(_) => Method::Permdisp,
+        }
+    }
+
+    /// Kernel identifier recorded in reports for the *generic* evaluation
+    /// paths (PERMANOVA backends record their own f32 formulation instead).
+    pub fn kernel_label(&self) -> &'static str {
+        match self {
+            StatKernel::Permanova(_) => "brute-f64",
+            StatKernel::Anosim(_) => "rank-r",
+            StatKernel::Permdisp(_) => "centroid-anova",
+        }
+    }
+
+    /// The PERMANOVA total sum of squares (0 for other methods — a
+    /// diagnostic that only exists for the pseudo-F decomposition).
+    pub fn s_t(&self) -> f64 {
+        match self {
+            StatKernel::Permanova(p) => p.s_t,
+            _ => 0.0,
+        }
+    }
+
+    /// The PERMDISP per-group mean dispersions (empty for other methods).
+    pub fn group_dispersions(&self) -> &[f64] {
+        match self {
+            StatKernel::Permdisp(p) => &p.group_dispersions,
+            _ => &[],
+        }
+    }
+
+    /// Evaluate the statistic for one labelling (the generic f64 path).
+    ///
+    /// For [`StatKernel::Permanova`] this is the f64 brute-force *oracle*
+    /// (`sw_brute_f64`), not the f32 production kernels — backends keep
+    /// their formulation-specific fast paths for that variant and only
+    /// tests/wrappers call this one.
+    pub fn eval_labels(&self, mat: &DistanceMatrix, grouping: &Grouping, labels: &[u32]) -> f64 {
+        match self {
+            StatKernel::Permanova(p) => {
+                let n = mat.n();
+                let sw = sw_brute_f64(mat.data(), n, labels, grouping.inv_sizes());
+                fstat_from_sw(sw, p.s_t, n, grouping.k())
+            }
+            StatKernel::Anosim(a) => r_statistic(&a.ranks, mat.n(), labels),
+            StatKernel::Permdisp(p) => anova_f(&p.dists, labels, p.k),
+        }
+    }
+}
+
+/// Evaluate a permutation-plan range `[start, start + count)` through the
+/// shard scheduler: each worker owns a scratch label row and streams
+/// through its shards, calling [`StatKernel::eval_labels`] per index.
+///
+/// This is the scalar one-permutation-per-step loop every backend uses for
+/// methods without a specialized path; results are independent of the
+/// shard spec (the scheduler's determinism contract).
+pub fn eval_plan_range(
+    kernel: &StatKernel,
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    plan: &PermutationPlan,
+    start: usize,
+    count: usize,
+    spec: &ShardSpec,
+) -> Vec<f64> {
+    let n = mat.n();
+    assert_eq!(plan.n(), n, "plan/matrix size mismatch");
+    let mut out = vec![0.0f64; count];
+    crate::backend::shard::run_sharded_with(
+        spec,
+        &mut out,
+        || vec![0u32; n],
+        |row, lo, slice| {
+            for (i, o) in slice.iter_mut().enumerate() {
+                plan.fill(start + lo + i, row);
+                *o = kernel.eval_labels(mat, grouping, row);
+            }
+        },
+    );
+    out
+}
+
+/// Evaluate a plan range with the **block-batched** schedule: workers walk
+/// their shards in `perm_block`-wide blocks (the batched brute engine's
+/// walk), amortizing prelude reads across the block's lanes where the
+/// method allows it.
+///
+/// * [`StatKernel::Anosim`] uses the SoA rank-sweep kernel
+///   (`r_statistic_block`): each condensed rank is read **once** per
+///   block and applied to all lanes — the same access-pattern win as
+///   `sw_brute_block`, because ANOSIM's hot loop streams the same n²/2
+///   triangle.
+/// * Other variants evaluate each lane with the scalar statistic (the
+///   PERMDISP prelude is an O(n) vector; there is no n² stream to
+///   amortize).
+///
+/// Every lane executes the scalar path's exact f64 operation sequence, so
+/// blocked evaluation is **bitwise identical** to [`eval_plan_range`] at
+/// any block width, shard size, worker count and SMT setting.
+pub fn eval_plan_range_blocked(
+    kernel: &StatKernel,
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    plan: &PermutationPlan,
+    start: usize,
+    count: usize,
+    perm_block: usize,
+    spec: &ShardSpec,
+) -> Vec<f64> {
+    let n = mat.n();
+    assert_eq!(plan.n(), n, "plan/matrix size mismatch");
+    let block = super::batch::resolve_perm_block(perm_block).min(count.max(1));
+    let spec = spec.aligned_to_block(count, block);
+    let mut out = vec![0.0f64; count];
+    crate::backend::shard::run_sharded_with(
+        &spec,
+        &mut out,
+        // Per-worker scratch: one label row + one SoA block buffer (only
+        // the ANOSIM rank-sweep arm consumes the latter; the per-lane
+        // scalar arm pays nothing for it).
+        || {
+            let soa = match kernel {
+                StatKernel::Anosim(_) => vec![0u32; n * block],
+                _ => Vec::new(),
+            };
+            (vec![0u32; n], soa)
+        },
+        |scratch, lo, slice| {
+            let (row, soa) = scratch;
+            for_each_block(0, slice.len(), block, |off, b| {
+                let dst = &mut slice[off..off + b];
+                match kernel {
+                    StatKernel::Anosim(a) => {
+                        let soa = &mut soa[..n * b];
+                        for j in 0..b {
+                            plan.fill(start + lo + off + j, row);
+                            for i in 0..n {
+                                soa[i * b + j] = row[i];
+                            }
+                        }
+                        r_statistic_block(&a.ranks, n, soa, b, dst);
+                    }
+                    _ => {
+                        for (j, o) in dst.iter_mut().enumerate() {
+                            plan.fill(start + lo + off + j, row);
+                            *o = kernel.eval_labels(mat, grouping, row);
+                        }
+                    }
+                }
+            });
+        },
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permanova::{anosim, permdisp};
+
+    fn fixture(n: usize, k: usize, seed: u64) -> (DistanceMatrix, Grouping) {
+        (DistanceMatrix::random_euclidean(n, 6, seed), Grouping::balanced(n, k).unwrap())
+    }
+
+    #[test]
+    fn method_name_parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m), "{m:?}");
+        }
+        assert_eq!(Method::parse("pairwise-permanova"), Some(Method::PairwisePermanova));
+        assert_eq!(Method::parse("PERMANOVA"), None);
+        assert_eq!(Method::parse("bogus"), None);
+        assert_eq!(Method::parse(""), None);
+    }
+
+    #[test]
+    fn statistic_labels() {
+        assert_eq!(Method::Permanova.statistic_label(), "pseudo-F");
+        assert_eq!(Method::Anosim.statistic_label(), "R");
+        assert_eq!(Method::Permdisp.statistic_label(), "F");
+        assert_eq!(Method::Permanova.title(), "PERMANOVA");
+        assert_eq!(Method::PairwisePermanova.title(), "PAIRWISE-PERMANOVA");
+    }
+
+    #[test]
+    fn prepare_builds_the_right_prelude() {
+        let (mat, grouping) = fixture(24, 3, 5);
+        match StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap() {
+            StatKernel::Permanova(p) => assert!(p.s_t > 0.0),
+            other => panic!("{other:?}"),
+        }
+        match StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap() {
+            StatKernel::Anosim(a) => assert_eq!(a.ranks.len(), 24 * 23 / 2),
+            other => panic!("{other:?}"),
+        }
+        match StatKernel::prepare(Method::Permdisp, &mat, &grouping).unwrap() {
+            StatKernel::Permdisp(p) => {
+                assert_eq!(p.dists.len(), 24);
+                assert_eq!(p.k, 3);
+                assert_eq!(p.group_dispersions.len(), 3);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(StatKernel::prepare(Method::PairwisePermanova, &mat, &grouping).is_err());
+        let g_bad = Grouping::balanced(30, 3).unwrap();
+        assert!(StatKernel::prepare(Method::Anosim, &mat, &g_bad).is_err());
+    }
+
+    #[test]
+    fn eval_matches_the_legacy_oracles() {
+        // The kernel's per-permutation statistic is the *same* f64 code the
+        // legacy free functions run, so the full distributions match exactly.
+        let (mat, grouping) = fixture(30, 3, 9);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 41, 20);
+        let mut row = vec![0u32; 30];
+
+        let a = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
+        let legacy = anosim(&mat, &grouping, 19, 41).unwrap();
+        plan.fill(0, &mut row);
+        assert_eq!(a.eval_labels(&mat, &grouping, &row), legacy.r_obs);
+
+        let d = StatKernel::prepare(Method::Permdisp, &mat, &grouping).unwrap();
+        let legacy = permdisp(&mat, &grouping, 19, 41).unwrap();
+        assert_eq!(d.eval_labels(&mat, &grouping, &row), legacy.f_obs);
+        match &d {
+            StatKernel::Permdisp(p) => {
+                assert_eq!(p.group_dispersions, legacy.group_dispersions)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn plan_range_is_shard_invariant() {
+        let (mat, grouping) = fixture(26, 2, 3);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 7, 40);
+        for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+            let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
+            let base = eval_plan_range(
+                &kernel,
+                &mat,
+                &grouping,
+                &plan,
+                0,
+                40,
+                &ShardSpec::with_workers(1),
+            );
+            for spec in [
+                ShardSpec::with_workers(3),
+                ShardSpec { shard_size: 7, workers: 2, smt: true },
+                ShardSpec::default(),
+            ] {
+                let got = eval_plan_range(&kernel, &mat, &grouping, &plan, 0, 40, &spec);
+                assert_eq!(base, got, "{method:?} {spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_is_bitwise_identical_to_scalar_for_every_method() {
+        let (mat, grouping) = fixture(28, 4, 13);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 17, 50);
+        for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+            let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
+            let want = eval_plan_range(
+                &kernel,
+                &mat,
+                &grouping,
+                &plan,
+                0,
+                50,
+                &ShardSpec::with_workers(1),
+            );
+            for block in [1usize, 3, 8, 64] {
+                for spec in [
+                    ShardSpec::with_workers(1),
+                    ShardSpec { shard_size: 7, workers: 3, smt: false },
+                    ShardSpec { shard_size: 16, workers: 2, smt: true },
+                ] {
+                    let got = eval_plan_range_blocked(
+                        &kernel, &mat, &grouping, &plan, 0, 50, block, &spec,
+                    );
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{method:?} block={block} {spec:?} perm {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_sub_ranges_line_up() {
+        let (mat, grouping) = fixture(22, 2, 8);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 29, 40);
+        let kernel = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
+        let spec = ShardSpec::with_workers(2);
+        let full = eval_plan_range_blocked(&kernel, &mat, &grouping, &plan, 0, 40, 8, &spec);
+        let head = eval_plan_range_blocked(&kernel, &mat, &grouping, &plan, 0, 13, 8, &spec);
+        let tail = eval_plan_range_blocked(&kernel, &mat, &grouping, &plan, 13, 27, 8, &spec);
+        assert_eq!(&full[..13], &head[..]);
+        assert_eq!(&full[13..], &tail[..]);
+    }
+}

@@ -15,14 +15,21 @@
 //!   block of permutations, the paper's GPU-winning access pattern;
 //! * the full statistic ([`permanova`], [`st_of`], [`fstat_from_sw`],
 //!   [`pvalue`]);
+//! * the statistic-generic seam of the execution engine ([`Method`],
+//!   [`StatKernel`], [`eval_plan_range`], [`eval_plan_range_blocked`]) —
+//!   what lets every backend evaluate ANOSIM and PERMDISP through the same
+//!   shard × block × SMT scheduler as PERMANOVA;
 //! * the surrounding workflow: post-hoc [`pairwise_permanova`]
 //!   (Bonferroni), rank-based [`anosim`] (Clarke 1993), and dispersion
-//!   homogeneity [`permdisp`] (Anderson 2006, via PCoA).
+//!   homogeneity [`permdisp`] (Anderson 2006, via PCoA) — each kept as a
+//!   thin single-threaded wrapper over the same per-method statistic code,
+//!   which makes them the engine's f64 conformance oracles.
 
 mod anosim;
 mod batch;
 mod grouping;
 mod kernels;
+mod method;
 mod pairwise;
 mod permdisp;
 mod stats;
@@ -38,5 +45,11 @@ pub use kernels::{
     sw_brute_block, sw_brute_f64, sw_brute_one, sw_flat_one, sw_of, sw_one, sw_tiled_one,
     SwAlgorithm, DEFAULT_PERM_BLOCK, DEFAULT_TILE,
 };
-pub use pairwise::{pairwise_permanova, PairwiseEntry, PairwiseResult};
+pub use method::{
+    eval_plan_range, eval_plan_range_blocked, AnosimStat, Method, PermanovaStat, PermdispStat,
+    StatKernel,
+};
+pub use pairwise::{
+    pairwise_permanova, pairwise_seed, pairwise_subproblem, PairwiseEntry, PairwiseResult,
+};
 pub use stats::{fstat_from_sw, permanova, pvalue, st_of, PermanovaOpts, PermanovaResult};

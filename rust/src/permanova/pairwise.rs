@@ -5,6 +5,14 @@
 //! of each group pair, with a Bonferroni correction for the k(k−1)/2 tests.
 //! (scikit-bio leaves this to the user; unifrac-binaries users script it —
 //! so it belongs in the library.)
+//!
+//! The building blocks are public: [`pairwise_subproblem`] extracts one
+//! pair's sub-matrix + 2-group labelling and [`pairwise_seed`] derives the
+//! pair's independent RNG seed.  `backend::execute` fans
+//! `Method::PairwisePermanova` out as one scheduled engine job per pair
+//! using exactly these helpers, so the [`pairwise_permanova`] free
+//! function below (which runs each pair through the legacy `permanova`
+//! path) is the conformance suite's oracle for that method.
 
 use super::grouping::Grouping;
 use super::stats::{permanova, PermanovaOpts};
@@ -31,8 +39,17 @@ pub struct PairwiseResult {
     pub n_comparisons: usize,
 }
 
-/// Extract the sub-matrix and 2-group labelling for groups `(a, b)`.
-fn subproblem(
+/// Deterministic, order-independent seed for the `(a, b)` pair's
+/// permutation plan, derived from the run seed and the pair identity.
+/// Shared by the legacy sweep and the engine's pairwise fan-out so the two
+/// paths draw identical permutation streams.
+pub fn pairwise_seed(seed: u64, a: u32, b: u32) -> u64 {
+    seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(((a as u64) << 32) | b as u64)
+}
+
+/// Extract the sub-matrix and 2-group labelling for groups `(a, b)`
+/// (label 0 = group `a`, label 1 = group `b`).
+pub fn pairwise_subproblem(
     mat: &DistanceMatrix,
     grouping: &Grouping,
     a: u32,
@@ -74,14 +91,9 @@ pub fn pairwise_permanova(
     let mut entries = Vec::with_capacity(n_comparisons);
     for a in 0..k {
         for b in (a + 1)..k {
-            let (sub, sub_grouping) = subproblem(mat, grouping, a, b)?;
-            let pair_opts = PermanovaOpts {
-                seed: opts
-                    .seed
-                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                    .wrapping_add(((a as u64) << 32) | b as u64),
-                ..opts.clone()
-            };
+            let (sub, sub_grouping) = pairwise_subproblem(mat, grouping, a, b)?;
+            let pair_opts =
+                PermanovaOpts { seed: pairwise_seed(opts.seed, a, b), ..opts.clone() };
             let res = permanova(&sub, &sub_grouping, n_perms, &pair_opts)?;
             entries.push(PairwiseEntry {
                 group_a: a,
@@ -167,7 +179,7 @@ mod tests {
     #[test]
     fn subproblem_extraction() {
         let (mat, grouping) = fixture();
-        let (sub, sg) = subproblem(&mat, &grouping, 0, 2).unwrap();
+        let (sub, sg) = pairwise_subproblem(&mat, &grouping, 0, 2).unwrap();
         assert_eq!(sub.n(), 30);
         assert_eq!(sg.k(), 2);
         sub.validate(1e-6).unwrap();

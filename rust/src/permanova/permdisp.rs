@@ -6,8 +6,15 @@
 //! `permdisp`): embed the distance matrix with PCoA, measure each object's
 //! Euclidean distance to its group centroid, then permutation-test the
 //! ANOVA F statistic over those distances.
+//!
+//! The expensive embedding lives in [`dispersion_prelude`] (run once per
+//! problem, the `StatKernel::Permdisp` prelude); [`anova_f`] is the O(n)
+//! per-permutation statistic.  The [`permdisp`] free function below is the
+//! thin single-threaded wrapper that doubles as the conformance suite's
+//! f64 oracle.
 
 use super::grouping::Grouping;
+use super::method::{Method, StatKernel};
 use super::stats::pvalue;
 use crate::dmat::{pcoa, DistanceMatrix};
 use crate::error::{Error, Result};
@@ -27,7 +34,7 @@ pub struct PermdispResult {
 }
 
 /// ANOVA F over `values` grouped by `labels` (k groups, all non-empty).
-fn anova_f(values: &[f64], labels: &[u32], k: usize) -> f64 {
+pub(crate) fn anova_f(values: &[f64], labels: &[u32], k: usize) -> f64 {
     let n = values.len();
     let mut sums = vec![0.0f64; k];
     let mut counts = vec![0usize; k];
@@ -52,24 +59,15 @@ fn anova_f(values: &[f64], labels: &[u32], k: usize) -> f64 {
     (ss_between / (k as f64 - 1.0)) / (ss_within / (n as f64 - k as f64))
 }
 
-/// Run PERMDISP with `n_perms` label permutations.
-pub fn permdisp(
+/// The PERMDISP prelude: embed the matrix with PCoA and return each
+/// object's distance to its group centroid plus the per-group mean
+/// dispersions.  This is the expensive, permutation-invariant half of the
+/// test, shared between the engine's `StatKernel::Permdisp` and the
+/// [`permdisp`] oracle.
+pub(crate) fn dispersion_prelude(
     mat: &DistanceMatrix,
     grouping: &Grouping,
-    n_perms: usize,
-    seed: u64,
-) -> Result<PermdispResult> {
-    if grouping.n() != mat.n() {
-        return Err(Error::InvalidInput(format!(
-            "grouping n = {} vs matrix n = {}",
-            grouping.n(),
-            mat.n()
-        )));
-    }
-    if n_perms == 0 {
-        return Err(Error::InvalidInput("n_perms must be >= 1".into()));
-    }
-    let n = mat.n();
+) -> Result<(Vec<f64>, Vec<f64>)> {
     let k = grouping.k();
     let labels = grouping.labels();
 
@@ -112,15 +110,37 @@ pub fn permdisp(
             s / c as f64
         })
         .collect();
+    Ok((dists, group_dispersions))
+}
+
+/// Run PERMDISP with `n_perms` label permutations.
+///
+/// Thin wrapper over the `StatKernel::Permdisp` seam (single-threaded,
+/// one permutation per step): the engine's backends evaluate the *same*
+/// f64 statistic over the *same* prelude, which is what makes this
+/// function the conformance suite's oracle.
+pub fn permdisp(
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    n_perms: usize,
+    seed: u64,
+) -> Result<PermdispResult> {
+    if n_perms == 0 {
+        return Err(Error::InvalidInput("n_perms must be >= 1".into()));
+    }
+    let kernel = StatKernel::prepare(Method::Permdisp, mat, grouping)?;
+    let group_dispersions = kernel.group_dispersions().to_vec();
+    let n = mat.n();
+    let k = grouping.k();
 
     // Permutation test: shuffle which group each distance belongs to
     // (vegan's permutest on the betadisper residuals).
-    let plan = PermutationPlan::new(labels.to_vec(), seed, n_perms + 1);
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), seed, n_perms + 1);
     let mut row = vec![0u32; n];
     let mut f_all = Vec::with_capacity(n_perms + 1);
     for i in 0..n_perms + 1 {
         plan.fill(i, &mut row);
-        f_all.push(anova_f(&dists, &row, k));
+        f_all.push(kernel.eval_labels(mat, grouping, &row));
     }
     let f_obs = f_all[0];
     Ok(PermdispResult {

@@ -1,14 +1,18 @@
-//! Run reports and rendering: the structured result of a PERMANOVA run,
-//! plus tables, horizontal bar charts and markdown fragments.
+//! Run reports and rendering: the structured results of permutation-test
+//! runs, plus tables, horizontal bar charts and markdown fragments.
 //!
 //! Everything the CLI, examples and benches print goes through here so the
 //! output of `cargo bench` lines up with what EXPERIMENTS.md records.
-//! [`RunReport`] always records **which backend** produced it — the
-//! provenance every cross-substrate comparison in this repo leans on.
+//! [`RunReport`] always records **which backend** produced it and **which
+//! method** it evaluated — the provenance every cross-substrate comparison
+//! in this repo leans on.  [`AnalysisReport`] is the method-tagged
+//! aggregate `backend::execute` returns: one run for the single-statistic
+//! methods, one run per group pair for pairwise PERMANOVA.
 
 use std::fmt::Write as _;
 
 use crate::jsonio::Json;
+use crate::permanova::Method;
 
 /// Per-device (or per-backend) utilization after a run.
 #[derive(Clone, Debug)]
@@ -21,7 +25,11 @@ pub struct DeviceStats {
     pub simulated_secs: f64,
 }
 
-/// Aggregated output of a PERMANOVA run (backend engine or coordinator).
+/// Aggregated output of one permutation-test run (backend engine or
+/// coordinator).  `f_obs` / `f_perms` hold the run's *method statistic* —
+/// pseudo-F for PERMANOVA, R for ANOSIM, ANOVA F for PERMDISP (the field
+/// names predate the statistic-generic engine and are kept for
+/// machine-readable compatibility).
 #[derive(Clone, Debug)]
 pub struct RunReport {
     pub f_obs: f64,
@@ -31,6 +39,9 @@ pub struct RunReport {
     pub k: usize,
     pub s_t: f64,
     pub elapsed_secs: f64,
+    /// Name of the method evaluated ([`Method::name`]; pairwise fan-out
+    /// runs record `"permanova"` — the per-pair job's method).
+    pub method: String,
     /// Registry name of the backend that produced this report
     /// (`"coordinated"` for heterogeneous multi-device runs).
     pub backend: String,
@@ -49,11 +60,19 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    /// The parsed method tag (None if a foreign producer wrote an unknown
+    /// name — rendering then falls back to generic labels).
+    fn method_tag(&self) -> Option<Method> {
+        Method::parse(&self.method)
+    }
+
     /// Human-readable report block (the CLI's `run` output).
     pub fn render(&self) -> String {
+        let title = self.method_tag().map_or("PERMANOVA", |m| m.title());
+        let stat = self.method_tag().map_or("statistic", |m| m.statistic_label());
         let mut out = String::new();
         out.push_str(&format!(
-            "PERMANOVA  n={} k={} perms={} backend={} algo={}{}\n",
+            "{title}  n={} k={} perms={} backend={} algo={}{}\n",
             self.n,
             self.k,
             self.n_perms,
@@ -66,9 +85,16 @@ impl RunReport {
             }
         ));
         out.push_str(&format!(
-            "  pseudo-F = {:.6}\n  p-value  = {:.6}\n  s_T      = {:.6}\n  wall     = {:.3}s\n",
-            self.f_obs, self.p_value, self.s_t, self.elapsed_secs
+            "  {stat:<8} = {:.6}\n  p-value  = {:.6}\n",
+            self.f_obs, self.p_value
         ));
+        // s_T is a pseudo-F decomposition diagnostic; it does not exist
+        // for the rank / dispersion statistics.
+        if self.method_tag() != Some(Method::Anosim) && self.method_tag() != Some(Method::Permdisp)
+        {
+            out.push_str(&format!("  s_T      = {:.6}\n", self.s_t));
+        }
+        out.push_str(&format!("  wall     = {:.3}s\n", self.elapsed_secs));
         let mut t = Table::new(&["device", "batches", "perms", "busy s", "modelled s"]);
         for d in &self.per_device {
             t.row(&[
@@ -91,6 +117,7 @@ impl RunReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("version", Json::str(crate::VERSION)),
+            ("method", Json::str(self.method.clone())),
             ("backend", Json::str(self.backend.clone())),
             ("algo", Json::str(self.kernel.clone())),
             ("n", Json::num(self.n as f64)),
@@ -119,6 +146,164 @@ impl RunReport {
                 ),
             ),
         ])
+    }
+}
+
+/// One pair's identity + multiple-comparison adjustment inside a pairwise
+/// PERMANOVA fan-out, parallel to [`AnalysisReport::runs`].
+#[derive(Clone, Debug)]
+pub struct PairSummary {
+    pub group_a: u32,
+    pub group_b: u32,
+    /// Objects in the pair's sub-problem.
+    pub n: usize,
+    /// Bonferroni-adjusted p (capped at 1).
+    pub p_adjusted: f64,
+}
+
+/// The method-tagged result of `backend::execute`: which [`Method`] ran,
+/// and one [`RunReport`] per scheduled job — exactly one for PERMANOVA /
+/// ANOSIM / PERMDISP, one per group pair for pairwise PERMANOVA.
+///
+/// Dereferences to the primary run (`runs[0]`), so single-run consumers
+/// keep reading `report.f_obs`, `report.p_value`, `report.backend`, ...
+/// without unwrapping; pairwise consumers walk `runs` / `pairs`.
+#[derive(Clone, Debug)]
+pub struct AnalysisReport {
+    pub method: Method,
+    /// Objects / groups of the *full* problem (pairwise runs record their
+    /// sub-problem sizes in their own reports).
+    pub n: usize,
+    pub k: usize,
+    /// One report per scheduled job, never empty.
+    pub runs: Vec<RunReport>,
+    /// Pair identities + Bonferroni adjustments, parallel to `runs`
+    /// (pairwise PERMANOVA only; empty otherwise).
+    pub pairs: Vec<PairSummary>,
+    /// Mean distance-to-centroid per group (PERMDISP only; empty otherwise).
+    pub group_dispersions: Vec<f64>,
+}
+
+impl std::ops::Deref for AnalysisReport {
+    type Target = RunReport;
+
+    /// The primary run.  Deliberate non-smart-pointer `Deref`: an
+    /// `AnalysisReport` *is* its primary `RunReport` plus method metadata,
+    /// and every pre-existing consumer reads primary-run fields.
+    fn deref(&self) -> &RunReport {
+        &self.runs[0]
+    }
+}
+
+impl AnalysisReport {
+    /// The primary run: the single run for one-statistic methods, the
+    /// first pair's run for pairwise.
+    pub fn primary(&self) -> &RunReport {
+        &self.runs[0]
+    }
+
+    /// Total permutations evaluated across every scheduled job (including
+    /// each job's observed labelling — what throughput metrics count).
+    pub fn total_perms(&self) -> usize {
+        self.runs.iter().map(|r| r.n_perms + 1).sum()
+    }
+
+    /// Human-readable report (the CLI's `run` output for every method).
+    pub fn render(&self) -> String {
+        match self.method {
+            Method::PairwisePermanova => {
+                let r0 = self.primary();
+                let mut out = format!(
+                    "{}  n={} k={} perms={} backend={} algo={} comparisons={}\n",
+                    self.method.title(),
+                    self.n,
+                    self.k,
+                    r0.n_perms,
+                    r0.backend,
+                    r0.kernel,
+                    self.pairs.len()
+                );
+                let mut t = Table::new(&["pair", "n", "pseudo-F", "p", "p (Bonferroni)"]);
+                for (pair, run) in self.pairs.iter().zip(&self.runs) {
+                    t.row(&[
+                        format!("{} vs {}", pair.group_a, pair.group_b),
+                        pair.n.to_string(),
+                        format!("{:.4}", run.f_obs),
+                        format!("{:.4}", run.p_value),
+                        format!("{:.4}", pair.p_adjusted),
+                    ]);
+                }
+                out.push_str(&t.render());
+                out
+            }
+            _ => {
+                let mut out = self.primary().render();
+                if !self.group_dispersions.is_empty() {
+                    out.push_str(&format!(
+                        "  dispersions: {}\n",
+                        self.group_dispersions
+                            .iter()
+                            .map(|d| format!("{d:.4}"))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    ));
+                }
+                out
+            }
+        }
+    }
+
+    /// Machine-readable report.  Single-run methods keep the exact
+    /// [`RunReport::to_json`] shape (plus `group_dispersions` for
+    /// PERMDISP); pairwise emits one entry per pair under `pairs`.
+    pub fn to_json(&self) -> Json {
+        match self.method {
+            Method::PairwisePermanova => {
+                let r0 = self.primary();
+                Json::obj(vec![
+                    ("version", Json::str(crate::VERSION)),
+                    ("method", Json::str(self.method.name())),
+                    ("backend", Json::str(r0.backend.clone())),
+                    ("n", Json::num(self.n as f64)),
+                    ("k", Json::num(self.k as f64)),
+                    ("n_perms", Json::num(r0.n_perms as f64)),
+                    ("n_comparisons", Json::num(self.pairs.len() as f64)),
+                    (
+                        "pairs",
+                        Json::Arr(
+                            self.pairs
+                                .iter()
+                                .zip(&self.runs)
+                                .map(|(pair, run)| {
+                                    Json::obj(vec![
+                                        ("group_a", Json::num(pair.group_a as f64)),
+                                        ("group_b", Json::num(pair.group_b as f64)),
+                                        ("n", Json::num(pair.n as f64)),
+                                        ("f_obs", Json::num(run.f_obs)),
+                                        ("p_value", Json::num(run.p_value)),
+                                        ("p_adjusted", Json::num(pair.p_adjusted)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            }
+            _ => {
+                let mut doc = self.primary().to_json();
+                if !self.group_dispersions.is_empty() {
+                    if let Json::Obj(m) = &mut doc {
+                        m.insert(
+                            "group_dispersions".into(),
+                            Json::Arr(
+                                self.group_dispersions.iter().map(|&d| Json::num(d)).collect(),
+                            ),
+                        );
+                    }
+                }
+                doc
+            }
+        }
     }
 }
 
@@ -301,6 +486,7 @@ mod tests {
             k: 4,
             s_t: 10.0,
             elapsed_secs: 0.5,
+            method: "permanova".into(),
             backend: "native-tiled".into(),
             kernel: "tiled512".into(),
             perm_block: 0,
@@ -318,11 +504,101 @@ mod tests {
     #[test]
     fn run_report_render_records_backend() {
         let s = sample_report().render();
+        assert!(s.starts_with("PERMANOVA"));
         assert!(s.contains("backend=native-tiled"));
         assert!(s.contains("algo=tiled512"));
         assert!(s.contains("pseudo-F"));
+        assert!(s.contains("s_T"));
         // perm_block = 0: no block annotation for non-batched backends.
         assert!(!s.contains("block="));
+    }
+
+    #[test]
+    fn run_report_render_is_method_aware() {
+        let mut r = sample_report();
+        r.method = "anosim".into();
+        r.kernel = "rank-r".into();
+        let s = r.render();
+        assert!(s.starts_with("ANOSIM"), "{s}");
+        assert!(s.contains("R        = 2.500000"), "{s}");
+        assert!(!s.contains("s_T"), "rank statistic has no s_T: {s}");
+
+        r.method = "permdisp".into();
+        let s = r.render();
+        assert!(s.starts_with("PERMDISP"), "{s}");
+        assert!(s.contains("F        = 2.500000"), "{s}");
+    }
+
+    fn pairwise_analysis() -> AnalysisReport {
+        let mut a = sample_report();
+        a.n = 20;
+        let mut b = sample_report();
+        b.n = 20;
+        b.f_obs = 0.5;
+        b.p_value = 0.8;
+        AnalysisReport {
+            method: Method::PairwisePermanova,
+            n: 30,
+            k: 3,
+            runs: vec![a, b],
+            pairs: vec![
+                PairSummary { group_a: 0, group_b: 1, n: 20, p_adjusted: 0.03 },
+                PairSummary { group_a: 0, group_b: 2, n: 20, p_adjusted: 1.0 },
+            ],
+            group_dispersions: vec![],
+        }
+    }
+
+    #[test]
+    fn analysis_report_derefs_to_primary_run() {
+        let single = AnalysisReport {
+            method: Method::Permanova,
+            n: 40,
+            k: 4,
+            runs: vec![sample_report()],
+            pairs: vec![],
+            group_dispersions: vec![],
+        };
+        assert_eq!(single.f_obs, 2.5);
+        assert_eq!(single.backend, "native-tiled");
+        assert_eq!(single.total_perms(), 100);
+        assert!(single.render().contains("pseudo-F"));
+        // Single-method JSON keeps the RunReport shape.
+        assert_eq!(single.to_json(), sample_report().to_json());
+    }
+
+    #[test]
+    fn analysis_report_renders_pairwise_table() {
+        let r = pairwise_analysis();
+        assert_eq!(r.total_perms(), 200);
+        let s = r.render();
+        assert!(s.starts_with("PAIRWISE-PERMANOVA"), "{s}");
+        assert!(s.contains("comparisons=2"), "{s}");
+        assert!(s.contains("0 vs 1"), "{s}");
+        assert!(s.contains("0 vs 2"), "{s}");
+        let doc = r.to_json();
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req_str("method").unwrap(), "pairwise");
+        assert_eq!(parsed.req_usize("n_comparisons").unwrap(), 2);
+        assert_eq!(parsed.req_arr("pairs").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn analysis_report_appends_dispersions() {
+        let mut r = sample_report();
+        r.method = "permdisp".into();
+        let a = AnalysisReport {
+            method: Method::Permdisp,
+            n: 40,
+            k: 4,
+            runs: vec![r],
+            pairs: vec![],
+            group_dispersions: vec![0.25, 0.5],
+        };
+        assert!(a.render().contains("dispersions: 0.2500, 0.5000"));
+        let parsed = Json::parse(&a.to_json().to_string()).unwrap();
+        assert_eq!(parsed.req_arr("group_dispersions").unwrap().len(), 2);
+        assert_eq!(parsed.req_str("method").unwrap(), "permdisp");
     }
 
     #[test]

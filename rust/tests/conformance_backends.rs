@@ -1,21 +1,30 @@
-//! Cross-backend conformance: for one fixed seed, every backend draws the
-//! *same* permutation stream and must reproduce the same statistics.
+//! Cross-backend × cross-method conformance: for one fixed seed, every
+//! backend draws the *same* permutation stream and must reproduce the same
+//! statistics — for **every** method the engine routes, not just
+//! PERMANOVA's pseudo-F.
 //!
-//! Two tiers of agreement, matching what the arithmetic can actually
+//! Tiers of agreement, matching what the arithmetic can actually
 //! guarantee:
 //!
-//! * **Oracle tier** — every backend's full F-distribution matches the f64
-//!   brute-force oracle to f32-reduction tolerance, and all backends agree
-//!   on the p-value exactly.
-//! * **Bitwise tier** — backends that execute the same f32 operation
-//!   sequence are bitwise identical: `native-batch` ≡ `native-brute` at
-//!   every tested block size (the batched engine's defining contract), and
-//!   `simulator` ≡ `native-flat` (both run the flat kernel).
+//! * **Oracle tier (PERMANOVA)** — every backend's full F-distribution
+//!   matches the f64 brute-force oracle to f32-reduction tolerance, and
+//!   all backends agree on the p-value exactly.
+//! * **Exact tier (ANOSIM / PERMDISP / pairwise)** — the generic methods
+//!   compute in f64 with one shared statistic implementation, so every
+//!   backend must match the legacy standalone oracle functions
+//!   (`anosim`, `permdisp`, `pairwise_permanova`) **exactly**, across
+//!   shard / worker / SMT / block settings.
+//! * **Bitwise tier** — backends that execute the same operation sequence
+//!   are bitwise identical *per method*: `native-batch` ≡ `native-brute`
+//!   at every tested block size, and `simulator` ≡ `native-flat`.
 
 use permanova_apu::backend::execute;
 use permanova_apu::config::{DataSource, RunConfig};
-use permanova_apu::permanova::{fstat_from_sw, st_of, sw_brute_f64};
-use permanova_apu::report::RunReport;
+use permanova_apu::permanova::{
+    anosim, fstat_from_sw, pairwise_permanova, permdisp, st_of, sw_brute_f64, Method,
+    PermanovaOpts, SwAlgorithm,
+};
+use permanova_apu::report::AnalysisReport;
 use permanova_apu::rng::PermutationPlan;
 
 const N: usize = 56;
@@ -23,10 +32,23 @@ const K: usize = 4;
 const N_PERMS: usize = 149;
 const SEED: u64 = 0xC0FFEE;
 
-fn cfg(backend: &str, perm_block: usize) -> RunConfig {
+/// Every backend the conformance sweep covers (xla needs artifacts and is
+/// covered by its own gated tests).
+const BACKENDS: [&str; 7] = [
+    "native",
+    "native-brute",
+    "native-tiled",
+    "native-flat",
+    "native-batch",
+    "simulator",
+    "simulator-gpu",
+];
+
+fn cfg(backend: &str, method: Method, perm_block: usize) -> RunConfig {
     RunConfig {
         data: DataSource::Synthetic { n_dims: N, n_groups: K },
         backend: backend.to_string(),
+        method,
         n_perms: N_PERMS,
         seed: SEED,
         threads: 2,
@@ -35,15 +57,15 @@ fn cfg(backend: &str, perm_block: usize) -> RunConfig {
     }
 }
 
-fn run(backend: &str, perm_block: usize) -> RunReport {
-    let c = cfg(backend, perm_block);
+fn run(backend: &str, method: Method, perm_block: usize) -> AnalysisReport {
+    let c = cfg(backend, method, perm_block);
     let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
     execute(&c, &mat, &grouping).unwrap()
 }
 
 /// The f64 oracle F-distribution for the fixture, straight from the plan.
-fn oracle() -> Vec<f64> {
-    let c = cfg("native-brute", 0);
+fn permanova_oracle() -> Vec<f64> {
+    let c = cfg("native-brute", Method::Permanova, 0);
     let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
     let s_t = st_of(&mat);
     let plan = PermutationPlan::new(grouping.labels().to_vec(), SEED, N_PERMS + 1);
@@ -59,8 +81,8 @@ fn oracle() -> Vec<f64> {
 
 #[test]
 fn every_backend_matches_the_f64_oracle() {
-    let want = oracle();
-    let runs: Vec<(String, RunReport)> = [
+    let want = permanova_oracle();
+    let runs: Vec<(String, AnalysisReport)> = [
         ("native".to_string(), 0usize),
         ("native-brute".to_string(), 0),
         ("native-tiled".to_string(), 0),
@@ -74,7 +96,7 @@ fn every_backend_matches_the_f64_oracle() {
     .into_iter()
     .map(|(name, block)| {
         let label = if block > 0 { format!("{name}/b{block}") } else { name.clone() };
-        (label, run(&name, block))
+        (label, run(&name, Method::Permanova, block))
     })
     .collect();
 
@@ -97,36 +119,165 @@ fn every_backend_matches_the_f64_oracle() {
 }
 
 #[test]
-fn native_batch_is_bitwise_identical_to_brute_at_all_block_sizes() {
-    let brute = run("native-brute", 0);
-    assert_eq!(brute.perm_block, 0);
-    for block in [1usize, 8, 64] {
-        let batch = run("native-batch", block);
-        assert_eq!(batch.backend, "native-batch");
-        assert_eq!(batch.perm_block, block, "report records the resolved block");
-        assert_eq!(
-            batch.f_obs.to_bits(),
-            brute.f_obs.to_bits(),
-            "block={block}: f_obs {} vs {}",
-            batch.f_obs,
-            brute.f_obs
-        );
-        assert_eq!(batch.f_perms.len(), brute.f_perms.len());
-        for (i, (b, s)) in batch.f_perms.iter().zip(&brute.f_perms).enumerate() {
-            assert_eq!(b.to_bits(), s.to_bits(), "block={block} perm {i}: {b} vs {s}");
+fn anosim_matches_its_legacy_oracle_on_every_backend() {
+    let c = cfg("native", Method::Anosim, 0);
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let oracle = anosim(&mat, &grouping, N_PERMS, SEED).unwrap();
+    for backend in BACKENDS {
+        for block in [0usize, 1, 8, 64] {
+            if block > 0 && backend != "native-batch" {
+                continue;
+            }
+            let r = run(backend, Method::Anosim, block);
+            let label = format!("{backend}/b{block}");
+            assert_eq!(r.method, Method::Anosim, "{label}");
+            // Same f64 statistic implementation end to end: exact equality.
+            assert_eq!(r.f_obs, oracle.r_obs, "{label}");
+            assert_eq!(r.p_value, oracle.p_value, "{label}");
+            assert!((-1.0..=1.0).contains(&r.f_obs), "{label}: R = {}", r.f_obs);
         }
-        assert_eq!(batch.p_value, brute.p_value);
     }
 }
 
 #[test]
-fn simulator_is_bitwise_identical_to_native_flat() {
-    let flat = run("native-flat", 0);
-    let sim = run("simulator", 0);
-    assert_eq!(flat.f_obs.to_bits(), sim.f_obs.to_bits());
-    for (a, b) in flat.f_perms.iter().zip(&sim.f_perms) {
-        assert_eq!(a.to_bits(), b.to_bits());
+fn permdisp_matches_its_legacy_oracle_on_every_backend() {
+    let c = cfg("native", Method::Permdisp, 0);
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let oracle = permdisp(&mat, &grouping, N_PERMS, SEED).unwrap();
+    for backend in BACKENDS {
+        for block in [0usize, 1, 8, 64] {
+            if block > 0 && backend != "native-batch" {
+                continue;
+            }
+            let r = run(backend, Method::Permdisp, block);
+            let label = format!("{backend}/b{block}");
+            assert_eq!(r.f_obs, oracle.f_obs, "{label}");
+            assert_eq!(r.p_value, oracle.p_value, "{label}");
+            assert_eq!(r.group_dispersions, oracle.group_dispersions, "{label}");
+        }
     }
-    // The simulator additionally reports modelled MI300A time.
-    assert!(sim.per_device.iter().map(|d| d.simulated_secs).sum::<f64>() > 0.0);
+}
+
+#[test]
+fn pairwise_matches_its_legacy_oracle_on_every_backend_kernel_modulo() {
+    let c = cfg("native-brute", Method::PairwisePermanova, 0);
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    // The legacy sweep runs the f32 brute kernel per pair — the same f32
+    // op sequence `native-brute` executes, so agreement is exact.
+    let oracle = pairwise_permanova(
+        &mat,
+        &grouping,
+        N_PERMS,
+        &PermanovaOpts { algo: SwAlgorithm::Brute, seed: SEED, threads: 2, keep_f_perms: false },
+    )
+    .unwrap();
+    let r = run("native-brute", Method::PairwisePermanova, 0);
+    assert_eq!(r.runs.len(), oracle.entries.len());
+    assert_eq!(r.pairs.len(), oracle.n_comparisons);
+    for ((pair, run), want) in r.pairs.iter().zip(&r.runs).zip(&oracle.entries) {
+        let label = format!("pair ({}, {})", pair.group_a, pair.group_b);
+        assert_eq!((pair.group_a, pair.group_b), (want.group_a, want.group_b), "{label}");
+        assert_eq!(pair.n, want.n, "{label}");
+        assert_eq!(run.f_obs.to_bits(), want.f_obs.to_bits(), "{label}");
+        assert_eq!(run.p_value, want.p_value, "{label}");
+        assert_eq!(pair.p_adjusted, want.p_adjusted, "{label}");
+    }
+    // Every backend agrees with the oracle on the per-pair p-values (the
+    // f32 kernels differ only in reduction order, far below the separation
+    // between distinct F values in the null distribution).
+    for backend in BACKENDS {
+        let r = run(backend, Method::PairwisePermanova, 0);
+        for (run, want) in r.runs.iter().zip(&oracle.entries) {
+            assert_eq!(run.p_value, want.p_value, "{backend}");
+        }
+        for (pair, want) in r.pairs.iter().zip(&oracle.entries) {
+            assert_eq!(pair.p_adjusted, want.p_adjusted, "{backend}");
+        }
+    }
+}
+
+#[test]
+fn exact_oracle_agreement_survives_scheduling_knobs() {
+    // The acceptance contract: per-method p-values (and the f64 statistics
+    // themselves) agree with the oracle across shard / worker / SMT /
+    // block settings.
+    let c = cfg("native-batch", Method::Anosim, 0);
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let a_oracle = anosim(&mat, &grouping, N_PERMS, SEED).unwrap();
+    let d_oracle = permdisp(&mat, &grouping, N_PERMS, SEED).unwrap();
+    for (shard_size, threads, smt) in
+        [(1usize, 1usize, false), (7, 3, true), (64, 2, false), (0, 0, true)]
+    {
+        for block in [1usize, 8, 64] {
+            let mut ca = cfg("native-batch", Method::Anosim, block);
+            ca.shard_size = shard_size;
+            ca.threads = threads;
+            ca.smt_oversubscribe = smt;
+            let ra = execute(&ca, &mat, &grouping).unwrap();
+            assert_eq!(
+                ra.f_obs, a_oracle.r_obs,
+                "anosim shard={shard_size} threads={threads} smt={smt} block={block}"
+            );
+            assert_eq!(ra.p_value, a_oracle.p_value);
+
+            let mut cd = cfg("native-batch", Method::Permdisp, block);
+            cd.shard_size = shard_size;
+            cd.threads = threads;
+            cd.smt_oversubscribe = smt;
+            let rd = execute(&cd, &mat, &grouping).unwrap();
+            assert_eq!(rd.f_obs, d_oracle.f_obs);
+            assert_eq!(rd.p_value, d_oracle.p_value);
+        }
+    }
+}
+
+#[test]
+fn native_batch_is_bitwise_identical_to_brute_at_all_block_sizes_per_method() {
+    for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+        let brute = run("native-brute", method, 0);
+        assert_eq!(brute.perm_block, 0);
+        for block in [1usize, 8, 64] {
+            let batch = run("native-batch", method, block);
+            assert_eq!(batch.backend, "native-batch");
+            assert_eq!(batch.perm_block, block, "report records the resolved block");
+            assert_eq!(
+                batch.f_obs.to_bits(),
+                brute.f_obs.to_bits(),
+                "{method:?} block={block}: f_obs {} vs {}",
+                batch.f_obs,
+                brute.f_obs
+            );
+            assert_eq!(batch.f_perms.len(), brute.f_perms.len());
+            for (i, (b, s)) in batch.f_perms.iter().zip(&brute.f_perms).enumerate() {
+                assert_eq!(
+                    b.to_bits(),
+                    s.to_bits(),
+                    "{method:?} block={block} perm {i}: {b} vs {s}"
+                );
+            }
+            assert_eq!(batch.p_value, brute.p_value);
+        }
+    }
+}
+
+#[test]
+fn simulator_is_bitwise_identical_to_native_flat_per_method() {
+    for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+        let flat = run("native-flat", method, 0);
+        let sim = run("simulator", method, 0);
+        assert_eq!(flat.f_obs.to_bits(), sim.f_obs.to_bits(), "{method:?}");
+        for (a, b) in flat.f_perms.iter().zip(&sim.f_perms) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{method:?}");
+        }
+        // The simulator additionally reports modelled MI300A time, but
+        // only for PERMANOVA — the model is calibrated for the f32 d²
+        // stream; ANOSIM's f64 rank stream and PERMDISP's O(n) loop are
+        // outside its regime and report none.
+        let modelled: f64 = sim.per_device.iter().map(|d| d.simulated_secs).sum();
+        if method == Method::Permanova {
+            assert!(modelled > 0.0, "{method:?}");
+        } else {
+            assert_eq!(modelled, 0.0, "{method:?}");
+        }
+    }
 }

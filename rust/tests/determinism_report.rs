@@ -10,6 +10,7 @@
 use permanova_apu::backend::execute;
 use permanova_apu::config::{DataSource, RunConfig};
 use permanova_apu::jsonio::Json;
+use permanova_apu::permanova::Method;
 use permanova_apu::report::{DeviceStats, RunReport};
 
 fn cfg(backend: &str) -> RunConfig {
@@ -25,34 +26,37 @@ fn cfg(backend: &str) -> RunConfig {
 #[test]
 fn identical_results_across_scheduling_configs() {
     for backend in ["native-batch", "native-flat", "native-brute"] {
-        let base_cfg = cfg(backend);
-        let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
-        let mut base = base_cfg.clone();
-        base.threads = 1;
-        base.shard_size = 1;
-        let want = execute(&base, &mat, &grouping).unwrap();
-        // shard size × worker count × SMT oversubscription all vary; none
-        // may change a single output bit.
-        for (shard_size, threads, smt) in [
-            (1usize, 2usize, false),
-            (5, 3, false),
-            (64, 2, true),
-            (7, 4, true),
-            (0, 0, false), // fully automatic
-            (0, 0, true),
-        ] {
-            let mut c = base_cfg.clone();
-            c.shard_size = shard_size;
-            c.threads = threads;
-            c.smt_oversubscribe = smt;
-            let r = execute(&c, &mat, &grouping).unwrap();
-            assert_eq!(
-                want.f_obs.to_bits(),
-                r.f_obs.to_bits(),
-                "{backend} shard={shard_size} threads={threads} smt={smt}"
-            );
-            assert_eq!(want.f_perms, r.f_perms, "{backend} shard={shard_size}");
-            assert_eq!(want.p_value, r.p_value);
+        for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+            let mut base_cfg = cfg(backend);
+            base_cfg.method = method;
+            let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
+            let mut base = base_cfg.clone();
+            base.threads = 1;
+            base.shard_size = 1;
+            let want = execute(&base, &mat, &grouping).unwrap();
+            // shard size × worker count × SMT oversubscription all vary;
+            // none may change a single output bit — for any method.
+            for (shard_size, threads, smt) in [
+                (1usize, 2usize, false),
+                (5, 3, false),
+                (64, 2, true),
+                (7, 4, true),
+                (0, 0, false), // fully automatic
+                (0, 0, true),
+            ] {
+                let mut c = base_cfg.clone();
+                c.shard_size = shard_size;
+                c.threads = threads;
+                c.smt_oversubscribe = smt;
+                let r = execute(&c, &mat, &grouping).unwrap();
+                assert_eq!(
+                    want.f_obs.to_bits(),
+                    r.f_obs.to_bits(),
+                    "{backend}/{method:?} shard={shard_size} threads={threads} smt={smt}"
+                );
+                assert_eq!(want.f_perms, r.f_perms, "{backend}/{method:?} shard={shard_size}");
+                assert_eq!(want.p_value, r.p_value);
+            }
         }
     }
 }
@@ -105,6 +109,7 @@ fn sample_report() -> RunReport {
         k: 4,
         s_t: 10.0,
         elapsed_secs: 0.5,
+        method: "permanova".into(),
         backend: "native-batch".into(),
         kernel: "brute-block".into(),
         perm_block: 64,
@@ -159,6 +164,25 @@ fn live_report_json_carries_perm_block_and_kernel() {
         parsed.req_usize("perm_block").unwrap(),
         permanova_apu::permanova::DEFAULT_PERM_BLOCK
     );
+    assert_eq!(parsed.req_str("method").unwrap(), "permanova");
     assert_eq!(parsed.req_str("backend").unwrap(), "native-batch");
     assert_eq!(parsed.req_str("algo").unwrap(), "brute-block");
+}
+
+#[test]
+fn live_report_json_is_method_tagged() {
+    let mut c = cfg("native-flat");
+    c.method = Method::Anosim;
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let r = execute(&c, &mat, &grouping).unwrap();
+    let parsed = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+    assert_eq!(parsed.req_str("method").unwrap(), "anosim");
+    assert_eq!(parsed.req_str("algo").unwrap(), "rank-r");
+
+    c.method = Method::PairwisePermanova;
+    let r = execute(&c, &mat, &grouping).unwrap();
+    let parsed = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+    assert_eq!(parsed.req_str("method").unwrap(), "pairwise");
+    assert_eq!(parsed.req_usize("n_comparisons").unwrap(), 3);
+    assert_eq!(parsed.req_arr("pairs").unwrap().len(), 3);
 }

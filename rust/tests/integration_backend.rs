@@ -9,7 +9,7 @@ use permanova_apu::backend::{execute, known_backends, Registry};
 use permanova_apu::config::{DataSource, RunConfig};
 use permanova_apu::dmat::DistanceMatrix;
 use permanova_apu::permanova::{
-    fstat_from_sw, st_of, sw_brute_f64, Grouping, SwAlgorithm, DEFAULT_TILE,
+    fstat_from_sw, st_of, sw_brute_f64, Grouping, Method, SwAlgorithm, DEFAULT_TILE,
 };
 use permanova_apu::rng::PermutationPlan;
 
@@ -117,6 +117,39 @@ fn cross_backend_equivalence_against_f64_oracle() {
     assert_eq!(brute.f_perms, batch.f_perms);
     assert_eq!(batch.perm_block, permanova_apu::permanova::DEFAULT_PERM_BLOCK);
     assert_eq!(brute.perm_block, 0);
+}
+
+/// The acceptance contract of the statistic-generic redesign: all four
+/// methods run through every registered backend via `backend::execute`
+/// (`xla` excepted here — it cannot open without AOT artifacts and is
+/// covered by its own gated tests).
+#[test]
+fn every_method_runs_through_every_registered_backend() {
+    let c0 = cfg("native", 30, 3, 19);
+    let (mat, grouping) = permanova_apu::coordinator::load_data(&c0).unwrap();
+    for backend in known_backends() {
+        if backend == "xla" {
+            continue;
+        }
+        for method in Method::ALL {
+            let mut c = cfg(&backend, 30, 3, 19);
+            c.method = method;
+            let r = execute(&c, &mat, &grouping)
+                .unwrap_or_else(|e| panic!("{backend}/{method:?}: {e}"));
+            assert_eq!(r.method, method);
+            assert!(r.p_value > 0.0 && r.p_value <= 1.0, "{backend}/{method:?}");
+            let want_runs =
+                if method == Method::PairwisePermanova { 3 } else { 1 };
+            assert_eq!(r.runs.len(), want_runs, "{backend}/{method:?}");
+        }
+    }
+}
+
+/// Typo'd backend names come back with a did-you-mean suggestion.
+#[test]
+fn unknown_backend_suggests_nearest() {
+    let e = cfg("native-batched", 24, 2, 9).validate().unwrap_err().to_string();
+    assert!(e.contains("did you mean \"native-batch\"?"), "{e}");
 }
 
 /// The registry is the single source of backend names: configs validate

@@ -5,8 +5,11 @@
 //! RNG — deterministic, but broad enough to catch structural mistakes:
 //!
 //! * pseudo-F is invariant under a whole-matrix row/column permutation
-//!   applied together with the matching label permutation;
-//! * permutation p-values always lie in `(0, 1]`;
+//!   applied together with the matching label permutation — and so are
+//!   ANOSIM's R (the pair-rank multiset is permutation-invariant) and
+//!   PERMDISP's F (distances-to-centroid are coordinate-free);
+//! * ANOSIM's R always lies in `[-1, 1]` and permutation p-values always
+//!   lie in `(0, 1]`, for every method through every backend;
 //! * degenerate groupings are rejected, and the near-degenerate
 //!   perfectly-separated case yields exactly the F the f64 oracle predicts.
 
@@ -14,7 +17,8 @@ use permanova_apu::backend::execute;
 use permanova_apu::config::{DataSource, RunConfig};
 use permanova_apu::dmat::DistanceMatrix;
 use permanova_apu::permanova::{
-    fstat_from_sw, permanova, pvalue, st_of, sw_brute_f64, Grouping, PermanovaOpts, SwAlgorithm,
+    anosim, fstat_from_sw, permanova, permdisp, pvalue, st_of, sw_brute_f64, Grouping, Method,
+    PermanovaOpts, SwAlgorithm,
 };
 use permanova_apu::rng::{shuffle, Xoshiro256pp};
 
@@ -59,6 +63,106 @@ fn pseudo_f_is_invariant_under_joint_relabelling() {
                 rel < 1e-9,
                 "n={n} k={k} round={round}: F {f_perm} vs {f_base} (rel {rel})"
             );
+        }
+    }
+}
+
+#[test]
+fn anosim_r_is_invariant_under_joint_relabelling() {
+    for (n, k, seed) in [(20usize, 2usize, 1u64), (33, 3, 2), (48, 4, 3)] {
+        let mat = DistanceMatrix::random_euclidean(n, 6, seed);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        let base = anosim(&mat, &grouping, 9, 1).unwrap().r_obs;
+
+        let mut rng = Xoshiro256pp::new(seed ^ 0xFACE);
+        for round in 0..4 {
+            let mut sigma: Vec<usize> = (0..n).collect();
+            shuffle(&mut rng, &mut sigma);
+            let (pm, pl) = permuted(&mat, grouping.labels(), &sigma);
+            let pg = Grouping::new(pl).unwrap();
+            let got = anosim(&pm, &pg, 9, 1).unwrap().r_obs;
+            // Each pair keeps its distance (hence its mid-rank); only the
+            // f64 summation order changes.
+            let diff = (got - base).abs();
+            assert!(diff < 1e-9, "n={n} k={k} round={round}: R {got} vs {base}");
+        }
+    }
+}
+
+#[test]
+fn permdisp_f_is_invariant_under_joint_relabelling() {
+    // PCoA re-derives the embedding per matrix, so invariance holds to
+    // eigensolver tolerance, not bitwise.
+    for (n, k, seed) in [(24usize, 2usize, 5u64), (30, 3, 6)] {
+        let mat = DistanceMatrix::random_euclidean(n, 5, seed);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        let base = permdisp(&mat, &grouping, 9, 1).unwrap().f_obs;
+
+        let mut rng = Xoshiro256pp::new(seed ^ 0xFACE);
+        for round in 0..3 {
+            let mut sigma: Vec<usize> = (0..n).collect();
+            shuffle(&mut rng, &mut sigma);
+            let (pm, pl) = permuted(&mat, grouping.labels(), &sigma);
+            let pg = Grouping::new(pl).unwrap();
+            let got = permdisp(&pm, &pg, 9, 1).unwrap().f_obs;
+            let rel = (got - base).abs() / base.abs().max(1e-12);
+            assert!(rel < 1e-5, "n={n} k={k} round={round}: F {got} vs {base} (rel {rel})");
+        }
+    }
+}
+
+#[test]
+fn anosim_r_bounded_and_p_in_unit_interval_across_backends() {
+    for backend in
+        ["native", "native-brute", "native-tiled", "native-flat", "native-batch", "simulator"]
+    {
+        for seed in [3u64, 7, 11] {
+            let cfg = RunConfig {
+                data: DataSource::Synthetic { n_dims: 26, n_groups: 3 },
+                backend: backend.to_string(),
+                method: Method::Anosim,
+                n_perms: 29,
+                seed,
+                threads: 2,
+                ..Default::default()
+            };
+            let mat = DistanceMatrix::random_euclidean(26, 5, seed ^ 0xB0);
+            let grouping = Grouping::balanced(26, 3).unwrap();
+            let r = execute(&cfg, &mat, &grouping).unwrap();
+            assert!(
+                (-1.0..=1.0).contains(&r.f_obs),
+                "{backend} seed={seed}: R = {}",
+                r.f_obs
+            );
+            assert!(r.p_value > 0.0 && r.p_value <= 1.0, "{backend}: p = {}", r.p_value);
+        }
+    }
+}
+
+#[test]
+fn every_method_p_in_unit_interval_across_backends() {
+    let mat = DistanceMatrix::random_euclidean(28, 5, 11);
+    let grouping = Grouping::balanced(28, 4).unwrap();
+    for backend in ["native-brute", "native-flat", "native-batch", "simulator"] {
+        for method in Method::ALL {
+            let cfg = RunConfig {
+                data: DataSource::Synthetic { n_dims: 28, n_groups: 4 },
+                backend: backend.to_string(),
+                method,
+                n_perms: 29,
+                seed: 5,
+                threads: 2,
+                ..Default::default()
+            };
+            let r = execute(&cfg, &mat, &grouping).unwrap();
+            assert!(
+                r.p_value > 0.0 && r.p_value <= 1.0,
+                "{backend}/{method:?}: p = {}",
+                r.p_value
+            );
+            for run in &r.runs {
+                assert!(run.p_value > 0.0 && run.p_value <= 1.0, "{backend}/{method:?}");
+            }
         }
     }
 }
