@@ -9,7 +9,7 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: all build test bench bench-quick lint fmt clippy doc artifacts pytest clean
+.PHONY: all build test bench bench-quick serve-demo lint fmt clippy doc artifacts pytest clean
 
 all: build
 
@@ -29,6 +29,19 @@ bench-quick:
 	$(CARGO) run --release -- bench --check BENCH_PERMANOVA.json
 	$(CARGO) run --release -- bench --quick --method anosim --out BENCH_ANOSIM.json
 	$(CARGO) run --release -- bench --check BENCH_ANOSIM.json
+
+# The shared-dataset service demo: a heterogeneous JSONL batch over one
+# dataset (distinct permutation seeds, shared data seed) served through
+# the DatasetCache + one scheduler pool, then validated.
+serve-demo:
+	printf '%s\n' \
+	  '{"id": "perma", "n_perms": 499, "seed": 1, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}' \
+	  '{"id": "rank", "method": "anosim", "backend": "native-batch", "n_perms": 499, "seed": 2, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}' \
+	  '{"id": "disp", "method": "permdisp", "n_perms": 499, "seed": 3, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}' \
+	  '{"id": "pairs", "method": "pairwise", "n_perms": 199, "seed": 4, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}' \
+	  > demo_jobs.jsonl
+	$(CARGO) run --release -- serve --jobs demo_jobs.jsonl --out demo_responses.jsonl
+	$(CARGO) run --release -- serve --check demo_responses.jsonl
 
 lint: fmt clippy
 

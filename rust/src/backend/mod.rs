@@ -217,6 +217,26 @@ pub fn execute(
     mat: &DistanceMatrix,
     grouping: &Grouping,
 ) -> Result<AnalysisReport> {
+    execute_prepared(cfg, mat, grouping, None)
+}
+
+/// [`execute`] with an optionally **pre-prepared** statistic prelude — the
+/// seam the service layer's `DatasetCache` reuses kernels through.
+///
+/// When `prelude` is `Some`, it must be the [`StatKernel`] prepared for
+/// exactly this `(cfg.method, mat, grouping)` problem (checked via
+/// [`StatKernel::check_problem`]); the engine then skips the per-call
+/// precomputation.  Reuse is bitwise-neutral: the prelude carries the same
+/// values `StatKernel::prepare` would recompute, so warm-cache results are
+/// bit-identical to cold ones.  [`Method::PairwisePermanova`] prepares one
+/// kernel per group-pair sub-problem *below* this seam, so it rejects a
+/// caller-supplied prelude.
+pub fn execute_prepared(
+    cfg: &RunConfig,
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    prelude: Option<&StatKernel>,
+) -> Result<AnalysisReport> {
     if grouping.n() != mat.n() {
         return Err(Error::InvalidInput(format!(
             "grouping n = {} vs matrix n = {}",
@@ -226,6 +246,23 @@ pub fn execute(
     }
     if cfg.n_perms == 0 {
         return Err(Error::InvalidInput("n_perms must be >= 1".into()));
+    }
+    // Validate a caller-supplied prelude before paying for backend
+    // construction (opening e.g. the XLA runtime reads artifacts).
+    if let Some(kernel) = prelude {
+        if cfg.method == Method::PairwisePermanova {
+            return Err(Error::InvalidInput(
+                "pairwise PERMANOVA prepares one kernel per pair; pass no prelude".into(),
+            ));
+        }
+        if kernel.method() != cfg.method {
+            return Err(Error::InvalidInput(format!(
+                "prelude prepared for {:?}, run requests {:?}",
+                kernel.method(),
+                cfg.method
+            )));
+        }
+        kernel.check_problem(mat, grouping)?;
     }
     // One backend instance serves every scheduled job of this call — for
     // pairwise that is k(k−1)/2 jobs, and re-opening e.g. the XLA runtime
@@ -247,6 +284,7 @@ pub fn execute(
                         &sub_grouping,
                         Method::Permanova,
                         pairwise_seed(cfg.seed, a, b),
+                        None,
                     )?;
                     pairs.push(PairSummary {
                         group_a: a,
@@ -268,7 +306,7 @@ pub fn execute(
         }
         method => {
             let (run, group_dispersions) =
-                run_single(cfg, backend.as_ref(), mat, grouping, method, cfg.seed)?;
+                run_single(cfg, backend.as_ref(), mat, grouping, method, cfg.seed, prelude)?;
             Ok(AnalysisReport {
                 method,
                 n: mat.n(),
@@ -281,9 +319,10 @@ pub fn execute(
     }
 }
 
-/// One scheduled engine job: prepare the kernel, run the full plan on the
-/// given backend, aggregate one [`RunReport`].  Returns the PERMDISP
-/// group dispersions alongside (empty for the other methods).
+/// One scheduled engine job: prepare the kernel (or reuse the caller's
+/// prelude), run the full plan on the given backend, aggregate one
+/// [`RunReport`].  Returns the PERMDISP group dispersions alongside (empty
+/// for the other methods).
 fn run_single(
     cfg: &RunConfig,
     backend: &dyn Backend,
@@ -291,17 +330,27 @@ fn run_single(
     grouping: &Grouping,
     method: Method,
     seed: u64,
+    prelude: Option<&StatKernel>,
 ) -> Result<(RunReport, Vec<f64>)> {
     let caps = backend.capabilities();
 
-    let stat = StatKernel::prepare(method, mat, grouping)?;
+    // Reuse the caller's prepared kernel when given (validated by
+    // `execute_prepared`); otherwise prepare one for this job.
+    let prepared;
+    let stat: &StatKernel = match prelude {
+        Some(k) => k,
+        None => {
+            prepared = StatKernel::prepare(method, mat, grouping)?;
+            &prepared
+        }
+    };
     let group_dispersions = stat.group_dispersions().to_vec();
     let total = cfg.n_perms + 1; // index 0 = observed labelling
     let perms = PermutationPlan::new(grouping.labels().to_vec(), seed, total);
     let shard = cfg.shard_spec();
     let t0 = Instant::now();
 
-    let plan = BatchPlan::full(mat, grouping, &perms, &stat, shard);
+    let plan = BatchPlan::full(mat, grouping, &perms, stat, shard);
     let batch = backend.run_batch(&plan)?;
     if batch.stats.len() != total {
         return Err(Error::Coordinator(format!(
@@ -483,6 +532,44 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn execute_prepared_is_bitwise_identical_to_cold() {
+        let (mat, grouping) = fixture(36, 3);
+        for backend in ["native-brute", "native-batch", "simulator"] {
+            let mut c = cfg(backend);
+            c.n_perms = 49;
+            for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+                c.method = method;
+                let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
+                let cold = execute(&c, &mat, &grouping).unwrap();
+                let warm = execute_prepared(&c, &mat, &grouping, Some(&kernel)).unwrap();
+                assert_eq!(cold.f_obs.to_bits(), warm.f_obs.to_bits(), "{backend} {method:?}");
+                assert_eq!(cold.p_value, warm.p_value);
+                for (a, b) in cold.f_perms.iter().zip(&warm.f_perms) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{backend} {method:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn execute_prepared_rejects_mismatched_preludes() {
+        let (mat, grouping) = fixture(36, 3);
+        let c = cfg("native-brute");
+        // Wrong method for the config.
+        let anosim = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
+        assert!(execute_prepared(&c, &mat, &grouping, Some(&anosim)).is_err());
+        // Right method, wrong problem size.
+        let (other, other_g) = fixture(40, 4);
+        let foreign = StatKernel::prepare(Method::Permanova, &other, &other_g).unwrap();
+        assert!(execute_prepared(&c, &mat, &grouping, Some(&foreign)).is_err());
+        // Pairwise never takes a caller prelude.
+        let mut pw = cfg("native-brute");
+        pw.method = Method::PairwisePermanova;
+        let perma = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
+        assert!(execute_prepared(&pw, &mat, &grouping, Some(&perma)).is_err());
     }
 
     #[test]

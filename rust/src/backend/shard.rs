@@ -16,14 +16,22 @@
 //!   in the permutation hot path lives in this function);
 //! * [`with_static_pool`] — the persistent, barrier-synchronized,
 //!   statically-partitioned pool STREAM needs (timed regions must exclude
-//!   thread spawn, as OpenMP's do).
+//!   thread spawn, as OpenMP's do);
+//! * [`with_shared_pool`] / [`SharedPool`] — the service layer's persistent
+//!   work-crew: one set of worker threads serving *every* sharded run
+//!   dispatched inside its scope, so a batch of engine jobs shares one
+//!   pool instead of spawning one per call.  While a shared pool is active
+//!   on the dispatching thread, [`run_sharded_with`] routes through it
+//!   transparently — backends need no changes.
 //!
 //! Determinism contract: results never depend on the shard size, worker
-//! count or SMT setting — every output index is computed independently.
-//! The tests at the bottom pin that contract.
+//! count, SMT setting or whether a shared pool served the run — every
+//! output index is computed independently.  The tests at the bottom pin
+//! that contract.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Barrier;
+use std::sync::{Barrier, Mutex};
 
 /// Scheduling knobs for one sharded run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -169,23 +177,220 @@ where
     let cursor = ShardCursor::new(total);
     let base = SendPtr(out.as_mut_ptr());
 
+    let worker = |t: usize| {
+        // Cap participation at the spec's thread count: a pool wider than
+        // the request leaves its extra workers idle, so the `threads` knob
+        // keeps bounding parallelism.  (Results are t-independent either
+        // way — the cursor hands out disjoint ranges.)
+        if t >= threads {
+            return;
+        }
+        let base = &base;
+        let mut state = init();
+        while let Some(sh) = cursor.claim(shard) {
+            // SAFETY: `claim` hands out disjoint [start, end) ranges
+            // within `out`, which outlives this call; no other code
+            // touches `out` while the workers run.
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(base.0.add(sh.start), sh.len()) };
+            fill(&mut state, sh.start, slice);
+        }
+    };
+
+    // A shared pool registered on this thread serves the run with its
+    // persistent workers; otherwise spawn a scoped crew for just this call.
+    if let Some(pool) = SharedPool::current() {
+        pool.run(&worker);
+        return;
+    }
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| {
-                let base = &base;
-                let mut state = init();
-                while let Some(sh) = cursor.claim(shard) {
-                    // SAFETY: `claim` hands out disjoint [start, end)
-                    // ranges within `out`, which outlives the scope; no
-                    // other code touches `out` while the scope runs.
-                    let slice = unsafe {
-                        std::slice::from_raw_parts_mut(base.0.add(sh.start), sh.len())
-                    };
-                    fill(&mut state, sh.start, slice);
-                }
-            });
+        for t in 0..threads {
+            let worker = &worker;
+            s.spawn(move || worker(t));
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// The shared work-crew: one persistent pool for a whole batch of jobs.
+// ---------------------------------------------------------------------------
+
+/// The job a [`SharedPool`] is currently running, type-erased through a
+/// thin-pointer trampoline (no fat-pointer lifetime juggling): `call`
+/// invokes the borrowed closure behind `data` with a worker index.
+#[derive(Clone, Copy)]
+struct PoolJob {
+    call: Option<unsafe fn(*const (), usize)>,
+    data: *const (),
+}
+
+// SAFETY: the pointer is only dereferenced between the dispatch barriers,
+// while `SharedPool::run` keeps the closure borrowed on the driver thread.
+unsafe impl Send for PoolJob {}
+
+unsafe fn pool_trampoline<F: Fn(usize) + Sync>(data: *const (), t: usize) {
+    // SAFETY: `data` was cast from `&F` in `SharedPool::run`, which blocks
+    // until every worker is done with it.
+    unsafe { (*(data as *const F))(t) }
+}
+
+/// Handle to a running shared worker crew (see [`with_shared_pool`]).
+///
+/// While registered as the dispatching thread's ambient pool, every
+/// [`run_sharded_with`] / [`run_sharded`] call routes through it — so a
+/// batch of engine jobs reuses one set of threads instead of spawning a
+/// scoped crew per call.
+pub struct SharedPool<'env> {
+    threads: usize,
+    barrier: &'env Barrier,
+    job: &'env Mutex<PoolJob>,
+    dispatched: &'env AtomicUsize,
+    /// Set when a worker's job panicked (the panic is caught so the
+    /// worker still reaches its barrier; `run` re-raises it).
+    poisoned: &'env std::sync::atomic::AtomicBool,
+}
+
+thread_local! {
+    /// The shared pool ambient on this thread (null = none).  Stored as a
+    /// type-erased raw pointer; only valid inside the registering
+    /// [`with_shared_pool`] driver's dynamic extent.
+    static AMBIENT_POOL: Cell<*const ()> = const { Cell::new(std::ptr::null()) };
+}
+
+/// Restores the previously ambient pool when dropped.
+struct AmbientGuard(*const ());
+
+impl Drop for AmbientGuard {
+    fn drop(&mut self) {
+        AMBIENT_POOL.with(|c| c.set(self.0));
+    }
+}
+
+/// Releases a shared pool's workers into shutdown when dropped — on the
+/// normal path *and* when the driver panics, so an unwinding driver can't
+/// leave the crew parked at the barrier and deadlock the scope join.
+struct ShutdownGuard<'a> {
+    job: &'a Mutex<PoolJob>,
+    barrier: &'a Barrier,
+}
+
+impl Drop for ShutdownGuard<'_> {
+    fn drop(&mut self) {
+        *self.job.lock().unwrap() = PoolJob { call: None, data: std::ptr::null() };
+        self.barrier.wait();
+    }
+}
+
+impl<'env> SharedPool<'env> {
+    /// Worker threads in the crew.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Jobs dispatched through the pool so far (sharded runs served).
+    pub fn jobs_dispatched(&self) -> usize {
+        self.dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Run `work(t)` on every worker `t in 0..threads` and wait for all of
+    /// them.  The closure is borrowed only for the duration of this call.
+    ///
+    /// A panic inside `work` on any worker is caught there (so every
+    /// worker still reaches the join barrier — no deadlock) and re-raised
+    /// here on the dispatching thread, matching the scoped-crew path's
+    /// panic-at-join behaviour.  The original panic message has already
+    /// been printed by the panic hook at unwind time.
+    pub fn run<F: Fn(usize) + Sync>(&self, work: &F) {
+        *self.job.lock().unwrap() =
+            PoolJob { call: Some(pool_trampoline::<F>), data: work as *const F as *const () };
+        self.dispatched.fetch_add(1, Ordering::Relaxed);
+        self.barrier.wait(); // release the workers
+        self.barrier.wait(); // join the workers
+        if self.poisoned.swap(false, Ordering::AcqRel) {
+            panic!("a shared-pool worker panicked while running a dispatched job");
+        }
+    }
+
+    /// The pool ambient on the calling thread, if any.
+    fn current<'a>() -> Option<&'a SharedPool<'a>> {
+        AMBIENT_POOL.with(|c| {
+            let p = c.get();
+            if p.is_null() {
+                None
+            } else {
+                // SAFETY: non-null only inside `with_shared_pool`'s driver
+                // extent, where the handle (and everything it borrows) is
+                // alive on this thread's call stack.
+                Some(unsafe { &*(p as *const SharedPool<'a>) })
+            }
+        })
+    }
+}
+
+/// Spawn a persistent crew of `workers` threads (0 = all available), make
+/// it the calling thread's **ambient** pool, and run `driver`.  Every
+/// sharded run the driver performs — directly or deep inside
+/// `backend::run_batch` — is served by this one crew; the pool tears down
+/// when the driver returns, passing its value through.
+///
+/// This is the "one scheduler pool per batch, not per call" seam the
+/// service layer leans on: thread spawn is paid once per batch, and the
+/// scheduling knobs of each individual job still apply (a job wanting
+/// fewer threads leaves the extra workers idle for that job).
+pub fn with_shared_pool<R>(workers: usize, driver: impl FnOnce(&SharedPool<'_>) -> R) -> R {
+    let threads = if workers > 0 {
+        workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    let barrier = Barrier::new(threads + 1);
+    let job = Mutex::new(PoolJob { call: None, data: std::ptr::null() });
+    let dispatched = AtomicUsize::new(0);
+    let poisoned = std::sync::atomic::AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let job = &job;
+            let poisoned = &poisoned;
+            s.spawn(move || loop {
+                barrier.wait(); // wait for a dispatch (or shutdown)
+                let slot = *job.lock().unwrap();
+                match slot.call {
+                    None => break,
+                    // SAFETY: `run` keeps the closure alive until the
+                    // second barrier below.  Catch a job panic so this
+                    // worker still reaches that barrier — `run` re-raises
+                    // it on the dispatching thread.
+                    Some(call) => {
+                        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || unsafe { call(slot.data, t) },
+                        ));
+                        if r.is_err() {
+                            poisoned.store(true, Ordering::Release);
+                        }
+                    }
+                }
+                barrier.wait(); // job done
+            });
+        }
+        let pool = SharedPool {
+            threads,
+            barrier: &barrier,
+            job: &job,
+            dispatched: &dispatched,
+            poisoned: &poisoned,
+        };
+        let prev = AMBIENT_POOL.with(|c| c.replace(&pool as *const SharedPool<'_> as *const ()));
+        // Drop runs in reverse declaration order, so an unwinding driver
+        // first de-registers the ambient pool (`guard`), then releases the
+        // crew into shutdown (`shutdown`) — no deadlock at the scope join.
+        let shutdown = ShutdownGuard { job: &job, barrier: &barrier };
+        let guard = AmbientGuard(prev);
+        let out = driver(&pool);
+        drop(guard); // de-register before tearing the crew down
+        drop(shutdown); // release the workers into shutdown
+        out
+    })
 }
 
 /// Iterate `[start, start + len)` in consecutive blocks of at most `block`
@@ -429,6 +634,101 @@ mod tests {
         ] {
             assert_eq!(base, compute(&spec), "{spec:?}");
         }
+    }
+
+    #[test]
+    fn shared_pool_serves_sharded_runs_unchanged() {
+        let compute = || {
+            let mut out = vec![0.0f32; 333];
+            run_sharded(
+                &ShardSpec { shard_size: 10, workers: 4, smt: false },
+                &mut out,
+                |start, slice| {
+                    for (i, v) in slice.iter_mut().enumerate() {
+                        let x = (start + i) as f32;
+                        *v = x.sqrt() * 1.5;
+                    }
+                },
+            );
+            out
+        };
+        let base = compute();
+        with_shared_pool(3, |pool| {
+            assert_eq!(pool.threads(), 3);
+            assert_eq!(pool.jobs_dispatched(), 0);
+            for round in 1..=4 {
+                assert_eq!(base, compute(), "round {round}");
+                assert_eq!(pool.jobs_dispatched(), round, "one dispatch per sharded run");
+            }
+        });
+        // The guard de-registers the pool: runs after the scope still work.
+        assert_eq!(base, compute());
+    }
+
+    #[test]
+    fn shared_pool_skips_single_threaded_runs() {
+        with_shared_pool(2, |pool| {
+            let mut out = vec![0u32; 50];
+            run_sharded(&ShardSpec::with_workers(1), &mut out, |start, slice| {
+                for (i, v) in slice.iter_mut().enumerate() {
+                    *v = (start + i) as u32;
+                }
+            });
+            assert!(out.iter().enumerate().all(|(i, &v)| v == i as u32));
+            assert_eq!(pool.jobs_dispatched(), 0, "inline runs bypass the pool");
+        });
+    }
+
+    #[test]
+    fn shared_pool_caps_participation_at_the_spec() {
+        // A pool wider than the request must leave extra workers idle: the
+        // dispatched closure sees worker indices up to the pool width, and
+        // run_sharded's worker returns early for t >= spec threads.  Here we
+        // drive `run` directly and count participants.
+        with_shared_pool(4, |pool| {
+            let seen = AtomicUsize::new(0);
+            pool.run(&|t| {
+                assert!(t < 4);
+                seen.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(seen.load(Ordering::Relaxed), 4, "every worker runs the job once");
+        });
+    }
+
+    #[test]
+    fn shared_pool_propagates_worker_panics() {
+        // A panicking job must surface on the dispatching thread (like the
+        // scoped-crew path's panic-at-join), never deadlock the barrier.
+        let caught = std::panic::catch_unwind(|| {
+            with_shared_pool(2, |pool| {
+                pool.run(&|t| {
+                    if t == 0 {
+                        panic!("boom");
+                    }
+                });
+            })
+        });
+        assert!(caught.is_err(), "worker panic must surface");
+        // The pool after a poisoned run is torn down cleanly; a fresh one
+        // still works.
+        with_shared_pool(2, |pool| {
+            pool.run(&|_| {});
+            assert_eq!(pool.jobs_dispatched(), 1);
+        });
+    }
+
+    #[test]
+    fn shared_pool_returns_driver_value_and_nests_runs() {
+        let out = with_shared_pool(2, |_pool| {
+            let mut v = vec![0usize; 64];
+            run_sharded(&ShardSpec::with_workers(2), &mut v, |start, slice| {
+                for (i, s) in slice.iter_mut().enumerate() {
+                    *s = start + i;
+                }
+            });
+            v.iter().sum::<usize>()
+        });
+        assert_eq!(out, 63 * 64 / 2);
     }
 
     #[test]

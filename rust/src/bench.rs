@@ -174,8 +174,10 @@ pub fn speedup(a: &Measurement, b: &Measurement) -> f64 {
 // ---------------------------------------------------------------------------
 
 /// Schema identifier stamped into (and required from) `BENCH_PERMANOVA.json`.
-/// v2 added the per-cell `method` field (the statistic axis of the sweep).
-pub const BENCH_SCHEMA: &str = "bench-permanova/v2";
+/// v2 added the per-cell `method` field (the statistic axis of the sweep);
+/// v3 added the top-level `throughput` section (service-layer jobs/sec,
+/// cold vs warm dataset cache).
+pub const BENCH_SCHEMA: &str = "bench-permanova/v3";
 
 /// The grid a benchmark sweep covers: backends × methods × n ×
 /// permutation counts, plus the scheduling knobs shared by every cell.
@@ -200,6 +202,9 @@ pub struct SweepGrid {
     pub bencher: Bencher,
     /// Whether this was the CI smoke grid (recorded in the JSON).
     pub quick: bool,
+    /// Jobs per throughput cell (the service-layer cold-vs-warm axis);
+    /// 0 skips the throughput section entirely.
+    pub throughput_jobs: usize,
 }
 
 impl Default for SweepGrid {
@@ -222,6 +227,7 @@ impl Default for SweepGrid {
                 max_time: Duration::from_secs(5),
             },
             quick: false,
+            throughput_jobs: 6,
         }
     }
 }
@@ -242,6 +248,7 @@ impl SweepGrid {
                 max_time: Duration::from_secs(1),
             },
             quick: true,
+            throughput_jobs: 4,
             ..Default::default()
         }
     }
@@ -382,6 +389,8 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
             }
         }
     }
+    let (throughput, throughput_table) = run_throughput_axis(grid)?;
+
     let entry_count = entries.len();
     let host_threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
     let json = Json::obj(vec![
@@ -390,8 +399,112 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
         ("quick", Json::Bool(grid.quick)),
         ("host_threads", Json::num(host_threads as f64)),
         ("entries", Json::Arr(entries)),
+        ("throughput", Json::Arr(throughput)),
     ]);
-    Ok(SweepOutput { json, table: table.render(), entries: entry_count })
+    let mut rendered = table.render();
+    if !throughput_table.is_empty() {
+        rendered.push('\n');
+        rendered.push_str(&throughput_table);
+    }
+    Ok(SweepOutput { json, table: rendered, entries: entry_count })
+}
+
+/// The service-layer throughput axis: for every backend × method, run a
+/// repeated-dataset batch of [`SweepGrid::throughput_jobs`] jobs twice —
+/// **cold** (cache capacity 0: every job reloads the dataset and rebuilds
+/// its prelude) and **warm** (one shared [`DatasetCache`]: the first job
+/// loads, the rest hit) — and record jobs/sec for both.  The jobs share
+/// one dataset (`data_seed` pinned) but draw distinct permutation seeds,
+/// the shape a shared-dataset service actually sees.  Both passes run
+/// through the same shared scheduler pool, so the comparison isolates the
+/// cache, not thread-spawn costs.
+///
+/// [`DatasetCache`]: crate::service::DatasetCache
+fn run_throughput_axis(grid: &SweepGrid) -> Result<(Vec<Json>, String)> {
+    use crate::service::{run_jobs, DatasetCache, JobRequest};
+
+    if grid.throughput_jobs == 0 {
+        return Ok((Vec::new(), String::new()));
+    }
+    if grid.throughput_jobs < 2 {
+        return Err(Error::Config(
+            "bench: --throughput-jobs needs >= 2 jobs to compare cold vs warm (0 disables)"
+                .into(),
+        ));
+    }
+    let jobs = grid.throughput_jobs;
+    // One cell per backend × method at the grid's largest n (where the
+    // dataset-load share is biggest) and smallest permutation count.
+    let n = *grid.n_grid.iter().max().expect("validated non-empty");
+    let n_perms = *grid.perm_grid.iter().min().expect("validated non-empty");
+
+    let mut entries = Vec::new();
+    let mut table =
+        Table::new(&["backend", "method", "n", "perms", "jobs", "cold", "warm", "warm/cold"]);
+    for backend in &grid.backends {
+        for &method in &grid.methods {
+            let mut cfg = grid.base.clone();
+            cfg.data = DataSource::Synthetic { n_dims: n, n_groups: grid.n_groups };
+            cfg.backend = backend.clone();
+            cfg.method = method;
+            cfg.n_perms = n_perms;
+            // Pin the dataset, vary the permutation stream per job.
+            cfg.data_seed = Some(cfg.seed);
+            let requests: Vec<JobRequest> = (0..jobs)
+                .map(|i| {
+                    let mut job = cfg.clone();
+                    job.seed = cfg.seed.wrapping_add(i as u64);
+                    JobRequest { id: format!("{backend}-{}-{i}", method.name()), cfg: job }
+                })
+                .collect();
+
+            let cold_cache = DatasetCache::new(0);
+            let cold = run_jobs(&requests, &cold_cache, grid.base.threads);
+            let warm_cache = DatasetCache::new(2);
+            let warm = run_jobs(&requests, &warm_cache, grid.base.threads);
+            for (label, batch) in [("cold", &cold), ("warm", &warm)] {
+                if batch.summary.failed > 0 {
+                    return Err(Error::Config(format!(
+                        "throughput cell {backend}/{} ({label}): {} of {} jobs failed",
+                        method.name(),
+                        batch.summary.failed,
+                        batch.summary.jobs
+                    )));
+                }
+            }
+            let warm_stats = warm_cache.stats();
+
+            table.row(&[
+                backend.clone(),
+                method.name().to_string(),
+                n.to_string(),
+                n_perms.to_string(),
+                jobs.to_string(),
+                crate::report::format_rate(cold.summary.jobs_per_sec, "jobs"),
+                crate::report::format_rate(warm.summary.jobs_per_sec, "jobs"),
+                format!("{:.2}x", warm.summary.jobs_per_sec / cold.summary.jobs_per_sec),
+            ]);
+            entries.push(Json::obj(vec![
+                ("backend", Json::str(backend.clone())),
+                ("method", Json::str(method.name())),
+                ("n", Json::num(n as f64)),
+                ("k", Json::num(grid.n_groups as f64)),
+                ("n_perms", Json::num(n_perms as f64)),
+                ("jobs", Json::num(jobs as f64)),
+                ("cold_secs", Json::num(cold.summary.elapsed_secs)),
+                ("cold_jobs_per_sec", Json::num(cold.summary.jobs_per_sec)),
+                ("warm_secs", Json::num(warm.summary.elapsed_secs)),
+                ("warm_jobs_per_sec", Json::num(warm.summary.jobs_per_sec)),
+                ("warm_hits", Json::num(warm_stats.hits as f64)),
+                ("warm_misses", Json::num(warm_stats.misses as f64)),
+            ]));
+        }
+    }
+    let rendered = format!(
+        "service throughput ({jobs} jobs/cell, repeated dataset, cold vs warm cache):\n{}",
+        table.render()
+    );
+    Ok((entries, rendered))
 }
 
 fn bench_field_err(ctx: &str, msg: impl Into<String>) -> Error {
@@ -500,6 +613,67 @@ pub fn validate_bench_json(doc: &Json) -> Result<usize> {
             return Err(bench_field_err(&ctx, format!("p_value must be in (0, 1], got {p}")));
         }
     }
+
+    // v3: the service-layer throughput section.  The array itself is
+    // required (it is how CI notices the axis silently disappearing); it
+    // may be empty only when the sweep was run with throughput_jobs = 0.
+    let throughput = doc
+        .get("throughput")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bench_field_err("throughput", "missing/not an array"))?;
+    for (i, e) in throughput.iter().enumerate() {
+        let ctx = format!("throughput {i}");
+        let backend = e.req_str("backend").map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if !registry.contains(backend) {
+            return Err(bench_field_err(&ctx, format!("unknown backend {backend:?}")));
+        }
+        let method = e.req_str("method").map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if Method::parse(method).is_none() {
+            return Err(bench_field_err(&ctx, format!("unknown method {method:?}")));
+        }
+        let req = |key: &str| -> Result<usize> {
+            e.req_usize(key).map_err(|err| bench_field_err(&ctx, err.to_string()))
+        };
+        if req("n")? == 0 || req("n_perms")? == 0 {
+            return Err(bench_field_err(&ctx, "n and n_perms must be >= 1"));
+        }
+        req("k")?;
+        let jobs = req("jobs")?;
+        if jobs < 2 {
+            return Err(bench_field_err(&ctx, "a throughput cell needs >= 2 jobs"));
+        }
+        let num = |key: &str| -> Result<f64> {
+            let v = e
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bench_field_err(&ctx, format!("{key} missing/not a number")))?;
+            if !v.is_finite() {
+                return Err(bench_field_err(&ctx, format!("{key} must be finite, got {v}")));
+            }
+            Ok(v)
+        };
+        for key in ["cold_secs", "warm_secs"] {
+            if num(key)? <= 0.0 {
+                return Err(bench_field_err(&ctx, format!("{key} must be > 0")));
+            }
+        }
+        for key in ["cold_jobs_per_sec", "warm_jobs_per_sec"] {
+            if num(key)? <= 0.0 {
+                return Err(bench_field_err(&ctx, format!("{key} must be > 0")));
+            }
+        }
+        let hits = req("warm_hits")?;
+        let misses = req("warm_misses")?;
+        if hits + misses != jobs {
+            return Err(bench_field_err(
+                &ctx,
+                format!("warm_hits {hits} + warm_misses {misses} != jobs {jobs}"),
+            ));
+        }
+        if misses == 0 {
+            return Err(bench_field_err(&ctx, "a cold-started warm pass must miss at least once"));
+        }
+    }
     Ok(entries.len())
 }
 
@@ -589,6 +763,7 @@ mod tests {
                 max_time: Duration::from_secs(1),
             },
             quick: true,
+            throughput_jobs: 2,
             ..Default::default()
         }
     }
@@ -598,6 +773,7 @@ mod tests {
         let out = run_sweep(&tiny_grid()).unwrap();
         assert_eq!(out.entries, 2);
         assert!(out.table.contains("native-batch"));
+        assert!(out.table.contains("service throughput"), "{}", out.table);
         assert_eq!(validate_bench_json(&out.json).unwrap(), 2);
         // Round-trips through the serializer.
         let parsed = Json::parse(&out.json.to_string_pretty()).unwrap();
@@ -654,6 +830,60 @@ mod tests {
         let e = &out.json.req_arr("entries").unwrap()[0];
         assert_eq!(e.req_str("method").unwrap(), "pairwise");
         assert_eq!(e.req_usize("jobs").unwrap(), 3, "3 groups -> 3 pair jobs");
+    }
+
+    #[test]
+    fn throughput_axis_records_cold_and_warm_cache() {
+        let mut g = tiny_grid();
+        g.backends = vec!["native-brute".into()];
+        g.throughput_jobs = 3;
+        let out = run_sweep(&g).unwrap();
+        let cells = out.json.req_arr("throughput").unwrap();
+        assert_eq!(cells.len(), 1, "one cell per backend x method");
+        let c = &cells[0];
+        assert_eq!(c.req_str("backend").unwrap(), "native-brute");
+        assert_eq!(c.req_str("method").unwrap(), "permanova");
+        assert_eq!(c.req_usize("jobs").unwrap(), 3);
+        assert_eq!(c.req_usize("warm_misses").unwrap(), 1, "first warm job loads");
+        assert_eq!(c.req_usize("warm_hits").unwrap(), 2, "the rest hit");
+        assert!(c.get("cold_jobs_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(c.get("warm_jobs_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn warm_cache_outruns_cold_on_a_load_dominated_cell() {
+        // The acceptance cell: with a prelude-heavy method (PERMDISP runs a
+        // PCoA eigendecomposition per dataset load) and almost no
+        // permutation work, the warm pass skips nearly everything the cold
+        // pass repeats — jobs/sec must come out strictly higher.
+        let mut g = tiny_grid();
+        g.backends = vec!["native-brute".into()];
+        g.methods = vec![Method::Permdisp];
+        g.n_grid = vec![120];
+        g.perm_grid = vec![3];
+        g.throughput_jobs = 5;
+        let out = run_sweep(&g).unwrap();
+        let c = &out.json.req_arr("throughput").unwrap()[0];
+        let cold = c.get("cold_jobs_per_sec").unwrap().as_f64().unwrap();
+        let warm = c.get("warm_jobs_per_sec").unwrap().as_f64().unwrap();
+        assert!(
+            warm > cold,
+            "warm cache must outrun cold on a repeated-dataset batch: warm {warm} vs cold {cold}"
+        );
+    }
+
+    #[test]
+    fn throughput_axis_can_be_disabled() {
+        let mut g = tiny_grid();
+        g.throughput_jobs = 0;
+        let out = run_sweep(&g).unwrap();
+        assert!(out.json.req_arr("throughput").unwrap().is_empty());
+        assert!(!out.table.contains("service throughput"));
+        // An empty section still validates (the key must exist).
+        assert_eq!(validate_bench_json(&out.json).unwrap(), 2);
+        // ... but 1 job cannot compare cold vs warm: rejected, not clamped.
+        g.throughput_jobs = 1;
+        assert!(run_sweep(&g).is_err());
     }
 
     #[test]
@@ -726,6 +956,32 @@ mod tests {
             }
             assert!(validate_bench_json(&bad).is_err(), "{method:?}");
         }
+        // Missing throughput section (v3 requires the key).
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.remove("throughput");
+        }
+        assert!(validate_bench_json(&bad).is_err());
+        // Throughput cell whose hit/miss counters don't add up.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut cells = m.get("throughput").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(c) = &mut cells[0] {
+                c.insert("warm_hits".into(), Json::num(99));
+            }
+            m.insert("throughput".into(), Json::Arr(cells));
+        }
+        assert!(validate_bench_json(&bad).is_err());
+        // Throughput cell with a non-positive rate.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut cells = m.get("throughput").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(c) = &mut cells[0] {
+                c.insert("warm_jobs_per_sec".into(), Json::num(0));
+            }
+            m.insert("throughput".into(), Json::Arr(cells));
+        }
+        assert!(validate_bench_json(&bad).is_err());
         // Not an object at all.
         assert!(validate_bench_json(&Json::Arr(vec![])).is_err());
     }

@@ -6,9 +6,12 @@
 //!
 //! Commands:
 //!   run              permutation test on synthetic/file data; --method
-//!                    selects permanova|anosim|permdisp|pairwise
+//!                    selects permanova|anosim|permdisp|pairwise;
+//!                    --repeat N runs warm through the dataset cache
+//!   serve            JSONL job batch through the shared-dataset service
+//!                    (one DatasetCache + one scheduler pool per batch)
 //!   bench            sweep backends × methods over n/perm grids ->
-//!                    BENCH_PERMANOVA.json
+//!                    BENCH_PERMANOVA.json (incl. cold/warm throughput)
 //!   backends         list registered backends + capabilities
 //!                    (also reachable as `--list-backends`)
 //!   pipeline         E2E: synthetic community -> UniFrac -> PERMANOVA
@@ -91,8 +94,19 @@ impl Args {
         }
     }
 
-    pub fn bool_flag(&self, key: &str) -> bool {
-        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    /// Boolean flag: absent = `false`, bare `--flag` = `true`, explicit
+    /// literals `true/1/yes` / `false/0/no` as written.  Anything else is
+    /// a config error — `--smt-oversubscribe ture` must not silently run
+    /// with the feature off.
+    pub fn bool_flag(&self, key: &str) -> Result<bool> {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => Ok(false),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(other) => Err(Error::Config(format!(
+                "--{key} expects a boolean (true/1/yes or false/0/no), got {other:?}"
+            ))),
+        }
     }
 
     /// Whether a flag was given at all.
@@ -105,6 +119,7 @@ impl Args {
 pub fn dispatch(args: &Args) -> Result<String> {
     match args.command.as_str() {
         "run" => cmd_run(args),
+        "serve" => cmd_serve(args),
         "bench" => cmd_bench(args),
         "backends" | "--list-backends" => cmd_backends(args),
         "pipeline" => cmd_pipeline(args),
@@ -122,8 +137,9 @@ pub fn dispatch(args: &Args) -> Result<String> {
 pub fn usage() -> String {
     let mut s = String::from("permanova-apu — PERMANOVA on APU-class hardware\n\nCommands:\n");
     for (cmd, desc) in [
-        ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --json out.json --config file.toml | --pdm file --labels file; legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
-        ("bench", "backend x method sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --methods permanova,anosim --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --out FILE; --check FILE validates an existing document"),
+        ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --data-seed D --repeat N --json out.json --config file.toml | --pdm file --labels file; legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
+        ("serve", "JSONL job batch through the shared-dataset service: --jobs FILE [--out FILE] [--cache-capacity N] [--threads T]; --check FILE validates a response document"),
+        ("bench", "backend x method sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --methods permanova,anosim --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --throughput-jobs J --out FILE; --check FILE validates an existing document"),
         ("backends", "list registered backends with their capabilities (alias: --list-backends)"),
         ("pipeline", "end-to-end: community -> UniFrac -> PERMANOVA: --taxa --samples --groups --n-perms --metric unweighted|weighted --anosim"),
         ("fig1", "regenerate Figure 1: --n-dims --n-perms (defaults: the paper's 25145/3999)"),
@@ -216,7 +232,10 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     cfg.shard_size = args.usize_flag("shard-size", cfg.shard_size)?;
     cfg.perm_block = args.usize_flag("perm-block", cfg.perm_block)?;
     if args.has_flag("smt-oversubscribe") {
-        cfg.smt_oversubscribe = args.bool_flag("smt-oversubscribe");
+        cfg.smt_oversubscribe = args.bool_flag("smt-oversubscribe")?;
+    }
+    if args.has_flag("data-seed") {
+        cfg.data_seed = Some(args.u64_flag("data-seed", 0)?);
     }
     if let Some(a) = args.str_flag("algo") {
         cfg.algo = SwAlgorithm::parse(a)
@@ -241,6 +260,24 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
 
 fn cmd_run(args: &Args) -> Result<String> {
     let cfg = config_from_args(args)?;
+
+    // `--repeat N`: run the same configuration N times through the service
+    // layer — the dataset and prelude are loaded once, every iteration
+    // reuses them (bitwise-identical results), and the sharded loops share
+    // one scheduler pool.  The cold-vs-warm wall clocks land in the table.
+    let repeat = args.usize_flag("repeat", 1)?;
+    if repeat > 1 {
+        // The repeat path renders its own table and nothing else; reject
+        // flags it would otherwise silently ignore.
+        for flag in ["json", "pairwise", "anosim", "permdisp"] {
+            if args.has_flag(flag) {
+                return Err(Error::Config(format!(
+                    "--repeat does not combine with --{flag} (run them as separate invocations)"
+                )));
+            }
+        }
+        return cmd_run_repeated(&cfg, repeat);
+    }
     let r = run_config(&cfg)?;
     // The report carries the kernel the backend actually evaluated
     // (`Caps::kernel`), so rendering needs no config-side label.
@@ -251,7 +288,7 @@ fn cmd_run(args: &Args) -> Result<String> {
     // engine-scheduled spelling of the same tests is `--method
     // anosim|permdisp|pairwise`; the conformance suite pins that the two
     // paths agree exactly, which is why both stay.
-    if args.bool_flag("pairwise") {
+    if args.bool_flag("pairwise")? {
         use crate::coordinator::load_data;
         use crate::permanova::{pairwise_permanova, PermanovaOpts};
         let (mat, grouping) = load_data(&cfg)?;
@@ -280,14 +317,14 @@ fn cmd_run(args: &Args) -> Result<String> {
     }
 
     // Companion tests (the full skbio-style workflow).
-    if args.bool_flag("anosim") || args.bool_flag("permdisp") {
+    if args.bool_flag("anosim")? || args.bool_flag("permdisp")? {
         use crate::coordinator::load_data;
         let (mat, grouping) = load_data(&cfg)?;
-        if args.bool_flag("anosim") {
+        if args.bool_flag("anosim")? {
             let a = crate::permanova::anosim(&mat, &grouping, cfg.n_perms, cfg.seed)?;
             out.push_str(&format!("ANOSIM:   R = {:.4}, p = {:.4}\n", a.r_obs, a.p_value));
         }
-        if args.bool_flag("permdisp") {
+        if args.bool_flag("permdisp")? {
             let d = crate::permanova::permdisp(&mat, &grouping, cfg.n_perms, cfg.seed)?;
             out.push_str(&format!(
                 "PERMDISP: F = {:.4}, p = {:.4} (dispersions: {})\n",
@@ -310,6 +347,86 @@ fn cmd_run(args: &Args) -> Result<String> {
         out.push_str(&format!("wrote {path}\n"));
     }
     Ok(out)
+}
+
+/// `run --repeat N`: the same configuration N times through the service
+/// layer (one shared pool, one cached dataset + prelude), with the
+/// cold-vs-warm wall clocks tabled per iteration.
+fn cmd_run_repeated(cfg: &RunConfig, repeat: usize) -> Result<String> {
+    use crate::backend::shard::with_shared_pool;
+    use crate::coordinator::run_config_cached;
+    use crate::report::AnalysisReport;
+    use crate::service::DatasetCache;
+    use std::time::Instant;
+
+    let cache = DatasetCache::new(2);
+    let mut t = Table::new(&["iteration", "cache", "wall s"]);
+    let mut first: Option<AnalysisReport> = None;
+    with_shared_pool(cfg.threads, |_pool| -> Result<()> {
+        for i in 1..=repeat {
+            let t0 = Instant::now();
+            let (r, hit) = run_config_cached(cfg, &cache)?;
+            t.row(&[
+                format!("iter-{i}"),
+                if hit { "hit" } else { "miss" }.to_string(),
+                format!("{:.4}", t0.elapsed().as_secs_f64()),
+            ]);
+            // Every iteration is bitwise-identical (same seed, same data);
+            // render the first and table the rest.
+            if first.is_none() {
+                first = Some(r);
+            }
+        }
+        Ok(())
+    })?;
+    let stats = cache.stats();
+    let mut out = first.expect("repeat >= 2 ran at least once").render();
+    out.push_str(&format!("\nrepeat x{repeat} (warm iterations reuse the cached dataset):\n"));
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "cache: {} hits / {} misses ({:.0}% hit rate)\n",
+        stats.hits,
+        stats.misses,
+        100.0 * stats.hit_rate()
+    ));
+    Ok(out)
+}
+
+/// `serve`: execute a JSONL job batch through the shared-dataset service
+/// layer, or (`--check`) validate a response document.
+fn cmd_serve(args: &Args) -> Result<String> {
+    use crate::service::{parse_jobs, run_jobs, validate_responses, DatasetCache};
+
+    if let Some(path) = args.str_flag("check") {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        let (ok, failed) = validate_responses(&text)?;
+        return Ok(format!("responses ok: {path} ({ok} ok, {failed} failed)\n"));
+    }
+
+    let jobs_path = args
+        .str_flag("jobs")
+        .ok_or_else(|| Error::Config("serve needs --jobs FILE (or --check FILE)".into()))?;
+    let text = std::fs::read_to_string(jobs_path).map_err(|e| Error::io(jobs_path, e))?;
+    let jobs = parse_jobs(&text)?;
+    let cache = DatasetCache::new(args.usize_flag("cache-capacity", 8)?);
+    let workers = args.usize_flag("threads", 0)?;
+    let batch = run_jobs(&jobs, &cache, workers);
+
+    match args.str_flag("out") {
+        // File output: responses to disk, summary (with the cache
+        // counters) to the console.
+        Some(path) => {
+            std::fs::write(path, batch.to_jsonl()).map_err(|e| Error::io(path, e))?;
+            Ok(format!(
+                "wrote {path} ({} responses)\n{}",
+                batch.responses.len(),
+                batch.summary.render()
+            ))
+        }
+        // Stdout output stays pure JSONL so it can be piped; the summary
+        // is available by re-running with --out.
+        None => Ok(batch.to_jsonl()),
+    }
 }
 
 /// Parse a `--flag a,b,c` comma-separated usize list.
@@ -344,7 +461,7 @@ fn cmd_bench(args: &Args) -> Result<String> {
         return Ok(format!("bench json ok: {path} ({n} entries)\n"));
     }
 
-    let mut grid = if args.bool_flag("quick") {
+    let mut grid = if args.bool_flag("quick")? {
         SweepGrid::quick()
     } else {
         SweepGrid::default()
@@ -379,8 +496,9 @@ fn cmd_bench(args: &Args) -> Result<String> {
     grid.base.threads = args.usize_flag("threads", grid.base.threads)?;
     grid.base.shard_size = args.usize_flag("shard-size", grid.base.shard_size)?;
     grid.base.perm_block = args.usize_flag("perm-block", grid.base.perm_block)?;
+    grid.throughput_jobs = args.usize_flag("throughput-jobs", grid.throughput_jobs)?;
     if args.has_flag("smt-oversubscribe") {
-        grid.base.smt_oversubscribe = args.bool_flag("smt-oversubscribe");
+        grid.base.smt_oversubscribe = args.bool_flag("smt-oversubscribe")?;
     }
 
     let sweep = run_sweep(&grid)?;
@@ -418,11 +536,17 @@ fn cmd_pipeline(args: &Args) -> Result<String> {
 
     let mut out = format!("UniFrac ({metric}) -> PERMANOVA pipeline\n");
     out.push_str(&r.render());
-    if args.bool_flag("anosim") {
-        let a = crate::permanova::anosim(&mat, &ds.grouping, cfg.n_perms, cfg.seed)?;
+    if args.bool_flag("anosim")? {
+        // The cross-check runs through the same backend engine as the
+        // primary statistic, so --backend/--shard-size/--smt-oversubscribe/
+        // --perm-block apply to it too and the printed numbers match
+        // `--method anosim` exactly (the conformance suite pins that the
+        // engine path equals the legacy oracle bit-for-bit).
+        let cross = RunConfig { method: Method::Anosim, ..cfg.clone() };
+        let a = run_on_backend(&cross, &mat, &ds.grouping)?;
         out.push_str(&format!(
-            "ANOSIM: R = {:.4}, p = {:.4} (cross-check statistic)\n",
-            a.r_obs, a.p_value
+            "ANOSIM: R = {:.4}, p = {:.4} (cross-check statistic, backend={})\n",
+            a.f_obs, a.p_value, a.backend
         ));
     }
     out.push_str(&format!(
@@ -443,7 +567,7 @@ fn cmd_fig1(args: &Args) -> Result<String> {
 }
 
 fn cmd_stream(args: &Args) -> Result<String> {
-    if args.bool_flag("simulate") {
+    if args.bool_flag("simulate")? {
         let m = Mi300a::default();
         let len = args.usize_flag("len", 1_000_000_000)?;
         let mut out = String::new();
@@ -481,7 +605,7 @@ fn cmd_stream(args: &Args) -> Result<String> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<String> {
-    if args.bool_flag("topology") {
+    if args.bool_flag("topology")? {
         return Ok(NodeTopology::cosmos_node().render());
     }
     let w = Workload {
@@ -566,9 +690,32 @@ mod tests {
         assert_eq!(a.command, "run");
         assert_eq!(a.usize_flag("n-dims", 0).unwrap(), 64);
         assert_eq!(a.str_flag("backend"), Some("native"));
-        assert!(a.bool_flag("verbose"));
-        assert!(!a.bool_flag("quiet"));
+        assert!(a.bool_flag("verbose").unwrap());
+        assert!(!a.bool_flag("quiet").unwrap());
         assert_eq!(a.usize_flag("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bool_flags_accept_literals_and_reject_typos() {
+        let a = args(&["run", "--a", "true", "--b", "1", "--c", "yes", "--d", "false", "--e",
+            "0", "--f", "no", "--bare"]);
+        for key in ["a", "b", "c", "bare"] {
+            assert!(a.bool_flag(key).unwrap(), "{key}");
+        }
+        for key in ["d", "e", "f", "absent"] {
+            assert!(!a.bool_flag(key).unwrap(), "{key}");
+        }
+        // The satellite bug: a typo'd literal must be a config error, not
+        // a silent `false`.
+        let bad = args(&["run", "--smt-oversubscribe", "ture"]);
+        let e = bad.bool_flag("smt-oversubscribe").unwrap_err().to_string();
+        assert!(e.contains("ture") && e.contains("smt-oversubscribe"), "{e}");
+        // ... end to end through a command.
+        assert!(dispatch(&args(&[
+            "run", "--n-dims", "24", "--n-groups", "2", "--n-perms", "9",
+            "--smt-oversubscribe", "ture",
+        ]))
+        .is_err());
     }
 
     #[test]
@@ -583,7 +730,8 @@ mod tests {
     fn version_and_help() {
         assert!(dispatch(&args(&["version"])).unwrap().contains(crate::VERSION));
         let help = dispatch(&args(&["help"])).unwrap();
-        for cmd in ["run", "bench", "backends", "fig1", "stream", "simulate", "artifacts-check"]
+        for cmd in
+            ["run", "serve", "bench", "backends", "fig1", "stream", "simulate", "artifacts-check"]
         {
             assert!(help.contains(cmd));
         }
@@ -888,6 +1036,102 @@ mod tests {
         assert_eq!(doc.req_usize("n_perms").unwrap(), 19);
         assert!(doc.get("f_obs").unwrap().as_f64().is_some());
         assert_eq!(doc.req_arr("devices").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn serve_runs_a_jsonl_batch_end_to_end() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_serve_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.jsonl");
+        std::fs::write(
+            &jobs,
+            concat!(
+                r#"{"id": "a", "n_perms": 19, "seed": 3, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 7}}"#,
+                "\n",
+                r#"{"id": "b", "method": "anosim", "backend": "native-batch", "n_perms": 19, "seed": 4, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 7}}"#,
+                "\n",
+            ),
+        )
+        .unwrap();
+
+        // Stdout mode: pure JSONL, ordered.
+        let out =
+            dispatch(&args(&["serve", "--jobs", jobs.to_str().unwrap(), "--threads", "2"]))
+                .unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = crate::jsonio::Json::parse(lines[0]).unwrap();
+        let second = crate::jsonio::Json::parse(lines[1]).unwrap();
+        assert_eq!(first.req_str("id").unwrap(), "a");
+        assert_eq!(first.req_str("cache").unwrap(), "miss");
+        assert_eq!(second.req_str("id").unwrap(), "b");
+        assert_eq!(second.req_str("cache").unwrap(), "hit", "same dataset key");
+        assert_eq!(second.get("report").unwrap().req_str("method").unwrap(), "anosim");
+        assert_eq!(
+            second.get("report").unwrap().req_str("backend").unwrap(),
+            "native-batch"
+        );
+
+        // File mode: responses to disk + summary with cache counters.
+        let resp = dir.join("responses.jsonl");
+        let summary = dispatch(&args(&[
+            "serve", "--jobs", jobs.to_str().unwrap(), "--out", resp.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert!(summary.contains("wrote"), "{summary}");
+        assert!(summary.contains("1 hits / 1 misses"), "{summary}");
+        // --check validates the written document.
+        let check =
+            dispatch(&args(&["serve", "--check", resp.to_str().unwrap()])).unwrap();
+        assert!(check.contains("2 ok, 0 failed"), "{check}");
+
+        // Errors: no --jobs, missing file, invalid responses.
+        assert!(dispatch(&args(&["serve"])).is_err());
+        assert!(dispatch(&args(&["serve", "--jobs", "/definitely/missing.jsonl"])).is_err());
+        let bad = dir.join("bad.jsonl");
+        std::fs::write(&bad, "{\"id\": \"x\"}\n").unwrap();
+        assert!(dispatch(&args(&["serve", "--check", bad.to_str().unwrap()])).is_err());
+    }
+
+    #[test]
+    fn run_repeat_reuses_the_cached_dataset() {
+        let out = dispatch(&args(&[
+            "run", "--n-dims", "24", "--n-groups", "2", "--n-perms", "19", "--repeat", "3",
+        ]))
+        .unwrap();
+        assert!(out.contains("pseudo-F"), "{out}");
+        assert!(out.contains("repeat x3"), "{out}");
+        assert!(out.contains("iter-1"), "{out}");
+        assert!(out.contains("miss"), "first iteration loads: {out}");
+        assert!(out.contains("hit"), "later iterations reuse: {out}");
+        assert!(out.contains("2 hits / 1 misses"), "{out}");
+        // Flags the repeat path cannot honour are rejected, not ignored.
+        assert!(dispatch(&args(&[
+            "run", "--n-dims", "24", "--n-groups", "2", "--n-perms", "9", "--repeat", "2",
+            "--json", "out.json",
+        ]))
+        .is_err());
+        assert!(dispatch(&args(&[
+            "run", "--n-dims", "24", "--n-groups", "2", "--n-perms", "9", "--repeat", "2",
+            "--anosim",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn pipeline_anosim_cross_check_goes_through_the_engine() {
+        // The cross-check must honour the engine knobs (--backend et al.)
+        // instead of silently running the legacy single-threaded oracle.
+        let out = dispatch(&args(&[
+            "pipeline", "--taxa", "64", "--samples", "20", "--groups", "2", "--n-perms", "39",
+            "--anosim", "--backend", "native-batch", "--perm-block", "8",
+        ]))
+        .unwrap();
+        assert!(out.contains("ANOSIM: R ="), "{out}");
+        assert!(
+            out.contains("cross-check statistic, backend=native-batch"),
+            "cross-check names the engine backend: {out}"
+        );
     }
 
     #[test]

@@ -222,6 +222,12 @@ pub struct RunConfig {
     pub data: DataSource,
     pub n_perms: usize,
     pub seed: u64,
+    /// Seed for *generating* synthetic data sources (`[data] seed` /
+    /// `--data-seed`); `None` couples it to [`seed`](Self::seed) (the
+    /// pre-service behaviour).  Decoupling lets a job batch draw distinct
+    /// permutation streams over the **same** dataset — the shape the
+    /// `DatasetCache` amortizes.
+    pub data_seed: Option<u64>,
     /// Which permutation test to run (`[run] method` / `--method`):
     /// `permanova` (default), `anosim`, `permdisp`, `pairwise`.  Every
     /// method routes through the same backend engine.
@@ -253,6 +259,7 @@ impl Default for RunConfig {
             data: DataSource::Synthetic { n_dims: 256, n_groups: 8 },
             n_perms: 999,
             seed: 0x5EED_CAFE,
+            data_seed: None,
             method: Method::Permanova,
             algo: SwAlgorithm::Tiled { tile: crate::permanova::DEFAULT_TILE },
             threads: 0,
@@ -304,6 +311,7 @@ impl RunConfig {
             data,
             n_perms: doc.int_or("run", "n_perms", d.n_perms as i64) as usize,
             seed: doc.int_or("run", "seed", d.seed as i64) as u64,
+            data_seed: doc.get("data", "seed").and_then(TomlValue::as_int).map(|i| i as u64),
             method,
             algo,
             threads: doc.int_or("run", "threads", 0) as usize,
@@ -317,6 +325,121 @@ impl RunConfig {
         };
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Build from a JSON object — the `serve` subcommand's JSONL request
+    /// format (one request per line).  Missing keys take the same defaults
+    /// as [`from_toml`](Self::from_toml); present-but-mistyped keys are
+    /// errors.  `seed` may be a number (< 2^53) or a decimal string (full
+    /// u64 range).
+    ///
+    /// ```json
+    /// {"method": "anosim", "backend": "native-batch", "n_perms": 499,
+    ///  "seed": 7, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4}}
+    /// ```
+    pub fn from_json(doc: &crate::jsonio::Json) -> Result<RunConfig> {
+        use crate::jsonio::Json;
+        // Unknown keys are rejected, not ignored: a misspelled or
+        // misplaced field (e.g. top-level "data_seed" instead of
+        // data.seed) must fail loudly rather than silently take a
+        // default and compute something else.
+        const TOP_KEYS: [&str; 14] = [
+            "id", "method", "backend", "algo", "n_perms", "seed", "threads", "shard_size",
+            "smt", "smt_oversubscribe", "perm_block", "artifacts_dir", "xla_kernel", "data",
+        ];
+        const DATA_KEYS: [&str; 8] =
+            ["source", "n_dims", "n_groups", "n_taxa", "n_samples", "path", "labels", "seed"];
+        let Json::Obj(map) = doc else {
+            return Err(Error::Config("job request must be a JSON object".into()));
+        };
+        for key in map.keys() {
+            if !TOP_KEYS.contains(&key.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown job field {key:?} (known: {})",
+                    TOP_KEYS.join(", ")
+                )));
+            }
+        }
+        if let Some(Json::Obj(dm)) = doc.get("data") {
+            for key in dm.keys() {
+                if !DATA_KEYS.contains(&key.as_str()) {
+                    return Err(Error::Config(format!(
+                        "unknown data field {key:?} (known: {})",
+                        DATA_KEYS.join(", ")
+                    )));
+                }
+            }
+        }
+        let d = RunConfig::default();
+        let data = match doc.get("data") {
+            None => d.data.clone(),
+            Some(o) if matches!(o, Json::Obj(_)) => {
+                let source = o.opt_str("source")?.unwrap_or("synthetic").to_string();
+                match source.as_str() {
+                    "synthetic" => DataSource::Synthetic {
+                        n_dims: o.opt_usize("n_dims")?.unwrap_or(256),
+                        n_groups: o.opt_usize("n_groups")?.unwrap_or(8),
+                    },
+                    "unifrac" => DataSource::SyntheticUnifrac {
+                        n_taxa: o.opt_usize("n_taxa")?.unwrap_or(256),
+                        n_samples: o.opt_usize("n_samples")?.unwrap_or(64),
+                        n_groups: o.opt_usize("n_groups")?.unwrap_or(4),
+                    },
+                    "pdm" => DataSource::Pdm {
+                        path: o.opt_str("path")?.unwrap_or("").to_string(),
+                        labels_path: o.opt_str("labels")?.unwrap_or("").to_string(),
+                    },
+                    "tsv" => DataSource::Tsv {
+                        path: o.opt_str("path")?.unwrap_or("").to_string(),
+                        labels_path: o.opt_str("labels")?.unwrap_or("").to_string(),
+                    },
+                    other => {
+                        return Err(Error::Config(format!("unknown data.source {other:?}")))
+                    }
+                }
+            }
+            Some(_) => return Err(Error::Config("data must be a JSON object".into())),
+        };
+        let data_seed = match doc.get("data") {
+            Some(o) if matches!(o, Json::Obj(_)) => o.opt_u64("seed")?,
+            _ => None,
+        };
+        let method = match doc.opt_str("method")? {
+            None => d.method,
+            Some(s) => Method::parse(s)
+                .ok_or_else(|| Error::Config(format!("unknown method {s:?}")))?,
+        };
+        let algo = match doc.opt_str("algo")? {
+            None => d.algo,
+            Some(s) => SwAlgorithm::parse(s)
+                .ok_or_else(|| Error::Config(format!("unknown algo {s:?}")))?,
+        };
+        let cfg = RunConfig {
+            data,
+            n_perms: doc.opt_usize("n_perms")?.unwrap_or(d.n_perms),
+            seed: doc.opt_u64("seed")?.unwrap_or(d.seed),
+            data_seed,
+            method,
+            algo,
+            threads: doc.opt_usize("threads")?.unwrap_or(d.threads),
+            backend: doc.opt_str("backend")?.unwrap_or(&d.backend).to_string(),
+            artifacts_dir: doc.opt_str("artifacts_dir")?.unwrap_or(&d.artifacts_dir).to_string(),
+            xla_kernel: doc.opt_str("xla_kernel")?.unwrap_or(&d.xla_kernel).to_string(),
+            smt: doc.opt_bool("smt")?.unwrap_or(d.smt),
+            shard_size: doc.opt_usize("shard_size")?.unwrap_or(d.shard_size),
+            smt_oversubscribe: doc
+                .opt_bool("smt_oversubscribe")?
+                .unwrap_or(d.smt_oversubscribe),
+            perm_block: doc.opt_usize("perm_block")?.unwrap_or(d.perm_block),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The seed synthetic data sources are generated from: `data_seed`
+    /// when set, else the run seed (the pre-service coupling).
+    pub fn effective_data_seed(&self) -> u64 {
+        self.data_seed.unwrap_or(self.seed)
     }
 
     /// The shard-scheduler spec this config resolves to.
@@ -473,6 +596,54 @@ mod tests {
         let cfg = RunConfig::from_toml(&doc).unwrap();
         assert_eq!(cfg.backend, "native-batch");
         assert_eq!(cfg.perm_block, 16);
+    }
+
+    #[test]
+    fn run_config_from_json_requests() {
+        use crate::jsonio::Json;
+        let doc = Json::parse(
+            r#"{"method": "anosim", "backend": "native-batch", "n_perms": 49,
+                "seed": 7, "perm_block": 16,
+                "data": {"source": "synthetic", "n_dims": 48, "n_groups": 4}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.method, Method::Anosim);
+        assert_eq!(cfg.backend, "native-batch");
+        assert_eq!(cfg.n_perms, 49);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.perm_block, 16);
+        assert_eq!(cfg.data, DataSource::Synthetic { n_dims: 48, n_groups: 4 });
+
+        // Defaults fill everything absent; an empty object is a valid job.
+        let cfg = RunConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.n_perms, RunConfig::default().n_perms);
+        assert_eq!(cfg.backend, "native");
+
+        // String seeds carry the full u64 range.
+        let doc = Json::parse(r#"{"seed": "18446744073709551615"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&doc).unwrap().seed, u64::MAX);
+
+        // Unknown names, mistyped fields and invalid shapes are errors.
+        for bad in [
+            r#"{"method": "kruskal"}"#,
+            r#"{"backend": "cuda"}"#,
+            r#"{"algo": "quantum"}"#,
+            r#"{"n_perms": 0}"#,
+            r#"{"n_perms": "many"}"#,
+            r#"{"data": {"source": "hdf5"}}"#,
+            r#"{"data": {"source": "pdm"}}"#,
+            r#"{"data": []}"#,
+            r#"[1, 2]"#,
+            // Unknown keys fail loudly instead of silently defaulting —
+            // data_seed's correct spelling is nested data.seed.
+            r#"{"data_seed": 7}"#,
+            r#"{"n_perm": 99}"#,
+            r#"{"data": {"n_dim": 48}}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(RunConfig::from_json(&doc).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

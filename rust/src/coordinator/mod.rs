@@ -27,7 +27,8 @@ use crate::unifrac::{generate, unweighted_unifrac, SynthParams};
 pub fn load_data(cfg: &RunConfig) -> Result<(DistanceMatrix, Grouping)> {
     match &cfg.data {
         DataSource::Synthetic { n_dims, n_groups } => {
-            let mat = DistanceMatrix::random_euclidean(*n_dims, 16, cfg.seed ^ 0xDA7A);
+            let mat =
+                DistanceMatrix::random_euclidean(*n_dims, 16, cfg.effective_data_seed() ^ 0xDA7A);
             let grouping = Grouping::balanced(*n_dims, *n_groups)?;
             Ok((mat, grouping))
         }
@@ -36,7 +37,7 @@ pub fn load_data(cfg: &RunConfig) -> Result<(DistanceMatrix, Grouping)> {
                 n_taxa: *n_taxa,
                 n_samples: *n_samples,
                 n_envs: *n_groups,
-                seed: cfg.seed ^ 0xDA7A,
+                seed: cfg.effective_data_seed() ^ 0xDA7A,
                 ..Default::default()
             })?;
             let mat = unweighted_unifrac(&ds.tree, &ds.table, cfg.threads)?;
@@ -87,6 +88,32 @@ pub fn run_on_backend(
     grouping: &Grouping,
 ) -> Result<AnalysisReport> {
     crate::backend::execute(cfg, mat, grouping)
+}
+
+/// [`run_config`] through a [`DatasetCache`]: the dataset (and its
+/// per-method statistic prelude) is loaded once and reused by every later
+/// job with the same data key.  Returns the report plus whether the lookup
+/// was a cache **hit**.  Results are bitwise-identical to the cold
+/// [`run_config`] path — the cache only skips recomputation of values that
+/// are pure functions of the dataset.
+///
+/// [`DatasetCache`]: crate::service::DatasetCache
+pub fn run_config_cached(
+    cfg: &RunConfig,
+    cache: &crate::service::DatasetCache,
+) -> Result<(AnalysisReport, bool)> {
+    use crate::permanova::Method;
+    cfg.validate()?;
+    let (ds, hit) = cache.get_or_load(cfg)?;
+    let report = if cfg.method == Method::PairwisePermanova {
+        // Pairwise prepares one prelude per group-pair sub-problem below
+        // the engine seam; only the dataset load itself is cacheable.
+        crate::backend::execute(cfg, &ds.mat, &ds.grouping)?
+    } else {
+        let kernel = ds.kernel(cfg.method)?;
+        crate::backend::execute_prepared(cfg, &ds.mat, &ds.grouping, Some(&kernel))?
+    };
+    Ok((report, hit))
 }
 
 #[cfg(test)]

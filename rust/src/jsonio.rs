@@ -125,10 +125,13 @@ impl Json {
         }
     }
 
-    /// Number as usize (rejects negatives / fractions).
+    /// Number as usize (rejects negatives / fractions, and values at or
+    /// above the serializer's conservative 9.0e15 bound — just under
+    /// 2^53, where f64 stops representing integers exactly; a huge float
+    /// must not silently saturate to `usize::MAX`).
     pub fn as_usize(&self) -> Option<usize> {
         match self {
-            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9.0e15 => Some(*x as usize),
             _ => None,
         }
     }
@@ -137,6 +140,27 @@ impl Json {
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Boolean content, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Number as u64 (rejects negatives and fractions).  Numbers are f64
+    /// internally, so big values are rejected rather than silently
+    /// rounded; the cutoff is the serializer's conservative 9.0e15 bound
+    /// (just under 2^53) — pass big seeds as strings (see [`opt_u64`]).
+    ///
+    /// [`opt_u64`]: Self::opt_u64
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9.0e15 => Some(*x as u64),
             _ => None,
         }
     }
@@ -160,6 +184,53 @@ impl Json {
         self.get(key)
             .and_then(Json::as_arr)
             .ok_or_else(|| Error::parse("json", key.to_string(), "missing/not an array"))
+    }
+
+    /// Optional typed accessors: `Ok(None)` when the key is absent, `Err`
+    /// when it is present with the wrong type — so a mistyped field in a
+    /// job request fails loudly instead of silently taking the default.
+    pub fn opt_str(&self, key: &str) -> Result<Option<&str>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_str()
+                .map(Some)
+                .ok_or_else(|| Error::parse("json", key.to_string(), "not a string")),
+        }
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                Error::parse("json", key.to_string(), "not a non-negative integer")
+            }),
+        }
+    }
+
+    /// Optional u64: accepts a JSON number (< 2^53) or a decimal string
+    /// (full 64-bit range — how bench records seeds).
+    pub fn opt_u64(&self, key: &str) -> Result<Option<u64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Json::Str(s)) => s.parse::<u64>().map(Some).map_err(|_| {
+                Error::parse("json", key.to_string(), format!("{s:?} is not a u64"))
+            }),
+            Some(v) => v
+                .as_u64()
+                .map(Some)
+                .ok_or_else(|| Error::parse("json", key.to_string(), "not a u64")),
+        }
+    }
+
+    pub fn opt_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_bool()
+                .map(Some)
+                .ok_or_else(|| Error::parse("json", key.to_string(), "not a boolean")),
+        }
     }
 
     // ---- builders (report writing convenience) ----
@@ -460,6 +531,33 @@ mod tests {
         assert!(v.req_usize("fr").is_err());
         assert!(v.req_usize("missing").is_err());
         assert!(v.req_str("n").is_err());
+        // Regression: above 2^53 a float is not an exact integer — reject
+        // instead of silently saturating.
+        let huge = Json::obj(vec![("x", Json::Num(1.0e300))]);
+        assert!(huge.req_usize("x").is_err());
+    }
+
+    #[test]
+    fn optional_accessors_distinguish_absent_from_mistyped() {
+        let v = Json::parse(
+            r#"{"s": "x", "n": 7, "b": true, "seed_str": "18446744073709551615", "f": 1.5}"#,
+        )
+        .unwrap();
+        assert_eq!(v.opt_str("s").unwrap(), Some("x"));
+        assert_eq!(v.opt_str("missing").unwrap(), None);
+        assert!(v.opt_str("n").is_err(), "present but mistyped is an error");
+        assert_eq!(v.opt_usize("n").unwrap(), Some(7));
+        assert!(v.opt_usize("f").is_err());
+        assert_eq!(v.opt_bool("b").unwrap(), Some(true));
+        assert!(v.opt_bool("s").is_err());
+        assert_eq!(v.opt_u64("n").unwrap(), Some(7));
+        // Strings carry the full 64-bit range (bench-style seeds).
+        assert_eq!(v.opt_u64("seed_str").unwrap(), Some(u64::MAX));
+        assert!(v.opt_u64("s").is_err());
+        assert_eq!(v.opt_u64("absent").unwrap(), None);
+        // 2^53-and-above numbers are rejected, not rounded.
+        let big = Json::obj(vec![("x", Json::num(9.1e15))]);
+        assert!(big.opt_u64("x").is_err());
     }
 
     #[test]

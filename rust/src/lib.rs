@@ -20,8 +20,10 @@
 //!   `Method`/`StatKernel` seam covering ANOSIM, PERMDISP and pairwise
 //!   PERMANOVA), the XLA runtime ([`runtime`]), the unified [`backend`]
 //!   execution engine (the `Backend` trait, its name-keyed registry and
-//!   the sharded permutation scheduler — generic over the statistic) and
-//!   the heterogeneous [`coordinator`], plus reporting and the CLI.
+//!   the sharded permutation scheduler — generic over the statistic), the
+//!   heterogeneous [`coordinator`], and the shared-dataset [`service`]
+//!   layer (dataset cache + multi-job batch driver behind the `serve`
+//!   subcommand), plus reporting and the CLI.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! graph once, and the binary only loads `artifacts/*.hlo.txt`.
@@ -50,6 +52,7 @@ pub mod permanova;
 pub mod report;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod simulator;
 pub mod stream;
 pub mod unifrac;

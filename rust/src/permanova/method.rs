@@ -107,6 +107,8 @@ impl Method {
 pub struct PermanovaStat {
     /// `s_T = Σ_{i<j} d²_ij / n`.
     pub s_t: f64,
+    /// Objects in the matrix the prelude was computed from (reuse check).
+    pub n: usize,
 }
 
 /// ANOSIM prelude: condensed mid-ranks of the distances (computed once —
@@ -131,6 +133,14 @@ pub struct PermdispStat {
 /// A prepared per-run statistic: the method's prelude plus its
 /// per-permutation evaluation.  Built once by [`prepare`](Self::prepare)
 /// and shared read-only with the backend via `BatchPlan::stat`.
+///
+/// **Prelude reuse is bitwise-neutral:** a prelude depends only on the
+/// (matrix, grouping) problem, never on the permutation plan, seed, backend
+/// or scheduling knobs — so the service layer's `DatasetCache` memoizes one
+/// prepared kernel per method per dataset and hands the *same values* to
+/// every job.  Reusing a prelude therefore cannot perturb a single bit of
+/// any statistic; [`check_problem`](Self::check_problem) guards against
+/// handing a kernel to a *different* problem than it was prepared for.
 #[derive(Clone, Debug)]
 pub enum StatKernel {
     Permanova(PermanovaStat),
@@ -157,7 +167,9 @@ impl StatKernel {
             )));
         }
         match method {
-            Method::Permanova => Ok(StatKernel::Permanova(PermanovaStat { s_t: st_of(mat) })),
+            Method::Permanova => {
+                Ok(StatKernel::Permanova(PermanovaStat { s_t: st_of(mat), n: mat.n() }))
+            }
             Method::Anosim => Ok(StatKernel::Anosim(AnosimStat {
                 ranks: rank_condensed(&mat.to_condensed()),
             })),
@@ -175,6 +187,40 @@ impl StatKernel {
                     .into(),
             )),
         }
+    }
+
+    /// Verify this kernel was prepared for the given problem shape: the
+    /// cheap guard the engine runs before reusing a cached prelude.  It
+    /// checks everything derivable from the prelude (object count, and the
+    /// group count for PERMDISP) — a size-matched but *content*-different
+    /// matrix is the caller's contract to avoid (the `DatasetCache` keys on
+    /// the data source, so a cached prelude always belongs to its dataset).
+    pub fn check_problem(&self, mat: &DistanceMatrix, grouping: &Grouping) -> Result<()> {
+        let n = mat.n();
+        let prepared_n = match self {
+            StatKernel::Permanova(p) => p.n,
+            // ranks.len() = n(n-1)/2 uniquely determines n (round, don't
+            // truncate: sqrt may land an ulp below the exact odd integer).
+            StatKernel::Anosim(a) => {
+                ((1.0 + (1.0 + 8.0 * a.ranks.len() as f64).sqrt()) / 2.0).round() as usize
+            }
+            StatKernel::Permdisp(p) => p.dists.len(),
+        };
+        if prepared_n != n {
+            return Err(Error::InvalidInput(format!(
+                "prelude prepared for n = {prepared_n}, problem has n = {n}"
+            )));
+        }
+        if let StatKernel::Permdisp(p) = self {
+            if p.k != grouping.k() {
+                return Err(Error::InvalidInput(format!(
+                    "PERMDISP prelude prepared for k = {}, grouping has k = {}",
+                    p.k,
+                    grouping.k()
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// The method this kernel evaluates.
@@ -389,6 +435,24 @@ mod tests {
         assert!(StatKernel::prepare(Method::PairwisePermanova, &mat, &grouping).is_err());
         let g_bad = Grouping::balanced(30, 3).unwrap();
         assert!(StatKernel::prepare(Method::Anosim, &mat, &g_bad).is_err());
+    }
+
+    #[test]
+    fn check_problem_guards_prelude_reuse() {
+        let (mat, grouping) = fixture(24, 3, 5);
+        let (other_mat, other_grouping) = fixture(30, 3, 5);
+        for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+            let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
+            kernel.check_problem(&mat, &grouping).unwrap();
+            assert!(
+                kernel.check_problem(&other_mat, &other_grouping).is_err(),
+                "{method:?}: prelude for n=24 must not serve n=30"
+            );
+        }
+        // PERMDISP additionally pins the group count.
+        let kernel = StatKernel::prepare(Method::Permdisp, &mat, &grouping).unwrap();
+        let g2 = Grouping::balanced(24, 2).unwrap();
+        assert!(kernel.check_problem(&mat, &g2).is_err(), "k=3 prelude must not serve k=2");
     }
 
     #[test]

@@ -361,7 +361,7 @@ impl Table {
             out.push('\n');
         };
         fmt_row(&self.headers, &mut out);
-        let total: usize = w.iter().sum::<usize>() + 2 * (w.len() - 1);
+        let total: usize = w.iter().sum::<usize>() + 2 * w.len().saturating_sub(1);
         out.push_str(&"-".repeat(total));
         out.push('\n');
         for row in &self.rows {
@@ -410,6 +410,22 @@ pub fn bar_chart(title: &str, items: &[(String, f64)], unit: &str, width: usize)
     out
 }
 
+/// Format a per-second rate with a unit word, autoscaled through k/M
+/// (`format_rate(19.25, "jobs")` → `"19.2 jobs/s"`).  Shared by the batch
+/// summary and the bench throughput table so rates render identically
+/// everywhere.
+pub fn format_rate(per_sec: f64, what: &str) -> String {
+    if per_sec >= 1e6 {
+        format!("{:.2}M {what}/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2}k {what}/s", per_sec / 1e3)
+    } else if per_sec >= 10.0 {
+        format!("{per_sec:.1} {what}/s")
+    } else {
+        format!("{per_sec:.3} {what}/s")
+    }
+}
+
 /// Format a byte count with binary units.
 pub fn format_bytes(b: u64) -> String {
     const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
@@ -450,6 +466,13 @@ mod tests {
     }
 
     #[test]
+    fn empty_table_renders_without_underflow() {
+        // Regression: zero headers used to underflow the separator width.
+        let s = Table::new(&[]).render();
+        assert!(s.ends_with('\n'));
+    }
+
+    #[test]
     fn markdown_shape() {
         let mut t = Table::new(&["x", "y"]);
         t.row_str(&["1", "2"]);
@@ -468,6 +491,14 @@ mod tests {
         let count = |l: &str| l.chars().filter(|&c| c == '#').count();
         assert_eq!(count(slow_bar), 40);
         assert_eq!(count(fast_bar), 10);
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(format_rate(19.25, "jobs"), "19.2 jobs/s");
+        assert_eq!(format_rate(0.5, "jobs"), "0.500 jobs/s");
+        assert_eq!(format_rate(1_500.0, "perms"), "1.50k perms/s");
+        assert_eq!(format_rate(2_000_000.0, "perms"), "2.00M perms/s");
     }
 
     #[test]

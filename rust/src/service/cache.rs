@@ -1,0 +1,362 @@
+//! The dataset cache: load a `(DistanceMatrix, Grouping)` problem once,
+//! serve every later analysis over it from memory.
+//!
+//! The paper's point is that PERMANOVA is memory-bound: the dominant cost
+//! of a run is streaming the distance matrix and building the per-method
+//! prelude, not the per-permutation arithmetic.  A service answering many
+//! analyses over the same dataset therefore wins by amortizing exactly
+//! that work — [`DatasetCache`] keys datasets by their *data source* (and
+//! data seed, for generated sources), bounds residency with an LRU policy,
+//! and memoizes one prepared [`StatKernel`] per method per dataset.
+//!
+//! **Warm results are bitwise-identical to cold results.**  Everything the
+//! cache stores is a pure function of the dataset: the matrix bytes, the
+//! grouping, and prelude values `StatKernel::prepare` would recompute
+//! verbatim.  Nothing about permutation plans, seeds, backends or
+//! scheduling is cached, so a warm run executes the identical operation
+//! sequence a cold run does — the cache-correctness suite pins this per
+//! method × backend.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{DataSource, RunConfig};
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+use crate::permanova::{Grouping, Method, StatKernel};
+
+/// FNV-1a over a canonical description — the "hashed" half of a cache key
+/// (the readable half keeps reports and logs greppable).
+fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The cache key a run configuration's data source resolves to: a
+/// canonical human-readable description plus its FNV-1a hash.  Generated
+/// sources include their *data seed* (see [`RunConfig::effective_data_seed`]);
+/// file sources are keyed by path, so any job reading the same files shares
+/// one entry regardless of seeds.
+pub fn dataset_key(cfg: &RunConfig) -> String {
+    let canon = match &cfg.data {
+        DataSource::Synthetic { n_dims, n_groups } => format!(
+            "synthetic:n={n_dims}:k={n_groups}:seed={}",
+            cfg.effective_data_seed()
+        ),
+        DataSource::SyntheticUnifrac { n_taxa, n_samples, n_groups } => format!(
+            "unifrac:taxa={n_taxa}:samples={n_samples}:k={n_groups}:seed={}",
+            cfg.effective_data_seed()
+        ),
+        // Length-prefix the two paths: ':' is legal in file names, so a
+        // plain join would let distinct (path, labels) pairs collide to
+        // one key and silently serve the wrong dataset.
+        DataSource::Pdm { path, labels_path } => {
+            format!("pdm:{}:{}:{path}:{labels_path}", path.len(), labels_path.len())
+        }
+        DataSource::Tsv { path, labels_path } => {
+            format!("tsv:{}:{}:{path}:{labels_path}", path.len(), labels_path.len())
+        }
+    };
+    format!("{canon}#{:016x}", fnv64(&canon))
+}
+
+/// One resident dataset: the loaded problem plus its memoized per-method
+/// statistic preludes.
+pub struct CachedDataset {
+    key: String,
+    pub mat: DistanceMatrix,
+    pub grouping: Grouping,
+    /// Lazily prepared kernels, keyed by [`Method::name`].
+    kernels: Mutex<BTreeMap<&'static str, Arc<StatKernel>>>,
+}
+
+impl CachedDataset {
+    /// Load (and validate) the dataset a config describes — the same
+    /// `load_data` + `validate` sequence the cold `run_config` path runs.
+    fn load(cfg: &RunConfig) -> Result<CachedDataset> {
+        let (mat, grouping) = crate::coordinator::load_data(cfg)?;
+        mat.validate(1e-4)?;
+        Ok(CachedDataset {
+            key: dataset_key(cfg),
+            mat,
+            grouping,
+            kernels: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// The cache key this dataset was loaded under.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// The prepared statistic prelude for `method`, computed on first use
+    /// and shared by every later job on this dataset.
+    ///
+    /// [`Method::PairwisePermanova`] has no dataset-level prelude (the
+    /// engine prepares one per group-pair sub-problem), so requesting it
+    /// here is an input error.
+    pub fn kernel(&self, method: Method) -> Result<Arc<StatKernel>> {
+        if method == Method::PairwisePermanova {
+            return Err(Error::InvalidInput(
+                "pairwise PERMANOVA prepares per-pair preludes; none is cacheable".into(),
+            ));
+        }
+        let mut kernels = self.kernels.lock().unwrap();
+        if let Some(k) = kernels.get(method.name()) {
+            return Ok(Arc::clone(k));
+        }
+        let prepared = Arc::new(StatKernel::prepare(method, &self.mat, &self.grouping)?);
+        kernels.insert(method.name(), Arc::clone(&prepared));
+        Ok(prepared)
+    }
+
+    /// Prepared preludes currently memoized.
+    pub fn kernels_prepared(&self) -> usize {
+        self.kernels.lock().unwrap().len()
+    }
+
+    /// Approximate resident size (the matrix dominates).
+    pub fn nbytes(&self) -> usize {
+        self.mat.nbytes()
+    }
+}
+
+/// A point-in-time snapshot of cache effectiveness, surfaced in batch
+/// summaries, serve output and the bench throughput cells.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from memory.
+    pub hits: usize,
+    /// Lookups that had to load the dataset.
+    pub misses: usize,
+    /// Datasets currently resident.
+    pub entries: usize,
+    /// Maximum resident datasets (0 = caching disabled).
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Hits over total lookups (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// LRU map of resident datasets.
+struct CacheInner {
+    map: BTreeMap<String, Arc<CachedDataset>>,
+    /// Keys in recency order, most recently used last.
+    order: Vec<String>,
+}
+
+/// The shared-dataset cache: `dataset_key -> CachedDataset`, LRU-bounded
+/// to `capacity` entries, with hit/miss counters.
+///
+/// Capacity 0 disables caching entirely: every lookup loads fresh and
+/// nothing is retained — the *cold* reference the bench throughput axis
+/// measures against.
+pub struct DatasetCache {
+    capacity: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    inner: Mutex<CacheInner>,
+}
+
+impl DatasetCache {
+    /// Cache bounded to `capacity` resident datasets.
+    pub fn new(capacity: usize) -> DatasetCache {
+        DatasetCache {
+            capacity,
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            inner: Mutex::new(CacheInner { map: BTreeMap::new(), order: Vec::new() }),
+        }
+    }
+
+    /// The dataset for `cfg`'s data source: from memory when resident
+    /// (`true` = hit), loaded — and, capacity permitting, retained — when
+    /// not.  Eviction is strict LRU over lookup order.
+    pub fn get_or_load(&self, cfg: &RunConfig) -> Result<(Arc<CachedDataset>, bool)> {
+        let key = dataset_key(cfg);
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(ds) = inner.map.get(&key).cloned() {
+                inner.order.retain(|k| k != &key);
+                inner.order.push(key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((ds, true));
+            }
+        }
+        // Load outside the lock: dataset construction can be seconds of
+        // work and must not serialize against concurrent hits.
+        let ds = Arc::new(CachedDataset::load(cfg)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if self.capacity > 0 {
+            let mut inner = self.inner.lock().unwrap();
+            // A racing loader may have inserted the key meanwhile; keep
+            // the resident instance so every consumer shares one copy.
+            // This call still *paid* a load, so it reports a miss — the
+            // per-call flags always reconcile with the hit/miss counters.
+            if let Some(existing) = inner.map.get(&key).cloned() {
+                inner.order.retain(|k| k != &key);
+                inner.order.push(key);
+                return Ok((existing, false));
+            }
+            while inner.map.len() >= self.capacity {
+                let lru = inner.order.remove(0);
+                inner.map.remove(&lru);
+            }
+            inner.map.insert(key.clone(), Arc::clone(&ds));
+            inner.order.push(key);
+        }
+        Ok((ds, false))
+    }
+
+    /// Datasets currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Whether the dataset for `cfg` is resident (no counter update).
+    pub fn contains(&self, cfg: &RunConfig) -> bool {
+        self.inner.lock().unwrap().map.contains_key(&dataset_key(cfg))
+    }
+
+    /// Approximate resident bytes across every cached dataset.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().map.values().map(|d| d.nbytes()).sum()
+    }
+
+    /// Current hit/miss/residency counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataSource;
+
+    fn cfg(n: usize, data_seed: u64) -> RunConfig {
+        RunConfig {
+            data: DataSource::Synthetic { n_dims: n, n_groups: 2 },
+            n_perms: 9,
+            seed: 1,
+            data_seed: Some(data_seed),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn keys_are_stable_and_seed_aware() {
+        let a = dataset_key(&cfg(24, 5));
+        assert_eq!(a, dataset_key(&cfg(24, 5)), "deterministic");
+        assert_ne!(a, dataset_key(&cfg(26, 5)), "size-aware");
+        assert_ne!(a, dataset_key(&cfg(24, 6)), "data-seed-aware");
+        assert!(a.starts_with("synthetic:n=24:k=2:seed=5#"), "{a}");
+        // The run seed does not key generated data when data_seed is set.
+        let mut c = cfg(24, 5);
+        c.seed = 999;
+        assert_eq!(a, dataset_key(&c));
+        // File sources are keyed by path only — seeds never regenerate them.
+        let f = RunConfig {
+            data: DataSource::Pdm { path: "m.pdm".into(), labels_path: "l.txt".into() },
+            ..Default::default()
+        };
+        let mut f2 = f.clone();
+        f2.seed = 42;
+        assert_eq!(dataset_key(&f), dataset_key(&f2));
+        // ':' in file names must not make distinct path pairs collide.
+        let mk = |path: &str, labels: &str| {
+            dataset_key(&RunConfig {
+                data: DataSource::Pdm { path: path.into(), labels_path: labels.into() },
+                ..Default::default()
+            })
+        };
+        assert_ne!(mk("runs/a:1.pdm", "l.txt"), mk("runs/a", "1.pdm:l.txt"));
+    }
+
+    #[test]
+    fn hits_share_one_instance_and_count() {
+        let cache = DatasetCache::new(4);
+        let (a, hit_a) = cache.get_or_load(&cfg(24, 1)).unwrap();
+        assert!(!hit_a, "first lookup loads");
+        let (b, hit_b) = cache.get_or_load(&cfg(24, 1)).unwrap();
+        assert!(hit_b, "second lookup hits");
+        assert!(Arc::ptr_eq(&a, &b), "hit returns the resident instance");
+        assert_eq!(a.mat.data(), b.mat.data());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.capacity), (1, 1, 1, 4));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert!(cache.resident_bytes() >= a.nbytes());
+    }
+
+    #[test]
+    fn lru_eviction_bounds_residency() {
+        let cache = DatasetCache::new(2);
+        cache.get_or_load(&cfg(24, 1)).unwrap();
+        cache.get_or_load(&cfg(24, 2)).unwrap();
+        assert_eq!(cache.len(), 2);
+        // Touch 1 so 2 becomes the LRU victim.
+        cache.get_or_load(&cfg(24, 1)).unwrap();
+        cache.get_or_load(&cfg(24, 3)).unwrap();
+        assert_eq!(cache.len(), 2, "capacity is a hard bound");
+        assert!(cache.contains(&cfg(24, 1)), "recently used survives");
+        assert!(!cache.contains(&cfg(24, 2)), "LRU evicted");
+        assert!(cache.contains(&cfg(24, 3)));
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let cache = DatasetCache::new(0);
+        let (_, h1) = cache.get_or_load(&cfg(24, 1)).unwrap();
+        let (_, h2) = cache.get_or_load(&cfg(24, 1)).unwrap();
+        assert!(!h1 && !h2, "nothing is ever retained");
+        assert_eq!(cache.len(), 0);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 2));
+        assert_eq!(s.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn kernels_are_memoized_per_method() {
+        let cache = DatasetCache::new(2);
+        let (ds, _) = cache.get_or_load(&cfg(24, 1)).unwrap();
+        assert_eq!(ds.kernels_prepared(), 0);
+        let k1 = ds.kernel(Method::Anosim).unwrap();
+        let k2 = ds.kernel(Method::Anosim).unwrap();
+        assert!(Arc::ptr_eq(&k1, &k2), "one prelude per method");
+        assert_eq!(ds.kernels_prepared(), 1);
+        ds.kernel(Method::Permanova).unwrap();
+        ds.kernel(Method::Permdisp).unwrap();
+        assert_eq!(ds.kernels_prepared(), 3);
+        assert!(ds.kernel(Method::PairwisePermanova).is_err());
+    }
+
+    #[test]
+    fn load_failures_propagate() {
+        let cache = DatasetCache::new(2);
+        let bad = RunConfig {
+            data: DataSource::Pdm { path: "/nope.pdm".into(), labels_path: "/nope.txt".into() },
+            ..Default::default()
+        };
+        assert!(cache.get_or_load(&bad).is_err());
+        assert_eq!(cache.len(), 0, "failed loads are not retained");
+    }
+}

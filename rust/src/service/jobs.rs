@@ -1,0 +1,322 @@
+//! The multi-job batch driver: an ordered list of heterogeneous analysis
+//! jobs (method × backend × n_perms × seed), executed against cached
+//! datasets through **one** shared scheduler pool.
+//!
+//! This is the `serve` subcommand's engine.  Requests arrive as JSONL (one
+//! JSON object per line, [`RunConfig::from_json`]'s schema plus an
+//! optional `"id"`); responses leave as JSONL in request order, each line
+//! carrying the job's outcome, its cache provenance (`"hit"`/`"miss"`) and
+//! the full analysis report.  A failed job produces an `"ok": false` line
+//! and the batch keeps going — one malformed request must not poison a
+//! thousand good ones.
+//!
+//! Scheduling: the whole batch runs inside [`with_shared_pool`], so every
+//! engine job's sharded permutation loop is served by one persistent
+//! worker crew instead of spawning a scoped pool per call.
+
+use std::time::Instant;
+
+use crate::backend::shard::with_shared_pool;
+use crate::config::RunConfig;
+use crate::coordinator::run_config_cached;
+use crate::error::{Error, Result};
+use crate::jsonio::Json;
+use crate::report::{format_rate, Table};
+
+use super::cache::{CacheStats, DatasetCache};
+
+/// One parsed request: a stable id (from the request's `"id"` field, or
+/// `job-<ordinal>` when absent) plus the run configuration.
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    pub id: String,
+    pub cfg: RunConfig,
+}
+
+/// Parse a JSONL job file: one request per non-blank line.  Errors carry
+/// the 1-based line number of the offending request.  Ids must be unique
+/// across the batch (explicit or defaulted) — responses are correlated to
+/// requests by id, so a duplicate would silently mis-attribute a report.
+pub fn parse_jobs(text: &str) -> Result<Vec<JobRequest>> {
+    let mut jobs: Vec<JobRequest> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ctx = |m: &str| Error::Config(format!("jobs line {}: {m}", ln + 1));
+        let doc = Json::parse(line).map_err(|e| ctx(&e.to_string()))?;
+        let id = doc
+            .opt_str("id")
+            .map_err(|e| ctx(&e.to_string()))?
+            .map(String::from)
+            .unwrap_or_else(|| format!("job-{}", jobs.len() + 1));
+        if !seen.insert(id.clone()) {
+            return Err(ctx(&format!("duplicate job id {id:?}")));
+        }
+        let cfg = RunConfig::from_json(&doc).map_err(|e| ctx(&e.to_string()))?;
+        jobs.push(JobRequest { id, cfg });
+    }
+    if jobs.is_empty() {
+        return Err(Error::Config("jobs file contains no requests".into()));
+    }
+    Ok(jobs)
+}
+
+/// Aggregate outcome of one batch: ordered JSONL response values plus the
+/// batch summary.
+pub struct BatchOutcome {
+    /// One response object per request, in request order.
+    pub responses: Vec<Json>,
+    pub summary: BatchSummary,
+}
+
+impl BatchOutcome {
+    /// The responses as JSONL text (compact, one line each, trailing
+    /// newline) — exactly what `serve` writes.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.responses {
+            out.push_str(&r.to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Batch-level statistics: job counts, wall clock, throughput, cache
+/// effectiveness and pool utilization.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSummary {
+    pub jobs: usize,
+    pub ok: usize,
+    pub failed: usize,
+    pub elapsed_secs: f64,
+    /// Completed jobs per wall-clock second.
+    pub jobs_per_sec: f64,
+    pub cache: CacheStats,
+    /// Worker threads in the shared pool.
+    pub pool_threads: usize,
+    /// Sharded runs the pool served (0 = every job ran single-threaded).
+    pub pool_dispatches: usize,
+}
+
+impl BatchSummary {
+    /// Human-readable summary block (what `serve` prints after a batch).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["batch", "value"]);
+        t.row(&["jobs".into(), format!("{} (ok {}, failed {})", self.jobs, self.ok, self.failed)]);
+        t.row(&["wall".into(), format!("{:.3}s", self.elapsed_secs)]);
+        t.row(&["throughput".into(), format_rate(self.jobs_per_sec, "jobs")]);
+        t.row(&[
+            "cache".into(),
+            format!(
+                "{} hits / {} misses ({:.0}% hit rate), {} resident (cap {})",
+                self.cache.hits,
+                self.cache.misses,
+                100.0 * self.cache.hit_rate(),
+                self.cache.entries,
+                self.cache.capacity
+            ),
+        ]);
+        t.row(&[
+            "pool".into(),
+            format!("{} workers, {} sharded dispatches", self.pool_threads, self.pool_dispatches),
+        ]);
+        t.render()
+    }
+}
+
+/// Run an ordered batch of jobs against `cache` on one shared scheduler
+/// pool of `workers` threads (0 = all available).  Never fails as a whole:
+/// per-job errors become `"ok": false` response lines.
+pub fn run_jobs(jobs: &[JobRequest], cache: &DatasetCache, workers: usize) -> BatchOutcome {
+    let t0 = Instant::now();
+    let mut responses = Vec::with_capacity(jobs.len());
+    let mut ok = 0usize;
+    let (pool_threads, pool_dispatches) = with_shared_pool(workers, |pool| {
+        for job in jobs {
+            let t_job = Instant::now();
+            match run_config_cached(&job.cfg, cache) {
+                Ok((report, hit)) => {
+                    ok += 1;
+                    responses.push(Json::obj(vec![
+                        ("id", Json::str(job.id.clone())),
+                        ("ok", Json::Bool(true)),
+                        ("cache", Json::str(if hit { "hit" } else { "miss" })),
+                        ("dataset", Json::str(super::cache::dataset_key(&job.cfg))),
+                        ("elapsed_secs", Json::num(t_job.elapsed().as_secs_f64())),
+                        ("report", report.to_json()),
+                    ]));
+                }
+                Err(e) => {
+                    responses.push(Json::obj(vec![
+                        ("id", Json::str(job.id.clone())),
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::str(e.to_string())),
+                    ]));
+                }
+            }
+        }
+        (pool.threads(), pool.jobs_dispatched())
+    });
+    let elapsed_secs = t0.elapsed().as_secs_f64();
+    let summary = BatchSummary {
+        jobs: jobs.len(),
+        ok,
+        failed: jobs.len() - ok,
+        elapsed_secs,
+        // Completed jobs only: nine instantly-failing jobs must not
+        // inflate the reported throughput.
+        jobs_per_sec: if elapsed_secs > 0.0 { ok as f64 / elapsed_secs } else { 0.0 },
+        cache: cache.stats(),
+        pool_threads,
+        pool_dispatches,
+    };
+    BatchOutcome { responses, summary }
+}
+
+/// Validate a JSONL response document (`serve --check`): every non-blank
+/// line parses, carries `"id"` + boolean `"ok"`, and `ok` lines embed a
+/// report object while failed lines carry an `"error"` string.  Returns
+/// `(ok_count, failed_count)`.
+pub fn validate_responses(text: &str) -> Result<(usize, usize)> {
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ctx = |m: String| Error::Config(format!("responses line {}: {m}", ln + 1));
+        let doc = Json::parse(line).map_err(|e| ctx(e.to_string()))?;
+        doc.req_str("id").map_err(|e| ctx(e.to_string()))?;
+        let is_ok = doc
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| ctx("ok missing/not a boolean".into()))?;
+        if is_ok {
+            let cache = doc.req_str("cache").map_err(|e| ctx(e.to_string()))?;
+            if cache != "hit" && cache != "miss" {
+                return Err(ctx(format!("cache must be hit|miss, got {cache:?}")));
+            }
+            let report = doc
+                .get("report")
+                .ok_or_else(|| ctx("ok response without a report".into()))?;
+            report.req_str("backend").map_err(|e| ctx(e.to_string()))?;
+            report.req_str("method").map_err(|e| ctx(e.to_string()))?;
+            ok += 1;
+        } else {
+            doc.req_str("error").map_err(|e| ctx(e.to_string()))?;
+            failed += 1;
+        }
+    }
+    if ok + failed == 0 {
+        return Err(Error::Config("responses file contains no responses".into()));
+    }
+    Ok((ok, failed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permanova::Method;
+
+    const JOBS: &str = r#"
+        {"id": "perma", "n_perms": 19, "seed": 3, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 5}}
+        {"id": "rank", "method": "anosim", "n_perms": 19, "seed": 4, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 5}}
+
+        {"method": "permdisp", "backend": "native-batch", "n_perms": 19, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 5}}
+    "#;
+
+    #[test]
+    fn parse_jobs_reads_ids_and_configs() {
+        let jobs = parse_jobs(JOBS).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].id, "perma");
+        assert_eq!(jobs[1].id, "rank");
+        assert_eq!(jobs[2].id, "job-3", "missing ids default to the ordinal");
+        assert_eq!(jobs[1].cfg.method, Method::Anosim);
+        assert_eq!(jobs[2].cfg.backend, "native-batch");
+        assert_eq!(jobs[0].cfg.data_seed, Some(5));
+    }
+
+    #[test]
+    fn parse_jobs_rejects_bad_lines_with_position() {
+        let e = parse_jobs("{\"n_perms\": 9}\nnot json\n").unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+        let e = parse_jobs("{\"backend\": \"cuda\"}\n").unwrap_err().to_string();
+        assert!(e.contains("line 1") && e.contains("cuda"), "{e}");
+        assert!(parse_jobs("\n  \n").is_err(), "no requests is an error");
+        // Duplicate ids (explicit, or a fallback colliding with an
+        // explicit "job-N") are rejected — responses correlate by id.
+        let e = parse_jobs("{\"id\": \"x\"}\n{\"id\": \"x\"}\n").unwrap_err().to_string();
+        assert!(e.contains("line 2") && e.contains("duplicate"), "{e}");
+        let e = parse_jobs("{\"id\": \"job-2\"}\n{\"n_perms\": 9}\n").unwrap_err().to_string();
+        assert!(e.contains("duplicate"), "{e}");
+    }
+
+    #[test]
+    fn batch_runs_share_the_cache_and_stay_ordered() {
+        let jobs = parse_jobs(JOBS).unwrap();
+        let cache = DatasetCache::new(4);
+        let out = run_jobs(&jobs, &cache, 2);
+        assert_eq!(out.responses.len(), 3);
+        assert_eq!(out.summary.jobs, 3);
+        assert_eq!(out.summary.ok, 3);
+        assert_eq!(out.summary.failed, 0);
+        assert_eq!(out.summary.pool_threads, 2);
+        // All three jobs target one dataset: first loads, the rest hit.
+        assert_eq!((out.summary.cache.misses, out.summary.cache.hits), (1, 2));
+        // Responses are ordered and tagged.
+        assert_eq!(out.responses[0].req_str("id").unwrap(), "perma");
+        assert_eq!(out.responses[0].req_str("cache").unwrap(), "miss");
+        assert_eq!(out.responses[1].req_str("cache").unwrap(), "hit");
+        assert_eq!(out.responses[2].req_str("id").unwrap(), "job-3");
+        assert_eq!(
+            out.responses[1].get("report").unwrap().req_str("method").unwrap(),
+            "anosim"
+        );
+        // The JSONL round-trips through the validator.
+        let (ok, failed) = validate_responses(&out.to_jsonl()).unwrap();
+        assert_eq!((ok, failed), (3, 0));
+        // Summary renders the counters.
+        let s = out.summary.render();
+        assert!(s.contains("jobs"), "{s}");
+        assert!(s.contains("2 hits / 1 misses"), "{s}");
+    }
+
+    #[test]
+    fn failed_jobs_do_not_poison_the_batch() {
+        let text = r#"
+            {"id": "good", "n_perms": 9, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2}}
+            {"id": "bad", "n_perms": 9, "data": {"source": "pdm", "path": "/nope.pdm", "labels": "/nope.txt"}}
+        "#;
+        let jobs = parse_jobs(text).unwrap();
+        let cache = DatasetCache::new(4);
+        let out = run_jobs(&jobs, &cache, 1);
+        assert_eq!(out.summary.ok, 1);
+        assert_eq!(out.summary.failed, 1);
+        let bad = &out.responses[1];
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        assert!(bad.req_str("error").unwrap().contains("nope"));
+        let (ok, failed) = validate_responses(&out.to_jsonl()).unwrap();
+        assert_eq!((ok, failed), (1, 1));
+    }
+
+    #[test]
+    fn response_validator_rejects_malformed_documents() {
+        assert!(validate_responses("").is_err());
+        assert!(validate_responses("not json\n").is_err());
+        assert!(validate_responses("{\"id\": \"x\"}\n").is_err(), "missing ok");
+        assert!(
+            validate_responses("{\"id\": \"x\", \"ok\": true}\n").is_err(),
+            "ok without report"
+        );
+        assert!(
+            validate_responses("{\"id\": \"x\", \"ok\": false}\n").is_err(),
+            "failure without error"
+        );
+    }
+}

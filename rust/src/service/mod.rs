@@ -1,0 +1,31 @@
+//! The shared-dataset analysis service layer: what turns the one-shot CLI
+//! into something shaped like a server.
+//!
+//! Three pieces, stacked on the execution engine:
+//!
+//! * [`DatasetCache`] — seeded/hashed data-source key → loaded
+//!   [`DistanceMatrix`](crate::dmat::DistanceMatrix) + grouping +
+//!   memoized per-method [`StatKernel`](crate::permanova::StatKernel)
+//!   preludes; LRU-bounded, hit/miss counters surfaced in every summary;
+//! * [`run_jobs`] / [`JobRequest`] — the batch driver: an ordered,
+//!   heterogeneous list of jobs (method × backend × n_perms × seed)
+//!   executed through **one** shared scheduler pool
+//!   ([`with_shared_pool`](crate::backend::shard::with_shared_pool))
+//!   instead of one pool per call;
+//! * the JSONL wire format — [`parse_jobs`] for requests,
+//!   [`BatchOutcome::to_jsonl`] / [`validate_responses`] for the ordered
+//!   response stream the `serve` subcommand emits and CI validates.
+//!
+//! Correctness contract: warm-cache results are **bitwise identical** to
+//! cold single-shot runs for the same (dataset, method, backend, seed) —
+//! the cache only memoizes pure functions of the dataset, and the shared
+//! pool preserves the scheduler's determinism contract.  The
+//! cache-correctness suite (`rust/tests/service_cache.rs`) pins both.
+
+mod cache;
+mod jobs;
+
+pub use cache::{dataset_key, CacheStats, CachedDataset, DatasetCache};
+pub use jobs::{
+    parse_jobs, run_jobs, validate_responses, BatchOutcome, BatchSummary, JobRequest,
+};

@@ -1,0 +1,224 @@
+//! Cache-correctness suite for the shared-dataset service layer.
+//!
+//! The service contract under test:
+//!
+//! 1. **Warm ≡ cold, bitwise** — a run served from the `DatasetCache`
+//!    (reused matrix + reused `StatKernel` prelude, shared scheduler pool)
+//!    produces bit-identical statistics to the cold single-shot path, for
+//!    every method × backend;
+//! 2. **LRU bounds memory** — residency never exceeds capacity, eviction
+//!    is least-recently-used;
+//! 3. **The identity permutation is counted exactly once** in the
+//!    `(1 + ge) / (1 + N)` p-value denominator, on both the legacy oracle
+//!    and engine paths (a regression guard: the cache refactor must not
+//!    double-serve plan index 0).
+
+use permanova_apu::backend::shard::with_shared_pool;
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::coordinator::{load_data, run_config, run_config_cached};
+use permanova_apu::permanova::{permanova, Method, PermanovaOpts, SwAlgorithm};
+use permanova_apu::service::{parse_jobs, run_jobs, DatasetCache};
+
+/// Every backend that needs no external artifacts (xla is exercised by its
+/// own artifact-gated suites).
+const BACKENDS: [&str; 7] = [
+    "native",
+    "native-brute",
+    "native-tiled",
+    "native-flat",
+    "native-batch",
+    "simulator",
+    "simulator-gpu",
+];
+
+fn cfg(backend: &str, method: Method) -> RunConfig {
+    RunConfig {
+        data: DataSource::Synthetic { n_dims: 36, n_groups: 3 },
+        n_perms: 49,
+        seed: 11,
+        method,
+        backend: backend.to_string(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn warm_cache_is_bitwise_identical_to_cold_for_every_method_and_backend() {
+    for backend in BACKENDS {
+        for method in Method::ALL {
+            let c = cfg(backend, method);
+            let cold = run_config(&c).expect("cold run");
+            let cache = DatasetCache::new(4);
+            let (first, hit0) = run_config_cached(&c, &cache).expect("first cached run");
+            assert!(!hit0, "{backend}/{method:?}: first lookup must load");
+            let (warm, hit1) = run_config_cached(&c, &cache).expect("warm run");
+            assert!(hit1, "{backend}/{method:?}: second lookup must hit");
+            for candidate in [&first, &warm] {
+                assert_eq!(cold.runs.len(), candidate.runs.len(), "{backend}/{method:?}");
+                for (a, b) in cold.runs.iter().zip(&candidate.runs) {
+                    assert_eq!(
+                        a.f_obs.to_bits(),
+                        b.f_obs.to_bits(),
+                        "{backend}/{method:?}: f_obs differs"
+                    );
+                    assert_eq!(a.p_value, b.p_value, "{backend}/{method:?}");
+                    assert_eq!(a.s_t.to_bits(), b.s_t.to_bits(), "{backend}/{method:?}");
+                    assert_eq!(a.f_perms.len(), b.f_perms.len());
+                    for (i, (x, y)) in a.f_perms.iter().zip(&b.f_perms).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{backend}/{method:?}: perm {i} differs"
+                        );
+                    }
+                }
+                assert_eq!(cold.group_dispersions, candidate.group_dispersions);
+                for (p, q) in cold.pairs.iter().zip(&candidate.pairs) {
+                    assert_eq!(p.p_adjusted, q.p_adjusted, "{backend}/{method:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shared_pool_execution_is_bitwise_identical_too() {
+    // The "one pool per batch" scheduler must not perturb results either:
+    // the same cached run inside and outside a shared pool, multi-threaded.
+    let mut c = cfg("native-batch", Method::Anosim);
+    c.threads = 3;
+    c.shard_size = 7;
+    let cold = run_config(&c).unwrap();
+    let cache = DatasetCache::new(2);
+    let pooled = with_shared_pool(3, |pool| {
+        let r = run_config_cached(&c, &cache).unwrap().0;
+        assert!(pool.jobs_dispatched() > 0, "the sharded loop must route via the pool");
+        r
+    });
+    assert_eq!(cold.f_obs.to_bits(), pooled.f_obs.to_bits());
+    assert_eq!(cold.p_value, pooled.p_value);
+    for (x, y) in cold.f_perms.iter().zip(&pooled.f_perms) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
+
+#[test]
+fn lru_eviction_bounds_memory_across_runs() {
+    let cache = DatasetCache::new(2);
+    let sizes = [30usize, 36, 42];
+    let mut per_dataset_bytes = Vec::new();
+    for n in sizes {
+        let mut c = cfg("native-brute", Method::Permanova);
+        c.data = DataSource::Synthetic { n_dims: n, n_groups: 3 };
+        let (r, hit) = run_config_cached(&c, &cache).unwrap();
+        assert!(!hit);
+        assert_eq!(r.n, n);
+        per_dataset_bytes.push(n * n * 4);
+        assert!(cache.len() <= 2, "capacity is a hard residency bound");
+    }
+    // The oldest dataset (n=30) was evicted; the two recent ones remain.
+    let mut c30 = cfg("native-brute", Method::Permanova);
+    c30.data = DataSource::Synthetic { n_dims: 30, n_groups: 3 };
+    assert!(!cache.contains(&c30), "LRU victim evicted");
+    let mut c42 = cfg("native-brute", Method::Permanova);
+    c42.data = DataSource::Synthetic { n_dims: 42, n_groups: 3 };
+    assert!(cache.contains(&c42));
+    // Resident bytes stay below the sum of all three datasets.
+    let total: usize = per_dataset_bytes.iter().sum();
+    assert!(
+        cache.resident_bytes() < total,
+        "resident {} vs unbounded {total}",
+        cache.resident_bytes()
+    );
+    let stats = cache.stats();
+    assert_eq!((stats.misses, stats.entries), (3, 2));
+}
+
+#[test]
+fn identity_permutation_counted_exactly_once_in_the_denominator() {
+    let n_perms = 99usize;
+    let c = RunConfig {
+        data: DataSource::Synthetic { n_dims: 30, n_groups: 3 },
+        n_perms,
+        seed: 23,
+        ..Default::default()
+    };
+
+    // Engine path (cold).
+    let engine = run_config(&c).unwrap();
+    assert_eq!(
+        engine.f_perms.len(),
+        n_perms,
+        "the observed labelling (plan index 0) must not sit in f_perms"
+    );
+    let ge = engine.f_perms.iter().filter(|&&f| f >= engine.f_obs).count();
+    let expect = (1.0 + ge as f64) / (1.0 + n_perms as f64);
+    assert_eq!(engine.p_value, expect, "(1+ge)/(1+N) with the identity counted once");
+    // A p-value of exactly 1/(1+N) is reachable only when no permutation
+    // ties or beats the observed — the identity contributes the single +1.
+    assert!(engine.p_value >= 1.0 / (1.0 + n_perms as f64));
+
+    // Legacy oracle path.
+    let (mat, grouping) = load_data(&c).unwrap();
+    let legacy = permanova(
+        &mat,
+        &grouping,
+        n_perms,
+        &PermanovaOpts { algo: SwAlgorithm::Brute, seed: 23, threads: 1, keep_f_perms: true },
+    )
+    .unwrap();
+    let lp = legacy.f_perms.as_ref().unwrap();
+    assert_eq!(lp.len(), n_perms);
+    let lge = lp.iter().filter(|&&f| f >= legacy.f_obs).count();
+    assert_eq!(legacy.p_value, (1.0 + lge as f64) / (1.0 + n_perms as f64));
+    assert_eq!(legacy.p_value, engine.p_value, "both paths agree on the same plan");
+
+    // Warm service path: identical denominator behaviour.
+    let cache = DatasetCache::new(2);
+    run_config_cached(&c, &cache).unwrap();
+    let (warm, hit) = run_config_cached(&c, &cache).unwrap();
+    assert!(hit);
+    assert_eq!(warm.f_perms.len(), n_perms);
+    assert_eq!(warm.p_value, engine.p_value);
+}
+
+#[test]
+fn serve_batch_matches_cold_single_shots_bitwise() {
+    // A heterogeneous JSONL batch (methods × backends over one dataset):
+    // every response's statistics must equal the cold run of the same job.
+    let text = r#"
+        {"id": "f", "n_perms": 29, "seed": 5, "data": {"source": "synthetic", "n_dims": 30, "n_groups": 3, "seed": 9}}
+        {"id": "r", "method": "anosim", "backend": "native-batch", "n_perms": 29, "seed": 6, "data": {"source": "synthetic", "n_dims": 30, "n_groups": 3, "seed": 9}}
+        {"id": "d", "method": "permdisp", "backend": "native-flat", "n_perms": 29, "seed": 7, "data": {"source": "synthetic", "n_dims": 30, "n_groups": 3, "seed": 9}}
+        {"id": "p", "method": "pairwise", "n_perms": 29, "seed": 8, "data": {"source": "synthetic", "n_dims": 30, "n_groups": 3, "seed": 9}}
+    "#;
+    let jobs = parse_jobs(text).unwrap();
+    let cache = DatasetCache::new(4);
+    let batch = run_jobs(&jobs, &cache, 2);
+    assert_eq!(batch.summary.failed, 0);
+    assert_eq!(batch.summary.cache.misses, 1, "one dataset, loaded once");
+    assert_eq!(batch.summary.cache.hits, 3);
+    for (job, resp) in jobs.iter().zip(&batch.responses) {
+        let cold = run_config(&job.cfg).unwrap();
+        let report = resp.get("report").expect("ok response carries a report");
+        // Compare through the serialized form: same f_obs/p_value fields.
+        let cold_json = cold.to_json();
+        if job.cfg.method == Method::PairwisePermanova {
+            assert_eq!(
+                report.req_arr("pairs").unwrap().len(),
+                cold_json.req_arr("pairs").unwrap().len()
+            );
+        } else {
+            let f = |doc: &permanova_apu::jsonio::Json, key: &str| {
+                doc.get(key).and_then(|v| v.as_f64()).unwrap()
+            };
+            assert_eq!(
+                f(report, "f_obs").to_bits(),
+                f(&cold_json, "f_obs").to_bits(),
+                "{}",
+                job.id
+            );
+            assert_eq!(f(report, "p_value"), f(&cold_json, "p_value"), "{}", job.id);
+        }
+    }
+}
