@@ -23,12 +23,15 @@ bench:
 	$(CARGO) bench
 
 # The CI smoke sweep: emit + schema-validate the repo's benchmark record
-# (one cell family per method the engine routes).
+# (one cell family per method the engine routes), then surface the v4
+# memory-traffic headline: the dense->packed footprint ratio.
 bench-quick:
 	$(CARGO) run --release -- bench --quick --out BENCH_PERMANOVA.json
 	$(CARGO) run --release -- bench --check BENCH_PERMANOVA.json
 	$(CARGO) run --release -- bench --quick --method anosim --out BENCH_ANOSIM.json
 	$(CARGO) run --release -- bench --check BENCH_ANOSIM.json
+	@grep -m1 -o '"footprint_ratio": [0-9.e-]*' BENCH_PERMANOVA.json \
+	  | sed 's/"footprint_ratio": /dense->packed matrix footprint ratio: /'
 
 # The shared-dataset service demo: a heterogeneous JSONL batch over one
 # dataset (distinct permutation seeds, shared data seed) served through

@@ -12,7 +12,7 @@
 use std::time::Instant;
 
 use permanova_apu::bench::Bencher;
-use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::dmat::{CondensedMatrix, DistanceMatrix};
 use permanova_apu::permanova::{sw_batch, Grouping, SwAlgorithm};
 use permanova_apu::report::Table;
 use permanova_apu::rng::PermutationPlan;
@@ -61,7 +61,9 @@ fn main() {
         ]);
     }
 
-    // Native baselines on the same inputs (batch = 32 to match artifacts).
+    // Native baselines on the same inputs (batch = 32 to match artifacts;
+    // packed once, like the engine does).
+    let tri = CondensedMatrix::from_dense(&mat);
     let cap = 32;
     let rows = plan.batch(0, cap);
     for (name, algo) in [
@@ -70,7 +72,7 @@ fn main() {
         ("native/flat", SwAlgorithm::Flat),
     ] {
         let m = b.run(name, || {
-            sw_batch(&mat, &rows, cap, grouping.inv_sizes(), algo, 0)
+            sw_batch(&tri, &rows, cap, grouping.inv_sizes(), algo, 0)
         });
         t.row(&[
             name.to_string(),

@@ -14,7 +14,7 @@
 
 use permanova_apu::backend::ShardSpec;
 use permanova_apu::bench::Bencher;
-use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::dmat::{CondensedMatrix, DistanceMatrix};
 use permanova_apu::permanova::{sw_permutations, sw_plan_range_blocked, Grouping, SwAlgorithm};
 use permanova_apu::report::{bar_chart, Table};
 use permanova_apu::rng::PermutationPlan;
@@ -75,13 +75,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // The batched brute engine: the GPU-winning one-sweep-many-permutations
     // access pattern, on the same host threads.  All `perms` lanes go into
-    // one block, so a single sweep over the matrix evaluates every
+    // one block, so a single sweep over the packed triangle evaluates every
     // permutation (block-aligned sharding makes that one worker's shard).
+    let tri = CondensedMatrix::from_dense(&mat);
     let plan = PermutationPlan::new(grouping.labels().to_vec(), 3, perms);
     let spec = ShardSpec::with_workers(full);
     let batched_label = format!("CPU batched brute ({perms} lanes/sweep)");
     let m = bench.run(&batched_label, || {
-        sw_plan_range_blocked(&mat, &plan, 0, perms, grouping.inv_sizes(), perms, &spec)
+        sw_plan_range_blocked(&tri, &plan, 0, perms, grouping.inv_sizes(), perms, &spec)
     });
     println!("{}", m.format_row());
     measured.push((batched_label, m.median));

@@ -13,7 +13,7 @@
 use std::time::Instant;
 
 use permanova_apu::dmat::DistanceMatrix;
-use permanova_apu::permanova::{fstat_from_sw, pvalue, st_of, sw_brute_f64, Grouping};
+use permanova_apu::permanova::{fstat_from_sw, pvalue, st_of, sw_brute_f64_dense, Grouping};
 use permanova_apu::report::Table;
 use permanova_apu::rng::PermutationPlan;
 use permanova_apu::runtime::{artifacts_dir_for_tests, XlaRuntime};
@@ -88,7 +88,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         ]);
 
         // Cross-check one row against the native oracle.
-        let want = sw_brute_f64(mat.data(), n, plan.base(), grouping.inv_sizes());
+        let want = sw_brute_f64_dense(mat.data(), n, plan.base(), grouping.inv_sizes());
         let want_f = fstat_from_sw(want, s_t, n, k);
         assert!(
             (f_obs - want_f).abs() / want_f.abs().max(1e-9) < 1e-3,

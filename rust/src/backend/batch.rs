@@ -55,9 +55,10 @@ impl Backend for BatchedBruteBackend {
         let n = plan.mat.n();
         let k = plan.grouping.k();
         let stats = match plan.stat {
-            // PERMANOVA: the f32 SoA brute-block engine.
+            // PERMANOVA: the f32 SoA brute-block engine over the packed
+            // triangle — one half-footprint sweep per `perm_block` lanes.
             StatKernel::Permanova(pk) => sw_plan_range_blocked(
-                plan.mat,
+                &pk.packed,
                 plan.perms,
                 plan.start,
                 plan.rows,

@@ -12,8 +12,9 @@
 //! * [`Backend`] — `run_batch(&BatchPlan) -> BatchResult` plus
 //!   [`capabilities`](Backend::capabilities);
 //! * [`BatchPlan`] / [`BatchResult`] — the shared job and output shapes
-//!   (seekable permutation plan + prepared [`StatKernel`] in, one
-//!   statistic per permutation out);
+//!   (seekable permutation plan + prepared [`StatKernel`] in — including
+//!   the packed-triangle kernel operand, see [`BatchPlan::condensed`] —
+//!   one statistic per permutation out);
 //! * [`Registry`] — name-keyed factories (`--backend native-tiled`,
 //!   `--backend simulator`, ...), the hook future backends plug into;
 //! * [`execute`] — the config-driven entry: prepare the method's kernel,
@@ -79,6 +80,17 @@ impl<'a> BatchPlan<'a> {
         shard: ShardSpec,
     ) -> Self {
         BatchPlan { mat, grouping, perms, start: 0, rows: perms.count, stat, shard }
+    }
+
+    /// The **packed triangle** this plan's f32 PERMANOVA kernels sweep,
+    /// when the prelude carries one (`None` for ANOSIM/PERMDISP, whose
+    /// operands are the f64 rank / distance vectors).  Backends bind the
+    /// same buffer through their `StatKernel::Permanova(pk)` match arm;
+    /// this accessor is the plan-level spelling for callers outside that
+    /// match (diagnostics, tests).  The dense [`mat`](Self::mat) stays on
+    /// the plan for shape checks and the I/O/artifact boundary only.
+    pub fn condensed(&self) -> Option<&crate::dmat::CondensedMatrix> {
+        self.stat.packed().map(|p| p.as_ref())
     }
 }
 
@@ -436,6 +448,21 @@ mod tests {
         };
         assert!(e.to_string().contains("cuda"));
         assert!(e.to_string().contains("native-tiled"), "error lists known names: {e}");
+    }
+
+    #[test]
+    fn batch_plan_exposes_the_packed_operand() {
+        use crate::rng::PermutationPlan;
+        let (mat, grouping) = fixture(24, 2);
+        let perms = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
+        let pk = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
+        let plan = BatchPlan::full(&mat, &grouping, &perms, &pk, ShardSpec::default());
+        let tri = plan.condensed().expect("PERMANOVA plans carry the packed triangle");
+        assert_eq!(tri.n(), 24);
+        assert_eq!(tri.values(), mat.to_condensed().as_slice());
+        let ak = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
+        let plan = BatchPlan::full(&mat, &grouping, &perms, &ak, ShardSpec::default());
+        assert!(plan.condensed().is_none(), "rank plans have no f32 stream");
     }
 
     #[test]

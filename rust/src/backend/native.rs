@@ -2,7 +2,9 @@
 //! cores, scheduled by the shared shard scheduler.
 //!
 //! PERMANOVA batches run the backend's f32 formulation (`sw_one` with this
-//! instance's [`SwAlgorithm`]); every other method delegates to the
+//! instance's [`SwAlgorithm`]) over the **packed triangle** carried by the
+//! prelude ([`BatchPlan::condensed`]) — half the dense footprint per
+//! sweep, bit-identical statistics; every other method delegates to the
 //! generic f64 [`eval_plan_range`] loop through the same scheduler, so
 //! shard / worker / SMT knobs behave identically across methods.
 
@@ -45,9 +47,11 @@ impl Backend for NativeBackend {
         let n = plan.mat.n();
         let k = plan.grouping.k();
         let stats = match plan.stat {
-            // PERMANOVA: this backend's f32 kernel formulation.
+            // PERMANOVA: this backend's f32 kernel formulation over the
+            // prelude's packed triangle (the canonical operand).
             StatKernel::Permanova(pk) => {
                 let algo = self.algo;
+                let tri = pk.packed.view();
                 let mut s_w = vec![0.0f32; plan.rows];
                 run_sharded_with(
                     &plan.shard,
@@ -56,8 +60,7 @@ impl Backend for NativeBackend {
                     |row, start, slice| {
                         for (i, out) in slice.iter_mut().enumerate() {
                             plan.perms.fill(plan.start + start + i, row);
-                            *out =
-                                sw_one(algo, plan.mat.data(), n, row, plan.grouping.inv_sizes());
+                            *out = sw_one(algo, tri, row, plan.grouping.inv_sizes());
                         }
                     },
                 );
@@ -124,7 +127,7 @@ mod tests {
     use super::*;
     use crate::backend::ShardSpec;
     use crate::dmat::DistanceMatrix;
-    use crate::permanova::{anosim, st_of, sw_brute_f64, Grouping, Method};
+    use crate::permanova::{anosim, st_of, sw_brute_f64_dense, Grouping, Method};
     use crate::rng::PermutationPlan;
 
     fn plan_fixture(
@@ -158,7 +161,7 @@ mod tests {
         let mut row = vec![0u32; 48];
         for i in 0..20 {
             perms.fill(i, &mut row);
-            let sw = sw_brute_f64(mat.data(), 48, &row, grouping.inv_sizes());
+            let sw = sw_brute_f64_dense(mat.data(), 48, &row, grouping.inv_sizes());
             let want = fstat_from_sw(sw, s_t, 48, 4);
             let rel = (r.stats[i] - want).abs() / want.abs().max(1e-12);
             assert!(rel < 5e-4, "row {i}: {} vs {want}", r.stats[i]);

@@ -1,14 +1,17 @@
 //! Simulator backend: exact numerics natively, modelled MI300A wall-clock
 //! alongside — the hardware-substitution substrate as a [`Backend`].
 //!
-//! Method routing: PERMANOVA numerics use the fast flat kernel (bitwise
-//! identical to `native-flat`); ANOSIM and PERMDISP use the generic f64
-//! loop (bitwise identical to every other backend's generic path).  The
-//! MI300A time model is calibrated for the paper's f32 d² stream, so only
-//! PERMANOVA batches report modelled time — ANOSIM streams f64 ranks
-//! (double the bytes per element) and PERMDISP's per-permutation loop is
-//! O(n); pricing either with the f32-kernel model would be fiction, so
-//! their batches report none.
+//! Method routing: PERMANOVA numerics use the fast flat kernel over the
+//! prelude's packed triangle (bitwise identical to `native-flat`); ANOSIM
+//! and PERMDISP use the generic f64 loop (bitwise identical to every other
+//! backend's generic path).  The MI300A time model is calibrated for the
+//! paper's f32 d² stream, so only PERMANOVA batches report modelled time —
+//! ANOSIM streams f64 ranks (double the bytes per element) and PERMDISP's
+//! per-permutation loop is O(n); pricing either with the f32-kernel model
+//! would be fiction, so their batches report none.  Since PR 5 the
+//! byte-traffic model prices the **packed** layout (what the engine
+//! actually streams); `simulator::traffic` keeps the dense formulas on a
+//! layout axis for comparison.
 
 use std::time::Instant;
 
@@ -46,6 +49,7 @@ impl Backend for SimulatorBackend {
         let k = plan.grouping.k();
         let stats: Vec<f64> = match plan.stat {
             StatKernel::Permanova(pk) => {
+                let tri = pk.packed.view();
                 let mut s_w = vec![0.0f32; plan.rows];
                 run_sharded_with(
                     &plan.shard,
@@ -55,7 +59,7 @@ impl Backend for SimulatorBackend {
                         let inv = plan.grouping.inv_sizes();
                         for (i, out) in slice.iter_mut().enumerate() {
                             plan.perms.fill(plan.start + start + i, row);
-                            *out = sw_one(SwAlgorithm::Flat, plan.mat.data(), n, row, inv);
+                            *out = sw_one(SwAlgorithm::Flat, tri, row, inv);
                         }
                     },
                 );

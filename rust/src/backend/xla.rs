@@ -12,6 +12,13 @@
 //! evaluate host-side through the generic [`eval_plan_range`] loop (same
 //! shard scheduler, same bit-exact statistics as every other backend's
 //! generic path) — one backend name, every method served.
+//!
+//! Layout note: the compiled artifacts take the **dense** `n*n` matrix as
+//! a graph input (the lowered HLO's contract), so device staging is the
+//! one engine path where the dense buffer survives past load — exactly
+//! the "I/O boundary" the packed-layout refactor carves out.  The
+//! host-side generic methods stream their own packed preludes like every
+//! other backend.
 
 use std::time::Instant;
 
@@ -118,7 +125,7 @@ mod tests {
     use super::*;
     use crate::backend::ShardSpec;
     use crate::dmat::DistanceMatrix;
-    use crate::permanova::{fstat_from_sw, st_of, sw_brute_f64, Grouping, Method};
+    use crate::permanova::{fstat_from_sw, st_of, sw_brute_f64_dense, Grouping, Method};
     use crate::rng::PermutationPlan;
 
     #[test]
@@ -156,7 +163,7 @@ mod tests {
         let mut row = vec![0u32; n];
         for i in 0..40 {
             perms.fill(i, &mut row);
-            let sw = sw_brute_f64(mat.data(), n, &row, grouping.inv_sizes());
+            let sw = sw_brute_f64_dense(mat.data(), n, &row, grouping.inv_sizes());
             let want = fstat_from_sw(sw, s_t, n, 4);
             let rel = (r.stats[i] - want).abs() / want.abs().max(1e-9);
             assert!(rel < 2e-3, "row {i}: {} vs {want}", r.stats[i]);

@@ -176,8 +176,32 @@ pub fn speedup(a: &Measurement, b: &Measurement) -> f64 {
 /// Schema identifier stamped into (and required from) `BENCH_PERMANOVA.json`.
 /// v2 added the per-cell `method` field (the statistic axis of the sweep);
 /// v3 added the top-level `throughput` section (service-layer jobs/sec,
-/// cold vs warm dataset cache).
-pub const BENCH_SCHEMA: &str = "bench-permanova/v3";
+/// cold vs warm dataset cache); v4 added the per-cell **memory-traffic
+/// axis** (`bytes_per_perm`, `effective_gbs`, `packed_bytes` /
+/// `dense_bytes` / `footprint_ratio`) — the packed-triangle layout's win,
+/// measured instead of asserted.
+pub const BENCH_SCHEMA: &str = "bench-permanova/v4";
+
+/// Bytes each permutation streams through its statistic kernel: the
+/// method's packed per-permutation operand plus the n-label row.
+///
+/// * PERMANOVA (and each pairwise sub-job): the packed f32 triangle,
+///   `n(n-1)/2 · 4`;
+/// * ANOSIM: the condensed f64 mid-ranks, `n(n-1)/2 · 8`;
+/// * PERMDISP: the f64 distance-to-centroid vector, `n · 8`.
+///
+/// `n` is the problem the kernel actually sweeps (for pairwise cells, the
+/// primary pair's sub-problem size).
+pub fn bytes_per_perm(method: Method, n: usize) -> u64 {
+    let n = n as u64;
+    let pairs = n * n.saturating_sub(1) / 2;
+    let labels = 4 * n;
+    match method {
+        Method::Permanova | Method::PairwisePermanova => pairs * 4 + labels,
+        Method::Anosim => pairs * 8 + labels,
+        Method::Permdisp => 8 * n + labels,
+    }
+}
 
 /// The grid a benchmark sweep covers: backends × methods × n ×
 /// permutation counts, plus the scheduling knobs shared by every cell.
@@ -297,7 +321,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
     let mut entries = Vec::new();
     let cols = [
         "backend", "method", "kernel", "n", "perms", "block", "median", "best", "perms/s",
-        "modelled",
+        "GB/s", "modelled",
     ];
     let mut table = Table::new(&cols);
     for &n in &grid.n_grid {
@@ -328,6 +352,18 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
                     // permutations actually evaluated, not the knob.
                     let total_perms = report.total_perms() as f64;
                     let perms_per_sec = total_perms / m.median;
+                    // The v4 memory-traffic axis: bytes each permutation
+                    // streams (the packed operand + label row, sized to the
+                    // problem the kernel actually sweeps), the effective
+                    // bandwidth that implies at the *best* time (STREAM's
+                    // convention), and the dense→packed footprint ratio of
+                    // the dataset the cell loaded.
+                    let stream_n = report.primary().n;
+                    let bpp = bytes_per_perm(method, stream_n);
+                    let effective_gbs = bpp as f64 * total_perms / m.best / 1e9;
+                    let dense_bytes = (n * n * 4) as u64;
+                    let packed_bytes = (n * (n - 1) / 2 * 4) as u64;
+                    let footprint_ratio = packed_bytes as f64 / dense_bytes as f64;
                     // Simulated backends model MI300A wall-clock alongside
                     // the exact numerics; 0.0 for real substrates.
                     let modelled_secs: f64 = report
@@ -350,6 +386,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
                         format_secs(m.median),
                         format_secs(m.best),
                         format!("{perms_per_sec:.0}"),
+                        format!("{effective_gbs:.2}"),
                         if modelled_secs > 0.0 {
                             format_secs(modelled_secs)
                         } else {
@@ -376,6 +413,12 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
                         ("median_secs", Json::num(m.median)),
                         ("mad_secs", Json::num(m.mad)),
                         ("perms_per_sec", Json::num(perms_per_sec)),
+                        // v4 memory-traffic axis.
+                        ("bytes_per_perm", Json::num(bpp as f64)),
+                        ("effective_gbs", Json::num(effective_gbs)),
+                        ("dense_bytes", Json::num(dense_bytes as f64)),
+                        ("packed_bytes", Json::num(packed_bytes as f64)),
+                        ("footprint_ratio", Json::num(footprint_ratio)),
                         ("modelled_secs", Json::num(modelled_secs)),
                         // Scheduled jobs in the cell (1, except pairwise =
                         // one per group pair).  f_obs/p_value below are the
@@ -594,6 +637,44 @@ pub fn validate_bench_json(doc: &Json) -> Result<usize> {
         num("f_obs")?;
         let p = num("p_value")?;
         let modelled = num("modelled_secs")?;
+        // v4: the memory-traffic axis must be present and self-consistent
+        // — in particular the packed footprint must actually be ≤ half the
+        // dense footprint (the acceptance bar of the layout change).
+        let bpp = e
+            .req_usize("bytes_per_perm")
+            .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if bpp == 0 {
+            return Err(bench_field_err(&ctx, "bytes_per_perm must be >= 1"));
+        }
+        let gbs = num("effective_gbs")?;
+        if gbs <= 0.0 {
+            return Err(bench_field_err(&ctx, format!("effective_gbs must be > 0, got {gbs}")));
+        }
+        let dense = e
+            .req_usize("dense_bytes")
+            .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        let packed = e
+            .req_usize("packed_bytes")
+            .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if packed == 0 || packed * 2 > dense {
+            return Err(bench_field_err(
+                &ctx,
+                format!("packed_bytes {packed} must be in [1, dense_bytes/2 = {}]", dense / 2),
+            ));
+        }
+        let ratio = num("footprint_ratio")?;
+        if !(ratio > 0.0 && ratio <= 0.5) {
+            return Err(bench_field_err(
+                &ctx,
+                format!("footprint_ratio must be in (0, 0.5], got {ratio}"),
+            ));
+        }
+        if (ratio - packed as f64 / dense as f64).abs() > 1e-9 {
+            return Err(bench_field_err(
+                &ctx,
+                format!("footprint_ratio {ratio} != packed_bytes/dense_bytes"),
+            ));
+        }
         if modelled < 0.0 {
             return Err(bench_field_err(
                 &ctx,
@@ -820,6 +901,48 @@ mod tests {
     }
 
     #[test]
+    fn traffic_axis_records_the_packed_stream() {
+        // Pinned arithmetic: n = 24 → pairs = 276.
+        assert_eq!(bytes_per_perm(Method::Permanova, 24), 276 * 4 + 96);
+        assert_eq!(bytes_per_perm(Method::PairwisePermanova, 24), 276 * 4 + 96);
+        assert_eq!(bytes_per_perm(Method::Anosim, 24), 276 * 8 + 96);
+        assert_eq!(bytes_per_perm(Method::Permdisp, 24), 24 * 8 + 96);
+
+        let mut g = tiny_grid();
+        g.methods = vec![Method::Permanova, Method::Anosim, Method::Permdisp];
+        let out = run_sweep(&g).unwrap();
+        for e in out.json.req_arr("entries").unwrap() {
+            let method = Method::parse(e.req_str("method").unwrap()).unwrap();
+            assert_eq!(
+                e.req_usize("bytes_per_perm").unwrap() as u64,
+                bytes_per_perm(method, 24),
+                "{method:?}"
+            );
+            let ratio = e.get("footprint_ratio").unwrap().as_f64().unwrap();
+            assert!((ratio - 23.0 / 48.0).abs() < 1e-12, "(n-1)/2n for n=24, got {ratio}");
+            assert_eq!(e.req_usize("dense_bytes").unwrap(), 24 * 24 * 4);
+            assert_eq!(e.req_usize("packed_bytes").unwrap(), 276 * 4);
+            assert!(e.get("effective_gbs").unwrap().as_f64().unwrap() > 0.0);
+        }
+        assert!(out.table.contains("GB/s"), "{}", out.table);
+    }
+
+    #[test]
+    fn pairwise_traffic_uses_the_subproblem_size() {
+        let mut g = tiny_grid();
+        g.backends = vec!["native-brute".into()];
+        g.methods = vec![Method::PairwisePermanova];
+        g.n_groups = 3;
+        let out = run_sweep(&g).unwrap();
+        let e = &out.json.req_arr("entries").unwrap()[0];
+        // 24 objects in 3 balanced groups → each pair sweeps n = 16.
+        assert_eq!(e.req_usize("bytes_per_perm").unwrap() as u64,
+            bytes_per_perm(Method::PairwisePermanova, 16));
+        // ... while the footprint ratio describes the loaded dataset (n = 24).
+        assert_eq!(e.req_usize("dense_bytes").unwrap(), 24 * 24 * 4);
+    }
+
+    #[test]
     fn pairwise_cells_record_their_job_fanout() {
         let mut g = tiny_grid();
         g.backends = vec!["native-brute".into()];
@@ -956,6 +1079,28 @@ mod tests {
             }
             assert!(validate_bench_json(&bad).is_err(), "{method:?}");
         }
+        // Entry missing the v4 traffic fields.
+        for key in ["bytes_per_perm", "effective_gbs", "footprint_ratio", "packed_bytes"] {
+            let mut bad = good.clone();
+            if let Json::Obj(m) = &mut bad {
+                let mut entries = m.get("entries").unwrap().as_arr().unwrap().to_vec();
+                if let Json::Obj(e) = &mut entries[0] {
+                    e.remove(key);
+                }
+                m.insert("entries".into(), Json::Arr(entries));
+            }
+            assert!(validate_bench_json(&bad).is_err(), "missing {key} accepted");
+        }
+        // A footprint ratio above 0.5 (packed not actually packed) fails.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut entries = m.get("entries").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(e) = &mut entries[0] {
+                e.insert("footprint_ratio".into(), Json::num(0.9));
+            }
+            m.insert("entries".into(), Json::Arr(entries));
+        }
+        assert!(validate_bench_json(&bad).is_err());
         // Missing throughput section (v3 requires the key).
         let mut bad = good.clone();
         if let Json::Obj(m) = &mut bad {

@@ -137,7 +137,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
 pub fn usage() -> String {
     let mut s = String::from("permanova-apu — PERMANOVA on APU-class hardware\n\nCommands:\n");
     for (cmd, desc) in [
-        ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --data-seed D --repeat N --json out.json --config file.toml | --pdm file --labels file; legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
+        ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --data-seed D --data-tol T --repeat N --json out.json --config file.toml | --pdm file --labels file (file input is validated on load); legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
         ("serve", "JSONL job batch through the shared-dataset service: --jobs FILE [--out FILE] [--cache-capacity N] [--threads T]; --check FILE validates a response document"),
         ("bench", "backend x method sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --methods permanova,anosim --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --throughput-jobs J --out FILE; --check FILE validates an existing document"),
         ("backends", "list registered backends with their capabilities (alias: --list-backends)"),
@@ -236,6 +236,11 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     }
     if args.has_flag("data-seed") {
         cfg.data_seed = Some(args.u64_flag("data-seed", 0)?);
+    }
+    if let Some(v) = args.str_flag("data-tol") {
+        cfg.data_tol = v
+            .parse()
+            .map_err(|e| Error::Config(format!("--data-tol {v:?}: {e}")))?;
     }
     if let Some(a) = args.str_flag("algo") {
         cfg.algo = SwAlgorithm::parse(a)
@@ -655,7 +660,7 @@ fn cmd_artifacts_check(args: &Args) -> Result<String> {
         let plan = crate::rng::PermutationPlan::new(grouping.labels().to_vec(), 3, 2);
         let rows = plan.batch(0, 2);
         let res = sess.run_batch(&rows, 2)?;
-        let want = crate::permanova::sw_brute_f64(
+        let want = crate::permanova::sw_brute_f64_dense(
             mat.data(),
             n,
             plan.base(),
@@ -779,6 +784,21 @@ mod tests {
         assert!(dispatch(&args(&["run", "--backend", "cuda"])).is_err());
         assert!(dispatch(&args(&["run", "--n-perms", "0"])).is_err());
         assert!(dispatch(&args(&["run", "--method", "kruskal"])).is_err());
+        assert!(dispatch(&args(&["run", "--data-tol", "loose"])).is_err());
+        assert!(dispatch(&args(&["run", "--data-tol", "-0.5"])).is_err());
+    }
+
+    #[test]
+    fn data_tol_gates_file_input_end_to_end() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_tol_test");
+        let (mpath, lpath) = crate::dmat::write_asymmetric_pdm_fixture(&dir);
+        let base =
+            ["run", "--pdm", mpath.as_str(), "--labels", lpath.as_str(), "--n-perms", "9"];
+        let e = dispatch(&args(&base)).unwrap_err().to_string();
+        assert!(e.contains("tol"), "rejection names the knob: {e}");
+        let mut loose: Vec<&str> = base.to_vec();
+        loose.extend(["--data-tol", "1.0"]);
+        assert!(dispatch(&args(&loose)).unwrap().contains("pseudo-F"));
     }
 
     #[test]

@@ -251,7 +251,18 @@ pub struct RunConfig {
     /// Permutations per matrix sweep for the batched brute engine
     /// (`native-batch`); 0 = the paper-informed default block width.
     pub perm_block: usize,
+    /// Absolute symmetry/diagonal tolerance for validating **file-sourced**
+    /// distance matrices on load (`[data] tol` / `--data-tol` / JSON
+    /// `data.tol`).  Float32 UniFrac pipelines commonly carry ~1e-6
+    /// asymmetry from reduction order; anything beyond this tolerance is
+    /// rejected with a config error instead of being silently analyzed.
+    /// Synthetic sources are valid by construction and skip the check.
+    pub data_tol: f32,
 }
+
+/// Default [`RunConfig::data_tol`]: loose enough for f32 pipeline noise,
+/// tight enough to catch genuinely asymmetric or corrupted input.
+pub const DEFAULT_DATA_TOL: f32 = 1e-4;
 
 impl Default for RunConfig {
     fn default() -> Self {
@@ -270,6 +281,7 @@ impl Default for RunConfig {
             shard_size: 0,
             smt_oversubscribe: false,
             perm_block: 0,
+            data_tol: DEFAULT_DATA_TOL,
         }
     }
 }
@@ -322,6 +334,7 @@ impl RunConfig {
             shard_size: doc.int_or("run", "shard_size", 0) as usize,
             smt_oversubscribe: doc.bool_or("run", "smt_oversubscribe", false),
             perm_block: doc.int_or("run", "perm_block", 0) as usize,
+            data_tol: doc.float_or("data", "tol", d.data_tol as f64) as f32,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -347,8 +360,10 @@ impl RunConfig {
             "id", "method", "backend", "algo", "n_perms", "seed", "threads", "shard_size",
             "smt", "smt_oversubscribe", "perm_block", "artifacts_dir", "xla_kernel", "data",
         ];
-        const DATA_KEYS: [&str; 8] =
-            ["source", "n_dims", "n_groups", "n_taxa", "n_samples", "path", "labels", "seed"];
+        const DATA_KEYS: [&str; 9] = [
+            "source", "n_dims", "n_groups", "n_taxa", "n_samples", "path", "labels", "seed",
+            "tol",
+        ];
         let Json::Obj(map) = doc else {
             return Err(Error::Config("job request must be a JSON object".into()));
         };
@@ -404,6 +419,15 @@ impl RunConfig {
             Some(o) if matches!(o, Json::Obj(_)) => o.opt_u64("seed")?,
             _ => None,
         };
+        let data_tol = match doc.get("data") {
+            Some(o) if matches!(o, Json::Obj(_)) => match o.get("tol") {
+                None => d.data_tol,
+                Some(v) => v.as_f64().ok_or_else(|| {
+                    Error::Config("data.tol must be a number".into())
+                })? as f32,
+            },
+            _ => d.data_tol,
+        };
         let method = match doc.opt_str("method")? {
             None => d.method,
             Some(s) => Method::parse(s)
@@ -431,6 +455,7 @@ impl RunConfig {
                 .opt_bool("smt_oversubscribe")?
                 .unwrap_or(d.smt_oversubscribe),
             perm_block: doc.opt_usize("perm_block")?.unwrap_or(d.perm_block),
+            data_tol,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -455,6 +480,12 @@ impl RunConfig {
     pub fn validate(&self) -> Result<()> {
         if self.n_perms == 0 {
             return Err(Error::Config("n_perms must be >= 1".into()));
+        }
+        if !self.data_tol.is_finite() || self.data_tol < 0.0 {
+            return Err(Error::Config(format!(
+                "data.tol must be a finite non-negative number, got {}",
+                self.data_tol
+            )));
         }
         let registry = crate::backend::Registry::with_defaults();
         if !registry.contains(&self.backend) {
@@ -655,9 +686,26 @@ mod tests {
             "[run]\nn_perms = 0",
             "[data]\nsource = \"pdm\"",
             "[data]\nsource = \"synthetic\"\nn_dims = 4\nn_groups = 8",
+            "[data]\ntol = -0.5",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(RunConfig::from_toml(&doc).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn data_tol_knob_parses_and_defaults() {
+        let cfg = RunConfig::from_toml(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.data_tol, DEFAULT_DATA_TOL);
+        let doc = TomlDoc::parse("[data]\ntol = 0.01\n").unwrap();
+        assert!((RunConfig::from_toml(&doc).unwrap().data_tol - 0.01).abs() < 1e-9);
+        // JSON jobs: nested data.tol, numbers only, negatives rejected.
+        use crate::jsonio::Json;
+        let doc = Json::parse(r#"{"data": {"source": "synthetic", "tol": 0.02}}"#).unwrap();
+        assert!((RunConfig::from_json(&doc).unwrap().data_tol - 0.02).abs() < 1e-7);
+        for bad in [r#"{"data": {"tol": "loose"}}"#, r#"{"data": {"tol": -1}}"#] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(RunConfig::from_json(&doc).is_err(), "accepted {bad}");
         }
     }
 

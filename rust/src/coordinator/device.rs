@@ -13,7 +13,7 @@
 
 use std::time::Instant;
 
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::error::Result;
 use crate::permanova::{fstat_from_sw, sw_plan_range, Grouping, SwAlgorithm};
 use crate::rng::PermutationPlan;
@@ -22,7 +22,11 @@ use crate::simulator::{predict, DeviceConfig, Mi300a, Workload};
 
 /// Shared inputs of a run (owned by the coordinator, borrowed by devices).
 pub struct JobContext<'a> {
+    /// Dense matrix — kept for the XLA device (the artifact graph takes
+    /// the dense buffer) and shape checks.
     pub mat: &'a DistanceMatrix,
+    /// Packed upper triangle — what the native/simulated kernels sweep.
+    pub condensed: &'a CondensedMatrix,
     pub grouping: &'a Grouping,
     pub plan: &'a PermutationPlan,
     /// Precomputed total sum of squares.
@@ -88,7 +92,7 @@ impl Device for NativeCpuDevice {
     fn run(&mut self, ctx: &JobContext<'_>, job: BatchJob) -> Result<BatchResult> {
         let t0 = Instant::now();
         let s_w = sw_plan_range(
-            ctx.mat,
+            ctx.condensed,
             ctx.plan,
             job.start,
             job.rows,
@@ -174,9 +178,10 @@ impl Device for SimulatedDevice {
 
     fn run(&mut self, ctx: &JobContext<'_>, job: BatchJob) -> Result<BatchResult> {
         let t0 = Instant::now();
-        // Numerics: always exact, via the cheapest native kernel.
+        // Numerics: always exact, via the cheapest native kernel over the
+        // packed triangle.
         let s_w = sw_plan_range(
-            ctx.mat,
+            ctx.condensed,
             ctx.plan,
             job.start,
             job.rows,
@@ -222,7 +227,14 @@ mod tests {
     #[test]
     fn native_device_computes_fstats() {
         let (mat, grouping, plan) = ctx_fixture(48, 4, 20);
-        let ctx = JobContext { mat: &mat, grouping: &grouping, plan: &plan, s_t: st_of(&mat) };
+        let tri = CondensedMatrix::from_dense(&mat);
+        let ctx = JobContext {
+            mat: &mat,
+            condensed: &tri,
+            grouping: &grouping,
+            plan: &plan,
+            s_t: st_of(&mat),
+        };
         let mut dev = NativeCpuDevice::new(SwAlgorithm::Brute, 2);
         let r = dev.run(&ctx, BatchJob { start: 0, rows: 10 }).unwrap();
         assert_eq!(r.f_stats.len(), 10);
@@ -238,7 +250,14 @@ mod tests {
     #[test]
     fn native_devices_agree_across_algorithms() {
         let (mat, grouping, plan) = ctx_fixture(40, 3, 16);
-        let ctx = JobContext { mat: &mat, grouping: &grouping, plan: &plan, s_t: st_of(&mat) };
+        let tri = CondensedMatrix::from_dense(&mat);
+        let ctx = JobContext {
+            mat: &mat,
+            condensed: &tri,
+            grouping: &grouping,
+            plan: &plan,
+            s_t: st_of(&mat),
+        };
         let job = BatchJob { start: 4, rows: 8 };
         let mut results = Vec::new();
         for algo in [SwAlgorithm::Brute, SwAlgorithm::Tiled { tile: 16 }, SwAlgorithm::Flat] {
@@ -255,7 +274,14 @@ mod tests {
     #[test]
     fn simulated_device_exact_numerics_modelled_time() {
         let (mat, grouping, plan) = ctx_fixture(32, 4, 8);
-        let ctx = JobContext { mat: &mat, grouping: &grouping, plan: &plan, s_t: st_of(&mat) };
+        let tri = CondensedMatrix::from_dense(&mat);
+        let ctx = JobContext {
+            mat: &mat,
+            condensed: &tri,
+            grouping: &grouping,
+            plan: &plan,
+            s_t: st_of(&mat),
+        };
         let mut sim = SimulatedDevice::new(
             Mi300a::default(),
             SwAlgorithm::Brute,

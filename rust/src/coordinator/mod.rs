@@ -24,6 +24,12 @@ use crate::permanova::Grouping;
 use crate::unifrac::{generate, unweighted_unifrac, SynthParams};
 
 /// Materialize the distance matrix + grouping a config describes.
+///
+/// File-sourced matrices (`.pdm` binary, TSV) are **untrusted input** and
+/// are validated against the PERMANOVA contract on load (symmetric within
+/// `cfg.data_tol`, zero diagonal, finite, non-negative) — an asymmetric or
+/// negative matrix is a loud [`Error::Config`], never a silent analysis.
+/// Synthetic sources are valid by construction and skip the O(n²) check.
 pub fn load_data(cfg: &RunConfig) -> Result<(DistanceMatrix, Grouping)> {
     match &cfg.data {
         DataSource::Synthetic { n_dims, n_groups } => {
@@ -45,15 +51,29 @@ pub fn load_data(cfg: &RunConfig) -> Result<(DistanceMatrix, Grouping)> {
         }
         DataSource::Pdm { path, labels_path } => {
             let mat = DistanceMatrix::read_binary(path)?;
+            validate_loaded(&mat, path, cfg.data_tol)?;
             let grouping = read_labels(labels_path, mat.n())?;
             Ok((mat, grouping))
         }
         DataSource::Tsv { path, labels_path } => {
             let (mat, _ids) = DistanceMatrix::read_tsv(path)?;
+            validate_loaded(&mat, path, cfg.data_tol)?;
             let grouping = read_labels(labels_path, mat.n())?;
             Ok((mat, grouping))
         }
     }
+}
+
+/// Enforce the PERMANOVA input contract on a file-sourced matrix, turning
+/// the low-level validation failure into an actionable config error that
+/// names the file and the `[data] tol` knob.
+fn validate_loaded(mat: &DistanceMatrix, path: &str, tol: f32) -> Result<()> {
+    mat.validate(tol).map_err(|e| {
+        Error::Config(format!(
+            "invalid distance matrix in {path:?}: {e}; fix the input, symmetrize it, \
+             or raise the tolerance via `[data] tol` / --data-tol (current {tol})"
+        ))
+    })
 }
 
 /// Read one label per line (category strings; mapped to dense groups).
@@ -74,8 +94,9 @@ fn read_labels(path: &str, n: usize) -> Result<Grouping> {
 /// backend through the name-keyed registry.
 pub fn run_config(cfg: &RunConfig) -> Result<AnalysisReport> {
     cfg.validate()?;
+    // File sources are validated inside `load_data` (against
+    // `cfg.data_tol`); synthetic sources are valid by construction.
     let (mat, grouping) = load_data(cfg)?;
-    mat.validate(1e-4)?;
     run_on_backend(cfg, &mat, &grouping)
 }
 
@@ -231,6 +252,41 @@ mod tests {
         let r = run_config(&cfg).unwrap();
         assert_eq!(r.n, 20);
         assert_eq!(r.k, 2);
+    }
+
+    #[test]
+    fn asymmetric_file_input_is_rejected_with_config_error() {
+        let dir = std::env::temp_dir().join("permanova_apu_coord_tol_test");
+        let (mpath, lpath) = crate::dmat::write_asymmetric_pdm_fixture(&dir);
+
+        let cfg = RunConfig {
+            data: DataSource::Pdm { path: mpath, labels_path: lpath.clone() },
+            n_perms: 9,
+            ..Default::default()
+        };
+        let e = run_config(&cfg).unwrap_err();
+        match &e {
+            Error::Config(m) => {
+                assert!(m.contains("asym.pdm"), "names the file: {m}");
+                assert!(m.contains("tol"), "points at the knob: {m}");
+                assert!(m.contains("asymmetry"), "says what is wrong: {m}");
+            }
+            other => panic!("want Error::Config, got {other:?}"),
+        }
+        // A negative distance is caught the same way.
+        let npath = dir.join("neg.pdm");
+        let mut neg = DistanceMatrix::random_euclidean(12, 4, 4);
+        neg.set_sym(0, 1, -1.0);
+        neg.write_binary(&npath).unwrap();
+        let neg_cfg = RunConfig {
+            data: DataSource::Pdm { path: npath.display().to_string(), labels_path: lpath },
+            n_perms: 9,
+            ..Default::default()
+        };
+        assert!(matches!(run_config(&neg_cfg).unwrap_err(), Error::Config(_)));
+        // Raising the tolerance past the defect accepts the asymmetric one.
+        let loose = RunConfig { data_tol: 1.0, ..cfg };
+        run_config(&loose).unwrap();
     }
 
     #[test]

@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use super::device::{BatchJob, BatchResult, Device, JobContext};
 use crate::backend::ShardCursor;
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::error::{Error, Result};
 use crate::permanova::{pvalue, st_of, Grouping};
 use crate::report::{DeviceStats, RunReport};
@@ -58,8 +58,10 @@ pub fn run_coordinated(
 
     let total = n_perms + 1; // index 0 = observed labelling
     let plan = PermutationPlan::new(grouping.labels().to_vec(), seed, total);
+    // Pack once; every device's sweep streams the half-footprint triangle.
+    let condensed = CondensedMatrix::from_dense(mat);
     let s_t = st_of(mat);
-    let ctx = JobContext { mat, grouping, plan: &plan, s_t };
+    let ctx = JobContext { mat, condensed: &condensed, grouping, plan: &plan, s_t };
 
     let cursor = ShardCursor::new(total);
     let results: Mutex<Vec<BatchResult>> = Mutex::new(Vec::new());

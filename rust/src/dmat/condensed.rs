@@ -1,0 +1,234 @@
+//! Packed upper-triangle storage: the canonical kernel operand.
+//!
+//! Every permutation kernel in this crate — the PERMANOVA s_W
+//! formulations, the batched SoA engine, the ANOSIM rank sweep — reads the
+//! distance matrix's **strict upper triangle** in `(row, col > row)`
+//! row-major order and nothing else.  Storing the full dense `n*n` matrix
+//! therefore doubles the resident working set with bytes no kernel ever
+//! touches: symmetric dead weight that evicts useful cache lines and
+//! halves the largest problem that fits in LLC/HBM.  On the MI300A —
+//! where CPU and GPU contend for the *same* HBM — footprint is bandwidth,
+//! so the packed layout here is what the engine streams.
+//!
+//! * [`CondensedMatrix`] owns the packed `n*(n-1)/2` f32 buffer plus the
+//!   per-row offsets (scipy `pdist` order: `d(0,1), d(0,2), ...,
+//!   d(0,n-1), d(1,2), ...`), built once per dataset from a
+//!   [`DistanceMatrix`];
+//! * [`CondensedView`] is the borrowed, `Copy` view the kernels take.
+//!
+//! **Bitwise contract:** `view().row(i)` is exactly the slice
+//! `dense_row_i[i+1..n]` — same values, same order — so a kernel ported
+//! from the dense layout executes the identical f32/f64 operation sequence
+//! and produces bit-identical statistics.  The packed-vs-dense conformance
+//! suite pins this for every kernel, method and backend.
+
+use super::DistanceMatrix;
+use crate::error::{Error, Result};
+
+/// Owned packed upper triangle: `n*(n-1)/2` f32 values + row offsets.
+///
+/// Row `i` (for `i < n-1`) holds `d(i, i+1), ..., d(i, n-1)` — the exact
+/// slice the dense kernels read per row, at half the resident footprint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CondensedMatrix {
+    n: usize,
+    values: Vec<f32>,
+    /// `offsets[i]..offsets[i+1]` bounds row `i` in `values` (n+1 entries).
+    offsets: Vec<usize>,
+}
+
+/// Row offsets for an `n`-object packed triangle (`n + 1` entries; row `i`
+/// spans `offsets[i]..offsets[i+1]`, length `n - 1 - i`).
+fn row_offsets(n: usize) -> Vec<usize> {
+    let mut offsets = Vec::with_capacity(n + 1);
+    let mut acc = 0usize;
+    offsets.push(0);
+    for i in 0..n {
+        acc += n - 1 - i;
+        offsets.push(acc);
+    }
+    offsets
+}
+
+impl CondensedMatrix {
+    /// Pack the strict upper triangle of a dense matrix (row-major scan —
+    /// the values land in scipy `pdist` order).
+    pub fn from_dense(mat: &DistanceMatrix) -> CondensedMatrix {
+        let n = mat.n();
+        let mut values = Vec::with_capacity(n * (n - 1) / 2);
+        for i in 0..n {
+            values.extend_from_slice(&mat.row(i)[i + 1..]);
+        }
+        CondensedMatrix { n, values, offsets: row_offsets(n) }
+    }
+
+    /// Wrap a condensed vector (scipy `pdist` order); checks the length.
+    pub fn from_values(n: usize, values: Vec<f32>) -> Result<CondensedMatrix> {
+        let want = n * n.saturating_sub(1) / 2;
+        if values.len() != want {
+            return Err(Error::InvalidInput(format!(
+                "condensed buffer has {} entries, want n(n-1)/2 = {want} for n = {n}",
+                values.len()
+            )));
+        }
+        Ok(CondensedMatrix { n, values, offsets: row_offsets(n) })
+    }
+
+    /// Mirror back into a dense matrix (exact: both triangles get the
+    /// packed values, the diagonal is zero).
+    pub fn to_dense(&self) -> DistanceMatrix {
+        DistanceMatrix::from_condensed(self.n, &self.values)
+            .expect("packed buffer length is maintained as an invariant")
+    }
+
+    /// Number of objects (matrix edge).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The packed buffer, in scipy `pdist` order (`n*(n-1)/2` values).
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Row `i`'s packed slice: `d(i, i+1), ..., d(i, n-1)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.values[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// Entry `(i, j)` for `i != j` (symmetric lookup; the diagonal is 0).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        if i == j {
+            return 0.0;
+        }
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        self.values[self.offsets[lo] + (hi - lo - 1)]
+    }
+
+    /// The borrowed view kernels take.
+    #[inline]
+    pub fn view(&self) -> CondensedView<'_> {
+        CondensedView { n: self.n, values: &self.values, offsets: &self.offsets }
+    }
+
+    /// Bytes of the packed representation — the resident footprint the
+    /// kernels actually stream (≤ ~0.5× the dense `n*n*4`).
+    pub fn nbytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Borrowed packed-triangle view: what every f32 kernel sweeps.
+#[derive(Clone, Copy, Debug)]
+pub struct CondensedView<'a> {
+    n: usize,
+    values: &'a [f32],
+    offsets: &'a [usize],
+}
+
+impl<'a> CondensedView<'a> {
+    /// Number of objects (matrix edge).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The packed buffer (`n*(n-1)/2` values, scipy `pdist` order).
+    #[inline]
+    pub fn values(&self) -> &'a [f32] {
+        self.values
+    }
+
+    /// Row `i`'s packed slice: `d(i, i+1), ..., d(i, n-1)` — bitwise the
+    /// dense `row(i)[i+1..]`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.values[self.offsets[i]..self.offsets[i + 1]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DistanceMatrix {
+        let mut m = DistanceMatrix::zeros(4);
+        m.set_sym(0, 1, 1.0);
+        m.set_sym(0, 2, 2.0);
+        m.set_sym(0, 3, 3.0);
+        m.set_sym(1, 2, 1.5);
+        m.set_sym(1, 3, 2.5);
+        m.set_sym(2, 3, 0.5);
+        m
+    }
+
+    #[test]
+    fn packs_in_pdist_order() {
+        let pm = CondensedMatrix::from_dense(&small());
+        assert_eq!(pm.n(), 4);
+        assert_eq!(pm.values(), &[1.0, 2.0, 3.0, 1.5, 2.5, 0.5]);
+        assert_eq!(pm.values(), small().to_condensed().as_slice());
+    }
+
+    #[test]
+    fn rows_match_dense_row_tails_bitwise() {
+        for n in [3usize, 4, 7, 33, 64] {
+            let m = DistanceMatrix::random_euclidean(n, 5, n as u64);
+            let pm = CondensedMatrix::from_dense(&m);
+            for i in 0..n {
+                let dense_tail = &m.row(i)[i + 1..];
+                assert_eq!(pm.row(i), dense_tail, "n={n} row {i}");
+                assert_eq!(pm.view().row(i), dense_tail, "view n={n} row {i}");
+            }
+            assert_eq!(pm.row(n - 1).len(), 0, "last row has no columns");
+        }
+    }
+
+    #[test]
+    fn dense_roundtrip_is_exact() {
+        for (n, seed) in [(3usize, 1u64), (20, 2), (45, 3)] {
+            let m = DistanceMatrix::random_euclidean(n, 6, seed);
+            let pm = CondensedMatrix::from_dense(&m);
+            assert_eq!(pm.to_dense(), m, "n={n}");
+        }
+    }
+
+    #[test]
+    fn symmetric_get() {
+        let pm = CondensedMatrix::from_dense(&small());
+        assert_eq!(pm.get(1, 3), 2.5);
+        assert_eq!(pm.get(3, 1), 2.5);
+        assert_eq!(pm.get(2, 2), 0.0);
+    }
+
+    #[test]
+    fn from_values_checks_length() {
+        assert!(CondensedMatrix::from_values(4, vec![0.0; 6]).is_ok());
+        assert!(CondensedMatrix::from_values(4, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn footprint_is_at_most_half_dense() {
+        for n in [3usize, 16, 101] {
+            let m = DistanceMatrix::zeros(n);
+            let pm = CondensedMatrix::from_dense(&m);
+            assert_eq!(pm.nbytes(), n * (n - 1) / 2 * 4);
+            assert!(pm.nbytes() * 2 <= m.nbytes(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn tiny_edges_dont_panic() {
+        let m1 = DistanceMatrix::zeros(1);
+        let p1 = CondensedMatrix::from_dense(&m1);
+        assert_eq!(p1.values().len(), 0);
+        assert_eq!(p1.row(0).len(), 0);
+        let m2 = DistanceMatrix::zeros(2);
+        let p2 = CondensedMatrix::from_dense(&m2);
+        assert_eq!(p2.values().len(), 1);
+    }
+}

@@ -1,9 +1,12 @@
 //! Distance matrices: storage, validation, generation, IO.
 //!
 //! The paper's workload is a 25145² float32 UniFrac distance matrix.  This
-//! module owns the square row-major representation every kernel consumes,
-//! plus:
+//! module owns the square row-major [`DistanceMatrix`] — the I/O and PCoA
+//! boundary representation — plus:
 //!
+//! * the packed upper-triangle [`CondensedMatrix`] / [`CondensedView`]
+//!   ([`condensed`]), the **canonical kernel operand**: every permutation
+//!   kernel sweeps the packed rows, at half the dense footprint;
 //! * validation of the PERMANOVA input contract (square, symmetric, zero
 //!   diagonal, non-negative, finite);
 //! * conversion to/from *condensed* form (the upper-triangle vector scipy
@@ -13,9 +16,11 @@
 //! * Principal Coordinates Analysis ([`pcoa`]) — the embedding step the
 //!   PERMANOVA workflow pairs with its distance matrices.
 
+pub mod condensed;
 pub mod pcoa;
 
-pub use pcoa::{jacobi_eigh, pcoa, Pcoa};
+pub use condensed::{CondensedMatrix, CondensedView};
+pub use pcoa::{jacobi_eigh, jacobi_eigh_in_place, pcoa, Pcoa};
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -381,6 +386,24 @@ impl DistanceMatrix {
     pub fn nbytes(&self) -> usize {
         self.data.len() * std::mem::size_of::<f32>()
     }
+}
+
+/// Test support: write an asymmetric 12-object `.pdm` (entry (0,1) ≠
+/// (1,0) by 0.25 — beyond any sane tolerance) plus a matching 2-group
+/// labels file under `dir`, returning `(matrix_path, labels_path)`.
+/// Shared by the load-path validation tests in `coordinator`,
+/// `service::cache` and `cli`.
+#[cfg(test)]
+pub(crate) fn write_asymmetric_pdm_fixture(dir: &std::path::Path) -> (String, String) {
+    std::fs::create_dir_all(dir).unwrap();
+    let mpath = dir.join("asym.pdm");
+    let lpath = dir.join("labels.txt");
+    let mut mat = DistanceMatrix::random_euclidean(12, 4, 3);
+    mat.data_mut()[1] += 0.25; // (0,1) != (1,0)
+    mat.write_binary(&mpath).unwrap();
+    let labels: Vec<String> = (0..12).map(|i| format!("g{}", i % 2)).collect();
+    std::fs::write(&lpath, labels.join("\n")).unwrap();
+    (mpath.display().to_string(), lpath.display().to_string())
 }
 
 #[cfg(test)]

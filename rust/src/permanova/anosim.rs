@@ -20,6 +20,12 @@
 //! the engine reaches both through `StatKernel::Anosim`, and the
 //! [`anosim`] free function below is the thin single-threaded wrapper that
 //! doubles as the conformance suite's f64 oracle.
+//!
+//! Layout note: ANOSIM's per-permutation operand was **packed all along**
+//! — the mid-rank vector is the condensed upper triangle in the same
+//! `(i, j > i)` order as `dmat::CondensedMatrix`, and since PR 5 the
+//! prelude builds it straight from the dataset's shared packed buffer
+//! (same values, bit-identical ranks).
 
 use super::grouping::Grouping;
 use super::method::{Method, StatKernel};

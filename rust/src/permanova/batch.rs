@@ -3,8 +3,11 @@
 //! This is the Rust analog of the paper's `permanova_f_stat_sW_T`:
 //! `#pragma omp parallel for` over permutations, each thread running the
 //! single-permutation kernel.  The permutation axis is embarrassingly
-//! parallel and the matrix is shared read-only — exactly the regime the
-//! paper measures.
+//! parallel and the triangle is shared read-only — exactly the regime the
+//! paper measures.  Since PR 5 the shared operand is the **packed** upper
+//! triangle ([`CondensedMatrix`]): the same bytes the kernels always read,
+//! at half the dense footprint, so every worker streams half the memory
+//! per permutation.
 //!
 //! Threading is delegated to the crate-wide sharded scheduler
 //! ([`crate::backend::shard`]); thread count is explicit (the SMT study of
@@ -14,7 +17,7 @@
 use super::grouping::Grouping;
 use super::kernels::{sw_brute_block, sw_one, SwAlgorithm, DEFAULT_PERM_BLOCK};
 use crate::backend::shard::{for_each_block, run_sharded, run_sharded_with, ShardSpec};
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::rng::PermutationPlan;
 
 /// Resolve a thread-count request (0 = all available).
@@ -38,21 +41,21 @@ pub fn resolve_perm_block(requested: usize) -> usize {
 /// Compute s_W for `rows` pre-materialized label rows (row-major
 /// `rows * n`), using `threads` OS threads via the shard scheduler.
 pub fn sw_batch(
-    mat: &DistanceMatrix,
+    tri: &CondensedMatrix,
     groupings: &[u32],
     rows: usize,
     inv_group_sizes: &[f32],
     algo: SwAlgorithm,
     threads: usize,
 ) -> Vec<f32> {
-    let n = mat.n();
+    let n = tri.n();
     assert_eq!(groupings.len(), rows * n, "groupings buffer shape");
     let mut out = vec![0.0f32; rows];
     let spec = ShardSpec::with_workers(resolve_threads(threads));
     run_sharded(&spec, &mut out, |start, slice| {
         for (i, o) in slice.iter_mut().enumerate() {
             let r = start + i;
-            *o = sw_one(algo, mat.data(), n, &groupings[r * n..(r + 1) * n], inv_group_sizes);
+            *o = sw_one(algo, tri.view(), &groupings[r * n..(r + 1) * n], inv_group_sizes);
         }
     });
     out
@@ -63,7 +66,7 @@ pub fn sw_batch(
 /// shards.  This is the memory-lean path the coordinator uses for large
 /// permutation counts.
 pub fn sw_plan_range(
-    mat: &DistanceMatrix,
+    tri: &CondensedMatrix,
     plan: &PermutationPlan,
     start: usize,
     count: usize,
@@ -71,7 +74,7 @@ pub fn sw_plan_range(
     algo: SwAlgorithm,
     threads: usize,
 ) -> Vec<f32> {
-    let n = mat.n();
+    let n = tri.n();
     assert_eq!(plan.n(), n, "plan/matrix size mismatch");
     let mut out = vec![0.0f32; count];
     let spec = ShardSpec::with_workers(resolve_threads(threads));
@@ -82,7 +85,7 @@ pub fn sw_plan_range(
         |row, lo, slice| {
             for (i, o) in slice.iter_mut().enumerate() {
                 plan.fill(start + lo + i, row);
-                *o = sw_one(algo, mat.data(), n, row, inv_group_sizes);
+                *o = sw_one(algo, tri.view(), row, inv_group_sizes);
             }
         },
     );
@@ -92,15 +95,15 @@ pub fn sw_plan_range(
 /// Compute s_W for a permutation-plan range with the **batched brute
 /// engine**: each worker walks its shards in blocks of `perm_block`
 /// permutations, materializes the block's labels in the position-major SoA
-/// layout, and makes ONE sweep over the distance matrix per block
+/// layout, and makes ONE sweep over the packed triangle per block
 /// ([`sw_brute_block`]) — the paper's GPU-winning one-sweep-many-
-/// permutations access pattern.
+/// permutations access pattern, now at half the bytes per sweep.
 ///
 /// Scheduling composes fully: `spec` carries shard size / worker count /
 /// SMT oversubscription, and none of them (nor `perm_block`) changes any
 /// output bit — each lane runs the brute kernel's exact f32 op sequence.
 pub fn sw_plan_range_blocked(
-    mat: &DistanceMatrix,
+    tri: &CondensedMatrix,
     plan: &PermutationPlan,
     start: usize,
     count: usize,
@@ -108,7 +111,7 @@ pub fn sw_plan_range_blocked(
     perm_block: usize,
     spec: &ShardSpec,
 ) -> Vec<f32> {
-    let n = mat.n();
+    let n = tri.n();
     assert_eq!(plan.n(), n, "plan/matrix size mismatch");
     // Clamp to the range size: a block wider than the work would only
     // inflate the per-worker SoA scratch (n · block labels) and collapse
@@ -137,14 +140,15 @@ pub fn sw_plan_range_blocked(
                 }
                 let dst = &mut slice[off..off + b];
                 dst.fill(0.0);
-                sw_brute_block(mat.data(), n, soa, b, inv_group_sizes, dst);
+                sw_brute_block(tri.view(), soa, b, inv_group_sizes, dst);
             });
         },
     );
     out
 }
 
-/// Convenience: batch s_W for a grouping's permutation plan `[0, count)`.
+/// Convenience: batch s_W for a grouping's permutation plan `[0, count)`
+/// (packs the triangle once, then streams it).
 pub fn sw_permutations(
     mat: &DistanceMatrix,
     grouping: &Grouping,
@@ -153,8 +157,9 @@ pub fn sw_permutations(
     algo: SwAlgorithm,
     threads: usize,
 ) -> Vec<f32> {
+    let tri = CondensedMatrix::from_dense(mat);
     let plan = PermutationPlan::new(grouping.labels().to_vec(), seed, count);
-    sw_plan_range(mat, &plan, 0, count, grouping.inv_sizes(), algo, threads)
+    sw_plan_range(&tri, &plan, 0, count, grouping.inv_sizes(), algo, threads)
 }
 
 #[cfg(test)]
@@ -162,22 +167,21 @@ mod tests {
     use super::*;
     use crate::permanova::kernels::sw_brute_f64;
 
-    fn setup(n: usize, k: usize) -> (DistanceMatrix, Grouping) {
+    fn setup(n: usize, k: usize) -> (CondensedMatrix, Grouping) {
         let mat = DistanceMatrix::random_euclidean(n, 8, 11);
         let grouping = Grouping::balanced(n, k).unwrap();
-        (mat, grouping)
+        (CondensedMatrix::from_dense(&mat), grouping)
     }
 
     #[test]
     fn batch_matches_single_threaded_oracle() {
-        let (mat, grouping) = setup(48, 4);
+        let (tri, grouping) = setup(48, 4);
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 5, 33);
         let rows = plan.batch(0, 33);
-        let got = sw_batch(&mat, &rows, 33, grouping.inv_sizes(), SwAlgorithm::Flat, 4);
+        let got = sw_batch(&tri, &rows, 33, grouping.inv_sizes(), SwAlgorithm::Flat, 4);
         for r in 0..33 {
             let want = sw_brute_f64(
-                mat.data(),
-                48,
+                tri.view(),
                 &rows[r * 48..(r + 1) * 48],
                 grouping.inv_sizes(),
             );
@@ -190,17 +194,18 @@ mod tests {
 
     #[test]
     fn plan_range_equals_materialized_batch() {
-        let (mat, grouping) = setup(32, 3);
+        let (tri, grouping) = setup(32, 3);
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 77, 64);
         let rows = plan.batch(10, 20);
-        let a = sw_batch(&mat, &rows, 20, grouping.inv_sizes(), SwAlgorithm::Brute, 3);
-        let b = sw_plan_range(&mat, &plan, 10, 20, grouping.inv_sizes(), SwAlgorithm::Brute, 3);
+        let a = sw_batch(&tri, &rows, 20, grouping.inv_sizes(), SwAlgorithm::Brute, 3);
+        let b = sw_plan_range(&tri, &plan, 10, 20, grouping.inv_sizes(), SwAlgorithm::Brute, 3);
         assert_eq!(a, b);
     }
 
     #[test]
     fn thread_count_does_not_change_results() {
-        let (mat, grouping) = setup(40, 5);
+        let mat = DistanceMatrix::random_euclidean(40, 8, 11);
+        let grouping = Grouping::balanced(40, 5).unwrap();
         let base = sw_permutations(&mat, &grouping, 3, 41, SwAlgorithm::Tiled { tile: 16 }, 1);
         for threads in [2, 3, 8] {
             let got =
@@ -211,7 +216,8 @@ mod tests {
 
     #[test]
     fn index_zero_is_observed_statistic() {
-        let (mat, grouping) = setup(36, 4);
+        let mat = DistanceMatrix::random_euclidean(36, 8, 11);
+        let grouping = Grouping::balanced(36, 4).unwrap();
         let got = sw_permutations(&mat, &grouping, 9, 8, SwAlgorithm::Flat, 2);
         let direct = super::super::kernels::sw_of(SwAlgorithm::Flat, &mat, &grouping);
         assert!((got[0] - direct).abs() < 1e-6);
@@ -219,11 +225,11 @@ mod tests {
 
     #[test]
     fn empty_and_single_row_edges() {
-        let (mat, grouping) = setup(16, 2);
+        let (tri, grouping) = setup(16, 2);
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
-        assert!(sw_plan_range(&mat, &plan, 0, 0, grouping.inv_sizes(), SwAlgorithm::Flat, 4)
+        assert!(sw_plan_range(&tri, &plan, 0, 0, grouping.inv_sizes(), SwAlgorithm::Flat, 4)
             .is_empty());
-        let one = sw_plan_range(&mat, &plan, 2, 1, grouping.inv_sizes(), SwAlgorithm::Flat, 4);
+        let one = sw_plan_range(&tri, &plan, 2, 1, grouping.inv_sizes(), SwAlgorithm::Flat, 4);
         assert_eq!(one.len(), 1);
     }
 
@@ -241,9 +247,9 @@ mod tests {
 
     #[test]
     fn blocked_range_is_bitwise_identical_to_scalar_brute() {
-        let (mat, grouping) = setup(40, 4);
+        let (tri, grouping) = setup(40, 4);
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 13, 77);
-        let want = sw_plan_range(&mat, &plan, 0, 77, grouping.inv_sizes(), SwAlgorithm::Brute, 1);
+        let want = sw_plan_range(&tri, &plan, 0, 77, grouping.inv_sizes(), SwAlgorithm::Brute, 1);
         for block in [1usize, 3, 8, 64, 1000] {
             for spec in [
                 ShardSpec::with_workers(1),
@@ -252,7 +258,7 @@ mod tests {
                 ShardSpec::default(),
             ] {
                 let got = sw_plan_range_blocked(
-                    &mat,
+                    &tri,
                     &plan,
                     0,
                     77,
@@ -267,12 +273,12 @@ mod tests {
 
     #[test]
     fn blocked_sub_ranges_line_up() {
-        let (mat, grouping) = setup(32, 3);
+        let (tri, grouping) = setup(32, 3);
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 21, 60);
         let spec = ShardSpec::with_workers(2);
-        let full = sw_plan_range_blocked(&mat, &plan, 0, 60, grouping.inv_sizes(), 8, &spec);
-        let head = sw_plan_range_blocked(&mat, &plan, 0, 23, grouping.inv_sizes(), 8, &spec);
-        let tail = sw_plan_range_blocked(&mat, &plan, 23, 37, grouping.inv_sizes(), 8, &spec);
+        let full = sw_plan_range_blocked(&tri, &plan, 0, 60, grouping.inv_sizes(), 8, &spec);
+        let head = sw_plan_range_blocked(&tri, &plan, 0, 23, grouping.inv_sizes(), 8, &spec);
+        let tail = sw_plan_range_blocked(&tri, &plan, 23, 37, grouping.inv_sizes(), 8, &spec);
         assert_eq!(&full[..23], &head[..]);
         assert_eq!(&full[23..], &tail[..]);
     }
@@ -281,11 +287,11 @@ mod tests {
     fn oversized_block_is_clamped_to_the_range() {
         // A block far wider than the permutation count must not blow up the
         // per-worker scratch allocation — and still matches brute bitwise.
-        let (mat, grouping) = setup(20, 2);
+        let (tri, grouping) = setup(20, 2);
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 9, 11);
-        let want = sw_plan_range(&mat, &plan, 0, 11, grouping.inv_sizes(), SwAlgorithm::Brute, 1);
+        let want = sw_plan_range(&tri, &plan, 0, 11, grouping.inv_sizes(), SwAlgorithm::Brute, 1);
         let got = sw_plan_range_blocked(
-            &mat,
+            &tri,
             &plan,
             0,
             11,
@@ -298,11 +304,11 @@ mod tests {
 
     #[test]
     fn blocked_empty_range_is_empty() {
-        let (mat, grouping) = setup(16, 2);
+        let (tri, grouping) = setup(16, 2);
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
         let spec = ShardSpec::default();
         assert!(
-            sw_plan_range_blocked(&mat, &plan, 0, 0, grouping.inv_sizes(), 4, &spec).is_empty()
+            sw_plan_range_blocked(&tri, &plan, 0, 0, grouping.inv_sizes(), 4, &spec).is_empty()
         );
     }
 }

@@ -1,4 +1,5 @@
-//! The paper's three `permanova_f_stat_sW` kernel formulations, in Rust.
+//! The paper's three `permanova_f_stat_sW` kernel formulations, in Rust —
+//! sweeping the **packed upper triangle** ([`CondensedView`]).
 //!
 //! These are line-for-line ports of the paper's Algorithms 1–3 (modulo Rust
 //! idiom), kept deliberately close to the C++ so the measured CPU-side
@@ -15,12 +16,22 @@
 //!   OpenMP target region compiles down to on the GPU.  On the CPU this is
 //!   the autovectorizable variant.
 //!
+//! **Memory layout.**  Since PR 5 the production kernels take a
+//! [`CondensedView`] — the packed `n*(n-1)/2` triangle — instead of the
+//! dense `n*n` buffer.  The kernels only ever read `(row, col > row)` in
+//! row-major order, and a packed row *is* the dense row's `[row+1..n]`
+//! tail, so the f32 operation sequence is unchanged: every packed kernel
+//! is **bitwise identical** to its dense seed, at half the streamed
+//! footprint (the paper's memory-bound loop moves half the bytes per
+//! permutation).  The dense seeds are kept as `*_dense` oracles, pinned
+//! against the packed kernels by the packed-layout conformance suite.
+//!
 //! All variants return identical values up to f32 reduction order; the
 //! brute kernel is also provided with an f64 accumulator ([`sw_brute_f64`])
 //! as the in-crate oracle.
 
 use super::grouping::Grouping;
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, CondensedView, DistanceMatrix};
 
 /// Which s_W kernel to run — the paper's algorithm axis of Figure 1.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,23 +82,23 @@ pub const DEFAULT_TILE: usize = 512;
 /// the regime where the paper's MI300A GPU measurement lives.
 pub const DEFAULT_PERM_BLOCK: usize = 64;
 
-/// Algorithm 1 — original brute force, f32 accumulation (paper-faithful).
+/// Algorithm 1 — original brute force, f32 accumulation (paper-faithful),
+/// sweeping the packed triangle.
 ///
-/// `mat` is the row-major n×n matrix, `grouping` one label row,
+/// `tri` is the packed upper triangle, `grouping` one label row,
 /// `inv_group_sizes` the 1/|group| weights.
-pub fn sw_brute_one(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[f32]) -> f32 {
-    debug_assert_eq!(mat.len(), n * n);
+pub fn sw_brute_one(tri: CondensedView<'_>, grouping: &[u32], inv_group_sizes: &[f32]) -> f32 {
+    let n = tri.n();
     debug_assert_eq!(grouping.len(), n);
     let mut s_w = 0.0f32;
     for row in 0..n.saturating_sub(1) {
         // no columns in last row
         let group_idx = grouping[row];
         let w = inv_group_sizes[group_idx as usize];
-        let mat_row = &mat[row * n..(row + 1) * n];
-        for col in (row + 1)..n {
-            // diagonal is always zero
-            if grouping[col] == group_idx {
-                let val = mat_row[col];
+        let tri_row = tri.row(row);
+        for (off, &val) in tri_row.iter().enumerate() {
+            // diagonal is never stored; col = row + 1 + off
+            if grouping[row + 1 + off] == group_idx {
                 s_w += val * val * w;
             }
         }
@@ -95,11 +106,11 @@ pub fn sw_brute_one(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[
     s_w
 }
 
-/// Algorithm 1, batched: one sweep over the distance matrix evaluates a
+/// Algorithm 1, batched: one sweep over the packed triangle evaluates a
 /// structure-of-arrays *block* of `block` permutations at once.
 ///
 /// This is the access pattern that wins on the paper's MI300A GPU cores:
-/// instead of re-streaming the n² matrix once per permutation (the CPU
+/// instead of re-streaming the triangle once per permutation (the CPU
 /// formulations above), each `d[i][j]` is read and squared **once** and the
 /// cost is amortized across all `block` label assignments — the label
 /// blocks are the streamed operand, and they are tiny.
@@ -114,23 +125,21 @@ pub fn sw_brute_one(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[
 /// brute kernel on that labelling — at *any* block width.  The conformance
 /// tests pin this.
 pub fn sw_brute_block(
-    mat: &[f32],
-    n: usize,
+    tri: CondensedView<'_>,
     labels: &[u32],
     block: usize,
     inv_group_sizes: &[f32],
     out: &mut [f32],
 ) {
-    debug_assert_eq!(mat.len(), n * n);
+    let n = tri.n();
     debug_assert_eq!(labels.len(), n * block);
     debug_assert_eq!(out.len(), block);
     for row in 0..n.saturating_sub(1) {
         // no columns in last row
         let row_groups = &labels[row * block..(row + 1) * block];
-        let mat_row = &mat[row * n..(row + 1) * n];
-        for col in (row + 1)..n {
-            // diagonal is always zero
-            let val = mat_row[col];
+        let tri_row = tri.row(row);
+        for (off, &val) in tri_row.iter().enumerate() {
+            let col = row + 1 + off; // diagonal is never stored
             let v2 = val * val;
             let col_groups = &labels[col * block..(col + 1) * block];
             for j in 0..block {
@@ -143,17 +152,19 @@ pub fn sw_brute_block(
     }
 }
 
-/// Algorithm 1 with an f64 accumulator — the in-crate numerical oracle.
-pub fn sw_brute_f64(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[f32]) -> f64 {
+/// Algorithm 1 with an f64 accumulator — the in-crate numerical oracle,
+/// over the packed triangle.
+pub fn sw_brute_f64(tri: CondensedView<'_>, grouping: &[u32], inv_group_sizes: &[f32]) -> f64 {
+    let n = tri.n();
     let mut s_w = 0.0f64;
     for row in 0..n.saturating_sub(1) {
         let group_idx = grouping[row];
         let w = inv_group_sizes[group_idx as usize] as f64;
-        let mat_row = &mat[row * n..(row + 1) * n];
+        let tri_row = tri.row(row);
         let mut local = 0.0f64;
-        for col in (row + 1)..n {
-            if grouping[col] == group_idx {
-                let val = mat_row[col] as f64;
+        for (off, &val) in tri_row.iter().enumerate() {
+            if grouping[row + 1 + off] == group_idx {
+                let val = val as f64;
                 local += val * val;
             }
         }
@@ -162,28 +173,30 @@ pub fn sw_brute_f64(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[
     s_w
 }
 
-/// Algorithm 2 — the paper's hand-tiled CPU variant.
+/// Algorithm 2 — the paper's hand-tiled CPU variant, on packed rows.
 ///
 /// Faithfully reproduces the published loop structure: `TILE`-stepped
 /// `trow`/`tcol` outer loops (note `tcol` starts at `trow + 1`, so column
 /// tiles are *unaligned* — exactly as published), per-row `local_s_W`
 /// accumulation, and the `inv_group_sizes` multiply hoisted to once per
-/// (row, tile) — the access-reuse discovery the paper describes.
+/// (row, tile) — the access-reuse discovery the paper describes.  A tile's
+/// column window `[min_col, max_col)` of dense row `row` is the packed
+/// row's `[min_col-row-1, max_col-row-1)` — same values, same order.
 pub fn sw_tiled_one(
-    mat: &[f32],
-    n: usize,
+    tri: CondensedView<'_>,
     grouping: &[u32],
     inv_group_sizes: &[f32],
     tile: usize,
 ) -> f32 {
     debug_assert!(tile > 0);
+    let n = tri.n();
     let mut s_w = 0.0f32;
     let mut trow = 0usize;
     while trow + 1 < n {
         // no columns in last row
         let mut tcol = trow + 1;
         while tcol < n {
-            // diagonal is always zero
+            // diagonal is never stored
             let row_end = (trow + tile).min(n - 1);
             for row in trow..row_end {
                 let min_col = tcol.max(row + 1);
@@ -191,13 +204,14 @@ pub fn sw_tiled_one(
                 if min_col >= max_col {
                     continue;
                 }
-                let mat_row = &mat[row * n..(row + 1) * n];
+                let tri_row = tri.row(row);
                 let group_idx = grouping[row];
                 // The paper's inner loop, with the branch if-converted and
                 // eight-lane re-associated so it runs as SIMD FMAs (same
                 // optimization the paper's compilers apply at -O3).
                 let cols = &grouping[min_col..max_col];
-                let local_s_w = masked_sum_sq(&mat_row[min_col..max_col], cols, group_idx);
+                let vals = &tri_row[min_col - row - 1..max_col - row - 1];
+                let local_s_w = masked_sum_sq(vals, cols, group_idx);
                 s_w += local_s_w * inv_group_sizes[group_idx as usize];
             }
             tcol += tile;
@@ -207,7 +221,8 @@ pub fn sw_tiled_one(
     s_w
 }
 
-/// Algorithm 3's formulation — branch replaced by a predicated multiply.
+/// Algorithm 3's formulation — branch replaced by a predicated multiply,
+/// on packed rows.
 ///
 /// This is the shape the GPU compiler gives the paper's `collapse(2)
 /// reduction` region.  On the CPU, rustc cannot vectorize a strict-order
@@ -215,14 +230,14 @@ pub fn sw_tiled_one(
 /// lanes (`masked_sum_sq`) — semantically a fixed re-association, which
 /// LLVM then turns into masked SIMD FMAs.  (Perf pass: 0.59 -> ~2.6
 /// Gelem/s on the dev host; see EXPERIMENTS.md §Perf.)
-pub fn sw_flat_one(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[f32]) -> f32 {
+pub fn sw_flat_one(tri: CondensedView<'_>, grouping: &[u32], inv_group_sizes: &[f32]) -> f32 {
+    let n = tri.n();
     let mut s_w = 0.0f32;
     for row in 0..n.saturating_sub(1) {
         let group_idx = grouping[row];
         let w = inv_group_sizes[group_idx as usize];
-        let mat_row = &mat[row * n..(row + 1) * n];
         let gs = &grouping[(row + 1)..n];
-        let vs = &mat_row[(row + 1)..n];
+        let vs = tri.row(row);
         s_w += masked_sum_sq(vs, gs, group_idx) * w;
     }
     s_w
@@ -230,7 +245,8 @@ pub fn sw_flat_one(mat: &[f32], n: usize, grouping: &[u32], inv_group_sizes: &[f
 
 /// Eight-lane masked sum of squares: `Σ (g == group) · v²` with a fixed
 /// lane re-association that unlocks SIMD.  Shared by the flat and tiled
-/// kernels' inner loops.
+/// kernels' inner loops (packed and dense alike — which is half of why
+/// the two layouts are bitwise identical).
 #[inline]
 fn masked_sum_sq(vs: &[f32], gs: &[u32], group_idx: u32) -> f32 {
     debug_assert_eq!(vs.len(), gs.len());
@@ -253,9 +269,168 @@ fn masked_sum_sq(vs: &[f32], gs: &[u32], group_idx: u32) -> f32 {
     acc.iter().sum::<f32>() + tail
 }
 
-/// Dispatch one permutation through the chosen algorithm.
+/// Dispatch one permutation through the chosen algorithm (packed operand).
 #[inline]
 pub fn sw_one(
+    algo: SwAlgorithm,
+    tri: CondensedView<'_>,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+) -> f32 {
+    match algo {
+        SwAlgorithm::Brute => sw_brute_one(tri, grouping, inv_group_sizes),
+        SwAlgorithm::Tiled { tile } => sw_tiled_one(tri, grouping, inv_group_sizes, tile),
+        SwAlgorithm::Flat => sw_flat_one(tri, grouping, inv_group_sizes),
+    }
+}
+
+/// Convenience wrapper for matrix + grouping types (packs the triangle —
+/// use a prebuilt [`CondensedMatrix`] when calling in a loop).
+pub fn sw_of(algo: SwAlgorithm, mat: &DistanceMatrix, grouping: &Grouping) -> f32 {
+    let tri = CondensedMatrix::from_dense(mat);
+    sw_one(algo, tri.view(), grouping.labels(), grouping.inv_sizes())
+}
+
+// ---------------------------------------------------------------------------
+// Dense seed kernels — the pre-packed-layout implementations, kept verbatim
+// as the conformance oracles the packed kernels are pinned against (and for
+// callers that hold only a dense buffer, e.g. the XLA artifact checks).
+// ---------------------------------------------------------------------------
+
+/// Dense seed of [`sw_brute_one`]: Algorithm 1 over the row-major `n*n`
+/// buffer.  Bitwise-identical to the packed kernel by construction.
+pub fn sw_brute_one_dense(
+    mat: &[f32],
+    n: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+) -> f32 {
+    debug_assert_eq!(mat.len(), n * n);
+    debug_assert_eq!(grouping.len(), n);
+    let mut s_w = 0.0f32;
+    for row in 0..n.saturating_sub(1) {
+        let group_idx = grouping[row];
+        let w = inv_group_sizes[group_idx as usize];
+        let mat_row = &mat[row * n..(row + 1) * n];
+        for col in (row + 1)..n {
+            if grouping[col] == group_idx {
+                let val = mat_row[col];
+                s_w += val * val * w;
+            }
+        }
+    }
+    s_w
+}
+
+/// Dense seed of [`sw_brute_f64`] (the f64 oracle over a dense buffer).
+pub fn sw_brute_f64_dense(
+    mat: &[f32],
+    n: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+) -> f64 {
+    let mut s_w = 0.0f64;
+    for row in 0..n.saturating_sub(1) {
+        let group_idx = grouping[row];
+        let w = inv_group_sizes[group_idx as usize] as f64;
+        let mat_row = &mat[row * n..(row + 1) * n];
+        let mut local = 0.0f64;
+        for col in (row + 1)..n {
+            if grouping[col] == group_idx {
+                let val = mat_row[col] as f64;
+                local += val * val;
+            }
+        }
+        s_w += local * w;
+    }
+    s_w
+}
+
+/// Dense seed of [`sw_tiled_one`].
+pub fn sw_tiled_one_dense(
+    mat: &[f32],
+    n: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+    tile: usize,
+) -> f32 {
+    debug_assert!(tile > 0);
+    let mut s_w = 0.0f32;
+    let mut trow = 0usize;
+    while trow + 1 < n {
+        let mut tcol = trow + 1;
+        while tcol < n {
+            let row_end = (trow + tile).min(n - 1);
+            for row in trow..row_end {
+                let min_col = tcol.max(row + 1);
+                let max_col = (tcol + tile).min(n);
+                if min_col >= max_col {
+                    continue;
+                }
+                let mat_row = &mat[row * n..(row + 1) * n];
+                let group_idx = grouping[row];
+                let cols = &grouping[min_col..max_col];
+                let local_s_w = masked_sum_sq(&mat_row[min_col..max_col], cols, group_idx);
+                s_w += local_s_w * inv_group_sizes[group_idx as usize];
+            }
+            tcol += tile;
+        }
+        trow += tile;
+    }
+    s_w
+}
+
+/// Dense seed of [`sw_flat_one`].
+pub fn sw_flat_one_dense(
+    mat: &[f32],
+    n: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+) -> f32 {
+    let mut s_w = 0.0f32;
+    for row in 0..n.saturating_sub(1) {
+        let group_idx = grouping[row];
+        let w = inv_group_sizes[group_idx as usize];
+        let mat_row = &mat[row * n..(row + 1) * n];
+        let gs = &grouping[(row + 1)..n];
+        let vs = &mat_row[(row + 1)..n];
+        s_w += masked_sum_sq(vs, gs, group_idx) * w;
+    }
+    s_w
+}
+
+/// Dense seed of [`sw_brute_block`] (SoA block over a dense buffer).
+pub fn sw_brute_block_dense(
+    mat: &[f32],
+    n: usize,
+    labels: &[u32],
+    block: usize,
+    inv_group_sizes: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(mat.len(), n * n);
+    debug_assert_eq!(labels.len(), n * block);
+    debug_assert_eq!(out.len(), block);
+    for row in 0..n.saturating_sub(1) {
+        let row_groups = &labels[row * block..(row + 1) * block];
+        let mat_row = &mat[row * n..(row + 1) * n];
+        for col in (row + 1)..n {
+            let val = mat_row[col];
+            let v2 = val * val;
+            let col_groups = &labels[col * block..(col + 1) * block];
+            for j in 0..block {
+                let g = row_groups[j];
+                if col_groups[j] == g {
+                    out[j] += v2 * inv_group_sizes[g as usize];
+                }
+            }
+        }
+    }
+}
+
+/// Dense dispatch (seed oracle of [`sw_one`]).
+#[inline]
+pub fn sw_one_dense(
     algo: SwAlgorithm,
     mat: &[f32],
     n: usize,
@@ -263,15 +438,12 @@ pub fn sw_one(
     inv_group_sizes: &[f32],
 ) -> f32 {
     match algo {
-        SwAlgorithm::Brute => sw_brute_one(mat, n, grouping, inv_group_sizes),
-        SwAlgorithm::Tiled { tile } => sw_tiled_one(mat, n, grouping, inv_group_sizes, tile),
-        SwAlgorithm::Flat => sw_flat_one(mat, n, grouping, inv_group_sizes),
+        SwAlgorithm::Brute => sw_brute_one_dense(mat, n, grouping, inv_group_sizes),
+        SwAlgorithm::Tiled { tile } => {
+            sw_tiled_one_dense(mat, n, grouping, inv_group_sizes, tile)
+        }
+        SwAlgorithm::Flat => sw_flat_one_dense(mat, n, grouping, inv_group_sizes),
     }
-}
-
-/// Convenience wrapper for matrix + grouping types.
-pub fn sw_of(algo: SwAlgorithm, mat: &DistanceMatrix, grouping: &Grouping) -> f32 {
-    sw_one(algo, mat.data(), mat.n(), grouping.labels(), grouping.inv_sizes())
 }
 
 #[cfg(test)]
@@ -297,6 +469,7 @@ mod tests {
     #[test]
     fn hand_computed_value_all_algorithms() {
         let (m, g, inv) = hand_case();
+        let tri = CondensedMatrix::from_dense(&m);
         for algo in [
             SwAlgorithm::Brute,
             SwAlgorithm::Flat,
@@ -305,10 +478,11 @@ mod tests {
             SwAlgorithm::Tiled { tile: 3 },
             SwAlgorithm::Tiled { tile: 64 },
         ] {
-            let got = sw_one(algo, m.data(), 4, &g, &inv);
+            let got = sw_one(algo, tri.view(), &g, &inv);
             assert!((got - 2.5).abs() < 1e-6, "{algo:?} -> {got}");
         }
-        assert!((sw_brute_f64(m.data(), 4, &g, &inv) - 2.5).abs() < 1e-12);
+        assert!((sw_brute_f64(tri.view(), &g, &inv) - 2.5).abs() < 1e-12);
+        assert!((sw_brute_f64_dense(m.data(), 4, &g, &inv) - 2.5).abs() < 1e-12);
     }
 
     fn random_case(n: usize, k: usize, seed: u64) -> (DistanceMatrix, Vec<u32>, Vec<f32>) {
@@ -329,7 +503,8 @@ mod tests {
         let cases = [(7usize, 2usize, 1u64), (32, 4, 2), (65, 3, 3), (128, 8, 4), (200, 5, 5)];
         for (n, k, seed) in cases {
             let (m, g, inv) = random_case(n, k, seed);
-            let oracle = sw_brute_f64(m.data(), n, &g, &inv);
+            let tri = CondensedMatrix::from_dense(&m);
+            let oracle = sw_brute_f64(tri.view(), &g, &inv);
             for algo in [
                 SwAlgorithm::Brute,
                 SwAlgorithm::Flat,
@@ -337,7 +512,7 @@ mod tests {
                 SwAlgorithm::Tiled { tile: 37 }, // deliberately awkward tile
                 SwAlgorithm::Tiled { tile: 512 },
             ] {
-                let got = sw_one(algo, m.data(), n, &g, &inv) as f64;
+                let got = sw_one(algo, tri.view(), &g, &inv) as f64;
                 let rel = (got - oracle).abs() / oracle.max(1e-12);
                 assert!(rel < 5e-5, "{algo:?} n={n}: got {got}, oracle {oracle}");
             }
@@ -345,11 +520,41 @@ mod tests {
     }
 
     #[test]
+    fn packed_kernels_are_bitwise_identical_to_dense_seeds() {
+        // The tentpole contract: every formulation, packed vs dense, bit
+        // for bit — including awkward tiles and the f64 oracle.
+        let cases = [(7usize, 2usize, 11u64), (32, 4, 12), (65, 3, 13), (96, 5, 14)];
+        for (n, k, seed) in cases {
+            let (m, g, inv) = random_case(n, k, seed);
+            let tri = CondensedMatrix::from_dense(&m);
+            for algo in [
+                SwAlgorithm::Brute,
+                SwAlgorithm::Flat,
+                SwAlgorithm::Tiled { tile: 1 },
+                SwAlgorithm::Tiled { tile: 37 },
+                SwAlgorithm::Tiled { tile: 512 },
+            ] {
+                let packed = sw_one(algo, tri.view(), &g, &inv);
+                let dense = sw_one_dense(algo, m.data(), n, &g, &inv);
+                assert_eq!(
+                    packed.to_bits(),
+                    dense.to_bits(),
+                    "{algo:?} n={n}: packed {packed} vs dense {dense}"
+                );
+            }
+            let packed = sw_brute_f64(tri.view(), &g, &inv);
+            let dense = sw_brute_f64_dense(m.data(), n, &g, &inv);
+            assert_eq!(packed.to_bits(), dense.to_bits(), "f64 oracle n={n}");
+        }
+    }
+
+    #[test]
     fn tile_size_is_semantics_invariant() {
         let (m, g, inv) = random_case(97, 4, 9);
-        let want = sw_tiled_one(m.data(), 97, &g, &inv, 512);
+        let tri = CondensedMatrix::from_dense(&m);
+        let want = sw_tiled_one(tri.view(), &g, &inv, 512);
         for tile in [1, 2, 3, 5, 8, 13, 31, 96, 97, 100, 4096] {
-            let got = sw_tiled_one(m.data(), 97, &g, &inv, tile);
+            let got = sw_tiled_one(tri.view(), &g, &inv, tile);
             assert!(
                 (got - want).abs() / want.max(1e-9) < 5e-5,
                 "tile {tile}: {got} vs {want}"
@@ -362,9 +567,9 @@ mod tests {
         let n = 24;
         let g: Vec<u32> = (0..n as u32).map(|i| i % 3).collect();
         let inv = vec![1.0 / 8.0; 3];
-        let m = DistanceMatrix::zeros(n);
+        let tri = CondensedMatrix::from_dense(&DistanceMatrix::zeros(n));
         for algo in [SwAlgorithm::Brute, SwAlgorithm::Flat, SwAlgorithm::Tiled { tile: 8 }] {
-            assert_eq!(sw_one(algo, m.data(), n, &g, &inv), 0.0);
+            assert_eq!(sw_one(algo, tri.view(), &g, &inv), 0.0);
         }
     }
 
@@ -373,15 +578,18 @@ mod tests {
         // n = 1 has no pairs at all; n = 2 has exactly one.
         let g1 = vec![0u32];
         let inv = vec![1.0f32, 1.0];
-        assert_eq!(sw_brute_one(&[0.0], 1, &g1, &inv), 0.0);
-        assert_eq!(sw_flat_one(&[0.0], 1, &g1, &inv), 0.0);
-        assert_eq!(sw_tiled_one(&[0.0], 1, &g1, &inv, 4), 0.0);
+        let t1 = CondensedMatrix::from_dense(&DistanceMatrix::zeros(1));
+        assert_eq!(sw_brute_one(t1.view(), &g1, &inv), 0.0);
+        assert_eq!(sw_flat_one(t1.view(), &g1, &inv), 0.0);
+        assert_eq!(sw_tiled_one(t1.view(), &g1, &inv, 4), 0.0);
 
-        let m = [0.0f32, 3.0, 3.0, 0.0];
+        let mut m2 = DistanceMatrix::zeros(2);
+        m2.set_sym(0, 1, 3.0);
+        let t2 = CondensedMatrix::from_dense(&m2);
         let g2 = vec![0u32, 0];
         let inv2 = vec![0.5f32];
         for algo in [SwAlgorithm::Brute, SwAlgorithm::Flat, SwAlgorithm::Tiled { tile: 4 }] {
-            let got = sw_one(algo, &m, 2, &g2, &inv2);
+            let got = sw_one(algo, t2.view(), &g2, &inv2);
             assert!((got - 4.5).abs() < 1e-6); // 3^2 * 0.5
         }
     }
@@ -402,6 +610,7 @@ mod tests {
     fn block_kernel_is_bitwise_identical_to_brute_per_lane() {
         for (n, k, seed) in [(7usize, 2usize, 1u64), (32, 4, 2), (65, 3, 3), (96, 5, 4)] {
             let (m, g, inv) = random_case(n, k, seed);
+            let tri = CondensedMatrix::from_dense(&m);
             // Lanes: the observed labelling plus rotations of it.
             for block in [1usize, 2, 5, 8, 64] {
                 let mut aos = Vec::with_capacity(block * n);
@@ -412,14 +621,21 @@ mod tests {
                 }
                 let soa = to_soa(&aos, block, n);
                 let mut out = vec![0.0f32; block];
-                sw_brute_block(m.data(), n, &soa, block, &inv, &mut out);
+                sw_brute_block(tri.view(), &soa, block, &inv, &mut out);
+                let mut out_dense = vec![0.0f32; block];
+                sw_brute_block_dense(m.data(), n, &soa, block, &inv, &mut out_dense);
                 for r in 0..block {
-                    let want = sw_brute_one(m.data(), n, &aos[r * n..(r + 1) * n], &inv);
+                    let want = sw_brute_one(tri.view(), &aos[r * n..(r + 1) * n], &inv);
                     assert_eq!(
                         out[r].to_bits(),
                         want.to_bits(),
                         "n={n} block={block} lane {r}: {} vs {want}",
                         out[r]
+                    );
+                    assert_eq!(
+                        out[r].to_bits(),
+                        out_dense[r].to_bits(),
+                        "n={n} block={block} lane {r}: packed vs dense seed"
                     );
                 }
             }
@@ -431,15 +647,18 @@ mod tests {
         // n = 1: no pairs; n = 2: one pair per lane.
         let inv = vec![1.0f32, 1.0];
         let mut out = vec![0.0f32; 3];
-        sw_brute_block(&[0.0], 1, &[0, 0, 0], 3, &inv, &mut out);
+        let t1 = CondensedMatrix::from_dense(&DistanceMatrix::zeros(1));
+        sw_brute_block(t1.view(), &[0, 0, 0], 3, &inv, &mut out);
         assert_eq!(out, vec![0.0, 0.0, 0.0]);
 
-        let m = [0.0f32, 3.0, 3.0, 0.0];
+        let mut m2 = DistanceMatrix::zeros(2);
+        m2.set_sym(0, 1, 3.0);
+        let t2 = CondensedMatrix::from_dense(&m2);
         // Two lanes: same group (pair counts) vs different groups (no pair).
         let soa = [0u32, 0, 0, 1]; // labels[i*2 + j]: obj0 = {0,0}, obj1 = {0,1}
         let inv2 = vec![0.5f32, 1.0];
         let mut out2 = vec![0.0f32; 2];
-        sw_brute_block(&m, 2, &soa, 2, &inv2, &mut out2);
+        sw_brute_block(t2.view(), &soa, 2, &inv2, &mut out2);
         assert!((out2[0] - 4.5).abs() < 1e-6); // 3² · 0.5
         assert_eq!(out2[1], 0.0);
     }

@@ -13,9 +13,10 @@
 //!   pairwise`), threaded through `RunConfig`, the bench sweep and every
 //!   report;
 //! * [`StatKernel`] — one prepared instance per run.  The variant carries
-//!   the method's prelude (PERMANOVA: `s_T`; ANOSIM: the condensed
-//!   mid-ranks; PERMDISP: the PCoA distance-to-centroid vector), replacing
-//!   the permanova-specific `s_t` that `BatchPlan` used to hard-wire;
+//!   the method's prelude (PERMANOVA: `s_T` plus the **packed triangle**
+//!   the f32 kernels sweep; ANOSIM: the condensed mid-ranks; PERMDISP:
+//!   the PCoA distance-to-centroid vector), replacing the
+//!   permanova-specific `s_t` that `BatchPlan` used to hard-wire;
 //! * [`eval_plan_range`] / [`eval_plan_range_blocked`] — the generic
 //!   scalar and block-batched evaluation loops backends delegate to for
 //!   every method that has no specialized fast path.
@@ -31,13 +32,15 @@
 //! bit-identical statistics — the conformance suite pins each method
 //! against its legacy standalone oracle function.
 
+use std::sync::Arc;
+
 use super::anosim::{r_statistic, r_statistic_block, rank_condensed};
 use super::grouping::Grouping;
 use super::kernels::sw_brute_f64;
 use super::permdisp::{anova_f, dispersion_prelude};
-use super::stats::{fstat_from_sw, st_of};
+use super::stats::{fstat_from_sw, st_of_condensed};
 use crate::backend::shard::{for_each_block, ShardSpec};
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::error::{Error, Result};
 use crate::rng::PermutationPlan;
 
@@ -102,13 +105,18 @@ impl Method {
     }
 }
 
-/// PERMANOVA prelude: the permutation-invariant total sum of squares.
+/// PERMANOVA prelude: the permutation-invariant total sum of squares plus
+/// the **packed triangle** the f32 kernels sweep.
 #[derive(Clone, Debug)]
 pub struct PermanovaStat {
     /// `s_T = Σ_{i<j} d²_ij / n`.
     pub s_t: f64,
     /// Objects in the matrix the prelude was computed from (reuse check).
     pub n: usize,
+    /// The packed upper triangle — the canonical kernel operand.  Shared
+    /// (`Arc`) so the service cache builds it once per dataset and every
+    /// job's backend streams the same buffer.
+    pub packed: Arc<CondensedMatrix>,
 }
 
 /// ANOSIM prelude: condensed mid-ranks of the distances (computed once —
@@ -151,6 +159,10 @@ pub enum StatKernel {
 impl StatKernel {
     /// Run the method's precomputation for one (matrix, grouping) problem.
     ///
+    /// Packs the triangle itself; callers that already hold a per-dataset
+    /// packed buffer (the service cache) use
+    /// [`prepare_shared`](Self::prepare_shared) to avoid re-packing.
+    ///
     /// [`Method::PairwisePermanova`] has no single kernel — the engine fans
     /// it out into one PERMANOVA job per group pair *above* this seam — so
     /// requesting it here is an input error.
@@ -159,6 +171,22 @@ impl StatKernel {
         mat: &DistanceMatrix,
         grouping: &Grouping,
     ) -> Result<StatKernel> {
+        Self::prepare_shared(method, mat, grouping, None)
+    }
+
+    /// [`prepare`](Self::prepare) with an optionally **pre-packed**
+    /// triangle.  The service cache builds one [`CondensedMatrix`] per
+    /// dataset and hands it to every method's prelude through this seam,
+    /// so the packed buffer is paid for once per dataset — not once per
+    /// job, not once per method.  Sharing is bitwise-neutral: the packed
+    /// values are exactly what `CondensedMatrix::from_dense(mat)` would
+    /// produce (checked against the matrix edge).
+    pub fn prepare_shared(
+        method: Method,
+        mat: &DistanceMatrix,
+        grouping: &Grouping,
+        packed: Option<Arc<CondensedMatrix>>,
+    ) -> Result<StatKernel> {
         if grouping.n() != mat.n() {
             return Err(Error::InvalidInput(format!(
                 "grouping n = {} vs matrix n = {}",
@@ -166,13 +194,36 @@ impl StatKernel {
                 mat.n()
             )));
         }
+        if let Some(p) = &packed {
+            if p.n() != mat.n() {
+                return Err(Error::InvalidInput(format!(
+                    "packed triangle has n = {}, matrix has n = {}",
+                    p.n(),
+                    mat.n()
+                )));
+            }
+        }
         match method {
             Method::Permanova => {
-                Ok(StatKernel::Permanova(PermanovaStat { s_t: st_of(mat), n: mat.n() }))
+                let packed = packed.unwrap_or_else(|| Arc::new(CondensedMatrix::from_dense(mat)));
+                Ok(StatKernel::Permanova(PermanovaStat {
+                    s_t: st_of_condensed(&packed),
+                    n: mat.n(),
+                    packed,
+                }))
             }
+            // The rank prelude consumes the packed values directly (they
+            // are already in condensed order); the ranks then *are* the
+            // packed per-permutation operand, so nothing else is retained.
             Method::Anosim => Ok(StatKernel::Anosim(AnosimStat {
-                ranks: rank_condensed(&mat.to_condensed()),
+                ranks: match &packed {
+                    Some(p) => rank_condensed(p.values()),
+                    None => rank_condensed(&mat.to_condensed()),
+                },
             })),
+            // PERMDISP's per-permutation operand is the O(n) distance-to-
+            // centroid vector; its prelude needs the dense matrix (PCoA is
+            // the dense boundary) and nothing packed.
             Method::Permdisp => {
                 let (dists, group_dispersions) = dispersion_prelude(mat, grouping)?;
                 Ok(StatKernel::Permdisp(PermdispStat {
@@ -259,6 +310,17 @@ impl StatKernel {
         }
     }
 
+    /// The packed triangle this kernel streams per permutation, when the
+    /// method has an n² f32 stream (PERMANOVA).  ANOSIM's packed operand
+    /// is its f64 rank vector and PERMDISP's is the O(n) distance vector,
+    /// so those variants return `None`.
+    pub fn packed(&self) -> Option<&Arc<CondensedMatrix>> {
+        match self {
+            StatKernel::Permanova(p) => Some(&p.packed),
+            _ => None,
+        }
+    }
+
     /// Evaluate the statistic for one labelling (the generic f64 path).
     ///
     /// For [`StatKernel::Permanova`] this is the f64 brute-force *oracle*
@@ -268,9 +330,8 @@ impl StatKernel {
     pub fn eval_labels(&self, mat: &DistanceMatrix, grouping: &Grouping, labels: &[u32]) -> f64 {
         match self {
             StatKernel::Permanova(p) => {
-                let n = mat.n();
-                let sw = sw_brute_f64(mat.data(), n, labels, grouping.inv_sizes());
-                fstat_from_sw(sw, p.s_t, n, grouping.k())
+                let sw = sw_brute_f64(p.packed.view(), labels, grouping.inv_sizes());
+                fstat_from_sw(sw, p.s_t, p.n, grouping.k())
             }
             StatKernel::Anosim(a) => r_statistic(&a.ranks, mat.n(), labels),
             StatKernel::Permdisp(p) => anova_f(&p.dists, labels, p.k),
@@ -435,6 +496,45 @@ mod tests {
         assert!(StatKernel::prepare(Method::PairwisePermanova, &mat, &grouping).is_err());
         let g_bad = Grouping::balanced(30, 3).unwrap();
         assert!(StatKernel::prepare(Method::Anosim, &mat, &g_bad).is_err());
+    }
+
+    #[test]
+    fn prepare_shared_reuses_the_packed_buffer_bitwise() {
+        let (mat, grouping) = fixture(24, 3, 5);
+        let packed = Arc::new(CondensedMatrix::from_dense(&mat));
+        // Shared-packed preludes carry the same values as self-packed ones.
+        for method in [Method::Permanova, Method::Anosim] {
+            let cold = StatKernel::prepare(method, &mat, &grouping).unwrap();
+            let shared =
+                StatKernel::prepare_shared(method, &mat, &grouping, Some(Arc::clone(&packed)))
+                    .unwrap();
+            match (&cold, &shared) {
+                (StatKernel::Permanova(a), StatKernel::Permanova(b)) => {
+                    assert_eq!(a.s_t.to_bits(), b.s_t.to_bits());
+                    assert_eq!(a.packed.values(), b.packed.values());
+                    // The shared buffer is referenced, not copied.
+                    assert!(Arc::ptr_eq(&b.packed, &packed));
+                }
+                (StatKernel::Anosim(a), StatKernel::Anosim(b)) => {
+                    assert_eq!(a.ranks, b.ranks);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // A packed buffer for a different problem size is rejected.
+        let (other_mat, other_grouping) = fixture(30, 3, 5);
+        assert!(StatKernel::prepare_shared(
+            Method::Permanova,
+            &other_mat,
+            &other_grouping,
+            Some(packed)
+        )
+        .is_err());
+        // The accessor exposes the triangle only for the f32-stream method.
+        let p = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
+        assert_eq!(p.packed().unwrap().n(), 24);
+        let a = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
+        assert!(a.packed().is_none());
     }
 
     #[test]

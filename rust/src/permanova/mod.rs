@@ -7,7 +7,9 @@
 //! * [`Grouping`] — validated categorical factor with `inv_group_sizes`;
 //! * the three kernel formulations of the hot loop (paper Algorithms 1–3):
 //!   [`sw_brute_one`], [`sw_tiled_one`], [`sw_flat_one`], selected via
-//!   [`SwAlgorithm`];
+//!   [`SwAlgorithm`] — all sweeping the **packed upper triangle**
+//!   (`dmat::CondensedView`, half the dense footprint), with the dense
+//!   seeds kept as `*_dense` conformance oracles;
 //! * batched multi-threaded execution ([`sw_batch`], [`sw_plan_range`]) —
 //!   the `permanova_f_stat_sW_T` analog;
 //! * the batched brute engine ([`sw_brute_block`],
@@ -42,8 +44,9 @@ pub use batch::{
 };
 pub use grouping::Grouping;
 pub use kernels::{
-    sw_brute_block, sw_brute_f64, sw_brute_one, sw_flat_one, sw_of, sw_one, sw_tiled_one,
-    SwAlgorithm, DEFAULT_PERM_BLOCK, DEFAULT_TILE,
+    sw_brute_block, sw_brute_block_dense, sw_brute_f64, sw_brute_f64_dense, sw_brute_one,
+    sw_brute_one_dense, sw_flat_one, sw_flat_one_dense, sw_of, sw_one, sw_one_dense,
+    sw_tiled_one, sw_tiled_one_dense, SwAlgorithm, DEFAULT_PERM_BLOCK, DEFAULT_TILE,
 };
 pub use method::{
     eval_plan_range, eval_plan_range_blocked, AnosimStat, Method, PermanovaStat, PermdispStat,
@@ -52,4 +55,6 @@ pub use method::{
 pub use pairwise::{
     pairwise_permanova, pairwise_seed, pairwise_subproblem, PairwiseEntry, PairwiseResult,
 };
-pub use stats::{fstat_from_sw, permanova, pvalue, st_of, PermanovaOpts, PermanovaResult};
+pub use stats::{
+    fstat_from_sw, permanova, pvalue, st_of, st_of_condensed, PermanovaOpts, PermanovaResult,
+};

@@ -12,6 +12,13 @@
 //! per-permutation statistic.  The [`permdisp`] free function below is the
 //! thin single-threaded wrapper that doubles as the conformance suite's
 //! f64 oracle.
+//!
+//! Layout note: PERMDISP's per-permutation operand is the O(n)
+//! distance-to-centroid vector — there is no n² stream to pack.  Its
+//! prelude is the one engine path that legitimately reads the **dense**
+//! matrix (PCoA Gower-centers the full n²), which is why `dmat::pcoa`
+//! sits on the dense side of the packed-layout boundary (and why its
+//! scratch arena matters: it runs on every dataset-cache miss).
 
 use super::grouping::Grouping;
 use super::method::{Method, StatKernel};

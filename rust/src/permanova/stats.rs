@@ -14,7 +14,7 @@ use std::time::Instant;
 use super::batch::{resolve_threads, sw_plan_range};
 use super::grouping::Grouping;
 use super::kernels::{SwAlgorithm, DEFAULT_TILE};
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::error::{Error, Result};
 use crate::rng::PermutationPlan;
 
@@ -26,6 +26,23 @@ pub fn st_of(mat: &DistanceMatrix) -> f64 {
         let row = mat.row(i);
         let mut local = 0.0f64;
         for &v in &row[i + 1..] {
+            local += (v as f64) * (v as f64);
+        }
+        acc += local;
+    }
+    acc / n as f64
+}
+
+/// [`st_of`] over the packed triangle.  A packed row is bitwise the dense
+/// row's `[i+1..n]` tail and the per-row accumulation order is identical,
+/// so the two functions return the same bits — which keeps every recorded
+/// `s_t` (reports, goldens) stable across the layout change.
+pub fn st_of_condensed(tri: &CondensedMatrix) -> f64 {
+    let n = tri.n();
+    let mut acc = 0.0f64;
+    for i in 0..n {
+        let mut local = 0.0f64;
+        for &v in tri.row(i) {
             local += (v as f64) * (v as f64);
         }
         acc += local;
@@ -122,11 +139,14 @@ pub fn permanova(
     let threads = resolve_threads(opts.threads);
     let start = Instant::now();
 
+    // Pack once; the permutation sweep streams the triangle, not the
+    // dense matrix (half the bytes per permutation).
+    let tri = CondensedMatrix::from_dense(mat);
     let plan = PermutationPlan::new(grouping.labels().to_vec(), opts.seed, n_perms + 1);
     let s_w_all =
-        sw_plan_range(mat, &plan, 0, n_perms + 1, grouping.inv_sizes(), opts.algo, threads);
+        sw_plan_range(&tri, &plan, 0, n_perms + 1, grouping.inv_sizes(), opts.algo, threads);
 
-    let s_t = st_of(mat);
+    let s_t = st_of_condensed(&tri);
     let f_all: Vec<f64> = s_w_all
         .iter()
         .map(|&sw| fstat_from_sw(sw as f64, s_t, n, k))
@@ -162,6 +182,15 @@ mod tests {
         m.set_sym(0, 2, 2.0);
         m.set_sym(1, 2, 2.0);
         assert!((st_of(&m) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn st_condensed_is_bitwise_identical_to_dense() {
+        for (n, seed) in [(3usize, 1u64), (17, 2), (64, 3), (97, 4)] {
+            let m = DistanceMatrix::random_euclidean(n, 6, seed);
+            let tri = CondensedMatrix::from_dense(&m);
+            assert_eq!(st_of(&m).to_bits(), st_of_condensed(&tri).to_bits(), "n={n}");
+        }
     }
 
     #[test]

@@ -32,7 +32,7 @@ mod tests {
     use super::*;
     use crate::dmat::DistanceMatrix;
     use crate::permanova::{
-        fstat_from_sw, st_of, sw_brute_f64, Grouping,
+        fstat_from_sw, st_of, sw_brute_f64_dense, Grouping,
     };
     use crate::rng::PermutationPlan;
 
@@ -69,8 +69,12 @@ mod tests {
             let out = sess.run_batch(&rows, 16).unwrap();
             let s_t = st_of(&mat);
             for r in 0..16 {
-                let want_sw =
-                    sw_brute_f64(mat.data(), n, &rows[r * n..(r + 1) * n], grouping.inv_sizes());
+                let want_sw = sw_brute_f64_dense(
+                    mat.data(),
+                    n,
+                    &rows[r * n..(r + 1) * n],
+                    grouping.inv_sizes(),
+                );
                 let got_sw = out.s_w[r] as f64;
                 assert!(
                     (got_sw - want_sw).abs() / want_sw.max(1e-9) < 1e-4,
@@ -102,8 +106,12 @@ mod tests {
         let out = sess.run_batch(&rows, 8).unwrap();
         let s_t = st_of(&mat);
         for r in 0..8 {
-            let want_sw =
-                sw_brute_f64(mat.data(), n, &rows[r * n..(r + 1) * n], grouping.inv_sizes());
+            let want_sw = sw_brute_f64_dense(
+                mat.data(),
+                n,
+                &rows[r * n..(r + 1) * n],
+                grouping.inv_sizes(),
+            );
             assert!(
                 ((out.s_w[r] as f64) - want_sw).abs() / want_sw.max(1e-9) < 1e-4,
                 "row {r}"

@@ -6,8 +6,12 @@
 //! prelude, not the per-permutation arithmetic.  A service answering many
 //! analyses over the same dataset therefore wins by amortizing exactly
 //! that work — [`DatasetCache`] keys datasets by their *data source* (and
-//! data seed, for generated sources), bounds residency with an LRU policy,
-//! and memoizes one prepared [`StatKernel`] per method per dataset.
+//! data seed, for generated sources; and validation tolerance, for file
+//! sources), bounds residency with an LRU policy, packs the upper
+//! triangle **at most once per dataset** (lazily, on first use by a
+//! method that streams it — the canonical kernel operand every later job
+//! shares, never a per-job rebuild), and memoizes one prepared
+//! [`StatKernel`] per method per dataset.
 //!
 //! **Warm results are bitwise-identical to cold results.**  Everything the
 //! cache stores is a pure function of the dataset: the matrix bytes, the
@@ -19,10 +23,10 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::{DataSource, RunConfig};
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::error::{Error, Result};
 use crate::permanova::{Grouping, Method, StatKernel};
 
@@ -40,8 +44,14 @@ fn fnv64(s: &str) -> u64 {
 /// The cache key a run configuration's data source resolves to: a
 /// canonical human-readable description plus its FNV-1a hash.  Generated
 /// sources include their *data seed* (see [`RunConfig::effective_data_seed`]);
-/// file sources are keyed by path, so any job reading the same files shares
-/// one entry regardless of seeds.
+/// file sources are keyed by path **and the validation tolerance**
+/// (`data_tol`) — validation runs on load, so a hit must only be served
+/// to jobs that would have accepted the same load.  Without the tol in
+/// the key, a loose-tol job could admit an asymmetric file into the cache
+/// and a strict-tol job would then silently analyze it on a warm hit,
+/// where its own cold run would have errored — breaking warm ≡ cold.
+/// Synthetic sources are valid by construction (never validated), so
+/// their keys stay tol-free and jobs share entries across tolerances.
 pub fn dataset_key(cfg: &RunConfig) -> String {
     let canon = match &cfg.data {
         DataSource::Synthetic { n_dims, n_groups } => format!(
@@ -55,36 +65,51 @@ pub fn dataset_key(cfg: &RunConfig) -> String {
         // Length-prefix the two paths: ':' is legal in file names, so a
         // plain join would let distinct (path, labels) pairs collide to
         // one key and silently serve the wrong dataset.
-        DataSource::Pdm { path, labels_path } => {
-            format!("pdm:{}:{}:{path}:{labels_path}", path.len(), labels_path.len())
-        }
-        DataSource::Tsv { path, labels_path } => {
-            format!("tsv:{}:{}:{path}:{labels_path}", path.len(), labels_path.len())
-        }
+        DataSource::Pdm { path, labels_path } => format!(
+            "pdm:{}:{}:{path}:{labels_path}:tol={}",
+            path.len(),
+            labels_path.len(),
+            cfg.data_tol
+        ),
+        DataSource::Tsv { path, labels_path } => format!(
+            "tsv:{}:{}:{path}:{labels_path}:tol={}",
+            path.len(),
+            labels_path.len(),
+            cfg.data_tol
+        ),
     };
     format!("{canon}#{:016x}", fnv64(&canon))
 }
 
-/// One resident dataset: the loaded problem plus its memoized per-method
-/// statistic preludes.
+/// One resident dataset: the loaded problem, its packed triangle (packed
+/// lazily, once per dataset, shared into every f32-stream prelude), and
+/// the memoized per-method statistic preludes.
 pub struct CachedDataset {
     key: String,
     pub mat: DistanceMatrix,
     pub grouping: Grouping,
+    /// The packed upper triangle — packed at most once per *dataset*, on
+    /// the first PERMANOVA prelude (the method whose backends retain and
+    /// stream it), then handed to every later prelude via
+    /// `StatKernel::prepare_shared` so no job ever re-packs.  Lazy so
+    /// batches that never stream it (PERMDISP, pairwise, ANOSIM-only —
+    /// whose rank prelude converts transiently instead) don't pay the
+    /// O(n²) pack or its residency.
+    packed: OnceLock<Arc<CondensedMatrix>>,
     /// Lazily prepared kernels, keyed by [`Method::name`].
     kernels: Mutex<BTreeMap<&'static str, Arc<StatKernel>>>,
 }
 
 impl CachedDataset {
     /// Load (and validate) the dataset a config describes — the same
-    /// `load_data` + `validate` sequence the cold `run_config` path runs.
+    /// `load_data` path the cold `run_config` route runs.
     fn load(cfg: &RunConfig) -> Result<CachedDataset> {
         let (mat, grouping) = crate::coordinator::load_data(cfg)?;
-        mat.validate(1e-4)?;
         Ok(CachedDataset {
             key: dataset_key(cfg),
             mat,
             grouping,
+            packed: OnceLock::new(),
             kernels: Mutex::new(BTreeMap::new()),
         })
     }
@@ -94,8 +119,15 @@ impl CachedDataset {
         &self.key
     }
 
+    /// The dataset's packed triangle: built on first call, one buffer
+    /// shared by every later job.
+    pub fn packed(&self) -> &Arc<CondensedMatrix> {
+        self.packed.get_or_init(|| Arc::new(CondensedMatrix::from_dense(&self.mat)))
+    }
+
     /// The prepared statistic prelude for `method`, computed on first use
-    /// and shared by every later job on this dataset.
+    /// (reusing the dataset's packed triangle where the method streams
+    /// it) and shared by every later job on this dataset.
     ///
     /// [`Method::PairwisePermanova`] has no dataset-level prelude (the
     /// engine prepares one per group-pair sub-problem), so requesting it
@@ -110,7 +142,21 @@ impl CachedDataset {
         if let Some(k) = kernels.get(method.name()) {
             return Ok(Arc::clone(k));
         }
-        let prepared = Arc::new(StatKernel::prepare(method, &self.mat, &self.grouping)?);
+        let shared = match method {
+            // The PERMANOVA prelude *retains* the packed operand (its
+            // backends stream it per sweep), so build — or reuse — the
+            // dataset-level buffer here.
+            Method::Permanova => Some(Arc::clone(self.packed())),
+            // ANOSIM reads the packed values only transiently, to build
+            // its rank vector: reuse the buffer when a PERMANOVA job
+            // already built it, but never *pin* n(n-1)/2 f32s to the
+            // cache lifetime for an ANOSIM-only workload — prepare_shared
+            // falls back to a transient conversion.
+            Method::Anosim => self.packed.get().cloned(),
+            _ => None,
+        };
+        let prepared =
+            Arc::new(StatKernel::prepare_shared(method, &self.mat, &self.grouping, shared)?);
         kernels.insert(method.name(), Arc::clone(&prepared));
         Ok(prepared)
     }
@@ -120,9 +166,11 @@ impl CachedDataset {
         self.kernels.lock().unwrap().len()
     }
 
-    /// Approximate resident size (the matrix dominates).
+    /// Approximate resident size (dense matrix, plus the packed triangle
+    /// once built; the preludes are O(n) to O(n²/2) on top and not
+    /// counted).
     pub fn nbytes(&self) -> usize {
-        self.mat.nbytes()
+        self.mat.nbytes() + self.packed.get().map_or(0, |p| p.nbytes())
     }
 }
 
@@ -282,6 +330,15 @@ mod tests {
         let mut f2 = f.clone();
         f2.seed = 42;
         assert_eq!(dataset_key(&f), dataset_key(&f2));
+        // ... but the validation tolerance DOES key file sources: a hit
+        // may only serve jobs that would have accepted the same load.
+        let mut f3 = f.clone();
+        f3.data_tol = 1.0;
+        assert_ne!(dataset_key(&f), dataset_key(&f3), "tol-aware for files");
+        // Synthetic sources are never validated; tol must not split them.
+        let mut s2 = cfg(24, 5);
+        s2.data_tol = 1.0;
+        assert_eq!(a, dataset_key(&s2), "tol-free for synthetic");
         // ':' in file names must not make distinct path pairs collide.
         let mk = |path: &str, labels: &str| {
             dataset_key(&RunConfig {
@@ -347,6 +404,56 @@ mod tests {
         ds.kernel(Method::Permdisp).unwrap();
         assert_eq!(ds.kernels_prepared(), 3);
         assert!(ds.kernel(Method::PairwisePermanova).is_err());
+    }
+
+    #[test]
+    fn packed_triangle_is_built_lazily_once_per_dataset() {
+        let cache = DatasetCache::new(2);
+        let (ds, _) = cache.get_or_load(&cfg(24, 1)).unwrap();
+        // Nothing packed yet; PERMDISP- and ANOSIM-only consumers never
+        // retain a pack (ANOSIM converts transiently for its ranks).
+        assert_eq!(ds.nbytes(), ds.mat.nbytes(), "no pack before first use");
+        ds.kernel(Method::Permdisp).unwrap();
+        assert_eq!(ds.nbytes(), ds.mat.nbytes(), "PERMDISP does not stream the triangle");
+        ds.kernel(Method::Anosim).unwrap();
+        assert_eq!(ds.nbytes(), ds.mat.nbytes(), "ANOSIM alone does not pin a pack");
+        // The PERMANOVA prelude builds it and references the dataset's
+        // buffer — no copy; ANOSIM then shares the same instance.
+        let k = ds.kernel(Method::Permanova).unwrap();
+        assert_eq!(ds.packed().n(), 24);
+        assert_eq!(ds.packed().values().len(), 24 * 23 / 2);
+        match k.as_ref() {
+            crate::permanova::StatKernel::Permanova(p) => {
+                assert!(Arc::ptr_eq(&p.packed, ds.packed()), "prelude shares the dataset pack");
+            }
+            other => panic!("{other:?}"),
+        }
+        // Residency accounting covers dense + packed (packed ≤ half dense).
+        assert_eq!(ds.nbytes(), ds.mat.nbytes() + ds.packed().nbytes());
+        assert!(ds.packed().nbytes() * 2 <= ds.mat.nbytes());
+    }
+
+    #[test]
+    fn warm_hits_cannot_bypass_load_validation() {
+        // A loose-tol job admits an asymmetric file; a strict-tol job on
+        // the same file must MISS (different key), re-load, and get the
+        // same Error::Config its cold run would — warm ≡ cold includes
+        // the failure behavior.
+        let dir = std::env::temp_dir().join("permanova_apu_cache_tol_test");
+        let (mpath, lpath) = crate::dmat::write_asymmetric_pdm_fixture(&dir);
+
+        let mk = |tol: f32| RunConfig {
+            data: DataSource::Pdm { path: mpath.clone(), labels_path: lpath.clone() },
+            n_perms: 9,
+            data_tol: tol,
+            ..Default::default()
+        };
+        let cache = DatasetCache::new(4);
+        let (_, hit) = cache.get_or_load(&mk(1.0)).unwrap();
+        assert!(!hit, "loose-tol job loads the file");
+        assert!(cache.get_or_load(&mk(1e-4)).is_err(), "strict-tol job re-validates");
+        let s = cache.stats();
+        assert_eq!(s.hits, 0, "the strict job never hit the loose entry");
     }
 
     #[test]

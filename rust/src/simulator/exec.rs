@@ -36,8 +36,16 @@ pub struct Prediction {
     pub bound: Bound,
     pub t_mem: f64,
     pub t_compute: f64,
-    /// HBM bytes the run must move.
+    /// HBM bytes the run must move (packed-layout stream — the canonical
+    /// kernel operand since PR 5).
     pub hbm_bytes: u64,
+    /// The permutation loop's **hot working set**: the packed triangle it
+    /// streams every sweep (≤ ~0.5× the dense `n²·4` scan a pre-packed
+    /// engine paid).  This is the operand contending for cache and HBM
+    /// bandwidth — a dense source buffer, where one is still held at the
+    /// I/O/PCoA/XLA boundary, sits cold outside the loop and is not part
+    /// of this figure.
+    pub matrix_footprint_bytes: u64,
     /// Bandwidth the run would need to be perfectly memory-bound at
     /// `seconds` (diagnostic; GB/s).
     pub achieved_bw_gbs: f64,
@@ -116,6 +124,7 @@ pub fn predict(machine: &Mi300a, w: &Workload, algo: SwAlgorithm, dev: DeviceCon
         t_mem,
         t_compute,
         hbm_bytes,
+        matrix_footprint_bytes: w.packed_bytes(),
         achieved_bw_gbs: hbm_bytes as f64 / seconds / 1e9,
     }
 }
@@ -135,6 +144,9 @@ mod tests {
         assert_eq!(p.bound, Bound::Memory);
         // Can't beat its own derated bandwidth.
         assert!(p.achieved_bw_gbs <= m.gpu.stream_bw_gbs);
+        // The resident operand is the packed triangle: ≤ half the dense n².
+        assert_eq!(p.matrix_footprint_bytes, w.packed_bytes());
+        assert!(p.matrix_footprint_bytes * 2 <= w.matrix_bytes());
     }
 
     #[test]

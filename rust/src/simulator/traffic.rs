@@ -3,12 +3,34 @@
 //! Converts a workload (n_dims, n_perms, algorithm, tile) into the bytes
 //! each memory level must supply.  The formulas are validated at small
 //! scale against the trace-driven cache simulator (`cachesim::tests`).
+//!
+//! Since PR 5 the **packed upper-triangle layout is canonical**: the
+//! engine's kernels stream `n(n-1)/2` contiguous f32 values per
+//! permutation, so [`cpu_traffic`] / [`gpu_traffic`] price that stream.
+//! The dense formulas survive on the [`MatrixLayout`] axis
+//! ([`cpu_traffic_layout`] / [`gpu_traffic_layout`]) — they differ in the
+//! per-row partial-line waste (a dense scan restarts every row mid-line)
+//! and, more importantly, in *footprint*: the packed triangle is
+//! `(n-1)/2n` (< 0.5×) of the dense `n²` residency, which is what decides
+//! whether a problem fits LLC/Infinity-Cache/HBM at all on a part where
+//! CPU and GPU contend for the same memory.
 
 use crate::permanova::SwAlgorithm;
 
 /// Cache line size used throughout (Zen 4 and CDNA3 both use 64 B lines at
 /// the core interface; HBM transactions are line-granular here).
 pub const LINE_BYTES: usize = 64;
+
+/// How the distance matrix is laid out in memory — the byte-footprint axis
+/// of the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatrixLayout {
+    /// Full row-major `n*n` buffer (the seed layout; kernels read only the
+    /// strict upper triangle of it, wasting half the residency).
+    Dense,
+    /// Packed `n*(n-1)/2` upper triangle — the canonical kernel operand.
+    Packed,
+}
 
 /// One PERMANOVA workload, as the paper parameterizes it.
 #[derive(Clone, Copy, Debug)]
@@ -44,6 +66,12 @@ impl Workload {
         (self.n_dims as u64).pow(2) * 4
     }
 
+    /// Packed-triangle footprint, bytes — what the kernels actually keep
+    /// resident and stream (`(n-1)/2n` of [`matrix_bytes`](Self::matrix_bytes)).
+    pub fn packed_bytes(&self) -> u64 {
+        self.elems_per_perm() * 4
+    }
+
     /// One permutation's grouping row, bytes (u32 labels).
     pub fn grouping_bytes(&self) -> u64 {
         self.n_dims as u64 * 4
@@ -62,21 +90,49 @@ pub struct TrafficEstimate {
     pub flops: u64,
 }
 
-/// HBM + cache traffic for a CPU run of the given algorithm.
+/// Per-permutation matrix bytes for a layout, including the layout's
+/// line-granularity waste:
+///
+/// * **Packed** rows are contiguous (row i+1 starts where row i ended), so
+///   the whole triangle is one straight stream — only the stream's two
+///   boundary lines can be partially used (+ LINE).
+/// * **Dense** row-major scans of triangle rows restart every row mid-line
+///   and waste part of the first line of each row: + n·(LINE/2) per
+///   permutation on average.
+fn per_perm_matrix_bytes(w: &Workload, layout: MatrixLayout) -> u64 {
+    match layout {
+        MatrixLayout::Packed => w.elems_per_perm() * 4 + LINE_BYTES as u64,
+        MatrixLayout::Dense => {
+            w.elems_per_perm() * 4 + (w.n_dims as u64 * LINE_BYTES as u64 / 2)
+        }
+    }
+}
+
+/// HBM + cache traffic for a CPU run of the given algorithm, canonical
+/// (packed) layout.
+pub fn cpu_traffic(w: &Workload, algo: SwAlgorithm) -> TrafficEstimate {
+    cpu_traffic_layout(w, algo, MatrixLayout::Packed)
+}
+
+/// HBM + cache traffic for a CPU run, explicit layout axis.
 ///
 /// Model:
 /// * The matrix has zero reuse within a permutation and (at paper scale)
 ///   does not fit any cache across permutations → every permutation
-///   re-streams the strict upper triangle from HBM.  Row-major scans of
-///   triangle rows waste part of the first line of each row: + n·(LINE/2)
-///   per permutation on average.
+///   re-streams the triangle from HBM, with the layout's line waste
+///   (`per_perm_matrix_bytes`).
 /// * Tiled scans additionally split rows into `ceil(span/tile)` segments
-///   whose boundaries fall mid-line; each boundary wastes ~LINE/2 bytes.
+///   whose boundaries fall mid-line; each boundary wastes ~LINE/2 bytes
+///   (in either layout — the tiled walk is strided, not streaming).
 /// * The grouping row (4n bytes ≈ 98 KiB at paper scale) is L2-resident:
 ///   one HBM fill per permutation, all re-reads served on-chip
 ///   (`cache_bytes` counts them).
-pub fn cpu_traffic(w: &Workload, algo: SwAlgorithm) -> TrafficEstimate {
-    let per_perm_matrix = w.elems_per_perm() * 4 + (w.n_dims as u64 * LINE_BYTES as u64 / 2);
+pub fn cpu_traffic_layout(
+    w: &Workload,
+    algo: SwAlgorithm,
+    layout: MatrixLayout,
+) -> TrafficEstimate {
+    let per_perm_matrix = per_perm_matrix_bytes(w, layout);
     let tile_waste = match algo {
         SwAlgorithm::Tiled { tile } => {
             // Each row inside each tile-column stripe restarts mid-line.
@@ -91,17 +147,24 @@ pub fn cpu_traffic(w: &Workload, algo: SwAlgorithm) -> TrafficEstimate {
     TrafficEstimate { hbm_bytes: hbm, cache_bytes: cache, flops: 2 * w.total_elems() }
 }
 
-/// HBM traffic for a GPU run.
+/// HBM traffic for a GPU run, canonical (packed) layout.
+pub fn gpu_traffic(w: &Workload, algo: SwAlgorithm) -> TrafficEstimate {
+    gpu_traffic_layout(w, algo, MatrixLayout::Packed)
+}
+
+/// HBM traffic for a GPU run, explicit layout axis.
 ///
 /// Same compulsory matrix streaming; the grouping rows of all resident
 /// teams fit Infinity Cache, so their HBM component is one fill per
 /// permutation, like the CPU.  (Efficiency losses — short rows, gather,
 /// reduction — are modelled as a *bandwidth* derate in `params.rs`, not as
 /// extra bytes.)
-pub fn gpu_traffic(w: &Workload, _algo: SwAlgorithm) -> TrafficEstimate {
-    let per_perm = w.elems_per_perm() * 4
-        + (w.n_dims as u64 * LINE_BYTES as u64 / 2)
-        + w.grouping_bytes();
+pub fn gpu_traffic_layout(
+    w: &Workload,
+    _algo: SwAlgorithm,
+    layout: MatrixLayout,
+) -> TrafficEstimate {
+    let per_perm = per_perm_matrix_bytes(w, layout) + w.grouping_bytes();
     TrafficEstimate {
         hbm_bytes: per_perm * w.n_perms as u64,
         cache_bytes: w.total_elems() * 4,
@@ -122,9 +185,50 @@ mod tests {
         assert!(e > 316_000_000 && e < 317_000_000, "{e}");
         // Dense matrix ~2.5 GB: doesn't fit the 256 MiB Infinity Cache.
         assert!(w.matrix_bytes() > 2_500_000_000);
+        // Packed halves it (still far beyond Infinity Cache at paper scale).
+        assert!(w.packed_bytes() * 2 <= w.matrix_bytes());
+        assert!(w.packed_bytes() > 1_250_000_000);
         // Total streamed ~5 TB over the run.
         let t = cpu_traffic(&w, crate::permanova::SwAlgorithm::Brute);
         assert!(t.hbm_bytes > 5_000_000_000_000 && t.hbm_bytes < 5_300_000_000_000);
+    }
+
+    #[test]
+    fn packed_footprint_ratio_is_below_half() {
+        for n in [64usize, 1000, 25145] {
+            let w = Workload { n_dims: n, n_perms: 1, n_groups: 4 };
+            let ratio = w.packed_bytes() as f64 / w.matrix_bytes() as f64;
+            assert!(ratio > 0.0 && ratio < 0.5, "n={n}: {ratio}");
+            // (n-1)/2n exactly.
+            let exact = (n as f64 - 1.0) / (2.0 * n as f64);
+            assert!((ratio - exact).abs() < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dense_layout_streams_strictly_more_than_packed() {
+        let w = Workload { n_dims: 4096, n_perms: 100, n_groups: 4 };
+        for algo in [
+            SwAlgorithm::Brute,
+            SwAlgorithm::Flat,
+            SwAlgorithm::Tiled { tile: 512 },
+        ] {
+            let packed = cpu_traffic_layout(&w, algo, MatrixLayout::Packed);
+            let dense = cpu_traffic_layout(&w, algo, MatrixLayout::Dense);
+            assert!(
+                dense.hbm_bytes > packed.hbm_bytes,
+                "{algo:?}: dense {} <= packed {}",
+                dense.hbm_bytes,
+                packed.hbm_bytes
+            );
+            // The delta is exactly the per-row restart waste.
+            let waste = (w.n_dims as u64 * LINE_BYTES as u64 / 2 - LINE_BYTES as u64)
+                * w.n_perms as u64;
+            assert_eq!(dense.hbm_bytes - packed.hbm_bytes, waste, "{algo:?}");
+        }
+        let g_packed = gpu_traffic_layout(&w, SwAlgorithm::Brute, MatrixLayout::Packed);
+        let g_dense = gpu_traffic_layout(&w, SwAlgorithm::Brute, MatrixLayout::Dense);
+        assert!(g_dense.hbm_bytes > g_packed.hbm_bytes);
     }
 
     #[test]

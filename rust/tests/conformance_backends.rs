@@ -21,7 +21,7 @@
 use permanova_apu::backend::execute;
 use permanova_apu::config::{DataSource, RunConfig};
 use permanova_apu::permanova::{
-    anosim, fstat_from_sw, pairwise_permanova, permdisp, st_of, sw_brute_f64, Method,
+    anosim, fstat_from_sw, pairwise_permanova, permdisp, st_of, sw_brute_f64_dense, Method,
     PermanovaOpts, SwAlgorithm,
 };
 use permanova_apu::report::AnalysisReport;
@@ -73,7 +73,7 @@ fn permanova_oracle() -> Vec<f64> {
     (0..N_PERMS + 1)
         .map(|i| {
             plan.fill(i, &mut row);
-            let sw = sw_brute_f64(mat.data(), N, &row, grouping.inv_sizes());
+            let sw = sw_brute_f64_dense(mat.data(), N, &row, grouping.inv_sizes());
             fstat_from_sw(sw, s_t, N, K)
         })
         .collect()

@@ -9,7 +9,7 @@ use permanova_apu::backend::{execute, known_backends, Registry};
 use permanova_apu::config::{DataSource, RunConfig};
 use permanova_apu::dmat::DistanceMatrix;
 use permanova_apu::permanova::{
-    fstat_from_sw, st_of, sw_brute_f64, Grouping, Method, SwAlgorithm, DEFAULT_TILE,
+    fstat_from_sw, st_of, sw_brute_f64_dense, Grouping, Method, SwAlgorithm, DEFAULT_TILE,
 };
 use permanova_apu::rng::PermutationPlan;
 
@@ -71,7 +71,7 @@ fn cross_backend_equivalence_against_f64_oracle() {
     let oracle: Vec<f64> = (0..n_perms + 1)
         .map(|i| {
             plan.fill(i, &mut row);
-            let sw = sw_brute_f64(mat.data(), n, &row, grouping.inv_sizes());
+            let sw = sw_brute_f64_dense(mat.data(), n, &row, grouping.inv_sizes());
             fstat_from_sw(sw, s_t, n, k)
         })
         .collect();

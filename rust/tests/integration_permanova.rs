@@ -4,7 +4,7 @@
 //! property-test style (seeded sweeps; the offline crate set has no
 //! proptest, so cases are enumerated deterministically).
 
-use permanova_apu::dmat::DistanceMatrix;
+use permanova_apu::dmat::{CondensedMatrix, DistanceMatrix};
 use permanova_apu::permanova::{
     fstat_from_sw, permanova, st_of, sw_brute_f64, sw_of, sw_one, Grouping, PermanovaOpts,
     SwAlgorithm,
@@ -54,7 +54,8 @@ fn label_bijection_invariance_sweep() {
         let k = 3 + (seed as usize) % 3;
         let mat = DistanceMatrix::random_euclidean(n, 5, seed);
         let grouping = random_grouping(n, k, seed);
-        let base = sw_brute_f64(mat.data(), n, grouping.labels(), grouping.inv_sizes());
+        let tri = CondensedMatrix::from_dense(&mat);
+        let base = sw_brute_f64(tri.view(), grouping.labels(), grouping.inv_sizes());
 
         // Build the relabelling perm: g -> (g + 1) % k.
         let relabel: Vec<u32> = grouping.labels().iter().map(|&g| (g + 1) % k as u32).collect();
@@ -62,7 +63,7 @@ fn label_bijection_invariance_sweep() {
         for g in 0..k {
             inv_re[(g + 1) % k] = grouping.inv_sizes()[g];
         }
-        let re = sw_brute_f64(mat.data(), n, &relabel, &inv_re);
+        let re = sw_brute_f64(tri.view(), &relabel, &inv_re);
         assert!((base - re).abs() / base < 1e-10, "seed {seed}");
     }
 }
@@ -93,8 +94,16 @@ fn object_permutation_invariance_sweep() {
         }
         let plabels: Vec<u32> = order.iter().map(|&o| grouping.labels()[o]).collect();
 
-        let a = sw_brute_f64(mat.data(), n, grouping.labels(), grouping.inv_sizes());
-        let b = sw_brute_f64(pm.data(), n, &plabels, grouping.inv_sizes());
+        let a = sw_brute_f64(
+            CondensedMatrix::from_dense(&mat).view(),
+            grouping.labels(),
+            grouping.inv_sizes(),
+        );
+        let b = sw_brute_f64(
+            CondensedMatrix::from_dense(&pm).view(),
+            &plabels,
+            grouping.inv_sizes(),
+        );
         assert!((a - b).abs() / a < 1e-10, "seed {seed}");
     }
 }
@@ -107,7 +116,8 @@ fn kernel_agreement_odd_shapes() {
         let k = 2 + n % 3;
         let mat = DistanceMatrix::random_euclidean(n, 3, n as u64);
         let grouping = random_grouping(n, k, n as u64);
-        let oracle = sw_brute_f64(mat.data(), n, grouping.labels(), grouping.inv_sizes());
+        let tri = CondensedMatrix::from_dense(&mat);
+        let oracle = sw_brute_f64(tri.view(), grouping.labels(), grouping.inv_sizes());
         for algo in [
             SwAlgorithm::Brute,
             SwAlgorithm::Flat,
@@ -116,7 +126,7 @@ fn kernel_agreement_odd_shapes() {
             SwAlgorithm::Tiled { tile: n + 1 },
             SwAlgorithm::Tiled { tile: 1 << 20 },
         ] {
-            let got = sw_one(algo, mat.data(), n, grouping.labels(), grouping.inv_sizes()) as f64;
+            let got = sw_one(algo, tri.view(), grouping.labels(), grouping.inv_sizes()) as f64;
             assert!(
                 (got - oracle).abs() / oracle.max(1e-12) < 1e-4,
                 "n={n} {algo:?}: {got} vs {oracle}"
@@ -177,10 +187,11 @@ fn null_pvalues_roughly_uniform() {
 fn threading_determinism_large() {
     let n = 150;
     let mat = DistanceMatrix::random_euclidean(n, 8, 2);
+    let tri = CondensedMatrix::from_dense(&mat);
     let grouping = random_grouping(n, 5, 9);
     let plan = PermutationPlan::new(grouping.labels().to_vec(), 33, 301);
     let single = permanova_apu::permanova::sw_plan_range(
-        &mat,
+        &tri,
         &plan,
         0,
         301,
@@ -190,7 +201,7 @@ fn threading_determinism_large() {
     );
     for threads in [2, 4, 7] {
         let multi = permanova_apu::permanova::sw_plan_range(
-            &mat,
+            &tri,
             &plan,
             0,
             301,

@@ -5,7 +5,7 @@
 //! checkout); CI runs them after the artifacts step.
 
 use permanova_apu::dmat::DistanceMatrix;
-use permanova_apu::permanova::{fstat_from_sw, st_of, sw_brute_f64, Grouping};
+use permanova_apu::permanova::{fstat_from_sw, st_of, sw_brute_f64_dense, Grouping};
 use permanova_apu::rng::PermutationPlan;
 use permanova_apu::runtime::{artifacts_dir_for_tests, XlaRuntime};
 
@@ -49,7 +49,7 @@ fn every_artifact_parity() {
         let s_t = st_of(&mat);
         for r in 0..b {
             let want =
-                sw_brute_f64(mat.data(), n, &rows[r * n..(r + 1) * n], grouping.inv_sizes());
+                sw_brute_f64_dense(mat.data(), n, &rows[r * n..(r + 1) * n], grouping.inv_sizes());
             let got = out.s_w[r] as f64;
             let rel = (got - want).abs() / want.max(1e-9);
             assert!(rel < 2e-4, "{} row {r}: sw rel err {rel}", meta.name);
@@ -105,8 +105,8 @@ fn interleaved_sessions_different_problems() {
     for _ in 0..3 {
         let ra = sess_a.run_batch(&plan_a.batch(0, 4), 4).unwrap();
         let rb = sess_b.run_batch(&plan_b.batch(0, 4), 4).unwrap();
-        let wa = sw_brute_f64(mat_a.data(), 64, plan_a.base(), grp_a.inv_sizes());
-        let wb = sw_brute_f64(mat_b.data(), 200, plan_b.base(), grp_b.inv_sizes());
+        let wa = sw_brute_f64_dense(mat_a.data(), 64, plan_a.base(), grp_a.inv_sizes());
+        let wb = sw_brute_f64_dense(mat_b.data(), 200, plan_b.base(), grp_b.inv_sizes());
         assert!(((ra.s_w[0] as f64) - wa).abs() / wa < 1e-4);
         assert!(((rb.s_w[0] as f64) - wb).abs() / wb < 1e-4);
     }

@@ -1,0 +1,231 @@
+//! Packed-vs-dense conformance: the packed upper-triangle layout is the
+//! canonical kernel operand, and it must be **bitwise invisible** in every
+//! statistic the engine produces.
+//!
+//! Three tiers:
+//!
+//! * **Kernel tier** — every packed f32/f64 kernel formulation equals its
+//!   dense seed (`*_dense`) bit for bit, on awkward shapes and tiles.
+//! * **Engine tier** — every method × backend × shard/SMT/`perm_block`
+//!   combination reproduces the *dense seed pipeline* (dense kernels run
+//!   by hand over the same permutation plan) bit for bit.
+//! * **Storage tier** — dense ↔ condensed round-trips exactly, and packed
+//!   rows are the dense rows' tails (the property the bitwise tiers rest
+//!   on), at ≤ half the dense footprint.
+
+use permanova_apu::backend::execute;
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::dmat::{CondensedMatrix, DistanceMatrix};
+use permanova_apu::permanova::{
+    fstat_from_sw, st_of, st_of_condensed, sw_brute_f64, sw_brute_f64_dense, sw_one,
+    sw_one_dense, Grouping, Method, StatKernel, SwAlgorithm,
+};
+use permanova_apu::rng::PermutationPlan;
+
+const N: usize = 52;
+const K: usize = 4;
+const N_PERMS: usize = 99;
+const SEED: u64 = 0xFACADE;
+
+fn fixture() -> (DistanceMatrix, Grouping) {
+    let cfg = cfg("native", Method::Permanova, 0);
+    permanova_apu::coordinator::load_data(&cfg).unwrap()
+}
+
+fn cfg(backend: &str, method: Method, perm_block: usize) -> RunConfig {
+    RunConfig {
+        data: DataSource::Synthetic { n_dims: N, n_groups: K },
+        backend: backend.to_string(),
+        method,
+        n_perms: N_PERMS,
+        seed: SEED,
+        threads: 2,
+        perm_block,
+        ..Default::default()
+    }
+}
+
+// -------------------------------------------------------------------------
+// Storage tier
+// -------------------------------------------------------------------------
+
+/// Property sweep: dense → condensed → dense is exact, rows are dense row
+/// tails, and the packed footprint is ≤ half the dense one.
+#[test]
+fn dense_condensed_roundtrip_property() {
+    for (n, seed) in [(3usize, 1u64), (4, 2), (9, 3), (33, 4), (64, 5), (101, 6)] {
+        let mat = DistanceMatrix::random_euclidean(n, 5, seed);
+        let tri = CondensedMatrix::from_dense(&mat);
+        assert_eq!(tri.n(), n);
+        assert_eq!(tri.values().len(), n * (n - 1) / 2);
+        // Round-trip is exact (f32 equality, not approximate).
+        assert_eq!(tri.to_dense(), mat, "n={n}");
+        // Packed values are the dense to_condensed vector.
+        assert_eq!(tri.values(), mat.to_condensed().as_slice(), "n={n}");
+        // Rows are dense row tails, bit for bit.
+        for i in 0..n {
+            assert_eq!(tri.row(i), &mat.row(i)[i + 1..], "n={n} row {i}");
+        }
+        // Symmetric random access agrees with the dense matrix.
+        for (i, j) in [(0usize, n - 1), (n / 2, n / 3), (n - 1, 0)] {
+            assert_eq!(tri.get(i, j), mat.get(i, j), "n={n} ({i},{j})");
+        }
+        // The whole point: ≤ half the bytes.
+        assert!(tri.nbytes() * 2 <= mat.nbytes(), "n={n}");
+    }
+}
+
+// -------------------------------------------------------------------------
+// Kernel tier
+// -------------------------------------------------------------------------
+
+/// Every f32 formulation and the f64 oracle: packed ≡ dense seed, bitwise,
+/// across shapes that straddle tiles and SIMD lanes.
+#[test]
+fn packed_kernels_match_dense_seeds_bitwise() {
+    for (n, k, seed) in [(5usize, 2usize, 1u64), (17, 3, 2), (52, 4, 3), (97, 5, 4)] {
+        let mat = DistanceMatrix::random_euclidean(n, 6, seed);
+        let tri = CondensedMatrix::from_dense(&mat);
+        let grouping = Grouping::balanced(n, k).unwrap();
+        let (labels, inv) = (grouping.labels(), grouping.inv_sizes());
+        for algo in [
+            SwAlgorithm::Brute,
+            SwAlgorithm::Flat,
+            SwAlgorithm::Tiled { tile: 1 },
+            SwAlgorithm::Tiled { tile: 7 },
+            SwAlgorithm::Tiled { tile: 512 },
+        ] {
+            let packed = sw_one(algo, tri.view(), labels, inv);
+            let dense = sw_one_dense(algo, mat.data(), n, labels, inv);
+            assert_eq!(packed.to_bits(), dense.to_bits(), "n={n} {algo:?}");
+        }
+        let packed = sw_brute_f64(tri.view(), labels, inv);
+        let dense = sw_brute_f64_dense(mat.data(), n, labels, inv);
+        assert_eq!(packed.to_bits(), dense.to_bits(), "n={n} f64 oracle");
+        // The s_T prelude too (it feeds every recorded pseudo-F).
+        assert_eq!(st_of(&mat).to_bits(), st_of_condensed(&tri).to_bits(), "n={n} s_T");
+    }
+}
+
+/// The ANOSIM prelude built from the packed buffer equals the one built
+/// from `to_condensed` — same values, same order, identical mid-ranks.
+#[test]
+fn anosim_rank_prelude_is_layout_invariant() {
+    let (mat, grouping) = fixture();
+    let kernel = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
+    let row = grouping.labels().to_vec();
+    let r = kernel.eval_labels(&mat, &grouping, &row);
+    let legacy = permanova_apu::permanova::anosim(&mat, &grouping, 9, 1).unwrap();
+    assert_eq!(r.to_bits(), legacy.r_obs.to_bits());
+}
+
+// -------------------------------------------------------------------------
+// Engine tier
+// -------------------------------------------------------------------------
+
+/// The dense seed pipeline for one backend's f32 formulation: run the
+/// dense kernel by hand over the same permutation plan.
+fn dense_seed_fstats(
+    mat: &DistanceMatrix,
+    grouping: &Grouping,
+    algo: SwAlgorithm,
+) -> Vec<f64> {
+    let n = mat.n();
+    let s_t = st_of(mat);
+    let plan = PermutationPlan::new(grouping.labels().to_vec(), SEED, N_PERMS + 1);
+    let mut row = vec![0u32; n];
+    (0..N_PERMS + 1)
+        .map(|i| {
+            plan.fill(i, &mut row);
+            let sw = sw_one_dense(algo, mat.data(), n, &row, grouping.inv_sizes()) as f64;
+            fstat_from_sw(sw, s_t, n, grouping.k())
+        })
+        .collect()
+}
+
+/// PERMANOVA through every packed backend ≡ the dense seed kernels, bit
+/// for bit, across shard / SMT / worker / `perm_block` sweeps.
+#[test]
+fn permanova_backends_match_dense_seed_kernels_bitwise() {
+    let (mat, grouping) = fixture();
+    // (backend, the dense formulation it must reproduce)
+    let cases: [(&str, SwAlgorithm); 5] = [
+        ("native-brute", SwAlgorithm::Brute),
+        ("native-flat", SwAlgorithm::Flat),
+        ("native-tiled", SwAlgorithm::Tiled { tile: 512 }),
+        ("native-batch", SwAlgorithm::Brute), // SoA lanes ≡ scalar brute
+        ("simulator", SwAlgorithm::Flat),     // exact numerics via flat
+    ];
+    for (backend, algo) in cases {
+        let want = dense_seed_fstats(&mat, &grouping, algo);
+        for perm_block in [0usize, 1, 8, 64] {
+            if perm_block > 0 && backend != "native-batch" {
+                continue;
+            }
+            for (shard_size, threads, smt) in
+                [(0usize, 2usize, false), (7, 3, true), (64, 1, false)]
+            {
+                let mut c = cfg(backend, Method::Permanova, perm_block);
+                c.shard_size = shard_size;
+                c.threads = threads;
+                c.smt_oversubscribe = smt;
+                let r = execute(&c, &mat, &grouping).unwrap();
+                let label =
+                    format!("{backend}/b{perm_block} shard={shard_size} t={threads} smt={smt}");
+                assert_eq!(r.f_obs.to_bits(), want[0].to_bits(), "{label}");
+                for (i, (got, seed_f)) in r.f_perms.iter().zip(&want[1..]).enumerate() {
+                    assert_eq!(
+                        got.to_bits(),
+                        seed_f.to_bits(),
+                        "{label} perm {i}: {got} vs {seed_f}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// ANOSIM and PERMDISP never touched the f32 matrix stream per
+/// permutation, but their preludes now flow through the shared packed
+/// buffer — the statistics must still match the legacy oracles exactly on
+/// every backend and scheduling knob.
+#[test]
+fn generic_methods_unperturbed_by_the_packed_preludes() {
+    let (mat, grouping) = fixture();
+    let a_oracle = permanova_apu::permanova::anosim(&mat, &grouping, N_PERMS, SEED).unwrap();
+    let d_oracle = permanova_apu::permanova::permdisp(&mat, &grouping, N_PERMS, SEED).unwrap();
+    for backend in ["native", "native-batch", "simulator"] {
+        for perm_block in [0usize, 1, 8, 64] {
+            if perm_block > 0 && backend != "native-batch" {
+                continue;
+            }
+            let ra = execute(&cfg(backend, Method::Anosim, perm_block), &mat, &grouping).unwrap();
+            assert_eq!(ra.f_obs.to_bits(), a_oracle.r_obs.to_bits(), "{backend}/b{perm_block}");
+            assert_eq!(ra.p_value, a_oracle.p_value);
+            let rd =
+                execute(&cfg(backend, Method::Permdisp, perm_block), &mat, &grouping).unwrap();
+            assert_eq!(rd.f_obs.to_bits(), d_oracle.f_obs.to_bits(), "{backend}/b{perm_block}");
+            assert_eq!(rd.p_value, d_oracle.p_value);
+        }
+    }
+}
+
+/// Warm (cached prelude, shared packed buffer) ≡ cold, bit for bit — the
+/// service-path acceptance of the layout change.
+#[test]
+fn warm_shared_packed_equals_cold_bitwise() {
+    use permanova_apu::backend::execute_prepared;
+    let (mat, grouping) = fixture();
+    for backend in ["native-brute", "native-batch", "simulator"] {
+        for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+            let c = cfg(backend, method, 0);
+            let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
+            let cold = execute(&c, &mat, &grouping).unwrap();
+            let warm = execute_prepared(&c, &mat, &grouping, Some(&kernel)).unwrap();
+            assert_eq!(cold.f_obs.to_bits(), warm.f_obs.to_bits(), "{backend} {method:?}");
+            for (a, b) in cold.f_perms.iter().zip(&warm.f_perms) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{backend} {method:?}");
+            }
+        }
+    }
+}

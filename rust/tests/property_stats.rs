@@ -17,7 +17,7 @@ use permanova_apu::backend::execute;
 use permanova_apu::config::{DataSource, RunConfig};
 use permanova_apu::dmat::DistanceMatrix;
 use permanova_apu::permanova::{
-    anosim, fstat_from_sw, permanova, permdisp, pvalue, st_of, sw_brute_f64, Grouping, Method,
+    anosim, fstat_from_sw, permanova, permdisp, pvalue, st_of, sw_brute_f64_dense, Grouping, Method,
     PermanovaOpts, SwAlgorithm,
 };
 use permanova_apu::rng::{shuffle, Xoshiro256pp};
@@ -39,7 +39,7 @@ fn permuted(mat: &DistanceMatrix, labels: &[u32], sigma: &[usize]) -> (DistanceM
 
 fn oracle_f(mat: &DistanceMatrix, labels: &[u32], inv: &[f32], k: usize) -> f64 {
     let n = mat.n();
-    let sw = sw_brute_f64(mat.data(), n, labels, inv);
+    let sw = sw_brute_f64_dense(mat.data(), n, labels, inv);
     fstat_from_sw(sw, st_of(mat), n, k)
 }
 
@@ -238,7 +238,7 @@ fn perfect_separation_yields_the_oracle_degenerate_f() {
             }
         }
     }
-    let sw_oracle = sw_brute_f64(mat.data(), n, grouping.labels(), grouping.inv_sizes());
+    let sw_oracle = sw_brute_f64_dense(mat.data(), n, grouping.labels(), grouping.inv_sizes());
     assert_eq!(sw_oracle, 0.0, "perfect separation has zero within-group sum");
     let f_oracle = fstat_from_sw(sw_oracle, st_of(&mat), n, k);
     assert!(f_oracle.is_infinite() && f_oracle > 0.0, "oracle F = {f_oracle}");
