@@ -9,7 +9,8 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: all build test bench bench-quick serve-demo lint fmt clippy doc artifacts pytest clean
+.PHONY: all build test bench bench-quick serve-demo daemon-demo lint fmt clippy doc artifacts \
+        pytest clean
 
 all: build
 
@@ -45,6 +46,24 @@ serve-demo:
 	  > demo_jobs.jsonl
 	$(CARGO) run --release -- serve --jobs demo_jobs.jsonl --out demo_responses.jsonl
 	$(CARGO) run --release -- serve --check demo_responses.jsonl
+
+# The network edition of serve-demo: start the TCP daemon in the
+# background, pipeline the same heterogeneous batch (as v1 envelopes)
+# plus a stats probe through the client subcommand, then drain it with a
+# shutdown request.  DAEMON_ADDR can be overridden for a busy port.
+DAEMON_ADDR ?= 127.0.0.1:7171
+daemon-demo: build
+	printf '%s\n' \
+	  '{"v": 1, "id": "perma", "request": {"n_perms": 499, "seed": 1, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}}' \
+	  '{"v": 1, "id": "rank", "request": {"method": "anosim", "backend": "native-batch", "n_perms": 499, "seed": 2, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}}' \
+	  '{"v": 1, "id": "disp", "request": {"method": "permdisp", "n_perms": 499, "seed": 3, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}}' \
+	  '{"v": 1, "id": "pairs", "request": {"method": "pairwise", "n_perms": 199, "seed": 4, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}}' \
+	  > demo_jobs.jsonl
+	./target/release/permanova-apu serve --listen $(DAEMON_ADDR) > demo_daemon.log 2>&1 & \
+	for _ in $$(seq 1 100); do grep -q 'listening on' demo_daemon.log && break; sleep 0.1; done
+	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --jobs demo_jobs.jsonl --stats
+	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --shutdown
+	@sleep 0.5; cat demo_daemon.log
 
 lint: fmt clippy
 

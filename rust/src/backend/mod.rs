@@ -34,7 +34,7 @@ mod xla;
 
 pub use batch::BatchedBruteBackend;
 pub use native::NativeBackend;
-pub use shard::{ShardCursor, ShardSpec};
+pub use shard::{AdmissionQueue, ShardCursor, ShardSpec};
 pub use sim::SimulatorBackend;
 pub use xla::XlaBackend;
 
@@ -216,6 +216,9 @@ pub fn create_backend(cfg: &RunConfig) -> Result<Box<dyn Backend>> {
     Registry::with_defaults().create(&cfg.backend, cfg)
 }
 
+/// Deprecated facade: prefer
+/// [`AnalysisRequest::new(cfg).with_data(mat, grouping).run()`](crate::request::AnalysisRequest).
+///
 /// Config-driven permutation test through the `Backend` trait: prepare
 /// the method's [`StatKernel`], run the whole batch on the selected
 /// backend, aggregate a method-tagged [`AnalysisReport`].
@@ -229,11 +232,13 @@ pub fn execute(
     mat: &DistanceMatrix,
     grouping: &Grouping,
 ) -> Result<AnalysisReport> {
-    execute_prepared(cfg, mat, grouping, None)
+    crate::request::AnalysisRequest::new(cfg).with_data(mat, grouping).run()
 }
 
+/// The engine-seam core below [`AnalysisRequest`](crate::request::AnalysisRequest):
 /// [`execute`] with an optionally **pre-prepared** statistic prelude — the
 /// seam the service layer's `DatasetCache` reuses kernels through.
+/// Callers outside the engine should go through the builder.
 ///
 /// When `prelude` is `Some`, it must be the [`StatKernel`] prepared for
 /// exactly this `(cfg.method, mat, grouping)` problem (checked via

@@ -27,6 +27,7 @@ use crate::error::{Error, Result};
 use crate::jsonio::Json;
 use crate::permanova::Method;
 use crate::report::Table;
+use crate::request::AnalysisRequest;
 
 /// Benchmark configuration.
 #[derive(Clone, Debug)]
@@ -179,8 +180,10 @@ pub fn speedup(a: &Measurement, b: &Measurement) -> f64 {
 /// cold vs warm dataset cache); v4 added the per-cell **memory-traffic
 /// axis** (`bytes_per_perm`, `effective_gbs`, `packed_bytes` /
 /// `dense_bytes` / `footprint_ratio`) — the packed-triangle layout's win,
-/// measured instead of asserted.
-pub const BENCH_SCHEMA: &str = "bench-permanova/v4";
+/// measured instead of asserted; v5 added the top-level `latency` section
+/// (open-loop p50/p99 request latency against an in-process TCP daemon,
+/// swept over concurrent client counts).
+pub const BENCH_SCHEMA: &str = "bench-permanova/v5";
 
 /// Bytes each permutation streams through its statistic kernel: the
 /// method's packed per-permutation operand plus the n-label row.
@@ -227,8 +230,14 @@ pub struct SweepGrid {
     /// Whether this was the CI smoke grid (recorded in the JSON).
     pub quick: bool,
     /// Jobs per throughput cell (the service-layer cold-vs-warm axis);
-    /// 0 skips the throughput section entirely.
+    /// 0 skips the throughput section entirely.  Also the per-client
+    /// request count of the daemon latency axis.
     pub throughput_jobs: usize,
+    /// Concurrent-client counts for the daemon latency axis (v5): each
+    /// entry spawns an in-process TCP daemon and measures open-loop
+    /// request latency under that many pipelined client connections.
+    /// Empty skips the latency section entirely.
+    pub latency_clients: Vec<usize>,
 }
 
 impl Default for SweepGrid {
@@ -252,6 +261,7 @@ impl Default for SweepGrid {
             },
             quick: false,
             throughput_jobs: 6,
+            latency_clients: vec![1, 4],
         }
     }
 }
@@ -273,6 +283,7 @@ impl SweepGrid {
             },
             quick: true,
             throughput_jobs: 4,
+            latency_clients: vec![2],
             ..Default::default()
         }
     }
@@ -341,11 +352,13 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
                     // loop; this run is also the cell's warmup (grid
                     // warmup is 0) and the source of method/kernel/block
                     // provenance.
-                    let report = crate::backend::execute(&cfg, &mat, &grouping)?;
+                    let report = AnalysisRequest::new(&cfg).with_data(&mat, &grouping).run()?;
                     let mut bencher = grid.bencher.clone();
                     let m = bencher
                         .run(&format!("{backend}/{}/n{n}/p{n_perms}", method.name()), || {
-                            crate::backend::execute(&cfg, &mat, &grouping)
+                            AnalysisRequest::new(&cfg)
+                                .with_data(&mat, &grouping)
+                                .run()
                                 .expect("pre-flighted bench cell failed")
                         });
                     // Pairwise fans out one job per group pair; count the
@@ -433,6 +446,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
         }
     }
     let (throughput, throughput_table) = run_throughput_axis(grid)?;
+    let (latency, latency_table) = run_latency_axis(grid)?;
 
     let entry_count = entries.len();
     let host_threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
@@ -443,11 +457,16 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
         ("host_threads", Json::num(host_threads as f64)),
         ("entries", Json::Arr(entries)),
         ("throughput", Json::Arr(throughput)),
+        ("latency", Json::Arr(latency)),
     ]);
     let mut rendered = table.render();
     if !throughput_table.is_empty() {
         rendered.push('\n');
         rendered.push_str(&throughput_table);
+    }
+    if !latency_table.is_empty() {
+        rendered.push('\n');
+        rendered.push_str(&latency_table);
     }
     Ok(SweepOutput { json, table: rendered, entries: entry_count })
 }
@@ -497,7 +516,7 @@ fn run_throughput_axis(grid: &SweepGrid) -> Result<(Vec<Json>, String)> {
                 .map(|i| {
                     let mut job = cfg.clone();
                     job.seed = cfg.seed.wrapping_add(i as u64);
-                    JobRequest { id: format!("{backend}-{}-{i}", method.name()), cfg: job }
+                    JobRequest::new(format!("{backend}-{}-{i}", method.name()), job)
                 })
                 .collect();
 
@@ -545,6 +564,177 @@ fn run_throughput_axis(grid: &SweepGrid) -> Result<(Vec<Json>, String)> {
     }
     let rendered = format!(
         "service throughput ({jobs} jobs/cell, repeated dataset, cold vs warm cache):\n{}",
+        table.render()
+    );
+    Ok((entries, rendered))
+}
+
+/// The daemon latency axis (v5): for every client count `C` in
+/// [`SweepGrid::latency_clients`], spawn an in-process TCP daemon
+/// (loopback, OS-picked port) and open `C` concurrent connections, each
+/// pipelining [`SweepGrid::throughput_jobs`] run requests **open-loop**
+/// (every frame written up front, then responses read back) — so a
+/// response's latency includes its queueing delay behind the other
+/// clients, which is exactly the service-level number a shared daemon
+/// owes its callers.  Reported per cell: p50/p99/mean response latency
+/// (connection-side wall clock) and aggregate responses/sec.
+///
+/// All requests share one pinned dataset with distinct permutation
+/// seeds (the shared-service shape), at the grid's smallest n and
+/// permutation count: the axis measures admission, scheduling and wire
+/// overhead under concurrency — the kernel-speed axes are `entries`.
+fn run_latency_axis(grid: &SweepGrid) -> Result<(Vec<Json>, String)> {
+    use crate::service::{envelope_v1, wire, Daemon, DaemonConfig};
+    use std::io::{BufReader, BufWriter, Write};
+    use std::net::TcpStream;
+
+    if grid.latency_clients.is_empty() {
+        return Ok((Vec::new(), String::new()));
+    }
+    let per_client = grid.throughput_jobs.max(2);
+    let n = *grid.n_grid.iter().min().expect("validated non-empty");
+    let n_perms = *grid.perm_grid.iter().min().expect("validated non-empty");
+    let backend = grid.backends.first().expect("validated non-empty");
+    let method = *grid.methods.first().expect("validated non-empty");
+
+    let mut entries = Vec::new();
+    let mut table = Table::new(&[
+        "clients", "reqs", "n", "perms", "p50", "p99", "mean", "resp/s", "shed",
+    ]);
+    for &clients in &grid.latency_clients {
+        if clients == 0 {
+            return Err(Error::Config(
+                "bench: --latency-clients entries must be >= 1 (use 0 alone to disable)".into(),
+            ));
+        }
+        let daemon = Daemon::spawn(DaemonConfig {
+            workers: grid.base.threads,
+            cache_capacity: 4,
+            ..DaemonConfig::default()
+        })?;
+        let addr = daemon.addr();
+        // One request body per (client, slot): shared dataset (pinned
+        // data seed), distinct permutation seeds.
+        let build_requests = |client: usize| -> Vec<String> {
+            (0..per_client)
+                .map(|slot| {
+                    let seed = grid.base.seed.wrapping_add((client * per_client + slot) as u64);
+                    let payload = Json::obj(vec![
+                        ("method", Json::str(method.name())),
+                        ("backend", Json::str(backend.clone())),
+                        ("n_perms", Json::num(n_perms as f64)),
+                        ("seed", Json::str(seed.to_string())),
+                        (
+                            "data",
+                            Json::obj(vec![
+                                ("source", Json::str("synthetic")),
+                                ("n_dims", Json::num(n as f64)),
+                                ("n_groups", Json::num(grid.n_groups as f64)),
+                                ("seed", Json::str(grid.base.seed.to_string())),
+                            ]),
+                        ),
+                    ]);
+                    envelope_v1(Some(&format!("lat-{client}-{slot}")), payload).to_string()
+                })
+                .collect()
+        };
+        // Each client thread: connect, write all frames (open loop),
+        // then timestamp every response against its connection start.
+        let t_cell = Instant::now();
+        let outcomes: Vec<Result<(Vec<f64>, usize)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|client| {
+                    let requests = build_requests(client);
+                    scope.spawn(move || -> Result<(Vec<f64>, usize)> {
+                        let io_err = |e| Error::io(addr.to_string(), e);
+                        let stream = TcpStream::connect(addr).map_err(io_err)?;
+                        let read_half = stream.try_clone().map_err(io_err)?;
+                        let mut reader = BufReader::new(read_half);
+                        let mut writer = BufWriter::new(stream);
+                        let t0 = Instant::now();
+                        for request in &requests {
+                            wire::write_frame(&mut writer, request).map_err(io_err)?;
+                        }
+                        writer.flush().map_err(io_err)?;
+                        let mut latencies = Vec::with_capacity(requests.len());
+                        let mut shed = 0usize;
+                        for _ in &requests {
+                            let payload = wire::read_frame(&mut reader)?.ok_or_else(|| {
+                                Error::Coordinator("daemon closed mid-latency-cell".into())
+                            })?;
+                            let elapsed = t0.elapsed().as_secs_f64();
+                            let doc = Json::parse(&payload)?;
+                            if doc.get("retry_after").is_some() {
+                                shed += 1;
+                            } else if doc.opt_bool("ok")? == Some(true) {
+                                latencies.push(elapsed);
+                            } else {
+                                return Err(Error::Config(format!(
+                                    "latency cell response failed: {payload}"
+                                )));
+                            }
+                        }
+                        Ok((latencies, shed))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| panic!("latency client panicked")))
+                .collect()
+        });
+        let wall_secs = t_cell.elapsed().as_secs_f64();
+        daemon.shutdown();
+        let summary = daemon.join()?;
+        let mut latencies = Vec::new();
+        let mut shed = 0usize;
+        for outcome in outcomes {
+            let (mut l, s) = outcome?;
+            latencies.append(&mut l);
+            shed += s;
+        }
+        if latencies.is_empty() {
+            return Err(Error::Config(format!(
+                "latency cell with {clients} clients completed no requests"
+            )));
+        }
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = percentile_sorted(&latencies, 50.0);
+        let p99 = percentile_sorted(&latencies, 99.0);
+        let mean = latencies.iter().sum::<f64>() / latencies.len() as f64;
+        let total = clients * per_client;
+        let rps = latencies.len() as f64 / wall_secs;
+        table.row(&[
+            clients.to_string(),
+            total.to_string(),
+            n.to_string(),
+            n_perms.to_string(),
+            format_secs(p50),
+            format_secs(p99),
+            format_secs(mean),
+            format!("{rps:.1}"),
+            shed.to_string(),
+        ]);
+        entries.push(Json::obj(vec![
+            ("clients", Json::num(clients as f64)),
+            ("requests_per_client", Json::num(per_client as f64)),
+            ("total_requests", Json::num(total as f64)),
+            ("completed", Json::num(latencies.len() as f64)),
+            ("shed", Json::num(shed as f64)),
+            ("backend", Json::str(backend.clone())),
+            ("method", Json::str(method.name())),
+            ("n", Json::num(n as f64)),
+            ("n_perms", Json::num(n_perms as f64)),
+            ("p50_ms", Json::num(p50 * 1e3)),
+            ("p99_ms", Json::num(p99 * 1e3)),
+            ("mean_ms", Json::num(mean * 1e3)),
+            ("wall_secs", Json::num(wall_secs)),
+            ("responses_per_sec", Json::num(rps)),
+            ("daemon_connections", Json::num(summary.connections as f64)),
+        ]));
+    }
+    let rendered = format!(
+        "daemon latency (open-loop, {per_client} pipelined requests/client):\n{}",
         table.render()
     );
     Ok((entries, rendered))
@@ -755,6 +945,82 @@ pub fn validate_bench_json(doc: &Json) -> Result<usize> {
             return Err(bench_field_err(&ctx, "a cold-started warm pass must miss at least once"));
         }
     }
+
+    // v5: the daemon latency section.  Required as an array (CI notices
+    // the axis silently disappearing); may be empty only when the sweep
+    // ran with the axis disabled (`latency_clients` empty).
+    let latency = doc
+        .get("latency")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bench_field_err("latency", "missing/not an array"))?;
+    for (i, e) in latency.iter().enumerate() {
+        let ctx = format!("latency {i}");
+        let backend = e.req_str("backend").map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if !registry.contains(backend) {
+            return Err(bench_field_err(&ctx, format!("unknown backend {backend:?}")));
+        }
+        let method = e.req_str("method").map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if Method::parse(method).is_none() {
+            return Err(bench_field_err(&ctx, format!("unknown method {method:?}")));
+        }
+        let req = |key: &str| -> Result<usize> {
+            e.req_usize(key).map_err(|err| bench_field_err(&ctx, err.to_string()))
+        };
+        let clients = req("clients")?;
+        let per_client = req("requests_per_client")?;
+        if clients == 0 || per_client == 0 {
+            return Err(bench_field_err(&ctx, "clients and requests_per_client must be >= 1"));
+        }
+        let total = req("total_requests")?;
+        if total != clients * per_client {
+            return Err(bench_field_err(
+                &ctx,
+                format!("total_requests {total} != clients x requests_per_client"),
+            ));
+        }
+        let completed = req("completed")?;
+        let shed = req("shed")?;
+        if completed == 0 {
+            return Err(bench_field_err(&ctx, "completed must be >= 1"));
+        }
+        if completed + shed != total {
+            return Err(bench_field_err(
+                &ctx,
+                format!("completed {completed} + shed {shed} != total_requests {total}"),
+            ));
+        }
+        if req("n")? == 0 || req("n_perms")? == 0 {
+            return Err(bench_field_err(&ctx, "n and n_perms must be >= 1"));
+        }
+        let num = |key: &str| -> Result<f64> {
+            let v = e
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bench_field_err(&ctx, format!("{key} missing/not a number")))?;
+            if !v.is_finite() {
+                return Err(bench_field_err(&ctx, format!("{key} must be finite, got {v}")));
+            }
+            Ok(v)
+        };
+        let p50 = num("p50_ms")?;
+        let p99 = num("p99_ms")?;
+        let mean = num("mean_ms")?;
+        if !(p50 > 0.0 && p50 <= p99) {
+            return Err(bench_field_err(
+                &ctx,
+                format!("percentiles must satisfy 0 < p50 <= p99 (p50 {p50}, p99 {p99})"),
+            ));
+        }
+        if mean <= 0.0 {
+            return Err(bench_field_err(&ctx, format!("mean_ms must be > 0, got {mean}")));
+        }
+        if num("wall_secs")? <= 0.0 {
+            return Err(bench_field_err(&ctx, "wall_secs must be > 0"));
+        }
+        if num("responses_per_sec")? <= 0.0 {
+            return Err(bench_field_err(&ctx, "responses_per_sec must be > 0"));
+        }
+    }
     Ok(entries.len())
 }
 
@@ -845,6 +1111,9 @@ mod tests {
             },
             quick: true,
             throughput_jobs: 2,
+            // Most sweep tests exercise the kernel/throughput axes; the
+            // latency axis (which spawns a daemon) opts in explicitly.
+            latency_clients: vec![],
             ..Default::default()
         }
     }
@@ -1129,5 +1398,61 @@ mod tests {
         assert!(validate_bench_json(&bad).is_err());
         // Not an object at all.
         assert!(validate_bench_json(&Json::Arr(vec![])).is_err());
+        // Missing latency section (v5 requires the key).
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.remove("latency");
+        }
+        assert!(validate_bench_json(&bad).is_err());
+    }
+
+    #[test]
+    fn latency_axis_measures_open_loop_percentiles() {
+        let mut g = tiny_grid();
+        g.backends = vec!["native-brute".into()];
+        g.latency_clients = vec![1, 2];
+        let out = run_sweep(&g).unwrap();
+        assert_eq!(validate_bench_json(&out.json).unwrap(), 1);
+        assert!(out.table.contains("daemon latency"), "{}", out.table);
+        let cells = out.json.req_arr("latency").unwrap();
+        assert_eq!(cells.len(), 2, "one cell per client count");
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.req_usize("clients").unwrap(), i + 1);
+            assert_eq!(c.req_usize("requests_per_client").unwrap(), 2);
+            let total = c.req_usize("total_requests").unwrap();
+            assert_eq!(total, (i + 1) * 2);
+            assert_eq!(
+                c.req_usize("completed").unwrap() + c.req_usize("shed").unwrap(),
+                total
+            );
+            let p50 = c.get("p50_ms").unwrap().as_f64().unwrap();
+            let p99 = c.get("p99_ms").unwrap().as_f64().unwrap();
+            assert!(p50 > 0.0 && p50 <= p99, "p50 {p50} p99 {p99}");
+            assert!(c.get("responses_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        }
+
+        // Disabled axis: the key survives, empty, and still validates.
+        g.latency_clients = vec![];
+        let out = run_sweep(&g).unwrap();
+        assert!(out.json.req_arr("latency").unwrap().is_empty());
+        assert!(!out.table.contains("daemon latency"));
+        assert_eq!(validate_bench_json(&out.json).unwrap(), 1);
+
+        // A zero client count is rejected, not clamped.
+        g.latency_clients = vec![0];
+        assert!(run_sweep(&g).is_err());
+
+        // Validator: inconsistent percentiles fail.
+        g.latency_clients = vec![1];
+        let good = run_sweep(&g).unwrap().json;
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut cells = m.get("latency").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(c) = &mut cells[0] {
+                c.insert("p50_ms".into(), Json::num(1e9));
+            }
+            m.insert("latency".into(), Json::Arr(cells));
+        }
+        assert!(validate_bench_json(&bad).is_err(), "p50 > p99 accepted");
     }
 }

@@ -9,7 +9,10 @@
 //!                    selects permanova|anosim|permdisp|pairwise;
 //!                    --repeat N runs warm through the dataset cache
 //!   serve            JSONL job batch through the shared-dataset service
-//!                    (one DatasetCache + one scheduler pool per batch)
+//!                    (one DatasetCache + one scheduler pool per batch);
+//!                    --listen ADDR runs the long-lived TCP daemon instead
+//!   client           speak to a running daemon: pipelined --jobs FILE,
+//!                    --stats, --shutdown over length-prefixed JSONL
 //!   bench            sweep backends × methods over n/perm grids ->
 //!                    BENCH_PERMANOVA.json (incl. cold/warm throughput)
 //!   backends         list registered backends + capabilities
@@ -24,9 +27,9 @@
 use std::collections::BTreeMap;
 
 use crate::config::{DataSource, RunConfig, TomlDoc};
-use crate::coordinator::run_config;
 use crate::error::{Error, Result};
 use crate::permanova::{Method, SwAlgorithm};
+use crate::request::AnalysisRequest;
 use crate::report::{bar_chart, Table};
 use crate::simulator::{
     fig1_rows, paper_a2_reference, render_fig1, simulate_stream, Mi300a, NodeTopology,
@@ -120,6 +123,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
     match args.command.as_str() {
         "run" => cmd_run(args),
         "serve" => cmd_serve(args),
+        "client" => cmd_client(args),
         "bench" => cmd_bench(args),
         "backends" | "--list-backends" => cmd_backends(args),
         "pipeline" => cmd_pipeline(args),
@@ -138,8 +142,9 @@ pub fn usage() -> String {
     let mut s = String::from("permanova-apu — PERMANOVA on APU-class hardware\n\nCommands:\n");
     for (cmd, desc) in [
         ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --data-seed D --data-tol T --repeat N --json out.json --config file.toml | --pdm file --labels file (file input is validated on load); legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
-        ("serve", "JSONL job batch through the shared-dataset service: --jobs FILE [--out FILE] [--cache-capacity N] [--threads T]; --check FILE validates a response document"),
-        ("bench", "backend x method sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --methods permanova,anosim --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --throughput-jobs J --out FILE; --check FILE validates an existing document"),
+        ("serve", "JSONL job batch through the shared-dataset service: --jobs FILE [--out FILE] [--cache-capacity N] [--threads T]; --listen HOST:PORT runs the TCP daemon instead (adds --queue-depth N; SIGTERM/ctrl-C drains); --check FILE validates a response document"),
+        ("client", "speak to a running daemon: --addr HOST:PORT with any of --jobs FILE (pipelined v1/legacy requests), --stats, --shutdown; prints one JSONL response per request"),
+        ("bench", "backend x method sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --methods permanova,anosim --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --throughput-jobs J --latency-clients 1,4 (0 disables) --out FILE; --check FILE validates an existing document"),
         ("backends", "list registered backends with their capabilities (alias: --list-backends)"),
         ("pipeline", "end-to-end: community -> UniFrac -> PERMANOVA: --taxa --samples --groups --n-perms --metric unweighted|weighted --anosim"),
         ("fig1", "regenerate Figure 1: --n-dims --n-perms (defaults: the paper's 25145/3999)"),
@@ -283,7 +288,7 @@ fn cmd_run(args: &Args) -> Result<String> {
         }
         return cmd_run_repeated(&cfg, repeat);
     }
-    let r = run_config(&cfg)?;
+    let r = AnalysisRequest::new(&cfg).run()?;
     // The report carries the kernel the backend actually evaluated
     // (`Caps::kernel`), so rendering needs no config-side label.
     let mut out = r.render();
@@ -359,7 +364,6 @@ fn cmd_run(args: &Args) -> Result<String> {
 /// cold-vs-warm wall clocks tabled per iteration.
 fn cmd_run_repeated(cfg: &RunConfig, repeat: usize) -> Result<String> {
     use crate::backend::shard::with_shared_pool;
-    use crate::coordinator::run_config_cached;
     use crate::report::AnalysisReport;
     use crate::service::DatasetCache;
     use std::time::Instant;
@@ -370,7 +374,7 @@ fn cmd_run_repeated(cfg: &RunConfig, repeat: usize) -> Result<String> {
     with_shared_pool(cfg.threads, |_pool| -> Result<()> {
         for i in 1..=repeat {
             let t0 = Instant::now();
-            let (r, hit) = run_config_cached(cfg, &cache)?;
+            let (r, hit) = AnalysisRequest::new(cfg).via_cache(&cache).run_traced()?;
             t.row(&[
                 format!("iter-{i}"),
                 if hit { "hit" } else { "miss" }.to_string(),
@@ -398,7 +402,8 @@ fn cmd_run_repeated(cfg: &RunConfig, repeat: usize) -> Result<String> {
 }
 
 /// `serve`: execute a JSONL job batch through the shared-dataset service
-/// layer, or (`--check`) validate a response document.
+/// layer, run the long-lived TCP daemon (`--listen`), or (`--check`)
+/// validate a response document.
 fn cmd_serve(args: &Args) -> Result<String> {
     use crate::service::{parse_jobs, run_jobs, validate_responses, DatasetCache};
 
@@ -406,6 +411,10 @@ fn cmd_serve(args: &Args) -> Result<String> {
         let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
         let (ok, failed) = validate_responses(&text)?;
         return Ok(format!("responses ok: {path} ({ok} ok, {failed} failed)\n"));
+    }
+
+    if let Some(addr) = args.str_flag("listen") {
+        return cmd_serve_daemon(args, addr);
     }
 
     let jobs_path = args
@@ -432,6 +441,74 @@ fn cmd_serve(args: &Args) -> Result<String> {
         // is available by re-running with --out.
         None => Ok(batch.to_jsonl()),
     }
+}
+
+/// `serve --listen`: the long-lived TCP daemon.  Blocks until SIGTERM,
+/// ctrl-C or a client `shutdown` request drains it, then reports the
+/// final accounting.
+fn cmd_serve_daemon(args: &Args, addr: &str) -> Result<String> {
+    use crate::service::{install_signal_handlers, Daemon, DaemonConfig};
+
+    let cfg = DaemonConfig {
+        addr: addr.to_string(),
+        workers: args.usize_flag("threads", 0)?,
+        cache_capacity: args.usize_flag("cache-capacity", 8)?,
+        queue_depth: args.usize_flag("queue-depth", 64)?,
+        ..DaemonConfig::default()
+    };
+    install_signal_handlers();
+    let daemon = Daemon::spawn(cfg)?;
+    // Announce the bound address immediately (port 0 lets the OS pick);
+    // everything after this line blocks until drain completes.
+    println!("listening on {} (SIGTERM, ctrl-C or a shutdown request drains)", daemon.addr());
+    let summary = daemon.join()?;
+    Ok(format!("daemon drained\n{}", summary.render()))
+}
+
+/// `client`: speak the versioned envelope protocol to a running daemon.
+/// Requests (any mix of a pipelined `--jobs` file, `--stats` and
+/// `--shutdown`) go out in one connection; responses print as JSONL in
+/// request order.
+fn cmd_client(args: &Args) -> Result<String> {
+    use crate::jsonio::Json;
+    use crate::service::{client_exchange, envelope_v1};
+
+    let addr = args
+        .str_flag("addr")
+        .ok_or_else(|| Error::Config("client needs --addr HOST:PORT".into()))?;
+    let addr: std::net::SocketAddr = addr
+        .parse()
+        .map_err(|_| Error::Config(format!("--addr {addr:?} is not an ip:port address")))?;
+    let mut requests: Vec<String> = Vec::new();
+    if let Some(path) = args.str_flag("jobs") {
+        // Job lines go out as-is: v1 envelopes pass through, legacy bare
+        // jobs reach the daemon as implicit v0 (its responses carry the
+        // deprecation note).
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        for line in text.lines().map(str::trim).filter(|l| !l.is_empty()) {
+            requests.push(line.to_string());
+        }
+    }
+    if args.bool_flag("stats")? {
+        let payload = Json::obj(vec![("op", Json::str("stats"))]);
+        requests.push(envelope_v1(Some("stats"), payload).to_string());
+    }
+    if args.bool_flag("shutdown")? {
+        let payload = Json::obj(vec![("op", Json::str("shutdown"))]);
+        requests.push(envelope_v1(Some("shutdown"), payload).to_string());
+    }
+    if requests.is_empty() {
+        return Err(Error::Config(
+            "client needs at least one of --jobs FILE, --stats, --shutdown".into(),
+        ));
+    }
+    let responses = client_exchange(&addr, &requests)?;
+    let mut out = String::new();
+    for r in &responses {
+        out.push_str(&r.to_string());
+        out.push('\n');
+    }
+    Ok(out)
 }
 
 /// Parse a `--flag a,b,c` comma-separated usize list.
@@ -502,6 +579,12 @@ fn cmd_bench(args: &Args) -> Result<String> {
     grid.base.shard_size = args.usize_flag("shard-size", grid.base.shard_size)?;
     grid.base.perm_block = args.usize_flag("perm-block", grid.base.perm_block)?;
     grid.throughput_jobs = args.usize_flag("throughput-jobs", grid.throughput_jobs)?;
+    if let Some(v) = args.str_flag("latency-clients") {
+        // `--latency-clients 0` disables the daemon latency axis (mirrors
+        // `--throughput-jobs 0`); any other list is client counts.
+        grid.latency_clients =
+            if v.trim() == "0" { Vec::new() } else { parse_usize_csv("latency-clients", v)? };
+    }
     if args.has_flag("smt-oversubscribe") {
         grid.base.smt_oversubscribe = args.bool_flag("smt-oversubscribe")?;
     }
@@ -514,7 +597,6 @@ fn cmd_bench(args: &Args) -> Result<String> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<String> {
-    use crate::coordinator::run_on_backend;
     use crate::unifrac::{generate, unweighted_unifrac, weighted_unifrac, SynthParams};
 
     let mut cfg = config_from_args(args)?;
@@ -537,7 +619,7 @@ fn cmd_pipeline(args: &Args) -> Result<String> {
         "weighted" => weighted_unifrac(&ds.tree, &ds.table, cfg.threads)?,
         other => return Err(Error::Config(format!("unknown --metric {other:?}"))),
     };
-    let r = run_on_backend(&cfg, &mat, &ds.grouping)?;
+    let r = AnalysisRequest::new(&cfg).with_data(&mat, &ds.grouping).run()?;
 
     let mut out = format!("UniFrac ({metric}) -> PERMANOVA pipeline\n");
     out.push_str(&r.render());
@@ -548,7 +630,7 @@ fn cmd_pipeline(args: &Args) -> Result<String> {
         // `--method anosim` exactly (the conformance suite pins that the
         // engine path equals the legacy oracle bit-for-bit).
         let cross = RunConfig { method: Method::Anosim, ..cfg.clone() };
-        let a = run_on_backend(&cross, &mat, &ds.grouping)?;
+        let a = AnalysisRequest::new(&cross).with_data(&mat, &ds.grouping).run()?;
         out.push_str(&format!(
             "ANOSIM: R = {:.4}, p = {:.4} (cross-check statistic, backend={})\n",
             a.f_obs, a.p_value, a.backend
@@ -735,9 +817,10 @@ mod tests {
     fn version_and_help() {
         assert!(dispatch(&args(&["version"])).unwrap().contains(crate::VERSION));
         let help = dispatch(&args(&["help"])).unwrap();
-        for cmd in
-            ["run", "serve", "bench", "backends", "fig1", "stream", "simulate", "artifacts-check"]
-        {
+        for cmd in [
+            "run", "serve", "client", "bench", "backends", "fig1", "stream", "simulate",
+            "artifacts-check",
+        ] {
             assert!(help.contains(cmd));
         }
         assert!(help.contains("native-batch"), "registry names surface in help: {help}");
@@ -1111,6 +1194,59 @@ mod tests {
         let bad = dir.join("bad.jsonl");
         std::fs::write(&bad, "{\"id\": \"x\"}\n").unwrap();
         assert!(dispatch(&args(&["serve", "--check", bad.to_str().unwrap()])).is_err());
+    }
+
+    #[test]
+    fn client_talks_to_an_in_process_daemon() {
+        use crate::service::{Daemon, DaemonConfig};
+        let daemon = Daemon::spawn(DaemonConfig {
+            workers: 1,
+            cache_capacity: 2,
+            queue_depth: 4,
+            ..DaemonConfig::default()
+        })
+        .unwrap();
+        let addr = daemon.addr().to_string();
+
+        let dir = std::env::temp_dir().join("permanova_apu_cli_client_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.jsonl");
+        std::fs::write(
+            &jobs,
+            concat!(
+                r#"{"v": 1, "id": "j1", "request": {"n_perms": 19, "seed": 3, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 7}}}"#,
+                "\n",
+                r#"{"id": "old", "n_perms": 19, "seed": 3, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 7}}"#,
+                "\n",
+            ),
+        )
+        .unwrap();
+
+        let out = dispatch(&args(&[
+            "client", "--addr", &addr, "--jobs", jobs.to_str().unwrap(), "--stats",
+        ]))
+        .unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 3, "{out}");
+        let first = crate::jsonio::Json::parse(lines[0]).unwrap();
+        assert_eq!(first.req_str("id").unwrap(), "j1");
+        assert_eq!(first.opt_bool("ok").unwrap(), Some(true), "{out}");
+        let second = crate::jsonio::Json::parse(lines[1]).unwrap();
+        assert_eq!(second.req_str("id").unwrap(), "old");
+        assert!(second.get("note").is_some(), "legacy v0 carries the deprecation note");
+        let stats = crate::jsonio::Json::parse(lines[2]).unwrap();
+        assert_eq!(stats.req_str("id").unwrap(), "stats");
+        assert!(stats.get("stats").unwrap().get("cache").is_some(), "{out}");
+
+        let bye = dispatch(&args(&["client", "--addr", &addr, "--shutdown"])).unwrap();
+        assert!(bye.contains("\"draining\":true"), "{bye}");
+        let summary = daemon.join().unwrap();
+        assert_eq!(summary.completed, 2);
+
+        // Errors: no --addr, no request flags, unparseable address.
+        assert!(dispatch(&args(&["client", "--stats"])).is_err());
+        assert!(dispatch(&args(&["client", "--addr", &addr])).is_err());
+        assert!(dispatch(&args(&["client", "--addr", "nonsense", "--stats"])).is_err());
     }
 
     #[test]

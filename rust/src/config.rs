@@ -351,6 +351,17 @@ impl RunConfig {
     ///  "seed": 7, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4}}
     /// ```
     pub fn from_json(doc: &crate::jsonio::Json) -> Result<RunConfig> {
+        Self::from_json_at(doc, "")
+    }
+
+    /// [`from_json`](Self::from_json) with a field-path prefix: every
+    /// error names the exact offending field as seen from the document
+    /// root (`request.data.n_dims`, not a bare `n_dims`), which is what
+    /// the v1 request envelope parser
+    /// ([`crate::service::parse_envelope`]) reports for the job payload
+    /// nested under its `"request"` key.  The empty prefix is the legacy
+    /// v0 top-level job shape.
+    pub fn from_json_at(doc: &crate::jsonio::Json, prefix: &str) -> Result<RunConfig> {
         use crate::jsonio::Json;
         // Unknown keys are rejected, not ignored: a misspelled or
         // misplaced field (e.g. top-level "data_seed" instead of
@@ -365,96 +376,105 @@ impl RunConfig {
             "tol",
         ];
         let Json::Obj(map) = doc else {
-            return Err(Error::Config("job request must be a JSON object".into()));
+            return Err(Error::Config(if prefix.is_empty() {
+                "job request must be a JSON object".into()
+            } else {
+                format!("field {prefix:?} must be a JSON object")
+            }));
         };
         for key in map.keys() {
             if !TOP_KEYS.contains(&key.as_str()) {
                 return Err(Error::Config(format!(
-                    "unknown job field {key:?} (known: {})",
+                    "unknown field {:?} (known: {})",
+                    field_path(prefix, key),
                     TOP_KEYS.join(", ")
                 )));
             }
         }
-        if let Some(Json::Obj(dm)) = doc.get("data") {
-            for key in dm.keys() {
-                if !DATA_KEYS.contains(&key.as_str()) {
-                    return Err(Error::Config(format!(
-                        "unknown data field {key:?} (known: {})",
-                        DATA_KEYS.join(", ")
-                    )));
-                }
-            }
-        }
+        let top = FieldsAt { doc, path: prefix.to_string() };
+        let data_path = field_path(prefix, "data");
         let d = RunConfig::default();
-        let data = match doc.get("data") {
-            None => d.data.clone(),
-            Some(o) if matches!(o, Json::Obj(_)) => {
-                let source = o.opt_str("source")?.unwrap_or("synthetic").to_string();
-                match source.as_str() {
-                    "synthetic" => DataSource::Synthetic {
-                        n_dims: o.opt_usize("n_dims")?.unwrap_or(256),
-                        n_groups: o.opt_usize("n_groups")?.unwrap_or(8),
-                    },
-                    "unifrac" => DataSource::SyntheticUnifrac {
-                        n_taxa: o.opt_usize("n_taxa")?.unwrap_or(256),
-                        n_samples: o.opt_usize("n_samples")?.unwrap_or(64),
-                        n_groups: o.opt_usize("n_groups")?.unwrap_or(4),
-                    },
-                    "pdm" => DataSource::Pdm {
-                        path: o.opt_str("path")?.unwrap_or("").to_string(),
-                        labels_path: o.opt_str("labels")?.unwrap_or("").to_string(),
-                    },
-                    "tsv" => DataSource::Tsv {
-                        path: o.opt_str("path")?.unwrap_or("").to_string(),
-                        labels_path: o.opt_str("labels")?.unwrap_or("").to_string(),
-                    },
-                    other => {
-                        return Err(Error::Config(format!("unknown data.source {other:?}")))
+        let (data, data_seed, data_tol) = match doc.get("data") {
+            None => (d.data.clone(), None, d.data_tol),
+            Some(o @ Json::Obj(dm)) => {
+                for key in dm.keys() {
+                    if !DATA_KEYS.contains(&key.as_str()) {
+                        return Err(Error::Config(format!(
+                            "unknown field {:?} (known: {})",
+                            field_path(&data_path, key),
+                            DATA_KEYS.join(", ")
+                        )));
                     }
                 }
+                let f = FieldsAt { doc: o, path: data_path.clone() };
+                let source = f.opt_str("source")?.unwrap_or("synthetic").to_string();
+                let data = match source.as_str() {
+                    "synthetic" => DataSource::Synthetic {
+                        n_dims: f.opt_usize("n_dims")?.unwrap_or(256),
+                        n_groups: f.opt_usize("n_groups")?.unwrap_or(8),
+                    },
+                    "unifrac" => DataSource::SyntheticUnifrac {
+                        n_taxa: f.opt_usize("n_taxa")?.unwrap_or(256),
+                        n_samples: f.opt_usize("n_samples")?.unwrap_or(64),
+                        n_groups: f.opt_usize("n_groups")?.unwrap_or(4),
+                    },
+                    "pdm" => DataSource::Pdm {
+                        path: f.opt_str("path")?.unwrap_or("").to_string(),
+                        labels_path: f.opt_str("labels")?.unwrap_or("").to_string(),
+                    },
+                    "tsv" => DataSource::Tsv {
+                        path: f.opt_str("path")?.unwrap_or("").to_string(),
+                        labels_path: f.opt_str("labels")?.unwrap_or("").to_string(),
+                    },
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown {} {other:?}",
+                            field_path(&data_path, "source")
+                        )))
+                    }
+                };
+                let data_seed = f.opt_u64("seed")?;
+                let data_tol = match o.get("tol") {
+                    None => d.data_tol,
+                    Some(v) => v.as_f64().ok_or_else(|| f.bad("tol", "a number"))? as f32,
+                };
+                (data, data_seed, data_tol)
             }
-            Some(_) => return Err(Error::Config("data must be a JSON object".into())),
+            Some(_) => {
+                return Err(Error::Config(format!(
+                    "field {data_path:?} must be a JSON object"
+                )))
+            }
         };
-        let data_seed = match doc.get("data") {
-            Some(o) if matches!(o, Json::Obj(_)) => o.opt_u64("seed")?,
-            _ => None,
-        };
-        let data_tol = match doc.get("data") {
-            Some(o) if matches!(o, Json::Obj(_)) => match o.get("tol") {
-                None => d.data_tol,
-                Some(v) => v.as_f64().ok_or_else(|| {
-                    Error::Config("data.tol must be a number".into())
-                })? as f32,
-            },
-            _ => d.data_tol,
-        };
-        let method = match doc.opt_str("method")? {
+        let method = match top.opt_str("method")? {
             None => d.method,
-            Some(s) => Method::parse(s)
-                .ok_or_else(|| Error::Config(format!("unknown method {s:?}")))?,
+            Some(s) => Method::parse(s).ok_or_else(|| {
+                Error::Config(format!("field {:?}: unknown method {s:?}", top.name("method")))
+            })?,
         };
-        let algo = match doc.opt_str("algo")? {
+        let algo = match top.opt_str("algo")? {
             None => d.algo,
-            Some(s) => SwAlgorithm::parse(s)
-                .ok_or_else(|| Error::Config(format!("unknown algo {s:?}")))?,
+            Some(s) => SwAlgorithm::parse(s).ok_or_else(|| {
+                Error::Config(format!("field {:?}: unknown algo {s:?}", top.name("algo")))
+            })?,
         };
         let cfg = RunConfig {
             data,
-            n_perms: doc.opt_usize("n_perms")?.unwrap_or(d.n_perms),
-            seed: doc.opt_u64("seed")?.unwrap_or(d.seed),
+            n_perms: top.opt_usize("n_perms")?.unwrap_or(d.n_perms),
+            seed: top.opt_u64("seed")?.unwrap_or(d.seed),
             data_seed,
             method,
             algo,
-            threads: doc.opt_usize("threads")?.unwrap_or(d.threads),
-            backend: doc.opt_str("backend")?.unwrap_or(&d.backend).to_string(),
-            artifacts_dir: doc.opt_str("artifacts_dir")?.unwrap_or(&d.artifacts_dir).to_string(),
-            xla_kernel: doc.opt_str("xla_kernel")?.unwrap_or(&d.xla_kernel).to_string(),
-            smt: doc.opt_bool("smt")?.unwrap_or(d.smt),
-            shard_size: doc.opt_usize("shard_size")?.unwrap_or(d.shard_size),
-            smt_oversubscribe: doc
+            threads: top.opt_usize("threads")?.unwrap_or(d.threads),
+            backend: top.opt_str("backend")?.unwrap_or(&d.backend).to_string(),
+            artifacts_dir: top.opt_str("artifacts_dir")?.unwrap_or(&d.artifacts_dir).to_string(),
+            xla_kernel: top.opt_str("xla_kernel")?.unwrap_or(&d.xla_kernel).to_string(),
+            smt: top.opt_bool("smt")?.unwrap_or(d.smt),
+            shard_size: top.opt_usize("shard_size")?.unwrap_or(d.shard_size),
+            smt_oversubscribe: top
                 .opt_bool("smt_oversubscribe")?
                 .unwrap_or(d.smt_oversubscribe),
-            perm_block: doc.opt_usize("perm_block")?.unwrap_or(d.perm_block),
+            perm_block: top.opt_usize("perm_block")?.unwrap_or(d.perm_block),
             data_tol,
         };
         cfg.validate()?;
@@ -514,6 +534,76 @@ impl RunConfig {
             }
         }
         Ok(())
+    }
+}
+
+/// Join a field-path prefix with a field name: `("request", "data")` →
+/// `"request.data"`.  The empty prefix names the field alone — the legacy
+/// v0 top-level job shape.
+fn field_path(prefix: &str, field: &str) -> String {
+    if prefix.is_empty() {
+        field.to_string()
+    } else {
+        format!("{prefix}.{field}")
+    }
+}
+
+/// Typed optional-field accessors that name the **full field path** in
+/// errors: `Ok(None)` when the key is absent, `Err` naming
+/// `prefix.field` when it is present with the wrong type — so a mistyped
+/// field nested inside a request envelope fails loudly with its exact
+/// location instead of a bare key name.
+struct FieldsAt<'a> {
+    doc: &'a crate::jsonio::Json,
+    path: String,
+}
+
+impl<'a> FieldsAt<'a> {
+    fn name(&self, field: &str) -> String {
+        field_path(&self.path, field)
+    }
+
+    fn bad(&self, field: &str, want: &str) -> Error {
+        Error::Config(format!("field {:?} must be {want}", self.name(field)))
+    }
+
+    fn opt_str(&self, field: &str) -> Result<Option<&'a str>> {
+        match self.doc.get(field) {
+            None => Ok(None),
+            Some(v) => v.as_str().map(Some).ok_or_else(|| self.bad(field, "a string")),
+        }
+    }
+
+    fn opt_usize(&self, field: &str) -> Result<Option<usize>> {
+        match self.doc.get(field) {
+            None => Ok(None),
+            Some(v) => v
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| self.bad(field, "a non-negative integer")),
+        }
+    }
+
+    /// u64 as a JSON number (< 2^53) or a decimal string (full range).
+    fn opt_u64(&self, field: &str) -> Result<Option<u64>> {
+        match self.doc.get(field) {
+            None => Ok(None),
+            Some(crate::jsonio::Json::Str(s)) => s
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| self.bad(field, "a u64 (number or decimal string)")),
+            Some(v) => v
+                .as_u64()
+                .map(Some)
+                .ok_or_else(|| self.bad(field, "a u64 (number or decimal string)")),
+        }
+    }
+
+    fn opt_bool(&self, field: &str) -> Result<Option<bool>> {
+        match self.doc.get(field) {
+            None => Ok(None),
+            Some(v) => v.as_bool().map(Some).ok_or_else(|| self.bad(field, "a boolean")),
+        }
     }
 }
 
@@ -675,6 +765,33 @@ mod tests {
             let doc = Json::parse(bad).unwrap();
             assert!(RunConfig::from_json(&doc).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn from_json_at_names_full_field_paths() {
+        use crate::jsonio::Json;
+        let at = |text: &str| {
+            RunConfig::from_json_at(&Json::parse(text).unwrap(), "request")
+                .unwrap_err()
+                .to_string()
+        };
+        assert!(at(r#"{"n_perm": 9}"#).contains("\"request.n_perm\""));
+        assert!(at(r#"{"n_perms": "many"}"#).contains("\"request.n_perms\""));
+        assert!(at(r#"{"data": {"n_dim": 48}}"#).contains("\"request.data.n_dim\""));
+        assert!(at(r#"{"data": {"tol": "loose"}}"#).contains("\"request.data.tol\""));
+        assert!(at(r#"{"data": []}"#).contains("\"request.data\""));
+        assert!(at(r#"{"data": {"source": "hdf5"}}"#).contains("request.data.source"));
+        assert!(at(r#"{"method": 7}"#).contains("\"request.method\""));
+        // The legacy prefixless spelling names bare dotted fields.
+        let e = RunConfig::from_json(&Json::parse(r#"{"data": {"n_dim": 48}}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"data.n_dim\""), "{e}");
+        // Non-object payloads under a prefix name the prefix itself.
+        let e = RunConfig::from_json_at(&Json::parse("[1]").unwrap(), "request")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"request\""), "{e}");
     }
 
     #[test]

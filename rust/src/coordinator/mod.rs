@@ -1,11 +1,12 @@
 //! The L3 coordinator: devices, heterogeneous scheduling, and the
 //! config-driven entry.
 //!
-//! Single-substrate runs flow through the unified backend engine
-//! ([`crate::backend::execute`]); this module keeps the heterogeneous path
-//! (mixing native threads, XLA sessions and simulated devices inside one
-//! run via [`run_coordinated`]) plus data loading.  The CLI and examples
-//! drive everything through [`run_config`].
+//! Single-substrate runs flow through the unified front door
+//! ([`crate::request::AnalysisRequest`]); this module keeps the
+//! heterogeneous path (mixing native threads, XLA sessions and simulated
+//! devices inside one run via [`run_coordinated`]) plus data loading.
+//! [`run_config`] and friends survive as deprecated facades over the
+//! builder.
 
 mod device;
 mod scheduler;
@@ -90,27 +91,31 @@ fn read_labels(path: &str, n: usize) -> Result<Grouping> {
     Ok(grouping)
 }
 
+/// Deprecated facade: prefer
+/// [`AnalysisRequest::new(cfg).run()`](crate::request::AnalysisRequest).
+///
 /// Run the configured permutation test (`cfg.method`), resolving the
 /// backend through the name-keyed registry.
 pub fn run_config(cfg: &RunConfig) -> Result<AnalysisReport> {
-    cfg.validate()?;
-    // File sources are validated inside `load_data` (against
-    // `cfg.data_tol`); synthetic sources are valid by construction.
-    let (mat, grouping) = load_data(cfg)?;
-    run_on_backend(cfg, &mat, &grouping)
+    crate::request::AnalysisRequest::new(cfg).run()
 }
 
-/// Run on pre-loaded data (examples and tests reuse this).  This is a thin
-/// alias of [`crate::backend::execute`] — every configured run goes
-/// through the unified `Backend` trait.
+/// Deprecated facade: prefer
+/// [`AnalysisRequest::new(cfg).with_data(mat, grouping).run()`](crate::request::AnalysisRequest).
+///
+/// Run on pre-loaded data (examples and tests reuse this) — every
+/// configured run goes through the unified `Backend` trait.
 pub fn run_on_backend(
     cfg: &RunConfig,
     mat: &DistanceMatrix,
     grouping: &Grouping,
 ) -> Result<AnalysisReport> {
-    crate::backend::execute(cfg, mat, grouping)
+    crate::request::AnalysisRequest::new(cfg).with_data(mat, grouping).run()
 }
 
+/// Deprecated facade: prefer
+/// [`AnalysisRequest::new(cfg).via_cache(cache).run_traced()`](crate::request::AnalysisRequest).
+///
 /// [`run_config`] through a [`DatasetCache`]: the dataset (and its
 /// per-method statistic prelude) is loaded once and reused by every later
 /// job with the same data key.  Returns the report plus whether the lookup
@@ -123,18 +128,7 @@ pub fn run_config_cached(
     cfg: &RunConfig,
     cache: &crate::service::DatasetCache,
 ) -> Result<(AnalysisReport, bool)> {
-    use crate::permanova::Method;
-    cfg.validate()?;
-    let (ds, hit) = cache.get_or_load(cfg)?;
-    let report = if cfg.method == Method::PairwisePermanova {
-        // Pairwise prepares one prelude per group-pair sub-problem below
-        // the engine seam; only the dataset load itself is cacheable.
-        crate::backend::execute(cfg, &ds.mat, &ds.grouping)?
-    } else {
-        let kernel = ds.kernel(cfg.method)?;
-        crate::backend::execute_prepared(cfg, &ds.mat, &ds.grouping, Some(&kernel))?
-    };
-    Ok((report, hit))
+    crate::request::AnalysisRequest::new(cfg).via_cache(cache).run_traced()
 }
 
 #[cfg(test)]

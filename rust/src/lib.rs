@@ -50,6 +50,7 @@ pub mod error;
 pub mod jsonio;
 pub mod permanova;
 pub mod report;
+pub mod request;
 pub mod rng;
 pub mod runtime;
 pub mod service;
@@ -58,6 +59,7 @@ pub mod stream;
 pub mod unifrac;
 
 pub use error::{Error, Result};
+pub use request::AnalysisRequest;
 
 /// Crate version, surfaced by the CLI and embedded in run reports.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

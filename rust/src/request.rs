@@ -1,0 +1,225 @@
+//! The one front door to the execution engine: [`AnalysisRequest`].
+//!
+//! Four overlapping entrypoints grew up around the engine —
+//! `backend::execute`, `backend::execute_prepared`,
+//! `coordinator::run_config` and `coordinator::run_on_backend`, plus the
+//! cache-threading `coordinator::run_config_cached` — differing only in
+//! *who supplies the data* and *whether a statistic prelude rides along*.
+//! [`AnalysisRequest`] collapses them into one builder that owns exactly
+//! those two choices:
+//!
+//! ```no_run
+//! use permanova_apu::config::RunConfig;
+//! use permanova_apu::request::AnalysisRequest;
+//! use permanova_apu::service::DatasetCache;
+//!
+//! let cfg = RunConfig::default();
+//! // Config-sourced data (the CLI `run` path):
+//! let report = AnalysisRequest::new(&cfg).run().unwrap();
+//! // Cached data + memoized preludes (the service path), with hit flag:
+//! let cache = DatasetCache::new(8);
+//! let (report, hit) = AnalysisRequest::new(&cfg).via_cache(&cache).run_traced().unwrap();
+//! # let _ = (report, hit);
+//! ```
+//!
+//! Pre-loaded data (`with_data`) and pre-prepared kernels
+//! (`with_prelude`) slot into the same builder; `via_cache` is exclusive
+//! with both, because the cache *is* a data source and prelude manager.
+//!
+//! Validation contract (inherited from the old entrypoints, now stated
+//! once): a request that **sources its own data** (config-loaded or
+//! cached) validates the full `RunConfig` first; a request over
+//! caller-supplied data trusts the caller's shapes and only enforces the
+//! engine-seam invariants (matching `n`, positive `n_perms`, prelude/
+//! problem agreement).  The old names survive as thin facades over this
+//! builder so existing code compiles unchanged.
+
+use crate::config::RunConfig;
+use crate::dmat::DistanceMatrix;
+use crate::error::{Error, Result};
+use crate::permanova::{Grouping, Method, StatKernel};
+use crate::report::AnalysisReport;
+use crate::service::DatasetCache;
+
+/// A fully-described analysis: configuration plus data-source plus
+/// optional prepared-kernel handoff.  Build with [`new`](Self::new),
+/// refine, then [`run`](Self::run) or [`run_traced`](Self::run_traced).
+#[must_use = "an AnalysisRequest does nothing until run() or run_traced()"]
+pub struct AnalysisRequest<'a> {
+    cfg: &'a RunConfig,
+    data: Option<(&'a DistanceMatrix, &'a Grouping)>,
+    prelude: Option<&'a StatKernel>,
+    cache: Option<&'a DatasetCache>,
+}
+
+impl<'a> AnalysisRequest<'a> {
+    /// A request that loads the data `cfg.data` describes (the default).
+    pub fn new(cfg: &'a RunConfig) -> AnalysisRequest<'a> {
+        AnalysisRequest { cfg, data: None, prelude: None, cache: None }
+    }
+
+    /// Run over caller-supplied data instead of loading from the config's
+    /// data source.
+    pub fn with_data(
+        mut self,
+        mat: &'a DistanceMatrix,
+        grouping: &'a Grouping,
+    ) -> AnalysisRequest<'a> {
+        self.data = Some((mat, grouping));
+        self
+    }
+
+    /// Hand the engine a pre-prepared [`StatKernel`] (must match this
+    /// exact problem; checked).  Mutually exclusive with
+    /// [`via_cache`](Self::via_cache), which memoizes preludes itself.
+    pub fn with_prelude(mut self, kernel: &'a StatKernel) -> AnalysisRequest<'a> {
+        self.prelude = Some(kernel);
+        self
+    }
+
+    /// Source data (and memoized per-method preludes) through a
+    /// [`DatasetCache`] — the service path.  Mutually exclusive with
+    /// [`with_data`](Self::with_data) and
+    /// [`with_prelude`](Self::with_prelude).
+    pub fn via_cache(mut self, cache: &'a DatasetCache) -> AnalysisRequest<'a> {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Execute, discarding cache provenance.
+    pub fn run(self) -> Result<AnalysisReport> {
+        self.run_traced().map(|(report, _)| report)
+    }
+
+    /// Execute; the flag reports whether a cache lookup **hit** (always
+    /// `false` off the cache path).  Results are bitwise-identical across
+    /// data-source modes for the same (dataset, method, backend, seed) —
+    /// the cache and prelude seams only skip recomputation of pure
+    /// functions of the dataset.
+    pub fn run_traced(self) -> Result<(AnalysisReport, bool)> {
+        match (self.cache, self.data) {
+            (Some(_), Some(_)) => Err(Error::InvalidInput(
+                "via_cache sources its own data; with_data conflicts".into(),
+            )),
+            (Some(_), None) if self.prelude.is_some() => Err(Error::InvalidInput(
+                "via_cache memoizes preludes; with_prelude conflicts".into(),
+            )),
+            (Some(cache), None) => {
+                self.cfg.validate()?;
+                let (ds, hit) = cache.get_or_load(self.cfg)?;
+                let report = if self.cfg.method == Method::PairwisePermanova {
+                    // Pairwise prepares one prelude per group-pair
+                    // sub-problem below the engine seam; only the dataset
+                    // load itself is cacheable.
+                    crate::backend::execute_prepared(self.cfg, &ds.mat, &ds.grouping, None)?
+                } else {
+                    let kernel = ds.kernel(self.cfg.method)?;
+                    crate::backend::execute_prepared(
+                        self.cfg,
+                        &ds.mat,
+                        &ds.grouping,
+                        Some(&kernel),
+                    )?
+                };
+                Ok((report, hit))
+            }
+            (None, Some((mat, grouping))) => {
+                let report =
+                    crate::backend::execute_prepared(self.cfg, mat, grouping, self.prelude)?;
+                Ok((report, false))
+            }
+            (None, None) => {
+                self.cfg.validate()?;
+                let (mat, grouping) = crate::coordinator::load_data(self.cfg)?;
+                let report =
+                    crate::backend::execute_prepared(self.cfg, &mat, &grouping, self.prelude)?;
+                Ok((report, false))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataSource;
+
+    fn small_cfg() -> RunConfig {
+        RunConfig {
+            data: DataSource::Synthetic { n_dims: 32, n_groups: 4 },
+            n_perms: 19,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builder_matches_the_legacy_entrypoints_bitwise() {
+        let cfg = small_cfg();
+        let via_builder = AnalysisRequest::new(&cfg).run().unwrap();
+        let via_legacy = crate::coordinator::run_config(&cfg).unwrap();
+        assert_eq!(via_builder.to_json().to_string(), via_legacy.to_json().to_string());
+
+        let (mat, grouping) = crate::coordinator::load_data(&cfg).unwrap();
+        let with_data = AnalysisRequest::new(&cfg).with_data(&mat, &grouping).run().unwrap();
+        let legacy_exec = crate::backend::execute(&cfg, &mat, &grouping).unwrap();
+        assert_eq!(with_data.to_json().to_string(), legacy_exec.to_json().to_string());
+    }
+
+    #[test]
+    fn prelude_handoff_is_bitwise_neutral() {
+        let cfg = small_cfg();
+        let (mat, grouping) = crate::coordinator::load_data(&cfg).unwrap();
+        let kernel = StatKernel::prepare(cfg.method, &mat, &grouping).unwrap();
+        let warm = AnalysisRequest::new(&cfg)
+            .with_data(&mat, &grouping)
+            .with_prelude(&kernel)
+            .run()
+            .unwrap();
+        let cold = AnalysisRequest::new(&cfg).with_data(&mat, &grouping).run().unwrap();
+        assert_eq!(warm.to_json().to_string(), cold.to_json().to_string());
+    }
+
+    #[test]
+    fn cache_path_reports_hits_and_matches_cold() {
+        let cfg = small_cfg();
+        let cache = DatasetCache::new(4);
+        let (first, hit0) = AnalysisRequest::new(&cfg).via_cache(&cache).run_traced().unwrap();
+        let (second, hit1) = AnalysisRequest::new(&cfg).via_cache(&cache).run_traced().unwrap();
+        assert!(!hit0, "first lookup loads");
+        assert!(hit1, "second lookup hits");
+        assert_eq!(first.to_json().to_string(), second.to_json().to_string());
+        let (cold, cold_hit) = AnalysisRequest::new(&cfg).run_traced().unwrap();
+        assert!(!cold_hit, "non-cache paths never report a hit");
+        assert_eq!(cold.to_json().to_string(), first.to_json().to_string());
+    }
+
+    #[test]
+    fn conflicting_sources_are_rejected() {
+        let cfg = small_cfg();
+        let cache = DatasetCache::new(4);
+        let (mat, grouping) = crate::coordinator::load_data(&cfg).unwrap();
+        let e = AnalysisRequest::new(&cfg)
+            .with_data(&mat, &grouping)
+            .via_cache(&cache)
+            .run()
+            .unwrap_err();
+        assert!(e.to_string().contains("with_data conflicts"), "{e}");
+        let kernel = StatKernel::prepare(cfg.method, &mat, &grouping).unwrap();
+        let e = AnalysisRequest::new(&cfg)
+            .with_prelude(&kernel)
+            .via_cache(&cache)
+            .run()
+            .unwrap_err();
+        assert!(e.to_string().contains("with_prelude conflicts"), "{e}");
+    }
+
+    #[test]
+    fn config_sourced_requests_validate_first() {
+        let bad = RunConfig { n_perms: 0, ..small_cfg() };
+        assert!(AnalysisRequest::new(&bad).run().is_err());
+        let bad_backend = RunConfig { backend: "tpu".into(), ..small_cfg() };
+        let e = AnalysisRequest::new(&bad_backend).run().unwrap_err().to_string();
+        assert!(e.contains("tpu"), "{e}");
+    }
+}

@@ -1,0 +1,573 @@
+//! The long-lived TCP analysis daemon: many concurrent client
+//! connections multiplexed onto **one** [`SharedPool`] crew and **one**
+//! [`DatasetCache`].
+//!
+//! Architecture (one box per thread):
+//!
+//! ```text
+//!  accept loop ──spawns──▶ connection readers (1/conn)
+//!                              │ parse envelope, assign per-conn seq
+//!                              │ stats/shutdown answered inline
+//!                              ▼
+//!                       AdmissionQueue (bounded; full ⇒ retry_after)
+//!                              │ FIFO
+//!                              ▼
+//!                    executor (inside with_shared_pool)
+//!                              │ execute_job ≡ the file-batch path
+//!                              ▼
+//!                    per-connection OrderedWriter (seq-ordered flush)
+//! ```
+//!
+//! The contracts this layering buys:
+//!
+//! * **Identical answers.**  Jobs execute one at a time on the executor
+//!   thread through [`execute_job`] — the same function, cache and shared
+//!   pool the one-shot `serve --jobs` batch uses — so a report computed
+//!   for a daemon client is byte-identical to the file-batch report for
+//!   the same request.  Concurrency lives at the I/O layer, never inside
+//!   the numerics.
+//! * **Bounded memory.**  Admission is non-blocking through a bounded
+//!   [`AdmissionQueue`]: when it is full the client gets an `"ok": false`
+//!   response with a `retry_after` hint instead of the daemon buffering
+//!   without bound (load-shedding, not OOM).
+//! * **Ordered pipelining.**  A client may write many frames before
+//!   reading; responses come back in request order per connection.  Each
+//!   request gets a per-connection sequence number at parse time and the
+//!   [`OrderedWriter`] holds back any response until all lower sequence
+//!   numbers have flushed — inline rejections never overtake earlier
+//!   in-flight results.
+//! * **Graceful drain.**  SIGTERM/ctrl-C (via [`install_signal_handlers`])
+//!   or a `shutdown` request stop the accept loop, close the queue (new
+//!   requests shed with `retry_after`), finish every admitted job, flush,
+//!   and exit.
+//!
+//! [`SharedPool`]: crate::backend::shard::SharedPool
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::shard::{with_shared_pool, AdmissionQueue};
+use crate::error::{Error, Result};
+use crate::jsonio::Json;
+use crate::report::Table;
+
+use super::cache::DatasetCache;
+use super::envelope::{parse_envelope, RequestBody, DEPRECATION_NOTE};
+use super::jobs::{execute_job, JobRequest};
+use super::wire;
+
+/// How the daemon is wired up.
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Bind address (`host:port`; port 0 picks a free port — the bound
+    /// address is on [`DaemonHandle::addr`]).
+    pub addr: String,
+    /// Shared-pool worker threads (0 = all available).
+    pub workers: usize,
+    /// [`DatasetCache`] capacity (entries; 0 disables caching).
+    pub cache_capacity: usize,
+    /// Admission-queue depth (floor 1): jobs admitted but not yet
+    /// executed.  Beyond it, requests shed with `retry_after`.
+    pub queue_depth: usize,
+    /// The `retry_after` hint (seconds) attached to shed requests.
+    pub retry_after_secs: f64,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 0,
+            cache_capacity: 8,
+            queue_depth: 64,
+            retry_after_secs: 0.05,
+        }
+    }
+}
+
+/// Post-drain accounting, printed by `serve --listen` after shutdown.
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonSummary {
+    pub connections: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub completed: usize,
+    pub failed: usize,
+}
+
+impl DaemonSummary {
+    /// Human-readable summary block.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["daemon", "value"]);
+        t.row(&["connections".into(), self.connections.to_string()]);
+        t.row(&[
+            "jobs".into(),
+            format!("{} admitted ({} ok, {} failed)", self.admitted, self.completed, self.failed),
+        ]);
+        t.row(&["shed".into(), format!("{} rejected with retry_after", self.rejected)]);
+        t.render()
+    }
+}
+
+/// Per-method service counters (jobs completed, busy seconds).
+#[derive(Clone, Copy, Debug, Default)]
+struct MethodStats {
+    jobs: usize,
+    secs: f64,
+}
+
+/// Shared daemon state: the cache, the admission queue and the counters
+/// the `stats` request reports.
+struct ServiceState {
+    cache: DatasetCache,
+    queue: AdmissionQueue<Admitted>,
+    retry_after_secs: f64,
+    started: Instant,
+    connections: AtomicUsize,
+    completed: AtomicUsize,
+    failed: AtomicUsize,
+    draining: AtomicBool,
+    per_method: Mutex<BTreeMap<&'static str, MethodStats>>,
+}
+
+impl ServiceState {
+    fn new(cfg: &DaemonConfig) -> ServiceState {
+        ServiceState {
+            cache: DatasetCache::new(cfg.cache_capacity),
+            queue: AdmissionQueue::new(cfg.queue_depth),
+            retry_after_secs: cfg.retry_after_secs,
+            started: Instant::now(),
+            connections: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            per_method: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Execute one admitted job (on the executor thread, inside the
+    /// shared pool) and hand its response to the connection's writer.
+    fn execute(&self, adm: Admitted) {
+        let method = adm.job.cfg.method.name();
+        let t0 = Instant::now();
+        let (response, ok) = execute_job(&adm.job, &self.cache);
+        let secs = t0.elapsed().as_secs_f64();
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        {
+            let mut per_method = self.per_method.lock().unwrap();
+            let entry = per_method.entry(method).or_default();
+            entry.jobs += 1;
+            entry.secs += secs;
+        }
+        adm.writer.send(adm.seq, response.to_string());
+    }
+
+    /// The `stats` response: queue depth, cache hit rates, per-method
+    /// throughput, drain state.
+    fn stats_json(&self, id: &str) -> Json {
+        let cs = self.cache.stats();
+        let methods: Vec<(String, Json)> = self
+            .per_method
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, m)| {
+                let rate = if m.secs > 0.0 { m.jobs as f64 / m.secs } else { 0.0 };
+                let cell = Json::obj(vec![
+                    ("jobs", Json::num(m.jobs as f64)),
+                    ("busy_secs", Json::num(m.secs)),
+                    ("jobs_per_sec", Json::num(rate)),
+                ]);
+                (name.to_string(), cell)
+            })
+            .collect();
+        Json::obj(vec![
+            ("id", Json::str(id)),
+            ("ok", Json::Bool(true)),
+            (
+                "stats",
+                Json::obj(vec![
+                    ("uptime_secs", Json::num(self.started.elapsed().as_secs_f64())),
+                    ("connections", Json::num(self.connections.load(Ordering::Relaxed) as f64)),
+                    ("queue_depth", Json::num(self.queue.depth() as f64)),
+                    ("queue_capacity", Json::num(self.queue.capacity() as f64)),
+                    ("admitted", Json::num(self.queue.admitted() as f64)),
+                    ("rejected", Json::num(self.queue.rejected() as f64)),
+                    ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
+                    ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
+                    ("draining", Json::Bool(self.draining.load(Ordering::Relaxed))),
+                    (
+                        "cache",
+                        Json::obj(vec![
+                            ("hits", Json::num(cs.hits as f64)),
+                            ("misses", Json::num(cs.misses as f64)),
+                            ("entries", Json::num(cs.entries as f64)),
+                            ("capacity", Json::num(cs.capacity as f64)),
+                            ("hit_rate", Json::num(cs.hit_rate())),
+                        ]),
+                    ),
+                    ("methods", Json::Obj(methods.into_iter().collect())),
+                ]),
+            ),
+        ])
+    }
+
+    fn summary(&self) -> DaemonSummary {
+        DaemonSummary {
+            connections: self.connections.load(Ordering::Relaxed),
+            admitted: self.queue.admitted(),
+            rejected: self.queue.rejected(),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One admitted job: what the executor needs to run it and route the
+/// response back in order.
+struct Admitted {
+    job: JobRequest,
+    seq: u64,
+    writer: Arc<OrderedWriter>,
+}
+
+/// Per-connection response writer enforcing request order.
+///
+/// Every request is assigned a dense per-connection sequence number at
+/// parse time.  Responses may complete out of order (an inline rejection
+/// finishes before an earlier admitted job); `send` parks them until all
+/// lower sequence numbers have flushed, then writes the longest ready run.
+/// A write failure (client gone) permanently drops the stream — later
+/// responses are discarded instead of erroring the executor.
+struct OrderedWriter {
+    inner: Mutex<WriterState>,
+}
+
+struct WriterState {
+    stream: Option<BufWriter<TcpStream>>,
+    next_seq: u64,
+    pending: BTreeMap<u64, String>,
+}
+
+impl OrderedWriter {
+    fn new(stream: TcpStream) -> OrderedWriter {
+        OrderedWriter {
+            inner: Mutex::new(WriterState {
+                stream: Some(BufWriter::new(stream)),
+                next_seq: 0,
+                pending: BTreeMap::new(),
+            }),
+        }
+    }
+
+    fn send(&self, seq: u64, payload: String) {
+        let mut guard = self.inner.lock().unwrap();
+        let ws = &mut *guard;
+        ws.pending.insert(seq, payload);
+        let Some(stream) = ws.stream.as_mut() else {
+            ws.pending.clear();
+            return;
+        };
+        let mut wrote = false;
+        let mut dead = false;
+        while let Some(p) = ws.pending.remove(&ws.next_seq) {
+            if wire::write_frame(stream, &p).is_err() {
+                dead = true;
+                break;
+            }
+            ws.next_seq += 1;
+            wrote = true;
+        }
+        if !dead && wrote {
+            dead = stream.flush().is_err();
+        }
+        if dead {
+            ws.stream = None;
+            ws.pending.clear();
+        }
+    }
+}
+
+/// Process-wide signal flag: SIGTERM/SIGINT request a graceful drain.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sig {
+    use super::SIGNALLED;
+    use std::sync::atomic::Ordering;
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_signal(_sig: i32) {
+        // Async-signal-safe: one relaxed store, nothing else.
+        SIGNALLED.store(true, Ordering::Relaxed);
+    }
+
+    extern "C" {
+        // libc's simple handler installer; std already links libc on
+        // unix, so this adds no dependency.  The return value (the
+        // previous handler) is deliberately typed as usize — it may be
+        // SIG_DFL (0), which must never be interpreted as a callable.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+}
+
+/// Install SIGTERM/SIGINT handlers that flip the daemon into graceful
+/// drain (`serve --listen` calls this; in-process tests use the
+/// `shutdown` request instead).  No-op off unix.
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    sig::install();
+}
+
+/// A running daemon: the bound address plus the shutdown/join controls.
+pub struct Daemon {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<DaemonSummary>,
+}
+
+/// Separate spawn/join handle so tests and bench can run clients against
+/// an in-process daemon.
+pub type DaemonHandle = Daemon;
+
+impl Daemon {
+    /// Bind, start the accept loop and the executor, and return
+    /// immediately.  `addr()` carries the actually-bound address (use
+    /// port 0 to let the OS pick).
+    pub fn spawn(cfg: DaemonConfig) -> Result<Daemon> {
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| Error::io(cfg.addr.clone(), e))?;
+        let addr = listener.local_addr().map_err(|e| Error::io(cfg.addr.clone(), e))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::io(cfg.addr.clone(), e))?;
+        let state = Arc::new(ServiceState::new(&cfg));
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || run_daemon(listener, cfg.workers, state, stop))
+        };
+        Ok(Daemon { addr, stop, thread })
+    }
+
+    /// The bound listen address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful drain (what SIGTERM does).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Wait for drain to finish; returns the final accounting.
+    pub fn join(self) -> Result<DaemonSummary> {
+        self.thread
+            .join()
+            .map_err(|_| Error::Coordinator("daemon thread panicked".into()))
+    }
+}
+
+/// Accept-loop poll interval — how often shutdown flags are observed.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+fn run_daemon(
+    listener: TcpListener,
+    workers: usize,
+    state: Arc<ServiceState>,
+    stop: Arc<AtomicBool>,
+) -> DaemonSummary {
+    // One executor thread drains the admission queue inside the shared
+    // pool — compute is serialized exactly like the file-batch path, so
+    // daemon results are byte-identical to batch results.
+    let executor = {
+        let state = Arc::clone(&state);
+        std::thread::spawn(move || {
+            with_shared_pool(workers, |_pool| {
+                while let Some(adm) = state.queue.pop() {
+                    state.execute(adm);
+                }
+            })
+        })
+    };
+    loop {
+        if stop.load(Ordering::Relaxed) || SIGNALLED.load(Ordering::Relaxed) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                state.connections.fetch_add(1, Ordering::Relaxed);
+                let state = Arc::clone(&state);
+                let stop = Arc::clone(&stop);
+                // Readers are detached: they exit on client EOF / error,
+                // and the executor outliving them is what drains
+                // admitted work during shutdown.
+                std::thread::spawn(move || serve_connection(stream, state, stop));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => break,
+        }
+    }
+    // Graceful drain: stop admitting (new requests shed with
+    // retry_after), finish everything already admitted, then report.
+    state.draining.store(true, Ordering::Relaxed);
+    state.queue.close();
+    let _ = executor.join();
+    state.summary()
+}
+
+/// One connection's read loop: parse frames, assign sequence numbers,
+/// answer stats/shutdown inline, admit run jobs.
+fn serve_connection(stream: TcpStream, state: Arc<ServiceState>, stop: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let writer = Arc::new(OrderedWriter::new(stream));
+    let mut seq = 0u64;
+    loop {
+        match wire::read_frame(&mut reader) {
+            Ok(None) => break,
+            Err(e) => {
+                // Framing is lost: answer once, then close.
+                writer.send(seq, error_response("", &e.to_string(), None).to_string());
+                break;
+            }
+            Ok(Some(payload)) => {
+                let this_seq = seq;
+                seq += 1;
+                handle_request(&state, &payload, this_seq, &writer, &stop);
+            }
+        }
+    }
+}
+
+/// Route one parsed frame: inline answers for malformed requests, stats
+/// and shutdown; queue admission (or load-shed) for run jobs.
+fn handle_request(
+    state: &Arc<ServiceState>,
+    payload: &str,
+    seq: u64,
+    writer: &Arc<OrderedWriter>,
+    stop: &Arc<AtomicBool>,
+) {
+    let doc = match Json::parse(payload) {
+        Ok(doc) => doc,
+        Err(e) => {
+            writer.send(seq, error_response("", &e.to_string(), None).to_string());
+            return;
+        }
+    };
+    // Best-effort id for error correlation, before validation.
+    let fallback_id =
+        doc.get("id").and_then(Json::as_str).map(String::from).unwrap_or_default();
+    let env = match parse_envelope(&doc) {
+        Ok(env) => env,
+        Err(e) => {
+            writer.send(seq, error_response(&fallback_id, &e.to_string(), None).to_string());
+            return;
+        }
+    };
+    let id = env.id.unwrap_or_else(|| format!("req-{}", seq + 1));
+    match env.body {
+        RequestBody::Stats => {
+            writer.send(seq, state.stats_json(&id).to_string());
+        }
+        RequestBody::Shutdown => {
+            stop.store(true, Ordering::Relaxed);
+            let resp = Json::obj(vec![
+                ("id", Json::str(id)),
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(true)),
+            ]);
+            writer.send(seq, resp.to_string());
+        }
+        RequestBody::Run(cfg) => {
+            let job = JobRequest { id, cfg: *cfg, deprecated: env.deprecated };
+            if state.draining.load(Ordering::Relaxed) {
+                let resp = shed_response(&job, "server draining", state.retry_after_secs);
+                writer.send(seq, resp.to_string());
+                return;
+            }
+            let adm = Admitted { job, seq, writer: Arc::clone(writer) };
+            if let Err(adm) = state.queue.try_push(adm) {
+                let resp = shed_response(
+                    &adm.job,
+                    "admission queue full",
+                    state.retry_after_secs,
+                );
+                writer.send(seq, resp.to_string());
+            }
+        }
+    }
+}
+
+/// An `"ok": false` response line (id may be empty when the request never
+/// parsed far enough to carry one).
+fn error_response(id: &str, error: &str, retry_after: Option<f64>) -> Json {
+    let mut pairs = vec![
+        ("id", Json::str(id)),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(error)),
+    ];
+    if let Some(secs) = retry_after {
+        pairs.push(("retry_after", Json::num(secs)));
+    }
+    Json::obj(pairs)
+}
+
+/// The load-shedding rejection: try again in `retry_after` seconds.
+fn shed_response(job: &JobRequest, why: &str, retry_after: f64) -> Json {
+    let mut resp = error_response(&job.id, &format!("server busy: {why}"), Some(retry_after));
+    if job.deprecated {
+        if let Json::Obj(map) = &mut resp {
+            map.insert("note".to_string(), Json::str(DEPRECATION_NOTE));
+        }
+    }
+    resp
+}
+
+/// Pipelined client exchange: connect, write every request frame, flush
+/// once, then read exactly one response per request (in order).  The
+/// `client` subcommand and the loopback tests both speak through this.
+pub fn client_exchange(addr: &SocketAddr, requests: &[String]) -> Result<Vec<Json>> {
+    let stream = TcpStream::connect(addr).map_err(|e| Error::io(addr.to_string(), e))?;
+    let read_half = stream.try_clone().map_err(|e| Error::io(addr.to_string(), e))?;
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    for request in requests {
+        wire::write_frame(&mut writer, request).map_err(|e| Error::io(addr.to_string(), e))?;
+    }
+    writer.flush().map_err(|e| Error::io(addr.to_string(), e))?;
+    let mut responses = Vec::with_capacity(requests.len());
+    for _ in requests {
+        match wire::read_frame(&mut reader)? {
+            Some(payload) => responses.push(Json::parse(&payload)?),
+            None => {
+                return Err(Error::Coordinator(
+                    "daemon closed the connection mid-response".into(),
+                ))
+            }
+        }
+    }
+    Ok(responses)
+}

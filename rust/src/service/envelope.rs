@@ -1,0 +1,259 @@
+//! The versioned request envelope — the one request shape shared by the
+//! TCP daemon, the one-shot file batch (`serve --jobs`) and the `client`
+//! subcommand.
+//!
+//! A v1 request wraps the job payload under an explicit version:
+//!
+//! ```json
+//! {"v": 1, "id": "rank-7", "request": {"method": "anosim", "n_perms": 499,
+//!  "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4}}}
+//! ```
+//!
+//! `request.op` selects what the request asks for — `"run"` (the default;
+//! the payload is [`RunConfig::from_json_at`]'s schema), `"stats"` (daemon
+//! introspection) or `"shutdown"` (drain and exit).  Validation is strict
+//! and **names the exact field path**: unknown top-level keys, a missing
+//! `"v"`, and unsupported versions are all errors, so a misspelled field
+//! can never silently take a default.
+//!
+//! Legacy un-versioned bare jobs (the pre-daemon JSONL shape — a job
+//! object with neither `"v"` nor `"request"`) are still accepted as
+//! implicit **v0**: they parse to the same [`Envelope`] with
+//! [`deprecated`](Envelope::deprecated) set, and every execution path
+//! attaches [`DEPRECATION_NOTE`] to their responses.
+
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+use crate::jsonio::Json;
+
+/// The envelope version this crate speaks.
+pub const ENVELOPE_VERSION: u64 = 1;
+
+/// The note attached to responses of legacy un-versioned (implicit v0)
+/// requests.
+pub const DEPRECATION_NOTE: &str = "deprecated: un-versioned v0 job shape; \
+     wrap the job as {\"v\": 1, \"id\": ..., \"request\": {...}}";
+
+/// What a parsed request asks for.
+#[derive(Clone, Debug)]
+pub enum RequestBody {
+    /// Run one analysis — the only op a file batch may carry.
+    Run(Box<RunConfig>),
+    /// Daemon introspection: queue depth, cache hit rates, per-method
+    /// throughput.
+    Stats,
+    /// Ask the daemon to drain in-flight jobs and exit.
+    Shutdown,
+}
+
+/// One parsed request envelope, v0 (legacy bare job) or v1.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    /// Envelope version: 0 for legacy bare jobs, else [`ENVELOPE_VERSION`].
+    pub v: u64,
+    /// Client-chosen correlation id, if any (`"id"` at the envelope top
+    /// level for v1, inside the bare job for v0).
+    pub id: Option<String>,
+    pub body: RequestBody,
+    /// True for legacy v0 bare jobs — responses to these carry
+    /// [`DEPRECATION_NOTE`].
+    pub deprecated: bool,
+}
+
+const ENVELOPE_KEYS: [&str; 3] = ["v", "id", "request"];
+
+/// Parse one request document (one JSONL line) into an [`Envelope`].
+///
+/// An object carrying `"v"` or `"request"` is held to the v1 contract
+/// (strict keys, declared version); anything else falls back to the
+/// legacy v0 bare-job parser ([`RunConfig::from_json`]).
+pub fn parse_envelope(doc: &Json) -> Result<Envelope> {
+    let Json::Obj(map) = doc else {
+        return Err(Error::Config("request envelope must be a JSON object".into()));
+    };
+    if !map.contains_key("v") && !map.contains_key("request") {
+        // Legacy v0 bare job: the job object *is* the payload.
+        let id = doc.opt_str("id")?.map(String::from);
+        let cfg = RunConfig::from_json(doc)?;
+        return Ok(Envelope { v: 0, id, body: RequestBody::Run(Box::new(cfg)), deprecated: true });
+    }
+    for key in map.keys() {
+        if !ENVELOPE_KEYS.contains(&key.as_str()) {
+            return Err(Error::Config(format!(
+                "unknown field {key:?} (known: {})",
+                ENVELOPE_KEYS.join(", ")
+            )));
+        }
+    }
+    let v = match map.get("v") {
+        None => {
+            return Err(Error::Config(format!(
+                "missing field \"v\" (envelope requests must declare a version; current: {ENVELOPE_VERSION})"
+            )))
+        }
+        Some(val) => val.as_u64().ok_or_else(|| {
+            Error::Config("field \"v\" must be a non-negative integer version".into())
+        })?,
+    };
+    if v != ENVELOPE_VERSION {
+        return Err(Error::Config(format!(
+            "field \"v\": unsupported envelope version {v} (supported: {ENVELOPE_VERSION}; \
+             un-versioned legacy jobs are implicit v0)"
+        )));
+    }
+    let id = doc.opt_str("id").map_err(|_| {
+        Error::Config("field \"id\" must be a string".into())
+    })?;
+    let Some(request) = map.get("request") else {
+        return Err(Error::Config("missing field \"request\"".into()));
+    };
+    let Json::Obj(req_map) = request else {
+        return Err(Error::Config("field \"request\" must be a JSON object".into()));
+    };
+    let op = match req_map.get("op") {
+        None => "run",
+        Some(val) => val.as_str().ok_or_else(|| {
+            Error::Config("field \"request.op\" must be a string".into())
+        })?,
+    };
+    let body = match op {
+        "run" => {
+            // Everything but the op selector is the run payload; its
+            // fields validate (and error) under the "request" prefix.
+            let mut payload = req_map.clone();
+            payload.remove("op");
+            let cfg = RunConfig::from_json_at(&Json::Obj(payload), "request")?;
+            RequestBody::Run(Box::new(cfg))
+        }
+        "stats" | "shutdown" => {
+            if let Some(extra) = req_map.keys().find(|k| k.as_str() != "op") {
+                let path = format!("request.{extra}");
+                return Err(Error::Config(format!(
+                    "unknown field {path:?} ({op} requests carry no payload)"
+                )));
+            }
+            if op == "stats" {
+                RequestBody::Stats
+            } else {
+                RequestBody::Shutdown
+            }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "field \"request.op\": unknown op {other:?} (known: run, stats, shutdown)"
+            )))
+        }
+    };
+    Ok(Envelope { v, id: id.map(String::from), body, deprecated: false })
+}
+
+/// Wrap a bare run-job payload in the current envelope — what `client`
+/// does to legacy job files before they hit the wire, and the upgrade
+/// path [`DEPRECATION_NOTE`] points at.
+pub fn envelope_v1(id: Option<&str>, payload: Json) -> Json {
+    let mut pairs = vec![("v", Json::num(ENVELOPE_VERSION as f64))];
+    if let Some(id) = id {
+        pairs.push(("id", Json::str(id)));
+    }
+    pairs.push(("request", payload));
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::permanova::Method;
+
+    fn parse(text: &str) -> Result<Envelope> {
+        parse_envelope(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn v1_run_requests_parse_with_envelope_ids() {
+        let env = parse(
+            r#"{"v": 1, "id": "rank-7", "request": {"method": "anosim", "n_perms": 49,
+                "data": {"source": "synthetic", "n_dims": 48, "n_groups": 4}}}"#,
+        )
+        .unwrap();
+        assert_eq!(env.v, 1);
+        assert_eq!(env.id.as_deref(), Some("rank-7"));
+        assert!(!env.deprecated);
+        match env.body {
+            RequestBody::Run(cfg) => {
+                assert_eq!(cfg.method, Method::Anosim);
+                assert_eq!(cfg.n_perms, 49);
+            }
+            _ => panic!("not a run request"),
+        }
+        // op defaults to run; explicit spelling is identical.
+        let env = parse(r#"{"v": 1, "request": {"op": "run", "n_perms": 9}}"#).unwrap();
+        assert!(matches!(env.body, RequestBody::Run(_)));
+        assert_eq!(env.id, None);
+    }
+
+    #[test]
+    fn daemon_ops_parse_and_reject_payloads() {
+        assert!(matches!(
+            parse(r#"{"v": 1, "request": {"op": "stats"}}"#).unwrap().body,
+            RequestBody::Stats
+        ));
+        assert!(matches!(
+            parse(r#"{"v": 1, "id": "bye", "request": {"op": "shutdown"}}"#).unwrap().body,
+            RequestBody::Shutdown
+        ));
+        let e = parse(r#"{"v": 1, "request": {"op": "stats", "n_perms": 9}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("request.n_perms"), "{e}");
+        let e = parse(r#"{"v": 1, "request": {"op": "flush"}}"#).unwrap_err().to_string();
+        assert!(e.contains("request.op") && e.contains("flush"), "{e}");
+    }
+
+    #[test]
+    fn legacy_bare_jobs_are_implicit_v0_with_deprecation() {
+        let env = parse(r#"{"id": "old", "method": "permdisp", "n_perms": 19}"#).unwrap();
+        assert_eq!(env.v, 0);
+        assert_eq!(env.id.as_deref(), Some("old"));
+        assert!(env.deprecated);
+        match env.body {
+            RequestBody::Run(cfg) => assert_eq!(cfg.method, Method::Permdisp),
+            _ => panic!("not a run request"),
+        }
+        // Bad legacy jobs still fail loudly through the v0 parser.
+        assert!(parse(r#"{"n_perm": 9}"#).is_err());
+    }
+
+    #[test]
+    fn envelope_errors_name_exact_field_paths() {
+        for (bad, frag) in [
+            // Envelope-shaped (has "request") but no version.
+            (r#"{"request": {"n_perms": 9}}"#, "\"v\""),
+            (r#"{"v": 2, "request": {}}"#, "unsupported envelope version 2"),
+            (r#"{"v": 0, "request": {}}"#, "unsupported envelope version 0"),
+            (r#"{"v": "one", "request": {}}"#, "\"v\""),
+            (r#"{"v": 1}"#, "missing field \"request\""),
+            (r#"{"v": 1, "request": []}"#, "\"request\""),
+            (r#"{"v": 1, "id": 7, "request": {}}"#, "\"id\""),
+            (r#"{"v": 1, "reqest": {}}"#, "\"reqest\""),
+            (r#"{"v": 1, "request": {"op": 1}}"#, "\"request.op\""),
+            // Payload field errors surface under the request prefix.
+            (r#"{"v": 1, "request": {"n_perm": 9}}"#, "\"request.n_perm\""),
+            (r#"{"v": 1, "request": {"data": {"n_dim": 8}}}"#, "\"request.data.n_dim\""),
+            ("[1]", "JSON object"),
+        ] {
+            let e = parse(bad).unwrap_err().to_string();
+            assert!(e.contains(frag), "{bad} -> {e}");
+        }
+    }
+
+    #[test]
+    fn envelope_v1_wraps_and_roundtrips() {
+        let payload = Json::parse(r#"{"n_perms": 9}"#).unwrap();
+        let doc = envelope_v1(Some("x"), payload);
+        let env = parse_envelope(&doc).unwrap();
+        assert_eq!(env.v, ENVELOPE_VERSION);
+        assert_eq!(env.id.as_deref(), Some("x"));
+        assert!(!env.deprecated);
+        assert!(matches!(env.body, RequestBody::Run(_)));
+    }
+}

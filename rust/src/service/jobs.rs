@@ -3,12 +3,13 @@
 //! datasets through **one** shared scheduler pool.
 //!
 //! This is the `serve` subcommand's engine.  Requests arrive as JSONL (one
-//! JSON object per line, [`RunConfig::from_json`]'s schema plus an
-//! optional `"id"`); responses leave as JSONL in request order, each line
-//! carrying the job's outcome, its cache provenance (`"hit"`/`"miss"`) and
-//! the full analysis report.  A failed job produces an `"ok": false` line
-//! and the batch keeps going — one malformed request must not poison a
-//! thousand good ones.
+//! [`Envelope`](super::Envelope) per line — the versioned
+//! `{"v": 1, "id": ..., "request": {...}}` shape, with legacy bare jobs
+//! accepted as implicit v0); responses leave as JSONL in request order,
+//! each line carrying the job's outcome, its cache provenance
+//! (`"hit"`/`"miss"`) and the full analysis report.  A failed job produces
+//! an `"ok": false` line and the batch keeps going — one malformed request
+//! must not poison a thousand good ones.
 //!
 //! Scheduling: the whole batch runs inside [`with_shared_pool`], so every
 //! engine job's sharded permutation loop is served by one persistent
@@ -18,26 +19,40 @@ use std::time::Instant;
 
 use crate::backend::shard::with_shared_pool;
 use crate::config::RunConfig;
-use crate::coordinator::run_config_cached;
 use crate::error::{Error, Result};
 use crate::jsonio::Json;
 use crate::report::{format_rate, Table};
 
 use super::cache::{CacheStats, DatasetCache};
 
-/// One parsed request: a stable id (from the request's `"id"` field, or
+/// One parsed request: a stable id (from the envelope's `"id"` field, or
 /// `job-<ordinal>` when absent) plus the run configuration.
 #[derive(Clone, Debug)]
 pub struct JobRequest {
     pub id: String,
     pub cfg: RunConfig,
+    /// True when the request arrived in the legacy un-versioned v0 shape —
+    /// its response carries [`DEPRECATION_NOTE`].
+    pub deprecated: bool,
 }
 
-/// Parse a JSONL job file: one request per non-blank line.  Errors carry
-/// the 1-based line number of the offending request.  Ids must be unique
-/// across the batch (explicit or defaulted) — responses are correlated to
-/// requests by id, so a duplicate would silently mis-attribute a report.
+impl JobRequest {
+    /// A current-shape (non-deprecated) job request.
+    pub fn new(id: impl Into<String>, cfg: RunConfig) -> JobRequest {
+        JobRequest { id: id.into(), cfg, deprecated: false }
+    }
+}
+
+/// Parse a JSONL job file: one request envelope per non-blank line (v1
+/// `{"v": 1, ...}` or legacy bare v0 jobs — see
+/// [`parse_envelope`](super::parse_envelope)).  Errors carry the 1-based
+/// line number of the offending request plus the exact field path.  Ids
+/// must be unique across the batch (explicit or defaulted) — responses
+/// are correlated to requests by id, so a duplicate would silently
+/// mis-attribute a report.  Daemon ops (`stats`, `shutdown`) are rejected:
+/// a file batch only carries run jobs.
 pub fn parse_jobs(text: &str) -> Result<Vec<JobRequest>> {
+    use super::envelope::RequestBody;
     let mut jobs: Vec<JobRequest> = Vec::new();
     let mut seen = std::collections::BTreeSet::new();
     for (ln, raw) in text.lines().enumerate() {
@@ -47,16 +62,25 @@ pub fn parse_jobs(text: &str) -> Result<Vec<JobRequest>> {
         }
         let ctx = |m: &str| Error::Config(format!("jobs line {}: {m}", ln + 1));
         let doc = Json::parse(line).map_err(|e| ctx(&e.to_string()))?;
-        let id = doc
-            .opt_str("id")
-            .map_err(|e| ctx(&e.to_string()))?
-            .map(String::from)
-            .unwrap_or_else(|| format!("job-{}", jobs.len() + 1));
+        let env = super::envelope::parse_envelope(&doc).map_err(|e| ctx(&e.to_string()))?;
+        let cfg = match env.body {
+            RequestBody::Run(cfg) => *cfg,
+            RequestBody::Stats => {
+                return Err(ctx(
+                    "op \"stats\" is a daemon request (file batches only carry run jobs)",
+                ))
+            }
+            RequestBody::Shutdown => {
+                return Err(ctx(
+                    "op \"shutdown\" is a daemon request (file batches only carry run jobs)",
+                ))
+            }
+        };
+        let id = env.id.unwrap_or_else(|| format!("job-{}", jobs.len() + 1));
         if !seen.insert(id.clone()) {
             return Err(ctx(&format!("duplicate job id {id:?}")));
         }
-        let cfg = RunConfig::from_json(&doc).map_err(|e| ctx(&e.to_string()))?;
-        jobs.push(JobRequest { id, cfg });
+        jobs.push(JobRequest { id, cfg, deprecated: env.deprecated });
     }
     if jobs.is_empty() {
         return Err(Error::Config("jobs file contains no requests".into()));
@@ -128,6 +152,46 @@ impl BatchSummary {
     }
 }
 
+/// Execute one job against `cache` and build its response object — the
+/// single response-shape authority shared by the file batch
+/// ([`run_jobs`]) and the TCP daemon, so concurrent daemon responses are
+/// byte-identical to one-shot batch responses for the same request.
+/// Returns `(response, ok)`.
+///
+/// Runs on whatever scheduler the calling thread has ambient — call it
+/// inside [`with_shared_pool`] to serve the sharded permutation loops
+/// from one persistent crew.
+pub fn execute_job(job: &JobRequest, cache: &DatasetCache) -> (Json, bool) {
+    let t_job = Instant::now();
+    match crate::request::AnalysisRequest::new(&job.cfg).via_cache(cache).run_traced() {
+        Ok((report, hit)) => {
+            let mut pairs = vec![
+                ("id", Json::str(job.id.clone())),
+                ("ok", Json::Bool(true)),
+                ("cache", Json::str(if hit { "hit" } else { "miss" })),
+                ("dataset", Json::str(super::cache::dataset_key(&job.cfg))),
+                ("elapsed_secs", Json::num(t_job.elapsed().as_secs_f64())),
+                ("report", report.to_json()),
+            ];
+            if job.deprecated {
+                pairs.push(("note", Json::str(super::envelope::DEPRECATION_NOTE)));
+            }
+            (Json::obj(pairs), true)
+        }
+        Err(e) => {
+            let mut pairs = vec![
+                ("id", Json::str(job.id.clone())),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(e.to_string())),
+            ];
+            if job.deprecated {
+                pairs.push(("note", Json::str(super::envelope::DEPRECATION_NOTE)));
+            }
+            (Json::obj(pairs), false)
+        }
+    }
+}
+
 /// Run an ordered batch of jobs against `cache` on one shared scheduler
 /// pool of `workers` threads (0 = all available).  Never fails as a whole:
 /// per-job errors become `"ok": false` response lines.
@@ -137,27 +201,9 @@ pub fn run_jobs(jobs: &[JobRequest], cache: &DatasetCache, workers: usize) -> Ba
     let mut ok = 0usize;
     let (pool_threads, pool_dispatches) = with_shared_pool(workers, |pool| {
         for job in jobs {
-            let t_job = Instant::now();
-            match run_config_cached(&job.cfg, cache) {
-                Ok((report, hit)) => {
-                    ok += 1;
-                    responses.push(Json::obj(vec![
-                        ("id", Json::str(job.id.clone())),
-                        ("ok", Json::Bool(true)),
-                        ("cache", Json::str(if hit { "hit" } else { "miss" })),
-                        ("dataset", Json::str(super::cache::dataset_key(&job.cfg))),
-                        ("elapsed_secs", Json::num(t_job.elapsed().as_secs_f64())),
-                        ("report", report.to_json()),
-                    ]));
-                }
-                Err(e) => {
-                    responses.push(Json::obj(vec![
-                        ("id", Json::str(job.id.clone())),
-                        ("ok", Json::Bool(false)),
-                        ("error", Json::str(e.to_string())),
-                    ]));
-                }
-            }
+            let (response, job_ok) = execute_job(job, cache);
+            ok += job_ok as usize;
+            responses.push(response);
         }
         (pool.threads(), pool.jobs_dispatched())
     });
@@ -179,7 +225,10 @@ pub fn run_jobs(jobs: &[JobRequest], cache: &DatasetCache, workers: usize) -> Ba
 
 /// Validate a JSONL response document (`serve --check`): every non-blank
 /// line parses, carries `"id"` + boolean `"ok"`, and `ok` lines embed a
-/// report object while failed lines carry an `"error"` string.  Returns
+/// report object while failed lines carry an `"error"` string.  The
+/// envelope-era optional fields are type-checked too: `"note"` (the v0
+/// deprecation note) must be a string and `"retry_after"` (daemon
+/// load-shedding) a non-negative number on a failed line.  Returns
 /// `(ok_count, failed_count)`.
 pub fn validate_responses(text: &str) -> Result<(usize, usize)> {
     let mut ok = 0usize;
@@ -196,6 +245,19 @@ pub fn validate_responses(text: &str) -> Result<(usize, usize)> {
             .get("ok")
             .and_then(Json::as_bool)
             .ok_or_else(|| ctx("ok missing/not a boolean".into()))?;
+        if let Some(note) = doc.get("note") {
+            if note.as_str().is_none() {
+                return Err(ctx("note must be a string".into()));
+            }
+        }
+        if let Some(retry) = doc.get("retry_after") {
+            if is_ok {
+                return Err(ctx("retry_after on an ok response".into()));
+            }
+            if !retry.as_f64().is_some_and(|s| s >= 0.0) {
+                return Err(ctx("retry_after must be a non-negative number".into()));
+            }
+        }
         if is_ok {
             let cache = doc.req_str("cache").map_err(|e| ctx(e.to_string()))?;
             if cache != "hit" && cache != "miss" {
@@ -303,6 +365,62 @@ mod tests {
         assert!(bad.req_str("error").unwrap().contains("nope"));
         let (ok, failed) = validate_responses(&out.to_jsonl()).unwrap();
         assert_eq!((ok, failed), (1, 1));
+    }
+
+    #[test]
+    fn parse_jobs_accepts_v1_envelopes_and_flags_v0() {
+        let mixed = r#"
+            {"v": 1, "id": "new", "request": {"n_perms": 19, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2}}}
+            {"id": "old", "n_perms": 19, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2}}
+        "#;
+        let jobs = parse_jobs(mixed).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert!(!jobs[0].deprecated, "v1 envelopes are current");
+        assert!(jobs[1].deprecated, "bare jobs are implicit v0");
+        let cache = DatasetCache::new(2);
+        let out = run_jobs(&jobs, &cache, 1);
+        assert!(out.responses[0].get("note").is_none());
+        assert!(out.responses[1].req_str("note").unwrap().contains("deprecated"));
+        let (ok, failed) = validate_responses(&out.to_jsonl()).unwrap();
+        assert_eq!((ok, failed), (2, 0));
+    }
+
+    #[test]
+    fn parse_jobs_rejects_daemon_ops_and_bad_envelopes() {
+        let e = parse_jobs("{\"v\": 1, \"request\": {\"op\": \"stats\"}}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("line 1") && e.contains("stats"), "{e}");
+        let e = parse_jobs("{\"v\": 1, \"request\": {\"op\": \"shutdown\"}}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("shutdown"), "{e}");
+        let e = parse_jobs("{\"v\": 3, \"request\": {}}\n").unwrap_err().to_string();
+        assert!(e.contains("unsupported envelope version 3"), "{e}");
+        let e = parse_jobs("{\"v\": 1, \"request\": {\"n_perm\": 2}}\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("\"request.n_perm\""), "{e}");
+    }
+
+    #[test]
+    fn response_validator_checks_envelope_era_fields() {
+        // Daemon load-shed rejections are valid failed responses.
+        let shed = "{\"id\": \"x\", \"ok\": false, \"error\": \"busy\", \"retry_after\": 0.5}\n";
+        assert_eq!(validate_responses(shed).unwrap(), (0, 1));
+        for (bad, why) in [
+            (
+                "{\"id\": \"x\", \"ok\": false, \"error\": \"busy\", \"retry_after\": -1}\n",
+                "negative retry_after",
+            ),
+            (
+                "{\"id\": \"x\", \"ok\": true, \"retry_after\": 1}\n",
+                "retry_after on an ok response",
+            ),
+            ("{\"id\": \"x\", \"ok\": false, \"error\": \"e\", \"note\": 7}\n", "non-string note"),
+        ] {
+            assert!(validate_responses(bad).is_err(), "{why}");
+        }
     }
 
     #[test]

@@ -1,31 +1,52 @@
 //! The shared-dataset analysis service layer: what turns the one-shot CLI
-//! into something shaped like a server.
+//! into a network service.
 //!
-//! Three pieces, stacked on the execution engine:
+//! Five pieces, stacked on the execution engine:
 //!
 //! * [`DatasetCache`] — seeded/hashed data-source key → loaded
 //!   [`DistanceMatrix`](crate::dmat::DistanceMatrix) + grouping +
 //!   memoized per-method [`StatKernel`](crate::permanova::StatKernel)
 //!   preludes; LRU-bounded, hit/miss counters surfaced in every summary;
+//! * the versioned request [`Envelope`] ([`parse_envelope`]) — the one
+//!   request shape (`{"v": 1, "id": ..., "request": {...}}`) shared by
+//!   the daemon, the file batch and the `client` subcommand, with legacy
+//!   bare jobs accepted as deprecated implicit v0;
 //! * [`run_jobs`] / [`JobRequest`] — the batch driver: an ordered,
 //!   heterogeneous list of jobs (method × backend × n_perms × seed)
 //!   executed through **one** shared scheduler pool
 //!   ([`with_shared_pool`](crate::backend::shard::with_shared_pool))
-//!   instead of one pool per call;
-//! * the JSONL wire format — [`parse_jobs`] for requests,
-//!   [`BatchOutcome::to_jsonl`] / [`validate_responses`] for the ordered
-//!   response stream the `serve` subcommand emits and CI validates.
+//!   instead of one pool per call; [`execute_job`] is the shared
+//!   response-shape authority;
+//! * the [`Daemon`] — a long-lived TCP server multiplexing concurrent
+//!   pipelined connections onto that same pool + cache over
+//!   length-prefixed JSONL frames ([`wire`]), with bounded admission
+//!   (load-shedding `retry_after` rejections), ordered per-connection
+//!   responses, a `stats` request and graceful drain;
+//! * the JSONL response format — [`BatchOutcome::to_jsonl`] /
+//!   [`validate_responses`] for the ordered response stream the `serve`
+//!   subcommand emits and CI validates.
 //!
 //! Correctness contract: warm-cache results are **bitwise identical** to
 //! cold single-shot runs for the same (dataset, method, backend, seed) —
 //! the cache only memoizes pure functions of the dataset, and the shared
-//! pool preserves the scheduler's determinism contract.  The
-//! cache-correctness suite (`rust/tests/service_cache.rs`) pins both.
+//! pool preserves the scheduler's determinism contract.  The daemon adds
+//! the concurrency edition of the same promise: responses to N pipelined
+//! concurrent clients are byte-identical to the one-shot batch responses
+//! for the same requests (`rust/tests/daemon_loopback.rs` pins it).
 
 mod cache;
+pub mod daemon;
+mod envelope;
 mod jobs;
+pub mod wire;
 
 pub use cache::{dataset_key, CacheStats, CachedDataset, DatasetCache};
+pub use daemon::{
+    client_exchange, install_signal_handlers, Daemon, DaemonConfig, DaemonHandle, DaemonSummary,
+};
+pub use envelope::{
+    envelope_v1, parse_envelope, Envelope, RequestBody, DEPRECATION_NOTE, ENVELOPE_VERSION,
+};
 pub use jobs::{
-    parse_jobs, run_jobs, validate_responses, BatchOutcome, BatchSummary, JobRequest,
+    execute_job, parse_jobs, run_jobs, validate_responses, BatchOutcome, BatchSummary, JobRequest,
 };

@@ -1,0 +1,110 @@
+//! Length-prefixed JSONL wire framing for the analysis daemon.
+//!
+//! One frame is
+//!
+//! ```text
+//! <decimal payload length>\n<payload bytes>\n
+//! ```
+//!
+//! The explicit length makes reads exact — the reader allocates once and
+//! `read_exact`s, instead of scanning for delimiters inside payloads — and
+//! the trailing newline keeps captures line-structured, so a recorded
+//! exchange is still greppable JSONL.  The format is trivially speakable
+//! from any language (and from `printf | nc`), which is the whole point of
+//! a zero-dependency wire: no HTTP stack, no TLV ambiguity.
+//!
+//! Frames are bounded by [`MAX_FRAME`]: a corrupt or hostile length prefix
+//! must produce an error, never an unbounded allocation.
+
+use std::io::{BufRead, Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Upper bound on one frame's payload bytes (16 MiB).  Requests are small;
+/// responses carry one analysis report — both orders of magnitude below
+/// this.  A prefix beyond the bound is rejected before any allocation.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Write one frame.  The caller flushes (frames are typically pipelined —
+/// batching the flush is the backpressure-friendly default).
+pub fn write_frame(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
+    w.write_all(payload.len().to_string().as_bytes())?;
+    w.write_all(b"\n")?;
+    w.write_all(payload.as_bytes())?;
+    w.write_all(b"\n")
+}
+
+/// Read one frame.  `Ok(None)` on clean EOF at a frame boundary; an EOF
+/// mid-frame, a non-numeric or oversized length prefix, a missing
+/// terminator and non-UTF-8 payload bytes are all errors — after any of
+/// them the stream position is unreliable and the connection must close.
+pub fn read_frame(r: &mut impl BufRead) -> Result<Option<String>> {
+    let mut header = String::new();
+    let n = r
+        .read_line(&mut header)
+        .map_err(|e| Error::io("wire frame header", e))?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let len: usize = header
+        .trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("wire: bad frame length prefix {:?}", header.trim())))?;
+    if len > MAX_FRAME {
+        return Err(Error::Config(format!(
+            "wire: frame of {len} bytes exceeds the {MAX_FRAME}-byte bound"
+        )));
+    }
+    // Payload plus its terminating newline.
+    let mut buf = vec![0u8; len + 1];
+    r.read_exact(&mut buf).map_err(|e| Error::io("wire frame payload", e))?;
+    if buf.pop() != Some(b'\n') {
+        return Err(Error::Config("wire: frame missing its newline terminator".into()));
+    }
+    let payload = String::from_utf8(buf)
+        .map_err(|_| Error::Config("wire: frame payload is not UTF-8".into()))?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_roundtrip_in_sequence() {
+        let mut buf = Vec::new();
+        let payloads = ["{\"v\":1}", "", "{\"id\":\"x\",\"ok\":true}", "héllo"];
+        for p in payloads {
+            write_frame(&mut buf, p).unwrap();
+        }
+        let mut r = Cursor::new(buf);
+        for p in payloads {
+            assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(p));
+        }
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF at a boundary");
+        assert_eq!(read_frame(&mut r).unwrap(), None, "EOF is sticky");
+    }
+
+    #[test]
+    fn frame_bytes_are_line_structured() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "{\"a\":1}").unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), "7\n{\"a\":1}\n");
+    }
+
+    #[test]
+    fn corrupt_frames_error_instead_of_hanging_or_allocating() {
+        // Non-numeric prefix.
+        let e = read_frame(&mut Cursor::new(b"x7\n{}\n".to_vec())).unwrap_err().to_string();
+        assert!(e.contains("length prefix"), "{e}");
+        // Oversized prefix: rejected before allocation.
+        let huge = format!("{}\n", MAX_FRAME + 1);
+        let e = read_frame(&mut Cursor::new(huge.into_bytes())).unwrap_err().to_string();
+        assert!(e.contains("exceeds"), "{e}");
+        // Truncated payload (EOF mid-frame).
+        assert!(read_frame(&mut Cursor::new(b"10\n{}\n".to_vec())).is_err());
+        // Missing terminator (length lied short).
+        assert!(read_frame(&mut Cursor::new(b"1\n{}\n".to_vec())).is_err());
+    }
+}

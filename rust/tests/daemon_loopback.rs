@@ -1,0 +1,267 @@
+//! The daemon's concurrency-edition correctness contract, pinned over a
+//! real loopback TCP socket:
+//!
+//! * **Bitwise identity** — N concurrent pipelined clients receive
+//!   `report` payloads byte-identical to the one-shot file-batch path
+//!   (`run_jobs`) for the same requests, and each connection's responses
+//!   come back in request order.  (`elapsed_secs` and the `cache`
+//!   hit/miss tag are execution provenance — they legitimately differ
+//!   across concurrency editions — so the comparison pins the `report`
+//!   object, the `id`, `ok` and `dataset` fields.)
+//! * **Bounded admission** — a queue of depth 1 under a pipelined flood
+//!   sheds with `retry_after` (load-shedding, not OOM), the shed
+//!   responses still arrive in order, the stats counters add up, and the
+//!   daemon drains cleanly afterwards.
+
+use std::collections::BTreeMap;
+
+use permanova_apu::jsonio::Json;
+use permanova_apu::service::{
+    client_exchange, envelope_v1, parse_jobs, run_jobs, Daemon, DaemonConfig, DatasetCache,
+};
+
+/// A mixed-method batch over one shared dataset plus one distinct
+/// dataset, in the legacy-free v1 envelope shape.
+fn request_lines() -> Vec<String> {
+    let mut lines = Vec::new();
+    let combos: [(&str, &str, u64); 4] = [
+        ("permanova", "native-flat", 11),
+        ("anosim", "native-brute", 12),
+        ("permdisp", "native-brute", 13),
+        ("pairwise", "native-batch", 14),
+    ];
+    for (i, (method, backend, seed)) in combos.iter().enumerate() {
+        let payload = Json::obj(vec![
+            ("method", Json::str(*method)),
+            ("backend", Json::str(*backend)),
+            ("n_perms", Json::num(19.0)),
+            ("seed", Json::str(seed.to_string())),
+            (
+                "data",
+                Json::obj(vec![
+                    ("source", Json::str("synthetic")),
+                    ("n_dims", Json::num(24.0)),
+                    ("n_groups", Json::num(2.0)),
+                    // Jobs 0..2 share a dataset; job 3 loads its own.
+                    ("seed", Json::num(if i < 3 { 7.0 } else { 8.0 })),
+                ]),
+            ),
+        ]);
+        lines.push(envelope_v1(Some(&format!("job-{i}")), payload).to_string());
+    }
+    lines
+}
+
+/// The fields of a response that must be identical across execution
+/// editions (one-shot batch vs concurrent daemon): identity, success and
+/// the full analysis report.  `elapsed_secs`/`cache` are provenance.
+fn comparable(response: &Json) -> String {
+    let mut keep = Vec::new();
+    for key in ["id", "ok", "dataset", "error", "report", "note"] {
+        if let Some(v) = response.get(key) {
+            keep.push((key, v.clone()));
+        }
+    }
+    Json::obj(keep).to_string()
+}
+
+#[test]
+fn concurrent_pipelined_clients_match_the_file_batch_bitwise() {
+    // Reference: the one-shot file-batch path over the same requests.
+    let jobs_text = request_lines().join("\n");
+    let jobs = parse_jobs(&jobs_text).unwrap();
+    let cache = DatasetCache::new(4);
+    let batch = run_jobs(&jobs, &cache, 2);
+    let reference: BTreeMap<String, String> = batch
+        .responses
+        .iter()
+        .map(|r| (r.req_str("id").unwrap().to_string(), comparable(r)))
+        .collect();
+    assert_eq!(reference.len(), 4);
+    assert!(batch.responses.iter().all(|r| r.opt_bool("ok").unwrap() == Some(true)));
+
+    let daemon = Daemon::spawn(DaemonConfig {
+        workers: 2,
+        cache_capacity: 4,
+        queue_depth: 64,
+        ..DaemonConfig::default()
+    })
+    .unwrap();
+    let addr = daemon.addr();
+
+    // N concurrent clients, each pipelining the full request list in a
+    // different rotation (so the executor interleaves datasets), twice —
+    // the second pass exercises the warm cache edition.
+    const CLIENTS: usize = 4;
+    let all_responses: Vec<Vec<Json>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut requests = request_lines();
+                    requests.rotate_left(c % requests.len());
+                    requests.extend(request_lines());
+                    client_exchange(&addr, &requests).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (c, responses) in all_responses.iter().enumerate() {
+        assert_eq!(responses.len(), 8, "client {c}: one response per request");
+        // Per-connection ordering: responses correlate to requests by
+        // position — ids must match the (rotated) request order exactly.
+        let mut expected: Vec<String> =
+            (0..4).map(|i| format!("job-{}", (i + c) % 4)).collect();
+        expected.extend((0..4).map(|i| format!("job-{i}")));
+        for (response, want_id) in responses.iter().zip(&expected) {
+            assert_eq!(response.req_str("id").unwrap(), want_id, "client {c} order");
+            assert_eq!(
+                &comparable(response),
+                reference.get(want_id).unwrap(),
+                "client {c}, {want_id}: daemon response diverges from the file batch"
+            );
+        }
+    }
+
+    daemon.shutdown();
+    let summary = daemon.join().unwrap();
+    assert_eq!(summary.connections, CLIENTS);
+    assert_eq!(summary.completed, CLIENTS * 8);
+    assert_eq!(summary.failed, 0);
+    assert_eq!(summary.rejected, 0, "queue depth 64 never sheds this load");
+}
+
+#[test]
+fn bounded_admission_sheds_with_retry_after_and_drains_cleanly() {
+    let daemon = Daemon::spawn(DaemonConfig {
+        workers: 1,
+        cache_capacity: 2,
+        queue_depth: 1,
+        retry_after_secs: 0.25,
+        ..DaemonConfig::default()
+    })
+    .unwrap();
+    let addr = daemon.addr();
+
+    // Flood: one pipelined connection pushes far more work than a
+    // depth-1 queue holds.  Each job carries a few hundred microseconds
+    // of permutation work (n = 64, 199 perms), so the executor lags the
+    // reader (which only parses) and the queue must overflow.
+    let flood: Vec<String> = (0..48)
+        .map(|i| {
+            let payload = Json::obj(vec![
+                ("n_perms", Json::num(199.0)),
+                ("seed", Json::str((100 + i).to_string())),
+                (
+                    "data",
+                    Json::obj(vec![
+                        ("source", Json::str("synthetic")),
+                        ("n_dims", Json::num(64.0)),
+                        ("n_groups", Json::num(4.0)),
+                        ("seed", Json::num(7.0)),
+                    ]),
+                ),
+            ]);
+            envelope_v1(Some(&format!("flood-{i}")), payload).to_string()
+        })
+        .collect();
+    let responses = client_exchange(&addr, &flood).unwrap();
+    assert_eq!(responses.len(), flood.len());
+
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for (i, response) in responses.iter().enumerate() {
+        // Ordering holds even when rejections finish instantly while
+        // earlier admitted jobs are still computing.
+        assert_eq!(response.req_str("id").unwrap(), format!("flood-{i}"));
+        if response.opt_bool("ok").unwrap() == Some(true) {
+            ok += 1;
+            assert!(response.get("report").is_some());
+        } else {
+            let retry = response
+                .get("retry_after")
+                .and_then(Json::as_f64)
+                .expect("failed flood responses must carry retry_after");
+            assert_eq!(retry, 0.25, "the configured hint is pinned");
+            let error = response.req_str("error").unwrap();
+            assert!(error.starts_with("server busy"), "{error}");
+            shed += 1;
+        }
+    }
+    assert_eq!(ok + shed, flood.len());
+    assert!(ok >= 1, "the executor makes progress under flood");
+    assert!(shed >= 1, "a depth-1 queue must shed a pipelined flood");
+
+    // Stats over the wire agree with the observed split.
+    let stats_req = envelope_v1(
+        Some("stats"),
+        Json::obj(vec![("op", Json::str("stats"))]),
+    )
+    .to_string();
+    let stats = &client_exchange(&addr, &[stats_req]).unwrap()[0];
+    let s = stats.get("stats").expect("stats body");
+    assert_eq!(s.req_usize("completed").unwrap() + s.req_usize("failed").unwrap(), ok);
+    assert_eq!(s.req_usize("rejected").unwrap(), shed);
+    assert_eq!(s.req_usize("queue_capacity").unwrap(), 1);
+    let hit_rate = s.get("cache").unwrap().get("hit_rate").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&hit_rate));
+
+    // Graceful drain via the shutdown op: the daemon acknowledges, stops
+    // accepting, finishes admitted work and joins.
+    let bye_req = envelope_v1(
+        Some("bye"),
+        Json::obj(vec![("op", Json::str("shutdown"))]),
+    )
+    .to_string();
+    let bye = &client_exchange(&addr, &[bye_req]).unwrap()[0];
+    assert_eq!(bye.opt_bool("ok").unwrap(), Some(true));
+    assert_eq!(bye.opt_bool("draining").unwrap(), Some(true));
+    let summary = daemon.join().unwrap();
+    assert_eq!(summary.completed + summary.failed, ok);
+    assert_eq!(summary.rejected, shed);
+}
+
+#[test]
+fn malformed_and_legacy_requests_get_correlated_responses() {
+    let daemon = Daemon::spawn(DaemonConfig {
+        workers: 1,
+        cache_capacity: 2,
+        ..DaemonConfig::default()
+    })
+    .unwrap();
+    let addr = daemon.addr();
+
+    let requests = vec![
+        // Unsupported version: rejected with the id echoed back.
+        r#"{"v": 99, "id": "future", "request": {"n_perms": 9}}"#.to_string(),
+        // Field-path naming: the bad field is spelled request.n_perm.
+        r#"{"v": 1, "id": "typo", "request": {"n_perm": 9}}"#.to_string(),
+        // Legacy v0 still computes, with the deprecation note attached.
+        concat!(
+            r#"{"id": "legacy", "n_perms": 9, "#,
+            r#""data": {"source": "synthetic", "n_dims": 24, "n_groups": 2}}"#
+        )
+        .to_string(),
+    ];
+    let responses = client_exchange(&addr, &requests).unwrap();
+    assert_eq!(responses.len(), 3);
+
+    assert_eq!(responses[0].req_str("id").unwrap(), "future");
+    assert_eq!(responses[0].opt_bool("ok").unwrap(), Some(false));
+    assert!(responses[0].req_str("error").unwrap().contains("unsupported envelope version"));
+
+    assert_eq!(responses[1].req_str("id").unwrap(), "typo");
+    let error = responses[1].req_str("error").unwrap();
+    assert!(error.contains("request.n_perm"), "exact field path named: {error}");
+
+    assert_eq!(responses[2].req_str("id").unwrap(), "legacy");
+    assert_eq!(responses[2].opt_bool("ok").unwrap(), Some(true));
+    assert!(
+        responses[2].req_str("note").unwrap().contains("deprecated"),
+        "v0 responses carry the deprecation note"
+    );
+
+    daemon.shutdown();
+    daemon.join().unwrap();
+}
