@@ -9,8 +9,8 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: all build test bench bench-quick serve-demo daemon-demo lint fmt clippy doc artifacts \
-        pytest clean
+.PHONY: all build test bench bench-quick ingest-check serve-demo daemon-demo lint fmt clippy doc \
+        artifacts pytest clean
 
 all: build
 
@@ -33,6 +33,26 @@ bench-quick:
 	$(CARGO) run --release -- bench --check BENCH_ANOSIM.json
 	@grep -m1 -o '"footprint_ratio": [0-9.e-]*' BENCH_PERMANOVA.json \
 	  | sed 's/"footprint_ratio": /dense->packed matrix footprint ratio: /'
+
+# Dense-free ingestion gate: the streaming conformance suite plus two
+# residency greps — no non-test code may call the dense oracle loader,
+# and the bench footprint line must report packed-only residency
+# (`resident_bytes`, pinned by the validator to packed + offsets).
+ingest-check:
+	$(CARGO) test --test ingest_streaming
+	@awk 'FNR==1{t=0} /#\[cfg\(test\)\]/{t=1} \
+	  /load_data_dense/ && !t {print FILENAME":"FNR": "$$0; bad=1} \
+	  END{exit bad}' \
+	  $$(find rust/src -name '*.rs' ! -path '*coordinator/mod.rs') \
+	  && echo 'ok: no non-test code path calls the dense loader' \
+	  || { echo 'dense loader called outside its test-only home'; exit 1; }
+	@if [ -f BENCH_PERMANOVA.json ]; then \
+	  grep -q '"resident_bytes"' BENCH_PERMANOVA.json \
+	    && echo 'ok: bench footprint reports packed-only residency' \
+	    || { echo 'BENCH_PERMANOVA.json lacks resident_bytes'; exit 1; } \
+	else \
+	  echo 'no BENCH_PERMANOVA.json; run make bench-quick first to grep its footprint'; \
+	fi
 
 # The shared-dataset service demo: a heterogeneous JSONL batch over one
 # dataset (distinct permutation seeds, shared data seed) served through

@@ -52,7 +52,7 @@ impl BatchedBruteBackend {
 impl Backend for BatchedBruteBackend {
     fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult> {
         let t0 = Instant::now();
-        let n = plan.mat.n();
+        let n = plan.n();
         let k = plan.grouping.k();
         let stats = match plan.stat {
             // PERMANOVA: the f32 SoA brute-block engine over the packed
@@ -73,7 +73,6 @@ impl Backend for BatchedBruteBackend {
             // for ANOSIM, per-lane scalar for PERMDISP).
             stat => eval_plan_range_blocked(
                 stat,
-                plan.mat,
                 plan.grouping,
                 plan.perms,
                 plan.start,
@@ -135,7 +134,6 @@ mod tests {
         for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
             let stat = StatKernel::prepare(method, &mat, &grouping).unwrap();
             let mk = |shard: ShardSpec| BatchPlan {
-                mat: &mat,
                 grouping: &grouping,
                 perms: &perms,
                 start: 0,
@@ -173,7 +171,6 @@ mod tests {
         let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
         let b = BatchedBruteBackend::new(8);
         let mk = |start: usize, rows: usize| BatchPlan {
-            mat: &mat,
             grouping: &grouping,
             perms: &perms,
             start,

@@ -39,13 +39,14 @@ pub use sim::SimulatorBackend;
 pub use xla::XlaBackend;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::RunConfig;
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::error::{Error, Result};
 use crate::permanova::{
-    pairwise_seed, pairwise_subproblem, pvalue, Grouping, Method, StatKernel,
+    pairwise_seed, pairwise_subproblem_condensed, pvalue, Grouping, Method, StatKernel,
 };
 use crate::report::{AnalysisReport, DeviceStats, PairSummary, RunReport};
 use crate::rng::PermutationPlan;
@@ -54,8 +55,15 @@ use crate::rng::PermutationPlan;
 ///
 /// Indices `[start, start + rows)` of `perms` are to be evaluated;
 /// index 0 of the plan is always the observed labelling.
+///
+/// The plan is **dense-free**: the prepared [`StatKernel`] carries each
+/// method's packed operand (PERMANOVA's condensed triangle, ANOSIM's rank
+/// vector, PERMDISP's distance vector) and the grouping carries the
+/// problem edge [`n`](Self::n) — no dense matrix exists for a backend to
+/// reach for.  The one substrate that needs a dense staging buffer (XLA's
+/// AOT artifacts take an `n×n` input) mirrors it on demand from the
+/// triangle inside its own `run_batch`.
 pub struct BatchPlan<'a> {
-    pub mat: &'a DistanceMatrix,
     pub grouping: &'a Grouping,
     pub perms: &'a PermutationPlan,
     /// First plan index of this batch.
@@ -63,8 +71,9 @@ pub struct BatchPlan<'a> {
     /// Number of permutations to evaluate.
     pub rows: usize,
     /// The prepared statistic: which method to evaluate plus its
-    /// permutation-invariant prelude (PERMANOVA's `s_T`, ANOSIM's
-    /// condensed ranks, PERMDISP's distances-to-centroid).
+    /// permutation-invariant prelude (PERMANOVA's `s_T` and packed
+    /// triangle, ANOSIM's condensed ranks, PERMDISP's
+    /// distances-to-centroid).
     pub stat: &'a StatKernel,
     /// Scheduling knobs for whatever internal parallelism the backend has.
     pub shard: ShardSpec,
@@ -73,13 +82,18 @@ pub struct BatchPlan<'a> {
 impl<'a> BatchPlan<'a> {
     /// Full-run plan over every index of `perms`.
     pub fn full(
-        mat: &'a DistanceMatrix,
         grouping: &'a Grouping,
         perms: &'a PermutationPlan,
         stat: &'a StatKernel,
         shard: ShardSpec,
     ) -> Self {
-        BatchPlan { mat, grouping, perms, start: 0, rows: perms.count, stat, shard }
+        BatchPlan { grouping, perms, start: 0, rows: perms.count, stat, shard }
+    }
+
+    /// Problem edge (object count) — what `plan.mat.n()` used to spell.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.grouping.n()
     }
 
     /// The **packed triangle** this plan's f32 PERMANOVA kernels sweep,
@@ -87,8 +101,7 @@ impl<'a> BatchPlan<'a> {
     /// operands are the f64 rank / distance vectors).  Backends bind the
     /// same buffer through their `StatKernel::Permanova(pk)` match arm;
     /// this accessor is the plan-level spelling for callers outside that
-    /// match (diagnostics, tests).  The dense [`mat`](Self::mat) stays on
-    /// the plan for shape checks and the I/O/artifact boundary only.
+    /// match (diagnostics, tests).
     pub fn condensed(&self) -> Option<&crate::dmat::CondensedMatrix> {
         self.stat.packed().map(|p| p.as_ref())
     }
@@ -240,25 +253,29 @@ pub fn execute(
 /// seam the service layer's `DatasetCache` reuses kernels through.
 /// Callers outside the engine should go through the builder.
 ///
+/// Dense-free: the problem arrives as the packed triangle `tri` (the only
+/// resident copy on every ingest path) and the engine prepares preludes
+/// with [`StatKernel::prepare_packed`].
+///
 /// When `prelude` is `Some`, it must be the [`StatKernel`] prepared for
-/// exactly this `(cfg.method, mat, grouping)` problem (checked via
+/// exactly this `(cfg.method, tri, grouping)` problem (checked via
 /// [`StatKernel::check_problem`]); the engine then skips the per-call
 /// precomputation.  Reuse is bitwise-neutral: the prelude carries the same
-/// values `StatKernel::prepare` would recompute, so warm-cache results are
-/// bit-identical to cold ones.  [`Method::PairwisePermanova`] prepares one
-/// kernel per group-pair sub-problem *below* this seam, so it rejects a
-/// caller-supplied prelude.
+/// values `StatKernel::prepare_packed` would recompute, so warm-cache
+/// results are bit-identical to cold ones.  [`Method::PairwisePermanova`]
+/// prepares one kernel per group-pair sub-problem *below* this seam, so it
+/// rejects a caller-supplied prelude.
 pub fn execute_prepared(
     cfg: &RunConfig,
-    mat: &DistanceMatrix,
+    tri: &Arc<CondensedMatrix>,
     grouping: &Grouping,
     prelude: Option<&StatKernel>,
 ) -> Result<AnalysisReport> {
-    if grouping.n() != mat.n() {
+    if grouping.n() != tri.n() {
         return Err(Error::InvalidInput(format!(
             "grouping n = {} vs matrix n = {}",
             grouping.n(),
-            mat.n()
+            tri.n()
         )));
     }
     if cfg.n_perms == 0 {
@@ -279,7 +296,7 @@ pub fn execute_prepared(
                 cfg.method
             )));
         }
-        kernel.check_problem(mat, grouping)?;
+        kernel.check_problem(tri.n(), grouping)?;
     }
     // One backend instance serves every scheduled job of this call — for
     // pairwise that is k(k−1)/2 jobs, and re-opening e.g. the XLA runtime
@@ -293,11 +310,13 @@ pub fn execute_prepared(
             let mut pairs = Vec::with_capacity(n_comparisons);
             for a in 0..k {
                 for b in (a + 1)..k {
-                    let (sub, sub_grouping) = pairwise_subproblem(mat, grouping, a, b)?;
+                    let (sub, sub_grouping) =
+                        pairwise_subproblem_condensed(tri, grouping, a, b)?;
+                    let sub_n = sub.n();
                     let (run, _) = run_single(
                         cfg,
                         backend.as_ref(),
-                        &sub,
+                        &Arc::new(sub),
                         &sub_grouping,
                         Method::Permanova,
                         pairwise_seed(cfg.seed, a, b),
@@ -306,7 +325,7 @@ pub fn execute_prepared(
                     pairs.push(PairSummary {
                         group_a: a,
                         group_b: b,
-                        n: sub.n(),
+                        n: sub_n,
                         p_adjusted: (run.p_value * n_comparisons as f64).min(1.0),
                     });
                     runs.push(run);
@@ -314,7 +333,7 @@ pub fn execute_prepared(
             }
             Ok(AnalysisReport {
                 method: Method::PairwisePermanova,
-                n: mat.n(),
+                n: tri.n(),
                 k: grouping.k(),
                 runs,
                 pairs,
@@ -323,10 +342,10 @@ pub fn execute_prepared(
         }
         method => {
             let (run, group_dispersions) =
-                run_single(cfg, backend.as_ref(), mat, grouping, method, cfg.seed, prelude)?;
+                run_single(cfg, backend.as_ref(), tri, grouping, method, cfg.seed, prelude)?;
             Ok(AnalysisReport {
                 method,
-                n: mat.n(),
+                n: tri.n(),
                 k: grouping.k(),
                 runs: vec![run],
                 pairs: vec![],
@@ -343,7 +362,7 @@ pub fn execute_prepared(
 fn run_single(
     cfg: &RunConfig,
     backend: &dyn Backend,
-    mat: &DistanceMatrix,
+    tri: &Arc<CondensedMatrix>,
     grouping: &Grouping,
     method: Method,
     seed: u64,
@@ -357,7 +376,7 @@ fn run_single(
     let stat: &StatKernel = match prelude {
         Some(k) => k,
         None => {
-            prepared = StatKernel::prepare(method, mat, grouping)?;
+            prepared = StatKernel::prepare_packed(method, tri, grouping)?;
             &prepared
         }
     };
@@ -367,7 +386,7 @@ fn run_single(
     let shard = cfg.shard_spec();
     let t0 = Instant::now();
 
-    let plan = BatchPlan::full(mat, grouping, &perms, stat, shard);
+    let plan = BatchPlan::full(grouping, &perms, stat, shard);
     let batch = backend.run_batch(&plan)?;
     if batch.stats.len() != total {
         return Err(Error::Coordinator(format!(
@@ -383,7 +402,7 @@ fn run_single(
         f_obs,
         p_value: pvalue(f_obs, &f_perms),
         n_perms: cfg.n_perms,
-        n: mat.n(),
+        n: tri.n(),
         k: grouping.k(),
         s_t: stat.s_t(),
         elapsed_secs: t0.elapsed().as_secs_f64(),
@@ -461,12 +480,13 @@ mod tests {
         let (mat, grouping) = fixture(24, 2);
         let perms = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
         let pk = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
-        let plan = BatchPlan::full(&mat, &grouping, &perms, &pk, ShardSpec::default());
+        let plan = BatchPlan::full(&grouping, &perms, &pk, ShardSpec::default());
+        assert_eq!(plan.n(), 24, "plan edge comes from the grouping");
         let tri = plan.condensed().expect("PERMANOVA plans carry the packed triangle");
         assert_eq!(tri.n(), 24);
         assert_eq!(tri.values(), mat.to_condensed().as_slice());
         let ak = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
-        let plan = BatchPlan::full(&mat, &grouping, &perms, &ak, ShardSpec::default());
+        let plan = BatchPlan::full(&grouping, &perms, &ak, ShardSpec::default());
         assert!(plan.condensed().is_none(), "rank plans have no f32 stream");
     }
 
@@ -569,6 +589,7 @@ mod tests {
     #[test]
     fn execute_prepared_is_bitwise_identical_to_cold() {
         let (mat, grouping) = fixture(36, 3);
+        let tri = Arc::new(CondensedMatrix::from_dense(&mat));
         for backend in ["native-brute", "native-batch", "simulator"] {
             let mut c = cfg(backend);
             c.n_perms = 49;
@@ -576,7 +597,7 @@ mod tests {
                 c.method = method;
                 let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
                 let cold = execute(&c, &mat, &grouping).unwrap();
-                let warm = execute_prepared(&c, &mat, &grouping, Some(&kernel)).unwrap();
+                let warm = execute_prepared(&c, &tri, &grouping, Some(&kernel)).unwrap();
                 assert_eq!(cold.f_obs.to_bits(), warm.f_obs.to_bits(), "{backend} {method:?}");
                 assert_eq!(cold.p_value, warm.p_value);
                 for (a, b) in cold.f_perms.iter().zip(&warm.f_perms) {
@@ -589,19 +610,20 @@ mod tests {
     #[test]
     fn execute_prepared_rejects_mismatched_preludes() {
         let (mat, grouping) = fixture(36, 3);
+        let tri = Arc::new(CondensedMatrix::from_dense(&mat));
         let c = cfg("native-brute");
         // Wrong method for the config.
         let anosim = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
-        assert!(execute_prepared(&c, &mat, &grouping, Some(&anosim)).is_err());
+        assert!(execute_prepared(&c, &tri, &grouping, Some(&anosim)).is_err());
         // Right method, wrong problem size.
         let (other, other_g) = fixture(40, 4);
         let foreign = StatKernel::prepare(Method::Permanova, &other, &other_g).unwrap();
-        assert!(execute_prepared(&c, &mat, &grouping, Some(&foreign)).is_err());
+        assert!(execute_prepared(&c, &tri, &grouping, Some(&foreign)).is_err());
         // Pairwise never takes a caller prelude.
         let mut pw = cfg("native-brute");
         pw.method = Method::PairwisePermanova;
         let perma = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
-        assert!(execute_prepared(&pw, &mat, &grouping, Some(&perma)).is_err());
+        assert!(execute_prepared(&pw, &tri, &grouping, Some(&perma)).is_err());
     }
 
     #[test]

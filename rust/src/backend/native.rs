@@ -44,7 +44,7 @@ impl NativeBackend {
 impl Backend for NativeBackend {
     fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult> {
         let t0 = Instant::now();
-        let n = plan.mat.n();
+        let n = plan.n();
         let k = plan.grouping.k();
         let stats = match plan.stat {
             // PERMANOVA: this backend's f32 kernel formulation over the
@@ -67,15 +67,9 @@ impl Backend for NativeBackend {
                 s_w.iter().map(|&sw| fstat_from_sw(sw as f64, pk.s_t, n, k)).collect()
             }
             // ANOSIM / PERMDISP: the generic f64 loop, same scheduler.
-            stat => eval_plan_range(
-                stat,
-                plan.mat,
-                plan.grouping,
-                plan.perms,
-                plan.start,
-                plan.rows,
-                &plan.shard,
-            ),
+            stat => {
+                eval_plan_range(stat, plan.grouping, plan.perms, plan.start, plan.rows, &plan.shard)
+            }
         };
         Ok(BatchResult {
             start: plan.start,
@@ -147,7 +141,6 @@ mod tests {
         let s_t = st_of(&mat);
         let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
         let plan = BatchPlan {
-            mat: &mat,
             grouping: &grouping,
             perms: &perms,
             start: 0,
@@ -175,7 +168,6 @@ mod tests {
         let (mat, grouping, perms) = plan_fixture(30, 3, 20);
         let stat = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
         let plan = BatchPlan {
-            mat: &mat,
             grouping: &grouping,
             perms: &perms,
             start: 0,
@@ -198,7 +190,6 @@ mod tests {
         let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
         let b = NativeBackend::new(SwAlgorithm::Brute);
         let mk = |start: usize, rows: usize| BatchPlan {
-            mat: &mat,
             grouping: &grouping,
             perms: &perms,
             start,

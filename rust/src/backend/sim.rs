@@ -45,7 +45,7 @@ impl SimulatorBackend {
 impl Backend for SimulatorBackend {
     fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult> {
         let t0 = Instant::now();
-        let n = plan.mat.n();
+        let n = plan.n();
         let k = plan.grouping.k();
         let stats: Vec<f64> = match plan.stat {
             StatKernel::Permanova(pk) => {
@@ -65,15 +65,9 @@ impl Backend for SimulatorBackend {
                 );
                 s_w.iter().map(|&sw| fstat_from_sw(sw as f64, pk.s_t, n, k)).collect()
             }
-            stat => eval_plan_range(
-                stat,
-                plan.mat,
-                plan.grouping,
-                plan.perms,
-                plan.start,
-                plan.rows,
-                &plan.shard,
-            ),
+            stat => {
+                eval_plan_range(stat, plan.grouping, plan.perms, plan.start, plan.rows, &plan.shard)
+            }
         };
         // Only PERMANOVA is inside the calibrated model's regime (the f32
         // d² stream the paper measured); see the module docs.
@@ -146,7 +140,6 @@ mod tests {
         let perms = PermutationPlan::new(grouping.labels().to_vec(), 5, 12);
         let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
         let plan = BatchPlan {
-            mat: &mat,
             grouping: &grouping,
             perms: &perms,
             start: 0,
@@ -186,8 +179,7 @@ mod tests {
             [(Method::Anosim, false), (Method::Permdisp, false), (Method::Permanova, true)]
         {
             let stat = StatKernel::prepare(method, &mat, &grouping).unwrap();
-            let plan =
-                BatchPlan::full(&mat, &grouping, &perms, &stat, ShardSpec::with_workers(2));
+            let plan = BatchPlan::full(&grouping, &perms, &stat, ShardSpec::with_workers(2));
             let rs = sim.run_batch(&plan).unwrap();
             let rn = native.run_batch(&plan).unwrap();
             assert_eq!(rs.stats, rn.stats, "{method:?}: simulator numerics are exact");
@@ -214,7 +206,7 @@ mod tests {
         let grouping = Grouping::balanced(24, 2).unwrap();
         let perms = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
         let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
-        let plan = BatchPlan::full(&mat, &grouping, &perms, &stat, cfg.shard_spec());
+        let plan = BatchPlan::full(&grouping, &perms, &stat, cfg.shard_spec());
         let brute = mk(SwAlgorithm::Brute).run_batch(&plan).unwrap();
         let tiled = mk(SwAlgorithm::Tiled { tile: 512 }).run_batch(&plan).unwrap();
         assert!(tiled.modelled_secs.unwrap() > brute.modelled_secs.unwrap());

@@ -14,11 +14,14 @@
 //! generic path) — one backend name, every method served.
 //!
 //! Layout note: the compiled artifacts take the **dense** `n*n` matrix as
-//! a graph input (the lowered HLO's contract), so device staging is the
-//! one engine path where the dense buffer survives past load — exactly
-//! the "I/O boundary" the packed-layout refactor carves out.  The
-//! host-side generic methods stream their own packed preludes like every
-//! other backend.
+//! a graph input (the lowered HLO's contract).  Since the dense-free
+//! ingestion refactor nothing upstream holds a dense copy anymore, so this
+//! backend mirrors one **on demand** from the prelude's packed triangle
+//! (`to_dense()`), stages it device-resident for the session, and drops it
+//! when the batch returns — an explicit, transient staging buffer at the
+//! one call site that needs it, not a resident layout.  The host-side
+//! generic methods stream their own packed preludes like every other
+//! backend.
 
 use std::time::Instant;
 
@@ -46,14 +49,13 @@ impl XlaBackend {
 impl Backend for XlaBackend {
     fn run_batch(&self, plan: &BatchPlan<'_>) -> Result<BatchResult> {
         let t0 = Instant::now();
-        let n = plan.mat.n();
+        let n = plan.n();
 
         // Only the PERMANOVA s_W graph is lowered to artifacts; the other
         // methods evaluate host-side through the generic scheduler loop.
-        if !matches!(plan.stat, StatKernel::Permanova(_)) {
+        let StatKernel::Permanova(pk) = plan.stat else {
             let stats = eval_plan_range(
                 plan.stat,
-                plan.mat,
                 plan.grouping,
                 plan.perms,
                 plan.start,
@@ -67,9 +69,13 @@ impl Backend for XlaBackend {
                 modelled_secs: None,
                 backend: format!("xla/{}+host", plan.stat.kernel_label()),
             });
-        }
+        };
 
-        let session = self.runtime.session(&self.kernel, plan.mat.data(), n, plan.grouping)?;
+        // The lowered HLO takes the dense n×n matrix: mirror it on demand
+        // from the packed triangle, stage it, and let it drop with this
+        // scope — the transient dense boundary, not a resident copy.
+        let staged = pk.packed.to_dense();
+        let session = self.runtime.session(&self.kernel, staged.data(), n, plan.grouping)?;
         let cap = session.batch_capacity().max(1);
 
         let mut stats = Vec::with_capacity(plan.rows);
@@ -157,7 +163,7 @@ mod tests {
         let perms = PermutationPlan::new(grouping.labels().to_vec(), 3, 40);
         let s_t = st_of(&mat);
         let stat = StatKernel::prepare(Method::Permanova, &mat, &grouping).unwrap();
-        let plan = BatchPlan::full(&mat, &grouping, &perms, &stat, ShardSpec::default());
+        let plan = BatchPlan::full(&grouping, &perms, &stat, ShardSpec::default());
         let r = backend.run_batch(&plan).unwrap();
         assert_eq!(r.stats.len(), 40);
         let mut row = vec![0u32; n];
@@ -190,10 +196,9 @@ mod tests {
         let grouping = Grouping::balanced(n, 4).unwrap();
         let perms = PermutationPlan::new(grouping.labels().to_vec(), 3, 20);
         let stat = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
-        let plan = BatchPlan::full(&mat, &grouping, &perms, &stat, ShardSpec::default());
+        let plan = BatchPlan::full(&grouping, &perms, &stat, ShardSpec::default());
         let r = backend.run_batch(&plan).unwrap();
-        let want =
-            eval_plan_range(&stat, &mat, &grouping, &perms, 0, 20, &ShardSpec::default());
+        let want = eval_plan_range(&stat, &grouping, &perms, 0, 20, &ShardSpec::default());
         assert_eq!(r.stats, want);
         assert!(r.backend.contains("+host"), "{}", r.backend);
     }

@@ -182,8 +182,13 @@ pub fn speedup(a: &Measurement, b: &Measurement) -> f64 {
 /// `dense_bytes` / `footprint_ratio`) — the packed-triangle layout's win,
 /// measured instead of asserted; v5 added the top-level `latency` section
 /// (open-loop p50/p99 request latency against an in-process TCP daemon,
-/// swept over concurrent client counts).
-pub const BENCH_SCHEMA: &str = "bench-permanova/v5";
+/// swept over concurrent client counts); v6 added the per-cell
+/// `resident_bytes` field — what the dense-free ingestion path actually
+/// keeps resident (the packed values plus the row-offset table), which the
+/// validator pins to exactly `packed_bytes + 8·(n+1)` so a footprint that
+/// quietly re-grows a dense copy fails CI.  `dense_bytes` is since v6 the
+/// **avoided** dense footprint, kept for the ratio axis.
+pub const BENCH_SCHEMA: &str = "bench-permanova/v6";
 
 /// Bytes each permutation streams through its statistic kernel: the
 /// method's packed per-permutation operand plus the n-label row.
@@ -338,7 +343,10 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
     for &n in &grid.n_grid {
         let mut cell = grid.base.clone();
         cell.data = DataSource::Synthetic { n_dims: n, n_groups: grid.n_groups };
-        let (mat, grouping) = crate::coordinator::load_data(&cell)?;
+        // The streamed loader emits the packed triangle directly — the
+        // only resident copy; every timed run below hands it through
+        // `with_condensed` without any dense staging.
+        let (tri, grouping) = crate::coordinator::load_data(&cell)?;
         for &n_perms in &grid.perm_grid {
             for backend in &grid.backends {
                 for &method in &grid.methods {
@@ -352,12 +360,12 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
                     // loop; this run is also the cell's warmup (grid
                     // warmup is 0) and the source of method/kernel/block
                     // provenance.
-                    let report = AnalysisRequest::new(&cfg).with_data(&mat, &grouping).run()?;
+                    let report = AnalysisRequest::new(&cfg).with_condensed(&tri, &grouping).run()?;
                     let mut bencher = grid.bencher.clone();
                     let m = bencher
                         .run(&format!("{backend}/{}/n{n}/p{n_perms}", method.name()), || {
                             AnalysisRequest::new(&cfg)
-                                .with_data(&mat, &grouping)
+                                .with_condensed(&tri, &grouping)
                                 .run()
                                 .expect("pre-flighted bench cell failed")
                         });
@@ -374,8 +382,15 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
                     let stream_n = report.primary().n;
                     let bpp = bytes_per_perm(method, stream_n);
                     let effective_gbs = bpp as f64 * total_perms / m.best / 1e9;
+                    // v6: `dense_bytes` is the **avoided** footprint (no
+                    // dense copy exists on any ingest path any more);
+                    // `resident_bytes` is what the cell actually holds —
+                    // the packed values plus the (n+1)-entry row-offset
+                    // table — and matches `CondensedMatrix::resident_bytes`.
                     let dense_bytes = (n * n * 4) as u64;
                     let packed_bytes = (n * (n - 1) / 2 * 4) as u64;
+                    let resident_bytes = tri.resident_bytes() as u64;
+                    debug_assert_eq!(resident_bytes, packed_bytes + 8 * (n as u64 + 1));
                     let footprint_ratio = packed_bytes as f64 / dense_bytes as f64;
                     // Simulated backends model MI300A wall-clock alongside
                     // the exact numerics; 0.0 for real substrates.
@@ -431,6 +446,8 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
                         ("effective_gbs", Json::num(effective_gbs)),
                         ("dense_bytes", Json::num(dense_bytes as f64)),
                         ("packed_bytes", Json::num(packed_bytes as f64)),
+                        // v6: the packed-only residency of the loaded cell.
+                        ("resident_bytes", Json::num(resident_bytes as f64)),
                         ("footprint_ratio", Json::num(footprint_ratio)),
                         ("modelled_secs", Json::num(modelled_secs)),
                         // Scheduled jobs in the cell (1, except pairwise =
@@ -865,6 +882,23 @@ pub fn validate_bench_json(doc: &Json) -> Result<usize> {
                 format!("footprint_ratio {ratio} != packed_bytes/dense_bytes"),
             ));
         }
+        // v6: the resident footprint must be *exactly* the packed values
+        // plus the (n+1)-entry offset table — a cell whose residency still
+        // includes a dense copy (or any other hidden buffer) fails here.
+        let resident = e
+            .req_usize("resident_bytes")
+            .map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        let n_cell = e.req_usize("n")?;
+        let want_resident = packed + 8 * (n_cell + 1);
+        if resident != want_resident {
+            return Err(bench_field_err(
+                &ctx,
+                format!(
+                    "resident_bytes {resident} != packed_bytes + offsets = {want_resident} \
+                     (a dense copy has crept back into the resident footprint?)"
+                ),
+            ));
+        }
         if modelled < 0.0 {
             return Err(bench_field_err(
                 &ctx,
@@ -1191,6 +1225,8 @@ mod tests {
             assert!((ratio - 23.0 / 48.0).abs() < 1e-12, "(n-1)/2n for n=24, got {ratio}");
             assert_eq!(e.req_usize("dense_bytes").unwrap(), 24 * 24 * 4);
             assert_eq!(e.req_usize("packed_bytes").unwrap(), 276 * 4);
+            // v6: packed values + 25-entry offset table — and nothing else.
+            assert_eq!(e.req_usize("resident_bytes").unwrap(), 276 * 4 + 8 * 25);
             assert!(e.get("effective_gbs").unwrap().as_f64().unwrap() > 0.0);
         }
         assert!(out.table.contains("GB/s"), "{}", out.table);
@@ -1348,8 +1384,14 @@ mod tests {
             }
             assert!(validate_bench_json(&bad).is_err(), "{method:?}");
         }
-        // Entry missing the v4 traffic fields.
-        for key in ["bytes_per_perm", "effective_gbs", "footprint_ratio", "packed_bytes"] {
+        // Entry missing the v4/v6 traffic fields.
+        for key in [
+            "bytes_per_perm",
+            "effective_gbs",
+            "footprint_ratio",
+            "packed_bytes",
+            "resident_bytes",
+        ] {
             let mut bad = good.clone();
             if let Json::Obj(m) = &mut bad {
                 let mut entries = m.get("entries").unwrap().as_arr().unwrap().to_vec();
@@ -1370,6 +1412,20 @@ mod tests {
             m.insert("entries".into(), Json::Arr(entries));
         }
         assert!(validate_bench_json(&bad).is_err());
+        // A residency that still includes the dense copy fails (v6): the
+        // validator pins resident_bytes to exactly packed + offsets.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut entries = m.get("entries").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(e) = &mut entries[0] {
+                let packed = e.get("packed_bytes").unwrap().as_f64().unwrap();
+                let dense = e.get("dense_bytes").unwrap().as_f64().unwrap();
+                e.insert("resident_bytes".into(), Json::num(packed + dense + 8.0 * 25.0));
+            }
+            m.insert("entries".into(), Json::Arr(entries));
+        }
+        let e = validate_bench_json(&bad).unwrap_err().to_string();
+        assert!(e.contains("resident_bytes"), "{e}");
         // Missing throughput section (v3 requires the key).
         let mut bad = good.clone();
         if let Json::Obj(m) = &mut bad {

@@ -301,7 +301,10 @@ fn cmd_run(args: &Args) -> Result<String> {
     if args.bool_flag("pairwise")? {
         use crate::coordinator::load_data;
         use crate::permanova::{pairwise_permanova, PermanovaOpts};
-        let (mat, grouping) = load_data(&cfg)?;
+        let (tri, grouping) = load_data(&cfg)?;
+        // The oracle free functions keep their dense signature; mirror a
+        // transient copy from the packed triangle for this render only.
+        let mat = tri.to_dense();
         let pw = pairwise_permanova(
             &mat,
             &grouping,
@@ -329,7 +332,9 @@ fn cmd_run(args: &Args) -> Result<String> {
     // Companion tests (the full skbio-style workflow).
     if args.bool_flag("anosim")? || args.bool_flag("permdisp")? {
         use crate::coordinator::load_data;
-        let (mat, grouping) = load_data(&cfg)?;
+        let (tri, grouping) = load_data(&cfg)?;
+        let mat = tri.to_dense(); // transient oracle staging, as above
+
         if args.bool_flag("anosim")? {
             let a = crate::permanova::anosim(&mat, &grouping, cfg.n_perms, cfg.seed)?;
             out.push_str(&format!("ANOSIM:   R = {:.4}, p = {:.4}\n", a.r_obs, a.p_value));

@@ -18,20 +18,95 @@ pub use scheduler::run_coordinated;
 // Re-exported for compatibility; the structs live in `crate::report`.
 pub use crate::report::{AnalysisReport, DeviceStats, RunReport};
 
+use std::sync::Arc;
+
 use crate::config::{DataSource, RunConfig};
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{
+    random_euclidean_condensed, read_pdm_condensed, read_tsv_condensed, CondensedMatrix,
+    DistanceMatrix,
+};
 use crate::error::{Error, Result};
 use crate::permanova::Grouping;
 use crate::unifrac::{generate, unweighted_unifrac, SynthParams};
 
-/// Materialize the distance matrix + grouping a config describes.
+/// Anything that can materialize a packed triangle + grouping: the seam
+/// the dataset cache loads through.  [`RunConfig`] is the canonical
+/// implementor (its `data` section names the source); the out-of-core
+/// chunked source ROADMAP describes will be the second.
+pub trait CondensedSource {
+    /// Human-readable description of the source (for errors and logs).
+    fn describe(&self) -> String;
+
+    /// Load the packed triangle and its grouping.  The triangle is the
+    /// **only** resident copy — implementors must not retain a dense
+    /// staging matrix.
+    fn load_condensed(&self) -> Result<(Arc<CondensedMatrix>, Grouping)>;
+}
+
+impl CondensedSource for RunConfig {
+    fn describe(&self) -> String {
+        format!("{:?}", self.data)
+    }
+
+    fn load_condensed(&self) -> Result<(Arc<CondensedMatrix>, Grouping)> {
+        load_data(self)
+    }
+}
+
+/// Materialize the packed triangle + grouping a config describes —
+/// **dense-free**: every source streams straight into the `n(n-1)/2`
+/// buffer.
 ///
-/// File-sourced matrices (`.pdm` binary, TSV) are **untrusted input** and
-/// are validated against the PERMANOVA contract on load (symmetric within
-/// `cfg.data_tol`, zero diagonal, finite, non-negative) — an asymmetric or
-/// negative matrix is a loud [`Error::Config`], never a silent analysis.
-/// Synthetic sources are valid by construction and skip the O(n²) check.
-pub fn load_data(cfg: &RunConfig) -> Result<(DistanceMatrix, Grouping)> {
+/// File-sourced matrices (`.pdm` binary, TSV) are **untrusted input**; the
+/// PERMANOVA contract (symmetric within `cfg.data_tol`, zero diagonal,
+/// finite, non-negative) is enforced *in the streaming pass* — each lower
+/// entry is checked against its already-written mirror — so a malformed
+/// matrix is a loud [`Error::Config`] naming the file and offending entry,
+/// never a silent analysis, and never a dense staging allocation.
+/// Synthetic Euclidean data generates packed rows directly; the UniFrac
+/// pipeline's dense distance matrix is transient (packed, then dropped).
+pub fn load_data(cfg: &RunConfig) -> Result<(Arc<CondensedMatrix>, Grouping)> {
+    match &cfg.data {
+        DataSource::Synthetic { n_dims, n_groups } => {
+            let tri = random_euclidean_condensed(*n_dims, 16, cfg.effective_data_seed() ^ 0xDA7A);
+            let grouping = Grouping::balanced(*n_dims, *n_groups)?;
+            Ok((Arc::new(tri), grouping))
+        }
+        DataSource::SyntheticUnifrac { n_taxa, n_samples, n_groups } => {
+            let ds = generate(&SynthParams {
+                n_taxa: *n_taxa,
+                n_samples: *n_samples,
+                n_envs: *n_groups,
+                seed: cfg.effective_data_seed() ^ 0xDA7A,
+                ..Default::default()
+            })?;
+            // The UniFrac compute emits a dense matrix; pack and drop it
+            // here so nothing downstream ever sees the n² copy.
+            let mat = unweighted_unifrac(&ds.tree, &ds.table, cfg.threads)?;
+            Ok((Arc::new(CondensedMatrix::from_dense(&mat)), ds.grouping))
+        }
+        DataSource::Pdm { path, labels_path } => {
+            let tri = read_pdm_condensed(path, cfg.data_tol)
+                .map_err(|e| wrap_ingest_err(path, cfg.data_tol, e))?;
+            check_loaded_n(&tri, path, cfg.data_tol)?;
+            let grouping = read_labels(labels_path, tri.n())?;
+            Ok((Arc::new(tri), grouping))
+        }
+        DataSource::Tsv { path, labels_path } => {
+            let (tri, _ids) = read_tsv_condensed(path, cfg.data_tol)
+                .map_err(|e| wrap_ingest_err(path, cfg.data_tol, e))?;
+            check_loaded_n(&tri, path, cfg.data_tol)?;
+            let grouping = read_labels(labels_path, tri.n())?;
+            Ok((Arc::new(tri), grouping))
+        }
+    }
+}
+
+/// Test-only oracle: the pre-streaming dense load path (read the full
+/// `n*n` matrix, then validate in a separate pass).  The ingestion
+/// conformance suite pins `load_data` bitwise against
+/// `CondensedMatrix::from_dense` of this.  **No non-test code calls it.**
+pub fn load_data_dense(cfg: &RunConfig) -> Result<(DistanceMatrix, Grouping)> {
     match &cfg.data {
         DataSource::Synthetic { n_dims, n_groups } => {
             let mat =
@@ -65,9 +140,39 @@ pub fn load_data(cfg: &RunConfig) -> Result<(DistanceMatrix, Grouping)> {
     }
 }
 
-/// Enforce the PERMANOVA input contract on a file-sourced matrix, turning
-/// the low-level validation failure into an actionable config error that
-/// names the file and the `[data] tol` knob.
+/// Wrap a streaming-ingest failure into the actionable config error that
+/// names the file and the `[data] tol` knob.  IO errors (missing file,
+/// truncation) pass through untouched — they already carry the path and
+/// are not a tolerance problem.
+fn wrap_ingest_err(path: &str, tol: f32, e: Error) -> Error {
+    match e {
+        Error::Io { .. } => e,
+        e => Error::Config(format!(
+            "invalid distance matrix in {path:?}: {e}; fix the input, symmetrize it, \
+             or raise the tolerance via `[data] tol` / --data-tol (current {tol})"
+        )),
+    }
+}
+
+/// The one contract check streaming cannot do per entry: PERMANOVA needs
+/// at least 3 objects.  (The streaming readers themselves accept n ≥ 1 so
+/// the conformance suite can exercise n = 2 edge rows.)
+fn check_loaded_n(tri: &CondensedMatrix, path: &str, tol: f32) -> Result<()> {
+    if tri.n() < 3 {
+        return Err(wrap_ingest_err(
+            path,
+            tol,
+            Error::InvalidInput(format!(
+                "need at least 3 objects for PERMANOVA, got {}",
+                tri.n()
+            )),
+        ));
+    }
+    Ok(())
+}
+
+/// Enforce the PERMANOVA input contract on a dense-loaded matrix (the
+/// test-only oracle path of [`load_data_dense`]).
 fn validate_loaded(mat: &DistanceMatrix, path: &str, tol: f32) -> Result<()> {
     mat.validate(tol).map_err(|e| {
         Error::Config(format!(

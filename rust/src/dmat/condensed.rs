@@ -63,10 +63,14 @@ impl CondensedMatrix {
     }
 
     /// Wrap a condensed vector (scipy `pdist` order); checks the length.
+    ///
+    /// A mismatched length is a typed [`Error::Config`] here, at the
+    /// construction boundary — not a panic later inside
+    /// [`row`](Self::row) when an offset walks past the short buffer.
     pub fn from_values(n: usize, values: Vec<f32>) -> Result<CondensedMatrix> {
         let want = n * n.saturating_sub(1) / 2;
         if values.len() != want {
-            return Err(Error::InvalidInput(format!(
+            return Err(Error::Config(format!(
                 "condensed buffer has {} entries, want n(n-1)/2 = {want} for n = {n}",
                 values.len()
             )));
@@ -119,6 +123,13 @@ impl CondensedMatrix {
     /// kernels actually stream (≤ ~0.5× the dense `n*n*4`).
     pub fn nbytes(&self) -> usize {
         self.values.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Total resident bytes including the row-offset table: the honest
+    /// memory-accounting number for a cached dataset that holds *only*
+    /// this packed buffer (`n(n-1)/2 · 4` values + `(n+1) · 8` offsets).
+    pub fn resident_bytes(&self) -> usize {
+        self.nbytes() + self.offsets.len() * std::mem::size_of::<usize>()
     }
 }
 
@@ -208,7 +219,20 @@ mod tests {
     #[test]
     fn from_values_checks_length() {
         assert!(CondensedMatrix::from_values(4, vec![0.0; 6]).is_ok());
-        assert!(CondensedMatrix::from_values(4, vec![0.0; 5]).is_err());
+        // The bugfix pin: a bad length is a typed Config error at the
+        // construction boundary, not a later panic in row().
+        match CondensedMatrix::from_values(4, vec![0.0; 5]) {
+            Err(Error::Config(m)) => assert!(m.contains("n(n-1)/2"), "{m}"),
+            other => panic!("want Error::Config, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resident_bytes_counts_values_plus_offsets() {
+        for n in [2usize, 17, 64] {
+            let pm = CondensedMatrix::from_dense(&DistanceMatrix::zeros(n));
+            assert_eq!(pm.resident_bytes(), n * (n - 1) / 2 * 4 + (n + 1) * 8, "n={n}");
+        }
     }
 
     #[test]

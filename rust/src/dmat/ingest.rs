@@ -1,0 +1,357 @@
+//! Streaming ingestion: every data source builds the packed triangle
+//! directly — no dense `n*n` staging copy.
+//!
+//! PR 5 made [`CondensedMatrix`] the canonical kernel operand but the
+//! loaders still materialized the full dense matrix first, so total
+//! allocation peaked at ~1.5× the condensed size.  This module closes that
+//! gap: the TSV/Pdm readers and the synthetic generator emit packed rows
+//! straight into the `n(n-1)/2` buffer, and the PERMANOVA input contract
+//! (finite, non-negative, zero diagonal, symmetric within `tol`) is
+//! enforced **in the same streaming pass** by [`TriangleSink`] — a lower
+//! entry `(r, c<r)` is compared against its mirror `(c, r)`, which was
+//! already written when row `c` streamed through, so no dense cross-read
+//! is ever needed.
+//!
+//! **Bitwise contract:** for any well-formed source, the streamed triangle
+//! is bit-identical to `CondensedMatrix::from_dense` of the dense loader's
+//! result — same values, same scipy `pdist` order.  The dense loaders
+//! survive as test-only oracles; `rust/tests/ingest_streaming.rs` pins the
+//! equivalence per source.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use super::condensed::CondensedMatrix;
+use super::PDM_MAGIC;
+use crate::error::{Error, Result};
+use crate::rng::Xoshiro256pp;
+
+/// Packed index of the upper-triangle entry `(lo, hi)` (`lo < hi`) for an
+/// `n`-object matrix: row `lo` starts at `lo*(n-1) - lo*(lo-1)/2`.
+#[inline]
+fn pack_index(n: usize, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo < hi && hi < n);
+    lo * (n - 1) - lo * (lo - 1) / 2 + (hi - lo - 1)
+}
+
+/// Streaming builder + validator for the packed triangle.
+///
+/// Feed entries in row-major order (`r` ascending, `c` ascending within
+/// each row; square sources feed all `n*n` entries, triangular generators
+/// may feed only `c > r`).  Upper entries are stored; the diagonal and the
+/// lower triangle are validated against the already-written upper entries
+/// and discarded.  Every check the dense `DistanceMatrix::validate` ran as
+/// a separate post-load pass happens here, per entry, as the bytes arrive:
+///
+/// * every entry must be finite (including the diagonal — the dense
+///   validator's `|d| > tol` test silently passed a NaN diagonal; the
+///   streaming pass closes that hole);
+/// * diagonal entries must be 0 within `tol`;
+/// * off-diagonal entries must be non-negative;
+/// * a lower entry `(r, c)` must match its mirror `(c, r)` within `tol`.
+///
+/// Errors are [`Error::InvalidInput`] naming the offending `(row, col)`;
+/// the loaders wrap them with the file path.
+#[derive(Debug)]
+pub struct TriangleSink {
+    n: usize,
+    tol: f32,
+    values: Vec<f32>,
+}
+
+impl TriangleSink {
+    /// A sink for an `n`-object matrix with symmetry/diagonal tolerance
+    /// `tol`.
+    pub fn new(n: usize, tol: f32) -> TriangleSink {
+        TriangleSink { n, tol, values: Vec::with_capacity(n * n.saturating_sub(1) / 2) }
+    }
+
+    /// Ingest entry `(r, c) = v`.  Upper entries are appended to the
+    /// packed buffer; diagonal/lower entries are validated and dropped.
+    pub fn entry(&mut self, r: usize, c: usize, v: f32) -> Result<()> {
+        if !v.is_finite() {
+            return Err(Error::InvalidInput(format!("non-finite distance at ({r},{c})")));
+        }
+        if r == c {
+            if v.abs() > self.tol {
+                return Err(Error::InvalidInput(format!(
+                    "diagonal entry ({r},{r}) = {v}, want 0"
+                )));
+            }
+            return Ok(());
+        }
+        if v < 0.0 {
+            let (lo, hi) = if r < c { (r, c) } else { (c, r) };
+            return Err(Error::InvalidInput(format!(
+                "negative distance at ({lo},{hi}): {v}"
+            )));
+        }
+        if c > r {
+            // Row-major streaming invariant: this upper entry lands exactly
+            // at the next packed slot.
+            debug_assert_eq!(self.values.len(), pack_index(self.n, r, c));
+            self.values.push(v);
+        } else {
+            // Mirror check: row `c` already streamed, so the upper twin is
+            // in the buffer.
+            let mirror = self.values[pack_index(self.n, c, r)];
+            if (v - mirror).abs() > self.tol {
+                return Err(Error::InvalidInput(format!(
+                    "asymmetry at ({c},{r}): {mirror} vs {v} (tol {})",
+                    self.tol
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Finish: every upper entry must have arrived.
+    pub fn finish(self) -> Result<CondensedMatrix> {
+        let want = self.n * self.n.saturating_sub(1) / 2;
+        if self.values.len() != want {
+            return Err(Error::InvalidInput(format!(
+                "matrix ended early: got {} of {want} distances for n = {}",
+                self.values.len(),
+                self.n
+            )));
+        }
+        CondensedMatrix::from_values(self.n, self.values)
+    }
+}
+
+/// Read a scikit-bio-style TSV straight into the packed triangle,
+/// validating as it streams; returns the triangle and the sample ids.
+///
+/// Unlike the dense oracle reader (which zero-filled missing trailing
+/// rows/columns), a ragged or truncated matrix is an error naming the
+/// offending row.
+pub fn read_tsv_condensed(
+    path: impl AsRef<Path>,
+    tol: f32,
+) -> Result<(CondensedMatrix, Vec<String>)> {
+    let p = path.as_ref();
+    let f = std::fs::File::open(p).map_err(|e| Error::io(p.display().to_string(), e))?;
+    let mut lines = BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::parse("dmat-tsv", p.display().to_string(), "empty file"))?
+        .map_err(|e| Error::io(p.display().to_string(), e))?;
+    let ids: Vec<String> = header.split('\t').skip(1).map(|s| s.to_string()).collect();
+    let n = ids.len();
+    if n == 0 {
+        return Err(Error::parse("dmat-tsv", p.display().to_string(), "no ids in header"));
+    }
+    let mut sink = TriangleSink::new(n, tol);
+    let mut row = 0usize;
+    for line in lines {
+        let line = line.map_err(|e| Error::io(p.display().to_string(), e))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if row >= n {
+            return Err(Error::parse("dmat-tsv", p.display().to_string(), "too many rows"));
+        }
+        let mut fields = line.split('\t');
+        let rid = fields.next().unwrap_or("");
+        if rid != ids[row] {
+            return Err(Error::parse(
+                "dmat-tsv",
+                format!("{} row {row}", p.display()),
+                format!("row id {rid:?} != header id {:?}", ids[row]),
+            ));
+        }
+        let mut cols = 0usize;
+        for (j, tok) in fields.enumerate() {
+            if j >= n {
+                return Err(Error::parse(
+                    "dmat-tsv",
+                    format!("{} row {row}", p.display()),
+                    "too many columns",
+                ));
+            }
+            let v: f32 = tok.trim().parse().map_err(|e| {
+                Error::parse(
+                    "dmat-tsv",
+                    format!("{} row {row} col {j}", p.display()),
+                    format!("{e}"),
+                )
+            })?;
+            sink.entry(row, j, v)?;
+            cols += 1;
+        }
+        if cols != n {
+            return Err(Error::parse(
+                "dmat-tsv",
+                format!("{} row {row}", p.display()),
+                format!("ragged row: {cols} columns, want {n}"),
+            ));
+        }
+        row += 1;
+    }
+    if row != n {
+        return Err(Error::parse(
+            "dmat-tsv",
+            p.display().to_string(),
+            format!("matrix ended early: {row} rows, want {n}"),
+        ));
+    }
+    Ok((sink.finish()?, ids))
+}
+
+/// Read the `PDM1` binary format straight into the packed triangle: one
+/// `n*4`-byte row buffer at a time, validated as it streams — the dense
+/// `n*n` staging allocation of the oracle reader never exists.
+pub fn read_pdm_condensed(path: impl AsRef<Path>, tol: f32) -> Result<CondensedMatrix> {
+    let p = path.as_ref();
+    let f = std::fs::File::open(p).map_err(|e| Error::io(p.display().to_string(), e))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)
+        .map_err(|e| Error::io(p.display().to_string(), e))?;
+    if &magic != PDM_MAGIC {
+        return Err(Error::parse("pdm", p.display().to_string(), "bad magic"));
+    }
+    let mut nb = [0u8; 8];
+    r.read_exact(&mut nb)
+        .map_err(|e| Error::io(p.display().to_string(), e))?;
+    let n = u64::from_le_bytes(nb) as usize;
+    if n == 0 || n > 1 << 20 {
+        let msg = format!("implausible n = {n}");
+        return Err(Error::parse("pdm", p.display().to_string(), msg));
+    }
+    let mut sink = TriangleSink::new(n, tol);
+    let mut rowbuf = vec![0u8; n * 4];
+    for i in 0..n {
+        r.read_exact(&mut rowbuf).map_err(|e| {
+            Error::io(format!("{} row {i}", p.display()), e)
+        })?;
+        for (j, c) in rowbuf.chunks_exact(4).enumerate() {
+            sink.entry(i, j, f32::from_le_bytes([c[0], c[1], c[2], c[3]]))?;
+        }
+    }
+    sink.finish()
+}
+
+/// Euclidean distances between `n` random points in `dim` dimensions,
+/// generated straight into the packed triangle.  Consumes the RNG in
+/// exactly the order `DistanceMatrix::random_euclidean` does and performs
+/// the identical f32 operation sequence per pair, so the result is
+/// bit-identical to packing the dense generator's output — without the
+/// dense matrix ever existing.
+pub fn random_euclidean_condensed(n: usize, dim: usize, seed: u64) -> CondensedMatrix {
+    let mut rng = Xoshiro256pp::new(seed);
+    let pts: Vec<f32> = (0..n * dim)
+        .map(|_| {
+            let s: f32 = (0..4).map(|_| rng.next_f32()).sum::<f32>() - 2.0;
+            s
+        })
+        .collect();
+    let mut values = Vec::with_capacity(n * n.saturating_sub(1) / 2);
+    let mut maxd = 0.0f32;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let mut acc = 0.0f32;
+            for d in 0..dim {
+                let diff = pts[i * dim + d] - pts[j * dim + d];
+                acc += diff * diff;
+            }
+            let dist = acc.sqrt();
+            maxd = maxd.max(dist);
+            values.push(dist);
+        }
+    }
+    if maxd > 0.0 {
+        for v in values.iter_mut() {
+            *v /= maxd;
+        }
+    }
+    CondensedMatrix::from_values(n, values)
+        .expect("generator emits exactly n(n-1)/2 distances")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmat::DistanceMatrix;
+
+    #[test]
+    fn synthetic_streamed_equals_dense_then_pack_bitwise() {
+        for (n, dim, seed) in [(2usize, 4, 7u64), (3, 16, 1), (17, 5, 9), (64, 16, 42)] {
+            let dense = DistanceMatrix::random_euclidean(n, dim, seed);
+            let oracle = CondensedMatrix::from_dense(&dense);
+            let streamed = random_euclidean_condensed(n, dim, seed);
+            assert_eq!(streamed.n(), n);
+            let a: Vec<u32> = streamed.values().iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = oracle.values().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "n={n} dim={dim} seed={seed}");
+        }
+    }
+
+    #[test]
+    fn sink_validates_per_entry() {
+        let mut s = TriangleSink::new(3, 1e-6);
+        s.entry(0, 0, 0.0).unwrap();
+        s.entry(0, 1, 1.0).unwrap();
+        s.entry(0, 2, 2.0).unwrap();
+        s.entry(1, 0, 1.0).unwrap(); // mirror OK
+        s.entry(1, 1, 0.0).unwrap();
+        s.entry(1, 2, 0.5).unwrap();
+        let e = s.entry(2, 0, 9.0).unwrap_err().to_string();
+        assert!(e.contains("asymmetry at (0,2)"), "{e}");
+
+        let mut s = TriangleSink::new(3, 1e-6);
+        assert!(s.entry(0, 0, 0.25).unwrap_err().to_string().contains("diagonal"));
+        assert!(s.entry(0, 1, f32::NAN).unwrap_err().to_string().contains("non-finite"));
+        assert!(s.entry(0, 0, f32::NAN).unwrap_err().to_string().contains("non-finite"));
+        assert!(s.entry(0, 1, -1.0).unwrap_err().to_string().contains("negative"));
+    }
+
+    #[test]
+    fn sink_rejects_early_end() {
+        let mut s = TriangleSink::new(3, 1e-6);
+        s.entry(0, 1, 1.0).unwrap();
+        let e = s.finish().unwrap_err().to_string();
+        assert!(e.contains("ended early"), "{e}");
+    }
+
+    #[test]
+    fn tsv_and_pdm_streamed_equal_the_oracles() {
+        let dir = std::env::temp_dir().join("permanova_apu_test_ingest");
+        std::fs::create_dir_all(&dir).unwrap();
+        for n in [2usize, 3, 17, 64] {
+            let dense = DistanceMatrix::random_euclidean(n, 6, n as u64);
+            let oracle = CondensedMatrix::from_dense(&dense);
+
+            let tsv = dir.join(format!("m{n}.tsv"));
+            dense.write_tsv(&tsv, None).unwrap();
+            let (streamed, ids) = read_tsv_condensed(&tsv, 1e-6).unwrap();
+            assert_eq!(ids.len(), n);
+            assert_eq!(streamed.values(), oracle.values(), "tsv n={n}");
+
+            let pdm = dir.join(format!("m{n}.pdm"));
+            dense.write_binary(&pdm).unwrap();
+            let streamed = read_pdm_condensed(&pdm, 1e-6).unwrap();
+            assert_eq!(streamed.values(), oracle.values(), "pdm n={n}");
+        }
+    }
+
+    #[test]
+    fn ragged_and_empty_tsv_are_errors() {
+        let dir = std::env::temp_dir().join("permanova_apu_test_ingest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ragged = dir.join("ragged.tsv");
+        std::fs::write(&ragged, "\ta\tb\na\t0\t1\nb\t1\n").unwrap();
+        let e = read_tsv_condensed(&ragged, 1e-6).unwrap_err().to_string();
+        assert!(e.contains("ragged") || e.contains("row"), "{e}");
+
+        let empty = dir.join("empty.tsv");
+        std::fs::write(&empty, "").unwrap();
+        let e = read_tsv_condensed(&empty, 1e-6).unwrap_err().to_string();
+        assert!(e.contains("empty file"), "{e}");
+
+        let short = dir.join("short.tsv");
+        std::fs::write(&short, "\ta\tb\ta\t0\t1\n").unwrap();
+        let e = read_tsv_condensed(&short, 1e-6).unwrap_err().to_string();
+        assert!(e.contains("ended early"), "{e}");
+    }
+}

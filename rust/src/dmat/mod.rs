@@ -17,9 +17,13 @@
 //!   PERMANOVA workflow pairs with its distance matrices.
 
 pub mod condensed;
+pub mod ingest;
 pub mod pcoa;
 
 pub use condensed::{CondensedMatrix, CondensedView};
+pub use ingest::{
+    random_euclidean_condensed, read_pdm_condensed, read_tsv_condensed, TriangleSink,
+};
 pub use pcoa::{jacobi_eigh, jacobi_eigh_in_place, pcoa, Pcoa};
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};

@@ -172,7 +172,7 @@ pub fn anosim(
     let mut r_all = Vec::with_capacity(n_perms + 1);
     for i in 0..n_perms + 1 {
         plan.fill(i, &mut row);
-        r_all.push(kernel.eval_labels(mat, grouping, &row));
+        r_all.push(kernel.eval_labels(grouping, &row));
     }
     let r_obs = r_all[0];
     Ok(AnosimResult {

@@ -174,13 +174,60 @@ impl StatKernel {
         Self::prepare_shared(method, mat, grouping, None)
     }
 
+    /// Run the method's precomputation straight from the **packed
+    /// triangle** — the dense-free path every production caller uses (the
+    /// coordinator streams sources into a [`CondensedMatrix`]; no dense
+    /// copy exists to prepare from).  Bitwise-equal to
+    /// [`prepare`](Self::prepare) on the corresponding dense matrix: the
+    /// PERMANOVA and ANOSIM preludes already consume condensed values, and
+    /// PERMDISP — whose PCoA is the one dense boundary left — stages a
+    /// transient `to_dense()` mirror for its prelude and drops it before
+    /// returning, so nothing dense is retained.
+    pub fn prepare_packed(
+        method: Method,
+        tri: &Arc<CondensedMatrix>,
+        grouping: &Grouping,
+    ) -> Result<StatKernel> {
+        if grouping.n() != tri.n() {
+            return Err(Error::InvalidInput(format!(
+                "grouping n = {} vs matrix n = {}",
+                grouping.n(),
+                tri.n()
+            )));
+        }
+        match method {
+            Method::Permanova => Ok(StatKernel::Permanova(PermanovaStat {
+                s_t: st_of_condensed(tri),
+                n: tri.n(),
+                packed: Arc::clone(tri),
+            })),
+            Method::Anosim => {
+                Ok(StatKernel::Anosim(AnosimStat { ranks: rank_condensed(tri.values()) }))
+            }
+            Method::Permdisp => {
+                let mat = tri.to_dense();
+                let (dists, group_dispersions) = dispersion_prelude(&mat, grouping)?;
+                Ok(StatKernel::Permdisp(PermdispStat {
+                    dists,
+                    k: grouping.k(),
+                    group_dispersions,
+                }))
+            }
+            Method::PairwisePermanova => Err(Error::InvalidInput(
+                "pairwise PERMANOVA is a fan-out of per-pair PERMANOVA jobs; \
+                 prepare a Permanova kernel per pair instead"
+                    .into(),
+            )),
+        }
+    }
+
     /// [`prepare`](Self::prepare) with an optionally **pre-packed**
-    /// triangle.  The service cache builds one [`CondensedMatrix`] per
-    /// dataset and hands it to every method's prelude through this seam,
-    /// so the packed buffer is paid for once per dataset — not once per
-    /// job, not once per method.  Sharing is bitwise-neutral: the packed
-    /// values are exactly what `CondensedMatrix::from_dense(mat)` would
-    /// produce (checked against the matrix edge).
+    /// triangle.  Kept as the dense-side seam for tests and wrappers that
+    /// start from a [`DistanceMatrix`]; production code prepares through
+    /// [`prepare_packed`](Self::prepare_packed).  Sharing is
+    /// bitwise-neutral: the packed values are exactly what
+    /// `CondensedMatrix::from_dense(mat)` would produce (checked against
+    /// the matrix edge).
     pub fn prepare_shared(
         method: Method,
         mat: &DistanceMatrix,
@@ -243,11 +290,11 @@ impl StatKernel {
     /// Verify this kernel was prepared for the given problem shape: the
     /// cheap guard the engine runs before reusing a cached prelude.  It
     /// checks everything derivable from the prelude (object count, and the
-    /// group count for PERMDISP) — a size-matched but *content*-different
-    /// matrix is the caller's contract to avoid (the `DatasetCache` keys on
-    /// the data source, so a cached prelude always belongs to its dataset).
-    pub fn check_problem(&self, mat: &DistanceMatrix, grouping: &Grouping) -> Result<()> {
-        let n = mat.n();
+    /// group count for PERMDISP) against the problem's edge `n` — a
+    /// size-matched but *content*-different matrix is the caller's
+    /// contract to avoid (the `DatasetCache` keys on the data source, so a
+    /// cached prelude always belongs to its dataset).
+    pub fn check_problem(&self, n: usize, grouping: &Grouping) -> Result<()> {
         let prepared_n = match self {
             StatKernel::Permanova(p) => p.n,
             // ranks.len() = n(n-1)/2 uniquely determines n (round, don't
@@ -322,18 +369,20 @@ impl StatKernel {
     }
 
     /// Evaluate the statistic for one labelling (the generic f64 path).
+    /// Matrix-free: every prelude already carries its packed operand, and
+    /// the problem edge `n` is `labels.len()`.
     ///
     /// For [`StatKernel::Permanova`] this is the f64 brute-force *oracle*
     /// (`sw_brute_f64`), not the f32 production kernels — backends keep
     /// their formulation-specific fast paths for that variant and only
     /// tests/wrappers call this one.
-    pub fn eval_labels(&self, mat: &DistanceMatrix, grouping: &Grouping, labels: &[u32]) -> f64 {
+    pub fn eval_labels(&self, grouping: &Grouping, labels: &[u32]) -> f64 {
         match self {
             StatKernel::Permanova(p) => {
                 let sw = sw_brute_f64(p.packed.view(), labels, grouping.inv_sizes());
                 fstat_from_sw(sw, p.s_t, p.n, grouping.k())
             }
-            StatKernel::Anosim(a) => r_statistic(&a.ranks, mat.n(), labels),
+            StatKernel::Anosim(a) => r_statistic(&a.ranks, labels.len(), labels),
             StatKernel::Permdisp(p) => anova_f(&p.dists, labels, p.k),
         }
     }
@@ -345,18 +394,18 @@ impl StatKernel {
 ///
 /// This is the scalar one-permutation-per-step loop every backend uses for
 /// methods without a specialized path; results are independent of the
-/// shard spec (the scheduler's determinism contract).
+/// shard spec (the scheduler's determinism contract).  Matrix-free: the
+/// prelude carries the packed operand, the grouping carries `n`.
 pub fn eval_plan_range(
     kernel: &StatKernel,
-    mat: &DistanceMatrix,
     grouping: &Grouping,
     plan: &PermutationPlan,
     start: usize,
     count: usize,
     spec: &ShardSpec,
 ) -> Vec<f64> {
-    let n = mat.n();
-    assert_eq!(plan.n(), n, "plan/matrix size mismatch");
+    let n = grouping.n();
+    assert_eq!(plan.n(), n, "plan/grouping size mismatch");
     let mut out = vec![0.0f64; count];
     crate::backend::shard::run_sharded_with(
         spec,
@@ -365,7 +414,7 @@ pub fn eval_plan_range(
         |row, lo, slice| {
             for (i, o) in slice.iter_mut().enumerate() {
                 plan.fill(start + lo + i, row);
-                *o = kernel.eval_labels(mat, grouping, row);
+                *o = kernel.eval_labels(grouping, row);
             }
         },
     );
@@ -391,7 +440,6 @@ pub fn eval_plan_range(
 /// any block width, shard size, worker count and SMT setting.
 pub fn eval_plan_range_blocked(
     kernel: &StatKernel,
-    mat: &DistanceMatrix,
     grouping: &Grouping,
     plan: &PermutationPlan,
     start: usize,
@@ -399,8 +447,8 @@ pub fn eval_plan_range_blocked(
     perm_block: usize,
     spec: &ShardSpec,
 ) -> Vec<f64> {
-    let n = mat.n();
-    assert_eq!(plan.n(), n, "plan/matrix size mismatch");
+    let n = grouping.n();
+    assert_eq!(plan.n(), n, "plan/grouping size mismatch");
     let block = super::batch::resolve_perm_block(perm_block).min(count.max(1));
     let spec = spec.aligned_to_block(count, block);
     let mut out = vec![0.0f64; count];
@@ -435,7 +483,7 @@ pub fn eval_plan_range_blocked(
                     _ => {
                         for (j, o) in dst.iter_mut().enumerate() {
                             plan.fill(start + lo + off + j, row);
-                            *o = kernel.eval_labels(mat, grouping, row);
+                            *o = kernel.eval_labels(grouping, row);
                         }
                     }
                 }
@@ -538,21 +586,50 @@ mod tests {
     }
 
     #[test]
+    fn prepare_packed_matches_dense_prepare_bitwise() {
+        // The dense-free production path produces the exact prelude the
+        // dense oracle path would — per method, bit for bit.
+        let (mat, grouping) = fixture(24, 3, 5);
+        let tri = Arc::new(CondensedMatrix::from_dense(&mat));
+        for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
+            let dense = StatKernel::prepare(method, &mat, &grouping).unwrap();
+            let packed = StatKernel::prepare_packed(method, &tri, &grouping).unwrap();
+            match (&dense, &packed) {
+                (StatKernel::Permanova(a), StatKernel::Permanova(b)) => {
+                    assert_eq!(a.s_t.to_bits(), b.s_t.to_bits());
+                    assert_eq!(a.packed.values(), b.packed.values());
+                    assert!(Arc::ptr_eq(&b.packed, &tri), "must reference, not re-pack");
+                }
+                (StatKernel::Anosim(a), StatKernel::Anosim(b)) => assert_eq!(a.ranks, b.ranks),
+                (StatKernel::Permdisp(a), StatKernel::Permdisp(b)) => {
+                    assert_eq!(a.dists, b.dists);
+                    assert_eq!(a.group_dispersions, b.group_dispersions);
+                    assert_eq!(a.k, b.k);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(StatKernel::prepare_packed(Method::PairwisePermanova, &tri, &grouping).is_err());
+        let g_bad = Grouping::balanced(30, 3).unwrap();
+        assert!(StatKernel::prepare_packed(Method::Permanova, &tri, &g_bad).is_err());
+    }
+
+    #[test]
     fn check_problem_guards_prelude_reuse() {
         let (mat, grouping) = fixture(24, 3, 5);
         let (other_mat, other_grouping) = fixture(30, 3, 5);
         for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
             let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
-            kernel.check_problem(&mat, &grouping).unwrap();
+            kernel.check_problem(mat.n(), &grouping).unwrap();
             assert!(
-                kernel.check_problem(&other_mat, &other_grouping).is_err(),
+                kernel.check_problem(other_mat.n(), &other_grouping).is_err(),
                 "{method:?}: prelude for n=24 must not serve n=30"
             );
         }
         // PERMDISP additionally pins the group count.
         let kernel = StatKernel::prepare(Method::Permdisp, &mat, &grouping).unwrap();
         let g2 = Grouping::balanced(24, 2).unwrap();
-        assert!(kernel.check_problem(&mat, &g2).is_err(), "k=3 prelude must not serve k=2");
+        assert!(kernel.check_problem(mat.n(), &g2).is_err(), "k=3 prelude must not serve k=2");
     }
 
     #[test]
@@ -566,11 +643,11 @@ mod tests {
         let a = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
         let legacy = anosim(&mat, &grouping, 19, 41).unwrap();
         plan.fill(0, &mut row);
-        assert_eq!(a.eval_labels(&mat, &grouping, &row), legacy.r_obs);
+        assert_eq!(a.eval_labels(&grouping, &row), legacy.r_obs);
 
         let d = StatKernel::prepare(Method::Permdisp, &mat, &grouping).unwrap();
         let legacy = permdisp(&mat, &grouping, 19, 41).unwrap();
-        assert_eq!(d.eval_labels(&mat, &grouping, &row), legacy.f_obs);
+        assert_eq!(d.eval_labels(&grouping, &row), legacy.f_obs);
         match &d {
             StatKernel::Permdisp(p) => {
                 assert_eq!(p.group_dispersions, legacy.group_dispersions)
@@ -585,21 +662,14 @@ mod tests {
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 7, 40);
         for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
             let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
-            let base = eval_plan_range(
-                &kernel,
-                &mat,
-                &grouping,
-                &plan,
-                0,
-                40,
-                &ShardSpec::with_workers(1),
-            );
+            let base =
+                eval_plan_range(&kernel, &grouping, &plan, 0, 40, &ShardSpec::with_workers(1));
             for spec in [
                 ShardSpec::with_workers(3),
                 ShardSpec { shard_size: 7, workers: 2, smt: true },
                 ShardSpec::default(),
             ] {
-                let got = eval_plan_range(&kernel, &mat, &grouping, &plan, 0, 40, &spec);
+                let got = eval_plan_range(&kernel, &grouping, &plan, 0, 40, &spec);
                 assert_eq!(base, got, "{method:?} {spec:?}");
             }
         }
@@ -611,24 +681,16 @@ mod tests {
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 17, 50);
         for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
             let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
-            let want = eval_plan_range(
-                &kernel,
-                &mat,
-                &grouping,
-                &plan,
-                0,
-                50,
-                &ShardSpec::with_workers(1),
-            );
+            let want =
+                eval_plan_range(&kernel, &grouping, &plan, 0, 50, &ShardSpec::with_workers(1));
             for block in [1usize, 3, 8, 64] {
                 for spec in [
                     ShardSpec::with_workers(1),
                     ShardSpec { shard_size: 7, workers: 3, smt: false },
                     ShardSpec { shard_size: 16, workers: 2, smt: true },
                 ] {
-                    let got = eval_plan_range_blocked(
-                        &kernel, &mat, &grouping, &plan, 0, 50, block, &spec,
-                    );
+                    let got =
+                        eval_plan_range_blocked(&kernel, &grouping, &plan, 0, 50, block, &spec);
                     for (i, (g, w)) in got.iter().zip(&want).enumerate() {
                         assert_eq!(
                             g.to_bits(),
@@ -647,9 +709,9 @@ mod tests {
         let plan = PermutationPlan::new(grouping.labels().to_vec(), 29, 40);
         let kernel = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
         let spec = ShardSpec::with_workers(2);
-        let full = eval_plan_range_blocked(&kernel, &mat, &grouping, &plan, 0, 40, 8, &spec);
-        let head = eval_plan_range_blocked(&kernel, &mat, &grouping, &plan, 0, 13, 8, &spec);
-        let tail = eval_plan_range_blocked(&kernel, &mat, &grouping, &plan, 13, 27, 8, &spec);
+        let full = eval_plan_range_blocked(&kernel, &grouping, &plan, 0, 40, 8, &spec);
+        let head = eval_plan_range_blocked(&kernel, &grouping, &plan, 0, 13, 8, &spec);
+        let tail = eval_plan_range_blocked(&kernel, &grouping, &plan, 13, 27, 8, &spec);
         assert_eq!(&full[..13], &head[..]);
         assert_eq!(&full[13..], &tail[..]);
     }

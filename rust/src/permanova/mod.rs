@@ -53,7 +53,8 @@ pub use method::{
     StatKernel,
 };
 pub use pairwise::{
-    pairwise_permanova, pairwise_seed, pairwise_subproblem, PairwiseEntry, PairwiseResult,
+    pairwise_permanova, pairwise_seed, pairwise_subproblem, pairwise_subproblem_condensed,
+    PairwiseEntry, PairwiseResult,
 };
 pub use stats::{
     fstat_from_sw, permanova, pvalue, st_of, st_of_condensed, PermanovaOpts, PermanovaResult,

@@ -16,7 +16,7 @@
 
 use super::grouping::Grouping;
 use super::stats::{permanova, PermanovaOpts};
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::error::Result;
 
 /// One pair's test result.
@@ -69,6 +69,41 @@ pub fn pairwise_subproblem(
             sub.data_mut()[r * m + c] = mat.get(i, j);
         }
     }
+    let labels: Vec<u32> = idx
+        .iter()
+        .map(|&i| (grouping.labels()[i] == b) as u32)
+        .collect();
+    Ok((sub, Grouping::new(labels)?))
+}
+
+/// [`pairwise_subproblem`] straight from the packed triangle: extract the
+/// pair's sub-triangle without materializing either the parent or the
+/// child as a dense matrix.  Bitwise-identical to packing the dense
+/// extractor's output — both copy the same f32 entries in the same
+/// `(row, col > row)` order — which the engine's dense-free pairwise
+/// fan-out relies on.
+pub fn pairwise_subproblem_condensed(
+    tri: &CondensedMatrix,
+    grouping: &Grouping,
+    a: u32,
+    b: u32,
+) -> Result<(CondensedMatrix, Grouping)> {
+    let idx: Vec<usize> = grouping
+        .labels()
+        .iter()
+        .enumerate()
+        .filter(|(_, &g)| g == a || g == b)
+        .map(|(i, _)| i)
+        .collect();
+    let m = idx.len();
+    let mut values = Vec::with_capacity(m * m.saturating_sub(1) / 2);
+    for r in 0..m {
+        for c in (r + 1)..m {
+            values.push(tri.get(idx[r], idx[c]));
+        }
+    }
+    let sub = CondensedMatrix::from_values(m, values)
+        .expect("sub-triangle is built with exactly m(m-1)/2 entries");
     let labels: Vec<u32> = idx
         .iter()
         .map(|&i| (grouping.labels()[i] == b) as u32)
@@ -186,5 +221,22 @@ mod tests {
         // Distances survive extraction: check one known pair.
         // Objects 0 (g0) and 2 (g2) are sub-indices 0 and 1.
         assert_eq!(sub.get(0, 1), mat.get(0, 2));
+    }
+
+    #[test]
+    fn condensed_subproblem_matches_dense_extraction_bitwise() {
+        let (mat, grouping) = fixture();
+        let tri = CondensedMatrix::from_dense(&mat);
+        for (a, b) in [(0u32, 1u32), (0, 2), (1, 2)] {
+            let (dense_sub, dense_g) = pairwise_subproblem(&mat, &grouping, a, b).unwrap();
+            let (packed_sub, packed_g) =
+                pairwise_subproblem_condensed(&tri, &grouping, a, b).unwrap();
+            assert_eq!(packed_sub.n(), dense_sub.n(), "pair ({a}, {b})");
+            assert_eq!(packed_g.labels(), dense_g.labels());
+            let packed_of_dense = CondensedMatrix::from_dense(&dense_sub);
+            let lhs: Vec<u32> = packed_sub.values().iter().map(|v| v.to_bits()).collect();
+            let rhs: Vec<u32> = packed_of_dense.values().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(lhs, rhs, "pair ({a}, {b}) sub-triangle must be bitwise identical");
+        }
     }
 }

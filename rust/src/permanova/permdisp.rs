@@ -147,7 +147,7 @@ pub fn permdisp(
     let mut f_all = Vec::with_capacity(n_perms + 1);
     for i in 0..n_perms + 1 {
         plan.fill(i, &mut row);
-        f_all.push(kernel.eval_labels(mat, grouping, &row));
+        f_all.push(kernel.eval_labels(grouping, &row));
     }
     let f_obs = f_all[0];
     Ok(PermdispResult {

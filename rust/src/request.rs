@@ -22,9 +22,11 @@
 //! # let _ = (report, hit);
 //! ```
 //!
-//! Pre-loaded data (`with_data`) and pre-prepared kernels
-//! (`with_prelude`) slot into the same builder; `via_cache` is exclusive
-//! with both, because the cache *is* a data source and prelude manager.
+//! Pre-loaded data (`with_condensed` for the engine's packed-triangle
+//! operand, `with_data` for a dense matrix that is packed transiently at
+//! run time) and pre-prepared kernels (`with_prelude`) slot into the same
+//! builder; `via_cache` is exclusive with both, because the cache *is* a
+//! data source and prelude manager.
 //!
 //! Validation contract (inherited from the old entrypoints, now stated
 //! once): a request that **sources its own data** (config-loaded or
@@ -34,12 +36,24 @@
 //! problem agreement).  The old names survive as thin facades over this
 //! builder so existing code compiles unchanged.
 
+use std::sync::Arc;
+
 use crate::config::RunConfig;
-use crate::dmat::DistanceMatrix;
+use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::error::{Error, Result};
 use crate::permanova::{Grouping, Method, StatKernel};
 use crate::report::AnalysisReport;
 use crate::service::DatasetCache;
+
+/// How caller-supplied data arrives: the packed triangle directly (the
+/// engine's native operand — zero-copy into the seam) or a dense matrix
+/// that is packed transiently when the request runs (oracle/test
+/// convenience; the dense copy stays with the caller, the engine never
+/// retains it).
+enum DataHandoff<'a> {
+    Condensed(&'a Arc<CondensedMatrix>, &'a Grouping),
+    Dense(&'a DistanceMatrix, &'a Grouping),
+}
 
 /// A fully-described analysis: configuration plus data-source plus
 /// optional prepared-kernel handoff.  Build with [`new`](Self::new),
@@ -47,7 +61,7 @@ use crate::service::DatasetCache;
 #[must_use = "an AnalysisRequest does nothing until run() or run_traced()"]
 pub struct AnalysisRequest<'a> {
     cfg: &'a RunConfig,
-    data: Option<(&'a DistanceMatrix, &'a Grouping)>,
+    data: Option<DataHandoff<'a>>,
     prelude: Option<&'a StatKernel>,
     cache: Option<&'a DatasetCache>,
 }
@@ -58,14 +72,28 @@ impl<'a> AnalysisRequest<'a> {
         AnalysisRequest { cfg, data: None, prelude: None, cache: None }
     }
 
-    /// Run over caller-supplied data instead of loading from the config's
-    /// data source.
+    /// Run over a caller-supplied **packed triangle** — the engine's
+    /// canonical operand, handed through without any dense staging.
+    pub fn with_condensed(
+        mut self,
+        tri: &'a Arc<CondensedMatrix>,
+        grouping: &'a Grouping,
+    ) -> AnalysisRequest<'a> {
+        self.data = Some(DataHandoff::Condensed(tri, grouping));
+        self
+    }
+
+    /// Run over a caller-supplied **dense** matrix instead of loading from
+    /// the config's data source.  The matrix is packed into a transient
+    /// [`CondensedMatrix`] when the request runs; prefer
+    /// [`with_condensed`](Self::with_condensed) when you already hold the
+    /// packed operand.
     pub fn with_data(
         mut self,
         mat: &'a DistanceMatrix,
         grouping: &'a Grouping,
     ) -> AnalysisRequest<'a> {
-        self.data = Some((mat, grouping));
+        self.data = Some(DataHandoff::Dense(mat, grouping));
         self
     }
 
@@ -111,28 +139,36 @@ impl<'a> AnalysisRequest<'a> {
                     // Pairwise prepares one prelude per group-pair
                     // sub-problem below the engine seam; only the dataset
                     // load itself is cacheable.
-                    crate::backend::execute_prepared(self.cfg, &ds.mat, &ds.grouping, None)?
+                    crate::backend::execute_prepared(self.cfg, ds.tri(), &ds.grouping, None)?
                 } else {
                     let kernel = ds.kernel(self.cfg.method)?;
                     crate::backend::execute_prepared(
                         self.cfg,
-                        &ds.mat,
+                        ds.tri(),
                         &ds.grouping,
                         Some(&kernel),
                     )?
                 };
                 Ok((report, hit))
             }
-            (None, Some((mat, grouping))) => {
+            (None, Some(DataHandoff::Condensed(tri, grouping))) => {
                 let report =
-                    crate::backend::execute_prepared(self.cfg, mat, grouping, self.prelude)?;
+                    crate::backend::execute_prepared(self.cfg, tri, grouping, self.prelude)?;
+                Ok((report, false))
+            }
+            (None, Some(DataHandoff::Dense(mat, grouping))) => {
+                // Pack transiently: the engine seam consumes only the
+                // triangle, and this copy drops when the request returns.
+                let tri = Arc::new(CondensedMatrix::from_dense(mat));
+                let report =
+                    crate::backend::execute_prepared(self.cfg, &tri, grouping, self.prelude)?;
                 Ok((report, false))
             }
             (None, None) => {
                 self.cfg.validate()?;
-                let (mat, grouping) = crate::coordinator::load_data(self.cfg)?;
+                let (tri, grouping) = crate::coordinator::load_data(self.cfg)?;
                 let report =
-                    crate::backend::execute_prepared(self.cfg, &mat, &grouping, self.prelude)?;
+                    crate::backend::execute_prepared(self.cfg, &tri, &grouping, self.prelude)?;
                 Ok((report, false))
             }
         }
@@ -160,23 +196,31 @@ mod tests {
         let via_legacy = crate::coordinator::run_config(&cfg).unwrap();
         assert_eq!(via_builder.to_json().to_string(), via_legacy.to_json().to_string());
 
-        let (mat, grouping) = crate::coordinator::load_data(&cfg).unwrap();
+        // The dense handoff (packed transiently) and the legacy facade
+        // over it agree with each other and with the streamed loader.
+        let (mat, grouping) = crate::coordinator::load_data_dense(&cfg).unwrap();
         let with_data = AnalysisRequest::new(&cfg).with_data(&mat, &grouping).run().unwrap();
         let legacy_exec = crate::backend::execute(&cfg, &mat, &grouping).unwrap();
         assert_eq!(with_data.to_json().to_string(), legacy_exec.to_json().to_string());
+        assert_eq!(with_data.to_json().to_string(), via_builder.to_json().to_string());
+
+        // The packed handoff is the zero-copy spelling of the same run.
+        let (tri, grouping) = crate::coordinator::load_data(&cfg).unwrap();
+        let with_tri = AnalysisRequest::new(&cfg).with_condensed(&tri, &grouping).run().unwrap();
+        assert_eq!(with_tri.to_json().to_string(), via_builder.to_json().to_string());
     }
 
     #[test]
     fn prelude_handoff_is_bitwise_neutral() {
         let cfg = small_cfg();
-        let (mat, grouping) = crate::coordinator::load_data(&cfg).unwrap();
-        let kernel = StatKernel::prepare(cfg.method, &mat, &grouping).unwrap();
+        let (tri, grouping) = crate::coordinator::load_data(&cfg).unwrap();
+        let kernel = StatKernel::prepare_packed(cfg.method, &tri, &grouping).unwrap();
         let warm = AnalysisRequest::new(&cfg)
-            .with_data(&mat, &grouping)
+            .with_condensed(&tri, &grouping)
             .with_prelude(&kernel)
             .run()
             .unwrap();
-        let cold = AnalysisRequest::new(&cfg).with_data(&mat, &grouping).run().unwrap();
+        let cold = AnalysisRequest::new(&cfg).with_condensed(&tri, &grouping).run().unwrap();
         assert_eq!(warm.to_json().to_string(), cold.to_json().to_string());
     }
 
@@ -198,14 +242,14 @@ mod tests {
     fn conflicting_sources_are_rejected() {
         let cfg = small_cfg();
         let cache = DatasetCache::new(4);
-        let (mat, grouping) = crate::coordinator::load_data(&cfg).unwrap();
+        let (tri, grouping) = crate::coordinator::load_data(&cfg).unwrap();
         let e = AnalysisRequest::new(&cfg)
-            .with_data(&mat, &grouping)
+            .with_condensed(&tri, &grouping)
             .via_cache(&cache)
             .run()
             .unwrap_err();
         assert!(e.to_string().contains("with_data conflicts"), "{e}");
-        let kernel = StatKernel::prepare(cfg.method, &mat, &grouping).unwrap();
+        let kernel = StatKernel::prepare_packed(cfg.method, &tri, &grouping).unwrap();
         let e = AnalysisRequest::new(&cfg)
             .with_prelude(&kernel)
             .via_cache(&cache)

@@ -1,4 +1,4 @@
-//! The dataset cache: load a `(DistanceMatrix, Grouping)` problem once,
+//! The dataset cache: load a `(CondensedMatrix, Grouping)` problem once,
 //! serve every later analysis over it from memory.
 //!
 //! The paper's point is that PERMANOVA is memory-bound: the dominant cost
@@ -7,26 +7,30 @@
 //! analyses over the same dataset therefore wins by amortizing exactly
 //! that work — [`DatasetCache`] keys datasets by their *data source* (and
 //! data seed, for generated sources; and validation tolerance, for file
-//! sources), bounds residency with an LRU policy, packs the upper
-//! triangle **at most once per dataset** (lazily, on first use by a
-//! method that streams it — the canonical kernel operand every later job
-//! shares, never a per-job rebuild), and memoizes one prepared
-//! [`StatKernel`] per method per dataset.
+//! sources), bounds residency with an LRU policy, and memoizes one
+//! prepared [`StatKernel`] per method per dataset.
+//!
+//! **The packed triangle is the only resident copy.**  Every source
+//! streams straight into the condensed `n(n-1)/2` buffer at load (the
+//! [`CondensedSource`](crate::coordinator::CondensedSource) seam), so a
+//! cached dataset holds the triangle + grouping and nothing dense —
+//! [`CachedDataset::nbytes`] is the condensed size (values + row offsets),
+//! roughly half what the old dense-then-pack residency cost.
 //!
 //! **Warm results are bitwise-identical to cold results.**  Everything the
-//! cache stores is a pure function of the dataset: the matrix bytes, the
-//! grouping, and prelude values `StatKernel::prepare` would recompute
-//! verbatim.  Nothing about permutation plans, seeds, backends or
-//! scheduling is cached, so a warm run executes the identical operation
+//! cache stores is a pure function of the dataset: the packed values, the
+//! grouping, and prelude values `StatKernel::prepare_packed` would
+//! recompute verbatim.  Nothing about permutation plans, seeds, backends
+//! or scheduling is cached, so a warm run executes the identical operation
 //! sequence a cold run does — the cache-correctness suite pins this per
 //! method × backend.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex};
 
 use crate::config::{DataSource, RunConfig};
-use crate::dmat::{CondensedMatrix, DistanceMatrix};
+use crate::dmat::CondensedMatrix;
 use crate::error::{Error, Result};
 use crate::permanova::{Grouping, Method, StatKernel};
 
@@ -81,35 +85,28 @@ pub fn dataset_key(cfg: &RunConfig) -> String {
     format!("{canon}#{:016x}", fnv64(&canon))
 }
 
-/// One resident dataset: the loaded problem, its packed triangle (packed
-/// lazily, once per dataset, shared into every f32-stream prelude), and
-/// the memoized per-method statistic preludes.
+/// One resident dataset: the streamed packed triangle, its grouping, and
+/// the memoized per-method statistic preludes.  **No dense copy** — the
+/// triangle arrives packed from the streaming loader and is the buffer
+/// every job's prelude references.
 pub struct CachedDataset {
     key: String,
-    pub mat: DistanceMatrix,
+    tri: Arc<CondensedMatrix>,
     pub grouping: Grouping,
-    /// The packed upper triangle — packed at most once per *dataset*, on
-    /// the first PERMANOVA prelude (the method whose backends retain and
-    /// stream it), then handed to every later prelude via
-    /// `StatKernel::prepare_shared` so no job ever re-packs.  Lazy so
-    /// batches that never stream it (PERMDISP, pairwise, ANOSIM-only —
-    /// whose rank prelude converts transiently instead) don't pay the
-    /// O(n²) pack or its residency.
-    packed: OnceLock<Arc<CondensedMatrix>>,
     /// Lazily prepared kernels, keyed by [`Method::name`].
     kernels: Mutex<BTreeMap<&'static str, Arc<StatKernel>>>,
 }
 
 impl CachedDataset {
-    /// Load (and validate) the dataset a config describes — the same
-    /// `load_data` path the cold `run_config` route runs.
+    /// Load (and validate, in the streaming pass) the dataset a config
+    /// describes — the same `load_data` path the cold `run_config` route
+    /// runs.
     fn load(cfg: &RunConfig) -> Result<CachedDataset> {
-        let (mat, grouping) = crate::coordinator::load_data(cfg)?;
+        let (tri, grouping) = crate::coordinator::load_data(cfg)?;
         Ok(CachedDataset {
             key: dataset_key(cfg),
-            mat,
+            tri,
             grouping,
-            packed: OnceLock::new(),
             kernels: Mutex::new(BTreeMap::new()),
         })
     }
@@ -119,15 +116,21 @@ impl CachedDataset {
         &self.key
     }
 
-    /// The dataset's packed triangle: built on first call, one buffer
-    /// shared by every later job.
+    /// The dataset's packed triangle — the one resident buffer, shared by
+    /// every job.
+    pub fn tri(&self) -> &Arc<CondensedMatrix> {
+        &self.tri
+    }
+
+    /// Alias of [`tri`](Self::tri), kept for the pre-streaming call sites'
+    /// name ("the dataset's packed triangle").
     pub fn packed(&self) -> &Arc<CondensedMatrix> {
-        self.packed.get_or_init(|| Arc::new(CondensedMatrix::from_dense(&self.mat)))
+        &self.tri
     }
 
     /// The prepared statistic prelude for `method`, computed on first use
-    /// (reusing the dataset's packed triangle where the method streams
-    /// it) and shared by every later job on this dataset.
+    /// from the dataset's packed triangle and shared by every later job on
+    /// this dataset.
     ///
     /// [`Method::PairwisePermanova`] has no dataset-level prelude (the
     /// engine prepares one per group-pair sub-problem), so requesting it
@@ -142,21 +145,7 @@ impl CachedDataset {
         if let Some(k) = kernels.get(method.name()) {
             return Ok(Arc::clone(k));
         }
-        let shared = match method {
-            // The PERMANOVA prelude *retains* the packed operand (its
-            // backends stream it per sweep), so build — or reuse — the
-            // dataset-level buffer here.
-            Method::Permanova => Some(Arc::clone(self.packed())),
-            // ANOSIM reads the packed values only transiently, to build
-            // its rank vector: reuse the buffer when a PERMANOVA job
-            // already built it, but never *pin* n(n-1)/2 f32s to the
-            // cache lifetime for an ANOSIM-only workload — prepare_shared
-            // falls back to a transient conversion.
-            Method::Anosim => self.packed.get().cloned(),
-            _ => None,
-        };
-        let prepared =
-            Arc::new(StatKernel::prepare_shared(method, &self.mat, &self.grouping, shared)?);
+        let prepared = Arc::new(StatKernel::prepare_packed(method, &self.tri, &self.grouping)?);
         kernels.insert(method.name(), Arc::clone(&prepared));
         Ok(prepared)
     }
@@ -166,11 +155,11 @@ impl CachedDataset {
         self.kernels.lock().unwrap().len()
     }
 
-    /// Approximate resident size (dense matrix, plus the packed triangle
-    /// once built; the preludes are O(n) to O(n²/2) on top and not
-    /// counted).
+    /// Resident size of the dataset: the condensed buffer plus its row
+    /// offsets — nothing dense (the preludes are O(n) to O(n²/2) on top
+    /// and not counted).
     pub fn nbytes(&self) -> usize {
-        self.mat.nbytes() + self.packed.get().map_or(0, |p| p.nbytes())
+        self.tri.resident_bytes()
     }
 }
 
@@ -357,7 +346,7 @@ mod tests {
         let (b, hit_b) = cache.get_or_load(&cfg(24, 1)).unwrap();
         assert!(hit_b, "second lookup hits");
         assert!(Arc::ptr_eq(&a, &b), "hit returns the resident instance");
-        assert_eq!(a.mat.data(), b.mat.data());
+        assert!(Arc::ptr_eq(a.tri(), b.tri()), "one packed buffer, shared");
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.entries, s.capacity), (1, 1, 1, 4));
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
@@ -407,30 +396,32 @@ mod tests {
     }
 
     #[test]
-    fn packed_triangle_is_built_lazily_once_per_dataset() {
+    fn cached_dataset_holds_only_the_packed_triangle() {
         let cache = DatasetCache::new(2);
         let (ds, _) = cache.get_or_load(&cfg(24, 1)).unwrap();
-        // Nothing packed yet; PERMDISP- and ANOSIM-only consumers never
-        // retain a pack (ANOSIM converts transiently for its ranks).
-        assert_eq!(ds.nbytes(), ds.mat.nbytes(), "no pack before first use");
-        ds.kernel(Method::Permdisp).unwrap();
-        assert_eq!(ds.nbytes(), ds.mat.nbytes(), "PERMDISP does not stream the triangle");
-        ds.kernel(Method::Anosim).unwrap();
-        assert_eq!(ds.nbytes(), ds.mat.nbytes(), "ANOSIM alone does not pin a pack");
-        // The PERMANOVA prelude builds it and references the dataset's
-        // buffer — no copy; ANOSIM then shares the same instance.
+        // The triangle is resident from load — streamed, never packed from
+        // a dense copy — and is ALL the dataset holds.
+        assert_eq!(ds.tri().n(), 24);
+        assert_eq!(ds.tri().values().len(), 24 * 23 / 2);
+        assert_eq!(
+            ds.nbytes(),
+            ds.tri().resident_bytes(),
+            "residency is the condensed buffer + offsets, nothing dense"
+        );
+        let dense_bytes = 24 * 24 * 4;
+        assert!(ds.nbytes() < dense_bytes, "packed-only residency beats one dense copy");
+        // Preludes reference the dataset's buffer — no per-method re-pack.
         let k = ds.kernel(Method::Permanova).unwrap();
-        assert_eq!(ds.packed().n(), 24);
-        assert_eq!(ds.packed().values().len(), 24 * 23 / 2);
         match k.as_ref() {
             crate::permanova::StatKernel::Permanova(p) => {
-                assert!(Arc::ptr_eq(&p.packed, ds.packed()), "prelude shares the dataset pack");
+                assert!(Arc::ptr_eq(&p.packed, ds.tri()), "prelude shares the dataset triangle");
             }
             other => panic!("{other:?}"),
         }
-        // Residency accounting covers dense + packed (packed ≤ half dense).
-        assert_eq!(ds.nbytes(), ds.mat.nbytes() + ds.packed().nbytes());
-        assert!(ds.packed().nbytes() * 2 <= ds.mat.nbytes());
+        // Preparing the other methods never changes residency.
+        ds.kernel(Method::Anosim).unwrap();
+        ds.kernel(Method::Permdisp).unwrap();
+        assert_eq!(ds.nbytes(), ds.tri().resident_bytes());
     }
 
     #[test]

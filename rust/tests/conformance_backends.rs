@@ -59,14 +59,14 @@ fn cfg(backend: &str, method: Method, perm_block: usize) -> RunConfig {
 
 fn run(backend: &str, method: Method, perm_block: usize) -> AnalysisReport {
     let c = cfg(backend, method, perm_block);
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c).unwrap();
     execute(&c, &mat, &grouping).unwrap()
 }
 
 /// The f64 oracle F-distribution for the fixture, straight from the plan.
 fn permanova_oracle() -> Vec<f64> {
     let c = cfg("native-brute", Method::Permanova, 0);
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c).unwrap();
     let s_t = st_of(&mat);
     let plan = PermutationPlan::new(grouping.labels().to_vec(), SEED, N_PERMS + 1);
     let mut row = vec![0u32; N];
@@ -121,7 +121,7 @@ fn every_backend_matches_the_f64_oracle() {
 #[test]
 fn anosim_matches_its_legacy_oracle_on_every_backend() {
     let c = cfg("native", Method::Anosim, 0);
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c).unwrap();
     let oracle = anosim(&mat, &grouping, N_PERMS, SEED).unwrap();
     for backend in BACKENDS {
         for block in [0usize, 1, 8, 64] {
@@ -142,7 +142,7 @@ fn anosim_matches_its_legacy_oracle_on_every_backend() {
 #[test]
 fn permdisp_matches_its_legacy_oracle_on_every_backend() {
     let c = cfg("native", Method::Permdisp, 0);
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c).unwrap();
     let oracle = permdisp(&mat, &grouping, N_PERMS, SEED).unwrap();
     for backend in BACKENDS {
         for block in [0usize, 1, 8, 64] {
@@ -161,7 +161,7 @@ fn permdisp_matches_its_legacy_oracle_on_every_backend() {
 #[test]
 fn pairwise_matches_its_legacy_oracle_on_every_backend_kernel_modulo() {
     let c = cfg("native-brute", Method::PairwisePermanova, 0);
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c).unwrap();
     // The legacy sweep runs the f32 brute kernel per pair — the same f32
     // op sequence `native-brute` executes, so agreement is exact.
     let oracle = pairwise_permanova(
@@ -202,7 +202,7 @@ fn exact_oracle_agreement_survives_scheduling_knobs() {
     // themselves) agree with the oracle across shard / worker / SMT /
     // block settings.
     let c = cfg("native-batch", Method::Anosim, 0);
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c).unwrap();
     let a_oracle = anosim(&mat, &grouping, N_PERMS, SEED).unwrap();
     let d_oracle = permdisp(&mat, &grouping, N_PERMS, SEED).unwrap();
     for (shard_size, threads, smt) in

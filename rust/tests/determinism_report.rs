@@ -29,7 +29,7 @@ fn identical_results_across_scheduling_configs() {
         for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
             let mut base_cfg = cfg(backend);
             base_cfg.method = method;
-            let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
+            let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&base_cfg).unwrap();
             let mut base = base_cfg.clone();
             base.threads = 1;
             base.shard_size = 1;
@@ -66,7 +66,7 @@ fn block_width_is_invisible_alongside_scheduling() {
     // perm_block composes with the scheduler axes: sweep all of them
     // together for the batched engine.
     let base_cfg = cfg("native-batch");
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&base_cfg).unwrap();
     let want = execute(&base_cfg, &mat, &grouping).unwrap();
     for block in [1usize, 3, 8, 64] {
         for (shard_size, threads, smt) in [(1usize, 1usize, false), (7, 3, true), (0, 2, false)] {
@@ -88,7 +88,7 @@ fn block_width_is_invisible_alongside_scheduling() {
 #[test]
 fn same_seed_same_results_different_seed_different_draw() {
     let base_cfg = cfg("native-batch");
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&base_cfg).unwrap();
     let a = execute(&base_cfg, &mat, &grouping).unwrap();
     let b = execute(&base_cfg, &mat, &grouping).unwrap();
     assert_eq!(a.f_perms, b.f_perms, "repeat runs are bitwise reproducible");
@@ -156,7 +156,7 @@ fn run_report_json_roundtrips_through_both_serializers() {
 fn live_report_json_carries_perm_block_and_kernel() {
     let mut c = cfg("native-batch");
     c.n_perms = 99; // total 100 > the default block, so no clamping
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c).unwrap();
     let r = execute(&c, &mat, &grouping).unwrap();
     let doc = r.to_json();
     let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
@@ -173,7 +173,7 @@ fn live_report_json_carries_perm_block_and_kernel() {
 fn live_report_json_is_method_tagged() {
     let mut c = cfg("native-flat");
     c.method = Method::Anosim;
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c).unwrap();
     let r = execute(&c, &mat, &grouping).unwrap();
     let parsed = Json::parse(&r.to_json().to_string_pretty()).unwrap();
     assert_eq!(parsed.req_str("method").unwrap(), "anosim");

@@ -1,0 +1,433 @@
+//! Ingestion conformance suite: every data source streams straight into
+//! the packed triangle — no dense `n*n` staging copy — and the streamed
+//! result is **bitwise identical** to the old dense-then-pack path.
+//!
+//! Three pillars:
+//!
+//! 1. **Equivalence** — TSV / `.pdm` / synthetic sources loaded through
+//!    the streaming `load_data` equal `CondensedMatrix::from_dense` of
+//!    the test-only dense oracle (`load_data_dense`), bit for bit, and
+//!    a warm `DatasetCache` serves the very same packed buffer.
+//! 2. **Malformed input** — asymmetry beyond `data_tol`, negative
+//!    entries, NaN/inf, ragged rows, non-zero diagonals and empty files
+//!    each fail loudly *before any job runs*, naming the file and the
+//!    offending entry, on both the `run` and `serve --jobs` paths; a bad
+//!    file in a batch must not poison later jobs.
+//! 3. **Memory accounting** — a cached dataset's footprint is exactly
+//!    the condensed buffer plus its row-offset table (nothing dense),
+//!    LRU eviction order is unchanged, and the bench validator rejects
+//!    any cell whose resident footprint includes dense bytes.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use permanova_apu::bench::{run_sweep, validate_bench_json, Bencher, SweepGrid};
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::coordinator::{load_data, load_data_dense, run_config, run_config_cached};
+use permanova_apu::dmat::{
+    read_pdm_condensed, read_tsv_condensed, CondensedMatrix, DistanceMatrix,
+};
+use permanova_apu::error::Error;
+use permanova_apu::jsonio::Json;
+use permanova_apu::service::{parse_jobs, run_jobs, DatasetCache};
+
+/// A fresh scratch directory per test (tests run in parallel).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("permanova_apu_ingest_suite_{name}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write `n` alternating two-group labels next to a matrix file.
+fn write_labels(dir: &PathBuf, name: &str, n: usize) -> String {
+    let path = dir.join(name);
+    let labels: Vec<String> = (0..n).map(|i| format!("g{}", i % 2)).collect();
+    std::fs::write(&path, labels.join("\n")).unwrap();
+    path.display().to_string()
+}
+
+fn file_cfg(data: DataSource) -> RunConfig {
+    RunConfig { data, n_perms: 9, seed: 7, ..Default::default() }
+}
+
+fn bits(tri: &CondensedMatrix) -> Vec<u32> {
+    tri.values().iter().map(|v| v.to_bits()).collect()
+}
+
+// -------------------------------------------------------------------------
+// 1. Streamed ≡ dense-then-pack, bitwise
+// -------------------------------------------------------------------------
+
+/// TSV and `.pdm` files round-tripped through the streaming loader equal
+/// `CondensedMatrix::from_dense` of the dense oracle loader, bit for bit.
+#[test]
+fn streamed_file_sources_equal_the_dense_oracle_bitwise() {
+    let dir = scratch("equiv");
+    for n in [3usize, 17, 64] {
+        let mat = DistanceMatrix::random_euclidean(n, 6, 0xC0FFEE ^ n as u64);
+        let tsv = dir.join(format!("m{n}.tsv"));
+        let pdm = dir.join(format!("m{n}.pdm"));
+        mat.write_tsv(&tsv, None).unwrap();
+        mat.write_binary(&pdm).unwrap();
+        let labels = write_labels(&dir, &format!("l{n}.txt"), n);
+
+        for data in [
+            DataSource::Tsv { path: tsv.display().to_string(), labels_path: labels.clone() },
+            DataSource::Pdm { path: pdm.display().to_string(), labels_path: labels.clone() },
+        ] {
+            let cfg = file_cfg(data);
+            let (streamed, grouping) = load_data(&cfg).unwrap();
+            let (dense, dense_grouping) = load_data_dense(&cfg).unwrap();
+            let oracle = CondensedMatrix::from_dense(&dense);
+            assert_eq!(streamed.n(), n);
+            assert_eq!(bits(&streamed), bits(&oracle), "n={n} {:?}", cfg.data);
+            assert_eq!(grouping.labels(), dense_grouping.labels(), "n={n}");
+        }
+    }
+}
+
+/// The n = 2 edge (below PERMANOVA's n >= 3 floor, so `load_data`
+/// rejects it): the raw streaming readers still match the oracle — the
+/// packed layout has no small-n special case.
+#[test]
+fn n2_edge_matches_through_the_raw_readers() {
+    let dir = scratch("n2");
+    let mat = DistanceMatrix::random_euclidean(2, 4, 5);
+    let tsv = dir.join("m2.tsv");
+    let pdm = dir.join("m2.pdm");
+    mat.write_tsv(&tsv, None).unwrap();
+    mat.write_binary(&pdm).unwrap();
+    let oracle = CondensedMatrix::from_dense(&mat);
+    let (from_tsv, ids) = read_tsv_condensed(&tsv, 1e-6).unwrap();
+    assert_eq!(ids.len(), 2);
+    assert_eq!(bits(&from_tsv), bits(&oracle));
+    let from_pdm = read_pdm_condensed(&pdm, 1e-6).unwrap();
+    assert_eq!(bits(&from_pdm), bits(&oracle));
+
+    // ... while the config path refuses to analyze it, loudly.
+    let labels = write_labels(&dir, "l2.txt", 2);
+    let cfg = file_cfg(DataSource::Tsv {
+        path: tsv.display().to_string(),
+        labels_path: labels,
+    });
+    let e = load_data(&cfg).unwrap_err();
+    match e {
+        Error::Config(m) => assert!(m.contains("at least 3 objects"), "{m}"),
+        other => panic!("want Error::Config, got {other:?}"),
+    }
+}
+
+/// Synthetic sources: the packed generator and the UniFrac pipeline equal
+/// the dense loader bit for bit (the generator consumes the RNG in the
+/// identical order; the UniFrac dense matrix is packed transiently).
+#[test]
+fn synthetic_sources_match_the_dense_loader_bitwise() {
+    let synth = RunConfig {
+        data: DataSource::Synthetic { n_dims: 33, n_groups: 3 },
+        n_perms: 9,
+        seed: 13,
+        ..Default::default()
+    };
+    let unifrac = RunConfig {
+        data: DataSource::SyntheticUnifrac { n_taxa: 64, n_samples: 24, n_groups: 3 },
+        n_perms: 9,
+        seed: 13,
+        ..Default::default()
+    };
+    for cfg in [synth, unifrac] {
+        let (streamed, grouping) = load_data(&cfg).unwrap();
+        let (dense, dense_grouping) = load_data_dense(&cfg).unwrap();
+        assert_eq!(
+            bits(&streamed),
+            bits(&CondensedMatrix::from_dense(&dense)),
+            "{:?}",
+            cfg.data
+        );
+        assert_eq!(grouping.labels(), dense_grouping.labels());
+    }
+}
+
+/// Warm cache ≡ cold, for a file-sourced dataset: the cached packed
+/// buffer is the same allocation across hits, and the analysis it serves
+/// is bitwise identical to the cold single-shot path.
+#[test]
+fn warm_cache_serves_the_same_packed_triangle_bitwise() {
+    let dir = scratch("warm");
+    let n = 20usize;
+    let mat = DistanceMatrix::random_euclidean(n, 5, 77);
+    let tsv = dir.join("m.tsv");
+    mat.write_tsv(&tsv, None).unwrap();
+    let labels = write_labels(&dir, "l.txt", n);
+    let cfg = file_cfg(DataSource::Tsv {
+        path: tsv.display().to_string(),
+        labels_path: labels,
+    });
+
+    let cache = DatasetCache::new(2);
+    let (ds0, hit0) = cache.get_or_load(&cfg).unwrap();
+    let (ds1, hit1) = cache.get_or_load(&cfg).unwrap();
+    assert!(!hit0 && hit1);
+    assert!(
+        std::sync::Arc::ptr_eq(ds0.tri(), ds1.tri()),
+        "a warm hit must serve the same packed allocation, not a reload"
+    );
+    let (oracle, _) = load_data(&cfg).unwrap();
+    assert_eq!(bits(ds0.tri()), bits(&oracle));
+
+    let cold = run_config(&cfg).unwrap();
+    let (warm, hit) = run_config_cached(&cfg, &cache).unwrap();
+    assert!(hit, "dataset is already resident");
+    assert_eq!(cold.f_obs.to_bits(), warm.f_obs.to_bits());
+    assert_eq!(cold.p_value, warm.p_value);
+    assert_eq!(cold.f_perms.len(), warm.f_perms.len());
+    for (a, b) in cold.f_perms.iter().zip(&warm.f_perms) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+// -------------------------------------------------------------------------
+// 2. Malformed input: loud, early, file + entry named
+// -------------------------------------------------------------------------
+
+/// A 12-object matrix with one specific defect planted, written as TSV.
+fn write_bad_tsv(dir: &PathBuf, name: &str, plant: impl FnOnce(&mut DistanceMatrix)) -> String {
+    let mut mat = DistanceMatrix::random_euclidean(12, 4, 3);
+    plant(&mut mat);
+    let path = dir.join(name);
+    mat.write_tsv(&path, None).unwrap();
+    path.display().to_string()
+}
+
+/// Every malformed-matrix class fails `run` with [`Error::Config`] naming
+/// the file and the offending entry — never a silent analysis.
+#[test]
+fn malformed_matrices_fail_the_run_path_naming_file_and_entry() {
+    let dir = scratch("bad_run");
+    let labels = write_labels(&dir, "l.txt", 12);
+
+    let cases: Vec<(String, &str)> = vec![
+        (
+            // Asymmetric beyond data_tol: upper (0,1) nudged, mirror kept.
+            write_bad_tsv(&dir, "asym.tsv", |m| m.data_mut()[1] += 0.25),
+            "asymmetry at (0,1)",
+        ),
+        (
+            write_bad_tsv(&dir, "neg.tsv", |m| m.set_sym(0, 2, -0.5)),
+            "negative distance at (0,2)",
+        ),
+        (
+            write_bad_tsv(&dir, "nan.tsv", |m| m.set_sym(0, 3, f32::NAN)),
+            "non-finite distance at (0,3)",
+        ),
+        (
+            write_bad_tsv(&dir, "inf.tsv", |m| m.set_sym(1, 4, f32::INFINITY)),
+            "non-finite distance at (1,4)",
+        ),
+        (
+            write_bad_tsv(&dir, "diag.tsv", |m| m.data_mut()[5 * 12 + 5] = 0.75),
+            "diagonal entry (5,5)",
+        ),
+    ];
+    for (path, want) in &cases {
+        let cfg = file_cfg(DataSource::Tsv { path: path.clone(), labels_path: labels.clone() });
+        match run_config(&cfg).unwrap_err() {
+            Error::Config(m) => {
+                assert!(m.contains(path.as_str()), "{want}: error must name the file: {m}");
+                assert!(m.contains(want), "want {want:?} in {m}");
+            }
+            other => panic!("{want}: want Error::Config, got {other:?}"),
+        }
+    }
+
+    // Ragged row and empty file: structural TSV defects, same loud path.
+    let ragged = dir.join("ragged.tsv");
+    std::fs::write(&ragged, "\ta\tb\tc\na\t0\t1\t2\nb\t1\t0\nc\t2\t1.5\t0\n").unwrap();
+    let cfg = file_cfg(DataSource::Tsv {
+        path: ragged.display().to_string(),
+        labels_path: labels.clone(),
+    });
+    match run_config(&cfg).unwrap_err() {
+        Error::Config(m) => {
+            assert!(m.contains("ragged"), "{m}");
+            assert!(m.contains("row 1"), "must name the offending row: {m}");
+        }
+        other => panic!("ragged: want Error::Config, got {other:?}"),
+    }
+    let empty = dir.join("empty.tsv");
+    std::fs::write(&empty, "").unwrap();
+    let cfg = file_cfg(DataSource::Tsv {
+        path: empty.display().to_string(),
+        labels_path: labels.clone(),
+    });
+    match run_config(&cfg).unwrap_err() {
+        Error::Config(m) => assert!(m.contains("empty file"), "{m}"),
+        other => panic!("empty: want Error::Config, got {other:?}"),
+    }
+
+    // The same defects through the binary reader: identical entry naming.
+    let mut asym = DistanceMatrix::random_euclidean(12, 4, 3);
+    asym.data_mut()[1] += 0.25;
+    let pdm = dir.join("asym.pdm");
+    asym.write_binary(&pdm).unwrap();
+    let cfg = file_cfg(DataSource::Pdm {
+        path: pdm.display().to_string(),
+        labels_path: labels.clone(),
+    });
+    match run_config(&cfg).unwrap_err() {
+        Error::Config(m) => {
+            assert!(m.contains("asymmetry at (0,1)"), "{m}");
+            assert!(m.contains("tol"), "must point at the tolerance knob: {m}");
+        }
+        other => panic!("pdm asym: want Error::Config, got {other:?}"),
+    }
+    // An empty .pdm is an IO-level truncation: still loud, still names
+    // the file (the path rides on the io error itself).
+    let empty_pdm = dir.join("empty.pdm");
+    std::fs::write(&empty_pdm, "").unwrap();
+    let cfg = file_cfg(DataSource::Pdm {
+        path: empty_pdm.display().to_string(),
+        labels_path: labels.clone(),
+    });
+    let e = run_config(&cfg).unwrap_err().to_string();
+    assert!(e.contains("empty.pdm"), "{e}");
+
+    // Asymmetry *within* the tolerance is not a defect: the same file
+    // loads once the knob is raised — the error message's suggested fix
+    // actually works.
+    let mut cfg = file_cfg(DataSource::Tsv { path: cases[0].0.clone(), labels_path: labels });
+    cfg.data_tol = 0.5;
+    let report = run_config(&cfg).unwrap();
+    assert_eq!(report.n, 12);
+}
+
+/// The `serve --jobs` path: a malformed matrix fails its own job with the
+/// same file-and-entry-naming error, and does **not** poison the jobs
+/// that follow it in the batch.
+#[test]
+fn bad_file_in_a_batch_fails_alone_and_names_the_entry() {
+    let dir = scratch("bad_batch");
+    let n = 12usize;
+    let good_mat = DistanceMatrix::random_euclidean(n, 4, 9);
+    let good = dir.join("good.tsv");
+    good_mat.write_tsv(&good, None).unwrap();
+    let bad = write_bad_tsv(&dir, "asym.tsv", |m| m.data_mut()[1] += 0.25);
+    let labels = write_labels(&dir, "l.txt", n);
+
+    let line = |id: &str, path: &str| {
+        format!(
+            r#"{{"id": "{id}", "n_perms": 9, "seed": 3, "data": {{"source": "tsv", "path": "{path}", "labels": "{labels}"}}}}"#
+        )
+    };
+    let text = [
+        line("good-before", &good.display().to_string()),
+        line("bad", &bad),
+        line("good-after", &good.display().to_string()),
+    ]
+    .join("\n");
+    let jobs = parse_jobs(&text).unwrap();
+    let cache = DatasetCache::new(4);
+    let batch = run_jobs(&jobs, &cache, 2);
+
+    assert_eq!(batch.summary.jobs, 3);
+    assert_eq!(batch.summary.failed, 1, "only the malformed job fails");
+
+    let ok = |r: &Json| matches!(r.get("ok"), Some(Json::Bool(true)));
+    assert!(ok(&batch.responses[0]));
+    assert!(!ok(&batch.responses[1]));
+    assert!(ok(&batch.responses[2]), "a bad file must not poison later jobs");
+
+    let err = batch.responses[1].get("error").and_then(|v| v.as_str()).unwrap();
+    assert!(err.contains("asym.tsv"), "{err}");
+    assert!(err.contains("asymmetry at (0,1)"), "{err}");
+
+    // The good dataset was loaded once and reused across the bad job.
+    let cache_tag = |r: &Json| r.get("cache").and_then(|v| v.as_str()).unwrap().to_string();
+    assert_eq!(cache_tag(&batch.responses[0]), "miss");
+    assert_eq!(cache_tag(&batch.responses[2]), "hit");
+
+    // And the post-failure job's statistics equal its cold single shot.
+    let cold = run_config(&jobs[2].cfg).unwrap().to_json();
+    let report = batch.responses[2].get("report").unwrap();
+    let f = |doc: &Json, key: &str| doc.get(key).and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(f(report, "f_obs").to_bits(), f(&cold, "f_obs").to_bits());
+    assert_eq!(f(report, "p_value"), f(&cold, "p_value"));
+}
+
+// -------------------------------------------------------------------------
+// 3. Memory accounting: packed-only residency
+// -------------------------------------------------------------------------
+
+/// A cached dataset's accounted footprint is exactly the condensed buffer
+/// plus its row-offset table — and LRU eviction order is unchanged by the
+/// dense-free load path.
+#[test]
+fn cache_accounts_packed_bytes_only_and_keeps_lru_order() {
+    let dir = scratch("accounting");
+    let mut cfgs = Vec::new();
+    for n in [12usize, 16, 20] {
+        let mat = DistanceMatrix::random_euclidean(n, 4, n as u64);
+        let tsv = dir.join(format!("m{n}.tsv"));
+        mat.write_tsv(&tsv, None).unwrap();
+        let labels = write_labels(&dir, &format!("l{n}.txt"), n);
+        cfgs.push(file_cfg(DataSource::Tsv {
+            path: tsv.display().to_string(),
+            labels_path: labels,
+        }));
+    }
+    let packed_footprint = |n: usize| n * (n - 1) / 2 * 4 + (n + 1) * 8;
+
+    let cache = DatasetCache::new(2);
+    let (ds12, _) = cache.get_or_load(&cfgs[0]).unwrap();
+    assert_eq!(ds12.nbytes(), packed_footprint(12), "condensed values + offsets, nothing dense");
+    assert_eq!(ds12.nbytes(), ds12.tri().resident_bytes());
+    cache.get_or_load(&cfgs[1]).unwrap();
+
+    // Touch n=12 so n=16 becomes the LRU victim, then load n=20.
+    let (_, hit) = cache.get_or_load(&cfgs[0]).unwrap();
+    assert!(hit);
+    cache.get_or_load(&cfgs[2]).unwrap();
+    assert!(cache.contains(&cfgs[0]), "recently-touched dataset survives");
+    assert!(!cache.contains(&cfgs[1]), "least-recently-used dataset is the victim");
+    assert!(cache.contains(&cfgs[2]));
+
+    // Total residency is exactly the two survivors' packed footprints.
+    assert_eq!(cache.resident_bytes(), packed_footprint(12) + packed_footprint(20));
+}
+
+/// The bench validator is the CI tripwire: a cell whose resident
+/// footprint quietly re-includes the dense bytes is rejected.
+#[test]
+fn bench_validator_rejects_dense_inclusive_footprints() {
+    let grid = SweepGrid {
+        backends: vec!["native-brute".into()],
+        n_grid: vec![24],
+        perm_grid: vec![9],
+        n_groups: 2,
+        bencher: Bencher {
+            warmup: 0,
+            min_reps: 1,
+            max_reps: 1,
+            max_time: Duration::from_secs(1),
+        },
+        quick: true,
+        throughput_jobs: 2,
+        latency_clients: vec![],
+        ..Default::default()
+    };
+    let good = run_sweep(&grid).unwrap().json;
+    validate_bench_json(&good).unwrap();
+
+    let mut bad = good.clone();
+    if let Json::Obj(m) = &mut bad {
+        let mut entries = m.get("entries").unwrap().as_arr().unwrap().to_vec();
+        if let Json::Obj(e) = &mut entries[0] {
+            let resident = e.get("resident_bytes").and_then(Json::as_f64).unwrap();
+            let dense = e.get("dense_bytes").and_then(Json::as_f64).unwrap();
+            e.insert("resident_bytes".into(), Json::num(resident + dense));
+        }
+        m.insert("entries".into(), Json::Arr(entries));
+    }
+    let e = validate_bench_json(&bad).unwrap_err().to_string();
+    assert!(e.contains("resident_bytes"), "{e}");
+    assert!(e.contains("dense copy"), "the rejection should say why: {e}");
+}

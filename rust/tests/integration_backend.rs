@@ -62,7 +62,7 @@ fn cross_backend_equivalence_against_f64_oracle() {
     let k = 4;
     let n_perms = 99;
     let c = cfg("native-brute", n, k, n_perms);
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c).unwrap();
 
     // The f64 oracle distribution, straight from the permutation plan.
     let s_t = st_of(&mat);
@@ -126,7 +126,7 @@ fn cross_backend_equivalence_against_f64_oracle() {
 #[test]
 fn every_method_runs_through_every_registered_backend() {
     let c0 = cfg("native", 30, 3, 19);
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&c0).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&c0).unwrap();
     for backend in known_backends() {
         if backend == "xla" {
             continue;
@@ -182,7 +182,7 @@ fn registry_governs_config_validation() {
 #[test]
 fn scheduling_is_statistically_invisible() {
     let base_cfg = cfg("native-tiled", 48, 3, 49);
-    let (mat, grouping) = permanova_apu::coordinator::load_data(&base_cfg).unwrap();
+    let (mat, grouping) = permanova_apu::coordinator::load_data_dense(&base_cfg).unwrap();
     let base = execute(&base_cfg, &mat, &grouping).unwrap();
     for (threads, shard, smt) in [(1usize, 1usize, false), (4, 7, false), (3, 1000, true)] {
         let mut c = base_cfg.clone();

@@ -2,7 +2,7 @@
 //! PERMANOVA) and the UniFrac metric's mathematical properties at scale.
 
 use permanova_apu::config::{DataSource, RunConfig};
-use permanova_apu::coordinator::{load_data, run_config, run_on_backend};
+use permanova_apu::coordinator::{load_data_dense, run_config, run_on_backend};
 use permanova_apu::permanova::{Grouping, SwAlgorithm};
 use permanova_apu::rng::{shuffle, Xoshiro256pp};
 use permanova_apu::unifrac::{generate, newick, unweighted_unifrac, SynthParams};
@@ -70,7 +70,7 @@ fn pipeline_signal_and_null() {
 }
 
 /// The config-driven path produces the identical report to the manual
-/// pipeline (load_data is deterministic in the seed).
+/// pipeline (load_data_dense is deterministic in the seed).
 #[test]
 fn config_driven_pipeline_deterministic() {
     let cfg = RunConfig {
@@ -84,8 +84,8 @@ fn config_driven_pipeline_deterministic() {
     assert_eq!(a.f_obs, b.f_obs);
     assert_eq!(a.p_value, b.p_value);
 
-    // load_data + run_on_backend == run_config.
-    let (mat, grouping) = load_data(&cfg).unwrap();
+    // load_data_dense + run_on_backend == run_config.
+    let (mat, grouping) = load_data_dense(&cfg).unwrap();
     let c = run_on_backend(&cfg, &mat, &grouping).unwrap();
     assert_eq!(a.f_obs, c.f_obs);
 }
@@ -137,7 +137,7 @@ fn backends_agree_on_pipeline_data() {
         seed: 13,
         ..Default::default()
     };
-    let (mat, grouping) = load_data(&cfg).unwrap();
+    let (mat, grouping) = load_data_dense(&cfg).unwrap();
     let nat = run_on_backend(&cfg, &mat, &grouping).unwrap();
     let sim = run_on_backend(
         &RunConfig { backend: "simulator".to_string(), ..cfg.clone() },

@@ -29,7 +29,9 @@ const SEED: u64 = 0xFACADE;
 
 fn fixture() -> (DistanceMatrix, Grouping) {
     let cfg = cfg("native", Method::Permanova, 0);
-    permanova_apu::coordinator::load_data(&cfg).unwrap()
+    // The dense oracle loader: this suite compares packed kernels against
+    // their dense seeds, so it needs the n×n matrix in hand.
+    permanova_apu::coordinator::load_data_dense(&cfg).unwrap()
 }
 
 fn cfg(backend: &str, method: Method, perm_block: usize) -> RunConfig {
@@ -114,7 +116,7 @@ fn anosim_rank_prelude_is_layout_invariant() {
     let (mat, grouping) = fixture();
     let kernel = StatKernel::prepare(Method::Anosim, &mat, &grouping).unwrap();
     let row = grouping.labels().to_vec();
-    let r = kernel.eval_labels(&mat, &grouping, &row);
+    let r = kernel.eval_labels(&grouping, &row);
     let legacy = permanova_apu::permanova::anosim(&mat, &grouping, 9, 1).unwrap();
     assert_eq!(r.to_bits(), legacy.r_obs.to_bits());
 }
@@ -215,13 +217,15 @@ fn generic_methods_unperturbed_by_the_packed_preludes() {
 #[test]
 fn warm_shared_packed_equals_cold_bitwise() {
     use permanova_apu::backend::execute_prepared;
+    use std::sync::Arc;
     let (mat, grouping) = fixture();
+    let tri = Arc::new(CondensedMatrix::from_dense(&mat));
     for backend in ["native-brute", "native-batch", "simulator"] {
         for method in [Method::Permanova, Method::Anosim, Method::Permdisp] {
             let c = cfg(backend, method, 0);
             let kernel = StatKernel::prepare(method, &mat, &grouping).unwrap();
             let cold = execute(&c, &mat, &grouping).unwrap();
-            let warm = execute_prepared(&c, &mat, &grouping, Some(&kernel)).unwrap();
+            let warm = execute_prepared(&c, &tri, &grouping, Some(&kernel)).unwrap();
             assert_eq!(cold.f_obs.to_bits(), warm.f_obs.to_bits(), "{backend} {method:?}");
             for (a, b) in cold.f_perms.iter().zip(&warm.f_perms) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{backend} {method:?}");

@@ -15,7 +15,7 @@
 
 use permanova_apu::backend::shard::with_shared_pool;
 use permanova_apu::config::{DataSource, RunConfig};
-use permanova_apu::coordinator::{load_data, run_config, run_config_cached};
+use permanova_apu::coordinator::{load_data_dense, run_config, run_config_cached};
 use permanova_apu::permanova::{permanova, Method, PermanovaOpts, SwAlgorithm};
 use permanova_apu::service::{parse_jobs, run_jobs, DatasetCache};
 
@@ -113,7 +113,9 @@ fn lru_eviction_bounds_memory_across_runs() {
         let (r, hit) = run_config_cached(&c, &cache).unwrap();
         assert!(!hit);
         assert_eq!(r.n, n);
-        per_dataset_bytes.push(n * n * 4);
+        // Dense-free ingestion: each cached dataset holds only the packed
+        // triangle (values + row-offset table), never the n² copy.
+        per_dataset_bytes.push(n * (n - 1) / 2 * 4 + (n + 1) * 8);
         assert!(cache.len() <= 2, "capacity is a hard residency bound");
     }
     // The oldest dataset (n=30) was evicted; the two recent ones remain.
@@ -123,12 +125,19 @@ fn lru_eviction_bounds_memory_across_runs() {
     let mut c42 = cfg("native-brute", Method::Permanova);
     c42.data = DataSource::Synthetic { n_dims: 42, n_groups: 3 };
     assert!(cache.contains(&c42));
-    // Resident bytes stay below the sum of all three datasets.
+    // Resident bytes stay below the sum of all three datasets — and are
+    // *exactly* the packed residency of the two survivors (n=36, n=42):
+    // any dense copy sneaking back into the footprint breaks the equality.
     let total: usize = per_dataset_bytes.iter().sum();
     assert!(
         cache.resident_bytes() < total,
         "resident {} vs unbounded {total}",
         cache.resident_bytes()
+    );
+    assert_eq!(
+        cache.resident_bytes(),
+        per_dataset_bytes[1] + per_dataset_bytes[2],
+        "packed-only residency of the surviving datasets"
     );
     let stats = cache.stats();
     assert_eq!((stats.misses, stats.entries), (3, 2));
@@ -158,8 +167,8 @@ fn identity_permutation_counted_exactly_once_in_the_denominator() {
     // ties or beats the observed — the identity contributes the single +1.
     assert!(engine.p_value >= 1.0 / (1.0 + n_perms as f64));
 
-    // Legacy oracle path.
-    let (mat, grouping) = load_data(&c).unwrap();
+    // Legacy oracle path (dense loader: the free function wants n×n).
+    let (mat, grouping) = load_data_dense(&c).unwrap();
     let legacy = permanova(
         &mat,
         &grouping,
