@@ -9,8 +9,8 @@ CARGO ?= cargo
 PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
-.PHONY: all build test bench bench-quick ingest-check serve-demo daemon-demo lint fmt clippy doc \
-        artifacts pytest clean
+.PHONY: all build test bench bench-quick ingest-check serve-demo daemon-demo store-demo \
+        lint fmt clippy doc artifacts pytest clean
 
 all: build
 
@@ -84,6 +84,36 @@ daemon-demo: build
 	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --jobs demo_jobs.jsonl --stats
 	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --shutdown
 	@sleep 0.5; cat demo_daemon.log
+
+# The persistence edition: two daemon generations over one --store-dir.
+# Generation one computes the batch and durably records every result;
+# SIGTERM drains it (fsyncs the memtable).  Generation two reopens the
+# same directory and must answer the identical batch from disk — the
+# responses say "cache": "store" and the stats probe shows the hits.
+STORE_DIR ?= demo_store
+store-demo: build
+	rm -rf $(STORE_DIR)
+	printf '%s\n' \
+	  '{"v": 1, "id": "perma", "request": {"n_perms": 499, "seed": 1, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}}' \
+	  '{"v": 1, "id": "rank", "request": {"method": "anosim", "backend": "native-batch", "n_perms": 499, "seed": 2, "data": {"source": "synthetic", "n_dims": 128, "n_groups": 4, "seed": 42}}}' \
+	  > demo_jobs.jsonl
+	./target/release/permanova-apu serve --listen $(DAEMON_ADDR) \
+	  --store-dir $(STORE_DIR) > demo_store_gen1.log 2>&1 & \
+	echo $$! > demo_store.pid; \
+	for _ in $$(seq 1 100); do grep -q 'listening on' demo_store_gen1.log && break; sleep 0.1; done
+	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --jobs demo_jobs.jsonl
+	kill -TERM $$(cat demo_store.pid); \
+	for _ in $$(seq 1 100); do kill -0 $$(cat demo_store.pid) 2>/dev/null || break; sleep 0.1; done
+	./target/release/permanova-apu serve --listen $(DAEMON_ADDR) \
+	  --store-dir $(STORE_DIR) > demo_store_gen2.log 2>&1 & \
+	for _ in $$(seq 1 100); do grep -q 'listening on' demo_store_gen2.log && break; sleep 0.1; done
+	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --jobs demo_jobs.jsonl --stats \
+	  | tee demo_store_warm.jsonl
+	@grep -qE '"store": ?"hit"' demo_store_warm.jsonl \
+	  && echo 'ok: warm generation answered from the durable store' \
+	  || { echo 'expected store hits after restart'; exit 1; }
+	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --shutdown
+	@sleep 0.5; cat demo_store_gen2.log
 
 lint: fmt clippy
 

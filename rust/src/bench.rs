@@ -187,8 +187,16 @@ pub fn speedup(a: &Measurement, b: &Measurement) -> f64 {
 /// keeps resident (the packed values plus the row-offset table), which the
 /// validator pins to exactly `packed_bytes + 8·(n+1)` so a footprint that
 /// quietly re-grows a dense copy fails CI.  `dense_bytes` is since v6 the
-/// **avoided** dense footprint, kept for the ratio axis.
-pub const BENCH_SCHEMA: &str = "bench-permanova/v6";
+/// **avoided** dense footprint, kept for the ratio axis.  v7 added the
+/// top-level `restart_warm` section — the durable-store axis: identical
+/// repeated jobs (same permutation seed) timed **cold** (no cache, no
+/// store), **process-warm** (shared in-memory `DatasetCache`, still
+/// recomputing every permutation sweep) and **disk-warm** (a fresh process
+/// image answering every job from a pre-populated
+/// [`ResultStore`](crate::store::ResultStore) without touching the engine);
+/// the validator pins `store_hits == jobs` so a disk-warm pass that
+/// quietly recomputes fails CI.
+pub const BENCH_SCHEMA: &str = "bench-permanova/v7";
 
 /// Bytes each permutation streams through its statistic kernel: the
 /// method's packed per-permutation operand plus the n-label row.
@@ -463,6 +471,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
         }
     }
     let (throughput, throughput_table) = run_throughput_axis(grid)?;
+    let (restart_warm, restart_table) = run_restart_axis(grid)?;
     let (latency, latency_table) = run_latency_axis(grid)?;
 
     let entry_count = entries.len();
@@ -474,12 +483,17 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
         ("host_threads", Json::num(host_threads as f64)),
         ("entries", Json::Arr(entries)),
         ("throughput", Json::Arr(throughput)),
+        ("restart_warm", Json::Arr(restart_warm)),
         ("latency", Json::Arr(latency)),
     ]);
     let mut rendered = table.render();
     if !throughput_table.is_empty() {
         rendered.push('\n');
         rendered.push_str(&throughput_table);
+    }
+    if !restart_table.is_empty() {
+        rendered.push('\n');
+        rendered.push_str(&restart_table);
     }
     if !latency_table.is_empty() {
         rendered.push('\n');
@@ -581,6 +595,154 @@ fn run_throughput_axis(grid: &SweepGrid) -> Result<(Vec<Json>, String)> {
     }
     let rendered = format!(
         "service throughput ({jobs} jobs/cell, repeated dataset, cold vs warm cache):\n{}",
+        table.render()
+    );
+    Ok((entries, rendered))
+}
+
+/// Monotonic sequence for restart-axis store directories, so concurrent
+/// sweeps inside one process (the test suite) never share a store.
+static RESTART_DIR_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// The restart-warm axis (v7): what the durable store buys across a
+/// process restart, measured instead of asserted.  For every backend ×
+/// method, a batch of [`SweepGrid::throughput_jobs`] **identical** jobs
+/// (same dataset, same permutation seed — the only shape the result store
+/// can answer) runs at three temperatures:
+///
+/// * **cold** — capacity-0 cache, no store: every job reloads the dataset,
+///   rebuilds its prelude and sweeps every permutation;
+/// * **process-warm** — shared in-memory [`DatasetCache`]: loads and
+///   preludes amortize, but every job still recomputes its permutation
+///   sweep (results are not memoized in memory — that is the store's job);
+/// * **disk-warm** — a *fresh* cache over a [`ResultStore`] pre-populated
+///   by an untimed seeding batch and reopened from disk, modelling a
+///   daemon restarted over the same `--store-dir`: every job returns the
+///   previously serialized report without touching the engine.
+///
+/// The recorded `store_hits` must equal `jobs` (the validator pins it) —
+/// a disk-warm pass that quietly recomputes is a bug, not a slow cell.
+///
+/// [`DatasetCache`]: crate::service::DatasetCache
+/// [`ResultStore`]: crate::store::ResultStore
+fn run_restart_axis(grid: &SweepGrid) -> Result<(Vec<Json>, String)> {
+    use crate::service::{run_jobs, DatasetCache, JobRequest};
+    use crate::store::{ResultStore, StoreConfig};
+    use std::sync::Arc;
+
+    if grid.throughput_jobs == 0 {
+        // The store axis shares the throughput axis's job-count knob (and
+        // its 0-disables contract): both measure service-layer batches.
+        return Ok((Vec::new(), String::new()));
+    }
+    let jobs = grid.throughput_jobs;
+    let n = *grid.n_grid.iter().max().expect("validated non-empty");
+    let n_perms = *grid.perm_grid.iter().min().expect("validated non-empty");
+
+    let mut entries = Vec::new();
+    let mut table = Table::new(&[
+        "backend", "method", "n", "perms", "jobs", "cold", "proc-warm", "disk-warm",
+        "disk/cold",
+    ]);
+    for backend in &grid.backends {
+        for &method in &grid.methods {
+            let mut cfg = grid.base.clone();
+            cfg.data = DataSource::Synthetic { n_dims: n, n_groups: grid.n_groups };
+            cfg.backend = backend.clone();
+            cfg.method = method;
+            cfg.n_perms = n_perms;
+            cfg.data_seed = Some(cfg.seed);
+            // Identical jobs: the store key is (dataset, method, seed,
+            // perms, tol), so only an exact repeat can hit.
+            let requests: Vec<JobRequest> = (0..jobs)
+                .map(|i| JobRequest::new(format!("restart-{backend}-{}-{i}", method.name()), cfg.clone()))
+                .collect();
+            let check = |label: &str, batch: &crate::service::BatchOutcome| -> Result<()> {
+                if batch.summary.failed > 0 {
+                    return Err(Error::Config(format!(
+                        "restart cell {backend}/{} ({label}): {} of {} jobs failed",
+                        method.name(),
+                        batch.summary.failed,
+                        batch.summary.jobs
+                    )));
+                }
+                Ok(())
+            };
+
+            let seq = RESTART_DIR_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let dir = std::env::temp_dir()
+                .join(format!("permanova_apu_bench_restart_{}_{seq}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+
+            // Cold: nothing amortizes.
+            let cold_cache = DatasetCache::new(0);
+            let cold = run_jobs(&requests, &cold_cache, grid.base.threads);
+            check("cold", &cold)?;
+            // Process-warm: the in-memory tier only.
+            let warm_cache = DatasetCache::new(2);
+            let process_warm = run_jobs(&requests, &warm_cache, grid.base.threads);
+            check("process-warm", &process_warm)?;
+            // Seed the store (untimed — this is the pre-restart process),
+            // drain it to a sorted table, then drop every handle: the
+            // disk-warm pass below must reopen purely from disk.
+            let store = Arc::new(ResultStore::open(StoreConfig::new(&dir))?);
+            let seed_cache = DatasetCache::with_store(2, Arc::clone(&store));
+            let seeding = run_jobs(&requests, &seed_cache, grid.base.threads);
+            check("seeding", &seeding)?;
+            store.drain()?;
+            let puts = store.stats().puts;
+            drop(seed_cache);
+            drop(store);
+            // Disk-warm: a restarted process answering from the store.
+            let store = Arc::new(ResultStore::open(StoreConfig::new(&dir))?);
+            let disk_cache = DatasetCache::with_store(2, Arc::clone(&store));
+            let disk_warm = run_jobs(&requests, &disk_cache, grid.base.threads);
+            check("disk-warm", &disk_warm)?;
+            let store_hits = store.stats().hits;
+            if store_hits != jobs as u64 {
+                return Err(Error::Config(format!(
+                    "restart cell {backend}/{}: disk-warm pass hit the store {store_hits} of \
+                     {jobs} times — the durable tier is not answering identical jobs",
+                    method.name()
+                )));
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+
+            table.row(&[
+                backend.clone(),
+                method.name().to_string(),
+                n.to_string(),
+                n_perms.to_string(),
+                jobs.to_string(),
+                crate::report::format_rate(cold.summary.jobs_per_sec, "jobs"),
+                crate::report::format_rate(process_warm.summary.jobs_per_sec, "jobs"),
+                crate::report::format_rate(disk_warm.summary.jobs_per_sec, "jobs"),
+                format!("{:.2}x", disk_warm.summary.jobs_per_sec / cold.summary.jobs_per_sec),
+            ]);
+            entries.push(Json::obj(vec![
+                ("backend", Json::str(backend.clone())),
+                ("method", Json::str(method.name())),
+                ("n", Json::num(n as f64)),
+                ("k", Json::num(grid.n_groups as f64)),
+                ("n_perms", Json::num(n_perms as f64)),
+                ("jobs", Json::num(jobs as f64)),
+                ("cold_secs", Json::num(cold.summary.elapsed_secs)),
+                ("cold_jobs_per_sec", Json::num(cold.summary.jobs_per_sec)),
+                ("process_warm_secs", Json::num(process_warm.summary.elapsed_secs)),
+                (
+                    "process_warm_jobs_per_sec",
+                    Json::num(process_warm.summary.jobs_per_sec),
+                ),
+                ("disk_warm_secs", Json::num(disk_warm.summary.elapsed_secs)),
+                ("disk_warm_jobs_per_sec", Json::num(disk_warm.summary.jobs_per_sec)),
+                ("store_hits", Json::num(store_hits as f64)),
+                ("store_puts", Json::num(puts as f64)),
+            ]));
+        }
+    }
+    let rendered = format!(
+        "restart warmth ({jobs} identical jobs/cell: no cache vs in-memory cache vs reopened \
+         store):\n{}",
         table.render()
     );
     Ok((entries, rendered))
@@ -980,6 +1142,68 @@ pub fn validate_bench_json(doc: &Json) -> Result<usize> {
         }
     }
 
+    // v7: the restart-warm section.  Required as an array (CI notices the
+    // axis silently disappearing); may be empty only when the sweep ran
+    // with throughput_jobs = 0 (the shared batch-axis disable).
+    let restart = doc
+        .get("restart_warm")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bench_field_err("restart_warm", "missing/not an array"))?;
+    for (i, e) in restart.iter().enumerate() {
+        let ctx = format!("restart_warm {i}");
+        let backend = e.req_str("backend").map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if !registry.contains(backend) {
+            return Err(bench_field_err(&ctx, format!("unknown backend {backend:?}")));
+        }
+        let method = e.req_str("method").map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if Method::parse(method).is_none() {
+            return Err(bench_field_err(&ctx, format!("unknown method {method:?}")));
+        }
+        let req = |key: &str| -> Result<usize> {
+            e.req_usize(key).map_err(|err| bench_field_err(&ctx, err.to_string()))
+        };
+        if req("n")? == 0 || req("n_perms")? == 0 {
+            return Err(bench_field_err(&ctx, "n and n_perms must be >= 1"));
+        }
+        req("k")?;
+        let jobs = req("jobs")?;
+        if jobs < 2 {
+            return Err(bench_field_err(&ctx, "a restart cell needs >= 2 jobs"));
+        }
+        let num = |key: &str| -> Result<f64> {
+            let v = e
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bench_field_err(&ctx, format!("{key} missing/not a number")))?;
+            if !v.is_finite() {
+                return Err(bench_field_err(&ctx, format!("{key} must be finite, got {v}")));
+            }
+            Ok(v)
+        };
+        for key in ["cold_secs", "process_warm_secs", "disk_warm_secs"] {
+            if num(key)? <= 0.0 {
+                return Err(bench_field_err(&ctx, format!("{key} must be > 0")));
+            }
+        }
+        for key in ["cold_jobs_per_sec", "process_warm_jobs_per_sec", "disk_warm_jobs_per_sec"] {
+            if num(key)? <= 0.0 {
+                return Err(bench_field_err(&ctx, format!("{key} must be > 0")));
+            }
+        }
+        // The axis's defining invariant: every disk-warm job answered from
+        // the store.  A cell that recomputed is invalid, not just slow.
+        let hits = req("store_hits")?;
+        if hits != jobs {
+            return Err(bench_field_err(
+                &ctx,
+                format!("store_hits {hits} != jobs {jobs} (disk-warm pass recomputed)"),
+            ));
+        }
+        if req("store_puts")? == 0 {
+            return Err(bench_field_err(&ctx, "store_puts must be >= 1 (seeding pass wrote nothing)"));
+        }
+    }
+
     // v5: the daemon latency section.  Required as an array (CI notices
     // the axis silently disappearing); may be empty only when the sweep
     // ran with the axis disabled (`latency_clients` empty).
@@ -1307,11 +1531,59 @@ mod tests {
         let out = run_sweep(&g).unwrap();
         assert!(out.json.req_arr("throughput").unwrap().is_empty());
         assert!(!out.table.contains("service throughput"));
+        // The restart axis shares the disable knob (both are batch axes).
+        assert!(out.json.req_arr("restart_warm").unwrap().is_empty());
+        assert!(!out.table.contains("restart warmth"));
         // An empty section still validates (the key must exist).
         assert_eq!(validate_bench_json(&out.json).unwrap(), 2);
         // ... but 1 job cannot compare cold vs warm: rejected, not clamped.
         g.throughput_jobs = 1;
         assert!(run_sweep(&g).is_err());
+    }
+
+    #[test]
+    fn restart_axis_records_three_temperatures() {
+        let mut g = tiny_grid();
+        g.backends = vec!["native-brute".into()];
+        g.throughput_jobs = 3;
+        let out = run_sweep(&g).unwrap();
+        assert!(out.table.contains("restart warmth"), "{}", out.table);
+        let cells = out.json.req_arr("restart_warm").unwrap();
+        assert_eq!(cells.len(), 1, "one cell per backend x method");
+        let c = &cells[0];
+        assert_eq!(c.req_str("backend").unwrap(), "native-brute");
+        assert_eq!(c.req_str("method").unwrap(), "permanova");
+        assert_eq!(c.req_usize("jobs").unwrap(), 3);
+        // Every disk-warm job answered from the reopened store; the
+        // seeding batch put exactly one entry (3 identical jobs → 1 miss).
+        assert_eq!(c.req_usize("store_hits").unwrap(), 3);
+        assert_eq!(c.req_usize("store_puts").unwrap(), 1);
+        for key in ["cold_jobs_per_sec", "process_warm_jobs_per_sec", "disk_warm_jobs_per_sec"] {
+            assert!(c.get(key).unwrap().as_f64().unwrap() > 0.0, "{key}");
+        }
+        assert_eq!(validate_bench_json(&out.json).unwrap(), 1);
+    }
+
+    #[test]
+    fn disk_warm_outruns_cold_on_a_load_dominated_cell() {
+        // The acceptance cell for the durable store: a PCoA-heavy method
+        // (PERMDISP eigendecomposes per dataset load) over a repeated
+        // dataset.  The disk-warm pass skips the load *and* the sweep —
+        // jobs/sec must come out strictly higher than cold.
+        let mut g = tiny_grid();
+        g.backends = vec!["native-brute".into()];
+        g.methods = vec![Method::Permdisp];
+        g.n_grid = vec![120];
+        g.perm_grid = vec![3];
+        g.throughput_jobs = 5;
+        let out = run_sweep(&g).unwrap();
+        let c = &out.json.req_arr("restart_warm").unwrap()[0];
+        let cold = c.get("cold_jobs_per_sec").unwrap().as_f64().unwrap();
+        let disk = c.get("disk_warm_jobs_per_sec").unwrap().as_f64().unwrap();
+        assert!(
+            disk > cold,
+            "a reopened store must outrun cold recomputation: disk-warm {disk} vs cold {cold}"
+        );
     }
 
     #[test]
@@ -1460,6 +1732,35 @@ mod tests {
             m.remove("latency");
         }
         assert!(validate_bench_json(&bad).is_err());
+        // Missing restart_warm section (v7 requires the key).
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.remove("restart_warm");
+        }
+        let e = validate_bench_json(&bad).unwrap_err().to_string();
+        assert!(e.contains("restart_warm"), "{e}");
+        // A disk-warm pass that recomputed (store_hits != jobs) fails.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut cells = m.get("restart_warm").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(c) = &mut cells[0] {
+                c.insert("store_hits".into(), Json::num(0));
+            }
+            m.insert("restart_warm".into(), Json::Arr(cells));
+        }
+        let e = validate_bench_json(&bad).unwrap_err().to_string();
+        assert!(e.contains("store_hits"), "{e}");
+        // A seeding pass that wrote nothing fails.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut cells = m.get("restart_warm").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(c) = &mut cells[0] {
+                c.insert("store_puts".into(), Json::num(0));
+            }
+            m.insert("restart_warm".into(), Json::Arr(cells));
+        }
+        let e = validate_bench_json(&bad).unwrap_err().to_string();
+        assert!(e.contains("store_puts"), "{e}");
     }
 
     #[test]

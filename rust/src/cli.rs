@@ -141,9 +141,9 @@ pub fn dispatch(args: &Args) -> Result<String> {
 pub fn usage() -> String {
     let mut s = String::from("permanova-apu — PERMANOVA on APU-class hardware\n\nCommands:\n");
     for (cmd, desc) in [
-        ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --data-seed D --data-tol T --repeat N --json out.json --config file.toml | --pdm file --labels file (file input is validated on load); legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
-        ("serve", "JSONL job batch through the shared-dataset service: --jobs FILE [--out FILE] [--cache-capacity N] [--threads T]; --listen HOST:PORT runs the TCP daemon instead (adds --queue-depth N; SIGTERM/ctrl-C drains); --check FILE validates a response document"),
-        ("client", "speak to a running daemon: --addr HOST:PORT with any of --jobs FILE (pipelined v1/legacy requests), --stats, --shutdown; prints one JSONL response per request"),
+        ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --data-seed D --data-tol T --repeat N [--store-dir DIR [--store-capacity-bytes B] | --no-store] --json out.json --config file.toml | --pdm file --labels file (file input is validated on load); legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
+        ("serve", "JSONL job batch through the shared-dataset service: --jobs FILE [--out FILE] [--cache-capacity N] [--threads T]; --listen HOST:PORT runs the TCP daemon instead (adds --queue-depth N; SIGTERM/ctrl-C drains); --store-dir DIR attaches the durable result store (crash-safe; warm state survives restarts; --store-capacity-bytes B bounds it, --no-store disables); --check FILE validates a response document"),
+        ("client", "speak to a running daemon: --addr HOST:PORT with any of --jobs FILE (pipelined v1/legacy requests), --stats, --shutdown; prints one JSONL response per request; exits non-zero when any job fails"),
         ("bench", "backend x method sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --methods permanova,anosim --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --throughput-jobs J --latency-clients 1,4 (0 disables) --out FILE; --check FILE validates an existing document"),
         ("backends", "list registered backends with their capabilities (alias: --list-backends)"),
         ("pipeline", "end-to-end: community -> UniFrac -> PERMANOVA: --taxa --samples --groups --n-perms --metric unweighted|weighted --anosim"),
@@ -211,6 +211,40 @@ fn cmd_backends(args: &Args) -> Result<String> {
         Method::ALL.map(|m| m.name()).join(", ")
     ));
     Ok(out)
+}
+
+/// Resolve the durable-store settings: the `[store]` config section (when
+/// `--config` is given), overridden by `--store-dir` /
+/// `--store-capacity-bytes`, with `--no-store` winning over everything.
+fn store_settings_from_args(args: &Args) -> Result<crate::config::StoreSettings> {
+    let mut s = if let Some(path) = args.str_flag("config") {
+        crate::config::StoreSettings::from_toml(&TomlDoc::load(path)?)?
+    } else {
+        crate::config::StoreSettings::default()
+    };
+    if let Some(dir) = args.str_flag("store-dir") {
+        s.dir = Some(dir.to_string());
+    }
+    s.capacity_bytes = args.u64_flag("store-capacity-bytes", s.capacity_bytes)?;
+    if args.bool_flag("no-store")? {
+        s.enabled = false;
+    }
+    Ok(s)
+}
+
+/// Open the resolved durable store, if one is enabled (`None` = run
+/// store-free, exactly as before the store existed).
+fn open_store_from_args(
+    args: &Args,
+) -> Result<Option<std::sync::Arc<crate::store::ResultStore>>> {
+    let s = store_settings_from_args(args)?;
+    if !s.enabled {
+        return Ok(None);
+    }
+    let Some(dir) = s.dir else { return Ok(None) };
+    let mut sc = crate::store::StoreConfig::new(dir);
+    sc.capacity_bytes = s.capacity_bytes;
+    Ok(Some(std::sync::Arc::new(crate::store::ResultStore::open(sc)?)))
 }
 
 fn config_from_args(args: &Args) -> Result<RunConfig> {
@@ -286,7 +320,17 @@ fn cmd_run(args: &Args) -> Result<String> {
                 )));
             }
         }
-        return cmd_run_repeated(&cfg, repeat);
+        return cmd_run_repeated(&cfg, repeat, open_store_from_args(args)?);
+    }
+    // The durable store only pays off across repeated/served analyses; on
+    // a one-shot run the flags would be silently inert — reject instead.
+    for flag in ["store-dir", "store-capacity-bytes", "no-store"] {
+        if args.has_flag(flag) {
+            return Err(Error::Config(format!(
+                "--{flag} needs --repeat N (or the serve subcommand) — a single run never \
+                 revisits the store"
+            )));
+        }
     }
     let r = AnalysisRequest::new(&cfg).run()?;
     // The report carries the kernel the backend actually evaluated
@@ -366,13 +410,23 @@ fn cmd_run(args: &Args) -> Result<String> {
 
 /// `run --repeat N`: the same configuration N times through the service
 /// layer (one shared pool, one cached dataset + prelude), with the
-/// cold-vs-warm wall clocks tabled per iteration.
-fn cmd_run_repeated(cfg: &RunConfig, repeat: usize) -> Result<String> {
+/// cold-vs-warm wall clocks tabled per iteration.  With `--store-dir`,
+/// iterations go through the durable tier instead: results persist across
+/// process restarts, and a re-run over the same store directory answers
+/// from disk without recomputing.
+fn cmd_run_repeated(
+    cfg: &RunConfig,
+    repeat: usize,
+    store: Option<std::sync::Arc<crate::store::ResultStore>>,
+) -> Result<String> {
     use crate::backend::shard::with_shared_pool;
     use crate::report::AnalysisReport;
     use crate::service::DatasetCache;
     use std::time::Instant;
 
+    if let Some(store) = store {
+        return cmd_run_repeated_stored(cfg, repeat, store);
+    }
     let cache = DatasetCache::new(2);
     let mut t = Table::new(&["iteration", "cache", "wall s"]);
     let mut first: Option<AnalysisReport> = None;
@@ -406,6 +460,67 @@ fn cmd_run_repeated(cfg: &RunConfig, repeat: usize) -> Result<String> {
     Ok(out)
 }
 
+/// The store-backed edition of `run --repeat`: every iteration goes
+/// through [`execute_job`](crate::service::execute_job) — the same durable
+/// lookup/insert path the daemon uses — so a second invocation over the
+/// same `--store-dir` answers every iteration from disk.
+fn cmd_run_repeated_stored(
+    cfg: &RunConfig,
+    repeat: usize,
+    store: std::sync::Arc<crate::store::ResultStore>,
+) -> Result<String> {
+    use crate::backend::shard::with_shared_pool;
+    use crate::jsonio::Json;
+    use crate::service::{execute_job, DatasetCache, JobRequest};
+    use std::time::Instant;
+
+    let cache = DatasetCache::with_store(2, std::sync::Arc::clone(&store));
+    let job = JobRequest::new("repeat", cfg.clone());
+    let mut t = Table::new(&["iteration", "cache", "store", "wall s"]);
+    let mut first: Option<Json> = None;
+    with_shared_pool(cfg.threads, |_pool| -> Result<()> {
+        for i in 1..=repeat {
+            let t0 = Instant::now();
+            let (resp, ok) = execute_job(&job, &cache);
+            if !ok {
+                let msg =
+                    resp.get("error").and_then(Json::as_str).unwrap_or("job failed").to_string();
+                return Err(Error::Config(msg));
+            }
+            t.row(&[
+                format!("iter-{i}"),
+                resp.req_str("cache")?.to_string(),
+                resp.req_str("store")?.to_string(),
+                format!("{:.4}", t0.elapsed().as_secs_f64()),
+            ]);
+            if first.is_none() {
+                first = Some(resp);
+            }
+        }
+        Ok(())
+    })?;
+    // Flush the memtable so even an abrupt exit after this point leaves
+    // nothing to replay (every put was already WAL-durable regardless).
+    store.drain()?;
+    let s = store.stats();
+    let first = first.expect("repeat >= 2 ran at least once");
+    let report = first.get("report").ok_or_else(|| Error::Config("response without report".into()))?;
+    let mut out = format!(
+        "{} on {}: F = {}, p = {}\n",
+        report.req_str("method")?,
+        report.req_str("backend")?,
+        report.get("f_obs").and_then(Json::as_f64).unwrap_or(f64::NAN),
+        report.get("p_value").and_then(Json::as_f64).unwrap_or(f64::NAN),
+    );
+    out.push_str(&format!("\nrepeat x{repeat} through the durable store:\n"));
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "store: {} hits / {} misses / {} puts, {} segments, {} bytes on disk\n",
+        s.hits, s.misses, s.puts, s.segments, s.disk_bytes
+    ));
+    Ok(out)
+}
+
 /// `serve`: execute a JSONL job batch through the shared-dataset service
 /// layer, run the long-lived TCP daemon (`--listen`), or (`--check`)
 /// validate a response document.
@@ -427,9 +542,20 @@ fn cmd_serve(args: &Args) -> Result<String> {
         .ok_or_else(|| Error::Config("serve needs --jobs FILE (or --check FILE)".into()))?;
     let text = std::fs::read_to_string(jobs_path).map_err(|e| Error::io(jobs_path, e))?;
     let jobs = parse_jobs(&text)?;
-    let cache = DatasetCache::new(args.usize_flag("cache-capacity", 8)?);
+    let capacity = args.usize_flag("cache-capacity", 8)?;
+    let store = open_store_from_args(args)?;
+    let cache = match &store {
+        Some(s) => DatasetCache::with_store(capacity, std::sync::Arc::clone(s)),
+        None => DatasetCache::new(capacity),
+    };
     let workers = args.usize_flag("threads", 0)?;
     let batch = run_jobs(&jobs, &cache, workers);
+    if let Some(s) = &store {
+        // Flush the memtable into a sorted table; every result was
+        // already WAL-fsynced, so a failed drain is only a lost
+        // optimization, never lost data.
+        let _ = s.drain();
+    }
 
     match args.str_flag("out") {
         // File output: responses to disk, summary (with the cache
@@ -454,11 +580,14 @@ fn cmd_serve(args: &Args) -> Result<String> {
 fn cmd_serve_daemon(args: &Args, addr: &str) -> Result<String> {
     use crate::service::{install_signal_handlers, Daemon, DaemonConfig};
 
+    let store = store_settings_from_args(args)?;
     let cfg = DaemonConfig {
         addr: addr.to_string(),
         workers: args.usize_flag("threads", 0)?,
         cache_capacity: args.usize_flag("cache-capacity", 8)?,
         queue_depth: args.usize_flag("queue-depth", 64)?,
+        store_dir: if store.enabled { store.dir.map(Into::into) } else { None },
+        store_capacity_bytes: store.capacity_bytes,
         ..DaemonConfig::default()
     };
     install_signal_handlers();
@@ -494,6 +623,10 @@ fn cmd_client(args: &Args) -> Result<String> {
             requests.push(line.to_string());
         }
     }
+    // Everything queued so far is a job; --stats / --shutdown are
+    // appended after, so `take(job_count)` below scopes the failure
+    // check to the actual analysis responses.
+    let job_count = requests.len();
     if args.bool_flag("stats")? {
         let payload = Json::obj(vec![("op", Json::str("stats"))]);
         requests.push(envelope_v1(Some("stats"), payload).to_string());
@@ -512,6 +645,19 @@ fn cmd_client(args: &Args) -> Result<String> {
     for r in &responses {
         out.push_str(&r.to_string());
         out.push('\n');
+    }
+    // A failed job must fail the invocation: scripts drive `client
+    // --jobs` and a zero exit on an `ok:false` response silently drops
+    // results.  The responses still reach stdout for pipelines; the
+    // failure count goes to stderr via the dispatch error path.
+    let failed = responses
+        .iter()
+        .take(job_count)
+        .filter(|r| r.get("ok").and_then(Json::as_bool) == Some(false))
+        .count();
+    if failed > 0 {
+        print!("{out}");
+        return Err(Error::Config(format!("{failed} of {job_count} jobs failed")));
     }
     Ok(out)
 }
@@ -1308,5 +1454,177 @@ mod tests {
         let out = dispatch(&args(&["run", "--config", p.to_str().unwrap()])).unwrap();
         assert!(out.contains("perms=19"));
         assert!(out.contains("algo=brute"));
+    }
+
+    #[test]
+    fn store_flags_override_config_file() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_store_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.toml");
+        std::fs::write(&p, "[store]\ndir = \"/from/config\"\ncapacity_bytes = 1024\n").unwrap();
+        let a = args(&["serve", "--config", p.to_str().unwrap()]);
+        let s = store_settings_from_args(&a).unwrap();
+        assert_eq!(s.dir.as_deref(), Some("/from/config"));
+        assert_eq!(s.capacity_bytes, 1024);
+        assert!(s.enabled);
+
+        let a = args(&[
+            "serve", "--config", p.to_str().unwrap(), "--store-dir", "/from/flag",
+            "--store-capacity-bytes", "2048",
+        ]);
+        let s = store_settings_from_args(&a).unwrap();
+        assert_eq!(s.dir.as_deref(), Some("/from/flag"));
+        assert_eq!(s.capacity_bytes, 2048);
+
+        let a = args(&["serve", "--config", p.to_str().unwrap(), "--no-store"]);
+        assert!(!store_settings_from_args(&a).unwrap().enabled);
+        // Disabled or dir-less settings open no store.
+        assert!(open_store_from_args(&a).unwrap().is_none());
+        assert!(open_store_from_args(&args(&["serve"])).unwrap().is_none());
+    }
+
+    #[test]
+    fn serve_batch_store_survives_process_restart() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_serve_store_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.jsonl");
+        std::fs::write(
+            &jobs,
+            concat!(
+                r#"{"id": "a", "n_perms": 19, "seed": 3, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 7}}"#,
+                "\n",
+            ),
+        )
+        .unwrap();
+        let store = dir.join("store");
+        let store = store.to_str().unwrap();
+
+        // First invocation computes and persists...
+        let cold = dispatch(&args(&[
+            "serve", "--jobs", jobs.to_str().unwrap(), "--store-dir", store,
+        ]))
+        .unwrap();
+        let first = crate::jsonio::Json::parse(cold.lines().next().unwrap()).unwrap();
+        assert_eq!(first.req_str("cache").unwrap(), "miss");
+        assert_eq!(first.req_str("store").unwrap(), "miss");
+
+        // ...and a second invocation (fresh cache, fresh store handle — a
+        // process restart in miniature) answers from disk, verbatim.
+        let warm = dispatch(&args(&[
+            "serve", "--jobs", jobs.to_str().unwrap(), "--store-dir", store,
+        ]))
+        .unwrap();
+        let second = crate::jsonio::Json::parse(warm.lines().next().unwrap()).unwrap();
+        assert_eq!(second.req_str("cache").unwrap(), "store");
+        assert_eq!(second.req_str("store").unwrap(), "hit");
+        assert_eq!(
+            first.get("report").unwrap().to_string(),
+            second.get("report").unwrap().to_string(),
+            "a store hit returns the original serialized report bitwise"
+        );
+
+        // --no-store wins over --store-dir: back to a plain cold batch with
+        // the pre-store response shape.
+        let off = dispatch(&args(&[
+            "serve", "--jobs", jobs.to_str().unwrap(), "--store-dir", store, "--no-store",
+        ]))
+        .unwrap();
+        let third = crate::jsonio::Json::parse(off.lines().next().unwrap()).unwrap();
+        assert_eq!(third.req_str("cache").unwrap(), "miss");
+        assert!(third.get("store").is_none(), "{off}");
+    }
+
+    #[test]
+    fn run_repeat_with_store_dir_hits_across_invocations() {
+        let dir = std::env::temp_dir().join("permanova_apu_cli_run_store_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = dir.join("store");
+        let base = [
+            "run", "--n-dims", "24", "--n-groups", "2", "--n-perms", "19", "--repeat", "2",
+            "--store-dir", store.to_str().unwrap(),
+        ];
+        let cold = dispatch(&args(&base)).unwrap();
+        assert!(cold.contains("repeat x2 through the durable store"), "{cold}");
+        assert!(cold.contains("1 hits / 1 misses / 1 puts"), "{cold}");
+        // A second invocation answers every iteration from disk.
+        let warm = dispatch(&args(&base)).unwrap();
+        assert!(warm.contains("2 hits / 0 misses / 0 puts"), "{warm}");
+        // Store flags on a one-shot run are rejected, not silently inert.
+        for flag in [
+            &["--store-dir", store.to_str().unwrap()][..],
+            &["--store-capacity-bytes", "1024"][..],
+            &["--no-store"][..],
+        ] {
+            let mut v =
+                vec!["run", "--n-dims", "24", "--n-groups", "2", "--n-perms", "9"];
+            v.extend_from_slice(flag);
+            let e = dispatch(&args(&v)).unwrap_err().to_string();
+            assert!(e.contains("--repeat"), "{e}");
+        }
+    }
+
+    #[test]
+    fn client_exits_nonzero_when_a_job_fails() {
+        use crate::service::{Daemon, DaemonConfig};
+        let daemon = Daemon::spawn(DaemonConfig {
+            workers: 1,
+            cache_capacity: 2,
+            queue_depth: 4,
+            ..DaemonConfig::default()
+        })
+        .unwrap();
+        let addr = daemon.addr().to_string();
+
+        let dir = std::env::temp_dir().join("permanova_apu_cli_client_fail_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let jobs = dir.join("jobs.jsonl");
+        std::fs::write(
+            &jobs,
+            concat!(
+                r#"{"v": 1, "id": "good", "request": {"n_perms": 9, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 7}}}"#,
+                "\n",
+                r#"{"v": 1, "id": "bad", "request": {"backend": "cuda", "n_perms": 9, "data": {"source": "synthetic", "n_dims": 24, "n_groups": 2, "seed": 7}}}"#,
+                "\n",
+            ),
+        )
+        .unwrap();
+
+        // One failed job fails the invocation; the trailing --stats
+        // response is excluded from the count.
+        let e = dispatch(&args(&[
+            "client", "--addr", &addr, "--jobs", jobs.to_str().unwrap(), "--stats",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("1 of 2 jobs failed"), "{e}");
+
+        let bye = dispatch(&args(&["client", "--addr", &addr, "--shutdown"])).unwrap();
+        assert!(bye.contains("draining"), "{bye}");
+        daemon.join().unwrap();
+    }
+
+    #[test]
+    fn daemon_with_store_reports_store_stats() {
+        use crate::service::{Daemon, DaemonConfig};
+        let dir = std::env::temp_dir().join("permanova_apu_cli_daemon_store_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let daemon = Daemon::spawn(DaemonConfig {
+            workers: 1,
+            cache_capacity: 2,
+            queue_depth: 4,
+            store_dir: Some(dir.join("store")),
+            ..DaemonConfig::default()
+        })
+        .unwrap();
+        let addr = daemon.addr().to_string();
+        let out = dispatch(&args(&["client", "--addr", &addr, "--stats"])).unwrap();
+        let stats = crate::jsonio::Json::parse(out.lines().next().unwrap()).unwrap();
+        assert!(stats.get("stats").unwrap().get("store").is_some(), "{out}");
+        dispatch(&args(&["client", "--addr", &addr, "--shutdown"])).unwrap();
+        let summary = daemon.join().unwrap();
+        assert!(summary.store.is_some());
+        assert!(summary.render().contains("store"), "{}", summary.render());
     }
 }

@@ -264,6 +264,51 @@ pub struct RunConfig {
 /// tight enough to catch genuinely asymmetric or corrupted input.
 pub const DEFAULT_DATA_TOL: f32 = 1e-4;
 
+/// The `[store]` config section: where (and whether) the durable result
+/// store lives.  CLI flags win over the file: `--store-dir` /
+/// `--store-capacity-bytes` override `dir` / `capacity_bytes`, and
+/// `--no-store` forces `enabled = false`.  The store is always opt-in —
+/// no `dir` means no store, and every code path then behaves exactly as
+/// it did before the store existed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreSettings {
+    /// Store root directory (`[store] dir`); `None` disables the store.
+    pub dir: Option<String>,
+    /// On-disk byte budget (`[store] capacity_bytes`; 0 = unbounded).
+    pub capacity_bytes: u64,
+    /// Master switch (`[store] enabled`, default true).
+    pub enabled: bool,
+}
+
+impl Default for StoreSettings {
+    fn default() -> Self {
+        StoreSettings {
+            dir: None,
+            capacity_bytes: crate::store::DEFAULT_STORE_CAPACITY_BYTES,
+            enabled: true,
+        }
+    }
+}
+
+impl StoreSettings {
+    /// Read the `[store]` section (absent keys get defaults).
+    pub fn from_toml(doc: &TomlDoc) -> Result<StoreSettings> {
+        let d = StoreSettings::default();
+        let dir = doc.str_or("store", "dir", "");
+        let capacity = doc.int_or("store", "capacity_bytes", d.capacity_bytes as i64);
+        if capacity < 0 {
+            return Err(Error::Config(format!(
+                "store.capacity_bytes must be >= 0, got {capacity}"
+            )));
+        }
+        Ok(StoreSettings {
+            dir: if dir.is_empty() { None } else { Some(dir) },
+            capacity_bytes: capacity as u64,
+            enabled: doc.bool_or("store", "enabled", true),
+        })
+    }
+}
+
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
@@ -688,6 +733,37 @@ mod tests {
         assert_eq!(cfg.shard_size, 0);
         assert!(!cfg.smt_oversubscribe);
         assert_eq!(cfg.perm_block, 0);
+    }
+
+    #[test]
+    fn store_settings_from_toml() {
+        let d = StoreSettings::from_toml(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(d, StoreSettings::default());
+        assert!(d.dir.is_none(), "no dir = store disabled");
+        let s = StoreSettings::from_toml(
+            &TomlDoc::parse(
+                "[store]\ndir = \"/var/lib/permanova/store\"\ncapacity_bytes = 1048576\nenabled = true\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(s.dir.as_deref(), Some("/var/lib/permanova/store"));
+        assert_eq!(s.capacity_bytes, 1_048_576);
+        assert!(s.enabled);
+        let off = StoreSettings::from_toml(
+            &TomlDoc::parse("[store]\ndir = \"x\"\nenabled = false\n").unwrap(),
+        )
+        .unwrap();
+        assert!(!off.enabled);
+        assert!(StoreSettings::from_toml(
+            &TomlDoc::parse("[store]\ncapacity_bytes = -1\n").unwrap()
+        )
+        .is_err());
+        // A [store] section in a run config file must not break RunConfig
+        // parsing (sections are independent).
+        let both = TomlDoc::parse("[run]\nn_perms = 99\n[store]\ndir = \"s\"\n").unwrap();
+        assert_eq!(RunConfig::from_toml(&both).unwrap().n_perms, 99);
+        assert_eq!(StoreSettings::from_toml(&both).unwrap().dir.as_deref(), Some("s"));
     }
 
     #[test]

@@ -21,9 +21,11 @@
 //!   PERMANOVA), the XLA runtime ([`runtime`]), the unified [`backend`]
 //!   execution engine (the `Backend` trait, its name-keyed registry and
 //!   the sharded permutation scheduler — generic over the statistic), the
-//!   heterogeneous [`coordinator`], and the shared-dataset [`service`]
+//!   heterogeneous [`coordinator`], the shared-dataset [`service`]
 //!   layer (dataset cache + multi-job batch driver behind the `serve`
-//!   subcommand), plus reporting and the CLI.
+//!   subcommand), and the durable result [`store`] (a crash-safe LSM
+//!   cache under the service layer, so warm state survives restarts),
+//!   plus reporting and the CLI.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the JAX
 //! graph once, and the binary only loads `artifacts/*.hlo.txt`.
@@ -55,6 +57,7 @@ pub mod rng;
 pub mod runtime;
 pub mod service;
 pub mod simulator;
+pub mod store;
 pub mod stream;
 pub mod unifrac;
 

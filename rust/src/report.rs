@@ -8,6 +8,16 @@
 //! in this repo leans on.  [`AnalysisReport`] is the method-tagged
 //! aggregate `backend::execute` returns: one run for the single-statistic
 //! methods, one run per group pair for pairwise PERMANOVA.
+//!
+//! Serialization stability contract: `AnalysisReport::to_json(...)
+//! .to_string()` is the **value stored** by the durable
+//! [`ResultStore`](crate::store::ResultStore) — a store hit returns those
+//! bytes verbatim, and the persistence suite asserts bitwise equality
+//! across process restarts.  Keep `to_json` deterministic: field set and
+//! values must be pure functions of the run (no wall-clock reads beyond
+//! the existing `elapsed_secs`/`busy_secs` measurements captured during
+//! execution, no map iteration with unstable order — [`Json::obj`] sorts
+//! keys, which is what makes the round-trip byte-stable).
 
 use std::fmt::Write as _;
 

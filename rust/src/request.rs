@@ -35,6 +35,15 @@
 //! engine-seam invariants (matching `n`, positive `n_perms`, prelude/
 //! problem agreement).  The old names survive as thin facades over this
 //! builder so existing code compiles unchanged.
+//!
+//! Durable-store ordering: this builder always *executes*.  The optional
+//! [`ResultStore`](crate::store::ResultStore) tier is consulted **above**
+//! it, by [`execute_job`](crate::service::execute_job), before any
+//! `AnalysisRequest` is built — a store hit short-circuits the engine
+//! entirely and returns the previously serialized report verbatim.  Code
+//! that reaches this module has therefore already missed (or bypassed)
+//! the store; on success `execute_job` writes the serialized report back
+//! through [`ResultStore::put`](crate::store::ResultStore::put).
 
 use std::sync::Arc;
 

@@ -24,6 +24,16 @@
 //! or scheduling is cached, so a warm run executes the identical operation
 //! sequence a cold run does — the cache-correctness suite pins this per
 //! method × backend.
+//!
+//! **The durable store is an optional third tier.**  A cache built with
+//! [`DatasetCache::with_store`] carries a [`ResultStore`] handle; the job
+//! executor consults it (keyed by [`result_key`]) between a memtable miss
+//! and engine execution, and LRU-evicted packed triangles spill to disk
+//! segments instead of vanishing — a later miss on the same dataset key
+//! reloads the segment through the normal
+//! [`TriangleSink`](crate::dmat::TriangleSink) validation rather than
+//! re-streaming the source.  Without a store attached, every path below
+//! behaves exactly as before the store existed.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -33,6 +43,7 @@ use crate::config::{DataSource, RunConfig};
 use crate::dmat::CondensedMatrix;
 use crate::error::{Error, Result};
 use crate::permanova::{Grouping, Method, StatKernel};
+use crate::store::ResultStore;
 
 /// FNV-1a over a canonical description — the "hashed" half of a cache key
 /// (the readable half keeps reports and logs greppable).
@@ -85,6 +96,29 @@ pub fn dataset_key(cfg: &RunConfig) -> String {
     format!("{canon}#{:016x}", fnv64(&canon))
 }
 
+/// The durable-store key for a run configuration's *result*: the dataset
+/// key extended with everything else the statistics depend on — method,
+/// permutation seed, permutation count, and validation tolerance.
+///
+/// Deliberately **excluded**: backend, algorithm, thread count, shard
+/// size, SMT and permutation-block knobs.  Those select *how* the answer
+/// is computed, not *what* it is — the conformance suites pin the
+/// statistics bitwise across all of them — so one backend's stored report
+/// answers every backend's request.  (The stored report's provenance
+/// fields name whichever backend originally computed it; see DESIGN.md
+/// §2.11.)
+pub fn result_key(cfg: &RunConfig) -> String {
+    let canon = format!(
+        "{}|method={}|seed={}|perms={}|tol={}",
+        dataset_key(cfg),
+        cfg.method.name(),
+        cfg.seed,
+        cfg.n_perms,
+        cfg.data_tol,
+    );
+    format!("{canon}#{:016x}", fnv64(&canon))
+}
+
 /// One resident dataset: the streamed packed triangle, its grouping, and
 /// the memoized per-method statistic preludes.  **No dense copy** — the
 /// triangle arrives packed from the streaming loader and is the buffer
@@ -109,6 +143,18 @@ impl CachedDataset {
             grouping,
             kernels: Mutex::new(BTreeMap::new()),
         })
+    }
+
+    /// Rebuild a dataset from already-validated parts — the spill-reload
+    /// path.  Kernels start empty and are recomputed on demand; they are
+    /// pure functions of the triangle + grouping, so warm ≡ cold holds.
+    fn from_parts(key: String, tri: CondensedMatrix, grouping: Grouping) -> CachedDataset {
+        CachedDataset {
+            key,
+            tri: Arc::new(tri),
+            grouping,
+            kernels: Mutex::new(BTreeMap::new()),
+        }
     }
 
     /// The cache key this dataset was loaded under.
@@ -207,17 +253,33 @@ pub struct DatasetCache {
     hits: AtomicUsize,
     misses: AtomicUsize,
     inner: Mutex<CacheInner>,
+    /// Optional durable tier: result lookups (consulted by the job
+    /// executor) plus the spill directory evicted triangles park in.
+    store: Option<Arc<ResultStore>>,
 }
 
 impl DatasetCache {
-    /// Cache bounded to `capacity` resident datasets.
+    /// Cache bounded to `capacity` resident datasets, memory-only.
     pub fn new(capacity: usize) -> DatasetCache {
         DatasetCache {
             capacity,
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             inner: Mutex::new(CacheInner { map: BTreeMap::new(), order: Vec::new() }),
+            store: None,
         }
+    }
+
+    /// Cache backed by a durable [`ResultStore`]: evicted triangles spill
+    /// to its segment directory and misses check for a spilled segment
+    /// before re-streaming the source.
+    pub fn with_store(capacity: usize, store: Arc<ResultStore>) -> DatasetCache {
+        DatasetCache { store: Some(store), ..DatasetCache::new(capacity) }
+    }
+
+    /// The attached durable store, if any.
+    pub fn store(&self) -> Option<&Arc<ResultStore>> {
+        self.store.as_ref()
     }
 
     /// The dataset for `cfg`'s data source: from memory when resident
@@ -235,28 +297,56 @@ impl DatasetCache {
             }
         }
         // Load outside the lock: dataset construction can be seconds of
-        // work and must not serialize against concurrent hits.
-        let ds = Arc::new(CachedDataset::load(cfg)?);
+        // work and must not serialize against concurrent hits.  With a
+        // store attached, a spilled segment (evicted earlier from this
+        // cache) beats re-streaming the source.
+        let ds = Arc::new(self.load_or_unspill(cfg, &key)?);
         self.misses.fetch_add(1, Ordering::Relaxed);
         if self.capacity > 0 {
-            let mut inner = self.inner.lock().unwrap();
-            // A racing loader may have inserted the key meanwhile; keep
-            // the resident instance so every consumer shares one copy.
-            // This call still *paid* a load, so it reports a miss — the
-            // per-call flags always reconcile with the hit/miss counters.
-            if let Some(existing) = inner.map.get(&key).cloned() {
-                inner.order.retain(|k| k != &key);
+            let mut victims: Vec<Arc<CachedDataset>> = Vec::new();
+            {
+                let mut inner = self.inner.lock().unwrap();
+                // A racing loader may have inserted the key meanwhile; keep
+                // the resident instance so every consumer shares one copy.
+                // This call still *paid* a load, so it reports a miss — the
+                // per-call flags always reconcile with the hit/miss counters.
+                if let Some(existing) = inner.map.get(&key).cloned() {
+                    inner.order.retain(|k| k != &key);
+                    inner.order.push(key);
+                    return Ok((existing, false));
+                }
+                while inner.map.len() >= self.capacity {
+                    let lru = inner.order.remove(0);
+                    if let Some(old) = inner.map.remove(&lru) {
+                        victims.push(old);
+                    }
+                }
+                inner.map.insert(key.clone(), Arc::clone(&ds));
                 inner.order.push(key);
-                return Ok((existing, false));
             }
-            while inner.map.len() >= self.capacity {
-                let lru = inner.order.remove(0);
-                inner.map.remove(&lru);
+            // Spill evicted triangles AFTER dropping the lock (segment
+            // writes are fsynced IO) and best-effort: a failed spill only
+            // costs a future re-stream, never an analysis.
+            if let Some(store) = &self.store {
+                for old in victims {
+                    let _ = store.spill_dir().spill(old.key(), old.tri(), &old.grouping);
+                }
             }
-            inner.map.insert(key.clone(), Arc::clone(&ds));
-            inner.order.push(key);
         }
         Ok((ds, false))
+    }
+
+    /// Resolve a miss: a spilled segment when the store has one for this
+    /// key (reloaded through full [`TriangleSink`](crate::dmat::TriangleSink)
+    /// validation), otherwise the configured source.  Segment trouble —
+    /// corruption, IO errors — silently degrades to a source load.
+    fn load_or_unspill(&self, cfg: &RunConfig, key: &str) -> Result<CachedDataset> {
+        if let Some(store) = &self.store {
+            if let Ok(Some((tri, grouping))) = store.spill_dir().load(key) {
+                return Ok(CachedDataset::from_parts(key.to_string(), tri, grouping));
+            }
+        }
+        CachedDataset::load(cfg)
     }
 
     /// Datasets currently resident.
@@ -445,6 +535,62 @@ mod tests {
         assert!(cache.get_or_load(&mk(1e-4)).is_err(), "strict-tol job re-validates");
         let s = cache.stats();
         assert_eq!(s.hits, 0, "the strict job never hit the loose entry");
+    }
+
+    #[test]
+    fn result_keys_span_statistic_inputs_only() {
+        let base = cfg(24, 5);
+        let a = result_key(&base);
+        assert_eq!(a, result_key(&base), "deterministic");
+        assert!(a.contains(&dataset_key(&base)), "{a}");
+        // Everything the statistics depend on splits the key...
+        let mut c = base.clone();
+        c.seed = 2;
+        assert_ne!(a, result_key(&c), "permutation-seed-aware");
+        let mut c = base.clone();
+        c.n_perms = 99;
+        assert_ne!(a, result_key(&c), "perms-aware");
+        let mut c = base.clone();
+        c.method = Method::Anosim;
+        assert_ne!(a, result_key(&c), "method-aware");
+        // ...and the how-it-runs knobs must NOT: one backend's stored
+        // report answers every backend's request.
+        let mut c = base.clone();
+        c.backend = "xla-cpu".into();
+        c.threads = 7;
+        c.shard_size = 16;
+        c.smt = true;
+        c.perm_block = 8;
+        assert_eq!(a, result_key(&c), "backend/scheduler-irrelevant");
+    }
+
+    #[test]
+    fn evicted_datasets_spill_and_reload_bitwise() {
+        let dir = std::env::temp_dir().join("permanova_apu_cache_spill_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store =
+            Arc::new(crate::store::ResultStore::open(crate::store::StoreConfig::new(&dir)).unwrap());
+        let cache = DatasetCache::with_store(1, Arc::clone(&store));
+        assert!(cache.store().is_some());
+        let (first, _) = cache.get_or_load(&cfg(24, 1)).unwrap();
+        let values = first.tri().values().to_vec();
+        let labels = first.grouping.labels().to_vec();
+        // Loading a second dataset evicts the first (capacity 1) — which
+        // must now be parked as a spill segment.
+        cache.get_or_load(&cfg(24, 2)).unwrap();
+        assert!(!cache.contains(&cfg(24, 1)), "evicted from memory");
+        assert_eq!(store.stats().spill.spilled, 1, "eviction spilled the triangle");
+        // The next miss reloads from the segment: a fresh Arc (not the
+        // evicted instance) holding bitwise-identical values.
+        let (back, hit) = cache.get_or_load(&cfg(24, 1)).unwrap();
+        assert!(!hit, "segment reload is still a cache miss");
+        assert!(!Arc::ptr_eq(&first, &back), "reload allocates fresh");
+        assert_eq!(back.tri().values(), &values[..], "values bitwise-equal");
+        assert_eq!(back.grouping.labels(), &labels[..], "grouping preserved");
+        assert_eq!(store.stats().spill.reloaded, 1);
+        // Kernels restart empty and recompute on demand.
+        assert_eq!(back.kernels_prepared(), 0);
+        back.kernel(Method::Permanova).unwrap();
     }
 
     #[test]

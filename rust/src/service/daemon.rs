@@ -40,6 +40,12 @@
 //!   or a `shutdown` request stop the accept loop, close the queue (new
 //!   requests shed with `retry_after`), finish every admitted job, flush,
 //!   and exit.
+//! * **Durable warm state** (opt-in via `--store-dir`).  Boot opens the
+//!   [`ResultStore`](crate::store::ResultStore) and replays its WAL;
+//!   every completed result is WAL-fsynced as it is computed; shutdown
+//!   fsync-drains the memtable into a sorted table — so a restarted
+//!   daemon answers repeated requests from disk instead of recomputing,
+//!   and a crash loses at most the unfsynced tail of the last write.
 //!
 //! [`SharedPool`]: crate::backend::shard::SharedPool
 
@@ -75,6 +81,12 @@ pub struct DaemonConfig {
     pub queue_depth: usize,
     /// The `retry_after` hint (seconds) attached to shed requests.
     pub retry_after_secs: f64,
+    /// Durable result-store directory (`--store-dir`; `None` disables the
+    /// store and the daemon behaves exactly as before it existed).  Opened
+    /// — and its WAL replayed — at spawn, fsync-drained at shutdown.
+    pub store_dir: Option<std::path::PathBuf>,
+    /// Store on-disk byte budget (`--store-capacity-bytes`; 0 = unbounded).
+    pub store_capacity_bytes: u64,
 }
 
 impl Default for DaemonConfig {
@@ -85,6 +97,8 @@ impl Default for DaemonConfig {
             cache_capacity: 8,
             queue_depth: 64,
             retry_after_secs: 0.05,
+            store_dir: None,
+            store_capacity_bytes: crate::store::DEFAULT_STORE_CAPACITY_BYTES,
         }
     }
 }
@@ -97,6 +111,9 @@ pub struct DaemonSummary {
     pub rejected: usize,
     pub completed: usize,
     pub failed: usize,
+    /// Final durable-store counters (after the shutdown fsync-drain);
+    /// `None` when the daemon ran without a store.
+    pub store: Option<crate::store::StoreStats>,
 }
 
 impl DaemonSummary {
@@ -109,6 +126,15 @@ impl DaemonSummary {
             format!("{} admitted ({} ok, {} failed)", self.admitted, self.completed, self.failed),
         ]);
         t.row(&["shed".into(), format!("{} rejected with retry_after", self.rejected)]);
+        if let Some(s) = &self.store {
+            t.row(&[
+                "store".into(),
+                format!(
+                    "drained: {} hits / {} misses, {} segments, {} bytes",
+                    s.hits, s.misses, s.segments, s.disk_bytes
+                ),
+            ]);
+        }
         t.render()
     }
 }
@@ -135,9 +161,21 @@ struct ServiceState {
 }
 
 impl ServiceState {
-    fn new(cfg: &DaemonConfig) -> ServiceState {
-        ServiceState {
-            cache: DatasetCache::new(cfg.cache_capacity),
+    /// Build the shared state — opening (and WAL-replaying) the durable
+    /// store when one is configured.  An unopenable store dir fails the
+    /// spawn loudly: the operator asked for durability they wouldn't get.
+    fn new(cfg: &DaemonConfig) -> Result<ServiceState> {
+        let cache = match &cfg.store_dir {
+            Some(dir) => {
+                let mut sc = crate::store::StoreConfig::new(dir);
+                sc.capacity_bytes = cfg.store_capacity_bytes;
+                let store = Arc::new(crate::store::ResultStore::open(sc)?);
+                DatasetCache::with_store(cfg.cache_capacity, store)
+            }
+            None => DatasetCache::new(cfg.cache_capacity),
+        };
+        Ok(ServiceState {
+            cache,
             queue: AdmissionQueue::new(cfg.queue_depth),
             retry_after_secs: cfg.retry_after_secs,
             started: Instant::now(),
@@ -146,7 +184,7 @@ impl ServiceState {
             failed: AtomicUsize::new(0),
             draining: AtomicBool::new(false),
             per_method: Mutex::new(BTreeMap::new()),
-        }
+        })
     }
 
     /// Execute one admitted job (on the executor thread, inside the
@@ -189,34 +227,40 @@ impl ServiceState {
                 (name.to_string(), cell)
             })
             .collect();
+        // Uptime/throughput are monotonic end to end: `started` is an
+        // Instant and per-method busy seconds accumulate Instant deltas,
+        // so a wall-clock step (NTP, DST) can never yield negative rates.
+        let mut stats = vec![
+            ("uptime_secs", Json::num(self.started.elapsed().as_secs_f64())),
+            ("connections", Json::num(self.connections.load(Ordering::Relaxed) as f64)),
+            ("queue_depth", Json::num(self.queue.depth() as f64)),
+            ("queue_capacity", Json::num(self.queue.capacity() as f64)),
+            ("admitted", Json::num(self.queue.admitted() as f64)),
+            ("rejected", Json::num(self.queue.rejected() as f64)),
+            ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
+            ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
+            ("draining", Json::Bool(self.draining.load(Ordering::Relaxed))),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(cs.hits as f64)),
+                    ("misses", Json::num(cs.misses as f64)),
+                    ("entries", Json::num(cs.entries as f64)),
+                    ("capacity", Json::num(cs.capacity as f64)),
+                    ("hit_rate", Json::num(cs.hit_rate())),
+                ]),
+            ),
+        ];
+        // The store section only exists when a store is attached — the
+        // store-free stats response stays byte-identical to before.
+        if let Some(store) = self.cache.store() {
+            stats.push(("store", store.stats_json()));
+        }
+        stats.push(("methods", Json::Obj(methods.into_iter().collect())));
         Json::obj(vec![
             ("id", Json::str(id)),
             ("ok", Json::Bool(true)),
-            (
-                "stats",
-                Json::obj(vec![
-                    ("uptime_secs", Json::num(self.started.elapsed().as_secs_f64())),
-                    ("connections", Json::num(self.connections.load(Ordering::Relaxed) as f64)),
-                    ("queue_depth", Json::num(self.queue.depth() as f64)),
-                    ("queue_capacity", Json::num(self.queue.capacity() as f64)),
-                    ("admitted", Json::num(self.queue.admitted() as f64)),
-                    ("rejected", Json::num(self.queue.rejected() as f64)),
-                    ("completed", Json::num(self.completed.load(Ordering::Relaxed) as f64)),
-                    ("failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
-                    ("draining", Json::Bool(self.draining.load(Ordering::Relaxed))),
-                    (
-                        "cache",
-                        Json::obj(vec![
-                            ("hits", Json::num(cs.hits as f64)),
-                            ("misses", Json::num(cs.misses as f64)),
-                            ("entries", Json::num(cs.entries as f64)),
-                            ("capacity", Json::num(cs.capacity as f64)),
-                            ("hit_rate", Json::num(cs.hit_rate())),
-                        ]),
-                    ),
-                    ("methods", Json::Obj(methods.into_iter().collect())),
-                ]),
-            ),
+            ("stats", Json::obj(stats)),
         ])
     }
 
@@ -227,6 +271,7 @@ impl ServiceState {
             rejected: self.queue.rejected(),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            store: None,
         }
     }
 }
@@ -358,7 +403,7 @@ impl Daemon {
         listener
             .set_nonblocking(true)
             .map_err(|e| Error::io(cfg.addr.clone(), e))?;
-        let state = Arc::new(ServiceState::new(&cfg));
+        let state = Arc::new(ServiceState::new(&cfg)?);
         let stop = Arc::new(AtomicBool::new(false));
         let thread = {
             let state = Arc::clone(&state);
@@ -433,7 +478,17 @@ fn run_daemon(
     state.draining.store(true, Ordering::Relaxed);
     state.queue.close();
     let _ = executor.join();
-    state.summary()
+    // Fsync-drain the durable store: flush the memtable to a sorted
+    // table so the next boot replays an empty WAL.  Every put was
+    // already WAL-fsynced, so even a failed drain loses nothing.
+    let mut summary = state.summary();
+    if let Some(store) = state.cache.store() {
+        if let Err(e) = store.drain() {
+            eprintln!("store drain failed (results stay WAL-durable): {e}");
+        }
+        summary.store = Some(store.stats());
+    }
+    summary
 }
 
 /// One connection's read loop: parse frames, assign sequence numbers,

@@ -7,7 +7,8 @@
 //! `{"v": 1, "id": ..., "request": {...}}` shape, with legacy bare jobs
 //! accepted as implicit v0); responses leave as JSONL in request order,
 //! each line carrying the job's outcome, its cache provenance
-//! (`"hit"`/`"miss"`) and the full analysis report.  A failed job produces
+//! (`"hit"`/`"miss"`, or `"store"` when the durable tier answered) and
+//! the full analysis report.  A failed job produces
 //! an `"ok": false` line and the batch keeps going — one malformed request
 //! must not poison a thousand good ones.
 //!
@@ -158,21 +159,63 @@ impl BatchSummary {
 /// byte-identical to one-shot batch responses for the same request.
 /// Returns `(response, ok)`.
 ///
+/// With a durable store attached to the cache, the store is consulted
+/// (by [`result_key`](super::result_key)) **before** engine execution: a
+/// stored result comes back verbatim as `"cache": "store"` +
+/// `"store": "hit"` — the embedded report is the exact JSON the original
+/// computation serialized.  A store miss runs the engine normally, writes
+/// the serialized report back durably, and tags the response
+/// `"store": "miss"`.  Without a store, responses carry no `"store"`
+/// field and are byte-identical to the store-free service.
+///
 /// Runs on whatever scheduler the calling thread has ambient — call it
 /// inside [`with_shared_pool`] to serve the sharded permutation loops
 /// from one persistent crew.
 pub fn execute_job(job: &JobRequest, cache: &DatasetCache) -> (Json, bool) {
     let t_job = Instant::now();
+    // Durable tier first: a stored result skips engine execution (and the
+    // dataset load) entirely.  Undecodable stored bytes degrade to a
+    // recompute — the store may cost nothing, never an analysis.
+    let store_key =
+        cache.store().map(|_| super::cache::result_key(&job.cfg));
+    if let (Some(store), Some(key)) = (cache.store(), &store_key) {
+        if let Some(bytes) = store.get(key) {
+            if let Some(report) =
+                std::str::from_utf8(&bytes).ok().and_then(|s| Json::parse(s).ok())
+            {
+                let mut pairs = vec![
+                    ("id", Json::str(job.id.clone())),
+                    ("ok", Json::Bool(true)),
+                    ("cache", Json::str("store")),
+                    ("dataset", Json::str(super::cache::dataset_key(&job.cfg))),
+                    ("elapsed_secs", Json::num(t_job.elapsed().as_secs_f64())),
+                    ("report", report),
+                    ("store", Json::str("hit")),
+                ];
+                if job.deprecated {
+                    pairs.push(("note", Json::str(super::envelope::DEPRECATION_NOTE)));
+                }
+                return (Json::obj(pairs), true);
+            }
+        }
+    }
     match crate::request::AnalysisRequest::new(&job.cfg).via_cache(cache).run_traced() {
         Ok((report, hit)) => {
+            let report_json = report.to_json();
             let mut pairs = vec![
                 ("id", Json::str(job.id.clone())),
                 ("ok", Json::Bool(true)),
                 ("cache", Json::str(if hit { "hit" } else { "miss" })),
                 ("dataset", Json::str(super::cache::dataset_key(&job.cfg))),
                 ("elapsed_secs", Json::num(t_job.elapsed().as_secs_f64())),
-                ("report", report.to_json()),
             ];
+            if let (Some(store), Some(key)) = (cache.store(), &store_key) {
+                // Persist the exact serialized report (WAL-fsynced);
+                // best-effort — a full disk must not fail the job.
+                let _ = store.put(key, report_json.to_string().as_bytes());
+                pairs.push(("store", Json::str("miss")));
+            }
+            pairs.push(("report", report_json));
             if job.deprecated {
                 pairs.push(("note", Json::str(super::envelope::DEPRECATION_NOTE)));
             }
@@ -227,9 +270,10 @@ pub fn run_jobs(jobs: &[JobRequest], cache: &DatasetCache, workers: usize) -> Ba
 /// line parses, carries `"id"` + boolean `"ok"`, and `ok` lines embed a
 /// report object while failed lines carry an `"error"` string.  The
 /// envelope-era optional fields are type-checked too: `"note"` (the v0
-/// deprecation note) must be a string and `"retry_after"` (daemon
-/// load-shedding) a non-negative number on a failed line.  Returns
-/// `(ok_count, failed_count)`.
+/// deprecation note) must be a string, `"retry_after"` (daemon
+/// load-shedding) a non-negative number on a failed line, and `"store"`
+/// (durable-tier provenance) `"hit"`/`"miss"` consistent with the cache
+/// field.  Returns `(ok_count, failed_count)`.
 pub fn validate_responses(text: &str) -> Result<(usize, usize)> {
     let mut ok = 0usize;
     let mut failed = 0usize;
@@ -260,8 +304,27 @@ pub fn validate_responses(text: &str) -> Result<(usize, usize)> {
         }
         if is_ok {
             let cache = doc.req_str("cache").map_err(|e| ctx(e.to_string()))?;
-            if cache != "hit" && cache != "miss" {
-                return Err(ctx(format!("cache must be hit|miss, got {cache:?}")));
+            if cache != "hit" && cache != "miss" && cache != "store" {
+                return Err(ctx(format!("cache must be hit|miss|store, got {cache:?}")));
+            }
+            // "store" is optional (absent without a durable store); when
+            // present it must be hit|miss and agree with the cache
+            // provenance: a store hit IS the "cache": "store" case.
+            match doc.get("store").map(|s| s.as_str()) {
+                None if cache == "store" => {
+                    return Err(ctx("cache \"store\" without a store field".into()))
+                }
+                None => {}
+                Some(Some("hit")) if cache != "store" => {
+                    return Err(ctx("store hit must report cache \"store\"".into()))
+                }
+                Some(Some("miss")) if cache == "store" => {
+                    return Err(ctx("cache \"store\" on a store miss".into()))
+                }
+                Some(Some("hit")) | Some(Some("miss")) => {}
+                Some(other) => {
+                    return Err(ctx(format!("store must be hit|miss, got {other:?}")))
+                }
             }
             let report = doc
                 .get("report")
@@ -420,6 +483,82 @@ mod tests {
             ("{\"id\": \"x\", \"ok\": false, \"error\": \"e\", \"note\": 7}\n", "non-string note"),
         ] {
             assert!(validate_responses(bad).is_err(), "{why}");
+        }
+    }
+
+    #[test]
+    fn store_backed_batches_hit_across_cache_instances() {
+        use crate::store::{ResultStore, StoreConfig};
+        use std::sync::Arc;
+        let dir = std::env::temp_dir().join("permanova_apu_jobs_store_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let jobs = parse_jobs(JOBS).unwrap();
+
+        // First batch: store attached, everything misses the store and is
+        // written back durably.
+        let store = Arc::new(ResultStore::open(StoreConfig::new(&dir)).unwrap());
+        let cache = DatasetCache::with_store(4, Arc::clone(&store));
+        let first = run_jobs(&jobs, &cache, 1);
+        assert_eq!(first.summary.ok, 3);
+        for r in &first.responses {
+            assert_eq!(r.req_str("store").unwrap(), "miss");
+            assert_ne!(r.req_str("cache").unwrap(), "store");
+        }
+        assert_eq!(store.stats().puts, 3);
+        drop(cache);
+        drop(store);
+
+        // Second batch, fresh cache + reopened store (a "restart"): every
+        // job answers from the durable tier with the verbatim report.
+        let store2 = Arc::new(ResultStore::open(StoreConfig::new(&dir)).unwrap());
+        let cache2 = DatasetCache::with_store(4, store2);
+        let second = run_jobs(&jobs, &cache2, 1);
+        assert_eq!(second.summary.ok, 3);
+        for (a, b) in first.responses.iter().zip(&second.responses) {
+            assert_eq!(b.req_str("cache").unwrap(), "store");
+            assert_eq!(b.req_str("store").unwrap(), "hit");
+            assert_eq!(
+                a.get("report").unwrap().to_string(),
+                b.get("report").unwrap().to_string(),
+                "store hit returns the original serialized report verbatim"
+            );
+        }
+        assert_eq!(second.summary.cache.misses, 0, "no dataset load at all");
+        // Both streams pass the validator (store field accepted).
+        validate_responses(&first.to_jsonl()).unwrap();
+        validate_responses(&second.to_jsonl()).unwrap();
+    }
+
+    #[test]
+    fn response_validator_checks_store_provenance() {
+        let report = "{\"backend\": \"b\", \"method\": \"m\"}";
+        let ok = format!(
+            "{{\"id\": \"x\", \"ok\": true, \"cache\": \"store\", \"store\": \"hit\", \"report\": {report}}}\n"
+        );
+        assert_eq!(validate_responses(&ok).unwrap(), (1, 0));
+        let ok = format!(
+            "{{\"id\": \"x\", \"ok\": true, \"cache\": \"miss\", \"store\": \"miss\", \"report\": {report}}}\n"
+        );
+        assert_eq!(validate_responses(&ok).unwrap(), (1, 0));
+        for (bad, why) in [
+            (
+                format!("{{\"id\": \"x\", \"ok\": true, \"cache\": \"store\", \"report\": {report}}}\n"),
+                "cache store without a store field",
+            ),
+            (
+                format!("{{\"id\": \"x\", \"ok\": true, \"cache\": \"hit\", \"store\": \"hit\", \"report\": {report}}}\n"),
+                "store hit must report cache store",
+            ),
+            (
+                format!("{{\"id\": \"x\", \"ok\": true, \"cache\": \"store\", \"store\": \"miss\", \"report\": {report}}}\n"),
+                "cache store on a store miss",
+            ),
+            (
+                format!("{{\"id\": \"x\", \"ok\": true, \"cache\": \"miss\", \"store\": 7, \"report\": {report}}}\n"),
+                "non-string store",
+            ),
+        ] {
+            assert!(validate_responses(&bad).is_err(), "{why}");
         }
     }
 

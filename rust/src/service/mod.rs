@@ -1,7 +1,7 @@
 //! The shared-dataset analysis service layer: what turns the one-shot CLI
 //! into a network service.
 //!
-//! Five pieces, stacked on the execution engine:
+//! Six pieces, stacked on the execution engine:
 //!
 //! * [`DatasetCache`] — seeded/hashed data-source key → loaded
 //!   [`DistanceMatrix`](crate::dmat::DistanceMatrix) + grouping +
@@ -24,7 +24,13 @@
 //!   responses, a `stats` request and graceful drain;
 //! * the JSONL response format — [`BatchOutcome::to_jsonl`] /
 //!   [`validate_responses`] for the ordered response stream the `serve`
-//!   subcommand emits and CI validates.
+//!   subcommand emits and CI validates;
+//! * the durable tier — an optional
+//!   [`ResultStore`](crate::store::ResultStore) behind the cache
+//!   ([`DatasetCache::with_store`]): [`execute_job`] consults it (keyed by
+//!   [`result_key`]) between a cache hit and engine execution, evicted
+//!   triangles spill to disk segments, and the daemon replays/drains it at
+//!   boot/shutdown so warm state survives restarts.
 //!
 //! Correctness contract: warm-cache results are **bitwise identical** to
 //! cold single-shot runs for the same (dataset, method, backend, seed) —
@@ -40,7 +46,7 @@ mod envelope;
 mod jobs;
 pub mod wire;
 
-pub use cache::{dataset_key, CacheStats, CachedDataset, DatasetCache};
+pub use cache::{dataset_key, result_key, CacheStats, CachedDataset, DatasetCache};
 pub use daemon::{
     client_exchange, install_signal_handlers, Daemon, DaemonConfig, DaemonHandle, DaemonSummary,
 };

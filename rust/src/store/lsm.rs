@@ -1,0 +1,401 @@
+//! The LSM tree: WAL → memtable → immutable sorted tables, with
+//! size-tiered compaction and a byte-capacity eviction policy.
+//!
+//! Write path: [`put`](Lsm::put) appends + fsyncs the WAL record, then
+//! inserts into the memtable; once the memtable crosses the flush
+//! threshold it is written out as one immutable [`SsTable`] and the WAL
+//! resets.  Read path: memtable first (always the newest version), then
+//! tables newest-to-oldest — first hit wins, so later writes shadow
+//! earlier ones without tombstones (the store is a cache; keys are never
+//! deleted individually, only evicted wholesale).
+//!
+//! Compaction is size-tiered in the simplest shape that bounds read
+//! amplification: when [`MAX_TABLES`] tables accumulate, all of them
+//! merge (newest version of each key wins) into one table and the olds
+//! are unlinked.  Capacity is a cache budget, not a quota: when the
+//! on-disk footprint exceeds `capacity_bytes`, whole oldest tables are
+//! dropped — for a result cache, losing the oldest entries only costs a
+//! recompute, never correctness.
+//!
+//! Crash-safety: the WAL is fsynced per put (kill −9 loses at most the
+//! record mid-write — see [`Wal`]); tables become visible only via an
+//! fsync + atomic rename (a crash mid-flush leaves a `.tmp` stray that
+//! [`open`](Lsm::open) sweeps); the WAL resets only *after* its records
+//! are durable in a table.  Every boot state is therefore one of: record
+//! in WAL, record in table, or record torn-and-dropped — never corrupt.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+use super::mem_table::MemTable;
+use super::ss_table::SsTable;
+use super::wal::Wal;
+
+/// Default memtable flush threshold: serialized reports are a few KiB, so
+/// this batches thousands of results per table while keeping WAL replay
+/// (and therefore boot) cheap.
+pub const DEFAULT_FLUSH_BYTES: usize = 4 << 20;
+
+/// Tables that may accumulate before a full merge.  Reads check every
+/// table on a miss, so this directly bounds read amplification.
+pub const MAX_TABLES: usize = 4;
+
+/// File name of the write-ahead log inside the store directory.
+const WAL_FILE: &str = "wal.log";
+
+/// Tuning for one [`Lsm`] tree.
+#[derive(Clone, Debug)]
+pub struct LsmConfig {
+    /// Directory holding `wal.log` and `sst-*.sst` (created if absent).
+    pub dir: PathBuf,
+    /// On-disk byte budget; `0` = unbounded.  Enforced at table
+    /// granularity by dropping the oldest tables.
+    pub capacity_bytes: u64,
+    /// Memtable size that triggers a flush to a sorted table.
+    pub flush_bytes: usize,
+}
+
+/// Point-in-time counters for the `stats` op and the bench axis.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LsmStats {
+    /// Entries buffered in the memtable (WAL-durable, not yet in a table).
+    pub mem_entries: usize,
+    /// Immutable sorted tables on disk.
+    pub segments: usize,
+    /// Entries across all tables (pre-dedup: shadowed versions count).
+    pub table_entries: usize,
+    /// Full-merge compactions performed this process lifetime.
+    pub compactions: u64,
+    /// Tables dropped: capacity evictions + corrupt segments swept at open.
+    pub evicted_segments: u64,
+    /// On-disk bytes: every table file + the live WAL.
+    pub disk_bytes: u64,
+    /// Bytes currently in the WAL (replay cost of a crash right now).
+    pub wal_bytes: u64,
+}
+
+/// The log-structured merge tree.
+#[derive(Debug)]
+pub struct Lsm {
+    cfg: LsmConfig,
+    wal: Wal,
+    mem: MemTable,
+    /// Newest first — read order after the memtable.
+    tables: Vec<SsTable>,
+    next_seq: u64,
+    compactions: u64,
+    evicted_segments: u64,
+}
+
+impl Lsm {
+    /// Open (creating if absent) the tree at `cfg.dir`: sweep `.tmp`
+    /// strays, open every intact table newest-first (a corrupt table is
+    /// unlinked and counted, never fatal — cache semantics), replay the
+    /// WAL into the memtable.
+    pub fn open(cfg: LsmConfig) -> Result<Lsm> {
+        std::fs::create_dir_all(&cfg.dir)
+            .map_err(|e| Error::io(cfg.dir.display().to_string(), e))?;
+        let mut seqs: Vec<(u64, PathBuf)> = Vec::new();
+        let mut evicted_segments = 0u64;
+        let entries = std::fs::read_dir(&cfg.dir)
+            .map_err(|e| Error::io(cfg.dir.display().to_string(), e))?;
+        for entry in entries {
+            let path = entry.map_err(|e| Error::io(cfg.dir.display().to_string(), e))?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if name.ends_with(".tmp") {
+                // A flush died mid-write before its rename; harmless.
+                let _ = std::fs::remove_file(&path);
+                continue;
+            }
+            if let Some(seq) = table_seq(name) {
+                seqs.push((seq, path));
+            }
+        }
+        // Newest (highest sequence) first — the read-priority order.
+        seqs.sort_by(|a, b| b.0.cmp(&a.0));
+        let next_seq = seqs.first().map(|(s, _)| s + 1).unwrap_or(0);
+        let mut tables = Vec::with_capacity(seqs.len());
+        for (_, path) in &seqs {
+            match SsTable::open(path) {
+                Ok(t) => tables.push(t),
+                Err(_) => {
+                    // Bitrot or a foreign file wearing our name: drop it
+                    // rather than refuse to boot or serve bad bytes.
+                    let _ = std::fs::remove_file(path);
+                    evicted_segments += 1;
+                }
+            }
+        }
+        let (wal, replayed) = Wal::open(cfg.dir.join(WAL_FILE))?;
+        let mut mem = MemTable::new();
+        for (key, value) in replayed {
+            mem.insert(key, value);
+        }
+        let mut lsm = Lsm {
+            cfg,
+            wal,
+            mem,
+            tables,
+            next_seq,
+            compactions: 0,
+            evicted_segments,
+        };
+        // A crash can leave a replayed memtable already past the flush
+        // threshold; flush now so the invariant holds from the start.
+        if lsm.mem.approx_bytes() >= lsm.cfg.flush_bytes {
+            lsm.flush()?;
+        }
+        Ok(lsm)
+    }
+
+    /// Newest value for `key`: memtable, then tables newest-to-oldest.
+    pub fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        if let Some(v) = self.mem.get(key) {
+            return Ok(Some(v.to_vec()));
+        }
+        for table in &self.tables {
+            if let Some(v) = table.get(key)? {
+                return Ok(Some(v));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Durably record `key -> value`: WAL append + fsync, memtable
+    /// insert, flush if the threshold tripped.
+    pub fn put(&mut self, key: &str, value: &[u8]) -> Result<()> {
+        self.wal.append(key, value)?;
+        self.wal.sync()?;
+        self.mem.insert(key.to_string(), value.to_vec());
+        if self.mem.approx_bytes() >= self.cfg.flush_bytes {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Write the memtable out as a new immutable table, reset the WAL,
+    /// then compact / enforce the capacity budget.  No-op when empty.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.mem.is_empty() {
+            return Ok(());
+        }
+        let entries = self.mem.take();
+        let path = self.table_path(self.next_seq);
+        self.next_seq += 1;
+        SsTable::write(&path, &entries)?;
+        self.tables.insert(0, SsTable::open(&path)?);
+        // Only now are the records durable outside the WAL.
+        self.wal.reset()?;
+        self.maybe_compact()?;
+        self.enforce_capacity();
+        Ok(())
+    }
+
+    /// Graceful-shutdown hook: flush whatever is buffered so the next
+    /// boot replays nothing.  (Unflushed state would survive anyway — in
+    /// the WAL — this just makes restart O(index load).)
+    pub fn drain(&mut self) -> Result<()> {
+        self.flush()
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> LsmStats {
+        LsmStats {
+            mem_entries: self.mem.len(),
+            segments: self.tables.len(),
+            table_entries: self.tables.iter().map(SsTable::len).sum(),
+            compactions: self.compactions,
+            evicted_segments: self.evicted_segments,
+            disk_bytes: self.disk_bytes(),
+            wal_bytes: self.wal.bytes(),
+        }
+    }
+
+    /// Table files + live WAL, in bytes.
+    pub fn disk_bytes(&self) -> u64 {
+        self.tables.iter().map(SsTable::file_bytes).sum::<u64>() + self.wal.bytes()
+    }
+
+    fn table_path(&self, seq: u64) -> PathBuf {
+        self.cfg.dir.join(format!("sst-{seq:010}.sst"))
+    }
+
+    /// Full merge once [`MAX_TABLES`] accumulate: oldest-to-newest so the
+    /// newest version of each key wins, one merged table replaces all.
+    fn maybe_compact(&mut self) -> Result<()> {
+        if self.tables.len() < MAX_TABLES {
+            return Ok(());
+        }
+        let mut merged: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+        for table in self.tables.iter().rev() {
+            for (key, value) in table.entries()? {
+                merged.insert(key, value);
+            }
+        }
+        let path = self.table_path(self.next_seq);
+        self.next_seq += 1;
+        SsTable::write(&path, &merged)?;
+        let new = SsTable::open(&path)?;
+        let old: Vec<PathBuf> =
+            self.tables.iter().map(|t| t.path().to_path_buf()).collect();
+        self.tables = vec![new];
+        for p in old {
+            let _ = std::fs::remove_file(p);
+        }
+        self.compactions += 1;
+        Ok(())
+    }
+
+    /// Drop whole oldest tables while over the byte budget.  The single
+    /// newest table always survives — capacity is enforced at table
+    /// granularity, so one oversized table is tolerated rather than
+    /// thrashing.
+    fn enforce_capacity(&mut self) {
+        if self.cfg.capacity_bytes == 0 {
+            return;
+        }
+        while self.tables.len() > 1 && self.disk_bytes() > self.cfg.capacity_bytes {
+            let victim = self.tables.pop().expect("len > 1 checked");
+            let _ = std::fs::remove_file(victim.path());
+            self.evicted_segments += 1;
+        }
+    }
+}
+
+/// Parse `sst-NNNNNNNNNN.sst` into its sequence number.
+fn table_seq(name: &str) -> Option<u64> {
+    name.strip_prefix("sst-")?.strip_suffix(".sst")?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_tree(case: &str, capacity: u64, flush: usize) -> LsmConfig {
+        let dir =
+            std::env::temp_dir().join(format!("permanova_apu_store_lsm_test_{case}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        LsmConfig { dir, capacity_bytes: capacity, flush_bytes: flush }
+    }
+
+    #[test]
+    fn put_get_survive_reopen_via_wal() {
+        let cfg = tmp_tree("wal_survive", 0, DEFAULT_FLUSH_BYTES);
+        let mut lsm = Lsm::open(cfg.clone()).unwrap();
+        lsm.put("k1", b"v1").unwrap();
+        lsm.put("k2", b"v2").unwrap();
+        lsm.put("k1", b"v1b").unwrap();
+        assert_eq!(lsm.get("k1").unwrap(), Some(b"v1b".to_vec()), "last write wins");
+        assert_eq!(lsm.stats().segments, 0, "nothing flushed yet");
+        drop(lsm);
+        let lsm = Lsm::open(cfg).unwrap();
+        assert_eq!(lsm.get("k1").unwrap(), Some(b"v1b".to_vec()));
+        assert_eq!(lsm.get("k2").unwrap(), Some(b"v2".to_vec()));
+        assert_eq!(lsm.get("k3").unwrap(), None);
+        assert_eq!(lsm.stats().mem_entries, 2, "replayed from the WAL");
+    }
+
+    #[test]
+    fn flush_moves_entries_to_tables_and_resets_wal() {
+        let cfg = tmp_tree("flush", 0, DEFAULT_FLUSH_BYTES);
+        let mut lsm = Lsm::open(cfg.clone()).unwrap();
+        lsm.put("a", b"1").unwrap();
+        lsm.put("b", b"2").unwrap();
+        lsm.flush().unwrap();
+        let s = lsm.stats();
+        assert_eq!((s.mem_entries, s.segments, s.wal_bytes), (0, 1, 0));
+        assert_eq!(lsm.get("a").unwrap(), Some(b"1".to_vec()), "served from the table");
+        drop(lsm);
+        let lsm = Lsm::open(cfg).unwrap();
+        assert_eq!(lsm.get("b").unwrap(), Some(b"2".to_vec()), "table survives reopen");
+        assert_eq!(lsm.stats().mem_entries, 0, "WAL was empty — nothing replayed");
+    }
+
+    #[test]
+    fn tiny_threshold_auto_flushes_and_newest_table_wins() {
+        let cfg = tmp_tree("auto_flush", 0, 1);
+        let mut lsm = Lsm::open(cfg).unwrap();
+        lsm.put("k", b"old").unwrap(); // flushes immediately (threshold 1)
+        lsm.put("k", b"new").unwrap(); // second table shadows the first
+        let s = lsm.stats();
+        assert!(s.segments >= 2, "each put flushed: {s:?}");
+        assert_eq!(lsm.get("k").unwrap(), Some(b"new".to_vec()));
+    }
+
+    #[test]
+    fn compaction_merges_tables_and_preserves_lookups() {
+        let cfg = tmp_tree("compact", 0, 1);
+        let mut lsm = Lsm::open(cfg.clone()).unwrap();
+        for i in 0..MAX_TABLES {
+            lsm.put(&format!("key-{i}"), format!("val-{i}").as_bytes()).unwrap();
+        }
+        let s = lsm.stats();
+        assert_eq!(s.segments, 1, "MAX_TABLES flushes triggered one merge: {s:?}");
+        assert_eq!(s.compactions, 1);
+        assert_eq!(s.table_entries, MAX_TABLES);
+        for i in 0..MAX_TABLES {
+            assert_eq!(
+                lsm.get(&format!("key-{i}")).unwrap(),
+                Some(format!("val-{i}").into_bytes()),
+                "lookup preserved across compaction"
+            );
+        }
+        drop(lsm);
+        let lsm = Lsm::open(cfg).unwrap();
+        for i in 0..MAX_TABLES {
+            assert!(lsm.get(&format!("key-{i}")).unwrap().is_some());
+        }
+    }
+
+    #[test]
+    fn capacity_drops_oldest_tables_only() {
+        // Budget of ~one tiny table (~55 bytes each here): every flush
+        // evicts the previous table.
+        let cfg = tmp_tree("capacity", 60, 1);
+        let mut lsm = Lsm::open(cfg).unwrap();
+        lsm.put("old", b"x").unwrap();
+        lsm.put("new", b"y").unwrap();
+        let s = lsm.stats();
+        assert_eq!(s.segments, 1, "{s:?}");
+        assert!(s.evicted_segments >= 1);
+        assert_eq!(lsm.get("new").unwrap(), Some(b"y".to_vec()), "newest survives");
+        assert_eq!(lsm.get("old").unwrap(), None, "oldest evicted — only a recompute");
+    }
+
+    #[test]
+    fn corrupt_table_is_swept_not_fatal() {
+        let cfg = tmp_tree("sweep", 0, DEFAULT_FLUSH_BYTES);
+        let mut lsm = Lsm::open(cfg.clone()).unwrap();
+        lsm.put("keep", b"me").unwrap();
+        lsm.flush().unwrap();
+        lsm.put("also", b"keep").unwrap();
+        drop(lsm);
+        // A foreign file wearing a table name + a stray .tmp from a "crash".
+        std::fs::write(cfg.dir.join("sst-9999999999.sst"), b"junk").unwrap();
+        std::fs::write(cfg.dir.join("sst-0000000007.sst.tmp"), b"half a flush").unwrap();
+        let lsm = Lsm::open(cfg.clone()).unwrap();
+        assert_eq!(lsm.get("keep").unwrap(), Some(b"me".to_vec()));
+        assert_eq!(lsm.get("also").unwrap(), Some(b"keep".to_vec()));
+        let s = lsm.stats();
+        assert_eq!(s.evicted_segments, 1, "the junk table was swept: {s:?}");
+        assert!(!cfg.dir.join("sst-9999999999.sst").exists());
+        assert!(!cfg.dir.join("sst-0000000007.sst.tmp").exists());
+    }
+
+    #[test]
+    fn drain_then_reopen_replays_nothing() {
+        let cfg = tmp_tree("drain", 0, DEFAULT_FLUSH_BYTES);
+        let mut lsm = Lsm::open(cfg.clone()).unwrap();
+        lsm.put("k", b"v").unwrap();
+        lsm.drain().unwrap();
+        assert_eq!(lsm.stats().wal_bytes, 0);
+        drop(lsm);
+        let lsm = Lsm::open(cfg).unwrap();
+        assert_eq!(lsm.stats().mem_entries, 0);
+        assert_eq!(lsm.get("k").unwrap(), Some(b"v".to_vec()));
+    }
+}

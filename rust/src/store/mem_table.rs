@@ -1,0 +1,112 @@
+//! The in-memory write buffer of the LSM tree.
+//!
+//! A sorted `key -> value` map absorbing every [`put`](super::Lsm::put)
+//! after it is WAL-durable.  Lookups hit it first (it always holds the
+//! newest version of a key), and when its approximate footprint crosses
+//! the flush threshold the whole map is [taken](MemTable::take) and
+//! written out as one immutable sorted table — `BTreeMap` iteration order
+//! *is* the table's key order, so the flush is a single sequential pass.
+
+use std::collections::BTreeMap;
+
+/// Fixed per-entry bookkeeping estimate (map node + two vec headers);
+/// exact heap accounting isn't worth chasing — the threshold only decides
+/// *when* to flush, never correctness.
+const ENTRY_OVERHEAD: usize = 64;
+
+/// The mutable sorted buffer between the WAL and the sorted tables.
+#[derive(Debug, Default)]
+pub struct MemTable {
+    map: BTreeMap<String, Vec<u8>>,
+    bytes: usize,
+}
+
+impl MemTable {
+    /// An empty memtable.
+    pub fn new() -> MemTable {
+        MemTable::default()
+    }
+
+    /// Insert or overwrite `key`.  Last write wins, matching WAL replay
+    /// order and the newest-table-first read path.
+    pub fn insert(&mut self, key: String, value: Vec<u8>) {
+        let key_bytes = key.len();
+        let value_bytes = value.len();
+        match self.map.insert(key, value) {
+            // Replaced: key + overhead stay accounted; swap the value size.
+            Some(old) => {
+                self.bytes = self.bytes.saturating_sub(old.len()) + value_bytes;
+            }
+            None => self.bytes += key_bytes + value_bytes + ENTRY_OVERHEAD,
+        }
+    }
+
+    /// The newest value for `key`, if buffered.
+    pub fn get(&self, key: &str) -> Option<&[u8]> {
+        self.map.get(key).map(Vec::as_slice)
+    }
+
+    /// Buffered entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Approximate heap footprint — the flush trigger.
+    pub fn approx_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Move the whole buffer out (for a flush), leaving the memtable
+    /// empty.  The returned map iterates in key order — exactly the
+    /// layout [`SsTable::write`](super::SsTable::write) wants.
+    pub fn take(&mut self) -> BTreeMap<String, Vec<u8>> {
+        self.bytes = 0;
+        std::mem::take(&mut self.map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_write_wins_and_bytes_track() {
+        let mut m = MemTable::new();
+        assert!(m.is_empty());
+        m.insert("b".into(), vec![1, 2, 3]);
+        m.insert("a".into(), vec![9]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get("b"), Some(&[1u8, 2, 3][..]));
+        let before = m.approx_bytes();
+        m.insert("b".into(), vec![7; 100]);
+        assert_eq!(m.get("b"), Some(&[7u8; 100][..]), "overwrite keeps the newest");
+        assert_eq!(m.len(), 2);
+        assert!(m.approx_bytes() > before, "larger replacement grows the estimate");
+    }
+
+    #[test]
+    fn take_drains_in_key_order() {
+        let mut m = MemTable::new();
+        m.insert("z".into(), b"3".to_vec());
+        m.insert("a".into(), b"1".to_vec());
+        m.insert("m".into(), b"2".to_vec());
+        let drained = m.take();
+        assert!(m.is_empty());
+        assert_eq!(m.approx_bytes(), 0);
+        let keys: Vec<&str> = drained.keys().map(String::as_str).collect();
+        assert_eq!(keys, ["a", "m", "z"], "sorted — ready for a sequential table write");
+    }
+
+    #[test]
+    fn shrinking_replacement_never_underflows() {
+        let mut m = MemTable::new();
+        m.insert("k".into(), vec![0; 1000]);
+        m.insert("k".into(), Vec::new());
+        assert!(m.approx_bytes() >= "k".len() + ENTRY_OVERHEAD);
+    }
+}

@@ -1,0 +1,298 @@
+//! Spill segments: evicted packed triangles parked on disk.
+//!
+//! When the LRU [`DatasetCache`](crate::service::DatasetCache) evicts a
+//! dataset, its packed `n(n-1)/2` buffer — the expensive, memory-bound
+//! part of a load — is written here instead of being dropped outright.
+//! A later miss on the same dataset key reloads the segment instead of
+//! re-streaming (or re-generating) the source.
+//!
+//! Segment layout, modelled on the `PDM1` row format but packed-only:
+//!
+//! ```text
+//! [b"SPL1"] [u32 LE key_len] [dataset key utf-8]
+//! [u64 LE n] [u64 LE label count] [labels u32 LE ...]
+//! [values f32 LE ...]            (n(n-1)/2 entries, scipy pdist order)
+//! ```
+//!
+//! The full dataset key is stored (not just its hash, which names the
+//! file) so a hash collision degrades to a clean miss.  Reloads are
+//! **re-validated**: the values stream back through the same
+//! [`TriangleSink`] every loader uses, so a corrupt or truncated segment
+//! is rejected exactly like a corrupt source file — and the grouping is
+//! rebuilt through [`Grouping::new`]'s own validation.  The reloaded
+//! buffer is a fresh allocation (`Arc`-fresh) holding bit-identical
+//! values — the equality the persistence suite pins.
+//!
+//! Spilling is best-effort by design: callers treat any error as "the
+//! segment does not exist" and fall back to a full load.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::dmat::{CondensedMatrix, TriangleSink};
+use crate::error::{Error, Result};
+use crate::permanova::Grouping;
+
+use super::fnv64_bytes;
+
+/// Segment file magic.
+pub const SPILL_MAGIC: &[u8; 4] = b"SPL1";
+
+/// Implausibility bound shared with the `PDM1` reader.
+const MAX_N: u64 = 1 << 20;
+
+/// A directory of spill segments, one per dataset key.
+#[derive(Debug)]
+pub struct SpillDir {
+    dir: PathBuf,
+    spilled: AtomicU64,
+    reloaded: AtomicU64,
+}
+
+/// Spill activity counters plus the current on-disk segment footprint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpillStats {
+    /// Evictions written out this process lifetime.
+    pub spilled: u64,
+    /// Segment reloads served this process lifetime.
+    pub reloaded: u64,
+    /// Segments currently on disk.
+    pub segments: usize,
+    /// Their total size in bytes.
+    pub disk_bytes: u64,
+}
+
+impl SpillDir {
+    /// Open (creating if absent) the segment directory.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<SpillDir> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| Error::io(dir.display().to_string(), e))?;
+        Ok(SpillDir { dir, spilled: AtomicU64::new(0), reloaded: AtomicU64::new(0) })
+    }
+
+    /// Write (or overwrite — the content is a pure function of the key)
+    /// the segment for `key`, atomically via `.tmp` + rename.
+    pub fn spill(&self, key: &str, tri: &CondensedMatrix, grouping: &Grouping) -> Result<()> {
+        let path = self.segment_path(key);
+        let tmp = super::ss_table::tmp_path(&path);
+        let ctx = || tmp.display().to_string();
+        let file = File::create(&tmp).map_err(|e| Error::io(ctx(), e))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(SPILL_MAGIC).map_err(|e| Error::io(ctx(), e))?;
+        w.write_all(&(key.len() as u32).to_le_bytes())
+            .map_err(|e| Error::io(ctx(), e))?;
+        w.write_all(key.as_bytes()).map_err(|e| Error::io(ctx(), e))?;
+        w.write_all(&(tri.n() as u64).to_le_bytes())
+            .map_err(|e| Error::io(ctx(), e))?;
+        let labels = grouping.labels();
+        w.write_all(&(labels.len() as u64).to_le_bytes())
+            .map_err(|e| Error::io(ctx(), e))?;
+        for label in labels {
+            w.write_all(&label.to_le_bytes()).map_err(|e| Error::io(ctx(), e))?;
+        }
+        for v in tri.values() {
+            w.write_all(&v.to_le_bytes()).map_err(|e| Error::io(ctx(), e))?;
+        }
+        let file = w.into_inner().map_err(|e| Error::io(ctx(), e.into_error()))?;
+        file.sync_all().map_err(|e| Error::io(ctx(), e))?;
+        drop(file);
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        self.spilled.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Reload the segment for `key`, if present: values re-validated
+    /// through [`TriangleSink`], grouping through [`Grouping::new`].
+    /// `Ok(None)` covers both "never spilled" and a key-hash collision.
+    pub fn load(&self, key: &str) -> Result<Option<(CondensedMatrix, Grouping)>> {
+        let path = self.segment_path(key);
+        let file = match File::open(&path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(Error::io(path.display().to_string(), e)),
+        };
+        let ctx = || path.display().to_string();
+        let bad = |msg: &str| Error::parse("spill", path.display().to_string(), msg.to_string());
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).map_err(|e| Error::io(ctx(), e))?;
+        if &magic != SPILL_MAGIC {
+            return Err(bad("bad magic"));
+        }
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4).map_err(|e| Error::io(ctx(), e))?;
+        let klen = u32::from_le_bytes(len4) as usize;
+        if klen > 1 << 16 {
+            return Err(bad("implausible key length"));
+        }
+        let mut kbytes = vec![0u8; klen];
+        r.read_exact(&mut kbytes).map_err(|e| Error::io(ctx(), e))?;
+        let stored_key = String::from_utf8(kbytes).map_err(|_| bad("key is not utf-8"))?;
+        if stored_key != key {
+            // FNV collision between dataset keys: treat as absent rather
+            // than serve another dataset's triangle.
+            return Ok(None);
+        }
+        let mut len8 = [0u8; 8];
+        r.read_exact(&mut len8).map_err(|e| Error::io(ctx(), e))?;
+        let n = u64::from_le_bytes(len8);
+        if n == 0 || n > MAX_N {
+            return Err(bad("implausible n"));
+        }
+        let n = n as usize;
+        r.read_exact(&mut len8).map_err(|e| Error::io(ctx(), e))?;
+        let n_labels = u64::from_le_bytes(len8) as usize;
+        if n_labels != n {
+            return Err(bad("label count != n"));
+        }
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            r.read_exact(&mut len4).map_err(|e| Error::io(ctx(), e))?;
+            labels.push(u32::from_le_bytes(len4));
+        }
+        // Stream the packed values back through the loaders' validator.
+        // Upper-only feed: the diagonal / mirror tolerance never applies,
+        // so the sink only enforces finite + non-negative — the checks a
+        // packed buffer can still violate via corruption.
+        let mut sink = TriangleSink::new(n, 0.0);
+        let mut pos = 0usize;
+        let mut buf = [0u8; 4];
+        for row in 0..n {
+            for col in row + 1..n {
+                r.read_exact(&mut buf).map_err(|e| {
+                    Error::io(format!("{} value {pos}", path.display()), e)
+                })?;
+                sink.entry(row, col, f32::from_le_bytes(buf))?;
+                pos += 1;
+            }
+        }
+        let tri = sink.finish()?;
+        let grouping = Grouping::new(labels)?;
+        self.reloaded.fetch_add(1, Ordering::Relaxed);
+        Ok(Some((tri, grouping)))
+    }
+
+    /// Counters + a directory scan for the resident-segment footprint.
+    pub fn stats(&self) -> SpillStats {
+        let mut segments = 0usize;
+        let mut disk_bytes = 0u64;
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let is_seg = entry
+                    .path()
+                    .extension()
+                    .map(|e| e == "seg")
+                    .unwrap_or(false);
+                if is_seg {
+                    segments += 1;
+                    disk_bytes += entry.metadata().map(|m| m.len()).unwrap_or(0);
+                }
+            }
+        }
+        SpillStats {
+            spilled: self.spilled.load(Ordering::Relaxed),
+            reloaded: self.reloaded.load(Ordering::Relaxed),
+            segments,
+            disk_bytes,
+        }
+    }
+
+    /// The directory segments live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn segment_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("spill-{:016x}.seg", fnv64_bytes(key.as_bytes())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmat::ingest::random_euclidean_condensed;
+
+    fn tmp(case: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("permanova_apu_store_spill_test_{case}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample(n: usize) -> (CondensedMatrix, Grouping) {
+        let tri = random_euclidean_condensed(n, 6, 42);
+        let labels: Vec<u32> = (0..n as u32).map(|i| i % 3).collect();
+        (tri, Grouping::new(labels).unwrap())
+    }
+
+    #[test]
+    fn spill_then_load_is_value_bitwise_equal() {
+        let d = SpillDir::open(tmp("roundtrip")).unwrap();
+        let (tri, grouping) = sample(17);
+        d.spill("ds-key", &tri, &grouping).unwrap();
+        let (back_tri, back_grouping) = d.load("ds-key").unwrap().expect("segment exists");
+        let a: Vec<u32> = tri.values().iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = back_tri.values().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "reload is value-bitwise-equal");
+        assert_eq!(back_tri.n(), 17);
+        assert_eq!(back_grouping.labels(), grouping.labels());
+        let s = d.stats();
+        assert_eq!((s.spilled, s.reloaded, s.segments), (1, 1, 1));
+        assert!(s.disk_bytes > 0);
+    }
+
+    #[test]
+    fn absent_key_is_a_clean_miss() {
+        let d = SpillDir::open(tmp("absent")).unwrap();
+        assert!(d.load("never-spilled").unwrap().is_none());
+        assert_eq!(d.stats().reloaded, 0);
+    }
+
+    #[test]
+    fn stored_key_mismatch_degrades_to_miss() {
+        let d = SpillDir::open(tmp("collision")).unwrap();
+        let (tri, grouping) = sample(9);
+        d.spill("key-a", &tri, &grouping).unwrap();
+        // Simulate an FNV collision: point key-b's file name at key-a's
+        // segment content.
+        std::fs::copy(d.segment_path("key-a"), d.segment_path("key-b")).unwrap();
+        assert!(d.load("key-b").unwrap().is_none(), "stored key wins over file name");
+    }
+
+    #[test]
+    fn corrupt_segments_are_errors_not_data() {
+        let d = SpillDir::open(tmp("corrupt")).unwrap();
+        let (tri, grouping) = sample(9);
+        d.spill("k", &tri, &grouping).unwrap();
+        let path = d.segment_path("k");
+        // Truncate mid-values: the sink's "ended early" check fires.
+        let raw = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &raw[..raw.len() - 6]).unwrap();
+        assert!(d.load("k").is_err());
+        // Inject a NaN value: the sink's finite check fires.
+        let mut raw2 = raw.clone();
+        let at = raw2.len() - 4;
+        raw2[at..].copy_from_slice(&f32::NAN.to_le_bytes());
+        std::fs::write(&path, &raw2).unwrap();
+        let e = d.load("k").unwrap_err().to_string();
+        assert!(e.contains("non-finite"), "{e}");
+        // Foreign bytes: rejected at the magic.
+        std::fs::write(&path, b"XXXXjunk").unwrap();
+        assert!(d.load("k").is_err());
+    }
+
+    #[test]
+    fn respill_overwrites_idempotently() {
+        let d = SpillDir::open(tmp("respill")).unwrap();
+        let (tri, grouping) = sample(9);
+        d.spill("k", &tri, &grouping).unwrap();
+        d.spill("k", &tri, &grouping).unwrap();
+        let s = d.stats();
+        assert_eq!((s.spilled, s.segments), (2, 1), "one file, counted per spill");
+        assert!(d.load("k").unwrap().is_some());
+    }
+}

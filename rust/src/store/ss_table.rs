@@ -1,0 +1,322 @@
+//! Immutable sorted string tables — the durable level of the LSM tree.
+//!
+//! A table is written once (from a flushed memtable or a compaction
+//! merge) and never mutated.  Layout:
+//!
+//! ```text
+//! header : [b"SST1"] [u64 LE entry count] [u64 LE index offset]
+//! data   : count × ( [u32 LE key_len] [key] [u32 LE value_len] [value] )
+//! index  : count × ( [u32 LE key_len] [key] [u64 LE record offset] )
+//! footer : [u64 LE fnv64(index bytes)]
+//! ```
+//!
+//! The data block is keyed in ascending order (a `BTreeMap` flush is
+//! already sorted); the index — the binary-searchable key block — is
+//! loaded into memory at [`open`](SsTable::open) and checksummed, so a
+//! [`get`](SsTable::get) is one in-memory binary search plus one seek +
+//! read of exactly the requested record.  Writes go to a `.tmp` sibling
+//! which is fsynced and atomically renamed into place: a crash mid-flush
+//! leaves a stray `.tmp` (swept at [`Lsm::open`](super::Lsm::open)),
+//! never a half-visible table.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+
+use super::fnv64_bytes;
+
+/// Table file magic.
+pub const SST_MAGIC: &[u8; 4] = b"SST1";
+
+/// magic + count + index offset.
+const HEADER_BYTES: u64 = 20;
+
+/// Sanity bound mirrored from the WAL: no single key/value above 1 GiB.
+const MAX_FIELD_BYTES: u32 = 1 << 30;
+
+/// One immutable on-disk sorted table with its resident key index.
+#[derive(Debug)]
+pub struct SsTable {
+    path: PathBuf,
+    file: Mutex<File>,
+    /// `(key, absolute record offset)`, ascending by key.
+    index: Vec<(String, u64)>,
+    file_bytes: u64,
+}
+
+impl SsTable {
+    /// Write `entries` (already key-sorted — `BTreeMap` iteration order)
+    /// as a new table at `path`, atomically: build `.tmp`, fsync, rename.
+    pub fn write(path: &Path, entries: &BTreeMap<String, Vec<u8>>) -> Result<()> {
+        let tmp = tmp_path(path);
+        let ctx = || tmp.display().to_string();
+        let file = File::create(&tmp).map_err(|e| Error::io(ctx(), e))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(SST_MAGIC).map_err(|e| Error::io(ctx(), e))?;
+        w.write_all(&(entries.len() as u64).to_le_bytes())
+            .map_err(|e| Error::io(ctx(), e))?;
+        // Index offset is patched in once the data block's size is known.
+        w.write_all(&0u64.to_le_bytes()).map_err(|e| Error::io(ctx(), e))?;
+        let mut offset = HEADER_BYTES;
+        let mut index = Vec::with_capacity(entries.len() * 24);
+        for (key, value) in entries {
+            index.extend_from_slice(&(key.len() as u32).to_le_bytes());
+            index.extend_from_slice(key.as_bytes());
+            index.extend_from_slice(&offset.to_le_bytes());
+            w.write_all(&(key.len() as u32).to_le_bytes())
+                .map_err(|e| Error::io(ctx(), e))?;
+            w.write_all(key.as_bytes()).map_err(|e| Error::io(ctx(), e))?;
+            w.write_all(&(value.len() as u32).to_le_bytes())
+                .map_err(|e| Error::io(ctx(), e))?;
+            w.write_all(value).map_err(|e| Error::io(ctx(), e))?;
+            offset += 8 + key.len() as u64 + value.len() as u64;
+        }
+        let index_offset = offset;
+        w.write_all(&index).map_err(|e| Error::io(ctx(), e))?;
+        w.write_all(&fnv64_bytes(&index).to_le_bytes())
+            .map_err(|e| Error::io(ctx(), e))?;
+        let mut file = w.into_inner().map_err(|e| Error::io(ctx(), e.into_error()))?;
+        file.seek(SeekFrom::Start(12)).map_err(|e| Error::io(ctx(), e))?;
+        file.write_all(&index_offset.to_le_bytes())
+            .map_err(|e| Error::io(ctx(), e))?;
+        file.sync_all().map_err(|e| Error::io(ctx(), e))?;
+        drop(file);
+        std::fs::rename(&tmp, path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        sync_parent_dir(path);
+        Ok(())
+    }
+
+    /// Open a table: validate the header, load + checksum the key index.
+    pub fn open(path: &Path) -> Result<SsTable> {
+        let ctx = || path.display().to_string();
+        let mut file = File::open(path).map_err(|e| Error::io(ctx(), e))?;
+        let file_bytes = file.metadata().map_err(|e| Error::io(ctx(), e))?.len();
+        let bad = |msg: &str| Error::parse("sst", path.display().to_string(), msg.to_string());
+        if file_bytes < HEADER_BYTES + 8 {
+            return Err(bad("file shorter than header + footer"));
+        }
+        let mut header = [0u8; HEADER_BYTES as usize];
+        file.read_exact(&mut header).map_err(|e| Error::io(ctx(), e))?;
+        if &header[..4] != SST_MAGIC {
+            return Err(bad("bad magic"));
+        }
+        let count = u64::from_le_bytes(header[4..12].try_into().expect("8 bytes"));
+        let index_offset = u64::from_le_bytes(header[12..20].try_into().expect("8 bytes"));
+        if index_offset < HEADER_BYTES || index_offset > file_bytes - 8 {
+            return Err(bad("index offset out of bounds"));
+        }
+        let index_bytes_len = (file_bytes - 8 - index_offset) as usize;
+        file.seek(SeekFrom::Start(index_offset)).map_err(|e| Error::io(ctx(), e))?;
+        let mut index_bytes = vec![0u8; index_bytes_len];
+        file.read_exact(&mut index_bytes).map_err(|e| Error::io(ctx(), e))?;
+        let mut footer = [0u8; 8];
+        file.read_exact(&mut footer).map_err(|e| Error::io(ctx(), e))?;
+        if fnv64_bytes(&index_bytes) != u64::from_le_bytes(footer) {
+            return Err(bad("index checksum mismatch"));
+        }
+        let index = parse_index(&index_bytes, count, index_offset)
+            .ok_or_else(|| bad("malformed index block"))?;
+        Ok(SsTable { path: path.to_path_buf(), file: Mutex::new(file), index, file_bytes })
+    }
+
+    /// The value for `key`, read straight from disk via the resident
+    /// index: one binary search, one seek, one record read.
+    pub fn get(&self, key: &str) -> Result<Option<Vec<u8>>> {
+        let Ok(slot) = self.index.binary_search_by(|(k, _)| k.as_str().cmp(key)) else {
+            return Ok(None);
+        };
+        let offset = self.index[slot].1;
+        let mut file = self.file.lock().unwrap();
+        let (stored_key, value) = read_record(&mut file, offset, &self.path)?;
+        if stored_key != key {
+            // Index and data disagree — bitrot the index checksum missed.
+            return Err(Error::parse(
+                "sst",
+                self.path.display().to_string(),
+                format!("index points {key:?} at a record for {stored_key:?}"),
+            ));
+        }
+        Ok(Some(value))
+    }
+
+    /// Every record in key order — the compaction read path.
+    pub fn entries(&self) -> Result<Vec<(String, Vec<u8>)>> {
+        let mut file = self.file.lock().unwrap();
+        let mut out = Vec::with_capacity(self.index.len());
+        for (_, offset) in &self.index {
+            out.push(read_record(&mut file, *offset, &self.path)?);
+        }
+        Ok(out)
+    }
+
+    /// Number of records.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Whether the table holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// On-disk size of the whole table file.
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
+
+    /// The table file's path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// `<path>.tmp` — the invisible sibling a table is built at.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".tmp");
+    PathBuf::from(s)
+}
+
+/// Fsync the directory holding `path` so a rename survives power loss;
+/// best-effort (not every platform lets you open a directory).
+fn sync_parent_dir(path: &Path) {
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
+fn read_record(file: &mut File, offset: u64, path: &Path) -> Result<(String, Vec<u8>)> {
+    let ctx = || path.display().to_string();
+    let bad = |msg: &str| Error::parse("sst", path.display().to_string(), msg.to_string());
+    file.seek(SeekFrom::Start(offset)).map_err(|e| Error::io(ctx(), e))?;
+    let mut len4 = [0u8; 4];
+    file.read_exact(&mut len4).map_err(|e| Error::io(ctx(), e))?;
+    let klen = u32::from_le_bytes(len4);
+    if klen > MAX_FIELD_BYTES {
+        return Err(bad("implausible key length"));
+    }
+    let mut key = vec![0u8; klen as usize];
+    file.read_exact(&mut key).map_err(|e| Error::io(ctx(), e))?;
+    file.read_exact(&mut len4).map_err(|e| Error::io(ctx(), e))?;
+    let vlen = u32::from_le_bytes(len4);
+    if vlen > MAX_FIELD_BYTES {
+        return Err(bad("implausible value length"));
+    }
+    let mut value = vec![0u8; vlen as usize];
+    file.read_exact(&mut value).map_err(|e| Error::io(ctx(), e))?;
+    let key = String::from_utf8(key).map_err(|_| bad("record key is not utf-8"))?;
+    Ok((key, value))
+}
+
+/// Parse the index block: exactly `count` entries, keys strictly
+/// ascending, offsets inside the data block.
+fn parse_index(bytes: &[u8], count: u64, index_offset: u64) -> Option<Vec<(String, u64)>> {
+    let mut index = Vec::with_capacity(count as usize);
+    let mut pos = 0usize;
+    for _ in 0..count {
+        let klen =
+            u32::from_le_bytes(bytes.get(pos..pos + 4)?.try_into().ok()?) as usize;
+        let key = std::str::from_utf8(bytes.get(pos + 4..pos + 4 + klen)?).ok()?;
+        let off_at = pos + 4 + klen;
+        let offset = u64::from_le_bytes(bytes.get(off_at..off_at + 8)?.try_into().ok()?);
+        if offset < HEADER_BYTES || offset >= index_offset {
+            return None;
+        }
+        if let Some((last, _)) = index.last() {
+            if key <= String::as_str(last) {
+                return None; // unsorted or duplicate: not one of our tables
+            }
+        }
+        index.push((key.to_string(), offset));
+        pos = off_at + 8;
+    }
+    (pos == bytes.len()).then_some(index)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(case: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("permanova_apu_store_sst_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("{case}.sst"));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn sample() -> BTreeMap<String, Vec<u8>> {
+        let mut m = BTreeMap::new();
+        m.insert("alpha".to_string(), b"one".to_vec());
+        m.insert("beta".to_string(), Vec::new());
+        m.insert("gamma".to_string(), vec![0xAB; 1024]);
+        m
+    }
+
+    #[test]
+    fn write_open_get_roundtrip() {
+        let p = tmp("roundtrip");
+        SsTable::write(&p, &sample()).unwrap();
+        let t = SsTable::open(&p).unwrap();
+        assert_eq!(t.len(), 3);
+        assert!(!t.is_empty());
+        assert_eq!(t.get("alpha").unwrap(), Some(b"one".to_vec()));
+        assert_eq!(t.get("beta").unwrap(), Some(Vec::new()));
+        assert_eq!(t.get("gamma").unwrap(), Some(vec![0xAB; 1024]));
+        assert_eq!(t.get("delta").unwrap(), None, "absent key is a clean miss");
+        assert_eq!(t.file_bytes(), std::fs::metadata(&p).unwrap().len());
+        assert!(!tmp_path(&p).exists(), "the .tmp sibling was renamed away");
+    }
+
+    #[test]
+    fn entries_iterate_in_key_order() {
+        let p = tmp("entries");
+        SsTable::write(&p, &sample()).unwrap();
+        let t = SsTable::open(&p).unwrap();
+        let got = t.entries().unwrap();
+        let keys: Vec<&str> = got.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, ["alpha", "beta", "gamma"]);
+        assert_eq!(got[2].1, vec![0xAB; 1024]);
+    }
+
+    #[test]
+    fn corrupt_index_is_rejected_at_open() {
+        let p = tmp("corrupt");
+        SsTable::write(&p, &sample()).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        // Flip a byte in the index block (just before the 8-byte footer).
+        let at = raw.len() - 12;
+        raw[at] ^= 0xFF;
+        std::fs::write(&p, &raw).unwrap();
+        let e = SsTable::open(&p).unwrap_err().to_string();
+        assert!(e.contains("checksum") || e.contains("malformed"), "{e}");
+    }
+
+    #[test]
+    fn truncated_and_foreign_files_are_rejected() {
+        let p = tmp("short");
+        std::fs::write(&p, b"SST1short").unwrap();
+        assert!(SsTable::open(&p).is_err());
+        let p = tmp("foreign");
+        std::fs::write(&p, vec![0u8; 256]).unwrap();
+        let e = SsTable::open(&p).unwrap_err().to_string();
+        assert!(e.contains("magic"), "{e}");
+    }
+
+    #[test]
+    fn empty_table_roundtrips() {
+        let p = tmp("empty");
+        SsTable::write(&p, &BTreeMap::new()).unwrap();
+        let t = SsTable::open(&p).unwrap();
+        assert!(t.is_empty());
+        assert_eq!(t.get("anything").unwrap(), None);
+        assert!(t.entries().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,252 @@
+//! Durable-store persistence conformance: warm-across-restart results are
+//! the cold run's bytes verbatim, a crash-torn WAL tail is tolerated,
+//! compaction never loses a lookup, the store-disabled path is untouched,
+//! and evicted triangles round-trip through the spill directory.
+//!
+//! Everything here goes through the public surface (`ResultStore`,
+//! `DatasetCache::with_store`, `service::run_jobs`) except the compaction
+//! test, which drives the exported `Lsm` directly to force table churn
+//! with a tiny flush threshold.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::jsonio::Json;
+use permanova_apu::permanova::Method;
+use permanova_apu::service::{run_jobs, validate_responses, DatasetCache, JobRequest};
+use permanova_apu::store::{
+    fnv64_bytes, Lsm, LsmConfig, ResultStore, StoreConfig, MAX_TABLES,
+};
+
+/// Fresh scratch directory under the system temp root.  Removed up front
+/// so a previous run's state can never satisfy this run's assertions.
+fn scratch(case: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("permanova_apu_store_persist_{case}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn synth_cfg(method: Method, backend: &str, seed: u64) -> RunConfig {
+    RunConfig {
+        data: DataSource::Synthetic { n_dims: 24, n_groups: 2 },
+        data_seed: Some(7),
+        n_perms: 19,
+        seed,
+        method,
+        backend: backend.into(),
+        ..Default::default()
+    }
+}
+
+/// One job per method × backend — the same grid `daemon_loopback` pins.
+fn job_grid() -> Vec<JobRequest> {
+    vec![
+        JobRequest::new("permanova", synth_cfg(Method::Permanova, "native-flat", 11)),
+        JobRequest::new("anosim", synth_cfg(Method::Anosim, "native-brute", 12)),
+        JobRequest::new("permdisp", synth_cfg(Method::Permdisp, "native-brute", 13)),
+        JobRequest::new("pairwise", synth_cfg(Method::PairwisePermanova, "native-batch", 14)),
+    ]
+}
+
+fn field<'a>(resp: &'a Json, key: &str) -> Option<&'a Json> {
+    resp.get(key)
+}
+
+fn str_field(resp: &Json, key: &str) -> Option<String> {
+    field(resp, key).and_then(Json::as_str).map(str::to_string)
+}
+
+#[test]
+fn warm_across_restart_returns_cold_bytes_verbatim() {
+    let dir = scratch("restart");
+    let jobs = job_grid();
+
+    // Cold process: every job misses the store, executes, and writes its
+    // serialized report back.
+    let store = Arc::new(ResultStore::open(StoreConfig::new(&dir)).unwrap());
+    let cache = DatasetCache::with_store(4, store.clone());
+    let cold = run_jobs(&jobs, &cache, 0);
+    assert_eq!(cold.summary.failed, 0, "cold batch must be clean");
+    let mut cold_reports = Vec::new();
+    for resp in &cold.responses {
+        assert_eq!(field(resp, "ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(str_field(resp, "store").as_deref(), Some("miss"), "cold run misses");
+        cold_reports.push(field(resp, "report").expect("cold report").to_string());
+    }
+    let puts = store.stats().puts;
+    assert_eq!(puts, jobs.len() as u64, "one durable put per job");
+    store.drain().unwrap();
+    drop(cache);
+    drop(store);
+
+    // "Restart": a brand-new handle over the same directory, empty
+    // in-memory cache.  Every response must be served from the store and
+    // carry the cold run's report bytes verbatim — including the original
+    // run's timings and backend provenance, because a store hit never
+    // re-executes.
+    let store = Arc::new(ResultStore::open(StoreConfig::new(&dir)).unwrap());
+    let cache = DatasetCache::with_store(4, store.clone());
+    let warm = run_jobs(&jobs, &cache, 0);
+    assert_eq!(warm.summary.failed, 0);
+    for (resp, cold_report) in warm.responses.iter().zip(&cold_reports) {
+        assert_eq!(str_field(resp, "cache").as_deref(), Some("store"));
+        assert_eq!(str_field(resp, "store").as_deref(), Some("hit"));
+        let warm_report = field(resp, "report").expect("warm report").to_string();
+        assert_eq!(&warm_report, cold_report, "store hit must be bitwise the cold bytes");
+    }
+    let stats = store.stats();
+    assert_eq!(stats.hits, jobs.len() as u64, "every warm job hit the store");
+    assert_eq!(stats.puts, 0, "a hit writes nothing");
+    validate_responses(&warm.to_jsonl()).unwrap();
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wal_replay_recovers_fsynced_entries_and_ignores_a_torn_tail() {
+    let dir = scratch("torn_wal");
+
+    // Two fsynced puts, then a simulated crash: no drain, so both live
+    // only in the WAL.
+    let store = ResultStore::open(StoreConfig::new(&dir)).unwrap();
+    store.put("alpha", b"first value").unwrap();
+    store.put("beta", b"second value").unwrap();
+    drop(store);
+
+    // Hand-append a torn record — a crash mid-append leaves a prefix of
+    // `[u32 len][u64 fnv64(payload)][payload]` on disk.
+    let wal_path = dir.join("wal.log");
+    let key = b"gamma";
+    let val = b"never landed";
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    payload.extend_from_slice(key);
+    payload.extend_from_slice(&(val.len() as u32).to_le_bytes());
+    payload.extend_from_slice(val);
+    let mut record = Vec::new();
+    record.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    record.extend_from_slice(&fnv64_bytes(&payload).to_le_bytes());
+    record.extend_from_slice(&payload);
+    let mut raw = std::fs::read(&wal_path).unwrap();
+    raw.extend_from_slice(&record[..record.len() - 5]);
+    std::fs::write(&wal_path, &raw).unwrap();
+
+    // Replay: the fsynced entries survive, the torn one is dropped.
+    let store = ResultStore::open(StoreConfig::new(&dir)).unwrap();
+    assert_eq!(store.get("alpha").as_deref(), Some(b"first value".as_slice()));
+    assert_eq!(store.get("beta").as_deref(), Some(b"second value".as_slice()));
+    assert_eq!(store.get("gamma"), None, "torn record must not replay");
+
+    // Open truncated the torn tail back to the last intact boundary, so
+    // the log is immediately appendable again and the new entry persists.
+    store.put("gamma", b"landed this time").unwrap();
+    drop(store);
+    let store = ResultStore::open(StoreConfig::new(&dir)).unwrap();
+    assert_eq!(store.get("alpha").as_deref(), Some(b"first value".as_slice()));
+    assert_eq!(store.get("gamma").as_deref(), Some(b"landed this time".as_slice()));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compaction_preserves_every_lookup_and_the_latest_version_wins() {
+    let dir = scratch("compaction");
+
+    // A tiny flush threshold turns nearly every put into a table flush,
+    // so the tree must compact (tables are capped at MAX_TABLES).
+    let mut lsm = Lsm::open(LsmConfig {
+        dir: dir.clone(),
+        capacity_bytes: 0,
+        flush_bytes: 64,
+    })
+    .unwrap();
+    for i in 0..40u32 {
+        lsm.put(&format!("key-{i:03}"), format!("value-{i}").as_bytes()).unwrap();
+    }
+    // Overwrite a few keys so shadowed versions exist across tables.
+    for i in (0..40u32).step_by(7) {
+        lsm.put(&format!("key-{i:03}"), format!("rewrite-{i}").as_bytes()).unwrap();
+    }
+    let stats = lsm.stats();
+    assert!(stats.compactions >= 1, "forced churn must have compacted: {stats:?}");
+    assert!(stats.segments <= MAX_TABLES, "table count stays bounded: {stats:?}");
+
+    let check = |lsm: &mut Lsm| {
+        for i in 0..40u32 {
+            let want = if i % 7 == 0 { format!("rewrite-{i}") } else { format!("value-{i}") };
+            let got = lsm.get(&format!("key-{i:03}")).unwrap();
+            assert_eq!(got.as_deref(), Some(want.as_bytes()), "key-{i:03}");
+        }
+    };
+    check(&mut lsm);
+
+    // Survives a clean shutdown + reopen too.
+    lsm.drain().unwrap();
+    drop(lsm);
+    let mut lsm = Lsm::open(LsmConfig {
+        dir: dir.clone(),
+        capacity_bytes: 0,
+        flush_bytes: 64,
+    })
+    .unwrap();
+    check(&mut lsm);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_disabled_path_is_unchanged() {
+    // A plain cache (no store tier) must produce responses with no
+    // `store` field at all — byte-compatible with the pre-store schema —
+    // and they must still validate.
+    let jobs = job_grid();
+    let cache = DatasetCache::new(4);
+    let out = run_jobs(&jobs, &cache, 0);
+    assert_eq!(out.summary.failed, 0);
+    for resp in &out.responses {
+        assert_eq!(field(resp, "ok").and_then(Json::as_bool), Some(true));
+        assert!(field(resp, "store").is_none(), "no store tier, no store field: {resp}");
+        let cache_tag = str_field(resp, "cache").unwrap();
+        assert!(
+            cache_tag == "hit" || cache_tag == "miss",
+            "store-less cache tag is hit/miss only, got {cache_tag}"
+        );
+    }
+    validate_responses(&out.to_jsonl()).unwrap();
+}
+
+#[test]
+fn evicted_triangle_spills_and_reloads_fresh_but_bitwise_equal() {
+    let dir = scratch("spill_reload");
+    let store = Arc::new(ResultStore::open(StoreConfig::new(&dir)).unwrap());
+    let cache = DatasetCache::with_store(1, store.clone());
+
+    let cfg_a = synth_cfg(Method::Permanova, "native-flat", 11);
+    let cfg_b = RunConfig { data_seed: Some(8), ..cfg_a.clone() };
+
+    let (a_first, hit) = cache.get_or_load(&cfg_a).unwrap();
+    assert!(!hit, "first load misses");
+    let original_values: Vec<f32> = a_first.tri().values().to_vec();
+    let original_labels: Vec<u32> = a_first.grouping.labels().to_vec();
+
+    // Loading a second dataset through a capacity-1 cache evicts the
+    // first, which must park as a spill segment.
+    let (_b, _) = cache.get_or_load(&cfg_b).unwrap();
+    assert!(store.stats().spill.spilled >= 1, "eviction spilled the triangle");
+
+    // Reloading A is a memory miss served from the segment: a fresh
+    // allocation (the evicted Arc is gone) holding bitwise-identical
+    // values and the same grouping.
+    let (a_again, hit) = cache.get_or_load(&cfg_a).unwrap();
+    assert!(!hit, "evicted dataset is a memory miss");
+    assert!(
+        !Arc::ptr_eq(a_first.tri(), a_again.tri()),
+        "reload must be a fresh allocation, not the evicted Arc"
+    );
+    assert_eq!(a_again.tri().values(), original_values.as_slice(), "values bitwise equal");
+    assert_eq!(a_again.grouping.labels(), original_labels.as_slice(), "grouping preserved");
+    assert!(store.stats().spill.reloaded >= 1, "served from the spill segment");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
