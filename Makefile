@@ -10,7 +10,7 @@ PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
 .PHONY: all build test bench bench-quick ingest-check serve-demo daemon-demo store-demo \
-        lint fmt clippy doc artifacts pytest clean
+        oocore-demo lint fmt clippy doc artifacts pytest clean
 
 all: build
 
@@ -114,6 +114,31 @@ store-demo: build
 	  || { echo 'expected store hits after restart'; exit 1; }
 	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --shutdown
 	@sleep 0.5; cat demo_store_gen2.log
+
+# The out-of-core edition: the same PERMANOVA twice — resident, then under
+# a residency budget an eighth of the packed triangle (n = 256 packs to
+# ~128 KB; the 16 KB cap forces ~8 paging cycles per sweep).  The capped
+# run must print its paging counters AND reproduce the resident statistics
+# exactly: the JSON f_obs/p_value fields are compared as text, which is a
+# bitwise comparison because the serializer is deterministic.
+oocore-demo: build
+	./target/release/permanova-apu run --n-dims 256 --n-groups 8 --n-perms 499 \
+	  --seed 42 --json demo_resident.json | tee demo_resident.out
+	./target/release/permanova-apu run --n-dims 256 --n-groups 8 --n-perms 499 \
+	  --seed 42 --max-resident-bytes 16384 --json demo_capped.json | tee demo_capped.out
+	@grep -q 'paging' demo_capped.out \
+	  && echo 'ok: capped run swept the triangle chunk-major' \
+	  || { echo 'capped run reported no paging'; exit 1; }
+	@grep -q 'paging' demo_resident.out \
+	  && { echo 'resident run unexpectedly paged'; exit 1; } \
+	  || echo 'ok: resident run stayed in memory'
+	@for key in f_obs p_value; do \
+	  a=$$(grep -o "\"$$key\": [-0-9.e+]*" demo_resident.json); \
+	  b=$$(grep -o "\"$$key\": [-0-9.e+]*" demo_capped.json); \
+	  [ -n "$$a" ] && [ "$$a" = "$$b" ] \
+	    && echo "ok: capped $$a matches resident bitwise" \
+	    || { echo "capped/resident $$key diverged: '$$b' vs '$$a'"; exit 1; }; \
+	done
 
 lint: fmt clippy
 

@@ -27,9 +27,11 @@ use std::time::Instant;
 
 use super::{Backend, BatchPlan, BatchResult, Caps};
 use crate::config::RunConfig;
+use crate::dmat::TriangleStorage;
 use crate::error::Result;
 use crate::permanova::{
-    eval_plan_range_blocked, fstat_from_sw, resolve_perm_block, sw_plan_range_blocked, StatKernel,
+    eval_plan_range_blocked, fstat_from_sw, resolve_perm_block, sw_plan_range_blocked,
+    sw_plan_range_blocked_chunked, StatKernel,
 };
 
 /// Algorithm 1 evaluated `perm_block` permutations per matrix sweep.
@@ -57,18 +59,31 @@ impl Backend for BatchedBruteBackend {
         let stats = match plan.stat {
             // PERMANOVA: the f32 SoA brute-block engine over the packed
             // triangle — one half-footprint sweep per `perm_block` lanes.
-            StatKernel::Permanova(pk) => sw_plan_range_blocked(
-                &pk.packed,
-                plan.perms,
-                plan.start,
-                plan.rows,
-                plan.grouping.inv_sizes(),
-                self.perm_block,
-                &plan.shard,
-            )
-            .iter()
-            .map(|&sw| fstat_from_sw(sw as f64, pk.s_t, n, k))
-            .collect(),
+            // File-backed storage runs the same engine chunk-major: one
+            // *disk* read per chunk per batch, same bits per lane.
+            StatKernel::Permanova(pk) => {
+                let s_w = match &pk.storage {
+                    TriangleStorage::Resident(packed) => sw_plan_range_blocked(
+                        packed,
+                        plan.perms,
+                        plan.start,
+                        plan.rows,
+                        plan.grouping.inv_sizes(),
+                        self.perm_block,
+                        &plan.shard,
+                    ),
+                    TriangleStorage::FileBacked(file) => sw_plan_range_blocked_chunked(
+                        file,
+                        plan.perms,
+                        plan.start,
+                        plan.rows,
+                        plan.grouping.inv_sizes(),
+                        self.perm_block,
+                        &plan.shard,
+                    )?,
+                };
+                s_w.iter().map(|&sw| fstat_from_sw(sw as f64, pk.s_t, n, k)).collect()
+            }
             // ANOSIM / PERMDISP: the generic blocked walk (SoA rank sweep
             // for ANOSIM, per-lane scalar for PERMDISP).
             stat => eval_plan_range_blocked(

@@ -43,12 +43,12 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::RunConfig;
-use crate::dmat::{CondensedMatrix, DistanceMatrix};
+use crate::dmat::{CondensedMatrix, DistanceMatrix, TriangleStorage};
 use crate::error::{Error, Result};
 use crate::permanova::{
     pairwise_seed, pairwise_subproblem_condensed, pvalue, Grouping, Method, StatKernel,
 };
-use crate::report::{AnalysisReport, DeviceStats, PairSummary, RunReport};
+use crate::report::{AnalysisReport, DeviceStats, OocoreStats, PairSummary, RunReport};
 use crate::rng::PermutationPlan;
 
 /// One batch of permutation work, shared read-only with the backend.
@@ -271,11 +271,29 @@ pub fn execute_prepared(
     grouping: &Grouping,
     prelude: Option<&StatKernel>,
 ) -> Result<AnalysisReport> {
-    if grouping.n() != tri.n() {
+    execute_storage(cfg, &TriangleStorage::Resident(Arc::clone(tri)), grouping, prelude)
+}
+
+/// [`execute_prepared`] generalized over **triangle storage** — the
+/// out-of-core-aware engine core.  Resident storage behaves exactly as the
+/// classic path (bit for bit).  File-backed storage runs PERMANOVA through
+/// each backend's chunk-major sweep under the residency budget, with the
+/// job's paging activity (chunks and bytes read) recorded in the run
+/// report; methods and backends that fundamentally need the whole triangle
+/// resident (ANOSIM's rank sort, PERMDISP's PCoA, pairwise sub-triangle
+/// extraction, XLA's dense staging) fail loudly with an
+/// [`Error::Config`] naming `--max-resident-bytes`.
+pub fn execute_storage(
+    cfg: &RunConfig,
+    storage: &TriangleStorage,
+    grouping: &Grouping,
+    prelude: Option<&StatKernel>,
+) -> Result<AnalysisReport> {
+    if grouping.n() != storage.n() {
         return Err(Error::InvalidInput(format!(
             "grouping n = {} vs matrix n = {}",
             grouping.n(),
-            tri.n()
+            storage.n()
         )));
     }
     if cfg.n_perms == 0 {
@@ -296,7 +314,7 @@ pub fn execute_prepared(
                 cfg.method
             )));
         }
-        kernel.check_problem(tri.n(), grouping)?;
+        kernel.check_problem(storage.n(), grouping)?;
     }
     // One backend instance serves every scheduled job of this call — for
     // pairwise that is k(k−1)/2 jobs, and re-opening e.g. the XLA runtime
@@ -304,6 +322,17 @@ pub fn execute_prepared(
     let backend = create_backend(cfg)?;
     match cfg.method {
         Method::PairwisePermanova => {
+            // Per-pair sub-triangles are extracted from the resident
+            // buffer; under a residency cap that buffer does not exist.
+            let Some(tri) = storage.as_resident() else {
+                return Err(Error::Config(
+                    "pairwise PERMANOVA extracts per-pair sub-triangles from the \
+                     resident buffer, but the dataset is file-backed under \
+                     --max-resident-bytes; raise the budget (or drop the cap) to \
+                     run this method"
+                        .into(),
+                ));
+            };
             let k = grouping.k() as u32;
             let n_comparisons = (k as usize) * (k as usize - 1) / 2;
             let mut runs = Vec::with_capacity(n_comparisons);
@@ -316,7 +345,7 @@ pub fn execute_prepared(
                     let (run, _) = run_single(
                         cfg,
                         backend.as_ref(),
-                        &Arc::new(sub),
+                        &TriangleStorage::Resident(Arc::new(sub)),
                         &sub_grouping,
                         Method::Permanova,
                         pairwise_seed(cfg.seed, a, b),
@@ -333,7 +362,7 @@ pub fn execute_prepared(
             }
             Ok(AnalysisReport {
                 method: Method::PairwisePermanova,
-                n: tri.n(),
+                n: storage.n(),
                 k: grouping.k(),
                 runs,
                 pairs,
@@ -342,10 +371,10 @@ pub fn execute_prepared(
         }
         method => {
             let (run, group_dispersions) =
-                run_single(cfg, backend.as_ref(), tri, grouping, method, cfg.seed, prelude)?;
+                run_single(cfg, backend.as_ref(), storage, grouping, method, cfg.seed, prelude)?;
             Ok(AnalysisReport {
                 method,
-                n: tri.n(),
+                n: storage.n(),
                 k: grouping.k(),
                 runs: vec![run],
                 pairs: vec![],
@@ -362,7 +391,7 @@ pub fn execute_prepared(
 fn run_single(
     cfg: &RunConfig,
     backend: &dyn Backend,
-    tri: &Arc<CondensedMatrix>,
+    storage: &TriangleStorage,
     grouping: &Grouping,
     method: Method,
     seed: u64,
@@ -370,13 +399,18 @@ fn run_single(
 ) -> Result<(RunReport, Vec<f64>)> {
     let caps = backend.capabilities();
 
+    // Snapshot the paging counters so the report records this *job's*
+    // paging delta (prelude `s_T` pass + permutation sweep), not the
+    // file's lifetime totals.
+    let paged_before = storage.paging().unwrap_or((0, 0));
+
     // Reuse the caller's prepared kernel when given (validated by
-    // `execute_prepared`); otherwise prepare one for this job.
+    // `execute_storage`); otherwise prepare one for this job.
     let prepared;
     let stat: &StatKernel = match prelude {
         Some(k) => k,
         None => {
-            prepared = StatKernel::prepare_packed(method, tri, grouping)?;
+            prepared = StatKernel::prepare_storage(method, storage, grouping)?;
             &prepared
         }
     };
@@ -398,11 +432,21 @@ fn run_single(
 
     let f_obs = batch.stats[0];
     let f_perms = batch.stats[1..].to_vec();
+    // File-backed jobs record their paging activity; resident jobs record
+    // nothing (keeping uncapped report serialization byte-stable).
+    let oocore = storage.as_file().map(|f| {
+        let (chunks, bytes) = storage.paging().unwrap_or((0, 0));
+        OocoreStats {
+            resident_cap: f.budget_bytes(),
+            chunks_paged: chunks.saturating_sub(paged_before.0),
+            bytes_paged: bytes.saturating_sub(paged_before.1),
+        }
+    });
     let report = RunReport {
         f_obs,
         p_value: pvalue(f_obs, &f_perms),
         n_perms: cfg.n_perms,
-        n: tri.n(),
+        n: storage.n(),
         k: grouping.k(),
         s_t: stat.s_t(),
         elapsed_secs: t0.elapsed().as_secs_f64(),
@@ -426,6 +470,7 @@ fn run_single(
             busy_secs: batch.elapsed_secs,
             simulated_secs: batch.modelled_secs.unwrap_or(0.0),
         }],
+        oocore,
         f_perms,
     };
     Ok((report, group_dispersions))

@@ -13,9 +13,11 @@ use std::time::Instant;
 use super::shard::run_sharded_with;
 use super::{Backend, BatchPlan, BatchResult, Caps};
 use crate::config::RunConfig;
+use crate::dmat::TriangleStorage;
 use crate::error::Result;
 use crate::permanova::{
-    eval_plan_range, fstat_from_sw, sw_one, StatKernel, SwAlgorithm, DEFAULT_TILE,
+    eval_plan_range, fstat_from_sw, sw_one, sw_plan_range_chunked, StatKernel, SwAlgorithm,
+    DEFAULT_TILE,
 };
 
 /// Native Rust kernels (brute / tiled / flat) on host threads.
@@ -48,22 +50,38 @@ impl Backend for NativeBackend {
         let k = plan.grouping.k();
         let stats = match plan.stat {
             // PERMANOVA: this backend's f32 kernel formulation over the
-            // prelude's packed triangle (the canonical operand).
+            // prelude's packed triangle (the canonical operand).  A
+            // file-backed triangle runs the *same* formulation through the
+            // chunk-major sweep — bitwise identical, paged residency.
             StatKernel::Permanova(pk) => {
                 let algo = self.algo;
-                let tri = pk.packed.view();
-                let mut s_w = vec![0.0f32; plan.rows];
-                run_sharded_with(
-                    &plan.shard,
-                    &mut s_w,
-                    || vec![0u32; n], // per-worker scratch label row
-                    |row, start, slice| {
-                        for (i, out) in slice.iter_mut().enumerate() {
-                            plan.perms.fill(plan.start + start + i, row);
-                            *out = sw_one(algo, tri, row, plan.grouping.inv_sizes());
-                        }
-                    },
-                );
+                let s_w = match &pk.storage {
+                    TriangleStorage::Resident(packed) => {
+                        let tri = packed.view();
+                        let mut s_w = vec![0.0f32; plan.rows];
+                        run_sharded_with(
+                            &plan.shard,
+                            &mut s_w,
+                            || vec![0u32; n], // per-worker scratch label row
+                            |row, start, slice| {
+                                for (i, out) in slice.iter_mut().enumerate() {
+                                    plan.perms.fill(plan.start + start + i, row);
+                                    *out = sw_one(algo, tri, row, plan.grouping.inv_sizes());
+                                }
+                            },
+                        );
+                        s_w
+                    }
+                    TriangleStorage::FileBacked(file) => sw_plan_range_chunked(
+                        file,
+                        plan.perms,
+                        plan.start,
+                        plan.rows,
+                        plan.grouping.inv_sizes(),
+                        algo,
+                        &plan.shard,
+                    )?,
+                };
                 s_w.iter().map(|&sw| fstat_from_sw(sw as f64, pk.s_t, n, k)).collect()
             }
             // ANOSIM / PERMDISP: the generic f64 loop, same scheduler.

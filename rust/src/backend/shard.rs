@@ -212,6 +212,46 @@ where
     });
 }
 
+/// The out-of-core chunk-sweep pass: for each `(r0, r1)` row range in
+/// `plan`, load the chunk **once** (serially, on the driver thread) and
+/// have the full shard × SMT crew sweep it across every output lane before
+/// the next chunk is paged in.  This is the loop inversion that bounds
+/// residency — per batch, each chunk crosses the disk exactly once, and the
+/// sweep inside a chunk is the ordinary [`run_sharded_with`] schedule.
+///
+/// `fill(state, chunk, r0, r1, start, slice)` must *accumulate* into
+/// `slice` (carried across chunks; the caller zeroes `out` once), with rows
+/// ascending per lane — that is what keeps the concatenated chunk sweeps
+/// bitwise identical to a resident whole-triangle sweep.  A `load` error
+/// aborts the pass with output lanes mid-accumulation; callers propagate
+/// the error and discard `out`.
+pub fn run_chunk_sweep<T, S, C, E, L, G, F>(
+    spec: &ShardSpec,
+    out: &mut [T],
+    plan: &[(usize, usize)],
+    mut load: L,
+    init: G,
+    fill: F,
+) -> std::result::Result<(), E>
+where
+    T: Send,
+    C: Sync,
+    L: FnMut(usize, usize) -> std::result::Result<C, E>,
+    G: Fn() -> S + Sync,
+    F: Fn(&mut S, &C, usize, usize, usize, &mut [T]) + Sync,
+{
+    if out.is_empty() {
+        return Ok(());
+    }
+    for &(r0, r1) in plan {
+        let chunk = load(r0, r1)?;
+        run_sharded_with(spec, out, &init, |state, start, slice| {
+            fill(state, &chunk, r0, r1, start, slice)
+        });
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // The shared work-crew: one persistent pool for a whole batch of jobs.
 // ---------------------------------------------------------------------------
@@ -603,6 +643,70 @@ mod tests {
         assert_eq!(auto.shard_for(3, 8), 1); // floor at 1
         let fixed = ShardSpec { shard_size: 17, ..Default::default() };
         assert_eq!(fixed.shard_for(1000, 4), 17);
+    }
+
+    #[test]
+    fn chunk_sweep_accumulates_each_chunk_once_per_lane() {
+        // Each "chunk" contributes its row-range width; after the sweep,
+        // every lane must hold the total width exactly once, regardless of
+        // shard geometry — and the loader must run once per planned chunk.
+        let plan = [(0usize, 3usize), (3, 7), (7, 20)];
+        for spec in [
+            ShardSpec::with_workers(1),
+            ShardSpec { shard_size: 5, workers: 3, smt: false },
+            ShardSpec { shard_size: 3, workers: 2, smt: true },
+        ] {
+            let mut out = vec![0u64; 33];
+            let mut loads = 0usize;
+            run_chunk_sweep(
+                &spec,
+                &mut out,
+                &plan,
+                |r0, r1| {
+                    loads += 1;
+                    Ok::<usize, ()>(r1 - r0)
+                },
+                || (),
+                |_, width, _r0, _r1, _start, slice| {
+                    for o in slice.iter_mut() {
+                        *o += *width as u64;
+                    }
+                },
+            )
+            .unwrap();
+            assert_eq!(loads, plan.len(), "one disk read per chunk per batch");
+            assert!(out.iter().all(|&v| v == 20), "spec={spec:?} out={out:?}");
+        }
+    }
+
+    #[test]
+    fn chunk_sweep_propagates_load_errors_and_skips_empty_output() {
+        let mut out = vec![0u8; 4];
+        let err = run_chunk_sweep(
+            &ShardSpec::with_workers(2),
+            &mut out,
+            &[(0, 2), (2, 4)],
+            |r0, _| if r0 == 2 { Err("boom") } else { Ok(0usize) },
+            || (),
+            |_, _, _, _, _, _: &mut [u8]| {},
+        );
+        assert_eq!(err, Err("boom"));
+
+        let mut empty: Vec<u8> = Vec::new();
+        let mut loads = 0;
+        run_chunk_sweep(
+            &ShardSpec::default(),
+            &mut empty,
+            &[(0, 2)],
+            |_, _| {
+                loads += 1;
+                Ok::<usize, ()>(0)
+            },
+            || (),
+            |_, _, _, _, _, _: &mut [u8]| {},
+        )
+        .unwrap();
+        assert_eq!(loads, 0, "empty output pages nothing");
     }
 
     #[test]

@@ -18,8 +18,11 @@ use std::time::Instant;
 use super::shard::run_sharded_with;
 use super::{Backend, BatchPlan, BatchResult, Caps};
 use crate::config::RunConfig;
+use crate::dmat::TriangleStorage;
 use crate::error::Result;
-use crate::permanova::{eval_plan_range, fstat_from_sw, sw_one, StatKernel, SwAlgorithm};
+use crate::permanova::{
+    eval_plan_range, fstat_from_sw, sw_one, sw_plan_range_chunked, StatKernel, SwAlgorithm,
+};
 use crate::simulator::{predict, DeviceConfig, Mi300a, Workload};
 
 /// The calibrated MI300A model as an execution backend.
@@ -49,20 +52,37 @@ impl Backend for SimulatorBackend {
         let k = plan.grouping.k();
         let stats: Vec<f64> = match plan.stat {
             StatKernel::Permanova(pk) => {
-                let tri = pk.packed.view();
-                let mut s_w = vec![0.0f32; plan.rows];
-                run_sharded_with(
-                    &plan.shard,
-                    &mut s_w,
-                    || vec![0u32; n],
-                    |row, start, slice| {
-                        let inv = plan.grouping.inv_sizes();
-                        for (i, out) in slice.iter_mut().enumerate() {
-                            plan.perms.fill(plan.start + start + i, row);
-                            *out = sw_one(SwAlgorithm::Flat, tri, row, inv);
-                        }
-                    },
-                );
+                // Numerics always use the flat kernel; a file-backed
+                // triangle runs the same flat kernel chunk-major (bitwise
+                // identical — the modelled time is unaffected either way).
+                let s_w = match &pk.storage {
+                    TriangleStorage::Resident(packed) => {
+                        let tri = packed.view();
+                        let mut s_w = vec![0.0f32; plan.rows];
+                        run_sharded_with(
+                            &plan.shard,
+                            &mut s_w,
+                            || vec![0u32; n],
+                            |row, start, slice| {
+                                let inv = plan.grouping.inv_sizes();
+                                for (i, out) in slice.iter_mut().enumerate() {
+                                    plan.perms.fill(plan.start + start + i, row);
+                                    *out = sw_one(SwAlgorithm::Flat, tri, row, inv);
+                                }
+                            },
+                        );
+                        s_w
+                    }
+                    TriangleStorage::FileBacked(file) => sw_plan_range_chunked(
+                        file,
+                        plan.perms,
+                        plan.start,
+                        plan.rows,
+                        plan.grouping.inv_sizes(),
+                        SwAlgorithm::Flat,
+                        &plan.shard,
+                    )?,
+                };
                 s_w.iter().map(|&sw| fstat_from_sw(sw as f64, pk.s_t, n, k)).collect()
             }
             stat => {

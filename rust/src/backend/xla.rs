@@ -73,8 +73,19 @@ impl Backend for XlaBackend {
 
         // The lowered HLO takes the dense n×n matrix: mirror it on demand
         // from the packed triangle, stage it, and let it drop with this
-        // scope — the transient dense boundary, not a resident copy.
-        let staged = pk.packed.to_dense();
+        // scope — the transient dense boundary, not a resident copy.  A
+        // file-backed triangle cannot be mirrored densely without blowing
+        // the residency budget, so it fails loudly instead of silently
+        // materializing n² bytes.
+        let Some(packed) = pk.storage.as_resident() else {
+            return Err(Error::Config(
+                "the XLA backend stages the dense n×n matrix device-side, which a \
+                 file-backed triangle under --max-resident-bytes cannot provide; \
+                 raise the budget (or drop the cap) to run this backend"
+                    .into(),
+            ));
+        };
+        let staged = packed.to_dense();
         let session = self.runtime.session(&self.kernel, staged.data(), n, plan.grouping)?;
         let cap = session.batch_capacity().max(1);
 

@@ -195,8 +195,15 @@ pub fn speedup(a: &Measurement, b: &Measurement) -> f64 {
 /// image answering every job from a pre-populated
 /// [`ResultStore`](crate::store::ResultStore) without touching the engine);
 /// the validator pins `store_hits == jobs` so a disk-warm pass that
-/// quietly recomputes fails CI.
-pub const BENCH_SCHEMA: &str = "bench-permanova/v7";
+/// quietly recomputes fails CI.  v8 added the top-level `oocore` section —
+/// the residency-cap axis: the same PERMANOVA cell timed uncapped
+/// (resident packed triangle) and under `--max-resident-bytes` at a
+/// quarter of the packed triangle (spilled to a chunk file, swept
+/// chunk-major), recording the capped run's paging counters and both
+/// statistics as exact f64 bit patterns; the validator pins
+/// `chunks_paged >= 1` and bitwise-equal `f_obs`/`p_value`, so a capped
+/// sweep that either stops paging or drifts by one ULP fails CI.
+pub const BENCH_SCHEMA: &str = "bench-permanova/v8";
 
 /// Bytes each permutation streams through its statistic kernel: the
 /// method's packed per-permutation operand plus the n-label row.
@@ -472,6 +479,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
     }
     let (throughput, throughput_table) = run_throughput_axis(grid)?;
     let (restart_warm, restart_table) = run_restart_axis(grid)?;
+    let (oocore, oocore_table) = run_oocore_axis(grid)?;
     let (latency, latency_table) = run_latency_axis(grid)?;
 
     let entry_count = entries.len();
@@ -484,6 +492,7 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
         ("entries", Json::Arr(entries)),
         ("throughput", Json::Arr(throughput)),
         ("restart_warm", Json::Arr(restart_warm)),
+        ("oocore", Json::Arr(oocore)),
         ("latency", Json::Arr(latency)),
     ]);
     let mut rendered = table.render();
@@ -494,6 +503,10 @@ pub fn run_sweep(grid: &SweepGrid) -> Result<SweepOutput> {
     if !restart_table.is_empty() {
         rendered.push('\n');
         rendered.push_str(&restart_table);
+    }
+    if !oocore_table.is_empty() {
+        rendered.push('\n');
+        rendered.push_str(&oocore_table);
     }
     if !latency_table.is_empty() {
         rendered.push('\n');
@@ -743,6 +756,125 @@ fn run_restart_axis(grid: &SweepGrid) -> Result<(Vec<Json>, String)> {
     let rendered = format!(
         "restart warmth ({jobs} identical jobs/cell: no cache vs in-memory cache vs reopened \
          store):\n{}",
+        table.render()
+    );
+    Ok((entries, rendered))
+}
+
+/// The out-of-core axis (v8): the same PERMANOVA cell timed **uncapped**
+/// (resident packed triangle) and **capped** (`--max-resident-bytes` at a
+/// quarter of the packed triangle, so the dataset spills to a chunk file
+/// at ingest and every sweep pages it back chunk-major), one cell per
+/// backend at the grid's largest n and smallest permutation count.
+///
+/// Each cell records the capped run's paging counters and both runs'
+/// statistics — the latter as exact f64 **bit patterns** (strings, the
+/// `seed` idiom: JSON numbers are f64-via-decimal here and must not
+/// arbitrate a bitwise claim).  The axis's defining invariant is that
+/// capped ≡ uncapped bit for bit: a chunked sweep that drifts by one ULP
+/// is a broken kernel, not noise, and the cell (and validator) fail
+/// rather than record it.  PERMANOVA only: ANOSIM/PERMDISP honestly
+/// refuse file-backed datasets (their kernels rank/eigendecompose the
+/// whole triangle), so a capped cell for them has nothing to time;
+/// backends whose engines cannot sweep chunks (the AOT XLA runtime) are
+/// skipped, not failed.
+fn run_oocore_axis(grid: &SweepGrid) -> Result<(Vec<Json>, String)> {
+    let n = *grid.n_grid.iter().max().expect("validated non-empty");
+    let n_perms = *grid.perm_grid.iter().min().expect("validated non-empty");
+    let packed_bytes = (n * (n - 1) / 2 * 4) as u64;
+    // A quarter of the triangle: small enough that every sweep pages
+    // several chunks, large enough that chunk-load overhead stays visible
+    // rather than dominant.  Floor keeps toy grids above one f32 row.
+    let cap = (packed_bytes / 4).max(256);
+
+    let mut entries = Vec::new();
+    let mut table = Table::new(&[
+        "backend", "n", "perms", "cap", "chunks", "paged", "resident", "capped", "capped/resident",
+    ]);
+    for backend in &grid.backends {
+        let mut cfg = grid.base.clone();
+        cfg.data = DataSource::Synthetic { n_dims: n, n_groups: grid.n_groups };
+        cfg.backend = backend.clone();
+        cfg.method = Method::Permanova;
+        cfg.n_perms = n_perms;
+        cfg.max_resident_bytes = 0;
+        cfg.validate()?;
+        let mut capped_cfg = cfg.clone();
+        capped_cfg.max_resident_bytes = cap;
+
+        // Pre-flight both modes (doubling as warmup); these reports are
+        // the cells' statistic/paging provenance.
+        let resident = AnalysisRequest::new(&cfg).run()?;
+        let capped = match AnalysisRequest::new(&capped_cfg).run() {
+            Ok(report) => report,
+            // An engine that cannot sweep chunks declines with a typed
+            // config error naming the knob; that is a skip, not a failure.
+            Err(Error::Config(msg)) if msg.contains("--max-resident-bytes") => continue,
+            Err(e) => return Err(e),
+        };
+        let oo = capped.oocore.as_ref().ok_or_else(|| {
+            Error::Config(format!(
+                "oocore cell {backend}: capped run (--max-resident-bytes {cap}) reported no \
+                 paging section"
+            ))
+        })?;
+        if capped.f_obs.to_bits() != resident.f_obs.to_bits()
+            || capped.p_value.to_bits() != resident.p_value.to_bits()
+        {
+            return Err(Error::Config(format!(
+                "oocore cell {backend}: capped run diverged from resident run (f_obs {} vs {}, \
+                 p {} vs {}) — the chunked sweep must be bitwise identical",
+                capped.f_obs, resident.f_obs, capped.p_value, resident.p_value
+            )));
+        }
+
+        let mut bencher = grid.bencher.clone();
+        let resident_m = bencher.run(&format!("oocore/{backend}/resident"), || {
+            AnalysisRequest::new(&cfg).run().expect("pre-flighted oocore cell failed")
+        });
+        let mut bencher = grid.bencher.clone();
+        let capped_m = bencher.run(&format!("oocore/{backend}/capped"), || {
+            AnalysisRequest::new(&capped_cfg).run().expect("pre-flighted oocore cell failed")
+        });
+
+        table.row(&[
+            backend.clone(),
+            n.to_string(),
+            n_perms.to_string(),
+            cap.to_string(),
+            oo.chunks_paged.to_string(),
+            crate::report::format_bytes(oo.bytes_paged),
+            format_secs(resident_m.median),
+            format_secs(capped_m.median),
+            format!("{:.2}x", capped_m.median / resident_m.median),
+        ]);
+        entries.push(Json::obj(vec![
+            ("backend", Json::str(backend.clone())),
+            ("method", Json::str(Method::Permanova.name())),
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(grid.n_groups as f64)),
+            ("n_perms", Json::num(n_perms as f64)),
+            ("packed_bytes", Json::num(packed_bytes as f64)),
+            ("resident_cap", Json::num(cap as f64)),
+            ("chunks_paged", Json::num(oo.chunks_paged as f64)),
+            ("bytes_paged", Json::num(oo.bytes_paged as f64)),
+            ("resident_secs", Json::num(resident_m.median)),
+            ("capped_secs", Json::num(capped_m.median)),
+            ("f_obs", Json::num(resident.f_obs)),
+            ("p_value", Json::num(resident.p_value)),
+            // Bitwise provenance: u64 bit patterns as strings (`seed`
+            // idiom) — the validator compares these, not decimal floats.
+            ("f_obs_bits", Json::str(resident.f_obs.to_bits().to_string())),
+            ("capped_f_obs_bits", Json::str(capped.f_obs.to_bits().to_string())),
+            ("p_value_bits", Json::str(resident.p_value.to_bits().to_string())),
+            ("capped_p_value_bits", Json::str(capped.p_value.to_bits().to_string())),
+        ]));
+    }
+    if entries.is_empty() {
+        return Ok((entries, String::new()));
+    }
+    let rendered = format!(
+        "out-of-core (same cell resident vs --max-resident-bytes {cap}, bitwise-pinned):\n{}",
         table.render()
     );
     Ok((entries, rendered))
@@ -1204,6 +1336,89 @@ pub fn validate_bench_json(doc: &Json) -> Result<usize> {
         }
     }
 
+    // v8: the out-of-core section.  Required as an array (CI notices the
+    // axis silently disappearing); may be empty only when every backend in
+    // the grid declined the residency cap (an all-XLA sweep).  The two
+    // pinned invariants are the tentpole's acceptance bar: the capped run
+    // actually paged, and its statistics are **bitwise** the resident
+    // run's — compared as u64 bit-pattern strings, never decimal floats.
+    let oocore = doc
+        .get("oocore")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bench_field_err("oocore", "missing/not an array"))?;
+    for (i, e) in oocore.iter().enumerate() {
+        let ctx = format!("oocore {i}");
+        let backend = e.req_str("backend").map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if !registry.contains(backend) {
+            return Err(bench_field_err(&ctx, format!("unknown backend {backend:?}")));
+        }
+        let method = e.req_str("method").map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+        if Method::parse(method).is_none() {
+            return Err(bench_field_err(&ctx, format!("unknown method {method:?}")));
+        }
+        let req = |key: &str| -> Result<usize> {
+            e.req_usize(key).map_err(|err| bench_field_err(&ctx, err.to_string()))
+        };
+        if req("n")? == 0 || req("n_perms")? == 0 {
+            return Err(bench_field_err(&ctx, "n and n_perms must be >= 1"));
+        }
+        req("k")?;
+        let packed = req("packed_bytes")?;
+        let cap = req("resident_cap")?;
+        if cap == 0 || cap >= packed {
+            return Err(bench_field_err(
+                &ctx,
+                format!("resident_cap {cap} must be in [1, packed_bytes {packed}) — a cap the \
+                         triangle fits under measures nothing"),
+            ));
+        }
+        if req("chunks_paged")? == 0 {
+            return Err(bench_field_err(&ctx, "chunks_paged must be >= 1 (capped run never paged)"));
+        }
+        if req("bytes_paged")? == 0 {
+            return Err(bench_field_err(&ctx, "bytes_paged must be >= 1"));
+        }
+        let num = |key: &str| -> Result<f64> {
+            let v = e
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bench_field_err(&ctx, format!("{key} missing/not a number")))?;
+            if !v.is_finite() {
+                return Err(bench_field_err(&ctx, format!("{key} must be finite, got {v}")));
+            }
+            Ok(v)
+        };
+        for key in ["resident_secs", "capped_secs"] {
+            if num(key)? <= 0.0 {
+                return Err(bench_field_err(&ctx, format!("{key} must be > 0")));
+            }
+        }
+        num("f_obs")?;
+        let p = num("p_value")?;
+        if !(p > 0.0 && p <= 1.0) {
+            return Err(bench_field_err(&ctx, format!("p_value must be in (0, 1], got {p}")));
+        }
+        let bits = |key: &str| -> Result<u64> {
+            let s = e.req_str(key).map_err(|err| bench_field_err(&ctx, err.to_string()))?;
+            s.parse::<u64>()
+                .map_err(|_| bench_field_err(&ctx, format!("{key} {s:?} is not a u64 bit pattern")))
+        };
+        if bits("f_obs_bits")? != bits("capped_f_obs_bits")? {
+            return Err(bench_field_err(
+                &ctx,
+                "capped f_obs differs from the resident run bitwise — the chunked sweep broke \
+                 the determinism contract",
+            ));
+        }
+        if bits("p_value_bits")? != bits("capped_p_value_bits")? {
+            return Err(bench_field_err(
+                &ctx,
+                "capped p_value differs from the resident run bitwise — the chunked sweep broke \
+                 the determinism contract",
+            ));
+        }
+    }
+
     // v5: the daemon latency section.  Required as an array (CI notices
     // the axis silently disappearing); may be empty only when the sweep
     // ran with the axis disabled (`latency_clients` empty).
@@ -1562,6 +1777,83 @@ mod tests {
             assert!(c.get(key).unwrap().as_f64().unwrap() > 0.0, "{key}");
         }
         assert_eq!(validate_bench_json(&out.json).unwrap(), 1);
+    }
+
+    #[test]
+    fn oocore_axis_pins_bitwise_parity_while_paging() {
+        let mut g = tiny_grid();
+        g.backends = vec!["native-brute".into(), "native-batch".into()];
+        let out = run_sweep(&g).unwrap();
+        assert!(out.table.contains("out-of-core"), "{}", out.table);
+        let cells = out.json.req_arr("oocore").unwrap();
+        assert_eq!(cells.len(), 2, "one cell per backend");
+        for c in cells {
+            let backend = c.req_str("backend").unwrap();
+            assert_eq!(c.req_str("method").unwrap(), "permanova");
+            // n = 24 → packed 1104 bytes; quarter-cap floored to 256.
+            assert_eq!(c.req_usize("packed_bytes").unwrap(), 1104);
+            assert_eq!(c.req_usize("resident_cap").unwrap(), 276, "{backend}");
+            assert!(c.req_usize("chunks_paged").unwrap() >= 1, "{backend}");
+            assert!(c.req_usize("bytes_paged").unwrap() >= 1, "{backend}");
+            // The defining invariant, recorded as bit patterns.
+            assert_eq!(
+                c.req_str("f_obs_bits").unwrap(),
+                c.req_str("capped_f_obs_bits").unwrap(),
+                "{backend}"
+            );
+            assert_eq!(
+                c.req_str("p_value_bits").unwrap(),
+                c.req_str("capped_p_value_bits").unwrap(),
+                "{backend}"
+            );
+        }
+        assert_eq!(validate_bench_json(&out.json).unwrap(), 2);
+    }
+
+    #[test]
+    fn validator_rejects_broken_oocore_cells() {
+        let good = run_sweep(&tiny_grid()).unwrap().json;
+        // Missing section (v8 requires the key).
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.remove("oocore");
+        }
+        let e = validate_bench_json(&bad).unwrap_err().to_string();
+        assert!(e.contains("oocore"), "{e}");
+        // A capped run that never paged is a cap the validator rejects.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut cells = m.get("oocore").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(c) = &mut cells[0] {
+                c.insert("chunks_paged".into(), Json::num(0));
+            }
+            m.insert("oocore".into(), Json::Arr(cells));
+        }
+        let e = validate_bench_json(&bad).unwrap_err().to_string();
+        assert!(e.contains("chunks_paged"), "{e}");
+        // A cap the triangle fits under measures nothing.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut cells = m.get("oocore").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(c) = &mut cells[0] {
+                c.insert("resident_cap".into(), Json::num(1e9));
+            }
+            m.insert("oocore".into(), Json::Arr(cells));
+        }
+        let e = validate_bench_json(&bad).unwrap_err().to_string();
+        assert!(e.contains("resident_cap"), "{e}");
+        // One flipped statistic bit fails the document.
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            let mut cells = m.get("oocore").unwrap().as_arr().unwrap().to_vec();
+            if let Json::Obj(c) = &mut cells[0] {
+                let bits: u64 = c.get("f_obs_bits").unwrap().as_str().unwrap().parse().unwrap();
+                c.insert("capped_f_obs_bits".into(), Json::str((bits ^ 1).to_string()));
+            }
+            m.insert("oocore".into(), Json::Arr(cells));
+        }
+        let e = validate_bench_json(&bad).unwrap_err().to_string();
+        assert!(e.contains("bitwise"), "{e}");
     }
 
     #[test]

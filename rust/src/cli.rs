@@ -141,7 +141,7 @@ pub fn dispatch(args: &Args) -> Result<String> {
 pub fn usage() -> String {
     let mut s = String::from("permanova-apu — PERMANOVA on APU-class hardware\n\nCommands:\n");
     for (cmd, desc) in [
-        ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --data-seed D --data-tol T --repeat N [--store-dir DIR [--store-capacity-bytes B] | --no-store] --json out.json --config file.toml | --pdm file --labels file (file input is validated on load); legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
+        ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --data-seed D --data-tol T --max-resident-bytes B (0 = unbounded; smaller datasets spill to disk and run chunk-major, bitwise identical) --repeat N [--store-dir DIR [--store-capacity-bytes B] | --no-store] --json out.json --config file.toml | --pdm file --labels file (file input is validated on load); legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
         ("serve", "JSONL job batch through the shared-dataset service: --jobs FILE [--out FILE] [--cache-capacity N] [--threads T]; --listen HOST:PORT runs the TCP daemon instead (adds --queue-depth N; SIGTERM/ctrl-C drains); --store-dir DIR attaches the durable result store (crash-safe; warm state survives restarts; --store-capacity-bytes B bounds it, --no-store disables); --check FILE validates a response document"),
         ("client", "speak to a running daemon: --addr HOST:PORT with any of --jobs FILE (pipelined v1/legacy requests), --stats, --shutdown; prints one JSONL response per request; exits non-zero when any job fails"),
         ("bench", "backend x method sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --methods permanova,anosim --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --throughput-jobs J --latency-clients 1,4 (0 disables) --out FILE; --check FILE validates an existing document"),
@@ -270,6 +270,7 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     cfg.threads = args.usize_flag("threads", cfg.threads)?;
     cfg.shard_size = args.usize_flag("shard-size", cfg.shard_size)?;
     cfg.perm_block = args.usize_flag("perm-block", cfg.perm_block)?;
+    cfg.max_resident_bytes = args.u64_flag("max-resident-bytes", cfg.max_resident_bytes)?;
     if args.has_flag("smt-oversubscribe") {
         cfg.smt_oversubscribe = args.bool_flag("smt-oversubscribe")?;
     }

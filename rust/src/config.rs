@@ -258,6 +258,14 @@ pub struct RunConfig {
     /// rejected with a config error instead of being silently analyzed.
     /// Synthetic sources are valid by construction and skip the check.
     pub data_tol: f32,
+    /// Hard cap on the bytes of distance-matrix triangle kept resident
+    /// (`[run] max_resident_bytes` / `--max-resident-bytes`; 0 =
+    /// unbounded, the default).  A dataset whose packed triangle
+    /// (`n(n-1)/2 × 4` bytes) exceeds the cap is spilled to a scratch
+    /// file at ingest and analyzed chunk-major: each kernel sweeps one
+    /// budget-sized row-chunk at a time, so `n` can exceed RAM.  Results
+    /// are bitwise identical to the uncapped run on every backend.
+    pub max_resident_bytes: u64,
 }
 
 /// Default [`RunConfig::data_tol`]: loose enough for f32 pipeline noise,
@@ -327,6 +335,7 @@ impl Default for RunConfig {
             smt_oversubscribe: false,
             perm_block: 0,
             data_tol: DEFAULT_DATA_TOL,
+            max_resident_bytes: 0,
         }
     }
 }
@@ -364,6 +373,12 @@ impl RunConfig {
         let method_s = doc.str_or("run", "method", d.method.name());
         let method = Method::parse(&method_s)
             .ok_or_else(|| Error::Config(format!("unknown run.method {method_s:?}")))?;
+        let max_resident = doc.int_or("run", "max_resident_bytes", d.max_resident_bytes as i64);
+        if max_resident < 0 {
+            return Err(Error::Config(format!(
+                "run.max_resident_bytes must be >= 0 (0 = unbounded), got {max_resident}"
+            )));
+        }
         let cfg = RunConfig {
             data,
             n_perms: doc.int_or("run", "n_perms", d.n_perms as i64) as usize,
@@ -380,6 +395,7 @@ impl RunConfig {
             smt_oversubscribe: doc.bool_or("run", "smt_oversubscribe", false),
             perm_block: doc.int_or("run", "perm_block", 0) as usize,
             data_tol: doc.float_or("data", "tol", d.data_tol as f64) as f32,
+            max_resident_bytes: max_resident as u64,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -412,9 +428,10 @@ impl RunConfig {
         // misplaced field (e.g. top-level "data_seed" instead of
         // data.seed) must fail loudly rather than silently take a
         // default and compute something else.
-        const TOP_KEYS: [&str; 14] = [
+        const TOP_KEYS: [&str; 15] = [
             "id", "method", "backend", "algo", "n_perms", "seed", "threads", "shard_size",
             "smt", "smt_oversubscribe", "perm_block", "artifacts_dir", "xla_kernel", "data",
+            "max_resident_bytes",
         ];
         const DATA_KEYS: [&str; 9] = [
             "source", "n_dims", "n_groups", "n_taxa", "n_samples", "path", "labels", "seed",
@@ -521,6 +538,9 @@ impl RunConfig {
                 .unwrap_or(d.smt_oversubscribe),
             perm_block: top.opt_usize("perm_block")?.unwrap_or(d.perm_block),
             data_tol,
+            max_resident_bytes: top
+                .opt_u64("max_resident_bytes")?
+                .unwrap_or(d.max_resident_bytes),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -900,6 +920,26 @@ mod tests {
             let doc = Json::parse(bad).unwrap();
             assert!(RunConfig::from_json(&doc).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn max_resident_bytes_knob_parses_and_defaults() {
+        use crate::jsonio::Json;
+        // Default: unbounded (0) — the pre-out-of-core behaviour.
+        let cfg = RunConfig::from_toml(&TomlDoc::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.max_resident_bytes, 0);
+        let doc = TomlDoc::parse("[run]\nmax_resident_bytes = 4096\n").unwrap();
+        assert_eq!(RunConfig::from_toml(&doc).unwrap().max_resident_bytes, 4096);
+        let bad = TomlDoc::parse("[run]\nmax_resident_bytes = -1\n").unwrap();
+        let e = RunConfig::from_toml(&bad).unwrap_err().to_string();
+        assert!(e.contains("max_resident_bytes"), "{e}");
+        // JSON jobs: top-level key, number or decimal string.
+        let doc = Json::parse(r#"{"max_resident_bytes": 8192}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&doc).unwrap().max_resident_bytes, 8192);
+        let doc = Json::parse(r#"{"max_resident_bytes": "18446744073709551615"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&doc).unwrap().max_resident_bytes, u64::MAX);
+        let doc = Json::parse(r#"{"max_resident_bytes": "lots"}"#).unwrap();
+        assert!(RunConfig::from_json(&doc).is_err());
     }
 
     #[test]

@@ -22,8 +22,8 @@ use std::sync::Arc;
 
 use crate::config::{DataSource, RunConfig};
 use crate::dmat::{
-    random_euclidean_condensed, read_pdm_condensed, read_tsv_condensed, CondensedMatrix,
-    DistanceMatrix,
+    random_euclidean_condensed, random_euclidean_storage, read_pdm_condensed, read_pdm_storage,
+    read_tsv_condensed, read_tsv_storage, CondensedMatrix, DistanceMatrix, TriangleStorage,
 };
 use crate::error::{Error, Result};
 use crate::permanova::Grouping;
@@ -102,6 +102,61 @@ pub fn load_data(cfg: &RunConfig) -> Result<(Arc<CondensedMatrix>, Grouping)> {
     }
 }
 
+/// [`load_data`] with a residency budget: materialize the triangle a
+/// config describes as [`TriangleStorage`], spilling to a scratch file
+/// when the packed triangle would exceed `cfg.max_resident_bytes`.
+///
+/// `max_resident_bytes == 0` (the default) means unbounded — this is then
+/// exactly `load_data` wrapped in `TriangleStorage::Resident`, byte for
+/// byte.  With a budget, the streaming sources (synthetic Euclidean, PDM,
+/// TSV) never hold more than one budget-sized window resident: values
+/// stream through the spill sink into the chunk file, and analyses sweep
+/// it chunk-major.  The UniFrac pipeline computes a dense `n²` matrix by
+/// construction, so a budget smaller than its packed triangle is an
+/// honest [`Error::Config`] rather than a silent blow-through.
+pub fn load_storage(cfg: &RunConfig) -> Result<(TriangleStorage, Grouping)> {
+    let budget = cfg.max_resident_bytes;
+    if budget == 0 {
+        let (tri, grouping) = load_data(cfg)?;
+        return Ok((TriangleStorage::Resident(tri), grouping));
+    }
+    match &cfg.data {
+        DataSource::Synthetic { n_dims, n_groups } => {
+            let storage =
+                random_euclidean_storage(*n_dims, 16, cfg.effective_data_seed() ^ 0xDA7A, budget)?;
+            let grouping = Grouping::balanced(*n_dims, *n_groups)?;
+            Ok((storage, grouping))
+        }
+        DataSource::SyntheticUnifrac { n_samples, .. } => {
+            let packed_bytes = (n_samples * n_samples.saturating_sub(1) / 2 * 4) as u64;
+            if packed_bytes > budget {
+                return Err(Error::Config(format!(
+                    "the UniFrac pipeline computes a dense {n_samples}x{n_samples} matrix, so \
+                     its {packed_bytes}-byte packed triangle cannot honor \
+                     --max-resident-bytes {budget}; raise the budget to at least \
+                     {packed_bytes} bytes (or drop the cap)"
+                )));
+            }
+            let (tri, grouping) = load_data(cfg)?;
+            Ok((TriangleStorage::Resident(tri), grouping))
+        }
+        DataSource::Pdm { path, labels_path } => {
+            let storage = read_pdm_storage(path, cfg.data_tol, budget)
+                .map_err(|e| wrap_ingest_err(path, cfg.data_tol, e))?;
+            check_storage_n(&storage, path, cfg.data_tol)?;
+            let grouping = read_labels(labels_path, storage.n())?;
+            Ok((storage, grouping))
+        }
+        DataSource::Tsv { path, labels_path } => {
+            let (storage, _ids) = read_tsv_storage(path, cfg.data_tol, budget)
+                .map_err(|e| wrap_ingest_err(path, cfg.data_tol, e))?;
+            check_storage_n(&storage, path, cfg.data_tol)?;
+            let grouping = read_labels(labels_path, storage.n())?;
+            Ok((storage, grouping))
+        }
+    }
+}
+
 /// Test-only oracle: the pre-streaming dense load path (read the full
 /// `n*n` matrix, then validate in a separate pass).  The ingestion
 /// conformance suite pins `load_data` bitwise against
@@ -165,6 +220,22 @@ fn check_loaded_n(tri: &CondensedMatrix, path: &str, tol: f32) -> Result<()> {
             Error::InvalidInput(format!(
                 "need at least 3 objects for PERMANOVA, got {}",
                 tri.n()
+            )),
+        ));
+    }
+    Ok(())
+}
+
+/// [`check_loaded_n`] for budgeted loads (the storage may be file-backed,
+/// so the check runs on the storage's `n`, not a resident triangle).
+fn check_storage_n(storage: &TriangleStorage, path: &str, tol: f32) -> Result<()> {
+    if storage.n() < 3 {
+        return Err(wrap_ingest_err(
+            path,
+            tol,
+            Error::InvalidInput(format!(
+                "need at least 3 objects for PERMANOVA, got {}",
+                storage.n()
             )),
         ));
     }
@@ -404,6 +475,80 @@ mod tests {
             ..Default::default()
         };
         assert!(run_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn load_storage_honors_the_residency_budget() {
+        // Unbounded: exactly load_data, resident, bitwise.
+        let cfg = RunConfig {
+            data: DataSource::Synthetic { n_dims: 40, n_groups: 4 },
+            ..Default::default()
+        };
+        let (storage, grouping) = load_storage(&cfg).unwrap();
+        let (tri, _) = load_data(&cfg).unwrap();
+        assert_eq!(storage.as_resident().unwrap().values(), tri.values());
+        assert_eq!(grouping.k(), 4);
+
+        // A budget smaller than the packed triangle spills to disk; the
+        // file replays the identical value stream chunk by chunk.
+        let capped = RunConfig { max_resident_bytes: 400, ..cfg.clone() };
+        let (spilled, _) = load_storage(&capped).unwrap();
+        let file = spilled.as_file().expect("40*39/2*4 = 3120 bytes > 400 must spill");
+        assert!(file.resident_bytes() <= 400, "honest residency accounting");
+        let mut replayed = Vec::new();
+        for (r0, r1) in file.chunk_plan(1) {
+            let chunk = file.load_chunk(r0, r1).unwrap();
+            replayed.extend_from_slice(chunk.values());
+        }
+        assert_eq!(replayed, tri.values(), "spilled stream is bitwise the resident one");
+
+        // A budget the triangle fits under stays resident.
+        let roomy = RunConfig { max_resident_bytes: 1 << 20, ..cfg.clone() };
+        assert!(load_storage(&roomy).unwrap().0.as_resident().is_some());
+
+        // The UniFrac pipeline is dense by construction: an impossible
+        // budget is an actionable config error, not a silent blow-through.
+        let unifrac = RunConfig {
+            data: DataSource::SyntheticUnifrac { n_taxa: 64, n_samples: 24, n_groups: 3 },
+            max_resident_bytes: 64,
+            ..Default::default()
+        };
+        match load_storage(&unifrac).unwrap_err() {
+            Error::Config(m) => assert!(m.contains("--max-resident-bytes"), "{m}"),
+            other => panic!("want Error::Config, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn load_storage_spills_file_sources() {
+        let dir = std::env::temp_dir().join("permanova_apu_coord_oocore_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mpath = dir.join("m.pdm");
+        let lpath = dir.join("labels.txt");
+        let mat = DistanceMatrix::random_euclidean(24, 4, 11);
+        mat.write_binary(&mpath).unwrap();
+        let labels: Vec<String> = (0..24).map(|i| format!("env{}", i % 3)).collect();
+        std::fs::write(&lpath, labels.join("\n")).unwrap();
+        let cfg = RunConfig {
+            data: DataSource::Pdm {
+                path: mpath.display().to_string(),
+                labels_path: lpath.display().to_string(),
+            },
+            max_resident_bytes: 256,
+            ..Default::default()
+        };
+        let (storage, grouping) = load_storage(&cfg).unwrap();
+        assert!(storage.is_file_backed(), "24*23/2*4 = 1104 bytes > 256 must spill");
+        assert_eq!(storage.n(), 24);
+        assert_eq!(grouping.k(), 3);
+        // The uncapped load of the same file is the oracle stream.
+        let (tri, _) = load_data(&RunConfig { max_resident_bytes: 0, ..cfg }).unwrap();
+        let file = storage.as_file().unwrap();
+        let mut replayed = Vec::new();
+        for (r0, r1) in file.chunk_plan(1) {
+            replayed.extend_from_slice(file.load_chunk(r0, r1).unwrap().values());
+        }
+        assert_eq!(replayed, tri.values());
     }
 
     #[test]

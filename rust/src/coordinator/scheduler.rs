@@ -150,6 +150,7 @@ pub fn run_coordinated(
         kernel: "mixed".to_string(),
         perm_block: 0,
         per_device: stats.into_values().collect(),
+        oocore: None,
         f_perms,
     })
 }

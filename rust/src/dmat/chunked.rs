@@ -1,0 +1,695 @@
+//! Out-of-core packed triangle: the chunk-addressable file tier.
+//!
+//! PR 7 made every source stream into the resident packed buffer; this
+//! module delivers the other half of the out-of-core item: a triangle that
+//! lives in a **checksummed chunk file** and pages contiguous row ranges
+//! through a hard `--max-resident-bytes` budget.  The design follows the
+//! same access-pattern inversion that made `native-batch` the GPU-winning
+//! kernel — amortize each expensive read (there: HBM; here: disk) across
+//! every permutation lane before moving on — applied one level down the
+//! storage hierarchy.
+//!
+//! * [`TriangleChunk`] — a contiguous packed row range `[r0, r1)` plus its
+//!   row offsets, globally indexed so kernels address rows exactly as they
+//!   address a resident [`CondensedMatrix`];
+//! * [`FileTriangle`] — the on-disk triangle (`TRC1` format) with a greedy
+//!   budget-respecting [`chunk_plan`](FileTriangle::chunk_plan) and paging
+//!   counters (`chunks_paged`, `bytes_paged`) the service reports;
+//! * [`TriangleWriter`] — the streaming producer ingest spills into (tmp +
+//!   rename, per-block FNV-64 checksums accumulated as values arrive);
+//! * [`TriangleStorage`] — the `Resident | FileBacked` seam every layer
+//!   above (prelude, backends, cache, coordinator) now carries.
+//!
+//! ## `TRC1` file format
+//!
+//! Little-endian throughout, mirroring the store's segment conventions
+//! (`store/spill.rs`: magic + sized header + payload, written to a tmp
+//! path and atomically renamed) and hardened with the integrity check the
+//! out-of-core tier actually needs — the file is re-read many times per
+//! run, so every block is checksummed, not just validated once at ingest:
+//!
+//! ```text
+//! [ b"TRC1" ][ u64 n ][ u64 block_values ]          // 20-byte header
+//! [ n(n-1)/2 × f32 values, scipy pdist order ]
+//! [ ceil(count / block_values) × u64 FNV-64 ]       // per-block checksums
+//! ```
+//!
+//! Every file position is computable from `n`, so reads seek directly.
+//! [`FileTriangle::load_chunk`] verifies the FNV-64 of every checksum
+//! block it touches before handing values to a kernel; a flipped bit
+//! anywhere in a paged range is a typed error, never a silently wrong
+//! statistic.
+//!
+//! **Bitwise contract:** chunk boundaries fall between packed rows and
+//! every consumer sweeps rows in ascending order per permutation lane with
+//! carried accumulators, so the f32/f64 operation sequence per lane is
+//! identical to a resident sweep — file-backed results are bit-equal to
+//! resident results (pinned by `rust/tests/oocore_chunked.rs`).
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::condensed::CondensedMatrix;
+use crate::error::{Error, Result};
+use crate::store::{fnv64_fold, FNV64_OFFSET};
+
+/// Chunk-file magic.
+pub const TRC_MAGIC: &[u8; 4] = b"TRC1";
+
+/// Values per checksum block (256 KiB of f32s): small enough that a
+/// corrupt block re-read costs little, large enough that the trailing
+/// table stays negligible (8 bytes per 256 KiB ≈ 0.003%).
+pub const TRC_BLOCK_VALUES: usize = 1 << 16;
+
+const TRC_HEADER_BYTES: u64 = 20;
+
+/// Packed values before row `r` of an `n`-object triangle:
+/// `sum_{i<r} (n-1-i) = r·n − r(r+1)/2`.  `row_start(n, n)` is the total
+/// value count `n(n-1)/2`.
+#[inline]
+pub fn row_start(n: usize, r: usize) -> usize {
+    r * n - r * (r + 1) / 2
+}
+
+/// A contiguous packed row range `[r0, r1)` resident in memory.
+///
+/// Rows are addressed by their **global** index so kernel code written
+/// against [`CondensedView::row`](super::CondensedView::row) ports by
+/// swapping the receiver: `chunk.row(i)` for `r0 ≤ i < r1` is bitwise the
+/// resident `tri.row(i)`.
+#[derive(Clone, Debug)]
+pub struct TriangleChunk {
+    n: usize,
+    r0: usize,
+    r1: usize,
+    values: Vec<f32>,
+    /// Row `r0 + i` spans `offsets[i]..offsets[i+1]` (`r1 - r0 + 1` entries).
+    offsets: Vec<usize>,
+}
+
+impl TriangleChunk {
+    /// Build a chunk from the packed values of rows `[r0, r1)`.
+    pub fn from_values(n: usize, r0: usize, r1: usize, values: Vec<f32>) -> Result<TriangleChunk> {
+        let want = row_start(n, r1) - row_start(n, r0);
+        if r0 > r1 || r1 > n || values.len() != want {
+            return Err(Error::Config(format!(
+                "triangle chunk rows [{r0},{r1}) of n = {n}: got {} values, want {want}",
+                values.len()
+            )));
+        }
+        let mut offsets = Vec::with_capacity(r1 - r0 + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for i in r0..r1 {
+            acc += n - 1 - i;
+            offsets.push(acc);
+        }
+        Ok(TriangleChunk { n, r0, r1, values, offsets })
+    }
+
+    /// Number of objects of the full triangle this chunk belongs to.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// First (global) row in the chunk.
+    #[inline]
+    pub fn r0(&self) -> usize {
+        self.r0
+    }
+
+    /// One past the last (global) row in the chunk.
+    #[inline]
+    pub fn r1(&self) -> usize {
+        self.r1
+    }
+
+    /// Row `i`'s packed slice (`r0 ≤ i < r1`, global index): bitwise the
+    /// resident `tri.row(i)`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(self.r0 <= i && i < self.r1, "row {i} outside [{},{})", self.r0, self.r1);
+        let k = i - self.r0;
+        &self.values[self.offsets[k]..self.offsets[k + 1]]
+    }
+
+    /// The chunk's packed values (rows `r0..r1` concatenated).
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Resident bytes of this chunk's value buffer.
+    pub fn nbytes(&self) -> usize {
+        self.values.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// The on-disk packed triangle: `TRC1` file + checksum table + budget.
+///
+/// Owns its file: dropping the last handle deletes it (chunk files are
+/// per-run scratch, not durable artifacts — durable state lives in the
+/// result store).
+#[derive(Debug)]
+pub struct FileTriangle {
+    path: PathBuf,
+    n: usize,
+    budget_bytes: u64,
+    /// One FNV-64 per `TRC_BLOCK_VALUES`-value block (last block short).
+    checksums: Vec<u64>,
+    chunks_paged: AtomicU64,
+    bytes_paged: AtomicU64,
+}
+
+impl FileTriangle {
+    /// Open an existing `TRC1` file, validating magic, geometry and exact
+    /// file length, and loading the (small) trailing checksum table.
+    pub fn open(path: impl AsRef<Path>, budget_bytes: u64) -> Result<FileTriangle> {
+        let p = path.as_ref();
+        let mut f = File::open(p).map_err(|e| Error::io(p.display().to_string(), e))?;
+        let mut head = [0u8; TRC_HEADER_BYTES as usize];
+        f.read_exact(&mut head).map_err(|e| Error::io(p.display().to_string(), e))?;
+        if &head[..4] != TRC_MAGIC {
+            return Err(Error::parse("trc", p.display().to_string(), "bad magic"));
+        }
+        let n = u64::from_le_bytes(head[4..12].try_into().unwrap()) as usize;
+        let block = u64::from_le_bytes(head[12..20].try_into().unwrap()) as usize;
+        if n == 0 || n > 1 << 20 {
+            let msg = format!("implausible n = {n}");
+            return Err(Error::parse("trc", p.display().to_string(), msg));
+        }
+        if block != TRC_BLOCK_VALUES {
+            let msg = format!("checksum block {block}, want {TRC_BLOCK_VALUES}");
+            return Err(Error::parse("trc", p.display().to_string(), msg));
+        }
+        let count = row_start(n, n);
+        let nblocks = count.div_ceil(TRC_BLOCK_VALUES);
+        let want_len = TRC_HEADER_BYTES + (count * 4) as u64 + (nblocks * 8) as u64;
+        let got_len = f
+            .metadata()
+            .map_err(|e| Error::io(p.display().to_string(), e))?
+            .len();
+        if got_len != want_len {
+            let msg = format!("file is {got_len} bytes, want {want_len} for n = {n}");
+            return Err(Error::parse("trc", p.display().to_string(), msg));
+        }
+        f.seek(SeekFrom::Start(TRC_HEADER_BYTES + (count * 4) as u64))
+            .map_err(|e| Error::io(p.display().to_string(), e))?;
+        let mut table = vec![0u8; nblocks * 8];
+        f.read_exact(&mut table).map_err(|e| Error::io(p.display().to_string(), e))?;
+        let checksums = table
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(FileTriangle {
+            path: p.to_path_buf(),
+            n,
+            budget_bytes,
+            checksums,
+            chunks_paged: AtomicU64::new(0),
+            bytes_paged: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of objects (matrix edge).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total packed values `n(n-1)/2`.
+    #[inline]
+    pub fn count(&self) -> usize {
+        row_start(self.n, self.n)
+    }
+
+    /// The resident-bytes budget chunks are planned against.
+    #[inline]
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    /// Path of the backing chunk file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Chunks paged in since open (each [`load_chunk`](Self::load_chunk)
+    /// that touched the disk counts one).
+    pub fn chunks_paged(&self) -> u64 {
+        self.chunks_paged.load(Ordering::Relaxed)
+    }
+
+    /// Bytes read from disk since open (checksum-block granular).
+    pub fn bytes_paged(&self) -> u64 {
+        self.bytes_paged.load(Ordering::Relaxed)
+    }
+
+    /// Honest resident accounting for a file-backed triangle: at most one
+    /// budget's worth of values is ever resident, plus the checksum table.
+    pub fn resident_bytes(&self) -> usize {
+        let packed = self.count() * 4;
+        (self.budget_bytes as usize).min(packed) + self.checksums.len() * 8
+    }
+
+    /// Greedy chunk plan covering rows `[0, n)`: each range's packed bytes
+    /// fit the budget, row counts are multiples of `align` (except the
+    /// final range), and every range holds at least one `align` group even
+    /// if that group alone exceeds the budget — the plan must always make
+    /// progress.  `align > 1` exists for the tiled kernel, whose stripe
+    /// loop must not straddle a chunk boundary.
+    pub fn chunk_plan(&self, align: usize) -> Vec<(usize, usize)> {
+        let align = align.max(1);
+        let n = self.n;
+        let budget_values = (self.budget_bytes / 4) as usize;
+        let mut plan = Vec::new();
+        let mut r0 = 0usize;
+        while r0 < n {
+            let mut r1 = (r0 + align).min(n);
+            loop {
+                let next = (r1 + align).min(n);
+                if next == r1 {
+                    break;
+                }
+                if row_start(n, next) - row_start(n, r0) > budget_values {
+                    break;
+                }
+                r1 = next;
+            }
+            plan.push((r0, r1));
+            r0 = r1;
+        }
+        plan
+    }
+
+    /// Page rows `[r0, r1)` in from disk, verifying the FNV-64 of every
+    /// checksum block the range touches.  Reads are block-granular (the
+    /// checksum unit), so `bytes_paged` counts what actually crossed the
+    /// disk boundary, not just the values requested.
+    pub fn load_chunk(&self, r0: usize, r1: usize) -> Result<TriangleChunk> {
+        let n = self.n;
+        if r0 > r1 || r1 > n {
+            return Err(Error::Config(format!("chunk rows [{r0},{r1}) out of range for n = {n}")));
+        }
+        let v0 = row_start(n, r0);
+        let v1 = row_start(n, r1);
+        if v0 == v1 {
+            return TriangleChunk::from_values(n, r0, r1, Vec::new());
+        }
+        let count = self.count();
+        let b0 = v0 / TRC_BLOCK_VALUES;
+        let b1 = v1.div_ceil(TRC_BLOCK_VALUES);
+        let lo = b0 * TRC_BLOCK_VALUES;
+        let hi = (b1 * TRC_BLOCK_VALUES).min(count);
+        let p = &self.path;
+        let mut f = File::open(p).map_err(|e| Error::io(p.display().to_string(), e))?;
+        f.seek(SeekFrom::Start(TRC_HEADER_BYTES + (lo * 4) as u64))
+            .map_err(|e| Error::io(p.display().to_string(), e))?;
+        let mut bytes = vec![0u8; (hi - lo) * 4];
+        f.read_exact(&mut bytes).map_err(|e| Error::io(p.display().to_string(), e))?;
+        for b in b0..b1 {
+            let s = (b * TRC_BLOCK_VALUES - lo) * 4;
+            let e = (((b + 1) * TRC_BLOCK_VALUES).min(count) - lo) * 4;
+            let got = fnv64_fold(FNV64_OFFSET, &bytes[s..e]);
+            if got != self.checksums[b] {
+                return Err(Error::InvalidInput(format!(
+                    "triangle chunk file {}: checksum mismatch in block {b} \
+                     ({got:#018x} vs {:#018x}) — file corrupt, re-ingest the dataset",
+                    p.display(),
+                    self.checksums[b]
+                )));
+            }
+        }
+        let values: Vec<f32> = bytes[(v0 - lo) * 4..(v1 - lo) * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.chunks_paged.fetch_add(1, Ordering::Relaxed);
+        self.bytes_paged.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        TriangleChunk::from_values(n, r0, r1, values)
+    }
+}
+
+impl Drop for FileTriangle {
+    fn drop(&mut self) {
+        // Per-run scratch: best-effort cleanup, never fail a drop.
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Streaming `TRC1` producer: push values in scipy `pdist` order, finish
+/// with the budget the resulting [`FileTriangle`] pages under.  Follows
+/// the spill-segment discipline (`store/spill.rs`): write to `<path>.tmp`,
+/// fsync, atomically rename — a crash mid-write never leaves a file that
+/// [`FileTriangle::open`] would accept.
+pub struct TriangleWriter {
+    final_path: PathBuf,
+    tmp_path: PathBuf,
+    w: BufWriter<File>,
+    n: usize,
+    written: usize,
+    checksums: Vec<u64>,
+    block_fill: usize,
+    hash: u64,
+}
+
+impl TriangleWriter {
+    /// Start a `TRC1` file for an `n`-object triangle at `path`.
+    pub fn create(path: impl AsRef<Path>, n: usize) -> Result<TriangleWriter> {
+        let final_path = path.as_ref().to_path_buf();
+        let tmp_path = final_path.with_extension("tmp");
+        let f = File::create(&tmp_path)
+            .map_err(|e| Error::io(tmp_path.display().to_string(), e))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(TRC_MAGIC)
+            .and_then(|_| w.write_all(&(n as u64).to_le_bytes()))
+            .and_then(|_| w.write_all(&(TRC_BLOCK_VALUES as u64).to_le_bytes()))
+            .map_err(|e| Error::io(tmp_path.display().to_string(), e))?;
+        Ok(TriangleWriter {
+            final_path,
+            tmp_path,
+            w,
+            n,
+            written: 0,
+            checksums: Vec::new(),
+            block_fill: 0,
+            hash: FNV64_OFFSET,
+        })
+    }
+
+    /// Append the next packed value (scipy `pdist` order).
+    pub fn push(&mut self, v: f32) -> Result<()> {
+        let b = v.to_le_bytes();
+        self.hash = fnv64_fold(self.hash, &b);
+        self.w
+            .write_all(&b)
+            .map_err(|e| Error::io(self.tmp_path.display().to_string(), e))?;
+        self.written += 1;
+        self.block_fill += 1;
+        if self.block_fill == TRC_BLOCK_VALUES {
+            self.checksums.push(self.hash);
+            self.hash = FNV64_OFFSET;
+            self.block_fill = 0;
+        }
+        Ok(())
+    }
+
+    /// Append a run of packed values.
+    pub fn push_all(&mut self, vals: &[f32]) -> Result<()> {
+        for &v in vals {
+            self.push(v)?;
+        }
+        Ok(())
+    }
+
+    /// Values pushed so far.
+    pub fn written(&self) -> usize {
+        self.written
+    }
+
+    /// Seal the file (checksum table, fsync, rename) and open it with the
+    /// given paging budget.
+    pub fn finish(mut self, budget_bytes: u64) -> Result<FileTriangle> {
+        let want = row_start(self.n, self.n);
+        if self.written != want {
+            return Err(Error::InvalidInput(format!(
+                "triangle ended early: got {} of {want} distances for n = {}",
+                self.written, self.n
+            )));
+        }
+        if self.block_fill > 0 {
+            self.checksums.push(self.hash);
+        }
+        for &c in &self.checksums {
+            self.w
+                .write_all(&c.to_le_bytes())
+                .map_err(|e| Error::io(self.tmp_path.display().to_string(), e))?;
+        }
+        self.w
+            .flush()
+            .map_err(|e| Error::io(self.tmp_path.display().to_string(), e))?;
+        self.w
+            .get_ref()
+            .sync_all()
+            .map_err(|e| Error::io(self.tmp_path.display().to_string(), e))?;
+        std::fs::rename(&self.tmp_path, &self.final_path)
+            .map_err(|e| Error::io(self.final_path.display().to_string(), e))?;
+        FileTriangle::open(&self.final_path, budget_bytes)
+    }
+}
+
+/// Unique scratch path for a chunk file (pid + process-wide sequence, in
+/// the system temp dir).
+pub fn scratch_triangle_path(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "permanova_trc_{tag}_{}_{seq}.trc",
+        std::process::id()
+    ))
+}
+
+/// Where a dataset's packed triangle lives: the seam every layer above the
+/// kernels now carries.
+///
+/// `Resident` is the PR 5–8 world — the whole triangle in one
+/// [`CondensedMatrix`], shared by `Arc`.  `FileBacked` is the out-of-core
+/// tier: rows page through [`FileTriangle::load_chunk`] under a byte
+/// budget.  Both are cheap to clone (Arc handles).
+#[derive(Clone, Debug)]
+pub enum TriangleStorage {
+    /// Whole triangle resident in memory.
+    Resident(Arc<CondensedMatrix>),
+    /// Triangle paged from a checksummed chunk file under a byte budget.
+    FileBacked(Arc<FileTriangle>),
+}
+
+impl TriangleStorage {
+    /// Number of objects (matrix edge).
+    pub fn n(&self) -> usize {
+        match self {
+            TriangleStorage::Resident(t) => t.n(),
+            TriangleStorage::FileBacked(f) => f.n(),
+        }
+    }
+
+    /// The resident triangle, if this storage is resident.
+    pub fn as_resident(&self) -> Option<&Arc<CondensedMatrix>> {
+        match self {
+            TriangleStorage::Resident(t) => Some(t),
+            TriangleStorage::FileBacked(_) => None,
+        }
+    }
+
+    /// The file tier, if this storage is file-backed.
+    pub fn as_file(&self) -> Option<&Arc<FileTriangle>> {
+        match self {
+            TriangleStorage::Resident(_) => None,
+            TriangleStorage::FileBacked(f) => Some(f),
+        }
+    }
+
+    /// True when rows page from disk.
+    pub fn is_file_backed(&self) -> bool {
+        matches!(self, TriangleStorage::FileBacked(_))
+    }
+
+    /// Honest resident accounting: full buffer + offsets when resident; at
+    /// most one budget of values + the checksum table when file-backed.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            TriangleStorage::Resident(t) => t.resident_bytes(),
+            TriangleStorage::FileBacked(f) => f.resident_bytes(),
+        }
+    }
+
+    /// Paging counters `(chunks_paged, bytes_paged)`; `None` when resident.
+    pub fn paging(&self) -> Option<(u64, u64)> {
+        self.as_file().map(|f| (f.chunks_paged(), f.bytes_paged()))
+    }
+}
+
+/// Write a resident triangle out as a chunk file (scratch path) and hand
+/// back file-backed storage paging under `budget_bytes`.  Test and bench
+/// helper: the canonical producer path is ingest spill
+/// (`TriangleSink::with_budget`), which never materializes the resident
+/// buffer at all.
+pub fn file_backed_from(tri: &CondensedMatrix, budget_bytes: u64) -> Result<TriangleStorage> {
+    let mut w = TriangleWriter::create(scratch_triangle_path("copy"), tri.n())?;
+    w.push_all(tri.values())?;
+    Ok(TriangleStorage::FileBacked(Arc::new(w.finish(budget_bytes)?)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmat::random_euclidean_condensed;
+    use crate::store::fnv64_bytes;
+
+    fn file_of(tri: &CondensedMatrix, budget: u64) -> FileTriangle {
+        let mut w = TriangleWriter::create(scratch_triangle_path("test"), tri.n()).unwrap();
+        w.push_all(tri.values()).unwrap();
+        w.finish(budget).unwrap()
+    }
+
+    #[test]
+    fn row_start_matches_offsets() {
+        for n in [1usize, 2, 3, 17, 64] {
+            let mut acc = 0usize;
+            for r in 0..n {
+                assert_eq!(row_start(n, r), acc, "n={n} r={r}");
+                acc += n - 1 - r;
+            }
+            assert_eq!(row_start(n, n), n * (n - 1) / 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn write_then_chunked_read_is_bitwise() {
+        let tri = random_euclidean_condensed(61, 5, 9);
+        let ft = file_of(&tri, 400); // 100 values per chunk: many chunks
+        assert_eq!(ft.n(), 61);
+        let plan = ft.chunk_plan(1);
+        assert!(plan.len() >= 4, "budget forces paging: {plan:?}");
+        let mut got: Vec<u32> = Vec::new();
+        for &(r0, r1) in &plan {
+            let chunk = ft.load_chunk(r0, r1).unwrap();
+            for i in r0..r1 {
+                assert_eq!(chunk.row(i), tri.row(i), "row {i}");
+            }
+            got.extend(chunk.values().iter().map(|v| v.to_bits()));
+        }
+        let want: Vec<u32> = tri.values().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+        assert_eq!(ft.chunks_paged(), plan.len() as u64);
+        assert!(ft.bytes_paged() >= (tri.values().len() * 4) as u64);
+    }
+
+    #[test]
+    fn chunk_plan_covers_aligned_and_respects_budget() {
+        let tri = random_euclidean_condensed(50, 4, 3);
+        let ft = file_of(&tri, 1000); // 250 values per chunk
+        for align in [1usize, 4, 8] {
+            let plan = ft.chunk_plan(align);
+            assert_eq!(plan.first().unwrap().0, 0);
+            assert_eq!(plan.last().unwrap().1, 50);
+            for w in plan.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            for (idx, &(r0, r1)) in plan.iter().enumerate() {
+                if idx + 1 < plan.len() {
+                    assert_eq!((r1 - r0) % align, 0, "align {align}: [{r0},{r1})");
+                }
+                let bytes = (row_start(50, r1) - row_start(50, r0)) * 4;
+                // Within budget unless a single align group already overflows.
+                assert!(
+                    bytes <= 1000 || r1 - r0 <= align,
+                    "align {align}: [{r0},{r1}) = {bytes} bytes"
+                );
+            }
+        }
+        // A huge budget yields a single chunk.
+        let ft = file_of(&tri, u64::MAX);
+        assert_eq!(ft.chunk_plan(1), vec![(0, 50)]);
+    }
+
+    #[test]
+    fn checksum_table_matches_whole_block_fnv() {
+        // Geometry sanity at a sub-block size: one short block.
+        let tri = random_euclidean_condensed(33, 4, 5);
+        let ft = file_of(&tri, u64::MAX);
+        let bytes: Vec<u8> = tri.values().iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(ft.checksums.len(), 1);
+        assert_eq!(ft.checksums[0], fnv64_bytes(&bytes));
+    }
+
+    #[test]
+    fn corrupt_value_is_a_checksum_error() {
+        let tri = random_euclidean_condensed(40, 4, 11);
+        let ft = file_of(&tri, 600);
+        // Flip one payload byte in place.
+        let path = ft.path().to_path_buf();
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[TRC_HEADER_BYTES as usize + 41] ^= 0x40;
+        std::fs::write(&path, raw).unwrap();
+        let e = ft.load_chunk(0, ft.n()).unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch"), "{e}");
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_and_truncation() {
+        let tri = random_euclidean_condensed(20, 3, 2);
+        let ft = file_of(&tri, 1 << 20);
+        let path = ft.path().to_path_buf();
+        let raw = std::fs::read(&path).unwrap();
+
+        let bad = scratch_triangle_path("badmagic");
+        let mut b = raw.clone();
+        b[0] = b'X';
+        std::fs::write(&bad, &b).unwrap();
+        let e = FileTriangle::open(&bad, 1024).unwrap_err().to_string();
+        assert!(e.contains("bad magic"), "{e}");
+        std::fs::remove_file(&bad).unwrap();
+
+        let short = scratch_triangle_path("short");
+        std::fs::write(&short, &raw[..raw.len() - 3]).unwrap();
+        let e = FileTriangle::open(&short, 1024).unwrap_err().to_string();
+        assert!(e.contains("bytes"), "{e}");
+        std::fs::remove_file(&short).unwrap();
+    }
+
+    #[test]
+    fn writer_rejects_early_finish() {
+        let mut w = TriangleWriter::create(scratch_triangle_path("early"), 5).unwrap();
+        w.push_all(&[1.0, 2.0, 3.0]).unwrap();
+        let e = w.finish(1024).unwrap_err().to_string();
+        assert!(e.contains("ended early"), "{e}");
+    }
+
+    #[test]
+    fn drop_removes_the_backing_file() {
+        let tri = random_euclidean_condensed(10, 3, 1);
+        let ft = file_of(&tri, 1024);
+        let path = ft.path().to_path_buf();
+        assert!(path.exists());
+        drop(ft);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn storage_accessors_and_accounting() {
+        let tri = random_euclidean_condensed(30, 4, 7);
+        let resident = TriangleStorage::Resident(Arc::new(tri.clone()));
+        assert_eq!(resident.n(), 30);
+        assert!(!resident.is_file_backed());
+        assert!(resident.as_resident().is_some());
+        assert!(resident.paging().is_none());
+        assert_eq!(resident.resident_bytes(), tri.resident_bytes());
+
+        let fb = file_backed_from(&tri, 512).unwrap();
+        assert_eq!(fb.n(), 30);
+        assert!(fb.is_file_backed());
+        assert!(fb.as_resident().is_none());
+        assert_eq!(fb.paging(), Some((0, 0)));
+        // Budget-capped values + checksum table, far below the full buffer.
+        assert!(fb.resident_bytes() < tri.resident_bytes());
+        let f = fb.as_file().unwrap();
+        f.load_chunk(0, 30).unwrap();
+        let (chunks, bytes) = fb.paging().unwrap();
+        assert_eq!(chunks, 1);
+        assert!(bytes >= (tri.values().len() * 4) as u64);
+    }
+
+    #[test]
+    fn empty_range_loads_without_io() {
+        let tri = random_euclidean_condensed(12, 3, 4);
+        let ft = file_of(&tri, 1024);
+        let c = ft.load_chunk(5, 5).unwrap();
+        assert_eq!(c.values().len(), 0);
+        assert_eq!(ft.chunks_paged(), 0);
+    }
+}

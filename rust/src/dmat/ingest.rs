@@ -20,7 +20,9 @@
 
 use std::io::{BufRead, BufReader, Read};
 use std::path::Path;
+use std::sync::Arc;
 
+use super::chunked::{scratch_triangle_path, TriangleStorage, TriangleWriter};
 use super::condensed::CondensedMatrix;
 use super::PDM_MAGIC;
 use crate::error::{Error, Result};
@@ -57,13 +59,61 @@ pub struct TriangleSink {
     n: usize,
     tol: f32,
     values: Vec<f32>,
+    /// Spill mode (out-of-core ingest): once the buffer would exceed this
+    /// budget, values divert to a checksummed chunk file.  `None` keeps
+    /// the PR 7 fully-resident behavior.
+    budget_bytes: Option<u64>,
+    /// Packed values already flushed to `writer` (the buffer holds the
+    /// suffix `[flushed..)` of the packed order).
+    flushed: usize,
+    /// Lazily created on first flush, so an under-budget source never
+    /// touches the disk.
+    writer: Option<TriangleWriter>,
 }
 
 impl TriangleSink {
     /// A sink for an `n`-object matrix with symmetry/diagonal tolerance
     /// `tol`.
     pub fn new(n: usize, tol: f32) -> TriangleSink {
-        TriangleSink { n, tol, values: Vec::with_capacity(n * n.saturating_sub(1) / 2) }
+        TriangleSink {
+            n,
+            tol,
+            values: Vec::with_capacity(n * n.saturating_sub(1) / 2),
+            budget_bytes: None,
+            flushed: 0,
+            writer: None,
+        }
+    }
+
+    /// A spill-capable sink: the resident buffer never exceeds
+    /// `budget_bytes`; overflow streams to a scratch chunk file and
+    /// [`finish_storage`](Self::finish_storage) hands back file-backed
+    /// storage.  **Validation caveat** (documented honestly): a lower
+    /// entry's mirror check only runs while its upper twin is still in
+    /// the resident window — mirrors already flushed to disk are trusted.
+    /// Upper-triangle-only producers (the synthetic generators) lose
+    /// nothing; a square source with an asymmetry more than one budget
+    /// behind the stream head is not detected here.
+    pub fn with_budget(n: usize, tol: f32, budget_bytes: u64) -> TriangleSink {
+        let mut s = TriangleSink::new(n, tol);
+        s.values = Vec::new(); // don't pre-reserve the full triangle
+        s.budget_bytes = Some(budget_bytes);
+        s
+    }
+
+    /// Divert the buffered values to the chunk writer (spill mode only).
+    fn flush_to_writer(&mut self) -> Result<()> {
+        if self.writer.is_none() {
+            self.writer = Some(TriangleWriter::create(
+                scratch_triangle_path("ingest"),
+                self.n,
+            )?);
+        }
+        let w = self.writer.as_mut().expect("just created");
+        w.push_all(&self.values)?;
+        self.flushed += self.values.len();
+        self.values.clear();
+        Ok(())
     }
 
     /// Ingest entry `(r, c) = v`.  Upper entries are appended to the
@@ -89,24 +139,50 @@ impl TriangleSink {
         if c > r {
             // Row-major streaming invariant: this upper entry lands exactly
             // at the next packed slot.
-            debug_assert_eq!(self.values.len(), pack_index(self.n, r, c));
+            debug_assert_eq!(
+                self.flushed + self.values.len(),
+                pack_index(self.n, r, c)
+            );
             self.values.push(v);
+            if let Some(budget) = self.budget_bytes {
+                if (self.values.len() * 4) as u64 > budget {
+                    self.flush_to_writer()?;
+                }
+            }
         } else {
-            // Mirror check: row `c` already streamed, so the upper twin is
-            // in the buffer.
-            let mirror = self.values[pack_index(self.n, c, r)];
-            if (v - mirror).abs() > self.tol {
-                return Err(Error::InvalidInput(format!(
-                    "asymmetry at ({c},{r}): {mirror} vs {v} (tol {})",
-                    self.tol
-                )));
+            // Mirror check: row `c` already streamed.  In spill mode the
+            // twin may already be on disk; only the resident window is
+            // checkable (see `with_budget`).
+            let idx = pack_index(self.n, c, r);
+            if idx >= self.flushed {
+                let mirror = self.values[idx - self.flushed];
+                if (v - mirror).abs() > self.tol {
+                    return Err(Error::InvalidInput(format!(
+                        "asymmetry at ({c},{r}): {mirror} vs {v} (tol {})",
+                        self.tol
+                    )));
+                }
             }
         }
         Ok(())
     }
 
-    /// Finish: every upper entry must have arrived.
+    /// True once any value has spilled to the chunk file.
+    pub fn spilled(&self) -> bool {
+        self.flushed > 0
+    }
+
+    /// Finish fully resident: every upper entry must have arrived.  Only
+    /// valid for non-spilled sinks — spill-capable callers use
+    /// [`finish_storage`](Self::finish_storage).
     pub fn finish(self) -> Result<CondensedMatrix> {
+        if self.spilled() {
+            return Err(Error::Config(
+                "triangle spilled to disk during ingest; finish_storage() is \
+                 the only valid completion for a budgeted sink"
+                    .to_string(),
+            ));
+        }
         let want = self.n * self.n.saturating_sub(1) / 2;
         if self.values.len() != want {
             return Err(Error::InvalidInput(format!(
@@ -116,6 +192,26 @@ impl TriangleSink {
             )));
         }
         CondensedMatrix::from_values(self.n, self.values)
+    }
+
+    /// Finish as [`TriangleStorage`]: resident when everything fit the
+    /// budget (or no budget was set), file-backed when values spilled.
+    pub fn finish_storage(mut self) -> Result<TriangleStorage> {
+        if !self.spilled() {
+            return Ok(TriangleStorage::Resident(Arc::new(self.finish()?)));
+        }
+        let want = self.n * self.n.saturating_sub(1) / 2;
+        if self.flushed + self.values.len() != want {
+            return Err(Error::InvalidInput(format!(
+                "matrix ended early: got {} of {want} distances for n = {}",
+                self.flushed + self.values.len(),
+                self.n
+            )));
+        }
+        self.flush_to_writer()?;
+        let budget = self.budget_bytes.unwrap_or(0);
+        let file = self.writer.expect("spilled sink has a writer").finish(budget)?;
+        Ok(TriangleStorage::FileBacked(Arc::new(file)))
     }
 }
 
@@ -129,6 +225,30 @@ pub fn read_tsv_condensed(
     path: impl AsRef<Path>,
     tol: f32,
 ) -> Result<(CondensedMatrix, Vec<String>)> {
+    let (sink, ids) = read_tsv_sink(path, tol, None)?;
+    Ok((sink.finish()?, ids))
+}
+
+/// TSV reader with a resident-bytes budget: same streaming loop as
+/// [`read_tsv_condensed`], but an over-budget matrix spills to a chunk
+/// file and comes back [`TriangleStorage::FileBacked`] instead of ever
+/// materializing the full buffer.
+pub fn read_tsv_storage(
+    path: impl AsRef<Path>,
+    tol: f32,
+    budget_bytes: u64,
+) -> Result<(TriangleStorage, Vec<String>)> {
+    let (sink, ids) = read_tsv_sink(path, tol, Some(budget_bytes))?;
+    Ok((sink.finish_storage()?, ids))
+}
+
+/// The one TSV streaming loop both public readers share: parse, feed the
+/// sink, return it unfinished.
+fn read_tsv_sink(
+    path: impl AsRef<Path>,
+    tol: f32,
+    budget_bytes: Option<u64>,
+) -> Result<(TriangleSink, Vec<String>)> {
     let p = path.as_ref();
     let f = std::fs::File::open(p).map_err(|e| Error::io(p.display().to_string(), e))?;
     let mut lines = BufReader::new(f).lines();
@@ -141,7 +261,10 @@ pub fn read_tsv_condensed(
     if n == 0 {
         return Err(Error::parse("dmat-tsv", p.display().to_string(), "no ids in header"));
     }
-    let mut sink = TriangleSink::new(n, tol);
+    let mut sink = match budget_bytes {
+        Some(b) => TriangleSink::with_budget(n, tol, b),
+        None => TriangleSink::new(n, tol),
+    };
     let mut row = 0usize;
     for line in lines {
         let line = line.map_err(|e| Error::io(p.display().to_string(), e))?;
@@ -195,13 +318,32 @@ pub fn read_tsv_condensed(
             format!("matrix ended early: {row} rows, want {n}"),
         ));
     }
-    Ok((sink.finish()?, ids))
+    Ok((sink, ids))
 }
 
 /// Read the `PDM1` binary format straight into the packed triangle: one
 /// `n*4`-byte row buffer at a time, validated as it streams — the dense
 /// `n*n` staging allocation of the oracle reader never exists.
 pub fn read_pdm_condensed(path: impl AsRef<Path>, tol: f32) -> Result<CondensedMatrix> {
+    read_pdm_sink(path, tol, None)?.finish()
+}
+
+/// `PDM1` reader with a resident-bytes budget: over-budget matrices spill
+/// to a chunk file and come back [`TriangleStorage::FileBacked`].
+pub fn read_pdm_storage(
+    path: impl AsRef<Path>,
+    tol: f32,
+    budget_bytes: u64,
+) -> Result<TriangleStorage> {
+    read_pdm_sink(path, tol, Some(budget_bytes))?.finish_storage()
+}
+
+/// The one `PDM1` streaming loop both public readers share.
+fn read_pdm_sink(
+    path: impl AsRef<Path>,
+    tol: f32,
+    budget_bytes: Option<u64>,
+) -> Result<TriangleSink> {
     let p = path.as_ref();
     let f = std::fs::File::open(p).map_err(|e| Error::io(p.display().to_string(), e))?;
     let mut r = BufReader::new(f);
@@ -219,7 +361,10 @@ pub fn read_pdm_condensed(path: impl AsRef<Path>, tol: f32) -> Result<CondensedM
         let msg = format!("implausible n = {n}");
         return Err(Error::parse("pdm", p.display().to_string(), msg));
     }
-    let mut sink = TriangleSink::new(n, tol);
+    let mut sink = match budget_bytes {
+        Some(b) => TriangleSink::with_budget(n, tol, b),
+        None => TriangleSink::new(n, tol),
+    };
     let mut rowbuf = vec![0u8; n * 4];
     for i in 0..n {
         r.read_exact(&mut rowbuf).map_err(|e| {
@@ -229,7 +374,31 @@ pub fn read_pdm_condensed(path: impl AsRef<Path>, tol: f32) -> Result<CondensedM
             sink.entry(i, j, f32::from_le_bytes([c[0], c[1], c[2], c[3]]))?;
         }
     }
-    sink.finish()
+    Ok(sink)
+}
+
+/// The random point cloud both synthetic generators share: `n` points in
+/// `dim` dimensions, RNG consumed in exactly the order
+/// `DistanceMatrix::random_euclidean` established.
+fn euclidean_points(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..n * dim)
+        .map(|_| {
+            let s: f32 = (0..4).map(|_| rng.next_f32()).sum::<f32>() - 2.0;
+            s
+        })
+        .collect()
+}
+
+/// The exact per-pair f32 operation sequence of the dense generator.
+#[inline]
+fn pair_dist(pts: &[f32], dim: usize, i: usize, j: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for d in 0..dim {
+        let diff = pts[i * dim + d] - pts[j * dim + d];
+        acc += diff * diff;
+    }
+    acc.sqrt()
 }
 
 /// Euclidean distances between `n` random points in `dim` dimensions,
@@ -239,23 +408,12 @@ pub fn read_pdm_condensed(path: impl AsRef<Path>, tol: f32) -> Result<CondensedM
 /// bit-identical to packing the dense generator's output — without the
 /// dense matrix ever existing.
 pub fn random_euclidean_condensed(n: usize, dim: usize, seed: u64) -> CondensedMatrix {
-    let mut rng = Xoshiro256pp::new(seed);
-    let pts: Vec<f32> = (0..n * dim)
-        .map(|_| {
-            let s: f32 = (0..4).map(|_| rng.next_f32()).sum::<f32>() - 2.0;
-            s
-        })
-        .collect();
+    let pts = euclidean_points(n, dim, seed);
     let mut values = Vec::with_capacity(n * n.saturating_sub(1) / 2);
     let mut maxd = 0.0f32;
     for i in 0..n {
         for j in (i + 1)..n {
-            let mut acc = 0.0f32;
-            for d in 0..dim {
-                let diff = pts[i * dim + d] - pts[j * dim + d];
-                acc += diff * diff;
-            }
-            let dist = acc.sqrt();
+            let dist = pair_dist(&pts, dim, i, j);
             maxd = maxd.max(dist);
             values.push(dist);
         }
@@ -267,6 +425,44 @@ pub fn random_euclidean_condensed(n: usize, dim: usize, seed: u64) -> CondensedM
     }
     CondensedMatrix::from_values(n, values)
         .expect("generator emits exactly n(n-1)/2 distances")
+}
+
+/// Budgeted synthetic generator: under-budget triangles stay resident
+/// (identical to [`random_euclidean_condensed`]); over-budget triangles
+/// stream to a chunk file in **two passes** over the pair loop — pass 1
+/// finds the normalization max, pass 2 recomputes each distance and
+/// writes `dist / maxd`.  Only the `n·dim` point cloud is ever resident.
+/// Both passes run [`pair_dist`]'s exact f32 sequence on the same
+/// operands and the final division matches the resident in-place
+/// normalization, so the file's values are bit-identical to the resident
+/// generator's.
+pub fn random_euclidean_storage(
+    n: usize,
+    dim: usize,
+    seed: u64,
+    budget_bytes: u64,
+) -> Result<TriangleStorage> {
+    let packed_bytes = (n * n.saturating_sub(1) / 2 * 4) as u64;
+    if budget_bytes == 0 || packed_bytes <= budget_bytes {
+        return Ok(TriangleStorage::Resident(Arc::new(random_euclidean_condensed(
+            n, dim, seed,
+        ))));
+    }
+    let pts = euclidean_points(n, dim, seed);
+    let mut maxd = 0.0f32;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            maxd = maxd.max(pair_dist(&pts, dim, i, j));
+        }
+    }
+    let mut w = TriangleWriter::create(scratch_triangle_path("synth"), n)?;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dist = pair_dist(&pts, dim, i, j);
+            w.push(if maxd > 0.0 { dist / maxd } else { dist })?;
+        }
+    }
+    Ok(TriangleStorage::FileBacked(Arc::new(w.finish(budget_bytes)?)))
 }
 
 #[cfg(test)]
@@ -333,6 +529,82 @@ mod tests {
             let streamed = read_pdm_condensed(&pdm, 1e-6).unwrap();
             assert_eq!(streamed.values(), oracle.values(), "pdm n={n}");
         }
+    }
+
+    #[test]
+    fn budgeted_loaders_spill_and_stay_bitwise() {
+        let dir = std::env::temp_dir().join("permanova_apu_test_ingest_spill");
+        std::fs::create_dir_all(&dir).unwrap();
+        let n = 40usize;
+        let dense = DistanceMatrix::random_euclidean(n, 6, 77);
+        let oracle = CondensedMatrix::from_dense(&dense);
+        let want: Vec<u32> = oracle.values().iter().map(|v| v.to_bits()).collect();
+        let tiny = 256u64; // far below n(n-1)/2 * 4 = 3120
+        let read_back = |s: &TriangleStorage| -> Vec<u32> {
+            let f = s.as_file().expect("over-budget source is file-backed");
+            f.load_chunk(0, f.n())
+                .unwrap()
+                .values()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        };
+
+        let tsv = dir.join("spill.tsv");
+        dense.write_tsv(&tsv, None).unwrap();
+        let (storage, ids) = read_tsv_storage(&tsv, 1e-6, tiny).unwrap();
+        assert_eq!(ids.len(), n);
+        assert_eq!(read_back(&storage), want, "tsv");
+
+        let pdm = dir.join("spill.pdm");
+        dense.write_binary(&pdm).unwrap();
+        let storage = read_pdm_storage(&pdm, 1e-6, tiny).unwrap();
+        assert_eq!(read_back(&storage), want, "pdm");
+
+        let synth = random_euclidean_storage(n, 6, 77, tiny).unwrap();
+        assert_eq!(read_back(&synth), want, "synthetic");
+    }
+
+    #[test]
+    fn under_budget_loaders_stay_resident() {
+        let dir = std::env::temp_dir().join("permanova_apu_test_ingest_spill");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dense = DistanceMatrix::random_euclidean(12, 4, 5);
+        let tsv = dir.join("resident.tsv");
+        dense.write_tsv(&tsv, None).unwrap();
+        let (storage, _) = read_tsv_storage(&tsv, 1e-6, 1 << 20).unwrap();
+        assert!(!storage.is_file_backed());
+        let synth = random_euclidean_storage(12, 4, 5, 1 << 20).unwrap();
+        assert!(!synth.is_file_backed());
+        // Budget 0 means unbounded for the synthetic generator.
+        assert!(!random_euclidean_storage(12, 4, 5, 0).unwrap().is_file_backed());
+    }
+
+    #[test]
+    fn spilled_sink_rejects_plain_finish_and_early_end() {
+        let mut s = TriangleSink::with_budget(4, 1e-6, 4); // one value per flush
+        s.entry(0, 1, 1.0).unwrap();
+        s.entry(0, 2, 2.0).unwrap();
+        assert!(s.spilled());
+        let e = s.finish().unwrap_err().to_string();
+        assert!(e.contains("finish_storage"), "{e}");
+
+        let mut s = TriangleSink::with_budget(4, 1e-6, 4);
+        s.entry(0, 1, 1.0).unwrap();
+        s.entry(0, 2, 2.0).unwrap();
+        let e = s.finish_storage().unwrap_err().to_string();
+        assert!(e.contains("ended early"), "{e}");
+    }
+
+    #[test]
+    fn spill_mirror_check_covers_the_resident_window() {
+        // Asymmetry against a still-resident mirror is caught even in
+        // spill mode.
+        let mut s = TriangleSink::with_budget(3, 1e-6, 1 << 20);
+        s.entry(0, 1, 1.0).unwrap();
+        s.entry(0, 2, 2.0).unwrap();
+        let e = s.entry(1, 0, 9.0).unwrap_err().to_string();
+        assert!(e.contains("asymmetry"), "{e}");
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //! * the packed upper-triangle [`CondensedMatrix`] / [`CondensedView`]
 //!   ([`condensed`]), the **canonical kernel operand**: every permutation
 //!   kernel sweeps the packed rows, at half the dense footprint;
+//! * the out-of-core tier ([`chunked`]): [`TriangleStorage`] routes the
+//!   triangle either to the resident buffer or to a checksummed chunk
+//!   file paged under `--max-resident-bytes`, so `n` can exceed RAM;
 //! * validation of the PERMANOVA input contract (square, symmetric, zero
 //!   diagonal, non-negative, finite);
 //! * conversion to/from *condensed* form (the upper-triangle vector scipy
@@ -16,13 +19,19 @@
 //! * Principal Coordinates Analysis ([`pcoa`]) — the embedding step the
 //!   PERMANOVA workflow pairs with its distance matrices.
 
+pub mod chunked;
 pub mod condensed;
 pub mod ingest;
 pub mod pcoa;
 
+pub use chunked::{
+    file_backed_from, scratch_triangle_path, FileTriangle, TriangleChunk, TriangleStorage,
+    TriangleWriter, TRC_BLOCK_VALUES, TRC_MAGIC,
+};
 pub use condensed::{CondensedMatrix, CondensedView};
 pub use ingest::{
-    random_euclidean_condensed, read_pdm_condensed, read_tsv_condensed, TriangleSink,
+    random_euclidean_condensed, random_euclidean_storage, read_pdm_condensed,
+    read_pdm_storage, read_tsv_condensed, read_tsv_storage, TriangleSink,
 };
 pub use pcoa::{jacobi_eigh, jacobi_eigh_in_place, pcoa, Pcoa};
 

@@ -15,9 +15,15 @@
 //! available parallelism.
 
 use super::grouping::Grouping;
-use super::kernels::{sw_brute_block, sw_one, SwAlgorithm, DEFAULT_PERM_BLOCK};
-use crate::backend::shard::{for_each_block, run_sharded, run_sharded_with, ShardSpec};
-use crate::dmat::{CondensedMatrix, DistanceMatrix};
+use super::kernels::{
+    chunk_align, sw_brute_block, sw_brute_block_rows, sw_one, sw_rows, SwAlgorithm,
+    DEFAULT_PERM_BLOCK,
+};
+use crate::backend::shard::{
+    for_each_block, run_chunk_sweep, run_sharded, run_sharded_with, ShardSpec,
+};
+use crate::dmat::{CondensedMatrix, DistanceMatrix, FileTriangle};
+use crate::error::Result;
 use crate::rng::PermutationPlan;
 
 /// Resolve a thread-count request (0 = all available).
@@ -145,6 +151,100 @@ pub fn sw_plan_range_blocked(
         },
     );
     out
+}
+
+/// [`sw_plan_range`] over a **file-backed** triangle: the chunk-major loop
+/// inversion of the out-of-core tier.  Instead of each permutation sweeping
+/// the whole triangle, each paged chunk is swept by *every* permutation
+/// before the next chunk is read — one disk read per chunk per batch.
+///
+/// Bitwise contract: every lane accumulates rows in ascending order into a
+/// carried `out[j]` (zeroed once, before the first chunk), so concatenating
+/// the chunk sweeps replays the resident kernel's exact f32 op sequence.
+/// Chunk boundaries come from [`FileTriangle::chunk_plan`] aligned to
+/// [`chunk_align`] (tile stripes for the tiled kernel), so no chunk splits
+/// a kernel's internal accumulation unit.  Each worker refills its scratch
+/// label row per chunk — `PermutationPlan::fill` is a pure function of the
+/// index, so the labels are identical every time.
+pub fn sw_plan_range_chunked(
+    file: &FileTriangle,
+    plan: &PermutationPlan,
+    start: usize,
+    count: usize,
+    inv_group_sizes: &[f32],
+    algo: SwAlgorithm,
+    spec: &ShardSpec,
+) -> Result<Vec<f32>> {
+    let n = file.n();
+    assert_eq!(plan.n(), n, "plan/matrix size mismatch");
+    let mut out = vec![0.0f32; count];
+    run_chunk_sweep(
+        spec,
+        &mut out,
+        &file.chunk_plan(chunk_align(algo)),
+        |r0, r1| file.load_chunk(r0, r1),
+        || vec![0u32; n],
+        |row, chunk, r0, r1, lo, slice| {
+            for (j, o) in slice.iter_mut().enumerate() {
+                plan.fill(start + lo + j, row);
+                sw_rows(algo, chunk, r0, r1, row, inv_group_sizes, o);
+            }
+        },
+    )?;
+    Ok(out)
+}
+
+/// [`sw_plan_range_blocked`] over a **file-backed** triangle: the batched
+/// brute engine with the chunk loop outermost.  Per chunk, every worker
+/// walks its shards in `perm_block`-wide blocks, rebuilds the block's SoA
+/// labels (identical bits each chunk — the plan is pure), and sweeps just
+/// the chunk's rows with [`sw_brute_block_rows`], accumulating into the
+/// carried output lanes.  `dst` is **not** zeroed inside the chunk loop —
+/// the whole output is zeroed once up front — which is exactly what makes
+/// the per-lane op sequence match the resident [`sw_brute_block`] sweep.
+pub fn sw_plan_range_blocked_chunked(
+    file: &FileTriangle,
+    plan: &PermutationPlan,
+    start: usize,
+    count: usize,
+    inv_group_sizes: &[f32],
+    perm_block: usize,
+    spec: &ShardSpec,
+) -> Result<Vec<f32>> {
+    let n = file.n();
+    assert_eq!(plan.n(), n, "plan/matrix size mismatch");
+    let block = resolve_perm_block(perm_block).min(count.max(1));
+    let spec = spec.aligned_to_block(count, block);
+    let mut out = vec![0.0f32; count];
+    run_chunk_sweep(
+        &spec,
+        &mut out,
+        &file.chunk_plan(1),
+        |r0, r1| file.load_chunk(r0, r1),
+        || (vec![0u32; n], vec![0u32; n * block]),
+        |scratch, chunk, r0, r1, lo, slice| {
+            let (row, soa) = scratch;
+            for_each_block(0, slice.len(), block, |off, b| {
+                let soa = &mut soa[..n * b];
+                for j in 0..b {
+                    plan.fill(start + lo + off + j, row);
+                    for i in 0..n {
+                        soa[i * b + j] = row[i];
+                    }
+                }
+                sw_brute_block_rows(
+                    chunk,
+                    r0,
+                    r1,
+                    soa,
+                    b,
+                    inv_group_sizes,
+                    &mut slice[off..off + b],
+                );
+            });
+        },
+    )?;
+    Ok(out)
 }
 
 /// Convenience: batch s_W for a grouping's permutation plan `[0, count)`
@@ -310,5 +410,119 @@ mod tests {
         assert!(
             sw_plan_range_blocked(&tri, &plan, 0, 0, grouping.inv_sizes(), 4, &spec).is_empty()
         );
+    }
+
+    fn file_backed(tri: &CondensedMatrix, budget: u64) -> std::sync::Arc<FileTriangle> {
+        match crate::dmat::file_backed_from(tri, budget).unwrap() {
+            crate::dmat::TriangleStorage::FileBacked(f) => f,
+            other => panic!("expected file-backed storage, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_plan_range_is_bitwise_identical_to_resident() {
+        let (tri, grouping) = setup(41, 4);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 17, 37);
+        // 400-byte budget over a 41-object triangle → many paging cycles.
+        let file = file_backed(&tri, 400);
+        for algo in [
+            SwAlgorithm::Brute,
+            SwAlgorithm::Flat,
+            SwAlgorithm::Tiled { tile: 8 },
+        ] {
+            let want = sw_plan_range(&tri, &plan, 0, 37, grouping.inv_sizes(), algo, 1);
+            for spec in [
+                ShardSpec::with_workers(1),
+                ShardSpec { shard_size: 5, workers: 3, smt: false },
+                ShardSpec { shard_size: 19, workers: 2, smt: true },
+            ] {
+                let got = sw_plan_range_chunked(
+                    &file,
+                    &plan,
+                    0,
+                    37,
+                    grouping.inv_sizes(),
+                    algo,
+                    &spec,
+                )
+                .unwrap();
+                assert_eq!(want, got, "algo={algo:?} spec={spec:?}");
+            }
+        }
+        assert!(file.chunks_paged() >= 4, "expected multiple paging cycles");
+    }
+
+    #[test]
+    fn chunked_blocked_is_bitwise_identical_to_resident_blocked() {
+        let (tri, grouping) = setup(40, 4);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 13, 77);
+        let file = file_backed(&tri, 512);
+        for block in [1usize, 8, 64] {
+            let want = sw_plan_range_blocked(
+                &tri,
+                &plan,
+                0,
+                77,
+                grouping.inv_sizes(),
+                block,
+                &ShardSpec::with_workers(1),
+            );
+            for spec in [
+                ShardSpec::with_workers(1),
+                ShardSpec { shard_size: 19, workers: 2, smt: true },
+            ] {
+                let got = sw_plan_range_blocked_chunked(
+                    &file,
+                    &plan,
+                    0,
+                    77,
+                    grouping.inv_sizes(),
+                    block,
+                    &spec,
+                )
+                .unwrap();
+                assert_eq!(want, got, "block={block} spec={spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_sub_ranges_line_up() {
+        let (tri, grouping) = setup(32, 3);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 21, 60);
+        let file = file_backed(&tri, 333);
+        let spec = ShardSpec::with_workers(2);
+        let full = sw_plan_range_chunked(
+            &file, &plan, 0, 60, grouping.inv_sizes(), SwAlgorithm::Brute, &spec,
+        )
+        .unwrap();
+        let head = sw_plan_range_chunked(
+            &file, &plan, 0, 23, grouping.inv_sizes(), SwAlgorithm::Brute, &spec,
+        )
+        .unwrap();
+        let tail = sw_plan_range_chunked(
+            &file, &plan, 23, 37, grouping.inv_sizes(), SwAlgorithm::Brute, &spec,
+        )
+        .unwrap();
+        assert_eq!(&full[..23], &head[..]);
+        assert_eq!(&full[23..], &tail[..]);
+    }
+
+    #[test]
+    fn chunked_empty_range_is_empty() {
+        let (tri, grouping) = setup(16, 2);
+        let plan = PermutationPlan::new(grouping.labels().to_vec(), 1, 4);
+        let file = file_backed(&tri, 64);
+        let spec = ShardSpec::default();
+        assert!(sw_plan_range_chunked(
+            &file, &plan, 0, 0, grouping.inv_sizes(), SwAlgorithm::Flat, &spec
+        )
+        .unwrap()
+        .is_empty());
+        assert!(sw_plan_range_blocked_chunked(
+            &file, &plan, 0, 0, grouping.inv_sizes(), 4, &spec
+        )
+        .unwrap()
+        .is_empty());
     }
 }

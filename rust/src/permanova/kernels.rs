@@ -31,7 +31,50 @@
 //! as the in-crate oracle.
 
 use super::grouping::Grouping;
-use crate::dmat::{CondensedMatrix, CondensedView, DistanceMatrix};
+use crate::dmat::{CondensedMatrix, CondensedView, DistanceMatrix, TriangleChunk};
+
+/// Anything that can hand a kernel packed row `i` of an `n`-object
+/// triangle: the resident [`CondensedView`] or an out-of-core
+/// [`TriangleChunk`] (which only answers for its own `[r0, r1)` range).
+///
+/// This is the seam the chunk-major refactor hangs on: every `*_rows`
+/// kernel below sweeps an arbitrary row range of any row source with a
+/// **caller-carried accumulator**, and the classic whole-triangle kernels
+/// are now single full-range calls — so a sequence of chunk-range calls
+/// with ascending, contiguous ranges executes the *identical* f32/f64
+/// operation sequence per permutation lane as one resident sweep.  That
+/// is the entire bitwise argument for out-of-core results, and
+/// `rust/tests/oocore_chunked.rs` pins it per backend.
+pub trait PackedRows {
+    /// Number of objects (matrix edge) of the full triangle.
+    fn n(&self) -> usize;
+    /// Row `i`'s packed slice `d(i, i+1), ..., d(i, n-1)`.
+    fn row(&self, i: usize) -> &[f32];
+}
+
+impl PackedRows for CondensedView<'_> {
+    #[inline]
+    fn n(&self) -> usize {
+        CondensedView::n(self)
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[f32] {
+        CondensedView::row(self, i)
+    }
+}
+
+impl PackedRows for TriangleChunk {
+    #[inline]
+    fn n(&self) -> usize {
+        TriangleChunk::n(self)
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[f32] {
+        TriangleChunk::row(self, i)
+    }
+}
 
 /// Which s_W kernel to run — the paper's algorithm axis of Figure 1.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -88,22 +131,36 @@ pub const DEFAULT_PERM_BLOCK: usize = 64;
 /// `tri` is the packed upper triangle, `grouping` one label row,
 /// `inv_group_sizes` the 1/|group| weights.
 pub fn sw_brute_one(tri: CondensedView<'_>, grouping: &[u32], inv_group_sizes: &[f32]) -> f32 {
-    let n = tri.n();
-    debug_assert_eq!(grouping.len(), n);
     let mut s_w = 0.0f32;
-    for row in 0..n.saturating_sub(1) {
+    sw_brute_rows(&tri, 0, tri.n(), grouping, inv_group_sizes, &mut s_w);
+    s_w
+}
+
+/// Algorithm 1 over rows `[r0, r1)` of any packed row source, accumulating
+/// into a caller-carried `s_w`.  Covering `[0, n)` in ascending contiguous
+/// ranges reproduces [`sw_brute_one`]'s exact f32 operation sequence.
+pub fn sw_brute_rows<S: PackedRows>(
+    src: &S,
+    r0: usize,
+    r1: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+    s_w: &mut f32,
+) {
+    let n = src.n();
+    debug_assert_eq!(grouping.len(), n);
+    for row in r0..r1.min(n.saturating_sub(1)) {
         // no columns in last row
         let group_idx = grouping[row];
         let w = inv_group_sizes[group_idx as usize];
-        let tri_row = tri.row(row);
+        let tri_row = src.row(row);
         for (off, &val) in tri_row.iter().enumerate() {
             // diagonal is never stored; col = row + 1 + off
             if grouping[row + 1 + off] == group_idx {
-                s_w += val * val * w;
+                *s_w += val * val * w;
             }
         }
     }
-    s_w
 }
 
 /// Algorithm 1, batched: one sweep over the packed triangle evaluates a
@@ -131,13 +188,31 @@ pub fn sw_brute_block(
     inv_group_sizes: &[f32],
     out: &mut [f32],
 ) {
-    let n = tri.n();
+    sw_brute_block_rows(&tri, 0, tri.n(), labels, block, inv_group_sizes, out);
+}
+
+/// The SoA block engine over rows `[r0, r1)` of any packed row source.
+/// `out` carries each lane's partial s_W across calls (the caller zeroes
+/// it once, before the first range) — covering `[0, n)` in ascending
+/// contiguous ranges reproduces [`sw_brute_block`]'s exact per-lane f32
+/// operation sequence, which is itself [`sw_brute_one`]'s.
+#[allow(clippy::too_many_arguments)]
+pub fn sw_brute_block_rows<S: PackedRows>(
+    src: &S,
+    r0: usize,
+    r1: usize,
+    labels: &[u32],
+    block: usize,
+    inv_group_sizes: &[f32],
+    out: &mut [f32],
+) {
+    let n = src.n();
     debug_assert_eq!(labels.len(), n * block);
     debug_assert_eq!(out.len(), block);
-    for row in 0..n.saturating_sub(1) {
+    for row in r0..r1.min(n.saturating_sub(1)) {
         // no columns in last row
         let row_groups = &labels[row * block..(row + 1) * block];
-        let tri_row = tri.row(row);
+        let tri_row = src.row(row);
         for (off, &val) in tri_row.iter().enumerate() {
             let col = row + 1 + off; // diagonal is never stored
             let v2 = val * val;
@@ -188,11 +263,32 @@ pub fn sw_tiled_one(
     inv_group_sizes: &[f32],
     tile: usize,
 ) -> f32 {
-    debug_assert!(tile > 0);
-    let n = tri.n();
     let mut s_w = 0.0f32;
-    let mut trow = 0usize;
-    while trow + 1 < n {
+    sw_tiled_rows(&tri, 0, tri.n(), grouping, inv_group_sizes, tile, &mut s_w);
+    s_w
+}
+
+/// Algorithm 2 over rows `[r0, r1)` of any packed row source.  **`r0`
+/// must be a multiple of `tile`**: the published loop walks `tile`-row
+/// stripes from row 0, so chunk boundaries must fall between stripes for
+/// the chunked sweep to replay the exact stripe sequence (the chunk
+/// planner aligns to `tile` for this kernel).  `r1` is a stripe boundary
+/// or `n`.
+#[allow(clippy::too_many_arguments)]
+pub fn sw_tiled_rows<S: PackedRows>(
+    src: &S,
+    r0: usize,
+    r1: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+    tile: usize,
+    s_w: &mut f32,
+) {
+    debug_assert!(tile > 0);
+    debug_assert_eq!(r0 % tile, 0, "chunk start must align to the stripe size");
+    let n = src.n();
+    let mut trow = r0;
+    while trow < r1 && trow + 1 < n {
         // no columns in last row
         let mut tcol = trow + 1;
         while tcol < n {
@@ -204,7 +300,7 @@ pub fn sw_tiled_one(
                 if min_col >= max_col {
                     continue;
                 }
-                let tri_row = tri.row(row);
+                let tri_row = src.row(row);
                 let group_idx = grouping[row];
                 // The paper's inner loop, with the branch if-converted and
                 // eight-lane re-associated so it runs as SIMD FMAs (same
@@ -212,13 +308,12 @@ pub fn sw_tiled_one(
                 let cols = &grouping[min_col..max_col];
                 let vals = &tri_row[min_col - row - 1..max_col - row - 1];
                 let local_s_w = masked_sum_sq(vals, cols, group_idx);
-                s_w += local_s_w * inv_group_sizes[group_idx as usize];
+                *s_w += local_s_w * inv_group_sizes[group_idx as usize];
             }
             tcol += tile;
         }
         trow += tile;
     }
-    s_w
 }
 
 /// Algorithm 3's formulation — branch replaced by a predicated multiply,
@@ -231,16 +326,29 @@ pub fn sw_tiled_one(
 /// LLVM then turns into masked SIMD FMAs.  (Perf pass: 0.59 -> ~2.6
 /// Gelem/s on the dev host; see EXPERIMENTS.md §Perf.)
 pub fn sw_flat_one(tri: CondensedView<'_>, grouping: &[u32], inv_group_sizes: &[f32]) -> f32 {
-    let n = tri.n();
     let mut s_w = 0.0f32;
-    for row in 0..n.saturating_sub(1) {
+    sw_flat_rows(&tri, 0, tri.n(), grouping, inv_group_sizes, &mut s_w);
+    s_w
+}
+
+/// Algorithm 3's formulation over rows `[r0, r1)` of any packed row
+/// source, accumulating into a caller-carried `s_w`.
+pub fn sw_flat_rows<S: PackedRows>(
+    src: &S,
+    r0: usize,
+    r1: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+    s_w: &mut f32,
+) {
+    let n = src.n();
+    for row in r0..r1.min(n.saturating_sub(1)) {
         let group_idx = grouping[row];
         let w = inv_group_sizes[group_idx as usize];
         let gs = &grouping[(row + 1)..n];
-        let vs = tri.row(row);
-        s_w += masked_sum_sq(vs, gs, group_idx) * w;
+        let vs = src.row(row);
+        *s_w += masked_sum_sq(vs, gs, group_idx) * w;
     }
-    s_w
 }
 
 /// Eight-lane masked sum of squares: `Σ (g == group) · v²` with a fixed
@@ -281,6 +389,38 @@ pub fn sw_one(
         SwAlgorithm::Brute => sw_brute_one(tri, grouping, inv_group_sizes),
         SwAlgorithm::Tiled { tile } => sw_tiled_one(tri, grouping, inv_group_sizes, tile),
         SwAlgorithm::Flat => sw_flat_one(tri, grouping, inv_group_sizes),
+    }
+}
+
+/// Dispatch a row range through the chosen algorithm with a carried
+/// accumulator — the chunk-major edition of [`sw_one`].  The tiled
+/// variant requires `r0` to be a stripe multiple (see [`sw_tiled_rows`]).
+#[allow(clippy::too_many_arguments)]
+pub fn sw_rows<S: PackedRows>(
+    algo: SwAlgorithm,
+    src: &S,
+    r0: usize,
+    r1: usize,
+    grouping: &[u32],
+    inv_group_sizes: &[f32],
+    s_w: &mut f32,
+) {
+    match algo {
+        SwAlgorithm::Brute => sw_brute_rows(src, r0, r1, grouping, inv_group_sizes, s_w),
+        SwAlgorithm::Tiled { tile } => {
+            sw_tiled_rows(src, r0, r1, grouping, inv_group_sizes, tile, s_w)
+        }
+        SwAlgorithm::Flat => sw_flat_rows(src, r0, r1, grouping, inv_group_sizes, s_w),
+    }
+}
+
+/// The row alignment a chunk plan must honor for `algo`'s chunked sweep
+/// to replay the resident op sequence: the stripe size for the tiled
+/// kernel, 1 (any row boundary) otherwise.
+pub fn chunk_align(algo: SwAlgorithm) -> usize {
+    match algo {
+        SwAlgorithm::Tiled { tile } => tile,
+        SwAlgorithm::Brute | SwAlgorithm::Flat => 1,
     }
 }
 
@@ -661,6 +801,94 @@ mod tests {
         sw_brute_block(t2.view(), &soa, 2, &inv2, &mut out2);
         assert!((out2[0] - 4.5).abs() < 1e-6); // 3² · 0.5
         assert_eq!(out2[1], 0.0);
+    }
+
+    #[test]
+    fn chunked_row_sweeps_are_bitwise_identical_to_whole_sweeps() {
+        // The out-of-core contract at kernel level: splitting the row
+        // range at any boundary (stripe-aligned for tiled) and carrying
+        // the accumulator reproduces the whole sweep bit for bit.
+        for (n, k, seed) in [(7usize, 2usize, 21u64), (33, 3, 22), (96, 5, 23)] {
+            let (m, g, inv) = random_case(n, k, seed);
+            let tri = CondensedMatrix::from_dense(&m);
+            let v = tri.view();
+            for algo in [
+                SwAlgorithm::Brute,
+                SwAlgorithm::Flat,
+                SwAlgorithm::Tiled { tile: 8 },
+                SwAlgorithm::Tiled { tile: 512 },
+            ] {
+                let want = sw_one(algo, v, &g, &inv);
+                let align = chunk_align(algo);
+                for step in [1usize, 3, 10, n] {
+                    let step = step.div_ceil(align) * align;
+                    let mut acc = 0.0f32;
+                    let mut r0 = 0usize;
+                    while r0 < n {
+                        let r1 = (r0 + step).min(n);
+                        sw_rows(algo, &v, r0, r1, &g, &inv, &mut acc);
+                        r0 = r1;
+                    }
+                    assert_eq!(
+                        acc.to_bits(),
+                        want.to_bits(),
+                        "{algo:?} n={n} step={step}: {acc} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_sweep_over_triangle_chunks_matches_resident() {
+        // Same contract, but the row source is actual TriangleChunk
+        // pieces instead of the resident view.
+        use crate::dmat::TriangleChunk;
+        let (m, g, inv) = random_case(41, 4, 31);
+        let tri = CondensedMatrix::from_dense(&m);
+        let n = 41usize;
+        for algo in [SwAlgorithm::Brute, SwAlgorithm::Flat, SwAlgorithm::Tiled { tile: 8 }] {
+            let want = sw_one(algo, tri.view(), &g, &inv);
+            let align = chunk_align(algo);
+            let step = 8usize.div_ceil(align) * align;
+            let mut acc = 0.0f32;
+            let mut r0 = 0usize;
+            while r0 < n {
+                let r1 = (r0 + step).min(n);
+                let mut vals = Vec::new();
+                for i in r0..r1 {
+                    vals.extend_from_slice(tri.row(i));
+                }
+                let chunk = TriangleChunk::from_values(n, r0, r1, vals).unwrap();
+                sw_rows(algo, &chunk, r0, r1, &g, &inv, &mut acc);
+                r0 = r1;
+            }
+            assert_eq!(acc.to_bits(), want.to_bits(), "{algo:?}");
+        }
+    }
+
+    #[test]
+    fn block_kernel_chunked_rows_match_whole_sweep_per_lane() {
+        let (m, g, inv) = random_case(40, 4, 33);
+        let tri = CondensedMatrix::from_dense(&m);
+        let n = 40usize;
+        let block = 5usize;
+        let mut aos = Vec::with_capacity(block * n);
+        for r in 0..block {
+            for i in 0..n {
+                aos.push(g[(i + r) % n]);
+            }
+        }
+        let soa = to_soa(&aos, block, n);
+        let mut whole = vec![0.0f32; block];
+        sw_brute_block(tri.view(), &soa, block, &inv, &mut whole);
+        let mut chunked = vec![0.0f32; block]; // zeroed once, carried across ranges
+        for (r0, r1) in [(0usize, 7usize), (7, 16), (16, 40)] {
+            sw_brute_block_rows(&tri.view(), r0, r1, &soa, block, &inv, &mut chunked);
+        }
+        for j in 0..block {
+            assert_eq!(chunked[j].to_bits(), whole[j].to_bits(), "lane {j}");
+        }
     }
 
     #[test]

@@ -38,9 +38,9 @@ use super::anosim::{r_statistic, r_statistic_block, rank_condensed};
 use super::grouping::Grouping;
 use super::kernels::sw_brute_f64;
 use super::permdisp::{anova_f, dispersion_prelude};
-use super::stats::{fstat_from_sw, st_of_condensed};
+use super::stats::{fstat_from_sw, st_of_condensed, st_rows};
 use crate::backend::shard::{for_each_block, ShardSpec};
-use crate::dmat::{CondensedMatrix, DistanceMatrix};
+use crate::dmat::{CondensedMatrix, DistanceMatrix, TriangleStorage};
 use crate::error::{Error, Result};
 use crate::rng::PermutationPlan;
 
@@ -106,17 +106,31 @@ impl Method {
 }
 
 /// PERMANOVA prelude: the permutation-invariant total sum of squares plus
-/// the **packed triangle** the f32 kernels sweep.
+/// the triangle **storage** the f32 kernels sweep — resident (the packed
+/// buffer) or file-backed (the out-of-core tier, swept chunk by chunk).
 #[derive(Clone, Debug)]
 pub struct PermanovaStat {
     /// `s_T = Σ_{i<j} d²_ij / n`.
     pub s_t: f64,
     /// Objects in the matrix the prelude was computed from (reuse check).
     pub n: usize,
-    /// The packed upper triangle — the canonical kernel operand.  Shared
-    /// (`Arc`) so the service cache builds it once per dataset and every
-    /// job's backend streams the same buffer.
-    pub packed: Arc<CondensedMatrix>,
+    /// Where the packed triangle lives.  Shared (`Arc` inside) so the
+    /// service cache builds it once per dataset and every job's backend
+    /// streams the same buffer — or pages the same file.
+    pub storage: TriangleStorage,
+}
+
+impl PermanovaStat {
+    /// The resident packed triangle.  Backends that can only sweep a
+    /// resident buffer call this after routing file-backed storage to the
+    /// chunked kernels (or to a loud `Error::Config`); reaching it with a
+    /// file-backed prelude is an engine routing bug.
+    pub fn packed(&self) -> &Arc<CondensedMatrix> {
+        self.storage.as_resident().expect(
+            "resident triangle requested from a file-backed PERMANOVA prelude; \
+             file-backed runs route through the chunked kernels",
+        )
+    }
 }
 
 /// ANOSIM prelude: condensed mid-ranks of the distances (computed once —
@@ -199,7 +213,7 @@ impl StatKernel {
             Method::Permanova => Ok(StatKernel::Permanova(PermanovaStat {
                 s_t: st_of_condensed(tri),
                 n: tri.n(),
-                packed: Arc::clone(tri),
+                storage: TriangleStorage::Resident(Arc::clone(tri)),
             })),
             Method::Anosim => {
                 Ok(StatKernel::Anosim(AnosimStat { ranks: rank_condensed(tri.values()) }))
@@ -218,6 +232,70 @@ impl StatKernel {
                  prepare a Permanova kernel per pair instead"
                     .into(),
             )),
+        }
+    }
+
+    /// Run the method's precomputation from **triangle storage** — the
+    /// out-of-core-aware production entry.  Resident storage delegates to
+    /// [`prepare_packed`](Self::prepare_packed) (bit-for-bit the classic
+    /// prelude).  File-backed storage supports PERMANOVA only: its `s_T`
+    /// pass streams the paged chunks through [`st_rows`] in ascending row
+    /// order — the exact f64 op sequence of [`st_of_condensed`], so the
+    /// prelude is **bitwise identical** to a resident preparation of the
+    /// same triangle.  Methods whose prelude fundamentally needs the whole
+    /// triangle at once fail loudly, naming the budget knob:
+    ///
+    /// * ANOSIM — its global mid-rank sort orders all `n(n-1)/2` distances
+    ///   against each other;
+    /// * PERMDISP — its PCoA eigendecomposition works on the dense matrix.
+    pub fn prepare_storage(
+        method: Method,
+        storage: &TriangleStorage,
+        grouping: &Grouping,
+    ) -> Result<StatKernel> {
+        let file = match storage {
+            TriangleStorage::Resident(tri) => {
+                return Self::prepare_packed(method, tri, grouping)
+            }
+            TriangleStorage::FileBacked(f) => f,
+        };
+        if grouping.n() != file.n() {
+            return Err(Error::InvalidInput(format!(
+                "grouping n = {} vs matrix n = {}",
+                grouping.n(),
+                file.n()
+            )));
+        }
+        let packed_bytes = file.count() * 4;
+        match method {
+            Method::Permanova => {
+                let mut acc = 0.0f64;
+                for (r0, r1) in file.chunk_plan(1) {
+                    let chunk = file.load_chunk(r0, r1)?;
+                    st_rows(&chunk, r0, r1, &mut acc);
+                }
+                Ok(StatKernel::Permanova(PermanovaStat {
+                    s_t: acc / file.n() as f64,
+                    n: file.n(),
+                    storage: storage.clone(),
+                }))
+            }
+            Method::Anosim => Err(Error::Config(format!(
+                "ANOSIM's global rank sort needs the whole triangle resident, but the \
+                 dataset is file-backed under --max-resident-bytes; raise the budget to \
+                 at least {packed_bytes} bytes (or drop the cap) to run this method"
+            ))),
+            Method::Permdisp => Err(Error::Config(format!(
+                "PERMDISP's PCoA eigendecomposition needs the dense matrix resident, but \
+                 the dataset is file-backed under --max-resident-bytes; raise the budget \
+                 to at least {packed_bytes} bytes (or drop the cap) to run this method"
+            ))),
+            Method::PairwisePermanova => Err(Error::Config(format!(
+                "pairwise PERMANOVA extracts per-pair sub-triangles from the resident \
+                 buffer, but the dataset is file-backed under --max-resident-bytes; \
+                 raise the budget to at least {packed_bytes} bytes (or drop the cap) to \
+                 run this method"
+            ))),
         }
     }
 
@@ -256,7 +334,7 @@ impl StatKernel {
                 Ok(StatKernel::Permanova(PermanovaStat {
                     s_t: st_of_condensed(&packed),
                     n: mat.n(),
-                    packed,
+                    storage: TriangleStorage::Resident(packed),
                 }))
             }
             // The rank prelude consumes the packed values directly (they
@@ -357,13 +435,24 @@ impl StatKernel {
         }
     }
 
-    /// The packed triangle this kernel streams per permutation, when the
-    /// method has an n² f32 stream (PERMANOVA).  ANOSIM's packed operand
-    /// is its f64 rank vector and PERMDISP's is the O(n) distance vector,
-    /// so those variants return `None`.
+    /// The **resident** packed triangle this kernel streams per
+    /// permutation, when the method has an n² f32 stream (PERMANOVA) and
+    /// the triangle is in memory.  ANOSIM's packed operand is its f64 rank
+    /// vector, PERMDISP's is the O(n) distance vector, and a file-backed
+    /// PERMANOVA prelude has no resident buffer — all of those return
+    /// `None`.
     pub fn packed(&self) -> Option<&Arc<CondensedMatrix>> {
         match self {
-            StatKernel::Permanova(p) => Some(&p.packed),
+            StatKernel::Permanova(p) => p.storage.as_resident(),
+            _ => None,
+        }
+    }
+
+    /// The triangle storage behind this kernel (PERMANOVA only — the
+    /// methods whose hot loop streams the n² triangle).
+    pub fn storage(&self) -> Option<&TriangleStorage> {
+        match self {
+            StatKernel::Permanova(p) => Some(&p.storage),
             _ => None,
         }
     }
@@ -379,7 +468,7 @@ impl StatKernel {
     pub fn eval_labels(&self, grouping: &Grouping, labels: &[u32]) -> f64 {
         match self {
             StatKernel::Permanova(p) => {
-                let sw = sw_brute_f64(p.packed.view(), labels, grouping.inv_sizes());
+                let sw = sw_brute_f64(p.packed().view(), labels, grouping.inv_sizes());
                 fstat_from_sw(sw, p.s_t, p.n, grouping.k())
             }
             StatKernel::Anosim(a) => r_statistic(&a.ranks, labels.len(), labels),
@@ -559,9 +648,9 @@ mod tests {
             match (&cold, &shared) {
                 (StatKernel::Permanova(a), StatKernel::Permanova(b)) => {
                     assert_eq!(a.s_t.to_bits(), b.s_t.to_bits());
-                    assert_eq!(a.packed.values(), b.packed.values());
+                    assert_eq!(a.packed().values(), b.packed().values());
                     // The shared buffer is referenced, not copied.
-                    assert!(Arc::ptr_eq(&b.packed, &packed));
+                    assert!(Arc::ptr_eq(b.packed(), &packed));
                 }
                 (StatKernel::Anosim(a), StatKernel::Anosim(b)) => {
                     assert_eq!(a.ranks, b.ranks);
@@ -597,8 +686,8 @@ mod tests {
             match (&dense, &packed) {
                 (StatKernel::Permanova(a), StatKernel::Permanova(b)) => {
                     assert_eq!(a.s_t.to_bits(), b.s_t.to_bits());
-                    assert_eq!(a.packed.values(), b.packed.values());
-                    assert!(Arc::ptr_eq(&b.packed, &tri), "must reference, not re-pack");
+                    assert_eq!(a.packed().values(), b.packed().values());
+                    assert!(Arc::ptr_eq(b.packed(), &tri), "must reference, not re-pack");
                 }
                 (StatKernel::Anosim(a), StatKernel::Anosim(b)) => assert_eq!(a.ranks, b.ranks),
                 (StatKernel::Permdisp(a), StatKernel::Permdisp(b)) => {
@@ -612,6 +701,64 @@ mod tests {
         assert!(StatKernel::prepare_packed(Method::PairwisePermanova, &tri, &grouping).is_err());
         let g_bad = Grouping::balanced(30, 3).unwrap();
         assert!(StatKernel::prepare_packed(Method::Permanova, &tri, &g_bad).is_err());
+    }
+
+    #[test]
+    fn prepare_storage_file_backed_matches_resident_bitwise() {
+        let (mat, grouping) = fixture(31, 3, 6);
+        let tri = Arc::new(CondensedMatrix::from_dense(&mat));
+        // A 300-byte cap over 31·30/2 f32 values forces many chunks.
+        let file = crate::dmat::file_backed_from(&tri, 300).unwrap();
+        let resident = StatKernel::prepare_packed(Method::Permanova, &tri, &grouping).unwrap();
+        let paged =
+            StatKernel::prepare_storage(Method::Permanova, &file, &grouping).unwrap();
+        match (&resident, &paged) {
+            (StatKernel::Permanova(a), StatKernel::Permanova(b)) => {
+                assert_eq!(a.s_t.to_bits(), b.s_t.to_bits(), "chunked s_T must match bits");
+                assert_eq!(a.n, b.n);
+                assert!(b.storage.is_file_backed());
+            }
+            other => panic!("{other:?}"),
+        }
+        // The file-backed prelude exposes storage but no resident triangle.
+        assert!(paged.packed().is_none());
+        assert!(paged.storage().unwrap().is_file_backed());
+        // Resident storage routes through prepare_packed unchanged.
+        let via_storage = StatKernel::prepare_storage(
+            Method::Permanova,
+            &TriangleStorage::Resident(Arc::clone(&tri)),
+            &grouping,
+        )
+        .unwrap();
+        match &via_storage {
+            StatKernel::Permanova(p) => assert!(Arc::ptr_eq(p.packed(), &tri)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prepare_storage_rejects_whole_triangle_methods_when_file_backed() {
+        let (mat, grouping) = fixture(20, 2, 7);
+        let tri = Arc::new(CondensedMatrix::from_dense(&mat));
+        let file = crate::dmat::file_backed_from(&tri, 128).unwrap();
+        for method in [Method::Anosim, Method::Permdisp, Method::PairwisePermanova] {
+            let err = StatKernel::prepare_storage(method, &file, &grouping).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                matches!(err, Error::Config(_)),
+                "{method:?}: expected Error::Config, got {err:?}"
+            );
+            assert!(
+                msg.contains("--max-resident-bytes"),
+                "{method:?}: message must name the budget knob: {msg}"
+            );
+        }
+        // Size mismatch stays an input error, not a config error.
+        let g_bad = Grouping::balanced(30, 3).unwrap();
+        assert!(matches!(
+            StatKernel::prepare_storage(Method::Permanova, &file, &g_bad),
+            Err(Error::InvalidInput(_))
+        ));
     }
 
     #[test]

@@ -15,6 +15,10 @@
 //! * the batched brute engine ([`sw_brute_block`],
 //!   [`sw_plan_range_blocked`]) — one matrix sweep amortized over a SoA
 //!   block of permutations, the paper's GPU-winning access pattern;
+//! * the out-of-core chunk seam ([`PackedRows`], the `*_rows` kernels,
+//!   [`sw_plan_range_chunked`], [`sw_plan_range_blocked_chunked`]) — the
+//!   same kernels sweeping paged row chunks with carried per-lane
+//!   accumulators, bitwise identical to the resident sweeps;
 //! * the full statistic ([`permanova`], [`st_of`], [`fstat_from_sw`],
 //!   [`pvalue`]);
 //! * the statistic-generic seam of the execution engine ([`Method`],
@@ -40,13 +44,15 @@ pub use anosim::{anosim, AnosimResult};
 pub use permdisp::{permdisp, PermdispResult};
 pub use batch::{
     resolve_perm_block, resolve_threads, sw_batch, sw_permutations, sw_plan_range,
-    sw_plan_range_blocked,
+    sw_plan_range_blocked, sw_plan_range_blocked_chunked, sw_plan_range_chunked,
 };
 pub use grouping::Grouping;
 pub use kernels::{
-    sw_brute_block, sw_brute_block_dense, sw_brute_f64, sw_brute_f64_dense, sw_brute_one,
-    sw_brute_one_dense, sw_flat_one, sw_flat_one_dense, sw_of, sw_one, sw_one_dense,
-    sw_tiled_one, sw_tiled_one_dense, SwAlgorithm, DEFAULT_PERM_BLOCK, DEFAULT_TILE,
+    chunk_align, sw_brute_block, sw_brute_block_dense, sw_brute_block_rows, sw_brute_f64,
+    sw_brute_f64_dense, sw_brute_one, sw_brute_one_dense, sw_brute_rows, sw_flat_one,
+    sw_flat_one_dense, sw_flat_rows, sw_of, sw_one, sw_one_dense, sw_rows, sw_tiled_one,
+    sw_tiled_one_dense, sw_tiled_rows, PackedRows, SwAlgorithm, DEFAULT_PERM_BLOCK,
+    DEFAULT_TILE,
 };
 pub use method::{
     eval_plan_range, eval_plan_range_blocked, AnosimStat, Method, PermanovaStat, PermdispStat,
@@ -57,5 +63,6 @@ pub use pairwise::{
     PairwiseEntry, PairwiseResult,
 };
 pub use stats::{
-    fstat_from_sw, permanova, pvalue, st_of, st_of_condensed, PermanovaOpts, PermanovaResult,
+    fstat_from_sw, permanova, pvalue, st_of, st_of_condensed, st_rows, PermanovaOpts,
+    PermanovaResult,
 };

@@ -13,7 +13,7 @@ use std::time::Instant;
 
 use super::batch::{resolve_threads, sw_plan_range};
 use super::grouping::Grouping;
-use super::kernels::{SwAlgorithm, DEFAULT_TILE};
+use super::kernels::{PackedRows, SwAlgorithm, DEFAULT_TILE};
 use crate::dmat::{CondensedMatrix, DistanceMatrix};
 use crate::error::{Error, Result};
 use crate::rng::PermutationPlan;
@@ -38,16 +38,25 @@ pub fn st_of(mat: &DistanceMatrix) -> f64 {
 /// so the two functions return the same bits — which keeps every recorded
 /// `s_t` (reports, goldens) stable across the layout change.
 pub fn st_of_condensed(tri: &CondensedMatrix) -> f64 {
-    let n = tri.n();
     let mut acc = 0.0f64;
-    for i in 0..n {
+    st_rows(&tri.view(), 0, tri.n(), &mut acc);
+    acc / tri.n() as f64
+}
+
+/// The s_T sum over rows `[r0, r1)` of any packed row source, into a
+/// caller-carried accumulator (**undivided** — the caller divides by `n`
+/// after covering `[0, n)`).  Per-row f64 locals summed in ascending row
+/// order, exactly as [`st_of_condensed`] always did, so a sequence of
+/// ascending contiguous ranges reproduces its bits — this is how the
+/// out-of-core prelude computes `s_t` one paged chunk at a time.
+pub fn st_rows<S: PackedRows>(src: &S, r0: usize, r1: usize, acc: &mut f64) {
+    for i in r0..r1 {
         let mut local = 0.0f64;
-        for &v in tri.row(i) {
+        for &v in src.row(i) {
             local += (v as f64) * (v as f64);
         }
-        acc += local;
+        *acc += local;
     }
-    acc / n as f64
 }
 
 /// Pseudo-F from a partial statistic.
@@ -190,6 +199,26 @@ mod tests {
             let m = DistanceMatrix::random_euclidean(n, 6, seed);
             let tri = CondensedMatrix::from_dense(&m);
             assert_eq!(st_of(&m).to_bits(), st_of_condensed(&tri).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn st_rows_chunked_is_bitwise_identical_to_whole() {
+        for (n, seed) in [(3usize, 5u64), (17, 6), (64, 7)] {
+            let m = DistanceMatrix::random_euclidean(n, 6, seed);
+            let tri = CondensedMatrix::from_dense(&m);
+            let want = st_of_condensed(&tri);
+            for step in [1usize, 4, 11, n] {
+                let mut acc = 0.0f64;
+                let mut r0 = 0usize;
+                while r0 < n {
+                    let r1 = (r0 + step).min(n);
+                    st_rows(&tri.view(), r0, r1, &mut acc);
+                    r0 = r1;
+                }
+                let got = acc / n as f64;
+                assert_eq!(got.to_bits(), want.to_bits(), "n={n} step={step}");
+            }
         }
     }
 

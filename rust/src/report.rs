@@ -35,6 +35,19 @@ pub struct DeviceStats {
     pub simulated_secs: f64,
 }
 
+/// Out-of-core paging activity of one run over a **file-backed** triangle
+/// (absent for resident runs — uncapped reports serialize byte-identically
+/// to before the out-of-core tier existed).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OocoreStats {
+    /// The residency budget the run paged under (`--max-resident-bytes`).
+    pub resident_cap: u64,
+    /// Chunks read from disk during this run (prelude + permutation sweep).
+    pub chunks_paged: u64,
+    /// Bytes read from disk during this run.
+    pub bytes_paged: u64,
+}
+
 /// Aggregated output of one permutation-test run (backend engine or
 /// coordinator).  `f_obs` / `f_perms` hold the run's *method statistic* —
 /// pseudo-F for PERMANOVA, R for ANOSIM, ANOVA F for PERMDISP (the field
@@ -65,6 +78,10 @@ pub struct RunReport {
     /// backends.
     pub perm_block: usize,
     pub per_device: Vec<DeviceStats>,
+    /// Paging activity when the run swept a file-backed triangle under a
+    /// residency budget (`None` for resident runs — and absent from the
+    /// JSON, keeping uncapped serialization byte-stable).
+    pub oocore: Option<OocoreStats>,
     /// The permuted F distribution (observed excluded), in plan order.
     pub f_perms: Vec<f64>,
 }
@@ -105,6 +122,14 @@ impl RunReport {
             out.push_str(&format!("  s_T      = {:.6}\n", self.s_t));
         }
         out.push_str(&format!("  wall     = {:.3}s\n", self.elapsed_secs));
+        if let Some(oo) = &self.oocore {
+            out.push_str(&format!(
+                "  paging   = {} chunks, {} read (cap {})\n",
+                oo.chunks_paged,
+                format_bytes(oo.bytes_paged),
+                format_bytes(oo.resident_cap),
+            ));
+        }
         let mut t = Table::new(&["device", "batches", "perms", "busy s", "modelled s"]);
         for d in &self.per_device {
             t.row(&[
@@ -124,8 +149,10 @@ impl RunReport {
     }
 
     /// Machine-readable report (consumed by scripts / CI trend tracking).
+    /// The `oocore` section appears only for file-backed runs, so uncapped
+    /// reports keep their exact byte shape (the store contract).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("version", Json::str(crate::VERSION)),
             ("method", Json::str(self.method.clone())),
             ("backend", Json::str(self.backend.clone())),
@@ -155,7 +182,18 @@ impl RunReport {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(oo) = &self.oocore {
+            fields.push((
+                "oocore",
+                Json::obj(vec![
+                    ("resident_cap", Json::num(oo.resident_cap as f64)),
+                    ("chunks_paged", Json::num(oo.chunks_paged as f64)),
+                    ("bytes_paged", Json::num(oo.bytes_paged as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -538,8 +576,29 @@ mod tests {
                 busy_secs: 0.4,
                 simulated_secs: 0.0,
             }],
+            oocore: None,
             f_perms: vec![1.0; 99],
         }
+    }
+
+    #[test]
+    fn oocore_section_appears_only_for_file_backed_runs() {
+        let resident = sample_report();
+        let doc = resident.to_json().to_string();
+        assert!(!doc.contains("oocore"), "uncapped reports keep their byte shape: {doc}");
+        assert!(!resident.render().contains("paging"));
+
+        let mut capped = sample_report();
+        capped.oocore =
+            Some(OocoreStats { resident_cap: 4096, chunks_paged: 7, bytes_paged: 12000 });
+        let parsed = Json::parse(&capped.to_json().to_string()).unwrap();
+        let oo = parsed.get("oocore").expect("capped reports carry the oocore section");
+        assert_eq!(oo.req_usize("resident_cap").unwrap(), 4096);
+        assert_eq!(oo.req_usize("chunks_paged").unwrap(), 7);
+        assert_eq!(oo.req_usize("bytes_paged").unwrap(), 12000);
+        let s = capped.render();
+        assert!(s.contains("paging   = 7 chunks"), "{s}");
+        assert!(s.contains("cap 4.00 KiB"), "{s}");
     }
 
     #[test]

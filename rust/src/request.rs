@@ -148,12 +148,12 @@ impl<'a> AnalysisRequest<'a> {
                     // Pairwise prepares one prelude per group-pair
                     // sub-problem below the engine seam; only the dataset
                     // load itself is cacheable.
-                    crate::backend::execute_prepared(self.cfg, ds.tri(), &ds.grouping, None)?
+                    crate::backend::execute_storage(self.cfg, ds.storage(), &ds.grouping, None)?
                 } else {
                     let kernel = ds.kernel(self.cfg.method)?;
-                    crate::backend::execute_prepared(
+                    crate::backend::execute_storage(
                         self.cfg,
-                        ds.tri(),
+                        ds.storage(),
                         &ds.grouping,
                         Some(&kernel),
                     )?
@@ -175,9 +175,13 @@ impl<'a> AnalysisRequest<'a> {
             }
             (None, None) => {
                 self.cfg.validate()?;
-                let (tri, grouping) = crate::coordinator::load_data(self.cfg)?;
+                // `load_storage` honors `cfg.max_resident_bytes`: 0 keeps
+                // the triangle resident (bitwise the old load_data path);
+                // a budget spills to a chunk file and the engine sweeps it
+                // chunk-major — same results, bounded residency.
+                let (storage, grouping) = crate::coordinator::load_storage(self.cfg)?;
                 let report =
-                    crate::backend::execute_prepared(self.cfg, &tri, &grouping, self.prelude)?;
+                    crate::backend::execute_storage(self.cfg, &storage, &grouping, self.prelude)?;
                 Ok((report, false))
             }
         }

@@ -17,6 +17,17 @@
 //! [`CachedDataset::nbytes`] is the condensed size (values + row offsets),
 //! roughly half what the old dense-then-pack residency cost.
 //!
+//! **Budgeted datasets are file-backed.**  A job with `max_resident_bytes`
+//! set loads through the same budgeted path the cold route uses
+//! ([`load_storage`](crate::coordinator::load_storage)); when the packed
+//! triangle exceeds the budget the cached entry holds only a chunk-file
+//! handle, `nbytes` reports one chunk window (honest residency), and
+//! paging flows into the cache's cumulative [`OocorePaging`] counters.
+//! The residency cap is deliberately **not** part of [`dataset_key`]:
+//! capped and uncapped runs produce bitwise-identical statistics, so one
+//! entry serves both — whichever job loads first fixes the entry's
+//! residency mode until it ages out.
+//!
 //! **Warm results are bitwise-identical to cold results.**  Everything the
 //! cache stores is a pure function of the dataset: the packed values, the
 //! grouping, and prelude values `StatKernel::prepare_packed` would
@@ -36,11 +47,11 @@
 //! behaves exactly as before the store existed.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::{DataSource, RunConfig};
-use crate::dmat::CondensedMatrix;
+use crate::dmat::{CondensedMatrix, TriangleStorage};
 use crate::error::{Error, Result};
 use crate::permanova::{Grouping, Method, StatKernel};
 use crate::store::ResultStore;
@@ -119,13 +130,15 @@ pub fn result_key(cfg: &RunConfig) -> String {
     format!("{canon}#{:016x}", fnv64(&canon))
 }
 
-/// One resident dataset: the streamed packed triangle, its grouping, and
-/// the memoized per-method statistic preludes.  **No dense copy** — the
-/// triangle arrives packed from the streaming loader and is the buffer
-/// every job's prelude references.
+/// One cached dataset: its triangle **storage** (resident, or file-backed
+/// under a residency budget), its grouping, and the memoized per-method
+/// statistic preludes.  **No dense copy** — resident datasets hold the
+/// packed triangle the streaming loader produced; budgeted datasets hold
+/// only a [`FileTriangle`](crate::dmat::FileTriangle) handle whose
+/// residency is one chunk window.
 pub struct CachedDataset {
     key: String,
-    tri: Arc<CondensedMatrix>,
+    storage: TriangleStorage,
     pub grouping: Grouping,
     /// Lazily prepared kernels, keyed by [`Method::name`].
     kernels: Mutex<BTreeMap<&'static str, Arc<StatKernel>>>,
@@ -133,13 +146,13 @@ pub struct CachedDataset {
 
 impl CachedDataset {
     /// Load (and validate, in the streaming pass) the dataset a config
-    /// describes — the same `load_data` path the cold `run_config` route
-    /// runs.
+    /// describes — the same `load_storage` path the cold route runs, so a
+    /// `max_resident_bytes` budget spills to a chunk file here too.
     fn load(cfg: &RunConfig) -> Result<CachedDataset> {
-        let (tri, grouping) = crate::coordinator::load_data(cfg)?;
+        let (storage, grouping) = crate::coordinator::load_storage(cfg)?;
         Ok(CachedDataset {
             key: dataset_key(cfg),
-            tri,
+            storage,
             grouping,
             kernels: Mutex::new(BTreeMap::new()),
         })
@@ -151,7 +164,7 @@ impl CachedDataset {
     fn from_parts(key: String, tri: CondensedMatrix, grouping: Grouping) -> CachedDataset {
         CachedDataset {
             key,
-            tri: Arc::new(tri),
+            storage: TriangleStorage::Resident(Arc::new(tri)),
             grouping,
             kernels: Mutex::new(BTreeMap::new()),
         }
@@ -162,16 +175,27 @@ impl CachedDataset {
         &self.key
     }
 
+    /// The dataset's triangle storage — resident buffer or file-backed
+    /// chunk handle — shared by every job.
+    pub fn storage(&self) -> &TriangleStorage {
+        &self.storage
+    }
+
     /// The dataset's packed triangle — the one resident buffer, shared by
-    /// every job.
+    /// every job.  Panics for a file-backed dataset: resident-only call
+    /// sites (the spill path, oracle tests) must guard with
+    /// [`storage`](Self::storage) first.
     pub fn tri(&self) -> &Arc<CondensedMatrix> {
-        &self.tri
+        self.storage.as_resident().expect(
+            "resident triangle requested from a file-backed cached dataset; \
+             budgeted datasets route through TriangleStorage",
+        )
     }
 
     /// Alias of [`tri`](Self::tri), kept for the pre-streaming call sites'
     /// name ("the dataset's packed triangle").
     pub fn packed(&self) -> &Arc<CondensedMatrix> {
-        &self.tri
+        self.tri()
     }
 
     /// The prepared statistic prelude for `method`, computed on first use
@@ -191,7 +215,13 @@ impl CachedDataset {
         if let Some(k) = kernels.get(method.name()) {
             return Ok(Arc::clone(k));
         }
-        let prepared = Arc::new(StatKernel::prepare_packed(method, &self.tri, &self.grouping)?);
+        // `prepare_storage` keeps warm ≡ cold across residency modes: a
+        // resident dataset prepares exactly as `prepare_packed` did; a
+        // file-backed one streams its prelude chunk-major, and methods
+        // that need the whole triangle resident (ANOSIM, PERMDISP) fail
+        // loudly here with the budget-naming config error.
+        let prepared =
+            Arc::new(StatKernel::prepare_storage(method, &self.storage, &self.grouping)?);
         kernels.insert(method.name(), Arc::clone(&prepared));
         Ok(prepared)
     }
@@ -202,10 +232,12 @@ impl CachedDataset {
     }
 
     /// Resident size of the dataset: the condensed buffer plus its row
-    /// offsets — nothing dense (the preludes are O(n) to O(n²/2) on top
-    /// and not counted).
+    /// offsets for resident storage, or one chunk window plus the checksum
+    /// table for file-backed storage — **honest** accounting, never the
+    /// on-disk triangle size (the preludes are O(n) to O(n²/2) on top and
+    /// not counted).
     pub fn nbytes(&self) -> usize {
-        self.tri.resident_bytes()
+        self.storage.resident_bytes()
     }
 }
 
@@ -256,6 +288,23 @@ pub struct DatasetCache {
     /// Optional durable tier: result lookups (consulted by the job
     /// executor) plus the spill directory evicted triangles park in.
     store: Option<Arc<ResultStore>>,
+    /// Out-of-core paging absorbed from **evicted** file-backed datasets,
+    /// so the daemon's cumulative counters survive LRU turnover.
+    absorbed_chunks: AtomicU64,
+    absorbed_bytes: AtomicU64,
+}
+
+/// Cumulative out-of-core paging across a cache's datasets (resident
+/// file-backed handles plus everything absorbed from evicted ones) —
+/// surfaced through the daemon `stats` op.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OocorePaging {
+    /// File-backed datasets currently resident in the cache.
+    pub file_backed: usize,
+    /// Chunks paged in from disk, cumulative.
+    pub chunks_paged: u64,
+    /// Bytes paged in from disk, cumulative.
+    pub bytes_paged: u64,
 }
 
 impl DatasetCache {
@@ -267,6 +316,8 @@ impl DatasetCache {
             misses: AtomicUsize::new(0),
             inner: Mutex::new(CacheInner { map: BTreeMap::new(), order: Vec::new() }),
             store: None,
+            absorbed_chunks: AtomicU64::new(0),
+            absorbed_bytes: AtomicU64::new(0),
         }
     }
 
@@ -326,10 +377,23 @@ impl DatasetCache {
             }
             // Spill evicted triangles AFTER dropping the lock (segment
             // writes are fsynced IO) and best-effort: a failed spill only
-            // costs a future re-stream, never an analysis.
-            if let Some(store) = &self.store {
-                for old in victims {
-                    let _ = store.spill_dir().spill(old.key(), old.tri(), &old.grouping);
+            // costs a future re-stream, never an analysis.  File-backed
+            // datasets already live on disk in their own chunk file —
+            // nothing to spill; absorb their paging counters instead so
+            // the cumulative accounting survives the eviction.
+            for old in victims {
+                match old.storage().as_resident() {
+                    Some(tri) => {
+                        if let Some(store) = &self.store {
+                            let _ = store.spill_dir().spill(old.key(), tri, &old.grouping);
+                        }
+                    }
+                    None => {
+                        if let Some((chunks, bytes)) = old.storage().paging() {
+                            self.absorbed_chunks.fetch_add(chunks, Ordering::Relaxed);
+                            self.absorbed_bytes.fetch_add(bytes, Ordering::Relaxed);
+                        }
+                    }
                 }
             }
         }
@@ -341,9 +405,14 @@ impl DatasetCache {
     /// validation), otherwise the configured source.  Segment trouble —
     /// corruption, IO errors — silently degrades to a source load.
     fn load_or_unspill(&self, cfg: &RunConfig, key: &str) -> Result<CachedDataset> {
-        if let Some(store) = &self.store {
-            if let Ok(Some((tri, grouping))) = store.spill_dir().load(key) {
-                return Ok(CachedDataset::from_parts(key.to_string(), tri, grouping));
+        // A spill segment reloads the FULL triangle resident; a budgeted
+        // job must not take that path — it re-streams the source through
+        // the spill sink so its residency stays under the cap.
+        if cfg.max_resident_bytes == 0 {
+            if let Some(store) = &self.store {
+                if let Ok(Some((tri, grouping))) = store.spill_dir().load(key) {
+                    return Ok(CachedDataset::from_parts(key.to_string(), tri, grouping));
+                }
             }
         }
         CachedDataset::load(cfg)
@@ -362,6 +431,24 @@ impl DatasetCache {
     /// Approximate resident bytes across every cached dataset.
     pub fn resident_bytes(&self) -> usize {
         self.inner.lock().unwrap().map.values().map(|d| d.nbytes()).sum()
+    }
+
+    /// Cumulative out-of-core paging: resident file-backed datasets plus
+    /// the counters absorbed from evicted ones.
+    pub fn oocore_paging(&self) -> OocorePaging {
+        let mut p = OocorePaging {
+            file_backed: 0,
+            chunks_paged: self.absorbed_chunks.load(Ordering::Relaxed),
+            bytes_paged: self.absorbed_bytes.load(Ordering::Relaxed),
+        };
+        for ds in self.inner.lock().unwrap().map.values() {
+            if let Some((chunks, bytes)) = ds.storage().paging() {
+                p.file_backed += 1;
+                p.chunks_paged += chunks;
+                p.bytes_paged += bytes;
+            }
+        }
+        p
     }
 
     /// Current hit/miss/residency counters.
@@ -504,7 +591,7 @@ mod tests {
         let k = ds.kernel(Method::Permanova).unwrap();
         match k.as_ref() {
             crate::permanova::StatKernel::Permanova(p) => {
-                assert!(Arc::ptr_eq(&p.packed, ds.tri()), "prelude shares the dataset triangle");
+                assert!(Arc::ptr_eq(p.packed(), ds.tri()), "prelude shares the dataset triangle");
             }
             other => panic!("{other:?}"),
         }
@@ -591,6 +678,57 @@ mod tests {
         // Kernels restart empty and recompute on demand.
         assert_eq!(back.kernels_prepared(), 0);
         back.kernel(Method::Permanova).unwrap();
+    }
+
+    #[test]
+    fn budgeted_datasets_cache_file_backed_with_honest_residency() {
+        let cache = DatasetCache::new(4);
+        let mut capped = cfg(40, 1);
+        capped.max_resident_bytes = 400; // 40*39/2*4 = 3120 bytes > 400
+        let (ds, hit) = cache.get_or_load(&capped).unwrap();
+        assert!(!hit);
+        let file = ds.storage().as_file().expect("over-budget dataset is file-backed");
+        assert!(ds.nbytes() <= 400 + file.n() * 8, "one chunk window + checksums, not 3120");
+        // The prelude streams chunk-major: paging counters move, and the
+        // s_t it computes is bitwise the resident one.
+        let k = ds.kernel(Method::Permanova).unwrap();
+        let paging = cache.oocore_paging();
+        assert_eq!(paging.file_backed, 1);
+        assert!(paging.chunks_paged >= 1, "prelude paged at least one chunk");
+        let uncapped_cache = DatasetCache::new(4);
+        let (res, _) = uncapped_cache.get_or_load(&cfg(40, 1)).unwrap();
+        let rk = res.kernel(Method::Permanova).unwrap();
+        match (k.as_ref(), rk.as_ref()) {
+            (StatKernel::Permanova(a), StatKernel::Permanova(b)) => {
+                assert_eq!(a.s_t.to_bits(), b.s_t.to_bits(), "capped prelude is bitwise");
+            }
+            other => panic!("{other:?}"),
+        }
+        // Whole-triangle methods fail loudly, naming the knob.
+        let e = ds.kernel(Method::Anosim).unwrap_err().to_string();
+        assert!(e.contains("--max-resident-bytes"), "{e}");
+        // The cap is not part of the key: the capped entry answers the
+        // uncapped spelling of the same dataset (bitwise statistics).
+        assert!(cache.contains(&cfg(40, 1)), "cap is residency policy, not identity");
+    }
+
+    #[test]
+    fn evicting_a_file_backed_dataset_absorbs_its_paging() {
+        let cache = DatasetCache::new(1);
+        let mut capped = cfg(40, 1);
+        capped.max_resident_bytes = 400;
+        let (ds, _) = cache.get_or_load(&capped).unwrap();
+        ds.kernel(Method::Permanova).unwrap(); // page some chunks
+        let before = cache.oocore_paging();
+        assert!(before.chunks_paged >= 1);
+        drop(ds);
+        cache.get_or_load(&cfg(24, 2)).unwrap(); // evicts the capped entry
+        let after = cache.oocore_paging();
+        assert_eq!(after.file_backed, 0, "file-backed entry evicted");
+        assert_eq!(
+            after.chunks_paged, before.chunks_paged,
+            "cumulative counters survive eviction"
+        );
     }
 
     #[test]

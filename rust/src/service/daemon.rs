@@ -256,6 +256,20 @@ impl ServiceState {
         if let Some(store) = self.cache.store() {
             stats.push(("store", store.stats_json()));
         }
+        // Likewise the out-of-core section: only once budgeted jobs have
+        // actually paged (or hold file-backed datasets), so cap-free
+        // deployments keep their exact pre-out-of-core stats bytes.
+        let oo = self.cache.oocore_paging();
+        if oo.file_backed > 0 || oo.chunks_paged > 0 {
+            stats.push((
+                "oocore",
+                Json::obj(vec![
+                    ("file_backed", Json::num(oo.file_backed as f64)),
+                    ("chunks_paged", Json::num(oo.chunks_paged as f64)),
+                    ("bytes_paged", Json::num(oo.bytes_paged as f64)),
+                ]),
+            ));
+        }
         stats.push(("methods", Json::Obj(methods.into_iter().collect())));
         Json::obj(vec![
             ("id", Json::str(id)),

@@ -46,7 +46,9 @@ mod envelope;
 mod jobs;
 pub mod wire;
 
-pub use cache::{dataset_key, result_key, CacheStats, CachedDataset, DatasetCache};
+pub use cache::{
+    dataset_key, result_key, CacheStats, CachedDataset, DatasetCache, OocorePaging,
+};
 pub use daemon::{
     client_exchange, install_signal_handlers, Daemon, DaemonConfig, DaemonHandle, DaemonSummary,
 };

@@ -32,11 +32,12 @@
 //!
 //! [`MAX_TABLES`]: lsm::MAX_TABLES
 
-use std::path::PathBuf;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::jsonio::Json;
 
 mod lsm;
@@ -51,15 +52,25 @@ pub use spill::{SpillDir, SpillStats, SPILL_MAGIC};
 pub use ss_table::{SsTable, SST_MAGIC};
 pub use wal::Wal;
 
-/// FNV-1a 64 over raw bytes — the checksum/filename hash every layer of
-/// the store shares (the string edition lives in the service cache).
-pub fn fnv64_bytes(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64 offset basis — the running-hash start value for
+/// [`fnv64_fold`].
+pub const FNV64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a 64 hash.  Streaming producers (the
+/// out-of-core chunk writer hashes values as they arrive, block by block)
+/// carry `h` across calls; `fnv64_bytes` is the whole-buffer edition.
+pub fn fnv64_fold(mut h: u64, bytes: &[u8]) -> u64 {
     for b in bytes {
         h ^= *b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// FNV-1a 64 over raw bytes — the checksum/filename hash every layer of
+/// the store shares (the string edition lives in the service cache).
+pub fn fnv64_bytes(bytes: &[u8]) -> u64 {
+    fnv64_fold(FNV64_OFFSET, bytes)
 }
 
 /// Default on-disk budget for the result tables: generous for serialized
@@ -116,6 +127,76 @@ pub struct StoreStats {
     pub spill: SpillStats,
 }
 
+/// Advisory single-writer lock on a store directory: a `LOCK` file
+/// holding the owner's pid, created with `create_new` (an atomic
+/// exists-check + create on every platform).  Dropping the guard removes
+/// the file.
+#[derive(Debug)]
+struct StoreLock {
+    path: PathBuf,
+}
+
+impl StoreLock {
+    /// Acquire the lock under `dir`, reclaiming a stale file left by a
+    /// crashed holder (the WAL already makes crashes safe for *data*; the
+    /// lock only has to keep two *live* writers apart).
+    fn acquire(dir: &Path) -> Result<StoreLock> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| Error::io(dir.display().to_string(), e))?;
+        let path = dir.join("LOCK");
+        // One reclaim retry: a remove/create race with another starter
+        // must not spin, and losing that race is a correct conflict.
+        for attempt in 0..2 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{}", std::process::id());
+                    let _ = f.sync_all();
+                    return Ok(StoreLock { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let holder = std::fs::read_to_string(&path).unwrap_or_default();
+                    let holder = holder.trim().to_string();
+                    if attempt == 0 && lock_is_stale(&holder) {
+                        let _ = std::fs::remove_file(&path);
+                        continue;
+                    }
+                    return Err(Error::Config(format!(
+                        "result store {} is already open by pid {holder} \
+                         (lock file {}): a store directory has exactly one \
+                         writer — stop the other process or point this one \
+                         at a different --store-dir",
+                        dir.display(),
+                        path.display()
+                    )));
+                }
+                Err(e) => return Err(Error::io(path.display().to_string(), e)),
+            }
+        }
+        unreachable!("second attempt either locks or conflicts")
+    }
+}
+
+/// A lock is stale when its recorded holder is provably dead: an
+/// unparseable pid (torn write) or, where `/proc` exists, a pid with no
+/// live process.  A live pid — including our own, which means this
+/// process already opened the store — keeps the lock.
+fn lock_is_stale(holder: &str) -> bool {
+    match holder.parse::<u32>() {
+        Err(_) => true,
+        Ok(pid) => {
+            pid != std::process::id()
+                && Path::new("/proc").exists()
+                && !Path::new(&format!("/proc/{pid}")).exists()
+        }
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
 /// Thread-safe facade over one [`Lsm`] tree + its [`SpillDir`] — the
 /// handle [`DatasetCache`](crate::service::DatasetCache) carries and
 /// every job executor consults.
@@ -123,6 +204,10 @@ pub struct StoreStats {
 pub struct ResultStore {
     lsm: Mutex<Lsm>,
     spill: SpillDir,
+    /// Single-writer guard: taken by `drain()` (graceful shutdown) so a
+    /// successor can open the directory immediately; otherwise released
+    /// on drop.
+    lock: Mutex<Option<StoreLock>>,
     hits: AtomicU64,
     misses: AtomicU64,
     puts: AtomicU64,
@@ -130,7 +215,10 @@ pub struct ResultStore {
 
 impl ResultStore {
     /// Open (creating/replaying as needed) the store under `cfg.dir`.
+    /// Fails with a typed [`Error::Config`] naming the holder when
+    /// another live process already has the directory open.
     pub fn open(cfg: StoreConfig) -> Result<ResultStore> {
+        let lock = StoreLock::acquire(&cfg.dir)?;
         let spill = SpillDir::open(cfg.dir.join("spill"))?;
         let lsm = Lsm::open(LsmConfig {
             dir: cfg.dir,
@@ -140,6 +228,7 @@ impl ResultStore {
         Ok(ResultStore {
             lsm: Mutex::new(lsm),
             spill,
+            lock: Mutex::new(Some(lock)),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             puts: AtomicU64::new(0),
@@ -170,9 +259,12 @@ impl ResultStore {
     }
 
     /// Graceful-shutdown hook: flush the memtable to a sorted table so
-    /// the next boot replays nothing.
+    /// the next boot replays nothing, and release the single-writer lock
+    /// so a successor process can open the directory immediately.
     pub fn drain(&self) -> Result<()> {
-        self.lsm.lock().unwrap().drain()
+        self.lsm.lock().unwrap().drain()?;
+        self.lock.lock().unwrap().take();
+        Ok(())
     }
 
     /// The spill directory for evicted packed triangles.
@@ -287,5 +379,58 @@ mod tests {
         assert_eq!(fnv64_bytes(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv64_bytes(b"a"), 0xaf63_dc4c_8601_ec8c);
         assert_eq!(fnv64_bytes(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn fnv64_fold_composes_like_the_whole_buffer_hash() {
+        let h = fnv64_fold(fnv64_fold(FNV64_OFFSET, b"foo"), b"bar");
+        assert_eq!(h, fnv64_bytes(b"foobar"));
+        assert_eq!(fnv64_fold(FNV64_OFFSET, b""), fnv64_bytes(b""));
+    }
+
+    #[test]
+    fn second_open_names_the_live_holder() {
+        let cfg = tmp_store("lock_conflict");
+        let store = ResultStore::open(cfg.clone()).unwrap();
+        let e = ResultStore::open(cfg.clone()).unwrap_err().to_string();
+        let pid = std::process::id().to_string();
+        assert!(e.contains("already open"), "{e}");
+        assert!(e.contains(&pid), "names the holder pid: {e}");
+        assert!(e.contains("LOCK"), "names the lock file: {e}");
+        assert!(e.contains("--store-dir"), "names the remedy: {e}");
+        drop(store);
+        // Drop released the lock: the directory opens again.
+        ResultStore::open(cfg).unwrap();
+    }
+
+    #[test]
+    fn drain_releases_the_lock_before_drop() {
+        let cfg = tmp_store("lock_drain");
+        let store = ResultStore::open(cfg.clone()).unwrap();
+        store.put("k", b"v").unwrap();
+        store.drain().unwrap();
+        // The first handle is still alive, but drained: a successor may
+        // open the directory immediately (daemon handoff).
+        let successor = ResultStore::open(cfg).unwrap();
+        assert_eq!(successor.get("k"), Some(b"v".to_vec()));
+        drop(store);
+        // The drained handle's drop must not steal the successor's lock.
+        assert!(successor.lock.lock().unwrap().is_some());
+        let held = successor.lock.lock().unwrap().as_ref().unwrap().path.clone();
+        assert!(held.exists(), "successor's lock file survives the old drop");
+    }
+
+    #[test]
+    fn stale_lock_from_a_dead_pid_is_reclaimed() {
+        let cfg = tmp_store("lock_stale");
+        std::fs::create_dir_all(&cfg.dir).unwrap();
+        // No live process has this pid (far beyond any default pid_max);
+        // an unparseable holder is likewise stale.
+        std::fs::write(cfg.dir.join("LOCK"), "999999999\n").unwrap();
+        ResultStore::open(cfg.clone()).unwrap();
+        let _ = std::fs::remove_dir_all(&cfg.dir);
+        std::fs::create_dir_all(&cfg.dir).unwrap();
+        std::fs::write(cfg.dir.join("LOCK"), "torn#write").unwrap();
+        ResultStore::open(cfg).unwrap();
     }
 }

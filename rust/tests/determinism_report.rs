@@ -120,6 +120,7 @@ fn sample_report() -> RunReport {
             busy_secs: 0.125,
             simulated_secs: 0.0,
         }],
+        oocore: None,
         f_perms: vec![1.0; 99],
     }
 }

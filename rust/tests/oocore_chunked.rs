@@ -1,0 +1,239 @@
+//! Out-of-core conformance: a PERMANOVA run under a `max_resident_bytes`
+//! budget — triangle spilled to a chunk file, kernels sweeping it
+//! chunk-major — must be **bitwise identical** to the uncapped resident
+//! run on every backend, across shard / SMT / permutation-block settings.
+//!
+//! This is a stronger claim than cross-backend agreement (backends differ
+//! in f32 reduction order and agree only to tolerance): the chunked
+//! drivers replay each backend's *own* operation sequence — per-lane
+//! ascending row order with a carried accumulator — so capped ≡ uncapped
+//! holds per algorithm, bit for bit, while the run pages `chunks_paged ≥
+//! 1` windows through a residency that never exceeds the budget.
+
+use std::sync::Arc;
+
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::dmat::{
+    file_backed_from, random_euclidean_condensed, read_pdm_storage, CondensedMatrix,
+    DistanceMatrix,
+};
+use permanova_apu::permanova::{Method, SwAlgorithm};
+use permanova_apu::report::AnalysisReport;
+use permanova_apu::request::AnalysisRequest;
+use permanova_apu::Error;
+
+const N: usize = 56;
+const K: usize = 4;
+const N_PERMS: usize = 99;
+const SEED: u64 = 0xBEEF;
+/// Packed triangle: 56*55/2 * 4 = 6160 bytes; this budget forces several
+/// paging cycles per sweep.
+const BUDGET: u64 = 1000;
+
+fn cfg(backend: &str, cap: u64) -> RunConfig {
+    RunConfig {
+        data: DataSource::Synthetic { n_dims: N, n_groups: K },
+        backend: backend.to_string(),
+        n_perms: N_PERMS,
+        seed: SEED,
+        threads: 2,
+        max_resident_bytes: cap,
+        ..Default::default()
+    }
+}
+
+fn run(cfg: &RunConfig) -> AnalysisReport {
+    AnalysisRequest::new(cfg).run().unwrap()
+}
+
+fn assert_bitwise(capped: &AnalysisReport, uncapped: &AnalysisReport, tag: &str) {
+    assert_eq!(capped.f_obs.to_bits(), uncapped.f_obs.to_bits(), "{tag}: f_obs");
+    assert_eq!(capped.p_value.to_bits(), uncapped.p_value.to_bits(), "{tag}: p_value");
+    assert_eq!(capped.f_perms.len(), uncapped.f_perms.len(), "{tag}: perm count");
+    for (i, (a, b)) in capped.f_perms.iter().zip(&uncapped.f_perms).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: f_perms[{i}]");
+    }
+}
+
+/// The acceptance criterion: every backend, capped ≡ uncapped bitwise,
+/// with the capped run visibly paging.
+#[test]
+fn capped_runs_are_bitwise_identical_per_backend() {
+    for backend in
+        ["native", "native-brute", "native-tiled", "native-flat", "native-batch", "simulator",
+         "simulator-gpu"]
+    {
+        let uncapped = run(&cfg(backend, 0));
+        let capped = run(&cfg(backend, BUDGET));
+        assert_bitwise(&capped, &uncapped, backend);
+        assert!(uncapped.oocore.is_none(), "{backend}: uncapped reports carry no oocore section");
+        let oo = capped.oocore.as_ref().unwrap_or_else(|| panic!("{backend}: capped run must report paging"));
+        assert_eq!(oo.resident_cap, BUDGET, "{backend}");
+        assert!(oo.chunks_paged >= 1, "{backend}: paged {} chunks", oo.chunks_paged);
+        assert!(oo.bytes_paged > 0, "{backend}");
+    }
+}
+
+/// The budget interacts with every scheduler knob: shards, SMT
+/// oversubscription, and the batched engine's block width must not break
+/// the bitwise tie (each lane still sweeps rows in ascending order with a
+/// carried accumulator).
+#[test]
+fn capped_runs_survive_scheduler_knobs() {
+    for (threads, shard_size, smt) in [(1, 0, false), (3, 7, false), (2, 16, true)] {
+        let mk = |cap: u64| RunConfig {
+            threads,
+            shard_size,
+            smt_oversubscribe: smt,
+            ..cfg("native-flat", cap)
+        };
+        let tag = format!("t{threads}/s{shard_size}/smt{smt}");
+        assert_bitwise(&run(&mk(BUDGET)), &run(&mk(0)), &tag);
+    }
+    for perm_block in [1, 8, 64] {
+        let mk = |cap: u64| RunConfig { perm_block, ..cfg("native-batch", cap) };
+        let tag = format!("block{perm_block}");
+        let capped = run(&mk(BUDGET));
+        assert_bitwise(&capped, &run(&mk(0)), &tag);
+        assert!(capped.oocore.as_ref().unwrap().chunks_paged >= 1, "{tag}");
+    }
+}
+
+/// Explicit kernel algorithms: brute, flat, and tiled (whose chunk plan
+/// must align to tile stripes) all hold the tie.
+#[test]
+fn capped_runs_hold_across_kernel_algorithms() {
+    for algo in [SwAlgorithm::Brute, SwAlgorithm::Flat, SwAlgorithm::Tiled { tile: 8 }] {
+        let mk = |cap: u64| RunConfig { algo, ..cfg("native", cap) };
+        assert_bitwise(&run(&mk(BUDGET)), &run(&mk(0)), &format!("{algo:?}"));
+    }
+}
+
+/// Ingest-spill round-trip: a PDM file streamed through the budgeted sink
+/// spills to a chunk file whose replayed stream is bitwise the resident
+/// triangle — the spill path changes residency, never values.
+#[test]
+fn ingest_spill_roundtrips_bitwise() {
+    let dir = std::env::temp_dir().join("permanova_apu_oocore_ingest_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mpath = dir.join("m.pdm");
+    let mat = DistanceMatrix::random_euclidean(48, 6, 3);
+    mat.write_binary(&mpath).unwrap();
+    let oracle = CondensedMatrix::from_dense(&mat);
+
+    let storage = read_pdm_storage(&mpath, 1e-4, 700).unwrap();
+    let file = storage.as_file().expect("48*47/2*4 = 4512 bytes > 700 must spill");
+    assert!(file.resident_bytes() <= 700 + file.n() * 8, "honest residency");
+    let mut replayed = Vec::new();
+    for (r0, r1) in file.chunk_plan(1) {
+        replayed.extend_from_slice(file.load_chunk(r0, r1).unwrap().values());
+    }
+    assert_eq!(replayed, oracle.values(), "spilled stream ≡ from_dense oracle");
+    assert!(file.chunks_paged() >= 2, "the replay actually paged");
+}
+
+/// A corrupted chunk file is rejected at load with a checksum error, not
+/// silently analyzed.
+#[test]
+fn corrupt_chunk_files_fail_the_checksum() {
+    let tri = random_euclidean_condensed(32, 4, 9);
+    let storage = file_backed_from(&tri, 300).unwrap();
+    let file = storage.as_file().unwrap();
+    let path = file.path().to_path_buf();
+    // Flip one byte in the value region (past the 20-byte header).
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[40] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = (0..32)
+        .zip(1..33)
+        .find_map(|(r0, r1)| file.load_chunk(r0, r1).err())
+        .expect("some chunk must fail its checksum");
+    assert!(err.to_string().contains("checksum"), "{err}");
+}
+
+/// Methods that need the whole triangle resident fail loudly under a
+/// budget, naming the knob — never a silent dense materialization.
+#[test]
+fn whole_triangle_methods_fail_loudly_under_budget() {
+    for method in [Method::Anosim, Method::Permdisp, Method::PairwisePermanova] {
+        let c = RunConfig { method, ..cfg("native", BUDGET) };
+        match AnalysisRequest::new(&c).run() {
+            Err(Error::Config(m)) => {
+                assert!(m.contains("--max-resident-bytes"), "{method:?}: {m}");
+            }
+            Ok(_) => panic!("{method:?} must not run file-backed"),
+            Err(e) => panic!("{method:?}: want Error::Config, got {e:?}"),
+        }
+        // The same method under no cap (or a roomy one) still runs.
+        let roomy = RunConfig { method, max_resident_bytes: 1 << 20, ..cfg("native", 0) };
+        AnalysisRequest::new(&roomy).run().unwrap();
+    }
+}
+
+/// The capped report's JSON carries the oocore section; the uncapped
+/// report's JSON is byte-identical to the pre-out-of-core schema (no new
+/// key leaks into cap-free runs — the store's verbatim-replay contract).
+#[test]
+fn report_json_gains_oocore_only_when_capped() {
+    let uncapped = run(&cfg("native-flat", 0)).to_json().to_string();
+    assert!(!uncapped.contains("oocore"), "{uncapped}");
+    let capped = run(&cfg("native-flat", BUDGET));
+    let doc = capped.to_json();
+    let oo = doc.get("oocore").expect("capped report JSON carries oocore");
+    assert_eq!(oo.req_usize("resident_cap").unwrap() as u64, BUDGET);
+    assert!(oo.req_usize("chunks_paged").unwrap() >= 1);
+    let rendered = capped.render();
+    assert!(rendered.contains("paging"), "{rendered}");
+}
+
+/// The scratch chunk file is removed when the storage drops — budgeted
+/// runs leave nothing behind in the scratch directory.
+#[test]
+fn scratch_files_are_cleaned_up_on_drop() {
+    let tri = random_euclidean_condensed(24, 4, 5);
+    let storage = file_backed_from(&tri, 200).unwrap();
+    let path = storage.as_file().unwrap().path().to_path_buf();
+    assert!(path.exists());
+    // Clone shares the same Arc'd file; dropping the last handle deletes.
+    let clone = storage.clone();
+    drop(storage);
+    assert!(path.exists(), "file survives while a handle lives");
+    drop(clone);
+    assert!(!path.exists(), "last drop removes the scratch file");
+}
+
+/// Sub-range batches (what shards execute) line up with the full capped
+/// sweep — paging is per-batch, results are position-independent.
+#[test]
+fn capped_equals_uncapped_through_the_cache_path() {
+    use permanova_apu::service::DatasetCache;
+    let cache = DatasetCache::new(4);
+    let capped_cfg = cfg("native-flat", BUDGET);
+    let (warm1, h1) =
+        AnalysisRequest::new(&capped_cfg).via_cache(&cache).run_traced().unwrap();
+    let (warm2, h2) =
+        AnalysisRequest::new(&capped_cfg).via_cache(&cache).run_traced().unwrap();
+    assert!(!h1 && h2, "second capped lookup hits the file-backed entry");
+    assert_bitwise(&warm1, &warm2, "warm capped");
+    assert_bitwise(&warm1, &run(&cfg("native-flat", 0)), "capped via cache vs uncapped cold");
+    let paging = cache.oocore_paging();
+    assert_eq!(paging.file_backed, 1);
+    assert!(paging.chunks_paged >= 2, "both jobs paged through the shared handle");
+}
+
+/// `file_backed_from` itself: the spill helper's file replays the source
+/// triangle bitwise (the oracle the kernel tests build on).
+#[test]
+fn file_backed_from_replays_bitwise() {
+    let tri = random_euclidean_condensed(41, 5, 7);
+    let storage = file_backed_from(&tri, 512).unwrap();
+    let file = storage.as_file().unwrap();
+    assert_eq!(file.n(), 41);
+    assert_eq!(file.count(), 41 * 40 / 2);
+    let mut replayed = Vec::new();
+    for (r0, r1) in file.chunk_plan(1) {
+        replayed.extend_from_slice(file.load_chunk(r0, r1).unwrap().values());
+    }
+    assert_eq!(replayed, tri.values());
+    let _ = Arc::new(tri); // keep the resident copy alive past the replay
+}
