@@ -10,7 +10,7 @@ PYTHON ?= python3
 ARTIFACTS_DIR ?= artifacts
 
 .PHONY: all build test bench bench-quick ingest-check serve-demo daemon-demo store-demo \
-        oocore-demo lint fmt clippy doc artifacts pytest clean
+        oocore-demo chaos-demo lint fmt clippy doc artifacts pytest clean
 
 all: build
 
@@ -139,6 +139,41 @@ oocore-demo: build
 	    && echo "ok: capped $$a matches resident bitwise" \
 	    || { echo "capped/resident $$key diverged: '$$b' vs '$$a'"; exit 1; }; \
 	done
+
+# The robustness edition: one daemon generation under an armed fault
+# plan — the first connection is dropped at accept, every WAL append
+# fails (latching the store read-only after 3 consecutive failures), and
+# the first scratch chunk read reports corruption (re-materialized from
+# the source once).  The retrying client must still get every answer,
+# the stats probe must show the damage (degraded store, scratch
+# rebuild), and the daemon must drain cleanly.  See DESIGN.md §2.13.
+CHAOS_PLAN ?= wire.accept:drop@1,store.wal.write:err@p=1/7,scratch.read:corrupt@1
+chaos-demo: build
+	rm -rf demo_chaos_store
+	printf '%s\n' \
+	  '{"v": 1, "id": "oocore", "request": {"n_perms": 199, "seed": 1, "max_resident_bytes": 2000, "data": {"source": "synthetic", "n_dims": 96, "n_groups": 4, "seed": 42}}}' \
+	  '{"v": 1, "id": "perma", "request": {"n_perms": 199, "seed": 2, "data": {"source": "synthetic", "n_dims": 96, "n_groups": 4, "seed": 42}}}' \
+	  '{"v": 1, "id": "rank", "request": {"method": "anosim", "backend": "native-batch", "n_perms": 199, "seed": 3, "data": {"source": "synthetic", "n_dims": 96, "n_groups": 4, "seed": 42}}}' \
+	  > demo_chaos_jobs.jsonl
+	./target/release/permanova-apu serve --listen $(DAEMON_ADDR) \
+	  --store-dir demo_chaos_store --fault-plan '$(CHAOS_PLAN)' \
+	  > demo_chaos.log 2>&1 & \
+	for _ in $$(seq 1 100); do grep -q 'listening on' demo_chaos.log && break; sleep 0.1; done
+	./target/release/permanova-apu client --addr $(DAEMON_ADDR) \
+	  --jobs demo_chaos_jobs.jsonl --retries 3 | tee demo_chaos_responses.jsonl
+	@test "$$(grep -cE '"ok": ?true' demo_chaos_responses.jsonl)" -eq 3 \
+	  && echo 'ok: every job answered despite the fault campaign' \
+	  || { echo 'a job failed under faults'; cat demo_chaos.log; exit 1; }
+	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --stats \
+	  | tee demo_chaos_stats.jsonl
+	@grep -qE '"degraded": ?true' demo_chaos_stats.jsonl \
+	  && echo 'ok: the store degraded loudly instead of failing analyses' \
+	  || { echo 'expected a degraded store in stats'; exit 1; }
+	@grep -qE '"scratch_rebuilds": ?[1-9]' demo_chaos_stats.jsonl \
+	  && echo 'ok: the scratch corruption was re-materialized once' \
+	  || { echo 'expected a scratch rebuild in stats'; exit 1; }
+	./target/release/permanova-apu client --addr $(DAEMON_ADDR) --shutdown
+	@sleep 0.5; cat demo_chaos.log
 
 lint: fmt clippy
 

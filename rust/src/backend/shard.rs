@@ -286,9 +286,11 @@ pub struct SharedPool<'env> {
     barrier: &'env Barrier,
     job: &'env Mutex<PoolJob>,
     dispatched: &'env AtomicUsize,
-    /// Set when a worker's job panicked (the panic is caught so the
-    /// worker still reaches its barrier; `run` re-raises it).
-    poisoned: &'env std::sync::atomic::AtomicBool,
+    /// The first worker panic message of the current job, if any (the
+    /// panic is caught so the worker still reaches its barrier; `run`
+    /// re-raises it with this message, so containment layers above —
+    /// the daemon's per-job catch — can report the real cause).
+    panicked: &'env Mutex<Option<String>>,
 }
 
 thread_local! {
@@ -339,16 +341,17 @@ impl<'env> SharedPool<'env> {
     /// A panic inside `work` on any worker is caught there (so every
     /// worker still reaches the join barrier — no deadlock) and re-raised
     /// here on the dispatching thread, matching the scoped-crew path's
-    /// panic-at-join behaviour.  The original panic message has already
-    /// been printed by the panic hook at unwind time.
+    /// panic-at-join behaviour.  The re-raise carries the first worker's
+    /// panic message, so a containment layer above (the daemon catching
+    /// per job) can name the real cause in its `ok:false` response.
     pub fn run<F: Fn(usize) + Sync>(&self, work: &F) {
         *self.job.lock().unwrap() =
             PoolJob { call: Some(pool_trampoline::<F>), data: work as *const F as *const () };
         self.dispatched.fetch_add(1, Ordering::Relaxed);
         self.barrier.wait(); // release the workers
         self.barrier.wait(); // join the workers
-        if self.poisoned.swap(false, Ordering::AcqRel) {
-            panic!("a shared-pool worker panicked while running a dispatched job");
+        if let Some(msg) = self.panicked.lock().unwrap().take() {
+            panic!("a shared-pool worker panicked while running a dispatched job: {msg}");
         }
     }
 
@@ -387,12 +390,12 @@ pub fn with_shared_pool<R>(workers: usize, driver: impl FnOnce(&SharedPool<'_>) 
     let barrier = Barrier::new(threads + 1);
     let job = Mutex::new(PoolJob { call: None, data: std::ptr::null() });
     let dispatched = AtomicUsize::new(0);
-    let poisoned = std::sync::atomic::AtomicBool::new(false);
+    let panicked: Mutex<Option<String>> = Mutex::new(None);
     std::thread::scope(|s| {
         for t in 0..threads {
             let barrier = &barrier;
             let job = &job;
-            let poisoned = &poisoned;
+            let panicked = &panicked;
             s.spawn(move || loop {
                 barrier.wait(); // wait for a dispatch (or shutdown)
                 let slot = *job.lock().unwrap();
@@ -406,8 +409,18 @@ pub fn with_shared_pool<R>(workers: usize, driver: impl FnOnce(&SharedPool<'_>) 
                         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                             || unsafe { call(slot.data, t) },
                         ));
-                        if r.is_err() {
-                            poisoned.store(true, Ordering::Release);
+                        if let Err(payload) = r {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "non-string panic payload".to_string());
+                            // First panic wins; later ones raced it and
+                            // would only overwrite the root cause.
+                            let mut slot = panicked.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(msg);
+                            }
                         }
                     }
                 }
@@ -419,7 +432,7 @@ pub fn with_shared_pool<R>(workers: usize, driver: impl FnOnce(&SharedPool<'_>) 
             barrier: &barrier,
             job: &job,
             dispatched: &dispatched,
-            poisoned: &poisoned,
+            panicked: &panicked,
         };
         let prev = AMBIENT_POOL.with(|c| c.replace(&pool as *const SharedPool<'_> as *const ()));
         // Drop runs in reverse declaration order, so an unwinding driver

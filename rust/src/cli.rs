@@ -142,8 +142,8 @@ pub fn usage() -> String {
     let mut s = String::from("permanova-apu — PERMANOVA on APU-class hardware\n\nCommands:\n");
     for (cmd, desc) in [
         ("run", "permutation test: --method permanova|anosim|permdisp|pairwise --n-dims N --n-groups K --n-perms P --algo brute|tiled|flat --backend NAME --perm-block B --threads T --shard-size S --smt-oversubscribe --seed S --data-seed D --data-tol T --max-resident-bytes B (0 = unbounded; smaller datasets spill to disk and run chunk-major, bitwise identical) --repeat N [--store-dir DIR [--store-capacity-bytes B] | --no-store] --json out.json --config file.toml | --pdm file --labels file (file input is validated on load); legacy oracle-path companions (bypass the backend engine): --pairwise --anosim --permdisp"),
-        ("serve", "JSONL job batch through the shared-dataset service: --jobs FILE [--out FILE] [--cache-capacity N] [--threads T]; --listen HOST:PORT runs the TCP daemon instead (adds --queue-depth N; SIGTERM/ctrl-C drains); --store-dir DIR attaches the durable result store (crash-safe; warm state survives restarts; --store-capacity-bytes B bounds it, --no-store disables); --check FILE validates a response document"),
-        ("client", "speak to a running daemon: --addr HOST:PORT with any of --jobs FILE (pipelined v1/legacy requests), --stats, --shutdown; prints one JSONL response per request; exits non-zero when any job fails"),
+        ("serve", "JSONL job batch through the shared-dataset service: --jobs FILE [--out FILE] [--cache-capacity N] [--threads T]; --listen HOST:PORT runs the TCP daemon instead (adds --queue-depth N; SIGTERM/ctrl-C drains); --store-dir DIR attaches the durable result store (crash-safe; warm state survives restarts; --store-capacity-bytes B bounds it, --no-store disables); --fault-plan SPEC arms deterministic fault injection for chaos drills (e.g. store.wal.write:err@3,scratch.read:corrupt@2 — see DESIGN.md §2.13); --check FILE validates a response document"),
+        ("client", "speak to a running daemon: --addr HOST:PORT with any of --jobs FILE (pipelined v1/legacy requests), --stats, --shutdown; --retries N reconnects-and-resumes dropped exchanges and re-asks shed requests with capped jittered backoff (honoring retry_after; --retry-budget-ms MS caps the total); prints one JSONL response per request; exits non-zero when any job fails"),
         ("bench", "backend x method sweep -> BENCH_PERMANOVA.json: --quick | --backends a,b --methods permanova,anosim --n-dims 128,256 --n-perms 499 --n-groups K --perm-block B --threads T --shard-size S --smt-oversubscribe --throughput-jobs J --latency-clients 1,4 (0 disables) --out FILE; --check FILE validates an existing document"),
         ("backends", "list registered backends with their capabilities (alias: --list-backends)"),
         ("pipeline", "end-to-end: community -> UniFrac -> PERMANOVA: --taxa --samples --groups --n-perms --metric unweighted|weighted --anosim"),
@@ -230,6 +230,29 @@ fn store_settings_from_args(args: &Args) -> Result<crate::config::StoreSettings>
         s.enabled = false;
     }
     Ok(s)
+}
+
+/// Resolve and arm the deterministic fault-injection plan: the `[fault]`
+/// config section (when `--config` is given), overridden by
+/// `--fault-plan SPEC`.  Returns the armed spec for the startup notice,
+/// `None` when no plan was requested (the common case — injection stays
+/// a single relaxed atomic load at every seam).
+fn install_fault_plan_from_args(args: &Args) -> Result<Option<String>> {
+    let mut spec = if let Some(path) = args.str_flag("config") {
+        crate::config::FaultSettings::from_toml(&TomlDoc::load(path)?)?.plan
+    } else {
+        None
+    };
+    if let Some(s) = args.str_flag("fault-plan") {
+        spec = Some(s.to_string());
+    }
+    match spec {
+        Some(s) => {
+            crate::inject::install(crate::inject::FaultPlan::parse(&s)?);
+            Ok(Some(s))
+        }
+        None => Ok(None),
+    }
 }
 
 /// Open the resolved durable store, if one is enabled (`None` = run
@@ -534,6 +557,12 @@ fn cmd_serve(args: &Args) -> Result<String> {
         return Ok(format!("responses ok: {path} ({ok} ok, {failed} failed)\n"));
     }
 
+    // Chaos drills arm the plan for the daemon and the file batch alike
+    // (the one-shot `run` path deliberately has no injection knob).
+    if let Some(spec) = install_fault_plan_from_args(args)? {
+        eprintln!("fault injection ARMED: {spec} (chaos drill — not for production)");
+    }
+
     if let Some(addr) = args.str_flag("listen") {
         return cmd_serve_daemon(args, addr);
     }
@@ -606,7 +635,7 @@ fn cmd_serve_daemon(args: &Args, addr: &str) -> Result<String> {
 /// request order.
 fn cmd_client(args: &Args) -> Result<String> {
     use crate::jsonio::Json;
-    use crate::service::{client_exchange, envelope_v1};
+    use crate::service::{client_exchange_retrying, envelope_v1, RetryPolicy};
 
     let addr = args
         .str_flag("addr")
@@ -641,7 +670,14 @@ fn cmd_client(args: &Args) -> Result<String> {
             "client needs at least one of --jobs FILE, --stats, --shutdown".into(),
         ));
     }
-    let responses = client_exchange(&addr, &requests)?;
+    // --retries 0 (the default) is byte-for-byte the old single-shot
+    // exchange; anything higher adds reconnect-and-resume plus shed
+    // retries with capped, jittered backoff.
+    let policy = RetryPolicy {
+        retries: args.usize_flag("retries", 0)?,
+        budget_ms: args.u64_flag("retry-budget-ms", 0)?,
+    };
+    let responses = client_exchange_retrying(&addr, &requests, policy)?;
     let mut out = String::new();
     for r in &responses {
         out.push_str(&r.to_string());

@@ -317,6 +317,28 @@ impl StoreSettings {
     }
 }
 
+/// The `[fault]` config section: an optional deterministic
+/// fault-injection plan for chaos drills (see
+/// [`FaultPlan`](crate::inject::FaultPlan) for the spec grammar).
+/// `--fault-plan SPEC` overrides the file.  Absent — the default, and
+/// the only sane production state — no plan is armed and every
+/// injection seam costs one relaxed atomic load.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct FaultSettings {
+    /// Comma-separated fault directives (`[fault] plan`); `None` = off.
+    pub plan: Option<String>,
+}
+
+impl FaultSettings {
+    /// Read the `[fault]` section (absent section or key = disabled).
+    /// The spec itself is validated where it is armed, so a config file
+    /// with a bad plan fails loudly at startup, not at first consult.
+    pub fn from_toml(doc: &TomlDoc) -> Result<FaultSettings> {
+        let plan = doc.str_or("fault", "plan", "");
+        Ok(FaultSettings { plan: if plan.is_empty() { None } else { Some(plan) } })
+    }
+}
+
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {

@@ -24,6 +24,7 @@ use crate::config::{DataSource, RunConfig};
 use crate::dmat::{
     random_euclidean_condensed, random_euclidean_storage, read_pdm_condensed, read_pdm_storage,
     read_tsv_condensed, read_tsv_storage, CondensedMatrix, DistanceMatrix, TriangleStorage,
+    TriangleWriter,
 };
 use crate::error::{Error, Result};
 use crate::permanova::Grouping;
@@ -114,7 +115,51 @@ pub fn load_data(cfg: &RunConfig) -> Result<(Arc<CondensedMatrix>, Grouping)> {
 /// it chunk-major.  The UniFrac pipeline computes a dense `n²` matrix by
 /// construction, so a budget smaller than its packed triangle is an
 /// honest [`Error::Config`] rather than a silent blow-through.
+///
+/// File-backed storage additionally gets the scratch-read recovery hook:
+/// a failed chunk read (checksum or IO) re-materializes the spill file
+/// from this same config once before the error surfaces
+/// ([`FileTriangle::load_chunk`](crate::dmat::FileTriangle::load_chunk)).
 pub fn load_storage(cfg: &RunConfig) -> Result<(TriangleStorage, Grouping)> {
+    let (storage, grouping) = load_storage_uninstrumented(cfg)?;
+    if let TriangleStorage::FileBacked(ft) = &storage {
+        let source = cfg.clone();
+        ft.set_rebuild(Box::new(move |path, n| rebuild_scratch(&source, path, n)));
+    }
+    Ok((storage, grouping))
+}
+
+/// Scratch-read recovery: re-run the config's loader into a fresh spill
+/// file, then copy it chunk-wise (re-validated by the fresh file's own
+/// checksums) into a sealed `TRC1` file at `path` — the path the failing
+/// [`FileTriangle`](crate::dmat::FileTriangle) handle owns.  The copy
+/// goes through [`TriangleWriter`], so the rebuilt file carries fresh
+/// checksums matching the ones the open handle already holds (the value
+/// stream is a pure function of the source).
+fn rebuild_scratch(cfg: &RunConfig, path: &std::path::Path, n: usize) -> Result<()> {
+    let (fresh, _grouping) = load_storage_uninstrumented(cfg)?;
+    if fresh.n() != n {
+        return Err(Error::Config(format!(
+            "scratch rebuild loaded n = {} where the chunk file expects n = {n} — \
+             the dataset source changed mid-run",
+            fresh.n()
+        )));
+    }
+    let mut w = TriangleWriter::create(path, n)?;
+    match &fresh {
+        TriangleStorage::Resident(tri) => w.push_all(tri.values())?,
+        TriangleStorage::FileBacked(f) => {
+            for (r0, r1) in f.chunk_plan(1) {
+                w.push_all(f.load_chunk(r0, r1)?.values())?;
+            }
+        }
+    }
+    w.seal()
+}
+
+/// The storage loader proper, minus the recovery hook (which must not
+/// recurse: a rebuild's own chunk reads get no second-level rebuild).
+fn load_storage_uninstrumented(cfg: &RunConfig) -> Result<(TriangleStorage, Grouping)> {
     let budget = cfg.max_resident_bytes;
     if budget == 0 {
         let (tri, grouping) = load_data(cfg)?;

@@ -50,7 +50,7 @@ use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::condensed::CondensedMatrix;
 use crate::error::{Error, Result};
@@ -149,12 +149,18 @@ impl TriangleChunk {
     }
 }
 
+/// A hook that re-materializes the `TRC1` file at `path` (an `n`-object
+/// triangle) from the original dataset source, leaving a sealed file at
+/// exactly `path`.  Installed by
+/// [`load_storage`](crate::coordinator::load_storage) where the run
+/// config — and therefore the source — is known.
+pub type RebuildFn = Box<dyn Fn(&Path, usize) -> Result<()> + Send + Sync>;
+
 /// The on-disk packed triangle: `TRC1` file + checksum table + budget.
 ///
 /// Owns its file: dropping the last handle deletes it (chunk files are
 /// per-run scratch, not durable artifacts — durable state lives in the
 /// result store).
-#[derive(Debug)]
 pub struct FileTriangle {
     path: PathBuf,
     n: usize,
@@ -163,6 +169,27 @@ pub struct FileTriangle {
     checksums: Vec<u64>,
     chunks_paged: AtomicU64,
     bytes_paged: AtomicU64,
+    /// Scratch-read recovery: when a chunk read fails its checksum or IO,
+    /// this hook rebuilds the file from the source before one retry.
+    /// Held in a `Mutex` so concurrent readers serialize on a rebuild
+    /// instead of racing to rewrite the same file.
+    rebuild: Mutex<Option<RebuildFn>>,
+    rebuilds: AtomicU64,
+}
+
+// Manual impl: the boxed rebuild hook has no `Debug` of its own.
+impl std::fmt::Debug for FileTriangle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FileTriangle")
+            .field("path", &self.path)
+            .field("n", &self.n)
+            .field("budget_bytes", &self.budget_bytes)
+            .field("blocks", &self.checksums.len())
+            .field("chunks_paged", &self.chunks_paged)
+            .field("bytes_paged", &self.bytes_paged)
+            .field("rebuilds", &self.rebuilds)
+            .finish()
+    }
 }
 
 impl FileTriangle {
@@ -212,7 +239,19 @@ impl FileTriangle {
             checksums,
             chunks_paged: AtomicU64::new(0),
             bytes_paged: AtomicU64::new(0),
+            rebuild: Mutex::new(None),
+            rebuilds: AtomicU64::new(0),
         })
+    }
+
+    /// Install the scratch-read recovery hook (see [`RebuildFn`]).
+    pub fn set_rebuild(&self, hook: RebuildFn) {
+        *self.rebuild.lock().unwrap() = Some(hook);
+    }
+
+    /// Re-materializations performed after failed chunk reads.
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds.load(Ordering::Relaxed)
     }
 
     /// Number of objects (matrix edge).
@@ -290,7 +329,49 @@ impl FileTriangle {
     /// checksum block the range touches.  Reads are block-granular (the
     /// checksum unit), so `bytes_paged` counts what actually crossed the
     /// disk boundary, not just the values requested.
+    ///
+    /// Failure containment: a checksum or IO failure triggers **one**
+    /// re-materialization of the file from the original source (when a
+    /// [`RebuildFn`] is installed) followed by one retry; only a second
+    /// failure surfaces, and its error says the rebuild was attempted.
     pub fn load_chunk(&self, r0: usize, r1: usize) -> Result<TriangleChunk> {
+        let first = match self.read_chunk(r0, r1) {
+            Ok(chunk) => return Ok(chunk),
+            // Only data-path failures are recoverable by a rebuild;
+            // a bad row range is the caller's bug and passes through.
+            Err(e @ (Error::Io { .. } | Error::InvalidInput(_))) => e,
+            Err(e) => return Err(e),
+        };
+        // Hold the hook lock across the rebuild + retry so concurrent
+        // readers wait for one rewrite instead of racing their own.
+        let guard = self.rebuild.lock().unwrap();
+        let Some(hook) = guard.as_ref() else {
+            return Err(first);
+        };
+        self.rebuilds.fetch_add(1, Ordering::Relaxed);
+        eprintln!(
+            "triangle chunk file {}: read failed ({first}); re-materializing from \
+             the original source (one retry)",
+            self.path.display()
+        );
+        if let Err(re) = hook(&self.path, self.n) {
+            return Err(Error::InvalidInput(format!(
+                "triangle chunk file {}: chunk read failed ({first}) and \
+                 re-materialization from the source failed too ({re})",
+                self.path.display()
+            )));
+        }
+        self.read_chunk(r0, r1).map_err(|second| {
+            Error::InvalidInput(format!(
+                "triangle chunk file {}: chunk read failed even after \
+                 re-materializing from the source ({second})",
+                self.path.display()
+            ))
+        })
+    }
+
+    /// One raw attempt at paging rows `[r0, r1)` — no recovery.
+    fn read_chunk(&self, r0: usize, r1: usize) -> Result<TriangleChunk> {
         let n = self.n;
         if r0 > r1 || r1 > n {
             return Err(Error::Config(format!("chunk rows [{r0},{r1}) out of range for n = {n}")));
@@ -299,6 +380,26 @@ impl FileTriangle {
         let v1 = row_start(n, r1);
         if v0 == v1 {
             return TriangleChunk::from_values(n, r0, r1, Vec::new());
+        }
+        // Fault seam: `corrupt` forges the checksum-mismatch error a
+        // flipped bit produces; `err` forges the IO error a failing disk
+        // produces.  Each consult covers one read attempt, so `@<n>`
+        // plans can fail the first attempt and let the retry succeed.
+        match crate::inject::check("scratch.read") {
+            Some(crate::inject::FaultKind::Corrupt) => {
+                return Err(Error::InvalidInput(format!(
+                    "triangle chunk file {}: checksum mismatch in block 0 \
+                     (injected fault) — file corrupt, re-ingest the dataset",
+                    self.path.display()
+                )));
+            }
+            Some(crate::inject::FaultKind::Err) => {
+                return Err(Error::io(
+                    self.path.display().to_string(),
+                    std::io::Error::other("injected fault: scratch.read:err"),
+                ));
+            }
+            _ => {}
         }
         let count = self.count();
         let b0 = v0 / TRC_BLOCK_VALUES;
@@ -362,6 +463,11 @@ impl TriangleWriter {
     pub fn create(path: impl AsRef<Path>, n: usize) -> Result<TriangleWriter> {
         let final_path = path.as_ref().to_path_buf();
         let tmp_path = final_path.with_extension("tmp");
+        // Fault seam: fail spill-file creation before any byte lands, the
+        // same clean failure a full scratch volume gives.
+        if let Some(e) = crate::inject::io_error("scratch.write") {
+            return Err(Error::io(tmp_path.display().to_string(), e));
+        }
         let f = File::create(&tmp_path)
             .map_err(|e| Error::io(tmp_path.display().to_string(), e))?;
         let mut w = BufWriter::new(f);
@@ -413,7 +519,16 @@ impl TriangleWriter {
 
     /// Seal the file (checksum table, fsync, rename) and open it with the
     /// given paging budget.
-    pub fn finish(mut self, budget_bytes: u64) -> Result<FileTriangle> {
+    pub fn finish(self, budget_bytes: u64) -> Result<FileTriangle> {
+        let path = self.final_path.clone();
+        self.seal()?;
+        FileTriangle::open(&path, budget_bytes)
+    }
+
+    /// Seal the file **without** opening it: the scratch-rebuild path
+    /// rewrites a file that an existing [`FileTriangle`] handle already
+    /// owns, and that handle's `Drop` must stay the only one deleting it.
+    pub fn seal(mut self) -> Result<()> {
         let want = row_start(self.n, self.n);
         if self.written != want {
             return Err(Error::InvalidInput(format!(
@@ -437,8 +552,7 @@ impl TriangleWriter {
             .sync_all()
             .map_err(|e| Error::io(self.tmp_path.display().to_string(), e))?;
         std::fs::rename(&self.tmp_path, &self.final_path)
-            .map_err(|e| Error::io(self.final_path.display().to_string(), e))?;
-        FileTriangle::open(&self.final_path, budget_bytes)
+            .map_err(|e| Error::io(self.final_path.display().to_string(), e))
     }
 }
 

@@ -25,8 +25,8 @@ pub mod ingest;
 pub mod pcoa;
 
 pub use chunked::{
-    file_backed_from, scratch_triangle_path, FileTriangle, TriangleChunk, TriangleStorage,
-    TriangleWriter, TRC_BLOCK_VALUES, TRC_MAGIC,
+    file_backed_from, scratch_triangle_path, FileTriangle, RebuildFn, TriangleChunk,
+    TriangleStorage, TriangleWriter, TRC_BLOCK_VALUES, TRC_MAGIC,
 };
 pub use condensed::{CondensedMatrix, CondensedView};
 pub use ingest::{

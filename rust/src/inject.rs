@@ -1,0 +1,438 @@
+//! Deterministic fault injection: named seams, a parsed plan, exact counters.
+//!
+//! The failure surfaces this crate grew in PRs 6–9 — the TCP daemon, the
+//! crash-safe LSM result store, the TRC1 spill scratch — all fail through
+//! the operating system, which makes their error paths hard to reach from
+//! a test and impossible to reach *deterministically*.  This module is the
+//! one seam that fixes that: production code consults a named **injection
+//! point** (a dotted string like `store.wal.write`) at the top of each
+//! fallible IO or execution path, and an installed [`FaultPlan`] decides
+//! whether that particular consult fails, and how.
+//!
+//! # Plan grammar
+//!
+//! A plan is a comma-separated list of directives, each
+//! `<point>:<kind>@<trigger>`:
+//!
+//! | trigger          | meaning                                              |
+//! |------------------|------------------------------------------------------|
+//! | `@<n>`           | fire on the n-th consult of the point (1-based)      |
+//! | `@id=<job-id>`   | fire on every consult carrying that job id           |
+//! | `@p=<rate>/<seed>` | seeded xorshift64: fire with probability `rate`    |
+//!
+//! Kinds: `err` (an injected `io::Error`), `corrupt` (data-integrity
+//! failure, e.g. a TRC1 checksum mismatch), `drop` (discard a connection),
+//! `panic` (unwind inside the executor), `stall` (hold the seam long
+//! enough to trip a deadline).  Examples:
+//!
+//! ```text
+//! store.wal.write:err@3
+//! scratch.read:corrupt@2,wire.accept:drop@1
+//! job.exec:panic@id=j7
+//! store.sst.write:err@p=0.5/42
+//! ```
+//!
+//! # Cost when disarmed
+//!
+//! Every seam starts with one relaxed [`AtomicBool`] load; with no plan
+//! installed that is the *entire* cost, so fault-free production runs are
+//! unchanged.  Arming is process-global ([`install`]/[`clear`]) because
+//! faults must reach seams buried under the daemon's worker threads where
+//! no handle can be threaded through.
+//!
+//! # Counters
+//!
+//! The plan counts, per point, how many times it was consulted (`hits`)
+//! and how many times it fired (`fired`).  Tests assert these reconcile
+//! exactly — an injection campaign that silently never reached its seam is
+//! a test bug, not a pass.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+/// What happens at a seam when a directive fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The seam reports an injected `std::io::Error`.
+    Err,
+    /// The seam behaves as if the bytes it read failed integrity checks.
+    Corrupt,
+    /// The seam discards the unit of work (e.g. an accepted connection).
+    Drop,
+    /// The seam panics, exercising unwind containment.
+    Panic,
+    /// The seam stalls long enough to trip the surrounding deadline.
+    Stall,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "err" => Some(FaultKind::Err),
+            "corrupt" => Some(FaultKind::Corrupt),
+            "drop" => Some(FaultKind::Drop),
+            "panic" => Some(FaultKind::Panic),
+            "stall" => Some(FaultKind::Stall),
+            _ => None,
+        }
+    }
+
+    /// The spec-grammar name of the kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Err => "err",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Drop => "drop",
+            FaultKind::Panic => "panic",
+            FaultKind::Stall => "stall",
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Trigger {
+    /// Fire on the n-th consult of the point (1-based, exactly once).
+    Nth(u64),
+    /// Fire on every consult that carries this job id.
+    Id(String),
+    /// Fire with probability `rate`; the xorshift64 state advances once
+    /// per consult so a fixed seed replays the identical fault sequence.
+    Prob { rate: f64, state: Mutex<u64> },
+}
+
+#[derive(Debug)]
+struct Rule {
+    point: String,
+    kind: FaultKind,
+    trigger: Trigger,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct PointCount {
+    hits: u64,
+    fired: u64,
+}
+
+/// A parsed fault campaign: which seams fail, when, and how — plus exact
+/// per-point consult/fire counters.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+    counts: Mutex<BTreeMap<String, PointCount>>,
+}
+
+pub(crate) fn xorshift64(mut x: u64) -> u64 {
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    x
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated spec string (see the module docs for the
+    /// grammar).  Every malformed directive is an [`Error::Config`] that
+    /// quotes the directive and restates the grammar.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for raw in spec.split(',') {
+            let d = raw.trim();
+            if d.is_empty() {
+                continue;
+            }
+            let bad = |why: &str| {
+                Error::Config(format!(
+                    "fault-plan directive {d:?}: {why} (grammar: <point>:<kind>@<n> | \
+                     <point>:<kind>@id=<job-id> | <point>:<kind>@p=<rate>/<seed>; kinds: \
+                     err, corrupt, drop, panic, stall)"
+                ))
+            };
+            let (point, rest) = d.split_once(':').ok_or_else(|| bad("missing ':'"))?;
+            if point.is_empty() {
+                return Err(bad("empty point name"));
+            }
+            let (kind_s, trig_s) = rest.split_once('@').ok_or_else(|| bad("missing '@'"))?;
+            let kind = FaultKind::parse(kind_s)
+                .ok_or_else(|| bad(&format!("unknown kind {kind_s:?}")))?;
+            let trigger = if let Some(id) = trig_s.strip_prefix("id=") {
+                if id.is_empty() {
+                    return Err(bad("empty job id"));
+                }
+                Trigger::Id(id.to_string())
+            } else if let Some(p) = trig_s.strip_prefix("p=") {
+                let (rate_s, seed_s) = p
+                    .split_once('/')
+                    .ok_or_else(|| bad("probabilistic trigger needs p=<rate>/<seed>"))?;
+                let rate: f64 =
+                    rate_s.parse().map_err(|_| bad("rate is not a number"))?;
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(bad("rate must be in [0, 1]"));
+                }
+                let seed: u64 =
+                    seed_s.parse().map_err(|_| bad("seed is not an unsigned integer"))?;
+                Trigger::Prob { rate, state: Mutex::new(seed.max(1)) }
+            } else {
+                let n: u64 = trig_s
+                    .parse()
+                    .map_err(|_| bad("nth trigger is not a positive integer"))?;
+                if n == 0 {
+                    return Err(bad("nth trigger is 1-based; @0 would never fire"));
+                }
+                Trigger::Nth(n)
+            };
+            rules.push(Rule { point: point.to_string(), kind, trigger });
+        }
+        if rules.is_empty() {
+            return Err(Error::Config(
+                "fault-plan is empty: expected comma-separated <point>:<kind>@<trigger> \
+                 directives"
+                    .into(),
+            ));
+        }
+        Ok(FaultPlan { rules, counts: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Record one consult of `point` (carrying `id` when the caller has
+    /// one) and return the kind of the first rule that fires, if any.
+    fn consult(&self, point: &str, id: Option<&str>) -> Option<FaultKind> {
+        let mut counts = self.counts.lock().unwrap();
+        let entry = counts.entry(point.to_string()).or_default();
+        entry.hits += 1;
+        let hit = entry.hits;
+        let mut fired = None;
+        for rule in self.rules.iter().filter(|r| r.point == point) {
+            let fires = match &rule.trigger {
+                Trigger::Nth(n) => hit == *n,
+                Trigger::Id(want) => id == Some(want.as_str()),
+                Trigger::Prob { rate, state } => {
+                    let mut s = state.lock().unwrap();
+                    *s = xorshift64(*s);
+                    // Top 53 bits → uniform in [0, 1), the standard trick.
+                    ((*s >> 11) as f64 / (1u64 << 53) as f64) < *rate
+                }
+            };
+            if fires {
+                fired = Some(rule.kind);
+                break;
+            }
+        }
+        if fired.is_some() {
+            entry.fired += 1;
+        }
+        fired
+    }
+
+    fn snapshot(&self) -> Vec<(String, u64, u64)> {
+        self.counts
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), c.hits, c.fired))
+            .collect()
+    }
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+
+/// Install `plan` process-wide; every seam consults it until [`clear`].
+pub fn install(plan: FaultPlan) {
+    *PLAN.lock().unwrap() = Some(Arc::new(plan));
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm and drop the installed plan (no-op when none is installed).
+pub fn clear() {
+    ARMED.store(false, Ordering::SeqCst);
+    *PLAN.lock().unwrap() = None;
+}
+
+/// Whether a plan is installed.  One relaxed load — this is the entire
+/// per-seam cost of the module in fault-free runs.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+fn plan() -> Option<Arc<FaultPlan>> {
+    if !armed() {
+        return None;
+    }
+    PLAN.lock().unwrap().clone()
+}
+
+/// Consult `point` with no job id; `None` means proceed normally.
+pub fn check(point: &str) -> Option<FaultKind> {
+    plan()?.consult(point, None)
+}
+
+/// Consult `point` on behalf of job `id` (for `@id=` triggers).
+pub fn check_id(point: &str, id: &str) -> Option<FaultKind> {
+    plan()?.consult(point, Some(id))
+}
+
+/// IO-seam helper: consult `point` and, if an `err` directive fires,
+/// return the injected `std::io::Error` for the caller to wrap in its
+/// usual path-bearing error.  Non-`err` kinds at an IO-only seam are
+/// ignored (the seam cannot express them).
+pub fn io_error(point: &str) -> Option<std::io::Error> {
+    match check(point) {
+        Some(FaultKind::Err) => Some(std::io::Error::other(format!(
+            "injected fault: {point}:err"
+        ))),
+        _ => None,
+    }
+}
+
+/// Executor-seam helper: panic if a `panic` directive fires for this job.
+pub fn panic_if_injected(point: &str, id: &str) {
+    if let Some(FaultKind::Panic) = check_id(point, id) {
+        panic!("injected fault: {point}:panic for job {id:?}");
+    }
+}
+
+/// Per-point `(point, hits, fired)` counters of the installed plan, in
+/// point order; empty when disarmed.  Tests use this to assert a
+/// campaign actually reached its seams.
+pub fn counters() -> Vec<(String, u64, u64)> {
+    match plan() {
+        Some(p) => p.snapshot(),
+        None => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The plan registry is process-global and the harness runs tests on
+    /// concurrent threads, so every test that installs a plan serializes
+    /// on this guard (and survives a poisoned lock from a failed peer).
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn parse_rejects_malformed_directives() {
+        for spec in [
+            "",
+            " , ,",
+            "store.wal.write",
+            "store.wal.write:err",
+            ":err@1",
+            "store.wal.write:@1",
+            "store.wal.write:explode@1",
+            "store.wal.write:err@0",
+            "store.wal.write:err@three",
+            "job.exec:panic@id=",
+            "store.sst.write:err@p=0.5",
+            "store.sst.write:err@p=1.5/42",
+            "store.sst.write:err@p=half/42",
+            "store.sst.write:err@p=0.5/soon",
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            let msg = err.to_string();
+            assert!(
+                msg.contains("fault-plan"),
+                "error for {spec:?} names the knob: {msg}"
+            );
+        }
+        // Malformed directives quote themselves and restate the grammar.
+        let msg = FaultPlan::parse("a:err@0").unwrap_err().to_string();
+        assert!(msg.contains("\"a:err@0\""), "{msg}");
+        assert!(msg.contains("grammar"), "{msg}");
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_once() {
+        let plan = FaultPlan::parse("p.x:err@3").unwrap();
+        let fired: Vec<bool> =
+            (0..6).map(|_| plan.consult("p.x", None).is_some()).collect();
+        assert_eq!(fired, [false, false, true, false, false, false]);
+        assert_eq!(plan.snapshot(), [("p.x".to_string(), 6, 1)]);
+    }
+
+    #[test]
+    fn points_count_independently() {
+        let plan = FaultPlan::parse("a.b:err@1,c.d:corrupt@2").unwrap();
+        assert_eq!(plan.consult("a.b", None), Some(FaultKind::Err));
+        assert_eq!(plan.consult("c.d", None), None);
+        assert_eq!(plan.consult("c.d", None), Some(FaultKind::Corrupt));
+        assert_eq!(plan.consult("unwired.point", None), None);
+        assert_eq!(
+            plan.snapshot(),
+            [
+                ("a.b".to_string(), 1, 1),
+                ("c.d".to_string(), 2, 1),
+                ("unwired.point".to_string(), 1, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn id_trigger_matches_only_its_job() {
+        let plan = FaultPlan::parse("job.exec:panic@id=j7").unwrap();
+        assert_eq!(plan.consult("job.exec", Some("j1")), None);
+        assert_eq!(plan.consult("job.exec", Some("j7")), Some(FaultKind::Panic));
+        assert_eq!(plan.consult("job.exec", None), None);
+        // Every consult of the id fires — the trigger is per-consult.
+        assert_eq!(plan.consult("job.exec", Some("j7")), Some(FaultKind::Panic));
+    }
+
+    #[test]
+    fn probabilistic_trigger_is_seed_deterministic() {
+        let run = |seed: u64| -> Vec<bool> {
+            let plan =
+                FaultPlan::parse(&format!("p.q:err@p=0.5/{seed}")).unwrap();
+            (0..32).map(|_| plan.consult("p.q", None).is_some()).collect()
+        };
+        assert_eq!(run(42), run(42), "same seed, same fault sequence");
+        assert_ne!(run(42), run(43), "different seed, different sequence");
+        let fired = run(42).iter().filter(|&&f| f).count();
+        assert!((4..=28).contains(&fired), "rate 0.5 over 32: got {fired}");
+        // Degenerate rates are exact, not approximate.
+        let never = FaultPlan::parse("p.q:err@p=0/1").unwrap();
+        assert!((0..64).all(|_| never.consult("p.q", None).is_none()));
+        let always = FaultPlan::parse("p.q:err@p=1/1").unwrap();
+        assert!((0..64).all(|_| always.consult("p.q", None).is_some()));
+    }
+
+    #[test]
+    fn global_install_arms_and_clear_disarms() {
+        let _g = lock();
+        clear();
+        assert!(!armed());
+        assert_eq!(check("inject.test.point"), None);
+        install(FaultPlan::parse("inject.test.point:err@1").unwrap());
+        assert!(armed());
+        let e = io_error("inject.test.point").expect("first consult fires");
+        assert!(e.to_string().contains("injected fault: inject.test.point:err"));
+        assert!(io_error("inject.test.point").is_none(), "@1 fires once");
+        assert_eq!(
+            counters(),
+            [("inject.test.point".to_string(), 2, 1)]
+        );
+        clear();
+        assert!(!armed());
+        assert!(counters().is_empty());
+    }
+
+    #[test]
+    fn panic_helper_unwinds_only_for_its_job() {
+        let _g = lock();
+        clear();
+        install(FaultPlan::parse("inject.test.exec:panic@id=j7").unwrap());
+        panic_if_injected("inject.test.exec", "j1"); // must not panic
+        let caught = std::panic::catch_unwind(|| {
+            panic_if_injected("inject.test.exec", "j7");
+        });
+        let payload = caught.unwrap_err();
+        let msg = payload.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("injected fault"), "{msg}");
+        assert!(msg.contains("j7"), "{msg}");
+        clear();
+    }
+}

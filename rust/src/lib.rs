@@ -49,6 +49,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dmat;
 pub mod error;
+pub mod inject;
 pub mod jsonio;
 pub mod permanova;
 pub mod report;

@@ -292,6 +292,7 @@ pub struct DatasetCache {
     /// so the daemon's cumulative counters survive LRU turnover.
     absorbed_chunks: AtomicU64,
     absorbed_bytes: AtomicU64,
+    absorbed_rebuilds: AtomicU64,
 }
 
 /// Cumulative out-of-core paging across a cache's datasets (resident
@@ -305,6 +306,11 @@ pub struct OocorePaging {
     pub chunks_paged: u64,
     /// Bytes paged in from disk, cumulative.
     pub bytes_paged: u64,
+    /// Scratch chunk files re-materialized from their original source
+    /// after a failed read (checksum mismatch / IO error), cumulative.
+    /// Nonzero means the recovery path fired — worth investigating the
+    /// disk even though the analyses themselves succeeded.
+    pub rebuilds: u64,
 }
 
 impl DatasetCache {
@@ -318,6 +324,7 @@ impl DatasetCache {
             store: None,
             absorbed_chunks: AtomicU64::new(0),
             absorbed_bytes: AtomicU64::new(0),
+            absorbed_rebuilds: AtomicU64::new(0),
         }
     }
 
@@ -393,6 +400,9 @@ impl DatasetCache {
                             self.absorbed_chunks.fetch_add(chunks, Ordering::Relaxed);
                             self.absorbed_bytes.fetch_add(bytes, Ordering::Relaxed);
                         }
+                        if let Some(f) = old.storage().as_file() {
+                            self.absorbed_rebuilds.fetch_add(f.rebuilds(), Ordering::Relaxed);
+                        }
                     }
                 }
             }
@@ -440,12 +450,16 @@ impl DatasetCache {
             file_backed: 0,
             chunks_paged: self.absorbed_chunks.load(Ordering::Relaxed),
             bytes_paged: self.absorbed_bytes.load(Ordering::Relaxed),
+            rebuilds: self.absorbed_rebuilds.load(Ordering::Relaxed),
         };
         for ds in self.inner.lock().unwrap().map.values() {
             if let Some((chunks, bytes)) = ds.storage().paging() {
                 p.file_backed += 1;
                 p.chunks_paged += chunks;
                 p.bytes_paged += bytes;
+            }
+            if let Some(f) = ds.storage().as_file() {
+                p.rebuilds += f.rebuilds();
             }
         }
         p

@@ -21,11 +21,12 @@
 //! The contracts this layering buys:
 //!
 //! * **Identical answers.**  Jobs execute one at a time on the executor
-//!   thread through [`execute_job`] — the same function, cache and shared
-//!   pool the one-shot `serve --jobs` batch uses — so a report computed
-//!   for a daemon client is byte-identical to the file-batch report for
-//!   the same request.  Concurrency lives at the I/O layer, never inside
-//!   the numerics.
+//!   thread through [`execute_job_contained`] — the same function, cache
+//!   and shared pool the one-shot `serve --jobs` batch uses — so a report
+//!   computed for a daemon client is byte-identical to the file-batch
+//!   report for the same request.  Concurrency lives at the I/O layer,
+//!   never inside the numerics.  A job that panics is contained to its
+//!   own `"ok": false` response; the executor and daemon stay up.
 //! * **Bounded memory.**  Admission is non-blocking through a bounded
 //!   [`AdmissionQueue`]: when it is full the client gets an `"ok": false`
 //!   response with a `retry_after` hint instead of the daemon buffering
@@ -39,7 +40,13 @@
 //! * **Graceful drain.**  SIGTERM/ctrl-C (via [`install_signal_handlers`])
 //!   or a `shutdown` request stop the accept loop, close the queue (new
 //!   requests shed with `retry_after`), finish every admitted job, flush,
-//!   and exit.
+//!   and exit.  A *second* signal during the drain forces an immediate
+//!   exit with [`EXIT_FORCED`] — an operator's ctrl-C ctrl-C means now.
+//! * **Connection hygiene.**  Every connection reads under a short socket
+//!   timeout: a peer idle past [`IDLE_REAP`] or stalling one frame past
+//!   the wire stall budget is reaped (slowloris defense), accept-loop
+//!   errors are logged and survived, and both outcomes are counted in
+//!   `stats` (`connections_closed` / `connections_reaped`).
 //! * **Durable warm state** (opt-in via `--store-dir`).  Boot opens the
 //!   [`ResultStore`](crate::store::ResultStore) and replays its WAL;
 //!   every completed result is WAL-fsynced as it is computed; shutdown
@@ -50,7 +57,7 @@
 //! [`SharedPool`]: crate::backend::shard::SharedPool
 
 use std::collections::BTreeMap;
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -63,7 +70,7 @@ use crate::report::Table;
 
 use super::cache::DatasetCache;
 use super::envelope::{parse_envelope, RequestBody, DEPRECATION_NOTE};
-use super::jobs::{execute_job, JobRequest};
+use super::jobs::{execute_job_contained, JobRequest};
 use super::wire;
 
 /// How the daemon is wired up.
@@ -154,6 +161,11 @@ struct ServiceState {
     retry_after_secs: f64,
     started: Instant,
     connections: AtomicUsize,
+    /// Connections that ended normally (client EOF or socket error).
+    closed: AtomicUsize,
+    /// Connections the daemon reaped: idle past [`IDLE_REAP`], stalled
+    /// mid-frame past the wire stall budget, or quiet during a drain.
+    reaped: AtomicUsize,
     completed: AtomicUsize,
     failed: AtomicUsize,
     draining: AtomicBool,
@@ -180,6 +192,8 @@ impl ServiceState {
             retry_after_secs: cfg.retry_after_secs,
             started: Instant::now(),
             connections: AtomicUsize::new(0),
+            closed: AtomicUsize::new(0),
+            reaped: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
             failed: AtomicUsize::new(0),
             draining: AtomicBool::new(false),
@@ -192,7 +206,7 @@ impl ServiceState {
     fn execute(&self, adm: Admitted) {
         let method = adm.job.cfg.method.name();
         let t0 = Instant::now();
-        let (response, ok) = execute_job(&adm.job, &self.cache);
+        let (response, ok) = execute_job_contained(&adm.job, &self.cache);
         let secs = t0.elapsed().as_secs_f64();
         if ok {
             self.completed.fetch_add(1, Ordering::Relaxed);
@@ -233,6 +247,8 @@ impl ServiceState {
         let mut stats = vec![
             ("uptime_secs", Json::num(self.started.elapsed().as_secs_f64())),
             ("connections", Json::num(self.connections.load(Ordering::Relaxed) as f64)),
+            ("connections_closed", Json::num(self.closed.load(Ordering::Relaxed) as f64)),
+            ("connections_reaped", Json::num(self.reaped.load(Ordering::Relaxed) as f64)),
             ("queue_depth", Json::num(self.queue.depth() as f64)),
             ("queue_capacity", Json::num(self.queue.capacity() as f64)),
             ("admitted", Json::num(self.queue.admitted() as f64)),
@@ -267,6 +283,7 @@ impl ServiceState {
                     ("file_backed", Json::num(oo.file_backed as f64)),
                     ("chunks_paged", Json::num(oo.chunks_paged as f64)),
                     ("bytes_paged", Json::num(oo.bytes_paged as f64)),
+                    ("scratch_rebuilds", Json::num(oo.rebuilds as f64)),
                 ]),
             ));
         }
@@ -355,20 +372,27 @@ impl OrderedWriter {
     }
 }
 
-/// Process-wide signal flag: SIGTERM/SIGINT request a graceful drain.
-static SIGNALLED: AtomicBool = AtomicBool::new(false);
+/// Process-wide signal count: the first SIGTERM/SIGINT requests a
+/// graceful drain; a second one during the drain forces an immediate
+/// exit with [`EXIT_FORCED`].
+static SIGNAL_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+/// Exit code of a forced (second-signal) shutdown: 128 + SIGINT, the
+/// conventional killed-by-interrupt code — distinct from the clean 0 so
+/// supervisors can tell an abandoned drain from a completed one.
+pub const EXIT_FORCED: i32 = 130;
 
 #[cfg(unix)]
 mod sig {
-    use super::SIGNALLED;
+    use super::SIGNAL_COUNT;
     use std::sync::atomic::Ordering;
 
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
 
     extern "C" fn on_signal(_sig: i32) {
-        // Async-signal-safe: one relaxed store, nothing else.
-        SIGNALLED.store(true, Ordering::Relaxed);
+        // Async-signal-safe: one relaxed atomic increment, nothing else.
+        SIGNAL_COUNT.fetch_add(1, Ordering::Relaxed);
     }
 
     extern "C" {
@@ -388,8 +412,9 @@ mod sig {
 }
 
 /// Install SIGTERM/SIGINT handlers that flip the daemon into graceful
-/// drain (`serve --listen` calls this; in-process tests use the
-/// `shutdown` request instead).  No-op off unix.
+/// drain — and, on a second signal, force the process down with
+/// [`EXIT_FORCED`] (`serve --listen` calls this; in-process tests use
+/// the `shutdown` request instead).  No-op off unix.
 pub fn install_signal_handlers() {
     #[cfg(unix)]
     sig::install();
@@ -468,11 +493,21 @@ fn run_daemon(
         })
     };
     loop {
-        if stop.load(Ordering::Relaxed) || SIGNALLED.load(Ordering::Relaxed) {
+        if stop.load(Ordering::Relaxed) || SIGNAL_COUNT.load(Ordering::Relaxed) > 0 {
             break;
         }
         match listener.accept() {
             Ok((stream, _peer)) => {
+                if matches!(
+                    crate::inject::check("wire.accept"),
+                    Some(crate::inject::FaultKind::Drop)
+                ) {
+                    // Injected accept-drop: the connection vanishes
+                    // before it is counted or served — the client sees
+                    // a close and retries against a live daemon.
+                    drop(stream);
+                    continue;
+                }
                 state.connections.fetch_add(1, Ordering::Relaxed);
                 let state = Arc::clone(&state);
                 let stop = Arc::clone(&stop);
@@ -484,12 +519,41 @@ fn run_daemon(
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(ACCEPT_POLL);
             }
-            Err(_) => break,
+            Err(e) => {
+                // Accept failures (EMFILE, ECONNABORTED, ...) are
+                // per-attempt conditions, not daemon death: log,
+                // breathe one poll interval, keep listening.
+                eprintln!("accept failed (still listening): {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
         }
     }
     // Graceful drain: stop admitting (new requests shed with
     // retry_after), finish everything already admitted, then report.
     state.draining.store(true, Ordering::Relaxed);
+    // Second-signal watchdog, spawned only for signal-initiated drains
+    // (in-process shutdowns — tests, `shutdown` requests — never race a
+    // process exit): one more SIGTERM/ctrl-C while admitted jobs finish
+    // means "stop waiting" — say so once and exit with EXIT_FORCED.
+    let drain_done = Arc::new(AtomicBool::new(false));
+    let watchdog = if SIGNAL_COUNT.load(Ordering::Relaxed) > 0 {
+        let done = Arc::clone(&drain_done);
+        let base = SIGNAL_COUNT.load(Ordering::Relaxed);
+        Some(std::thread::spawn(move || {
+            while !done.load(Ordering::Relaxed) {
+                if SIGNAL_COUNT.load(Ordering::Relaxed) > base {
+                    eprintln!(
+                        "second signal during drain — forcing immediate shutdown \
+                         (unfinished jobs abandoned; store results stay WAL-durable)"
+                    );
+                    std::process::exit(EXIT_FORCED);
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }))
+    } else {
+        None
+    };
     state.queue.close();
     let _ = executor.join();
     // Fsync-drain the durable store: flush the memtable to a sorted
@@ -502,30 +566,106 @@ fn run_daemon(
         }
         summary.store = Some(store.stats());
     }
+    drain_done.store(true, Ordering::Relaxed);
+    if let Some(w) = watchdog {
+        let _ = w.join();
+    }
     summary
 }
 
+/// Per-connection socket read timeout: the poll cadence at which the
+/// idle and stall deadlines below are evaluated.
+const READ_POLL: Duration = Duration::from_millis(250);
+
+/// How long one frame may stall mid-transfer before the connection is
+/// closed with a named error (slowloris defense — a peer trickling one
+/// byte per poll can't hold a reader thread forever).
+const FRAME_STALL: Duration = Duration::from_secs(10);
+
+/// How long a connection may sit idle *between* frames before it is
+/// reaped.  Generous: a well-behaved client legitimately holds its
+/// connection open between pipelined batches.
+pub const IDLE_REAP: Duration = Duration::from_secs(60);
+
+/// Why a connection's read loop ended — each increments one counter so
+/// `connections == connections_closed + connections_reaped + live`.
+enum Close {
+    /// Client EOF, socket error, or lost framing: a normal ending.
+    Clean,
+    /// The daemon gave up on the peer: idle past [`IDLE_REAP`], stalled
+    /// mid-frame past [`FRAME_STALL`], or quiet during a drain.
+    Reaped,
+}
+
 /// One connection's read loop: parse frames, assign sequence numbers,
-/// answer stats/shutdown inline, admit run jobs.
+/// answer stats/shutdown inline, admit run jobs.  Reads run under
+/// [`READ_POLL`] so idle and stalled peers are reaped on a deadline
+/// instead of pinning a thread forever.
 fn serve_connection(stream: TcpStream, state: Arc<ServiceState>, stop: Arc<AtomicBool>) {
     let _ = stream.set_nodelay(true);
-    let Ok(read_half) = stream.try_clone() else { return };
+    // The short read timeout turns blocking reads into a poll loop; the
+    // deadlines are enforced here and in the wire stall budget, without
+    // a timer thread per connection.
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let Ok(read_half) = stream.try_clone() else {
+        state.closed.fetch_add(1, Ordering::Relaxed);
+        return;
+    };
     let mut reader = BufReader::new(read_half);
     let writer = Arc::new(OrderedWriter::new(stream));
     let mut seq = 0u64;
-    loop {
-        match wire::read_frame(&mut reader) {
-            Ok(None) => break,
+    let mut idle = Duration::ZERO;
+    let close = loop {
+        // Peek for the first byte of the next frame, so idle time (no
+        // bytes at a boundary) is separated from a mid-frame stall.
+        match reader.fill_buf() {
+            Ok([]) => break Close::Clean, // client closed at a boundary
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Idle between frames.  During a drain nothing new can
+                // be admitted anyway — reap quiet connections so
+                // shutdown is never hostage to an open-but-idle client.
+                if stop.load(Ordering::Relaxed) || state.draining.load(Ordering::Relaxed) {
+                    break Close::Reaped;
+                }
+                idle += READ_POLL;
+                if idle >= IDLE_REAP {
+                    break Close::Reaped;
+                }
+                continue;
+            }
+            Err(_) => break Close::Clean, // connection-level error
+        }
+        idle = Duration::ZERO;
+        match wire::read_frame_deadline(&mut reader, Some(FRAME_STALL)) {
+            Ok(None) => break Close::Clean,
             Err(e) => {
-                // Framing is lost: answer once, then close.
-                writer.send(seq, error_response("", &e.to_string(), None).to_string());
-                break;
+                // Framing is lost (or the sender stalled mid-frame):
+                // answer once, then close.
+                let msg = e.to_string();
+                let stalled = msg.contains("stalled mid-frame");
+                writer.send(seq, error_response("", &msg, None).to_string());
+                break if stalled { Close::Reaped } else { Close::Clean };
             }
             Ok(Some(payload)) => {
                 let this_seq = seq;
                 seq += 1;
                 handle_request(&state, &payload, this_seq, &writer, &stop);
             }
+        }
+    };
+    match close {
+        Close::Clean => {
+            state.closed.fetch_add(1, Ordering::Relaxed);
+        }
+        Close::Reaped => {
+            state.reaped.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -635,6 +775,170 @@ pub fn client_exchange(addr: &SocketAddr, requests: &[String]) -> Result<Vec<Jso
                 return Err(Error::Coordinator(
                     "daemon closed the connection mid-response".into(),
                 ))
+            }
+        }
+    }
+    Ok(responses)
+}
+
+/// Client-side retry policy for [`client_exchange_retrying`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RetryPolicy {
+    /// Extra attempts after the first (`--retries`; 0 = behave exactly
+    /// like [`client_exchange`] — no reconnects, no shed retries).
+    pub retries: usize,
+    /// Total wall-clock retry budget in milliseconds (`--retry-budget-ms`;
+    /// 0 = no budget cap).  Measured from the first attempt; once spent,
+    /// whatever responses exist are returned as-is.
+    pub budget_ms: u64,
+}
+
+/// Floor of the backoff delay when a shed response carries no usable
+/// `retry_after` hint (or a transport error carries none at all).
+const BACKOFF_BASE_MS: u64 = 50;
+/// Ceiling on one backoff delay before jitter.
+const BACKOFF_CAP_MS: u64 = 2_000;
+
+/// Capped exponential backoff with deterministic jitter.  `attempt` is
+/// 1-based; `hint_ms` seeds the base delay (a daemon `retry_after` hint
+/// is a promise about when capacity returns — honor it).  The jitter is
+/// a xorshift of the attempt number: reproducible, but still spreading
+/// simultaneous retriers apart by up to +50%.
+fn backoff_delay(attempt: usize, hint_ms: Option<u64>) -> Duration {
+    let base = hint_ms.unwrap_or(BACKOFF_BASE_MS).max(1);
+    let doubled = base.saturating_mul(1u64 << (attempt.min(16) - 1).min(20));
+    let capped = doubled.min(BACKOFF_CAP_MS);
+    let jitter = crate::inject::xorshift64(0x9E37_79B9_7F4A_7C15 ^ attempt as u64)
+        % (capped / 2 + 1);
+    Duration::from_millis(capped + jitter)
+}
+
+/// A shed response: `"ok": false` with a `retry_after` hint — the daemon
+/// explicitly invited this request back later.
+fn is_shed(response: &Json) -> bool {
+    response.get("ok").and_then(Json::as_bool) == Some(false)
+        && response.get("retry_after").is_some()
+}
+
+fn retry_after_ms(response: &Json) -> Option<u64> {
+    let secs = response.get("retry_after").and_then(Json::as_f64)?;
+    if secs.is_finite() && secs > 0.0 {
+        Some((secs * 1000.0).ceil() as u64)
+    } else {
+        None
+    }
+}
+
+/// One connection's worth of exchange: write every pending request,
+/// then read until the responses run out.  Returns the answered prefix
+/// plus the terminal error, if the connection died mid-exchange — per
+/// the ordering contract, the unanswered requests are exactly the
+/// suffix after the answered prefix.
+fn exchange_once(addr: &SocketAddr, requests: &[String]) -> (Vec<Json>, Option<Error>) {
+    let mut got = Vec::with_capacity(requests.len());
+    let err = |e: std::io::Error| Some(Error::io(addr.to_string(), e));
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => return (got, err(e)),
+    };
+    let read_half = match stream.try_clone() {
+        Ok(r) => r,
+        Err(e) => return (got, err(e)),
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    for request in requests {
+        if let Err(e) = wire::write_frame(&mut writer, request) {
+            return (got, err(e));
+        }
+    }
+    if let Err(e) = writer.flush() {
+        return (got, err(e));
+    }
+    for _ in requests {
+        match wire::read_frame(&mut reader) {
+            Ok(Some(payload)) => match Json::parse(&payload) {
+                Ok(doc) => got.push(doc),
+                Err(e) => return (got, Some(e)),
+            },
+            Ok(None) => {
+                let n = got.len();
+                return (
+                    got,
+                    Some(Error::Coordinator(format!(
+                        "daemon closed the connection after {n} of {} responses",
+                        requests.len()
+                    ))),
+                );
+            }
+            Err(e) => return (got, Some(e)),
+        }
+    }
+    (got, None)
+}
+
+/// [`client_exchange`] under a [`RetryPolicy`]: reconnect-and-resume
+/// after dropped connections, then re-ask shed requests.
+///
+/// Two containment layers, both leaning on the daemon's per-connection
+/// ordering contract:
+///
+/// 1. **Transport.**  If the connection dies mid-exchange, the answered
+///    responses form a prefix of the request list; reconnect and resend
+///    only the unanswered suffix.  (An analysis the daemon already ran
+///    for a lost response is recomputed — results are deterministic, and
+///    the cache/store make the recomputation cheap.)
+/// 2. **Shedding.**  Responses that came back `"ok": false` with a
+///    `retry_after` hint are retried individually on fresh connections,
+///    backing off exponentially from the hint with deterministic jitter.
+///
+/// With `retries == 0` this is byte-for-byte [`client_exchange`].
+pub fn client_exchange_retrying(
+    addr: &SocketAddr,
+    requests: &[String],
+    policy: RetryPolicy,
+) -> Result<Vec<Json>> {
+    if policy.retries == 0 {
+        return client_exchange(addr, requests);
+    }
+    let started = Instant::now();
+    let budget_left =
+        |started: &Instant| policy.budget_ms == 0 || started.elapsed().as_millis() < policy.budget_ms.into();
+
+    // Transport phase: accumulate the answered prefix across reconnects.
+    let mut responses: Vec<Json> = Vec::with_capacity(requests.len());
+    let mut attempt = 0usize;
+    while responses.len() < requests.len() {
+        let (mut got, terminal) = exchange_once(addr, &requests[responses.len()..]);
+        responses.append(&mut got);
+        match terminal {
+            None => break,
+            Some(e) => {
+                if attempt >= policy.retries || !budget_left(&started) {
+                    return Err(e);
+                }
+                attempt += 1;
+                eprintln!(
+                    "client: connection lost after {} of {} responses ({e}); \
+                     retrying the rest (attempt {attempt}/{})",
+                    responses.len(),
+                    requests.len(),
+                    policy.retries
+                );
+                std::thread::sleep(backoff_delay(attempt, None));
+            }
+        }
+    }
+
+    // Shed phase: requests the daemon asked to come back for.
+    for i in 0..responses.len() {
+        let mut attempt = 0usize;
+        while is_shed(&responses[i]) && attempt < policy.retries && budget_left(&started) {
+            attempt += 1;
+            std::thread::sleep(backoff_delay(attempt, retry_after_ms(&responses[i])));
+            let (mut got, _terminal) = exchange_once(addr, std::slice::from_ref(&requests[i]));
+            if let Some(fresh) = got.pop() {
+                responses[i] = fresh;
             }
         }
     }

@@ -172,6 +172,10 @@ impl BatchSummary {
 /// inside [`with_shared_pool`] to serve the sharded permutation loops
 /// from one persistent crew.
 pub fn execute_job(job: &JobRequest, cache: &DatasetCache) -> (Json, bool) {
+    // Fault seam: an injected `job.exec:panic@id=<id>` unwinds here — on
+    // the executor thread but before any engine or cache state is touched
+    // — to prove the containment in [`execute_job_contained`].
+    crate::inject::panic_if_injected("job.exec", &job.id);
     let t_job = Instant::now();
     // Durable tier first: a stored result skips engine execution (and the
     // dataset load) entirely.  Undecodable stored bytes degrade to a
@@ -235,6 +239,48 @@ pub fn execute_job(job: &JobRequest, cache: &DatasetCache) -> (Json, bool) {
     }
 }
 
+/// [`execute_job`] with unwind containment: a panicking job — injected
+/// or real — yields an `"ok": false` response whose error says
+/// `panicked`, for that id only; the calling thread, the shared pool and
+/// the surrounding loop survive.  Both the file batch and the daemon
+/// executor run jobs through this wrapper, so the two paths stay
+/// byte-identical under panic faults too.
+///
+/// Honest limit: a *real* panic that unwinds mid-execution may leave a
+/// poisoned cache mutex behind; later jobs on the same dataset then fail
+/// loudly rather than compute on half-updated state.
+pub fn execute_job_contained(job: &JobRequest, cache: &DatasetCache) -> (Json, bool) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute_job(job, cache)
+    }));
+    match result {
+        Ok(out) => out,
+        Err(payload) => {
+            let mut pairs = vec![
+                ("id", Json::str(job.id.clone())),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("job panicked: {}", panic_text(&payload)))),
+            ];
+            if job.deprecated {
+                pairs.push(("note", Json::str(super::envelope::DEPRECATION_NOTE)));
+            }
+            (Json::obj(pairs), false)
+        }
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` and `String` cover what
+/// `panic!` produces; anything else gets a placeholder, never a crash).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Run an ordered batch of jobs against `cache` on one shared scheduler
 /// pool of `workers` threads (0 = all available).  Never fails as a whole:
 /// per-job errors become `"ok": false` response lines.
@@ -244,7 +290,7 @@ pub fn run_jobs(jobs: &[JobRequest], cache: &DatasetCache, workers: usize) -> Ba
     let mut ok = 0usize;
     let (pool_threads, pool_dispatches) = with_shared_pool(workers, |pool| {
         for job in jobs {
-            let (response, job_ok) = execute_job(job, cache);
+            let (response, job_ok) = execute_job_contained(job, cache);
             ok += job_ok as usize;
             responses.push(response);
         }

@@ -50,11 +50,13 @@ pub use cache::{
     dataset_key, result_key, CacheStats, CachedDataset, DatasetCache, OocorePaging,
 };
 pub use daemon::{
-    client_exchange, install_signal_handlers, Daemon, DaemonConfig, DaemonHandle, DaemonSummary,
+    client_exchange, client_exchange_retrying, install_signal_handlers, Daemon, DaemonConfig,
+    DaemonHandle, DaemonSummary, RetryPolicy, EXIT_FORCED,
 };
 pub use envelope::{
     envelope_v1, parse_envelope, Envelope, RequestBody, DEPRECATION_NOTE, ENVELOPE_VERSION,
 };
 pub use jobs::{
-    execute_job, parse_jobs, run_jobs, validate_responses, BatchOutcome, BatchSummary, JobRequest,
+    execute_job, execute_job_contained, parse_jobs, run_jobs, validate_responses, BatchOutcome,
+    BatchSummary, JobRequest,
 };

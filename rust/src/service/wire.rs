@@ -7,7 +7,7 @@
 //! ```
 //!
 //! The explicit length makes reads exact — the reader allocates once and
-//! `read_exact`s, instead of scanning for delimiters inside payloads — and
+//! fills it, instead of scanning for delimiters inside payloads — and
 //! the trailing newline keeps captures line-structured, so a recorded
 //! exchange is still greppable JSONL.  The format is trivially speakable
 //! from any language (and from `printf | nc`), which is the whole point of
@@ -16,7 +16,8 @@
 //! Frames are bounded by [`MAX_FRAME`]: a corrupt or hostile length prefix
 //! must produce an error, never an unbounded allocation.
 
-use std::io::{BufRead, Read, Write};
+use std::io::{BufRead, ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 
@@ -24,6 +25,11 @@ use crate::error::{Error, Result};
 /// responses carry one analysis report — both orders of magnitude below
 /// this.  A prefix beyond the bound is rejected before any allocation.
 pub const MAX_FRAME: usize = 16 << 20;
+
+/// Upper bound on the length-prefix line itself.  A valid prefix is at
+/// most eight digits (`MAX_FRAME` is 16 MiB); a stream that sends this
+/// many bytes without a newline is not speaking the protocol.
+const MAX_PREFIX: usize = 64;
 
 /// Write one frame.  The caller flushes (frames are typically pipelined —
 /// batching the flush is the backpressure-friendly default).
@@ -39,13 +45,88 @@ pub fn write_frame(w: &mut impl Write, payload: &str) -> std::io::Result<()> {
 /// terminator and non-UTF-8 payload bytes are all errors — after any of
 /// them the stream position is unreliable and the connection must close.
 pub fn read_frame(r: &mut impl BufRead) -> Result<Option<String>> {
-    let mut header = String::new();
-    let n = r
-        .read_line(&mut header)
-        .map_err(|e| Error::io("wire frame header", e))?;
-    if n == 0 {
-        return Ok(None);
+    read_frame_deadline(r, None)
+}
+
+fn is_stall(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Decide what a read-timeout mid-frame means.  With a stall budget the
+/// caller has set a socket read timeout and wants retries until the frame
+/// as a whole has been stalled past the budget (slowloris defense: a peer
+/// trickling one byte per poll still can't hold a connection forever).
+/// Without a budget the timeout propagates as an io error, preserving its
+/// `TimedOut` kind so callers can still classify it.
+fn stall_check(budget: Option<Duration>, started: Instant, ctx: &str) -> Result<()> {
+    match budget {
+        Some(b) if started.elapsed() >= b => Err(Error::Config(format!(
+            "wire: connection stalled mid-frame (no complete {ctx} within {}ms) — closing",
+            b.as_millis()
+        ))),
+        Some(_) => Ok(()),
+        None => Err(Error::io(
+            "wire frame stalled",
+            std::io::Error::new(ErrorKind::TimedOut, format!("timed out reading the frame {ctx}")),
+        )),
     }
+}
+
+/// [`read_frame`] with an optional per-frame stall budget.
+///
+/// The daemon sets a short socket read timeout and calls this once bytes
+/// are known to be waiting; a peer that then stops sending mid-frame gets
+/// retried until `stall_budget` elapses and is closed with a named error.
+/// `read_frame_deadline(r, None)` is exactly `read_frame(r)`.
+pub fn read_frame_deadline(
+    r: &mut impl BufRead,
+    stall_budget: Option<Duration>,
+) -> Result<Option<String>> {
+    let started = Instant::now();
+
+    // Length prefix, accumulated through fill_buf/consume so a timeout
+    // mid-prefix never discards partial bytes (`read_line` leaves its
+    // buffer unspecified on error, which would desync the stream).
+    let mut header = Vec::new();
+    let mut saw_newline = false;
+    while !saw_newline {
+        let take = match r.fill_buf() {
+            Ok([]) => {
+                if header.is_empty() {
+                    return Ok(None);
+                }
+                return Err(Error::Config(format!(
+                    "wire: frame truncated: EOF inside the length prefix after {} bytes",
+                    header.len()
+                )));
+            }
+            Ok(buf) => {
+                let take = match buf.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        saw_newline = true;
+                        i + 1
+                    }
+                    None => buf.len(),
+                };
+                header.extend_from_slice(&buf[..take]);
+                take
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => 0,
+            Err(e) if is_stall(&e) => {
+                stall_check(stall_budget, started, "length prefix")?;
+                0
+            }
+            Err(e) => return Err(Error::io("wire frame header", e)),
+        };
+        r.consume(take);
+        if header.len() > MAX_PREFIX && !saw_newline {
+            return Err(Error::Config(format!(
+                "wire: bad frame length prefix {:?} (no newline within {MAX_PREFIX} bytes)",
+                String::from_utf8_lossy(&header[..16])
+            )));
+        }
+    }
+    let header = String::from_utf8_lossy(&header);
     let len: usize = header
         .trim()
         .parse()
@@ -55,9 +136,26 @@ pub fn read_frame(r: &mut impl BufRead) -> Result<Option<String>> {
             "wire: frame of {len} bytes exceeds the {MAX_FRAME}-byte bound"
         )));
     }
-    // Payload plus its terminating newline.
-    let mut buf = vec![0u8; len + 1];
-    r.read_exact(&mut buf).map_err(|e| Error::io("wire frame payload", e))?;
+
+    // Payload plus its terminating newline, filled manually so a short
+    // read names exactly how far it got — "connection reset" tells an
+    // operator nothing; "expected 4097, got 512" locates the fault.
+    let expected = len + 1;
+    let mut buf = vec![0u8; expected];
+    let mut got = 0usize;
+    while got < expected {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(Error::Config(format!(
+                    "wire: frame truncated: expected {expected} payload bytes, got {got} before EOF"
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if is_stall(&e) => stall_check(stall_budget, started, "payload")?,
+            Err(e) => return Err(Error::io("wire frame payload", e)),
+        }
+    }
     if buf.pop() != Some(b'\n') {
         return Err(Error::Config("wire: frame missing its newline terminator".into()));
     }
@@ -106,5 +204,80 @@ mod tests {
         assert!(read_frame(&mut Cursor::new(b"10\n{}\n".to_vec())).is_err());
         // Missing terminator (length lied short).
         assert!(read_frame(&mut Cursor::new(b"1\n{}\n".to_vec())).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_error_names_expected_and_got() {
+        // Prefix says 10 payload bytes (11 with the terminator); only
+        // "{}\n" = 3 arrive before EOF.  The error must name both counts
+        // so a client log locates the fault without a packet capture.
+        let e = read_frame(&mut Cursor::new(b"10\n{}\n".to_vec())).unwrap_err().to_string();
+        assert!(e.contains("expected 11 payload bytes"), "{e}");
+        assert!(e.contains("got 3 before EOF"), "{e}");
+        // EOF inside the prefix itself is also named.
+        let e = read_frame(&mut Cursor::new(b"12".to_vec())).unwrap_err().to_string();
+        assert!(e.contains("EOF inside the length prefix after 2 bytes"), "{e}");
+    }
+
+    /// Reader that yields a scripted sequence of results, then EOF.
+    struct Scripted {
+        steps: Vec<std::result::Result<Vec<u8>, ErrorKind>>,
+        buffered: Vec<u8>,
+    }
+
+    impl Read for Scripted {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let buf = self.fill_buf()?;
+            let n = buf.len().min(out.len());
+            out[..n].copy_from_slice(&buf[..n]);
+            self.consume(n);
+            Ok(n)
+        }
+    }
+
+    impl BufRead for Scripted {
+        fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+            if self.buffered.is_empty() {
+                match self.steps.pop() {
+                    Some(Ok(bytes)) => self.buffered = bytes,
+                    Some(Err(kind)) => return Err(std::io::Error::from(kind)),
+                    None => {}
+                }
+            }
+            Ok(&self.buffered)
+        }
+        fn consume(&mut self, amt: usize) {
+            self.buffered.drain(..amt);
+        }
+    }
+
+    #[test]
+    fn stall_budget_retries_then_names_the_stall() {
+        // A peer that sends the prefix, stalls repeatedly, then completes:
+        // within budget the retries are invisible and the frame arrives.
+        // (steps are popped from the back, so they're listed in reverse.)
+        let steps = vec![
+            Ok(b"{}\n".to_vec()),
+            Err(ErrorKind::WouldBlock),
+            Ok(b"2\n".to_vec()),
+            Err(ErrorKind::TimedOut),
+        ];
+        let mut r = Scripted { steps, buffered: Vec::new() };
+        let got = read_frame_deadline(&mut r, Some(Duration::from_secs(30))).unwrap();
+        assert_eq!(got.as_deref(), Some("{}"));
+
+        // Zero budget: the first stall after real bytes is terminal, with
+        // an error naming the slow phase.
+        let steps = vec![Err(ErrorKind::WouldBlock), Ok(b"2\n".to_vec())];
+        let mut r = Scripted { steps, buffered: Vec::new() };
+        let e = read_frame_deadline(&mut r, Some(Duration::ZERO)).unwrap_err().to_string();
+        assert!(e.contains("stalled mid-frame"), "{e}");
+        assert!(e.contains("payload"), "{e}");
+
+        // No budget: the timeout propagates as an io error (current
+        // blocking-socket behavior is unchanged).
+        let steps = vec![Err(ErrorKind::TimedOut), Ok(b"2\n".to_vec())];
+        let mut r = Scripted { steps, buffered: Vec::new() };
+        assert!(read_frame_deadline(&mut r, None).is_err());
     }
 }

@@ -186,7 +186,16 @@ impl Lsm {
         let entries = self.mem.take();
         let path = self.table_path(self.next_seq);
         self.next_seq += 1;
-        SsTable::write(&path, &entries)?;
+        if let Err(e) = SsTable::write(&path, &entries) {
+            // The records are still WAL-durable, but losing the taken
+            // memtable copy would make them unreadable until the next
+            // replay; put it back so gets keep serving and a later flush
+            // can retry against a recovered disk.
+            for (key, value) in entries {
+                self.mem.insert(key, value);
+            }
+            return Err(e);
+        }
         self.tables.insert(0, SsTable::open(&path)?);
         // Only now are the records durable outside the WAL.
         self.wal.reset()?;

@@ -34,7 +34,7 @@
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::error::{Error, Result};
@@ -123,9 +123,21 @@ pub struct StoreStats {
     pub disk_bytes: u64,
     /// Live WAL bytes (replay cost of a crash right now).
     pub wal_bytes: u64,
+    /// Write attempts that failed with an IO error (see `degraded`).
+    pub put_errors: u64,
+    /// Whether repeated write failures flipped the store read-only:
+    /// analyses keep running and `get` keeps serving, but nothing new
+    /// persists until the process restarts against a healthy disk.
+    pub degraded: bool,
     /// Spill-segment activity.
     pub spill: SpillStats,
 }
+
+/// Consecutive `put` failures before the store flips itself read-only.
+/// One transient error is retried forever by later puts; a disk that
+/// fails this many *in a row* is treated as gone for the rest of the
+/// process lifetime.
+pub const DEGRADE_AFTER: u64 = 3;
 
 /// Advisory single-writer lock on a store directory: a `LOCK` file
 /// holding the owner's pid, created with `create_new` (an atomic
@@ -211,6 +223,12 @@ pub struct ResultStore {
     hits: AtomicU64,
     misses: AtomicU64,
     puts: AtomicU64,
+    put_errors: AtomicU64,
+    /// Consecutive put failures; reset by any success.
+    put_fail_streak: AtomicU64,
+    /// Latched by [`DEGRADE_AFTER`] consecutive put failures; never
+    /// unlatched — a half-dead disk must not flap the store.
+    degraded: AtomicBool,
 }
 
 impl ResultStore {
@@ -232,6 +250,9 @@ impl ResultStore {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             puts: AtomicU64::new(0),
+            put_errors: AtomicU64::new(0),
+            put_fail_streak: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
         })
     }
 
@@ -253,9 +274,42 @@ impl ResultStore {
     }
 
     /// Durably record `key -> value` (WAL-fsynced before return).
+    ///
+    /// Failure containment: each IO failure is counted and returned to
+    /// the caller (who treats persistence as best-effort), and
+    /// [`DEGRADE_AFTER`] *consecutive* failures latch the store into a
+    /// loud read-only `degraded` mode — later puts become no-ops instead
+    /// of hammering a dead disk, while `get` keeps serving what already
+    /// persisted.
     pub fn put(&self, key: &str, value: &[u8]) -> Result<()> {
+        if self.degraded.load(Ordering::Relaxed) {
+            return Ok(());
+        }
         self.puts.fetch_add(1, Ordering::Relaxed);
-        self.lsm.lock().unwrap().put(key, value)
+        match self.lsm.lock().unwrap().put(key, value) {
+            Ok(()) => {
+                self.put_fail_streak.store(0, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                self.put_errors.fetch_add(1, Ordering::Relaxed);
+                let streak = self.put_fail_streak.fetch_add(1, Ordering::Relaxed) + 1;
+                if streak >= DEGRADE_AFTER && !self.degraded.swap(true, Ordering::SeqCst)
+                {
+                    eprintln!(
+                        "result store degraded to read-only after {streak} consecutive \
+                         write failures (last: {e}); analyses continue, new results \
+                         stop persisting until restart"
+                    );
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Whether repeated write failures latched the store read-only.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
     }
 
     /// Graceful-shutdown hook: flush the memtable to a sorted table so
@@ -285,6 +339,8 @@ impl ResultStore {
             mem_entries: inner.mem_entries as u64,
             disk_bytes: inner.disk_bytes,
             wal_bytes: inner.wal_bytes,
+            put_errors: self.put_errors.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
             spill: self.spill.stats(),
         }
     }
@@ -303,6 +359,8 @@ impl ResultStore {
             ("mem_entries", Json::num(s.mem_entries as f64)),
             ("disk_bytes", Json::num(s.disk_bytes as f64)),
             ("wal_bytes", Json::num(s.wal_bytes as f64)),
+            ("put_errors", Json::num(s.put_errors as f64)),
+            ("degraded", Json::Bool(s.degraded)),
             (
                 "spill",
                 Json::obj(vec![

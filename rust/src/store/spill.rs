@@ -76,6 +76,11 @@ impl SpillDir {
     /// Write (or overwrite — the content is a pure function of the key)
     /// the segment for `key`, atomically via `.tmp` + rename.
     pub fn spill(&self, key: &str, tri: &CondensedMatrix, grouping: &Grouping) -> Result<()> {
+        // Fault seam: spilling is best-effort by contract, so an injected
+        // error here proves callers really do fall back to a full load.
+        if let Some(e) = crate::inject::io_error("store.spill.write") {
+            return Err(Error::io(self.segment_path(key).display().to_string(), e));
+        }
         let path = self.segment_path(key);
         let tmp = super::ss_table::tmp_path(&path);
         let ctx = || tmp.display().to_string();

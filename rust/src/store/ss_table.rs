@@ -52,6 +52,11 @@ impl SsTable {
     /// Write `entries` (already key-sorted — `BTreeMap` iteration order)
     /// as a new table at `path`, atomically: build `.tmp`, fsync, rename.
     pub fn write(path: &Path, entries: &BTreeMap<String, Vec<u8>>) -> Result<()> {
+        // Fault seam: fail the flush before the `.tmp` sibling exists, the
+        // same clean failure an unwritable store directory gives.
+        if let Some(e) = crate::inject::io_error("store.sst.write") {
+            return Err(Error::io(path.display().to_string(), e));
+        }
         let tmp = tmp_path(path);
         let ctx = || tmp.display().to_string();
         let file = File::create(&tmp).map_err(|e| Error::io(ctx(), e))?;

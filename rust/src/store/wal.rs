@@ -77,6 +77,11 @@ impl Wal {
     /// Append one `key -> value` record.  Durable only after
     /// [`sync`](Self::sync).
     pub fn append(&mut self, key: &str, value: &[u8]) -> Result<()> {
+        // Fault seam: an injected error fails the append before any byte
+        // lands, the same clean failure a full disk gives after fsync.
+        if let Some(e) = crate::inject::io_error("store.wal.write") {
+            return Err(Error::io(self.path.display().to_string(), e));
+        }
         let payload = encode_payload(key, value)?;
         let mut rec = Vec::with_capacity(HEADER_BYTES + payload.len());
         rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());

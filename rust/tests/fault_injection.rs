@@ -1,0 +1,402 @@
+//! Fault-injection campaign: every injection point fires at least once
+//! and its containment holds — the store degrades loudly instead of
+//! dying, scratch reads re-materialize once before surfacing, a
+//! panicking job poisons only its own response, dropped connections are
+//! survived by both the daemon and the retrying client, and every
+//! response that succeeds under faults is **bitwise identical** to the
+//! fault-free run.
+//!
+//! The fault plan is process-global (`inject::install`), so every test
+//! serializes on a file-local mutex and clears the plan before
+//! releasing it.  Job ids are namespaced per test so an `@id=` trigger
+//! armed by one test can never match another test's jobs.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use permanova_apu::config::{DataSource, RunConfig};
+use permanova_apu::coordinator::load_storage;
+use permanova_apu::dmat::{file_backed_from, random_euclidean_condensed};
+use permanova_apu::inject::{self, FaultPlan};
+use permanova_apu::jsonio::Json;
+use permanova_apu::service::{
+    client_exchange, client_exchange_retrying, envelope_v1, parse_jobs, run_jobs, Daemon,
+    DaemonConfig, DatasetCache, RetryPolicy,
+};
+use permanova_apu::store::{ResultStore, StoreConfig, DEGRADE_AFTER};
+
+/// Serializes tests that arm the process-global fault plan.  Poison is
+/// tolerated (a failed test must not cascade) and any plan a panicking
+/// test left armed is cleared on acquire.
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    inject::clear();
+    g
+}
+
+fn arm(spec: &str) {
+    inject::install(FaultPlan::parse(spec).expect("valid fault spec"));
+}
+
+/// A fresh scratch directory under the system temp dir.
+fn scratch(case: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("permanova_apu_fault_{case}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// `count` small analysis jobs in the v1 envelope, ids `<ns>-0..`.
+fn job_lines(ns: &str, count: usize) -> Vec<String> {
+    (0..count)
+        .map(|i| {
+            let payload = Json::obj(vec![
+                ("method", Json::str("permanova")),
+                ("backend", Json::str("native-flat")),
+                ("n_perms", Json::num(19.0)),
+                ("seed", Json::num((40 + i) as f64)),
+                (
+                    "data",
+                    Json::obj(vec![
+                        ("source", Json::str("synthetic")),
+                        ("n_dims", Json::num(24.0)),
+                        ("n_groups", Json::num(2.0)),
+                        ("seed", Json::num(7.0)),
+                    ]),
+                ),
+            ]);
+            envelope_v1(Some(&format!("{ns}-{i}")), payload).to_string()
+        })
+        .collect()
+}
+
+/// Deterministic projection of a response for bitwise comparison
+/// (drops timing fields; keeps ids, errors, and the full report).
+fn comparable(response: &Json) -> String {
+    let mut keep = Vec::new();
+    for key in ["id", "ok", "dataset", "error", "report", "note"] {
+        if let Some(v) = response.get(key) {
+            keep.push((key, v.clone()));
+        }
+    }
+    Json::obj(keep).to_string()
+}
+
+/// An out-of-core run config: 56 objects at a 1000-byte residency
+/// budget forces the file-backed triangle (56·55/2 · 4 B = 6160 B).
+fn oocore_cfg() -> RunConfig {
+    RunConfig {
+        data: DataSource::Synthetic { n_dims: 56, n_groups: 4 },
+        max_resident_bytes: 1000,
+        ..RunConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// store.wal.write — degraded mode
+// ---------------------------------------------------------------------
+
+#[test]
+fn wal_write_faults_latch_loud_read_only_degradation() {
+    let _g = lock();
+    let dir = scratch("wal_latch");
+    let store = ResultStore::open(StoreConfig::new(dir)).unwrap();
+
+    // First put succeeds, the next DEGRADE_AFTER consecutive puts hit an
+    // injected WAL error (consults 2..=4) and latch the store.
+    arm("store.wal.write:err@2,store.wal.write:err@3,store.wal.write:err@4");
+    store.put("k1", b"v1").unwrap();
+    for i in 0..DEGRADE_AFTER {
+        let before_latch = i + 1 < DEGRADE_AFTER;
+        let err = store.put(&format!("fail-{i}"), b"x").unwrap_err();
+        assert!(
+            err.to_string().contains("injected fault: store.wal.write:err"),
+            "unexpected error: {err}"
+        );
+        assert_eq!(store.is_degraded(), !before_latch, "latch after exactly {DEGRADE_AFTER}");
+    }
+
+    // Degraded: puts become silent no-ops, gets keep serving what made
+    // it in, and the latch never releases — even with the fault gone.
+    store.put("k5", b"v5").unwrap();
+    assert_eq!(store.get("k5"), None, "degraded puts must not write");
+    assert_eq!(store.get("k1").as_deref(), Some(b"v1".as_slice()));
+    inject::clear();
+    store.put("k6", b"v6").unwrap();
+    assert!(store.is_degraded(), "degradation is latched until restart");
+    assert_eq!(store.get("k6"), None);
+
+    let stats = store.stats();
+    assert_eq!(stats.put_errors, DEGRADE_AFTER);
+    assert!(stats.degraded);
+}
+
+#[test]
+fn store_degrades_but_analyses_stay_bitwise_identical() {
+    let _g = lock();
+    let jobs_text = job_lines("wal", 4).join("\n");
+    let jobs = parse_jobs(&jobs_text).unwrap();
+
+    // Fault-free, store-free reference.
+    let baseline = run_jobs(&jobs, &DatasetCache::new(4), 2);
+    assert!(baseline.responses.iter().all(|r| r.opt_bool("ok").unwrap() == Some(true)));
+
+    // Every WAL append fails: the store degrades after DEGRADE_AFTER
+    // puts, but the analyses themselves never notice.
+    let dir = scratch("wal_bitwise");
+    let store = Arc::new(ResultStore::open(StoreConfig::new(dir)).unwrap());
+    arm("store.wal.write:err@p=1/7");
+    let cache = DatasetCache::with_store(4, Arc::clone(&store));
+    let under_fault = run_jobs(&jobs, &cache, 2);
+    inject::clear();
+
+    assert!(store.is_degraded(), "persistent WAL failure must latch degraded mode");
+    assert!(store.stats().put_errors >= DEGRADE_AFTER);
+    for (a, b) in baseline.responses.iter().zip(&under_fault.responses) {
+        assert_eq!(comparable(a), comparable(b), "responses must not change under store faults");
+    }
+}
+
+// ---------------------------------------------------------------------
+// store.sst.write — contained flush
+// ---------------------------------------------------------------------
+
+#[test]
+fn sstable_write_fault_contains_the_flush_and_the_next_drain_succeeds() {
+    let _g = lock();
+    let dir = scratch("sst_flush");
+    let store = ResultStore::open(StoreConfig::new(dir)).unwrap();
+    store.put("a", b"1").unwrap();
+    store.put("b", b"2").unwrap();
+
+    // The first SSTable write fails: drain errors, but the memtable
+    // entries are WAL-durable and reinserted, so gets keep serving and
+    // a later drain (fault exhausted — @1 fires once) lands them.
+    arm("store.sst.write:err@1");
+    let err = store.drain().unwrap_err();
+    assert!(
+        err.to_string().contains("injected fault: store.sst.write:err"),
+        "unexpected error: {err}"
+    );
+    assert_eq!(store.get("a").as_deref(), Some(b"1".as_slice()));
+    assert_eq!(store.get("b").as_deref(), Some(b"2".as_slice()));
+
+    store.drain().unwrap();
+    assert_eq!(store.get("a").as_deref(), Some(b"1".as_slice()));
+    inject::clear();
+}
+
+// ---------------------------------------------------------------------
+// scratch.read — one re-materialization, bitwise identical values
+// ---------------------------------------------------------------------
+
+#[test]
+fn scratch_corruption_rematerializes_once_and_values_stay_bitwise() {
+    let _g = lock();
+    let cfg = oocore_cfg();
+    let (storage, _grouping) = load_storage(&cfg).unwrap();
+    let ft = storage.as_file().expect("budget forces the file-backed triangle");
+    let (r0, r1) = ft.chunk_plan(1)[0];
+    let clean: Vec<u32> =
+        ft.load_chunk(r0, r1).unwrap().values().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ft.rebuilds(), 0);
+
+    // One injected checksum mismatch: load_chunk re-materializes the
+    // spill file from the run config and retries — same bits, no error.
+    arm("scratch.read:corrupt@1");
+    let recovered: Vec<u32> =
+        ft.load_chunk(r0, r1).unwrap().values().iter().map(|v| v.to_bits()).collect();
+    inject::clear();
+
+    assert_eq!(ft.rebuilds(), 1, "exactly one re-materialization");
+    assert_eq!(clean, recovered, "recovered chunk must be bitwise identical");
+}
+
+#[test]
+fn scratch_read_double_failure_names_both_attempts() {
+    let _g = lock();
+
+    // Hook installed (coordinator path) but the disk never recovers:
+    // the rebuild's own reads fail too, and the surfaced error says so.
+    let cfg = oocore_cfg();
+    let (storage, _grouping) = load_storage(&cfg).unwrap();
+    let ft = storage.as_file().unwrap();
+    let (r0, r1) = ft.chunk_plan(1)[0];
+    arm("scratch.read:err@p=1/3");
+    let err = ft.load_chunk(r0, r1).unwrap_err().to_string();
+    inject::clear();
+    assert!(
+        err.contains("re-materialization from the source failed too"),
+        "error must say the rebuild was attempted: {err}"
+    );
+    assert!(err.contains("injected fault: scratch.read:err"), "error must name the cause: {err}");
+
+    // No hook (raw file_backed_from): the first error passes through
+    // untouched — no rebuild is claimed that never happened.
+    let tri = random_euclidean_condensed(24, 8, 5);
+    let storage = file_backed_from(&tri, 500).unwrap();
+    let ft = storage.as_file().unwrap();
+    let (r0, r1) = ft.chunk_plan(1)[0];
+    arm("scratch.read:err@1");
+    let err = ft.load_chunk(r0, r1).unwrap_err().to_string();
+    inject::clear();
+    assert!(err.contains("injected fault: scratch.read:err"), "unexpected error: {err}");
+    assert!(!err.contains("re-materializ"), "hookless reads must not claim a rebuild: {err}");
+    assert_eq!(ft.rebuilds(), 0);
+}
+
+// ---------------------------------------------------------------------
+// job.exec — panic containment, batch ≡ daemon
+// ---------------------------------------------------------------------
+
+#[test]
+fn panicking_job_is_contained_and_daemon_matches_batch_bitwise() {
+    let _g = lock();
+    let lines = job_lines("panic", 3);
+    let jobs = parse_jobs(&lines.join("\n")).unwrap();
+
+    // `@id=` fires on every consult with that id, so the same plan
+    // covers the batch run and the daemon run below.
+    arm("job.exec:panic@id=panic-1");
+    let batch = run_jobs(&jobs, &DatasetCache::new(4), 2);
+    assert_eq!(batch.summary.failed, 1);
+    let poisoned = &batch.responses[1];
+    assert_eq!(poisoned.opt_bool("ok").unwrap(), Some(false));
+    let err = poisoned.req_str("error").unwrap();
+    assert!(err.contains("job panicked"), "panic must be named: {err}");
+    assert!(err.contains("injected fault: job.exec:panic"), "cause must survive: {err}");
+    for i in [0usize, 2] {
+        assert_eq!(batch.responses[i].opt_bool("ok").unwrap(), Some(true), "job {i} unharmed");
+    }
+
+    // The daemon survives the same panic and answers identically.
+    let daemon =
+        Daemon::spawn(DaemonConfig { workers: 1, ..DaemonConfig::default() }).unwrap();
+    let addr = daemon.addr();
+    let responses = client_exchange(&addr, &lines).unwrap();
+    daemon.shutdown();
+    let summary = daemon.join().unwrap();
+    inject::clear();
+
+    assert_eq!(summary.admitted, 3);
+    assert_eq!(summary.completed, 2);
+    assert_eq!(summary.failed, 1);
+    for (b, d) in batch.responses.iter().zip(&responses) {
+        assert_eq!(comparable(b), comparable(d), "daemon must match the batch bitwise");
+    }
+}
+
+// ---------------------------------------------------------------------
+// wire.accept — dropped connections, retrying client
+// ---------------------------------------------------------------------
+
+#[test]
+fn dropped_accept_is_survived_and_the_retrying_client_recovers() {
+    let _g = lock();
+    arm("wire.accept:drop@1");
+    let daemon =
+        Daemon::spawn(DaemonConfig { workers: 1, ..DaemonConfig::default() }).unwrap();
+    let addr = daemon.addr();
+
+    // The first connection is dropped at accept; the client sees the
+    // socket close after 0 responses, backs off, reconnects, and the
+    // second attempt answers everything.
+    let lines = job_lines("drop", 2);
+    let policy = RetryPolicy { retries: 3, budget_ms: 30_000 };
+    let responses = client_exchange_retrying(&addr, &lines, policy).unwrap();
+    assert_eq!(responses.len(), 2);
+    assert!(responses.iter().all(|r| r.opt_bool("ok").unwrap() == Some(true)));
+
+    daemon.shutdown();
+    let summary = daemon.join().unwrap();
+    inject::clear();
+    assert_eq!(summary.connections, 1, "a dropped accept must not count as a connection");
+    assert_eq!(summary.admitted, 2);
+    assert_eq!(summary.completed, 2);
+}
+
+// ---------------------------------------------------------------------
+// connection hygiene — mid-pipeline drops and drains (satellite 4)
+// ---------------------------------------------------------------------
+
+/// One wire frame: `<len>\n<payload>\n`.
+fn frame(payload: &str) -> Vec<u8> {
+    format!("{}\n{}\n", payload.len(), payload).into_bytes()
+}
+
+#[test]
+fn mid_pipeline_connection_drop_is_reaped_and_counters_reconcile() {
+    let _g = lock();
+    let daemon =
+        Daemon::spawn(DaemonConfig { workers: 1, ..DaemonConfig::default() }).unwrap();
+    let addr = daemon.addr();
+
+    // Two complete frames, then a frame that promises 999 bytes and
+    // delivers 3 before the socket drops mid-pipeline.
+    let lines = job_lines("midpipe", 2);
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        for line in &lines {
+            s.write_all(&frame(line)).unwrap();
+        }
+        s.write_all(b"999\nabc").unwrap();
+        s.flush().unwrap();
+    } // dropped here
+
+    // The daemon must keep serving: poll stats over fresh connections
+    // until both admitted jobs finished and every past connection is
+    // accounted for (the stats connection itself is the one live one).
+    let stats_req =
+        envelope_v1(Some("stats"), Json::obj(vec![("op", Json::str("stats"))])).to_string();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let got = client_exchange(&addr, &[stats_req.clone()]).unwrap();
+        let s = got[0].get("stats").expect("stats body");
+        let connections = s.req_usize("connections").unwrap();
+        let closed = s.req_usize("connections_closed").unwrap();
+        let reaped = s.req_usize("connections_reaped").unwrap();
+        let done = s.req_usize("completed").unwrap() + s.req_usize("failed").unwrap();
+        if done == 2 && connections == closed + reaped + 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "counters never reconciled: connections={connections} closed={closed} \
+             reaped={reaped} done={done}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    daemon.shutdown();
+    let summary = daemon.join().unwrap();
+    assert_eq!(summary.admitted, 2, "frames read before the drop are admitted");
+    assert_eq!(summary.completed + summary.failed, 2);
+}
+
+#[test]
+fn drain_is_not_held_hostage_by_an_idle_connection() {
+    let _g = lock();
+    let daemon =
+        Daemon::spawn(DaemonConfig { workers: 1, ..DaemonConfig::default() }).unwrap();
+    let addr = daemon.addr();
+
+    // An idle connection that never sends a byte must not stall the
+    // drain: quiet connections are reaped as soon as draining starts.
+    let idle = TcpStream::connect(addr).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+
+    let started = Instant::now();
+    daemon.shutdown();
+    let summary = daemon.join().unwrap();
+    assert!(
+        started.elapsed() < Duration::from_secs(5),
+        "drain must not wait for idle connections ({:?})",
+        started.elapsed()
+    );
+    assert_eq!(summary.connections, 1);
+    assert_eq!(summary.admitted, 0);
+    drop(idle);
+}
